@@ -1,0 +1,72 @@
+//! Serving demo: the coordinator as a long-lived service — a mixed
+//! stream of K-truss / K_max / triangle jobs over graphs of varying
+//! size, with routing between the dense AOT engine (small graphs) and
+//! the sparse pool (large ones), plus latency metrics.
+//!
+//! Run: `cargo run --release --example serve_demo`
+
+use ktruss::algo::support::Mode;
+use ktruss::coordinator::{Coordinator, JobKind, JobOutput, ServiceConfig};
+use ktruss::util::{Rng, Timer};
+use std::sync::Arc;
+
+fn main() {
+    let c = Coordinator::start(ServiceConfig {
+        pool_workers: 2,
+        max_batch: 8,
+        ..Default::default()
+    });
+    let mut rng = Rng::new(2024);
+    let total_jobs = 48;
+    println!("submitting {total_jobs} mixed jobs (sizes 60..2000 vertices)…");
+
+    let t = Timer::start();
+    let mut tickets = Vec::new();
+    for i in 0..total_jobs {
+        // alternate small (dense-routable) and large (sparse) graphs
+        let n = if i % 3 == 0 { rng.range(60, 220) } else { rng.range(500, 2000) };
+        let m = (2 * n + rng.range(0, 3 * n)).min(n * (n - 1) / 2);
+        let g = Arc::new(ktruss::gen::rmat::rmat(
+            n,
+            m,
+            ktruss::gen::rmat::RmatParams::social(),
+            &mut rng,
+        ));
+        let kind = match i % 4 {
+            0 => JobKind::Ktruss { k: 3, mode: Mode::Fine },
+            1 => JobKind::Ktruss { k: 4, mode: Mode::Coarse },
+            2 => JobKind::Triangles,
+            _ => JobKind::Kmax,
+        };
+        tickets.push((i, c.submit(g, kind)));
+    }
+
+    let mut dense = 0usize;
+    let mut sparse = 0usize;
+    for (i, ticket) in tickets {
+        let r = ticket.wait();
+        match r.engine {
+            ktruss::coordinator::Engine::DenseXla => dense += 1,
+            ktruss::coordinator::Engine::SparseCpu => sparse += 1,
+        }
+        let summary = match r.output.expect("job must succeed") {
+            JobOutput::Ktruss { truss_edges, iterations, .. } => {
+                format!("ktruss: {truss_edges} edges, {iterations} iters")
+            }
+            JobOutput::Kmax { kmax, truss_edges } => format!("kmax={kmax} ({truss_edges} edges)"),
+            JobOutput::Decompose { kmax, .. } => format!("decompose kmax={kmax}"),
+            JobOutput::Triangles { count } => format!("{count} triangles"),
+        };
+        if i < 6 {
+            println!("  job {i:2} [{}] {:7.2} ms  {summary}", r.engine, r.wall_ms);
+        }
+    }
+    println!("  …");
+    println!(
+        "all {total_jobs} jobs done in {:.1} ms  (routing: {dense} dense-xla, {sparse} sparse-cpu)",
+        t.elapsed_ms()
+    );
+    println!("metrics: {}", c.metrics.render());
+    println!("latency histogram (us buckets): {:?}", c.metrics.latency_histogram());
+    c.shutdown();
+}

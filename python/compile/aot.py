@@ -1,0 +1,84 @@
+"""AOT lowering: jax (L2+L1) → HLO *text* → ``artifacts/``.
+
+HLO text — not ``lowered.compile().serialize()`` and not a serialized
+``HloModuleProto`` — is the interchange format: jax ≥ 0.5 emits protos
+with 64-bit instruction ids that the rust crate's xla_extension 0.5.1
+rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Artifacts (one per exported entry point × block size):
+
+    support_{n}.hlo.txt       S = (AᵀA) ∘ A            : f32[n,n] -> (f32[n,n],)
+    ktruss_step_{n}.hlo.txt   one Alg-1 iteration       : f32[n,n], f32[] -> (f32[n,n], f32[])
+
+Run ``python -m compile.aot --out-dir ../artifacts`` (the Makefile's
+``make artifacts`` target). Python never runs after this point.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# Block sizes exported by default. 256 is the production default
+# (2 MiB per f32 operand); 128 exists for small-graph latency and tests.
+SIZES = (128, 256)
+TILE = 128
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_support(n: int) -> str:
+    spec = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    fn = lambda a: (model.support(a, tile=TILE),)
+    return to_hlo_text(jax.jit(fn).lower(spec))
+
+
+def lower_ktruss_step(n: int) -> str:
+    a_spec = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    t_spec = jax.ShapeDtypeStruct((), jnp.float32)
+    fn = lambda a, t: model.ktruss_step(a, t, tile=TILE)
+    return to_hlo_text(jax.jit(fn).lower(a_spec, t_spec))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--sizes", type=int, nargs="*", default=list(SIZES))
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"tile": TILE, "entries": []}
+    for n in args.sizes:
+        assert n % TILE == 0, f"size {n} must be a multiple of tile {TILE}"
+        for name, text in (
+            (f"support_{n}", lower_support(n)),
+            (f"ktruss_step_{n}", lower_ktruss_step(n)),
+        ):
+            path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+            with open(path, "w") as f:
+                f.write(text)
+            manifest["entries"].append(
+                {"name": name, "file": f"{name}.hlo.txt", "n": n, "chars": len(text)}
+            )
+            print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,131 @@
+"""L1: Pallas tile kernel for the dense support computation
+``S = (Aᵀ A) ∘ A``.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's GPU
+kernel is SIMT — one CUDA thread per task, global-memory atomics. A TPU
+has neither per-lane atomics nor a thread-per-task model, so we port the
+paper's *insight* (uniform-cost fine-grained tasks) instead of its
+mechanics: the adjacency matrix is tiled into ``T×T`` VMEM blocks and
+each grid step runs one MXU contraction ``A[k,i]ᵀ @ A[k,j]`` — every
+task (tile-triple) costs exactly the same, the perfectly load-balanced
+limit of the paper's fine-grained decomposition. The BlockSpec grid
+expresses the HBM↔VMEM schedule that CUDA expressed with threadblocks.
+
+The kernel is lowered with ``interpret=True`` so the AOT HLO runs on the
+CPU PJRT plugin (real-TPU lowering emits a Mosaic custom-call the CPU
+client cannot execute); MXU/VMEM behaviour is *estimated* in
+EXPERIMENTS.md §Perf from the block shapes.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile edge: 128 matches the MXU systolic array (128x128) and
+# keeps three f32 tiles (two inputs + accumulator) at 192 KiB, far under
+# the ~16 MiB VMEM budget — leaving room for double-buffering.
+DEFAULT_TILE = 128
+
+
+def _support_kernel(a_ki_ref, a_kj_ref, mask_ref, o_ref):
+    """One grid step: accumulate A[k,i]ᵀ @ A[k,j]; mask on the last k.
+
+    Grid is (i_tiles, j_tiles, k_tiles) with k innermost so the output
+    tile stays resident in VMEM across the contraction.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # MXU contraction: (T, T)ᵀ @ (T, T) -> (T, T)
+    o_ref[...] += jnp.dot(
+        a_ki_ref[...].T, a_kj_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _mask():
+        # the Hadamard ∘A: zero S where there is no edge
+        o_ref[...] *= mask_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def support_pallas(a, tile=DEFAULT_TILE):
+    """``S = (Aᵀ A) ∘ A`` for a symmetric (n, n) 0/1 matrix, n % tile == 0."""
+    n = a.shape[0]
+    assert a.shape == (n, n), a.shape
+    assert n % tile == 0, (n, tile)
+    grid = (n // tile, n // tile, n // tile)
+    return pl.pallas_call(
+        _support_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, tile), lambda i, j, k: (k, i)),  # A[k, i]
+            pl.BlockSpec((tile, tile), lambda i, j, k: (k, j)),  # A[k, j]
+            pl.BlockSpec((tile, tile), lambda i, j, k: (i, j)),  # mask A[i, j]
+        ],
+        out_specs=pl.BlockSpec((tile, tile), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
+        interpret=True,
+    )(a, a, a)
+
+
+def _support_kernel_select(a_ki_ref, a_kj_ref, mask_ref, o_ref):
+    """Masking-strategy variant (DESIGN.md §8 ablation): apply the ∘A
+    Hadamard via ``jnp.where`` on the final k step instead of a
+    multiply. Same math on 0/1 masks; exists to compare lowered HLO
+    (select vs mul fuses differently on some backends)."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ki_ref[...].T, a_kj_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _mask():
+        o_ref[...] = jnp.where(mask_ref[...] != 0, o_ref[...], 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def support_pallas_select(a, tile=DEFAULT_TILE):
+    """``S = (Aᵀ A) ∘ A`` with select-style masking (ablation twin of
+    :func:`support_pallas`)."""
+    n = a.shape[0]
+    assert a.shape == (n, n), a.shape
+    assert n % tile == 0, (n, tile)
+    grid = (n // tile, n // tile, n // tile)
+    return pl.pallas_call(
+        _support_kernel_select,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, tile), lambda i, j, k: (k, i)),
+            pl.BlockSpec((tile, tile), lambda i, j, k: (k, j)),
+            pl.BlockSpec((tile, tile), lambda i, j, k: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((tile, tile), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
+        interpret=True,
+    )(a, a, a)
+
+
+def vmem_bytes(tile=DEFAULT_TILE, dtype_bytes=4):
+    """Resident VMEM footprint of one grid step (for §Perf estimates):
+    two input tiles + mask tile + accumulator tile."""
+    return 4 * tile * tile * dtype_bytes
+
+
+def mxu_utilization_estimate(tile=DEFAULT_TILE):
+    """Fraction of MXU issue slots doing useful work for one step: a
+    T×T×T contraction on the 128×128 array is perfectly shaped when
+    T % 128 == 0, degrading as T shrinks."""
+    mxu = 128
+    eff_rows = min(tile, mxu) / mxu
+    eff_cols = min(tile, mxu) / mxu
+    return eff_rows * eff_cols

@@ -1,0 +1,52 @@
+"""Pure-jnp reference oracle for the dense linear-algebraic K-truss path.
+
+These are the textbook forms of the paper's Algorithm 1 on a *symmetric*
+dense adjacency matrix:
+
+    S = (Aᵀ A) ∘ A          -- support: common-neighbor counts per edge
+    M = S ≥ (k - 2);  A ← A ∘ M   -- prune
+
+The Pallas kernel in ``eager_support.py`` must match ``support_ref``
+bit-for-bit on 0/1 inputs (integer-valued f32 arithmetic is exact well
+past any block size we use).
+"""
+
+import jax.numpy as jnp
+
+
+def support_ref(a):
+    """Edge supports of a symmetric 0/1 adjacency matrix.
+
+    ``S[i, j]`` = number of triangles through edge (i, j); zero where
+    there is no edge.
+    """
+    return (a.T @ a) * a
+
+
+def ktruss_step_ref(a, threshold):
+    """One support+prune iteration of Algorithm 1.
+
+    Args:
+        a: symmetric 0/1 adjacency (f32).
+        threshold: scalar ``k - 2`` (f32).
+
+    Returns:
+        (a_next, removed): pruned adjacency and the number of directed
+        entries removed (2x the undirected edge count).
+    """
+    s = support_ref(a)
+    m = (s >= threshold).astype(a.dtype)
+    a_next = a * m
+    removed = jnp.sum(a) - jnp.sum(a_next)
+    return a_next, removed
+
+
+def ktruss_fixpoint_ref(a, threshold, max_iters=64):
+    """Iterate ``ktruss_step_ref`` to convergence (python loop; oracle
+    only — the production loop lives in the rust coordinator)."""
+    for _ in range(max_iters):
+        a_next, removed = ktruss_step_ref(a, threshold)
+        a = a_next
+        if float(removed) == 0.0:
+            break
+    return a

@@ -1,0 +1,49 @@
+"""L2: the dense linear-algebraic K-truss compute graph (Algorithm 1),
+built on the L1 Pallas support kernel.
+
+Exported functions (AOT-lowered to HLO text by ``aot.py``):
+
+* ``support(A)``            — ``S = (AᵀA) ∘ A`` via the Pallas kernel.
+* ``ktruss_step(A, thr)``   — one support+prune iteration, returning the
+  pruned adjacency and the number of removed entries.
+
+The convergence loop deliberately lives in the **rust coordinator**
+(L3): the step function is side-effect free and shape-stable, so rust
+re-invokes the compiled executable until ``removed == 0``. Python never
+runs at request time.
+"""
+
+import jax.numpy as jnp
+
+from compile.kernels.eager_support import support_pallas
+
+
+def support(a, tile=128):
+    """Edge-support matrix of a symmetric 0/1 adjacency."""
+    return support_pallas(a, tile=tile)
+
+
+def ktruss_step(a, threshold, tile=128):
+    """One Algorithm-1 iteration on a symmetric dense adjacency.
+
+    Args:
+        a: (n, n) f32 symmetric 0/1 matrix, n % tile == 0 (zero-padded
+           by the rust caller).
+        threshold: f32 scalar, ``k - 2``.
+
+    Returns:
+        (a_next, removed): pruned adjacency; removed counts *directed*
+        entries (2x undirected edges), as an f32 scalar.
+    """
+    s = support(a, tile=tile)
+    m = (s >= threshold).astype(a.dtype)
+    a_next = a * m
+    removed = jnp.sum(a) - jnp.sum(a_next)
+    return a_next, removed
+
+
+def support_sum(a, tile=128):
+    """Total support mass = 6x triangle count (each triangle contributes
+    1 to six directed entries). Exported for cheap rust-side validation
+    of the dense path against the sparse path's triangle count."""
+    return jnp.sum(support(a, tile=tile))

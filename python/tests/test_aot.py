@@ -1,0 +1,77 @@
+"""AOT path smoke tests: the lowered HLO text must exist-after-lowering,
+parse as HLO, and — crucially — execute on the CPU PJRT client with the
+same numbers as the jax-level model. This is the python half of the
+interchange contract with ``rust/src/runtime``."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def support_hlo_64():
+    spec = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    fn = lambda a: (model.support(a, tile=64),)
+    return aot.to_hlo_text(jax.jit(fn).lower(spec))
+
+
+@pytest.fixture(scope="module")
+def step_hlo_64():
+    a_spec = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    t_spec = jax.ShapeDtypeStruct((), jnp.float32)
+    fn = lambda a, t: model.ktruss_step(a, t, tile=64)
+    return aot.to_hlo_text(jax.jit(fn).lower(a_spec, t_spec))
+
+
+def test_hlo_text_mentions_entry(support_hlo_64):
+    assert "ENTRY" in support_hlo_64
+    assert "f32[64,64]" in support_hlo_64
+
+
+def test_hlo_has_no_custom_calls(support_hlo_64, step_hlo_64):
+    # interpret=True pallas must lower to plain HLO ops; a custom-call
+    # would be unloadable by the CPU PJRT client in rust
+    for text in (support_hlo_64, step_hlo_64):
+        assert "custom-call" not in text, "Mosaic custom-call leaked into HLO"
+
+
+def _run_hlo(hlo_text, args):
+    """Compile HLO text on the CPU PJRT client and run it — mirrors what
+    rust/src/runtime does via the xla crate."""
+    client = xc.make_cpu_client()
+    comp = xc.XlaComputation(
+        xc._xla.hlo_module_proto_from_text(hlo_text).SerializeToString()
+    )
+    exe = client.compile(comp.as_serialized_hlo_module_proto())
+    bufs = [client.buffer_from_pyval(a) for a in args]
+    out = exe.execute(bufs)
+    return [np.asarray(b) for b in out]
+
+
+def test_support_hlo_executes_like_jax(support_hlo_64):
+    rng = np.random.RandomState(3)
+    upper = np.triu((rng.rand(64, 64) < 0.15), k=1).astype(np.float32)
+    a = upper + upper.T
+    try:
+        (got,) = _run_hlo(support_hlo_64, [a])
+    except Exception as e:  # pragma: no cover - depends on xla_client API surface
+        pytest.skip(f"local PJRT text-execution unavailable: {e}")
+    want = np.asarray(model.support(jnp.asarray(a), tile=64))
+    np.testing.assert_array_equal(got.reshape(64, 64), want)
+
+
+def test_step_hlo_executes_like_jax(step_hlo_64):
+    rng = np.random.RandomState(4)
+    upper = np.triu((rng.rand(64, 64) < 0.15), k=1).astype(np.float32)
+    a = upper + upper.T
+    try:
+        out = _run_hlo(step_hlo_64, [a, np.float32(1.0)])
+    except Exception as e:  # pragma: no cover
+        pytest.skip(f"local PJRT text-execution unavailable: {e}")
+    want_a, want_removed = model.ktruss_step(jnp.asarray(a), jnp.float32(1.0), tile=64)
+    np.testing.assert_array_equal(out[0].reshape(64, 64), np.asarray(want_a))
+    assert float(out[1]) == float(want_removed)

@@ -1,0 +1,128 @@
+"""L1 correctness: the Pallas support kernel vs the pure-jnp oracle.
+
+This is the core correctness signal for the dense path: hypothesis
+sweeps adjacency densities, sizes and tilings; every case must match
+``ref.support_ref`` exactly (0/1 inputs → integer-valued f32, so exact
+equality is the right assertion, not allclose-with-slop).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.eager_support import (
+    mxu_utilization_estimate,
+    support_pallas,
+    support_pallas_select,
+    vmem_bytes,
+)
+from compile.kernels.ref import ktruss_fixpoint_ref, ktruss_step_ref, support_ref
+
+
+def random_symmetric_adjacency(n: int, density: float, seed: int) -> np.ndarray:
+    rng = np.random.RandomState(seed)
+    upper = (rng.rand(n, n) < density).astype(np.float32)
+    upper = np.triu(upper, k=1)
+    return upper + upper.T
+
+
+class TestSupportKernel:
+    @pytest.mark.parametrize("n,tile", [(64, 64), (128, 64), (128, 128), (256, 128)])
+    def test_matches_ref_dense_sizes(self, n, tile):
+        a = random_symmetric_adjacency(n, 0.2, seed=n + tile)
+        got = np.asarray(support_pallas(jnp.asarray(a), tile=tile))
+        want = np.asarray(support_ref(jnp.asarray(a)))
+        np.testing.assert_array_equal(got, want)
+
+    def test_triangle_graph(self):
+        # K3 embedded in an 64x64 zero matrix
+        a = np.zeros((64, 64), np.float32)
+        for u, v in [(0, 1), (0, 2), (1, 2)]:
+            a[u, v] = a[v, u] = 1.0
+        s = np.asarray(support_pallas(jnp.asarray(a), tile=64))
+        for u, v in [(0, 1), (0, 2), (1, 2)]:
+            assert s[u, v] == 1.0 and s[v, u] == 1.0
+        assert s.sum() == 6.0  # one triangle -> six directed entries
+
+    def test_empty_graph_is_zero(self):
+        a = jnp.zeros((128, 128), jnp.float32)
+        assert float(jnp.sum(support_pallas(a))) == 0.0
+
+    def test_complete_graph(self):
+        n = 64
+        a = jnp.asarray(np.ones((n, n), np.float32) - np.eye(n, dtype=np.float32))
+        s = np.asarray(support_pallas(a, tile=64))
+        # every edge of K_n is in n-2 triangles
+        off_diag = ~np.eye(n, dtype=bool)
+        assert (s[off_diag] == n - 2).all()
+        assert (np.diag(s) == 0).all()
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        density=st.floats(min_value=0.0, max_value=0.6),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+        tile_pow=st.sampled_from([32, 64]),
+        blocks=st.integers(min_value=1, max_value=3),
+    )
+    def test_hypothesis_sweep(self, density, seed, tile_pow, blocks):
+        n = tile_pow * blocks
+        a = random_symmetric_adjacency(n, density, seed)
+        got = np.asarray(support_pallas(jnp.asarray(a), tile=tile_pow))
+        want = np.asarray(support_ref(jnp.asarray(a)))
+        np.testing.assert_array_equal(got, want)
+
+    def test_rejects_misaligned_tile(self):
+        a = jnp.zeros((100, 100), jnp.float32)
+        with pytest.raises(AssertionError):
+            support_pallas(a, tile=64)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        density=st.floats(min_value=0.0, max_value=0.5),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_select_masking_variant_identical(self, density, seed):
+        # DESIGN.md §8 masking-strategy ablation: mul-mask and
+        # select-mask kernels must agree exactly
+        a = random_symmetric_adjacency(128, density, seed)
+        mul = np.asarray(support_pallas(jnp.asarray(a), tile=64))
+        sel = np.asarray(support_pallas_select(jnp.asarray(a), tile=64))
+        np.testing.assert_array_equal(mul, sel)
+
+
+class TestRefSemantics:
+    def test_step_prunes_pendant_edge(self):
+        a = np.zeros((64, 64), np.float32)
+        for u, v in [(0, 1), (0, 2), (1, 2), (2, 3)]:  # triangle + pendant
+            a[u, v] = a[v, u] = 1.0
+        a_next, removed = ktruss_step_ref(jnp.asarray(a), jnp.float32(1.0))
+        assert float(removed) == 2.0  # (2,3) both directions
+        assert float(a_next[2, 3]) == 0.0
+        assert float(a_next[0, 1]) == 1.0
+
+    def test_fixpoint_of_clique_is_clique(self):
+        n = 64
+        a = jnp.asarray(np.ones((n, n), np.float32) - np.eye(n, dtype=np.float32))
+        out = ktruss_fixpoint_ref(a, jnp.float32(3.0))
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(a))
+
+    def test_fixpoint_empties_triangle_free(self):
+        a = np.zeros((64, 64), np.float32)
+        for u in range(5):  # 6-cycle
+            a[u, u + 1] = a[u + 1, u] = 1.0
+        a[5, 0] = a[0, 5] = 1.0
+        out = ktruss_fixpoint_ref(jnp.asarray(a), jnp.float32(1.0))
+        assert float(jnp.sum(out)) == 0.0
+
+
+class TestPerfEstimates:
+    def test_vmem_within_budget(self):
+        # 4 tiles of 128x128 f32 = 256 KiB << 16 MiB VMEM
+        assert vmem_bytes(128) == 4 * 128 * 128 * 4
+        assert vmem_bytes(128) < 16 * 1024 * 1024
+
+    def test_mxu_utilization_monotone(self):
+        assert mxu_utilization_estimate(128) == 1.0
+        assert mxu_utilization_estimate(64) == 0.25
+        assert mxu_utilization_estimate(32) < mxu_utilization_estimate(64)

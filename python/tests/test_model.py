@@ -1,0 +1,97 @@
+"""L2 semantics: the jax model's ktruss_step against a from-scratch
+python K-truss (networkx-free, set-based) on small graphs."""
+
+import itertools
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+
+
+def naive_ktruss(edges, n, k):
+    """Set-based K-truss fixpoint (independent of all jax code)."""
+    edges = {tuple(sorted(e)) for e in edges}
+    while True:
+        adj = {u: set() for u in range(n)}
+        for u, v in edges:
+            adj[u].add(v)
+            adj[v].add(u)
+        dead = [
+            (u, v)
+            for (u, v) in edges
+            if len(adj[u] & adj[v]) < k - 2
+        ]
+        if not dead:
+            return edges
+        edges -= set(dead)
+
+
+def to_dense(edges, n):
+    a = np.zeros((n, n), np.float32)
+    for u, v in edges:
+        a[u, v] = a[v, u] = 1.0
+    return a
+
+
+def run_dense_fixpoint(a, k, max_iters=64):
+    thr = jnp.float32(k - 2)
+    a = jnp.asarray(a)
+    for _ in range(max_iters):
+        a, removed = model.ktruss_step(a, thr, tile=64)
+        if float(removed) == 0.0:
+            return a
+    return a
+
+
+def dense_to_edges(a):
+    a = np.asarray(a)
+    return {
+        (u, v)
+        for u, v in zip(*np.nonzero(np.triu(a, k=1)))
+    }
+
+
+class TestKtrussStep:
+    @pytest.mark.parametrize("k", [3, 4, 5])
+    def test_matches_naive_on_clique_plus_tail(self, k):
+        n = 64
+        edges = list(itertools.combinations(range(5), 2)) + [(4, 10), (10, 11)]
+        got = dense_to_edges(run_dense_fixpoint(to_dense(edges, n), k))
+        want = naive_ktruss(edges, n, k)
+        assert got == want
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        seed=st.integers(min_value=0, max_value=10_000),
+        k=st.sampled_from([3, 4]),
+        density=st.floats(min_value=0.05, max_value=0.3),
+    )
+    def test_matches_naive_on_random_graphs(self, seed, k, density):
+        n = 64
+        rng = np.random.RandomState(seed)
+        upper = np.triu((rng.rand(n, n) < density), k=1)
+        edges = [(int(u), int(v)) for u, v in zip(*np.nonzero(upper))]
+        got = dense_to_edges(run_dense_fixpoint(to_dense(edges, n), k))
+        want = naive_ktruss(edges, n, k)
+        assert got == want
+
+    def test_step_preserves_symmetry(self):
+        rng = np.random.RandomState(7)
+        upper = np.triu((rng.rand(128, 128) < 0.1), k=1).astype(np.float32)
+        a = upper + upper.T
+        a_next, _ = model.ktruss_step(jnp.asarray(a), jnp.float32(1.0), tile=64)
+        a_next = np.asarray(a_next)
+        np.testing.assert_array_equal(a_next, a_next.T)
+
+    def test_removed_counts_directed_entries(self):
+        a = to_dense([(0, 1), (0, 2), (1, 2), (2, 3)], 64)
+        _, removed = model.ktruss_step(jnp.asarray(a), jnp.float32(1.0), tile=64)
+        assert float(removed) == 2.0
+
+    def test_support_sum_is_six_times_triangles(self):
+        # two triangles sharing an edge: {0,1,2} and {1,2,3}
+        a = to_dense([(0, 1), (0, 2), (1, 2), (1, 3), (2, 3)], 64)
+        assert float(model.support_sum(jnp.asarray(a), tile=64)) == 12.0

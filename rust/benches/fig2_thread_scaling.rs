@@ -1,0 +1,13 @@
+//! `cargo bench --bench fig2_thread_scaling` — regenerates Fig 2:
+//! speedup of fine- over coarse-grained on the CPU model across
+//! {1,2,4,8,16,32,48} threads at K = K_max, one row per graph.
+
+use ktruss::bench_harness::{figs, report, Workload};
+
+fn main() {
+    let w = Workload::from_env().expect("workload config");
+    println!("{}", w.banner("Fig 2 (fine/coarse CPU speedup vs threads, K=Kmax)"));
+    let f = figs::run_fig2(&w, |msg| eprintln!("  [{msg}]")).expect("fig2 run");
+    let body = format!("{}\n[scale {}]\n", f.render(), f.scale);
+    report::emit("fig2_thread_scaling.txt", &body).expect("save report");
+}

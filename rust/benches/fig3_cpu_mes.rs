@@ -1,0 +1,24 @@
+//! `cargo bench --bench fig3_cpu_mes` — regenerates Fig 3: ME/s of the
+//! coarse and fine implementations on the CPU model at 48 threads, for
+//! K=3 (top panel) and K=K_max (bottom panel).
+
+use ktruss::bench_harness::{figs, report, Workload};
+
+fn main() {
+    let w = Workload::from_env().expect("workload config");
+    println!("{}", w.banner("Fig 3 (CPU 48T ME/s, coarse vs fine)"));
+    let mut body = String::new();
+    for use_kmax in [false, true] {
+        let p = figs::run_mes_panel(&w, figs::PanelDevice::Cpu48, use_kmax, |msg| {
+            eprintln!("  [{msg}]")
+        })
+        .expect("fig3 run");
+        body.push_str(&p.render());
+        body.push('\n');
+    }
+    body.push_str(&format!(
+        "(paper Fig 3 geomeans at full scale: 1.48x for K=3, 1.26x for K=Kmax)\n[scale {}]\n",
+        w.scale
+    ));
+    report::emit("fig3_cpu_mes.txt", &body).expect("save report");
+}

@@ -1,0 +1,24 @@
+//! `cargo bench --bench fig4_gpu_mes` — regenerates Fig 4: ME/s of the
+//! coarse and fine implementations on the GPU (V100) model, for K=3 and
+//! K=K_max.
+
+use ktruss::bench_harness::{figs, report, Workload};
+
+fn main() {
+    let w = Workload::from_env().expect("workload config");
+    println!("{}", w.banner("Fig 4 (GPU ME/s, coarse vs fine)"));
+    let mut body = String::new();
+    for use_kmax in [false, true] {
+        let p = figs::run_mes_panel(&w, figs::PanelDevice::Gpu, use_kmax, |msg| {
+            eprintln!("  [{msg}]")
+        })
+        .expect("fig4 run");
+        body.push_str(&p.render());
+        body.push('\n');
+    }
+    body.push_str(&format!(
+        "(paper Fig 4 geomeans at full scale: 16.93x for K=3, 9.97x for K=Kmax)\n[scale {}]\n",
+        w.scale
+    ));
+    report::emit("fig4_gpu_mes.txt", &body).expect("save report");
+}

@@ -1,0 +1,97 @@
+//! `cargo bench --bench micro_hotpath` — real-wallclock microbenchmarks
+//! of the L3 hot path on this host (these are *not* simulated):
+//!
+//! * support kernel, sequential (ns/merge-step — the calibration value)
+//! * support kernel via the worker pool (1/2/4 threads)
+//! * prune pass
+//! * full K=3 and K_max runs on a mid-size replica
+//!
+//! The §Perf log in EXPERIMENTS.md tracks these numbers across
+//! optimization iterations.
+
+use ktruss::algo::kmax;
+use ktruss::algo::ktruss::ktruss as run_ktruss;
+use ktruss::algo::support::{compute_supports_seq, Mode};
+use ktruss::bench_harness::report;
+use ktruss::cost::trace::trace_supports;
+use ktruss::graph::ZCsr;
+use ktruss::par::{compute_supports_par, Pool, Schedule};
+use ktruss::util::stats::mean;
+use ktruss::util::timer::bench_ms;
+use ktruss::util::Rng;
+
+fn main() {
+    let mut body = String::new();
+    let g = ktruss::gen::rmat::rmat(
+        20_000,
+        150_000,
+        ktruss::gen::rmat::RmatParams::social(),
+        &mut Rng::new(0xBEEF),
+    );
+    let z = ZCsr::from_csr(&g);
+    let mut s = Vec::new();
+    let tr = trace_supports(&z, &mut s);
+    body.push_str(&format!(
+        "workload: rmat-social n={} m={} steps/pass={}\n\n",
+        g.n(),
+        g.nnz(),
+        tr.total_steps
+    ));
+
+    // 0. the original (bounds-checked, match-based) kernel — §Perf "before"
+    let times = bench_ms(2, 8, || {
+        ktruss::algo::support::compute_supports_seq_checked(&z, &mut s)
+    });
+    let ms_before = mean(&times).unwrap();
+    body.push_str(&format!(
+        "support_seq_checked:{:8.3} ms/pass  ({:.3} ns/step)   [pre-optimization kernel]\n",
+        ms_before,
+        ms_before * 1e6 / tr.total_steps as f64
+    ));
+
+    // 1. sequential support kernel (optimized)
+    let times = bench_ms(2, 8, || compute_supports_seq(&z, &mut s));
+    let ms = mean(&times).unwrap();
+    body.push_str(&format!(
+        "support_seq:        {:8.3} ms/pass  ({:.3} ns/step)   [{:+.1}% vs checked]\n",
+        ms,
+        ms * 1e6 / tr.total_steps as f64,
+        (ms / ms_before - 1.0) * 100.0
+    ));
+
+    // 2. pool variants (this host has few cores; numbers are for
+    //    contention sanity, not scaling claims)
+    for threads in [1usize, 2, 4] {
+        let pool = Pool::new(threads);
+        for mode in [Mode::Coarse, Mode::Fine] {
+            let times = bench_ms(1, 4, || {
+                compute_supports_par(&z, &pool, mode, Schedule::Dynamic { chunk: 1024 })
+            });
+            body.push_str(&format!(
+                "support_pool[{threads}t,{mode}]: {:8.3} ms/pass\n",
+                mean(&times).unwrap()
+            ));
+        }
+    }
+
+    // 3. prune pass
+    let mut z2 = z.clone();
+    let mut s2 = vec![0u32; z2.slots()];
+    let times = bench_ms(2, 8, || {
+        // re-fill supports so prune has real work each trial
+        compute_supports_seq(&z2, &mut s2);
+        ktruss::algo::prune::prune(&mut z2, &mut s2, 3)
+    });
+    body.push_str(&format!(
+        "support+prune:      {:8.3} ms/iter\n",
+        mean(&times).unwrap()
+    ));
+
+    // 4. end-to-end
+    let times = bench_ms(1, 3, || run_ktruss(&g, 3, Mode::Fine));
+    body.push_str(&format!("ktruss_k3:          {:8.3} ms\n", mean(&times).unwrap()));
+    let times = bench_ms(0, 1, || kmax::kmax(&g));
+    body.push_str(&format!("kmax_full:          {:8.3} ms\n", mean(&times).unwrap()));
+
+    report::emit("micro_hotpath.txt", &body).expect("save report");
+}

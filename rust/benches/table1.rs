@@ -1,0 +1,16 @@
+//! `cargo bench --bench table1` — regenerates the paper's Table I:
+//! runtime (ms) and ME/s for CPU-C/CPU-F (48 simulated threads) and
+//! GPU-C/GPU-F (simulated V100), K = 3, over the replica suite.
+//!
+//! Env: KTRUSS_SUITE (paper|small|name,name…), KTRUSS_SCALE (default
+//! 0.15 — this container is one core; scale is printed with results).
+
+use ktruss::bench_harness::{report, table1, Workload};
+
+fn main() {
+    let w = Workload::from_env().expect("workload config");
+    println!("{}", w.banner("Table I (K=3)"));
+    let t = table1::run(&w, 3, |msg| eprintln!("  [{msg}]")).expect("table1 run");
+    let body = format!("{}\n[scale {}]\n", t.render(), t.scale);
+    report::emit("table1.txt", &body).expect("save report");
+}

@@ -1,0 +1,132 @@
+//! Full truss decomposition: the *trussness* of every edge — the largest
+//! k such that the edge survives in the k-truss. Generalizes the single-k
+//! query; the coordinator exposes it as a job type and the examples use
+//! it to report community structure.
+
+use super::ktruss::run_to_convergence;
+use crate::graph::{Csr, Vid, ZCsr};
+use std::collections::HashMap;
+
+/// Trussness assignment for every edge of the input graph.
+#[derive(Clone, Debug)]
+pub struct Decomposition {
+    /// `(u, v) -> trussness`, for every input edge (u < v). Edges in no
+    /// triangle get trussness 2.
+    pub trussness: HashMap<(Vid, Vid), u32>,
+    /// Largest k with non-empty truss.
+    pub kmax: u32,
+}
+
+impl Decomposition {
+    /// The k-truss edge set implied by the decomposition.
+    pub fn truss_edges(&self, k: u32) -> Vec<(Vid, Vid)> {
+        let mut es: Vec<(Vid, Vid)> = self
+            .trussness
+            .iter()
+            .filter(|&(_, &t)| t >= k)
+            .map(|(&e, _)| e)
+            .collect();
+        es.sort_unstable();
+        es
+    }
+
+    /// Histogram: for each k in 2..=kmax, how many edges have exactly
+    /// that trussness.
+    pub fn histogram(&self) -> Vec<(u32, usize)> {
+        let mut counts: HashMap<u32, usize> = HashMap::new();
+        for &t in self.trussness.values() {
+            *counts.entry(t).or_insert(0) += 1;
+        }
+        let mut v: Vec<(u32, usize)> = counts.into_iter().collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+/// Peel k upward; an edge's trussness is `k-1` where k is the first
+/// level that removed it (edges surviving to the end get `kmax`).
+pub fn decompose(g: &Csr) -> Decomposition {
+    let mut trussness: HashMap<(Vid, Vid), u32> = g.edges().map(|e| (e, 2)).collect();
+    if g.nnz() == 0 {
+        return Decomposition { trussness, kmax: 0 };
+    }
+    let mut z = ZCsr::from_csr(g);
+    let mut s: Vec<u32> = Vec::new();
+    let mut prev_edges: Vec<(Vid, Vid)> = g.edges().collect();
+    let mut kmax = 2u32;
+    let mut k = 3u32;
+    loop {
+        run_to_convergence(&mut z, &mut s, k);
+        let cur = z.to_csr();
+        let cur_edges: std::collections::HashSet<(Vid, Vid)> = cur.edges().collect();
+        // edges alive at k-1 but not at k have trussness k-1
+        for &e in &prev_edges {
+            if !cur_edges.contains(&e) {
+                trussness.insert(e, k - 1);
+            }
+        }
+        if cur_edges.is_empty() {
+            break;
+        }
+        kmax = k;
+        for &e in &cur_edges {
+            trussness.insert(e, k);
+        }
+        prev_edges = cur.edges().collect();
+        k += 1;
+    }
+    Decomposition { trussness, kmax }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::ktruss::{ktruss, Mode};
+    use crate::graph::builder::from_sorted_unique;
+
+    #[test]
+    fn clique_plus_tail() {
+        // K4 {0..3} + path 3-4-5
+        let g = from_sorted_unique(
+            6,
+            &[(0, 1), (0, 2), (0, 3), (1, 2), (1, 3), (2, 3), (3, 4), (4, 5)],
+        );
+        let d = decompose(&g);
+        assert_eq!(d.kmax, 4);
+        assert_eq!(d.trussness[&(0, 1)], 4);
+        assert_eq!(d.trussness[&(2, 3)], 4);
+        assert_eq!(d.trussness[&(3, 4)], 2);
+        assert_eq!(d.trussness[&(4, 5)], 2);
+    }
+
+    #[test]
+    fn histogram_sums_to_edge_count() {
+        let g = crate::gen::community::communities(150, 800, 15, &mut crate::util::Rng::new(41));
+        let d = decompose(&g);
+        let total: usize = d.histogram().iter().map(|&(_, c)| c).sum();
+        assert_eq!(total, g.nnz());
+    }
+
+    #[test]
+    fn truss_edges_match_direct_computation() {
+        let g = crate::gen::rmat::rmat(
+            150,
+            900,
+            crate::gen::rmat::RmatParams::social(),
+            &mut crate::util::Rng::new(43),
+        );
+        let d = decompose(&g);
+        for k in 3..=d.kmax {
+            let direct = ktruss(&g, k, Mode::Fine);
+            let from_decomp = d.truss_edges(k);
+            let direct_edges: Vec<(Vid, Vid)> = direct.truss.edges().collect();
+            assert_eq!(from_decomp, direct_edges, "k={k}");
+        }
+    }
+
+    #[test]
+    fn kmax_agrees_with_kmax_module() {
+        let g = crate::gen::community::communities(120, 600, 12, &mut crate::util::Rng::new(47));
+        assert_eq!(decompose(&g).kmax, crate::algo::kmax::kmax(&g).kmax);
+    }
+}

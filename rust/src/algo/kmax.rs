@@ -1,0 +1,115 @@
+//! `K_max` — the largest k with a non-empty k-truss (the paper's second
+//! experimental setting). Exploits the nesting `truss(k+1) ⊆ truss(k)`:
+//! we walk k upward, re-running the convergence loop *on the already
+//! pruned graph*, so each step only strips the newly sub-threshold
+//! edges.
+
+use super::ktruss::{run_to_convergence, IterationStat};
+use crate::graph::{Csr, ZCsr};
+
+/// Result of the `K_max` search.
+#[derive(Clone, Debug)]
+pub struct KmaxResult {
+    /// Largest k whose k-truss is non-empty (≥ 2 by convention: the
+    /// 2-truss is the whole graph once isolated... a graph with any edge
+    /// has k_max ≥ 2; triangle-free graphs have k_max == 2).
+    pub kmax: u32,
+    /// The k_max-truss subgraph.
+    pub truss: Csr,
+    /// Total support+prune iterations summed over all k steps (what a
+    /// timing simulation replays).
+    pub total_iterations: usize,
+    /// Per-k iteration stats: (k, stats-of-that-k's-loop).
+    pub per_k: Vec<(u32, Vec<IterationStat>)>,
+}
+
+/// Compute `K_max` and its truss by incremental peeling.
+pub fn kmax(g: &Csr) -> KmaxResult {
+    if g.nnz() == 0 {
+        return KmaxResult { kmax: 0, truss: Csr::empty(g.n()), total_iterations: 0, per_k: Vec::new() };
+    }
+    let mut z = ZCsr::from_csr(g);
+    let mut s: Vec<u32> = Vec::new();
+    let mut last_nonempty = z.to_csr();
+    let mut kmax = 2u32;
+    let mut total_iterations = 0usize;
+    let mut per_k = Vec::new();
+    let mut k = 3u32;
+    loop {
+        let (iters, stats) = run_to_convergence(&mut z, &mut s, k);
+        total_iterations += iters;
+        per_k.push((k, stats));
+        if z.live_edges() == 0 {
+            break;
+        }
+        kmax = k;
+        last_nonempty = z.to_csr();
+        k += 1;
+    }
+    KmaxResult { kmax, truss: last_nonempty, total_iterations, per_k }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::from_sorted_unique;
+
+    #[test]
+    fn kmax_of_clique() {
+        // K_n is an n-truss (every edge in n-2 triangles)
+        for n in [3u32, 4, 5, 6] {
+            let mut edges = Vec::new();
+            for u in 0..n {
+                for v in (u + 1)..n {
+                    edges.push((u, v));
+                }
+            }
+            let g = from_sorted_unique(n as usize, &edges);
+            let r = kmax(&g);
+            assert_eq!(r.kmax, n, "K{n}");
+            assert_eq!(r.truss.nnz() as u32, n * (n - 1) / 2);
+        }
+    }
+
+    #[test]
+    fn kmax_of_triangle_free_is_two() {
+        let g = from_sorted_unique(5, &[(0, 1), (0, 4), (1, 2), (2, 3), (3, 4)]);
+        let r = kmax(&g);
+        assert_eq!(r.kmax, 2);
+        // the 2-truss is the full (cycle) graph
+        assert_eq!(r.truss.nnz(), 5);
+    }
+
+    #[test]
+    fn kmax_of_empty_graph() {
+        let g = Csr::empty(4);
+        assert_eq!(kmax(&g).kmax, 0);
+    }
+
+    #[test]
+    fn kmax_finds_embedded_clique() {
+        // K5 plus a long tail: kmax = 5 from the clique
+        let mut edges = Vec::new();
+        for u in 0..5u32 {
+            for v in (u + 1)..5 {
+                edges.push((u, v));
+            }
+        }
+        edges.extend_from_slice(&[(4, 5), (5, 6), (6, 7)]);
+        let g = from_sorted_unique(8, &edges);
+        let r = kmax(&g);
+        assert_eq!(r.kmax, 5);
+        assert_eq!(r.truss.nnz(), 10);
+    }
+
+    #[test]
+    fn kmax_truss_matches_direct_ktruss() {
+        use crate::algo::ktruss::{ktruss, Mode};
+        let g = crate::gen::community::communities(200, 1200, 20, &mut crate::util::Rng::new(3));
+        let r = kmax(&g);
+        let direct = ktruss(&g, r.kmax, Mode::Fine);
+        assert_eq!(r.truss, direct.truss);
+        // and one higher k is empty
+        assert!(ktruss(&g, r.kmax + 1, Mode::Fine).is_empty());
+    }
+}

@@ -1,0 +1,166 @@
+//! The K-truss driver: Algorithm 1's convergence loop over
+//! `computeSupports` + `pruneEdges`, in both parallel granularities.
+
+use super::prune::{prune, PruneOutcome};
+use super::support::compute_supports_seq;
+pub use super::support::Mode;
+use crate::graph::{Csr, ZCsr};
+
+/// Per-iteration record (consumed by the simulators and the bench
+/// harness — each iteration corresponds to one kernel launch pair).
+#[derive(Clone, Debug)]
+pub struct IterationStat {
+    /// Live edges at the start of the iteration.
+    pub live_edges: usize,
+    /// Edges pruned at the end of the iteration.
+    pub removed: usize,
+    /// Total merge-steps of the support pass (the real work measure).
+    pub support_steps: u64,
+}
+
+/// Result of a K-truss computation.
+#[derive(Clone, Debug)]
+pub struct KtrussResult {
+    /// The surviving k-truss subgraph (may be empty).
+    pub truss: Csr,
+    /// Number of support+prune iterations until convergence.
+    pub iterations: usize,
+    /// Per-iteration stats.
+    pub stats: Vec<IterationStat>,
+    /// Requested k.
+    pub k: u32,
+    /// Parallel granularity requested (identical results; recorded for
+    /// provenance in bench output).
+    pub mode: Mode,
+}
+
+impl KtrussResult {
+    /// Edges in the truss.
+    pub fn edges(&self) -> usize {
+        self.truss.nnz()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.truss.nnz() == 0
+    }
+}
+
+/// Compute the k-truss of `g`. `mode` selects the task granularity used
+/// by parallel/simulated executions; the sequential result is identical
+/// for both (and is verified so by tests).
+pub fn ktruss(g: &Csr, k: u32, mode: Mode) -> KtrussResult {
+    let mut z = ZCsr::from_csr(g);
+    let mut s: Vec<u32> = Vec::new();
+    let (iterations, stats) = run_to_convergence(&mut z, &mut s, k);
+    KtrussResult { truss: z.to_csr(), iterations, stats, k, mode }
+}
+
+/// In-place driver over an existing working copy; returns
+/// (iterations, per-iteration stats). Used by [`ktruss`], by the
+/// decomposition (which re-enters with increasing k), and by the
+/// simulators (which replay the same loop through the cost tracer).
+pub fn run_to_convergence(z: &mut ZCsr, s: &mut Vec<u32>, k: u32) -> (usize, Vec<IterationStat>) {
+    let mut iterations = 0usize;
+    let mut stats = Vec::new();
+    loop {
+        let live = z.live_edges();
+        if live == 0 {
+            break;
+        }
+        // Step 1: computeSupports (S ← AᵀA ∘ A, eager)
+        let steps_before = sum_steps(z, s);
+        // Step 2: pruneEdges (M ← S ≥ k-2; A ← A ∘ M)
+        let out: PruneOutcome = prune(z, s, k);
+        iterations += 1;
+        stats.push(IterationStat { live_edges: live, removed: out.removed, support_steps: steps_before });
+        if out.removed == 0 {
+            break; // isUnchanged(M)
+        }
+    }
+    (iterations, stats)
+}
+
+/// Run the support pass and return total merge-steps (work measure).
+fn sum_steps(z: &ZCsr, s: &mut Vec<u32>) -> u64 {
+    // compute_supports_seq clears + fills s
+    compute_supports_seq(z, s);
+    // steps are re-derived by a cheap second walk only when tracing is
+    // requested; here we approximate with support-sum + live edges,
+    // which the cost tracer replaces with exact counts.
+    s.iter().map(|&x| x as u64).sum::<u64>() + z.live_edges() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::from_sorted_unique;
+
+    #[test]
+    fn k3_of_triangle_is_triangle() {
+        let g = from_sorted_unique(3, &[(0, 1), (0, 2), (1, 2)]);
+        let r = ktruss(&g, 3, Mode::Fine);
+        assert_eq!(r.edges(), 3);
+        assert!(r.iterations >= 1);
+    }
+
+    #[test]
+    fn k3_strips_tree_parts() {
+        // triangle with a path attached: path edges all die
+        let g = from_sorted_unique(6, &[(0, 1), (0, 2), (1, 2), (2, 3), (3, 4), (4, 5)]);
+        let r = ktruss(&g, 3, Mode::Coarse);
+        assert_eq!(r.edges(), 3);
+        assert_eq!(r.truss.row(0), &[1, 2]);
+    }
+
+    #[test]
+    fn cascading_removal_takes_multiple_iterations() {
+        // two triangles sharing edge (1,2); (2,3),(1,3) has support 1 but
+        // removing pendant structures cascades:
+        // graph: triangle {0,1,2}, plus triangle {1,2,3}, plus edge (3,4)
+        // k=4 requires support>=2: edge (0,1),(0,2) support 1 -> die;
+        // then {1,2,3} loses nothing... choose k=4: all edges die
+        let g = from_sorted_unique(5, &[(0, 1), (0, 2), (1, 2), (1, 3), (2, 3), (3, 4)]);
+        let r = ktruss(&g, 4, Mode::Fine);
+        assert!(r.is_empty());
+        assert!(r.iterations >= 2, "iterations {}", r.iterations);
+    }
+
+    #[test]
+    fn k4_of_k4_survives() {
+        let k4 = from_sorted_unique(4, &[(0, 1), (0, 2), (0, 3), (1, 2), (1, 3), (2, 3)]);
+        let r = ktruss(&k4, 4, Mode::Fine);
+        assert_eq!(r.edges(), 6);
+    }
+
+    #[test]
+    fn k5_of_k4_is_empty() {
+        let k4 = from_sorted_unique(4, &[(0, 1), (0, 2), (0, 3), (1, 2), (1, 3), (2, 3)]);
+        let r = ktruss(&k4, 5, Mode::Coarse);
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn modes_agree() {
+        let g = crate::gen::rmat::rmat(
+            400,
+            3000,
+            crate::gen::rmat::RmatParams::social(),
+            &mut crate::util::Rng::new(77),
+        );
+        for k in [3, 4, 5, 8] {
+            let a = ktruss(&g, k, Mode::Coarse);
+            let b = ktruss(&g, k, Mode::Fine);
+            assert_eq!(a.truss, b.truss, "k={k}");
+        }
+    }
+
+    #[test]
+    fn stats_are_consistent() {
+        let g = from_sorted_unique(6, &[(0, 1), (0, 2), (1, 2), (2, 3), (3, 4), (4, 5)]);
+        let r = ktruss(&g, 3, Mode::Fine);
+        assert_eq!(r.stats.len(), r.iterations);
+        assert_eq!(r.stats[0].live_edges, 6);
+        let total_removed: usize = r.stats.iter().map(|s| s.removed).sum();
+        assert_eq!(total_removed, 6 - r.edges());
+    }
+}

@@ -1,0 +1,15 @@
+//! The Eager K-truss algorithm family (paper Algorithms 1–3):
+//! support computation in coarse and fine granularity, pruning,
+//! the convergence driver, K_max search, full truss decomposition,
+//! and the independent naive oracle.
+
+pub mod decompose;
+pub mod kmax;
+pub mod ktruss;
+pub mod prune;
+pub mod reference;
+pub mod support;
+pub mod triangle;
+
+pub use ktruss::{ktruss, KtrussResult};
+pub use support::Mode;

@@ -1,0 +1,154 @@
+//! `pruneEdges` — Step 2 of the Eager K-truss algorithm:
+//! `M = S ≥ (k-2); A = A ∘ M`.
+//!
+//! Realized on the zero-terminated CSR by compacting each row's
+//! survivors to the front and zero-filling the tail — the paper's
+//! early-termination trick: the next support pass stops at the first
+//! zero, so pruned rows get cheaper, and the representation needs no
+//! extra bookkeeping (§III-D).
+
+use crate::graph::zeroterm::ZCsr;
+
+/// Result of one prune pass.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PruneOutcome {
+    /// Edges removed this pass. 0 ⇒ `isUnchanged(M)` ⇒ converged.
+    pub removed: usize,
+    /// Live edges remaining after the pass.
+    pub remaining: usize,
+}
+
+/// Prune every edge with support `< k - 2`, compacting rows in place.
+/// `s` is consumed (reset to zero) so the next iteration starts clean.
+pub fn prune(z: &mut ZCsr, s: &mut [u32], k: u32) -> PruneOutcome {
+    assert_eq!(s.len(), z.slots());
+    let threshold = k.saturating_sub(2);
+    let mut removed = 0usize;
+    let mut remaining = 0usize;
+    for i in 0..z.n() {
+        let (start, end) = z.row_span(i);
+        let col = z.col_mut();
+        let mut write = start;
+        for p in start..end {
+            let c = col[p];
+            if c == 0 {
+                break; // tail already dead
+            }
+            if s[p] >= threshold {
+                col[write] = c;
+                write += 1;
+            } else {
+                removed += 1;
+            }
+        }
+        remaining += write - start;
+        // zero-fill the rest of the row (tombstones + terminator)
+        for slot in col.iter_mut().take(end).skip(write) {
+            *slot = 0;
+        }
+        // reset supports for the whole row span
+        for sp in s.iter_mut().take(end).skip(start) {
+            *sp = 0;
+        }
+    }
+    PruneOutcome { removed, remaining }
+}
+
+/// Count how many live edges *would* be pruned at threshold `k` without
+/// mutating anything (used by the coordinator's progress estimates).
+pub fn count_below(z: &ZCsr, s: &[u32], k: u32) -> usize {
+    let threshold = k.saturating_sub(2);
+    let mut below = 0usize;
+    for i in 0..z.n() {
+        let (start, _) = z.row_span(i);
+        for (off, &c) in z.row_raw(i).iter().enumerate() {
+            if c == 0 {
+                break;
+            }
+            if s[start + off] < threshold {
+                below += 1;
+            }
+        }
+    }
+    below
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::support::compute_supports_seq;
+    use crate::graph::builder::from_sorted_unique;
+    use crate::graph::validate;
+
+    #[test]
+    fn prune_removes_low_support_edges() {
+        // diamond + pendant edge (3,4): pendant has support 0
+        let g = from_sorted_unique(5, &[(0, 1), (0, 2), (0, 3), (1, 2), (2, 3), (3, 4)]);
+        let mut z = ZCsr::from_csr(&g);
+        let mut s = Vec::new();
+        compute_supports_seq(&z, &mut s);
+        let out = prune(&mut z, &mut s, 3); // threshold 1
+        assert_eq!(out.removed, 1);
+        assert_eq!(out.remaining, 5);
+        assert!(validate::check_zcsr(&z).is_ok());
+        assert_eq!(z.row_live(3), &[] as &[u32]); // (3,4) gone
+        // supports were reset
+        assert!(s.iter().all(|&x| x == 0));
+    }
+
+    #[test]
+    fn prune_k3_keeps_triangles() {
+        let g = from_sorted_unique(3, &[(0, 1), (0, 2), (1, 2)]);
+        let mut z = ZCsr::from_csr(&g);
+        let mut s = Vec::new();
+        compute_supports_seq(&z, &mut s);
+        let out = prune(&mut z, &mut s, 3);
+        assert_eq!(out.removed, 0);
+        assert_eq!(out.remaining, 3);
+    }
+
+    #[test]
+    fn prune_high_k_removes_everything() {
+        let g = from_sorted_unique(3, &[(0, 1), (0, 2), (1, 2)]);
+        let mut z = ZCsr::from_csr(&g);
+        let mut s = Vec::new();
+        compute_supports_seq(&z, &mut s);
+        let out = prune(&mut z, &mut s, 4); // needs 2 triangles per edge
+        assert_eq!(out.removed, 3);
+        assert_eq!(out.remaining, 0);
+        assert!(validate::check_zcsr(&z).is_ok());
+    }
+
+    #[test]
+    fn count_below_matches_prune() {
+        let g = from_sorted_unique(5, &[(0, 1), (0, 2), (0, 3), (1, 2), (2, 3), (3, 4)]);
+        let z0 = ZCsr::from_csr(&g);
+        let mut s = Vec::new();
+        compute_supports_seq(&z0, &mut s);
+        let predicted = count_below(&z0, &s, 3);
+        let mut z = z0.clone();
+        let out = prune(&mut z, &mut s, 3);
+        assert_eq!(predicted, out.removed);
+    }
+
+    #[test]
+    fn compaction_preserves_sorted_order() {
+        // row 0: [1,2,3,4]; kill (0,2) and keep rest sorted
+        let g = from_sorted_unique(
+            6,
+            &[(0, 1), (0, 2), (0, 3), (0, 4), (1, 3), (3, 4), (1, 4)],
+        );
+        let mut z = ZCsr::from_csr(&g);
+        let mut s = vec![0u32; z.slots()];
+        // hand-craft supports: give everything 5 except slot of (0,2)
+        for i in 0..z.n() {
+            let (start, _) = z.row_span(i);
+            for (off, &c) in z.row_live(i).iter().enumerate() {
+                s[start + off] = if (i, c) == (0, 2) { 0 } else { 5 };
+            }
+        }
+        prune(&mut z, &mut s, 3);
+        assert_eq!(z.row_live(0), &[1, 3, 4]);
+        assert!(validate::check_zcsr(&z).is_ok());
+    }
+}

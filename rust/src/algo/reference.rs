@@ -1,0 +1,102 @@
+//! Naive reference K-truss — a deliberately independent implementation
+//! (hash-set adjacency, no zero-terminated CSR, no eager updates) used
+//! as the correctness oracle, mirroring the paper's verification against
+//! the Low et al. reference code.
+
+use crate::graph::{Csr, Vid};
+use std::collections::{HashMap, HashSet};
+
+/// Compute the k-truss edge set by repeated full recount + removal.
+/// O(iterations · m · d_max) — fine for oracle-scale graphs only.
+pub fn ktruss_naive(g: &Csr, k: u32) -> Vec<(Vid, Vid)> {
+    let threshold = k.saturating_sub(2);
+    // symmetric adjacency sets
+    let mut adj: HashMap<Vid, HashSet<Vid>> = HashMap::new();
+    for (u, v) in g.edges() {
+        adj.entry(u).or_default().insert(v);
+        adj.entry(v).or_default().insert(u);
+    }
+    let mut edges: HashSet<(Vid, Vid)> = g.edges().collect();
+    loop {
+        let mut to_remove: Vec<(Vid, Vid)> = Vec::new();
+        for &(u, v) in &edges {
+            let (nu, nv) = (&adj[&u], &adj[&v]);
+            let common = if nu.len() <= nv.len() {
+                nu.iter().filter(|w| nv.contains(w)).count()
+            } else {
+                nv.iter().filter(|w| nu.contains(w)).count()
+            };
+            if (common as u32) < threshold {
+                to_remove.push((u, v));
+            }
+        }
+        if to_remove.is_empty() {
+            break;
+        }
+        for (u, v) in to_remove {
+            edges.remove(&(u, v));
+            adj.get_mut(&u).map(|s| s.remove(&v));
+            adj.get_mut(&v).map(|s| s.remove(&u));
+        }
+    }
+    let mut out: Vec<(Vid, Vid)> = edges.into_iter().collect();
+    out.sort_unstable();
+    out
+}
+
+/// Naive K_max: linear scan upward.
+pub fn kmax_naive(g: &Csr) -> u32 {
+    if g.nnz() == 0 {
+        return 0;
+    }
+    let mut k = 2u32;
+    loop {
+        if ktruss_naive(g, k + 1).is_empty() {
+            return k;
+        }
+        k += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::ktruss::{ktruss, Mode};
+    use crate::graph::builder::from_sorted_unique;
+
+    #[test]
+    fn matches_eager_on_small_known_graph() {
+        let g = from_sorted_unique(
+            6,
+            &[(0, 1), (0, 2), (0, 3), (1, 2), (1, 3), (2, 3), (3, 4), (4, 5)],
+        );
+        for k in [3u32, 4, 5] {
+            let naive = ktruss_naive(&g, k);
+            let eager: Vec<(Vid, Vid)> = ktruss(&g, k, Mode::Fine).truss.edges().collect();
+            assert_eq!(naive, eager, "k={k}");
+        }
+    }
+
+    #[test]
+    fn matches_eager_on_random_graphs() {
+        for seed in 0..5u64 {
+            let g = crate::gen::rmat::rmat(
+                120,
+                700,
+                crate::gen::rmat::RmatParams::social(),
+                &mut crate::util::Rng::new(seed),
+            );
+            for k in [3u32, 4, 6] {
+                let naive = ktruss_naive(&g, k);
+                let eager: Vec<(Vid, Vid)> = ktruss(&g, k, Mode::Coarse).truss.edges().collect();
+                assert_eq!(naive, eager, "seed={seed} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn kmax_agrees() {
+        let g = crate::gen::community::communities(100, 500, 12, &mut crate::util::Rng::new(4));
+        assert_eq!(kmax_naive(&g), crate::algo::kmax::kmax(&g).kmax);
+    }
+}

@@ -1,0 +1,349 @@
+//! `computeSupports` — Step 1 of the Eager K-truss algorithm.
+//!
+//! Both parallel granularities run the *identical* eager update kernel
+//! (the sorted-merge neighborhood intersection of paper Listing 1); they
+//! differ only in what a task is:
+//!
+//! * **coarse** (Algorithm 2): one task per row `i` — the task walks all
+//!   live entries `j` of `a₁₂ᵀ` and applies the update rules for each.
+//! * **fine** (Algorithm 3, the contribution): one task per nonzero slot
+//!   `(i, j)` — the task applies the update rules for that single entry.
+//!
+//! For a live slot `p` holding `κ = col[p]` in row `i`, the eager update
+//! merges the tail of row `i` after `p` with row `κ`. Every match `w`
+//! identifies the triangle `(i, κ, w)` with `i < κ < w`, and all three
+//! edge supports are bumped: `S[p]` (edge `i–κ`, the paper's `s₁₂(j)`
+//! dot-product term), `S[q]` (edge `i–w`, the `s₁₂(j+1:)` term) and
+//! `S[r]` (edge `κ–w`, the `S₂₂` row term). Zero terminators end both
+//! walks, so no bounds are carried (§III-D).
+
+use crate::graph::zeroterm::ZCsr;
+use crate::graph::Vid;
+use std::sync::atomic::{AtomicU32, Ordering};
+
+/// How tasks are enumerated (granularity of parallelism).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    /// One task per row (source vertex) — the original Eager K-truss.
+    Coarse,
+    /// One task per nonzero — the paper's fine-grained formulation.
+    Fine,
+}
+
+impl std::fmt::Display for Mode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Mode::Coarse => write!(f, "coarse"),
+            Mode::Fine => write!(f, "fine"),
+        }
+    }
+}
+
+/// Eager update for the single live slot `p` (row tail starts at `p+1`,
+/// row `κ` starts at `r0`). Sequential support array. Returns the number
+/// of merge steps executed (the task's work, consumed by the cost model).
+///
+/// Hot path (§Perf): bounds checks are elided — safe because every row
+/// of the zero-terminated CSR ends with a `0` slot (construction +
+/// prune-compaction invariant, checked by `validate::check_zcsr`), so
+/// the `cq/cr != 0` guards stop each walk at or before its row's
+/// terminator. The less/greater advances are compiled branch-free; only
+/// the (rare) match branch remains.
+#[inline]
+pub fn eager_update_seq(col: &[Vid], s: &mut [u32], p: usize, r0: usize) -> u64 {
+    let mut q = p + 1;
+    let mut r = r0;
+    let mut steps: u64 = 0;
+    debug_assert!(q < col.len() && r < col.len());
+    // SAFETY: q and r only advance while the current value is nonzero;
+    // every row ends with a zero terminator, so q/r never cross their
+    // row's final slot (which is in-bounds by construction).
+    //
+    // §Perf note: a branch-free lagging-side advance was tried and
+    // REVERTED (+14.7% — the sorted-merge branches predict well and the
+    // branchless form lengthens the dependent chain; see EXPERIMENTS.md
+    // §Perf iteration 1). Only bounds-check elision is kept.
+    unsafe {
+        let mut cq = *col.get_unchecked(q);
+        let mut cr = *col.get_unchecked(r);
+        while cq != 0 && cr != 0 {
+            steps += 1;
+            match cq.cmp(&cr) {
+                std::cmp::Ordering::Less => {
+                    q += 1;
+                    cq = *col.get_unchecked(q);
+                }
+                std::cmp::Ordering::Greater => {
+                    r += 1;
+                    cr = *col.get_unchecked(r);
+                }
+                std::cmp::Ordering::Equal => {
+                    // triangle (i, κ, w): bump all three edges eagerly
+                    *s.get_unchecked_mut(p) += 1;
+                    *s.get_unchecked_mut(q) += 1;
+                    *s.get_unchecked_mut(r) += 1;
+                    q += 1;
+                    r += 1;
+                    cq = *col.get_unchecked(q);
+                    cr = *col.get_unchecked(r);
+                }
+            }
+        }
+    }
+    steps
+}
+
+/// The original, bounds-checked match-based kernel, kept (a) as the
+/// reference the optimized kernel is verified against and (b) as the
+/// "before" side of the §Perf comparison in `micro_hotpath`.
+#[inline]
+pub fn eager_update_seq_checked(col: &[Vid], s: &mut [u32], p: usize, r0: usize) -> u64 {
+    let mut q = p + 1;
+    let mut r = r0;
+    let mut steps: u64 = 0;
+    let mut cq = col[q];
+    let mut cr = col[r];
+    while cq != 0 && cr != 0 {
+        steps += 1;
+        match cq.cmp(&cr) {
+            std::cmp::Ordering::Less => {
+                q += 1;
+                cq = col[q];
+            }
+            std::cmp::Ordering::Greater => {
+                r += 1;
+                cr = col[r];
+            }
+            std::cmp::Ordering::Equal => {
+                s[p] += 1;
+                s[q] += 1;
+                s[r] += 1;
+                q += 1;
+                r += 1;
+                cq = col[q];
+                cr = col[r];
+            }
+        }
+    }
+    steps
+}
+
+/// Full sequential support pass over the checked kernel (perf baseline).
+pub fn compute_supports_seq_checked(z: &ZCsr, s: &mut Vec<u32>) {
+    s.clear();
+    s.resize(z.slots(), 0);
+    let col = z.col();
+    for i in 0..z.n() {
+        let (start, end) = z.row_span(i);
+        for p in start..end {
+            let kappa = col[p];
+            if kappa == 0 {
+                break;
+            }
+            let (r0, _) = z.row_span(kappa as usize);
+            eager_update_seq_checked(col, s, p, r0);
+        }
+    }
+}
+
+/// Atomic variant of [`eager_update_seq`] used by the real thread pool:
+/// concurrent tasks may touch the same support slots (`S₂₂` rows are
+/// shared across tasks), exactly why the paper marks `S` Atomic.
+#[inline]
+pub fn eager_update_atomic(col: &[Vid], s: &[AtomicU32], p: usize, r0: usize) -> u64 {
+    let mut q = p + 1;
+    let mut r = r0;
+    let mut steps: u64 = 0;
+    debug_assert!(q < col.len() && r < col.len());
+    // SAFETY: identical terminator argument to `eager_update_seq`.
+    unsafe {
+        let mut cq = *col.get_unchecked(q);
+        let mut cr = *col.get_unchecked(r);
+        while cq != 0 && cr != 0 {
+            steps += 1;
+            match cq.cmp(&cr) {
+                std::cmp::Ordering::Less => {
+                    q += 1;
+                    cq = *col.get_unchecked(q);
+                }
+                std::cmp::Ordering::Greater => {
+                    r += 1;
+                    cr = *col.get_unchecked(r);
+                }
+                std::cmp::Ordering::Equal => {
+                    s.get_unchecked(p).fetch_add(1, Ordering::Relaxed);
+                    s.get_unchecked(q).fetch_add(1, Ordering::Relaxed);
+                    s.get_unchecked(r).fetch_add(1, Ordering::Relaxed);
+                    q += 1;
+                    r += 1;
+                    cq = *col.get_unchecked(q);
+                    cr = *col.get_unchecked(r);
+                }
+            }
+        }
+    }
+    steps
+}
+
+/// Run the full coarse task for row `i` sequentially: apply the eager
+/// update for every live slot of the row. Returns total merge steps.
+///
+/// §Perf note: software-prefetching the next task's partner row was
+/// tried and REVERTED (±0% on the 150k-edge workload — partner rows are
+/// largely cache-resident; see EXPERIMENTS.md §Perf iteration 3).
+#[inline]
+pub fn row_task_seq(z: &ZCsr, s: &mut [u32], i: usize) -> u64 {
+    let col = z.col();
+    let (start, end) = z.row_span(i);
+    let mut steps = 0u64;
+    for p in start..end {
+        let kappa = col[p];
+        if kappa == 0 {
+            break; // terminator — rest of row is dead
+        }
+        let (r0, _) = z.row_span(kappa as usize);
+        steps += eager_update_seq(col, s, p, r0);
+    }
+    steps
+}
+
+/// Sequential `computeSupports`: clears `s` and applies the eager update
+/// over all rows. This is the single-thread execution used both for the
+/// ground-truth result and for wallclock calibration of the simulators.
+pub fn compute_supports_seq(z: &ZCsr, s: &mut Vec<u32>) {
+    s.clear();
+    s.resize(z.slots(), 0);
+    for i in 0..z.n() {
+        row_task_seq(z, s, i);
+    }
+}
+
+/// Support slot values give the triangle count per live edge; the total
+/// triangle count of the graph is `sum(S) / 3` (each triangle bumps
+/// three slots).
+pub fn total_triangles(s: &[u32]) -> u64 {
+    s.iter().map(|&x| x as u64).sum::<u64>() / 3
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::from_sorted_unique;
+    use crate::graph::Csr;
+
+    fn supports_of(g: &Csr) -> (ZCsr, Vec<u32>) {
+        let z = ZCsr::from_csr(g);
+        let mut s = Vec::new();
+        compute_supports_seq(&z, &mut s);
+        (z, s)
+    }
+
+    /// Collect (u, v, support) triples for live edges.
+    fn edge_supports(z: &ZCsr, s: &[u32]) -> Vec<(u32, u32, u32)> {
+        let mut out = Vec::new();
+        for i in 0..z.n() {
+            let (start, _) = z.row_span(i);
+            for (off, &c) in z.row_live(i).iter().enumerate() {
+                out.push((i as u32, c, s[start + off]));
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn triangle_graph() {
+        let g = from_sorted_unique(3, &[(0, 1), (0, 2), (1, 2)]);
+        let (z, s) = supports_of(&g);
+        let es = edge_supports(&z, &s);
+        assert_eq!(es, vec![(0, 1, 1), (0, 2, 1), (1, 2, 1)]);
+        assert_eq!(total_triangles(&s), 1);
+    }
+
+    #[test]
+    fn diamond_graph() {
+        // triangles {0,1,2} and {0,2,3}; edge (0,2) is in both
+        let g = from_sorted_unique(4, &[(0, 1), (0, 2), (0, 3), (1, 2), (2, 3)]);
+        let (z, s) = supports_of(&g);
+        let es = edge_supports(&z, &s);
+        assert_eq!(
+            es,
+            vec![(0, 1, 1), (0, 2, 2), (0, 3, 1), (1, 2, 1), (2, 3, 1)]
+        );
+        assert_eq!(total_triangles(&s), 2);
+    }
+
+    #[test]
+    fn k4_every_edge_in_two_triangles() {
+        let g = from_sorted_unique(4, &[(0, 1), (0, 2), (0, 3), (1, 2), (1, 3), (2, 3)]);
+        let (z, s) = supports_of(&g);
+        for (u, v, sup) in edge_supports(&z, &s) {
+            assert_eq!(sup, 2, "edge ({u},{v})");
+        }
+        assert_eq!(total_triangles(&s), 4);
+    }
+
+    #[test]
+    fn triangle_free_graph_zero_support() {
+        // 5-cycle: no triangles
+        let g = from_sorted_unique(5, &[(0, 1), (0, 4), (1, 2), (2, 3), (3, 4)]);
+        let (_, s) = supports_of(&g);
+        assert!(s.iter().all(|&x| x == 0));
+    }
+
+    #[test]
+    fn optimized_kernel_matches_checked_kernel() {
+        let g = crate::gen::rmat::rmat(
+            400,
+            3000,
+            crate::gen::rmat::RmatParams::social(),
+            &mut crate::util::Rng::new(321),
+        );
+        let z = ZCsr::from_csr(&g);
+        let mut fast = Vec::new();
+        compute_supports_seq(&z, &mut fast);
+        let mut checked = Vec::new();
+        compute_supports_seq_checked(&z, &mut checked);
+        assert_eq!(fast, checked);
+    }
+
+    #[test]
+    fn atomic_matches_seq() {
+        let g = crate::gen::erdos_renyi::gnm(200, 1500, &mut crate::util::Rng::new(5));
+        let z = ZCsr::from_csr(&g);
+        let mut s_seq = Vec::new();
+        compute_supports_seq(&z, &mut s_seq);
+
+        let s_at: Vec<AtomicU32> = (0..z.slots()).map(|_| AtomicU32::new(0)).collect();
+        let col = z.col();
+        for i in 0..z.n() {
+            let (start, end) = z.row_span(i);
+            for p in start..end {
+                let kappa = col[p];
+                if kappa == 0 {
+                    break;
+                }
+                let (r0, _) = z.row_span(kappa as usize);
+                eager_update_atomic(col, &s_at, p, r0);
+            }
+        }
+        let s_at_plain: Vec<u32> = s_at.iter().map(|x| x.load(Ordering::Relaxed)).collect();
+        assert_eq!(s_seq, s_at_plain);
+    }
+
+    #[test]
+    fn steps_equal_merge_work() {
+        // rows [1,2,3,0] and [3,0]: slot of (0,1) merges tail [2,3] with
+        // row1 [2? no — row 1 holds [2..]]. Just sanity: steps > 0 when
+        // both sides non-empty.
+        let g = from_sorted_unique(4, &[(0, 1), (0, 2), (0, 3), (1, 2), (2, 3)]);
+        let z = ZCsr::from_csr(&g);
+        let mut s = vec![0u32; z.slots()];
+        let steps = row_task_seq(&z, &mut s, 0);
+        // (0,1): merge [2,3] vs [2] = 1 step; (0,2): [3] vs [3] = 1 step;
+        // (0,3): empty tail = 0 steps
+        assert_eq!(steps, 2);
+        // row 3 has no entries -> no work
+        let steps3 = row_task_seq(&z, &mut s, 3);
+        assert_eq!(steps3, 0);
+    }
+}

@@ -1,0 +1,207 @@
+//! Figure regeneration:
+//!
+//! * **Fig 2** — speedup of fine over coarse on the CPU vs thread count
+//!   {1,2,4,8,16,32,48}, K = K_max, one series per graph.
+//! * **Fig 3** — ME/s on the CPU at 48 threads, coarse vs fine, for
+//!   K=3 (top panel) and K=K_max (bottom panel).
+//! * **Fig 4** — ME/s on the GPU, coarse vs fine, K=3 and K=K_max.
+//!
+//! Each `run_*` returns the plotted series as data; the bench binaries
+//! print them as aligned tables (the "plot" of a text harness).
+
+use super::workload::Workload;
+use crate::algo::support::Mode;
+use crate::sim::{simulate_kmax, simulate_ktruss, SimConfig};
+use crate::util::fmt::{mes, speedup, Table};
+use crate::util::stats::geomean;
+use anyhow::Result;
+
+/// The paper's Fig-2 thread axis.
+pub const THREADS: [usize; 7] = [1, 2, 4, 8, 16, 32, 48];
+
+/// Fig 2: per-graph speedup series over the thread axis.
+#[derive(Clone, Debug)]
+pub struct Fig2 {
+    /// (graph, kmax, speedups per THREADS entry).
+    pub series: Vec<(String, u32, [f64; 7])>,
+    pub scale: f64,
+}
+
+impl Fig2 {
+    pub fn render(&self) -> String {
+        let mut t = Table::new(vec![
+            "graph", "kmax", "1t", "2t", "4t", "8t", "16t", "32t", "48t",
+        ]);
+        for (name, kmax, sp) in &self.series {
+            let mut row = vec![name.clone(), kmax.to_string()];
+            row.extend(sp.iter().map(|&x| speedup(x)));
+            t.row(row);
+        }
+        format!(
+            "{}\n(values are coarse_time/fine_time at K=Kmax; paper Fig 2 shows most graphs above 1.0,\n growing with threads, with road networks near parity)\n",
+            t.render()
+        )
+    }
+}
+
+/// Run Fig 2.
+pub fn run_fig2(w: &Workload, mut progress: impl FnMut(&str)) -> Result<Fig2> {
+    let mut configs = Vec::new();
+    for &t in &THREADS {
+        configs.push(SimConfig::cpu(t, Mode::Coarse));
+        configs.push(SimConfig::cpu(t, Mode::Fine));
+    }
+    let mut series = Vec::new();
+    for spec in &w.specs {
+        let g = w.load(spec)?;
+        let (kmax, res) = simulate_kmax(&g, &configs);
+        let mut sp = [0.0f64; 7];
+        for (ti, _) in THREADS.iter().enumerate() {
+            sp[ti] = res[2 * ti].seconds / res[2 * ti + 1].seconds;
+        }
+        progress(&format!("{}: kmax={kmax}", spec.name));
+        series.push((spec.name.to_string(), kmax, sp));
+    }
+    Ok(Fig2 { series, scale: w.scale })
+}
+
+/// Fig 3/4 panel: per-graph coarse and fine ME/s for one device, one K
+/// setting.
+#[derive(Clone, Debug)]
+pub struct MesPanel {
+    pub device: String,
+    /// "3" or "kmax".
+    pub k_setting: String,
+    /// (graph, coarse ME/s, fine ME/s, k used).
+    pub rows: Vec<(String, f64, f64, u32)>,
+    pub scale: f64,
+}
+
+impl MesPanel {
+    pub fn geomean_speedup(&self) -> f64 {
+        let r: Vec<f64> = self.rows.iter().map(|(_, c, f, _)| f / c).collect();
+        geomean(&r).unwrap_or(f64::NAN)
+    }
+
+    pub fn render(&self) -> String {
+        let mut t = Table::new(vec!["graph", "k", "coarse ME/s", "fine ME/s", "speedup"]);
+        for (name, c, f, k) in &self.rows {
+            t.row(vec![
+                name.clone(),
+                k.to_string(),
+                mes(*c),
+                mes(*f),
+                speedup(f / c),
+            ]);
+        }
+        format!(
+            "## {} K={}\n{}geomean fine/coarse speedup: {}\n",
+            self.device,
+            self.k_setting,
+            t.render(),
+            speedup(self.geomean_speedup())
+        )
+    }
+}
+
+/// Which device a panel simulates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PanelDevice {
+    Cpu48,
+    Gpu,
+}
+
+impl PanelDevice {
+    fn configs(self) -> Vec<SimConfig> {
+        match self {
+            PanelDevice::Cpu48 => vec![
+                SimConfig::cpu(48, Mode::Coarse),
+                SimConfig::cpu(48, Mode::Fine),
+            ],
+            PanelDevice::Gpu => vec![SimConfig::gpu(Mode::Coarse), SimConfig::gpu(Mode::Fine)],
+        }
+    }
+
+    fn name(self) -> &'static str {
+        match self {
+            PanelDevice::Cpu48 => "CPU 48 threads",
+            PanelDevice::Gpu => "GPU (V100)",
+        }
+    }
+}
+
+/// Run one ME/s panel (Fig 3 = Cpu48, Fig 4 = Gpu; each at K=3 and
+/// K=Kmax).
+pub fn run_mes_panel(
+    w: &Workload,
+    device: PanelDevice,
+    use_kmax: bool,
+    mut progress: impl FnMut(&str),
+) -> Result<MesPanel> {
+    let configs = device.configs();
+    let mut rows = Vec::new();
+    for spec in &w.specs {
+        let g = w.load(spec)?;
+        let (k_used, res) = if use_kmax {
+            let (kmax, res) = simulate_kmax(&g, &configs);
+            (kmax, res)
+        } else {
+            (3, simulate_ktruss(&g, 3, &configs))
+        };
+        progress(&format!("{}: k={k_used}", spec.name));
+        rows.push((spec.name.to_string(), res[0].me_per_s, res[1].me_per_s, k_used));
+    }
+    Ok(MesPanel {
+        device: device.name().to_string(),
+        k_setting: if use_kmax { "kmax".into() } else { "3".into() },
+        rows,
+        scale: w.scale,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::suite::by_name;
+
+    fn tiny_workload() -> Workload {
+        Workload { specs: vec![by_name("as20000102").unwrap()], scale: 0.05 }
+    }
+
+    #[test]
+    fn fig2_produces_series() {
+        let f = run_fig2(&tiny_workload(), |_| {}).unwrap();
+        assert_eq!(f.series.len(), 1);
+        let (_, kmax, sp) = &f.series[0];
+        assert!(*kmax >= 3);
+        assert!(sp.iter().all(|x| x.is_finite() && *x > 0.0));
+        assert!(f.render().contains("48t"));
+    }
+
+    #[test]
+    fn mes_panels_cpu_and_gpu() {
+        let w = tiny_workload();
+        for dev in [PanelDevice::Cpu48, PanelDevice::Gpu] {
+            for use_kmax in [false, true] {
+                let p = run_mes_panel(&w, dev, use_kmax, |_| {}).unwrap();
+                assert_eq!(p.rows.len(), 1);
+                assert!(p.geomean_speedup().is_finite());
+                assert!(p.render().contains("geomean"));
+            }
+        }
+    }
+
+    #[test]
+    fn gpu_speedup_exceeds_cpu_on_hub_graph() {
+        // the paper's central claim, checked end-to-end at bench level
+        let w = tiny_workload(); // as20000102: AS topology, hub-dominated
+        let cpu = run_mes_panel(&w, PanelDevice::Cpu48, false, |_| {}).unwrap();
+        let gpu = run_mes_panel(&w, PanelDevice::Gpu, false, |_| {}).unwrap();
+        assert!(
+            gpu.geomean_speedup() > cpu.geomean_speedup(),
+            "gpu {} vs cpu {}",
+            gpu.geomean_speedup(),
+            cpu.geomean_speedup()
+        );
+    }
+}

@@ -1,0 +1,11 @@
+//! Benchmark harness: regenerates every table and figure of the paper's
+//! evaluation (Table I, Figs 2–4) plus the design ablations, over the
+//! synthetic replica suite. Used by `cargo bench` binaries and the CLI.
+
+pub mod ablations;
+pub mod figs;
+pub mod report;
+pub mod table1;
+pub mod workload;
+
+pub use workload::Workload;

@@ -1,0 +1,44 @@
+//! Bench output sink: every bench prints to stdout *and* persists to
+//! `bench_results/` (text + CSV where applicable) so EXPERIMENTS.md can
+//! reference stable files.
+
+use anyhow::{Context, Result};
+use std::path::PathBuf;
+
+/// Directory bench outputs land in (`KTRUSS_BENCH_OUT` overrides).
+pub fn out_dir() -> PathBuf {
+    std::env::var_os("KTRUSS_BENCH_OUT")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("bench_results"))
+}
+
+/// Write a named report file and echo the path.
+pub fn save(name: &str, contents: &str) -> Result<PathBuf> {
+    let dir = out_dir();
+    std::fs::create_dir_all(&dir).with_context(|| format!("mkdir {}", dir.display()))?;
+    let path = dir.join(name);
+    std::fs::write(&path, contents).with_context(|| format!("write {}", path.display()))?;
+    Ok(path)
+}
+
+/// Standard bench epilogue: print and persist.
+pub fn emit(name: &str, contents: &str) -> Result<()> {
+    println!("{contents}");
+    let path = save(name, contents)?;
+    println!("[saved {}]", path.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn save_roundtrip() {
+        std::env::set_var("KTRUSS_BENCH_OUT", std::env::temp_dir().join("ktruss-bench-test"));
+        let p = save("x.txt", "hello").unwrap();
+        assert_eq!(std::fs::read_to_string(&p).unwrap(), "hello");
+        std::fs::remove_file(p).unwrap();
+        std::env::remove_var("KTRUSS_BENCH_OUT");
+    }
+}

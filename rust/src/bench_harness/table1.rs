@@ -1,0 +1,124 @@
+//! Table I regeneration: runtimes (ms) and ME/s for CPU-C/CPU-F (48
+//! threads, simulated Skylake) and GPU-C/GPU-F (simulated V100), K=3,
+//! over the whole replica suite — the same columns the paper prints.
+
+use super::workload::Workload;
+use crate::sim::{simulate_ktruss, table1_configs};
+use crate::util::fmt::{count_k, mes, ms, speedup, Table};
+use crate::util::stats::geomean;
+use anyhow::Result;
+
+/// One Table-I row.
+#[derive(Clone, Debug)]
+pub struct Row {
+    pub name: String,
+    pub vertices: usize,
+    pub edges: usize,
+    /// [CPU-C, CPU-F, GPU-C, GPU-F] total times, ms.
+    pub time_ms: [f64; 4],
+    /// [CPU-C, CPU-F, GPU-C, GPU-F] ME/s.
+    pub me_s: [f64; 4],
+}
+
+/// Aggregated result of the Table-I run.
+#[derive(Clone, Debug)]
+pub struct Table1 {
+    pub rows: Vec<Row>,
+    pub k: u32,
+    pub scale: f64,
+}
+
+impl Table1 {
+    /// Geomean speedups: (CPU fine/coarse, GPU fine/coarse, GPU-F/CPU-F).
+    pub fn headline(&self) -> (f64, f64, f64) {
+        let cpu: Vec<f64> = self.rows.iter().map(|r| r.time_ms[0] / r.time_ms[1]).collect();
+        let gpu: Vec<f64> = self.rows.iter().map(|r| r.time_ms[2] / r.time_ms[3]).collect();
+        let cross: Vec<f64> = self.rows.iter().map(|r| r.time_ms[1] / r.time_ms[3]).collect();
+        (
+            geomean(&cpu).unwrap_or(f64::NAN),
+            geomean(&gpu).unwrap_or(f64::NAN),
+            geomean(&cross).unwrap_or(f64::NAN),
+        )
+    }
+
+    /// Render in the paper's column layout.
+    pub fn render(&self) -> String {
+        let mut t = Table::new(vec![
+            "Input Graph",
+            "Vertices",
+            "Edges",
+            "CPU-C ms",
+            "CPU-F ms",
+            "GPU-C ms",
+            "GPU-F ms",
+            "CPU-C ME/s",
+            "CPU-F ME/s",
+            "GPU-C ME/s",
+            "GPU-F ME/s",
+        ]);
+        for r in &self.rows {
+            t.row(vec![
+                r.name.clone(),
+                count_k(r.vertices),
+                count_k(r.edges),
+                ms(r.time_ms[0]),
+                ms(r.time_ms[1]),
+                ms(r.time_ms[2]),
+                ms(r.time_ms[3]),
+                mes(r.me_s[0]),
+                mes(r.me_s[1]),
+                mes(r.me_s[2]),
+                mes(r.me_s[3]),
+            ]);
+        }
+        let (cpu, gpu, cross) = self.headline();
+        format!(
+            "{}\ngeomean speedups (K={}): CPU fine/coarse {}   GPU fine/coarse {}   GPU-F/CPU-F {}\n(paper: CPU 1.48x, GPU 16.93x, GPU-F/CPU-F 1.92x at K=3, full-size SNAP graphs)\n",
+            t.render(),
+            self.k,
+            speedup(cpu),
+            speedup(gpu),
+            speedup(cross),
+        )
+    }
+}
+
+/// Run Table I at `k` over the workload.
+pub fn run(w: &Workload, k: u32, mut progress: impl FnMut(&str)) -> Result<Table1> {
+    let configs = table1_configs();
+    let mut rows = Vec::new();
+    for spec in &w.specs {
+        let g = w.load(spec)?;
+        let res = simulate_ktruss(&g, k, &configs);
+        progress(&format!("{}: {} edges, {} iterations", spec.name, g.nnz(), res[0].iterations));
+        rows.push(Row {
+            name: spec.name.to_string(),
+            vertices: g.n(),
+            edges: g.nnz(),
+            time_ms: [res[0].time_ms(), res[1].time_ms(), res[2].time_ms(), res[3].time_ms()],
+            me_s: [res[0].me_per_s, res[1].me_per_s, res[2].me_per_s, res[3].me_per_s],
+        });
+    }
+    Ok(Table1 { rows, k, scale: w.scale })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::suite::by_name;
+
+    #[test]
+    fn table1_on_two_graphs() {
+        let w = Workload {
+            specs: vec![by_name("as20000102").unwrap(), by_name("p2p-Gnutella08").unwrap()],
+            scale: 0.05,
+        };
+        let t = run(&w, 3, |_| {}).unwrap();
+        assert_eq!(t.rows.len(), 2);
+        let (cpu, gpu, _) = t.headline();
+        assert!(cpu.is_finite() && gpu.is_finite());
+        let rendered = t.render();
+        assert!(rendered.contains("as20000102"));
+        assert!(rendered.contains("geomean"));
+    }
+}

@@ -1,0 +1,101 @@
+//! Workload selection shared by every bench binary and the CLI:
+//! which replica graphs to run and at what scale.
+//!
+//! Environment knobs (recorded in every bench header):
+//! * `KTRUSS_SUITE`  — `small` (6 graphs), `paper` (all 50; default for
+//!   `cargo bench`), or a comma-separated list of graph names.
+//! * `KTRUSS_SCALE`  — size multiplier for the replicas (default 0.15:
+//!   this container is a single core; the scale is printed with every
+//!   result and EXPERIMENTS.md records the scale each run used).
+
+use crate::gen::suite::{by_name, GraphSpec, SUITE};
+use crate::graph::Csr;
+use anyhow::{bail, Result};
+
+/// Resolved workload configuration.
+#[derive(Clone, Debug)]
+pub struct Workload {
+    pub specs: Vec<&'static GraphSpec>,
+    pub scale: f64,
+}
+
+/// Default replica scale for bench runs on this container.
+pub const DEFAULT_SCALE: f64 = 0.15;
+
+impl Workload {
+    /// Resolve from the environment.
+    pub fn from_env() -> Result<Workload> {
+        let scale = match std::env::var("KTRUSS_SCALE") {
+            Ok(s) => s.parse::<f64>().map_err(|_| anyhow::anyhow!("bad KTRUSS_SCALE {s}"))?,
+            Err(_) => DEFAULT_SCALE,
+        };
+        if !(0.001..=1.0).contains(&scale) {
+            bail!("KTRUSS_SCALE must be in (0.001, 1.0], got {scale}");
+        }
+        let suite = std::env::var("KTRUSS_SUITE").unwrap_or_else(|_| "paper".to_string());
+        let specs: Vec<&'static GraphSpec> = match suite.as_str() {
+            "paper" | "full" => SUITE.iter().collect(),
+            "small" => crate::gen::suite::small_suite(),
+            list => {
+                let mut out = Vec::new();
+                for name in list.split(',') {
+                    let name = name.trim();
+                    match by_name(name) {
+                        Some(s) => out.push(s),
+                        None => bail!("unknown graph {name:?} in KTRUSS_SUITE"),
+                    }
+                }
+                out
+            }
+        };
+        Ok(Workload { specs, scale })
+    }
+
+    /// Load (or generate+cache) one replica at this workload's scale.
+    pub fn load(&self, spec: &GraphSpec) -> Result<Csr> {
+        crate::gen::suite::load(spec, self.scale)
+    }
+
+    /// Header line all benches print for provenance.
+    pub fn banner(&self, bench: &str) -> String {
+        format!(
+            "# {bench}: {} graphs, scale {} (set KTRUSS_SUITE / KTRUSS_SCALE to change)",
+            self.specs.len(),
+            self.scale
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// One combined test: env vars are process-global and the test
+    /// runner is multi-threaded, so all env manipulation lives in a
+    /// single sequential test.
+    #[test]
+    fn env_parsing_cases() {
+        // named list + explicit scale
+        std::env::set_var("KTRUSS_SUITE", "ca-GrQc, roadNet-PA");
+        std::env::set_var("KTRUSS_SCALE", "0.05");
+        let w = Workload::from_env().unwrap();
+        assert_eq!(w.specs.len(), 2);
+        assert_eq!(w.scale, 0.05);
+        assert!(w.banner("x").contains("2 graphs"));
+
+        // bad scale
+        std::env::set_var("KTRUSS_SCALE", "7.0");
+        assert!(Workload::from_env().is_err());
+        std::env::remove_var("KTRUSS_SCALE");
+
+        // unknown graph
+        std::env::set_var("KTRUSS_SUITE", "not-a-graph");
+        assert!(Workload::from_env().is_err());
+
+        // defaults
+        std::env::remove_var("KTRUSS_SUITE");
+        let w = Workload::from_env().unwrap();
+        assert_eq!(w.specs.len(), 50);
+        assert_eq!(w.scale, DEFAULT_SCALE);
+    }
+}

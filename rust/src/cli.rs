@@ -1,0 +1,115 @@
+//! Minimal argument parser for the `ktruss` launcher (no clap in the
+//! offline crate set). Supports `--flag value`, `--flag=value`, boolean
+//! `--flag`, and positional arguments.
+
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+/// Parsed command line.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: HashMap<String, String>,
+    /// flags consumed so far (for unknown-flag reporting)
+    used: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from raw argv (excluding the program name and subcommand).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    args.flags.insert(stripped.to_string(), v);
+                } else {
+                    args.flags.insert(stripped.to_string(), "true".to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        Ok(args)
+    }
+
+    /// String flag with default.
+    pub fn get(&self, key: &str, default: &str) -> String {
+        self.used.borrow_mut().push(key.to_string());
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Optional string flag.
+    pub fn opt(&self, key: &str) -> Option<String> {
+        self.used.borrow_mut().push(key.to_string());
+        self.flags.get(key).cloned()
+    }
+
+    /// Typed flag with default.
+    pub fn get_as<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        self.used.borrow_mut().push(key.to_string());
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key}: cannot parse {v:?}")),
+        }
+    }
+
+    /// Boolean flag (present or `--flag true`).
+    pub fn has(&self, key: &str) -> bool {
+        self.used.borrow_mut().push(key.to_string());
+        matches!(self.flags.get(key).map(String::as_str), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Error on flags nobody consumed (catches typos).
+    pub fn reject_unknown(&self) -> Result<()> {
+        let used = self.used.borrow();
+        for k in self.flags.keys() {
+            if !used.iter().any(|u| u == k) {
+                bail!("unknown flag --{k}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_flag_styles() {
+        // NB: a bare boolean flag directly before a positional would
+        // consume it as a value (documented grammar limitation), so
+        // boolean flags go last or use `--flag=true`.
+        let a = Args::parse(argv("--k 4 --mode=fine pos1 --verbose")).unwrap();
+        assert_eq!(a.get("k", "3"), "4");
+        assert_eq!(a.get("mode", "coarse"), "fine");
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+        assert!(a.reject_unknown().is_ok());
+    }
+
+    #[test]
+    fn typed_parsing_and_defaults() {
+        let a = Args::parse(argv("--k 7")).unwrap();
+        assert_eq!(a.get_as::<u32>("k", 3).unwrap(), 7);
+        assert_eq!(a.get_as::<u32>("missing", 9).unwrap(), 9);
+        assert!(Args::parse(argv("--k x")).unwrap().get_as::<u32>("k", 3).is_err());
+    }
+
+    #[test]
+    fn unknown_flags_rejected() {
+        let a = Args::parse(argv("--k 4 --tpyo 1")).unwrap();
+        let _ = a.get("k", "3");
+        assert!(a.reject_unknown().is_err());
+    }
+}

@@ -1,0 +1,77 @@
+//! Job types the coordinator serves.
+
+use crate::algo::support::Mode;
+use crate::graph::{Csr, Vid};
+use std::sync::Arc;
+
+/// Unique job id assigned at submission.
+pub type JobId = u64;
+
+/// What to compute.
+#[derive(Clone, Debug)]
+pub enum JobKind {
+    /// Fixed-k K-truss.
+    Ktruss { k: u32, mode: Mode },
+    /// Largest non-empty k.
+    Kmax,
+    /// Full truss decomposition (trussness per edge).
+    Decompose,
+    /// Triangle count.
+    Triangles,
+}
+
+/// A submitted request.
+#[derive(Clone, Debug)]
+pub struct JobRequest {
+    pub id: JobId,
+    pub graph: Arc<Csr>,
+    pub kind: JobKind,
+}
+
+/// Which engine executed a job (routing provenance).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Engine {
+    /// Sparse zero-terminated CSR path on the worker pool.
+    SparseCpu,
+    /// Dense AOT (jax/Pallas via PJRT) path — small graphs only.
+    DenseXla,
+}
+
+impl std::fmt::Display for Engine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Engine::SparseCpu => write!(f, "sparse-cpu"),
+            Engine::DenseXla => write!(f, "dense-xla"),
+        }
+    }
+}
+
+/// Result payload per job kind.
+#[derive(Clone, Debug)]
+pub enum JobOutput {
+    Ktruss { truss_edges: usize, iterations: usize, edges: Vec<(Vid, Vid)> },
+    Kmax { kmax: u32, truss_edges: usize },
+    Decompose { kmax: u32, histogram: Vec<(u32, usize)> },
+    Triangles { count: u64 },
+}
+
+/// Completed job envelope.
+#[derive(Clone, Debug)]
+pub struct JobResult {
+    pub id: JobId,
+    pub engine: Engine,
+    pub wall_ms: f64,
+    /// Ok(output) or the error message (no anyhow across channels).
+    pub output: Result<JobOutput, String>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_display() {
+        assert_eq!(Engine::SparseCpu.to_string(), "sparse-cpu");
+        assert_eq!(Engine::DenseXla.to_string(), "dense-xla");
+    }
+}

@@ -1,0 +1,117 @@
+//! Lock-free service metrics: per-engine job counts and a coarse
+//! log₂-bucketed latency histogram, suitable for scraping from the CLI.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+const BUCKETS: usize = 24; // 2^0 .. 2^23 microseconds (~8.4 s)
+
+/// Aggregated coordinator metrics.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub submitted: AtomicU64,
+    pub completed: AtomicU64,
+    pub failed: AtomicU64,
+    pub sparse_jobs: AtomicU64,
+    pub dense_jobs: AtomicU64,
+    latency_us: [AtomicU64; BUCKETS],
+    latency_sum_us: AtomicU64,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn record_submit(&self) {
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_done(&self, engine: crate::coordinator::job::Engine, wall_ms: f64, ok: bool) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        if !ok {
+            self.failed.fetch_add(1, Ordering::Relaxed);
+        }
+        match engine {
+            crate::coordinator::job::Engine::SparseCpu => {
+                self.sparse_jobs.fetch_add(1, Ordering::Relaxed)
+            }
+            crate::coordinator::job::Engine::DenseXla => {
+                self.dense_jobs.fetch_add(1, Ordering::Relaxed)
+            }
+        };
+        let us = (wall_ms * 1e3).max(0.0) as u64;
+        let bucket = (64 - us.max(1).leading_zeros() as usize - 1).min(BUCKETS - 1);
+        self.latency_us[bucket].fetch_add(1, Ordering::Relaxed);
+        self.latency_sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    /// (completed, failed, mean latency ms).
+    pub fn summary(&self) -> (u64, u64, f64) {
+        let done = self.completed.load(Ordering::Relaxed);
+        let failed = self.failed.load(Ordering::Relaxed);
+        let mean_ms = if done == 0 {
+            0.0
+        } else {
+            self.latency_sum_us.load(Ordering::Relaxed) as f64 / done as f64 / 1e3
+        };
+        (done, failed, mean_ms)
+    }
+
+    /// Latency histogram as (bucket_floor_us, count), non-empty buckets.
+    pub fn latency_histogram(&self) -> Vec<(u64, u64)> {
+        self.latency_us
+            .iter()
+            .enumerate()
+            .filter_map(|(b, c)| {
+                let count = c.load(Ordering::Relaxed);
+                (count > 0).then_some((1u64 << b, count))
+            })
+            .collect()
+    }
+
+    /// Render a one-line scrape.
+    pub fn render(&self) -> String {
+        let (done, failed, mean) = self.summary();
+        format!(
+            "submitted={} completed={} failed={} sparse={} dense={} mean_latency_ms={:.3}",
+            self.submitted.load(Ordering::Relaxed),
+            done,
+            failed,
+            self.sparse_jobs.load(Ordering::Relaxed),
+            self.dense_jobs.load(Ordering::Relaxed),
+            mean
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::job::Engine;
+
+    #[test]
+    fn records_and_summarizes() {
+        let m = Metrics::new();
+        m.record_submit();
+        m.record_submit();
+        m.record_done(Engine::SparseCpu, 1.0, true);
+        m.record_done(Engine::DenseXla, 3.0, false);
+        let (done, failed, mean) = m.summary();
+        assert_eq!(done, 2);
+        assert_eq!(failed, 1);
+        assert!((mean - 2.0).abs() < 0.01, "{mean}");
+        assert_eq!(m.latency_histogram().iter().map(|&(_, c)| c).sum::<u64>(), 2);
+        assert!(m.render().contains("completed=2"));
+    }
+
+    #[test]
+    fn histogram_buckets_log2() {
+        let m = Metrics::new();
+        m.record_done(Engine::SparseCpu, 0.001, true); // 1us -> bucket 0
+        m.record_done(Engine::SparseCpu, 1.0, true); // 1000us -> bucket 9
+        let h = m.latency_histogram();
+        assert_eq!(h.len(), 2);
+        assert_eq!(h[0].0, 1);
+        assert_eq!(h[1].0, 512);
+    }
+}

@@ -1,0 +1,11 @@
+//! L3 serving coordinator: job queue, batching dispatcher, engine
+//! routing (sparse CPU pool vs dense AOT/PJRT path) and metrics.
+
+pub mod job;
+pub mod metrics;
+pub mod router;
+pub mod service;
+pub mod worker;
+
+pub use job::{Engine, JobKind, JobOutput, JobRequest, JobResult};
+pub use service::{Coordinator, ServiceConfig, Ticket};

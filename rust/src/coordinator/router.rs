@@ -1,0 +1,80 @@
+//! Engine routing: decide, per job, whether the dense AOT path or the
+//! sparse CPU path executes it. The dense path is profitable only for
+//! graphs that fit a compiled block (and is mandatory for none — it can
+//! be disabled entirely when artifacts are absent, e.g. in unit tests).
+
+use super::job::{Engine, JobKind, JobRequest};
+
+/// Routing policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct RouterConfig {
+    /// Largest dense block available (0 disables the dense path).
+    pub dense_limit: usize,
+    /// Route graphs at or below this vertex count to the dense engine
+    /// (must be ≤ dense_limit).
+    pub dense_threshold: usize,
+}
+
+impl RouterConfig {
+    pub fn new(dense_limit: usize) -> RouterConfig {
+        RouterConfig { dense_limit, dense_threshold: dense_limit }
+    }
+
+    pub fn disabled() -> RouterConfig {
+        RouterConfig { dense_limit: 0, dense_threshold: 0 }
+    }
+}
+
+/// Pick the engine for a request.
+pub fn route(cfg: &RouterConfig, req: &JobRequest) -> Engine {
+    let n = req.graph.n();
+    let dense_ok = cfg.dense_limit > 0 && n <= cfg.dense_threshold.min(cfg.dense_limit);
+    match req.kind {
+        // only fixed-k truss has a dense AOT entry point; everything
+        // else runs sparse
+        JobKind::Ktruss { .. } if dense_ok => Engine::DenseXla,
+        _ => Engine::SparseCpu,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::support::Mode;
+    use crate::graph::builder::from_sorted_unique;
+    use std::sync::Arc;
+
+    fn req(n_vertices: usize, kind: JobKind) -> JobRequest {
+        let edges: Vec<(u32, u32)> = (0..n_vertices as u32 - 1).map(|u| (u, u + 1)).collect();
+        JobRequest { id: 0, graph: Arc::new(from_sorted_unique(n_vertices, &edges)), kind }
+    }
+
+    #[test]
+    fn small_ktruss_goes_dense() {
+        let cfg = RouterConfig::new(256);
+        let r = req(100, JobKind::Ktruss { k: 3, mode: Mode::Fine });
+        assert_eq!(route(&cfg, &r), Engine::DenseXla);
+    }
+
+    #[test]
+    fn large_ktruss_goes_sparse() {
+        let cfg = RouterConfig::new(256);
+        let r = req(1000, JobKind::Ktruss { k: 3, mode: Mode::Fine });
+        assert_eq!(route(&cfg, &r), Engine::SparseCpu);
+    }
+
+    #[test]
+    fn non_ktruss_kinds_go_sparse() {
+        let cfg = RouterConfig::new(256);
+        for kind in [JobKind::Kmax, JobKind::Decompose, JobKind::Triangles] {
+            assert_eq!(route(&cfg, &req(50, kind)), Engine::SparseCpu);
+        }
+    }
+
+    #[test]
+    fn disabled_dense_routes_everything_sparse() {
+        let cfg = RouterConfig::disabled();
+        let r = req(10, JobKind::Ktruss { k: 3, mode: Mode::Fine });
+        assert_eq!(route(&cfg, &r), Engine::SparseCpu);
+    }
+}

@@ -1,0 +1,243 @@
+//! The serving coordinator: a submission queue, a batching loop, and
+//! routed execution with metrics — the L3 "request path" of the stack.
+//!
+//! Shape: callers `submit()` jobs and receive a ticket; a dispatcher
+//! thread drains the queue in batches (batching amortizes pool spin-up
+//! and keeps dense-path executions back-to-back on the PJRT client),
+//! routes each job, executes, and delivers results through the ticket.
+
+use super::job::{JobId, JobKind, JobRequest, JobResult};
+use super::metrics::Metrics;
+use super::router::{route, RouterConfig};
+use super::worker::Worker;
+use crate::graph::Csr;
+use crate::par::Pool;
+use crate::runtime::DenseEngine;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Configuration of the coordinator service.
+#[derive(Clone, Copy, Debug)]
+pub struct ServiceConfig {
+    /// Worker pool width for sparse jobs.
+    pub pool_workers: usize,
+    /// Max jobs drained per batch.
+    pub max_batch: usize,
+    /// How long the dispatcher waits to fill a batch.
+    pub batch_window: Duration,
+    /// Try to construct the dense engine (requires artifacts).
+    pub enable_dense: bool,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            pool_workers: 4,
+            max_batch: 16,
+            batch_window: Duration::from_millis(2),
+            enable_dense: true,
+        }
+    }
+}
+
+/// Ticket for a submitted job.
+pub struct Ticket {
+    pub id: JobId,
+    rx: Receiver<JobResult>,
+}
+
+impl Ticket {
+    /// Block until the result arrives.
+    pub fn wait(self) -> JobResult {
+        self.rx.recv().expect("coordinator dropped without reply")
+    }
+
+    /// Non-blocking poll.
+    pub fn try_get(&self) -> Option<JobResult> {
+        self.rx.try_recv().ok()
+    }
+}
+
+enum Msg {
+    Job(JobRequest, Sender<JobResult>),
+    Shutdown,
+}
+
+/// The coordinator handle. Dropping it shuts the dispatcher down.
+pub struct Coordinator {
+    tx: Sender<Msg>,
+    next_id: AtomicU64,
+    pub metrics: Arc<Metrics>,
+    dispatcher: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl Coordinator {
+    /// Start the service.
+    pub fn start(cfg: ServiceConfig) -> Coordinator {
+        let (tx, rx) = channel::<Msg>();
+        let metrics = Arc::new(Metrics::new());
+        let m2 = Arc::clone(&metrics);
+        let dispatcher = std::thread::Builder::new()
+            .name("ktruss-coordinator".into())
+            .spawn(move || dispatch_loop(rx, cfg, m2))
+            .expect("spawn coordinator");
+        Coordinator {
+            tx,
+            next_id: AtomicU64::new(1),
+            metrics,
+            dispatcher: Mutex::new(Some(dispatcher)),
+        }
+    }
+
+    /// Submit a job; returns a ticket to wait on.
+    pub fn submit(&self, graph: Arc<Csr>, kind: JobKind) -> Ticket {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (rtx, rrx) = channel();
+        self.metrics.record_submit();
+        self.tx
+            .send(Msg::Job(JobRequest { id, graph, kind }, rtx))
+            .expect("coordinator is down");
+        Ticket { id, rx: rrx }
+    }
+
+    /// Graceful shutdown (also triggered by Drop).
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.dispatcher.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.dispatcher.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn dispatch_loop(rx: Receiver<Msg>, cfg: ServiceConfig, metrics: Arc<Metrics>) {
+    let dense = if cfg.enable_dense { DenseEngine::new().ok() } else { None };
+    let router_cfg = dense
+        .as_ref()
+        .map(|d| RouterConfig::new(d.max_n()))
+        .unwrap_or_else(RouterConfig::disabled);
+    let worker = Worker::new(Pool::new(cfg.pool_workers), dense);
+    let mut batch: Vec<(JobRequest, Sender<JobResult>)> = Vec::new();
+    'outer: loop {
+        batch.clear();
+        // block for the first job
+        match rx.recv() {
+            Ok(Msg::Job(j, t)) => batch.push((j, t)),
+            Ok(Msg::Shutdown) | Err(_) => break 'outer,
+        }
+        // drain up to max_batch within the window
+        let deadline = std::time::Instant::now() + cfg.batch_window;
+        while batch.len() < cfg.max_batch {
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(Msg::Job(j, t)) => batch.push((j, t)),
+                Ok(Msg::Shutdown) => {
+                    process_batch(&worker, &router_cfg, &metrics, &mut batch);
+                    break 'outer;
+                }
+                Err(_) => break,
+            }
+        }
+        process_batch(&worker, &router_cfg, &metrics, &mut batch);
+    }
+}
+
+fn process_batch(
+    worker: &Worker,
+    router_cfg: &RouterConfig,
+    metrics: &Metrics,
+    batch: &mut Vec<(JobRequest, Sender<JobResult>)>,
+) {
+    // route first, then execute dense jobs together (PJRT locality)
+    let mut routed: Vec<(usize, crate::coordinator::job::Engine)> = batch
+        .iter()
+        .enumerate()
+        .map(|(i, (req, _))| (i, route(router_cfg, req)))
+        .collect();
+    routed.sort_by_key(|&(_, e)| e as u8);
+    for (idx, engine) in routed {
+        let (req, reply) = &batch[idx];
+        let result = worker.execute(req, engine);
+        metrics.record_done(result.engine, result.wall_ms, result.output.is_ok());
+        let _ = reply.send(result);
+    }
+    batch.clear();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::support::Mode;
+    use crate::coordinator::job::JobOutput;
+    use crate::graph::builder::from_sorted_unique;
+
+    fn cfg_no_dense() -> ServiceConfig {
+        ServiceConfig { enable_dense: false, pool_workers: 2, ..Default::default() }
+    }
+
+    #[test]
+    fn submit_and_wait_roundtrip() {
+        let c = Coordinator::start(cfg_no_dense());
+        let g = Arc::new(from_sorted_unique(4, &[(0, 1), (0, 2), (0, 3), (1, 2), (2, 3)]));
+        let t = c.submit(Arc::clone(&g), JobKind::Ktruss { k: 3, mode: Mode::Fine });
+        let r = t.wait();
+        match r.output.unwrap() {
+            JobOutput::Ktruss { truss_edges, .. } => assert_eq!(truss_edges, 5),
+            other => panic!("{other:?}"),
+        }
+        c.shutdown();
+    }
+
+    #[test]
+    fn batched_submissions_all_complete() {
+        let c = Coordinator::start(cfg_no_dense());
+        let g = Arc::new(crate::gen::erdos_renyi::gnm(100, 400, &mut crate::util::Rng::new(1)));
+        let tickets: Vec<Ticket> = (0..10)
+            .map(|i| {
+                let kind = if i % 2 == 0 {
+                    JobKind::Triangles
+                } else {
+                    JobKind::Ktruss { k: 3, mode: Mode::Coarse }
+                };
+                c.submit(Arc::clone(&g), kind)
+            })
+            .collect();
+        for t in tickets {
+            assert!(t.wait().output.is_ok());
+        }
+        let (done, failed, _) = c.metrics.summary();
+        assert_eq!(done, 10);
+        assert_eq!(failed, 0);
+    }
+
+    #[test]
+    fn ids_are_unique_and_monotone() {
+        let c = Coordinator::start(cfg_no_dense());
+        let g = Arc::new(from_sorted_unique(3, &[(0, 1), (1, 2)]));
+        let t1 = c.submit(Arc::clone(&g), JobKind::Triangles);
+        let t2 = c.submit(Arc::clone(&g), JobKind::Triangles);
+        assert!(t2.id > t1.id);
+        t1.wait();
+        t2.wait();
+    }
+
+    #[test]
+    fn shutdown_is_idempotent() {
+        let c = Coordinator::start(cfg_no_dense());
+        c.shutdown();
+        c.shutdown();
+    }
+}

@@ -1,0 +1,149 @@
+//! Job execution: dispatch a routed request to the chosen engine.
+
+use super::job::{Engine, JobKind, JobOutput, JobRequest, JobResult};
+use crate::algo::{decompose, kmax, triangle};
+use crate::par::{ktruss_par, Pool, Schedule};
+use crate::runtime::DenseEngine;
+use crate::util::Timer;
+
+/// Stateless executor with handles to both engines.
+pub struct Worker {
+    pub pool: Pool,
+    pub schedule: Schedule,
+    /// None when artifacts are unavailable (dense jobs then fall back to
+    /// the sparse path with a provenance note).
+    pub dense: Option<DenseEngine>,
+}
+
+impl Worker {
+    pub fn new(pool: Pool, dense: Option<DenseEngine>) -> Worker {
+        Worker { pool, schedule: Schedule::Dynamic { chunk: 256 }, dense }
+    }
+
+    /// Execute one request on `engine` (already routed).
+    pub fn execute(&self, req: &JobRequest, engine: Engine) -> JobResult {
+        let t = Timer::start();
+        let (engine_used, output) = match engine {
+            Engine::DenseXla => match self.execute_dense(req) {
+                Ok(out) => (Engine::DenseXla, Ok(out)),
+                // dense failure (missing artifacts, size) falls back
+                Err(_) => (Engine::SparseCpu, self.execute_sparse(req)),
+            },
+            Engine::SparseCpu => (Engine::SparseCpu, self.execute_sparse(req)),
+        };
+        JobResult {
+            id: req.id,
+            engine: engine_used,
+            wall_ms: t.elapsed_ms(),
+            output: output.map_err(|e| format!("{e:#}")),
+        }
+    }
+
+    fn execute_sparse(&self, req: &JobRequest) -> anyhow::Result<JobOutput> {
+        Ok(match req.kind {
+            JobKind::Ktruss { k, mode } => {
+                let r = ktruss_par(&req.graph, k, &self.pool, mode, self.schedule);
+                JobOutput::Ktruss {
+                    truss_edges: r.truss.nnz(),
+                    iterations: r.iterations,
+                    edges: r.truss.edges().collect(),
+                }
+            }
+            JobKind::Kmax => {
+                let r = kmax::kmax(&req.graph);
+                JobOutput::Kmax { kmax: r.kmax, truss_edges: r.truss.nnz() }
+            }
+            JobKind::Decompose => {
+                let d = decompose::decompose(&req.graph);
+                JobOutput::Decompose { kmax: d.kmax, histogram: d.histogram() }
+            }
+            JobKind::Triangles => {
+                JobOutput::Triangles { count: triangle::count_triangles(&req.graph) }
+            }
+        })
+    }
+
+    fn execute_dense(&self, req: &JobRequest) -> anyhow::Result<JobOutput> {
+        let dense = self
+            .dense
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("dense engine unavailable"))?;
+        match req.kind {
+            JobKind::Ktruss { k, mode: _ } => {
+                let (truss, iterations) = dense.ktruss(&req.graph, k)?;
+                Ok(JobOutput::Ktruss {
+                    truss_edges: truss.nnz(),
+                    iterations,
+                    edges: truss.edges().collect(),
+                })
+            }
+            _ => anyhow::bail!("dense engine only serves fixed-k truss"),
+        }
+    }
+}
+
+/// Convenience: run a ktruss job for tests without a full service.
+pub fn run_inline(req: &JobRequest, engine: Engine) -> JobResult {
+    let worker = Worker::new(Pool::new(2), None);
+    worker.execute(req, engine)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::support::Mode;
+    use crate::graph::builder::from_sorted_unique;
+    use std::sync::Arc;
+
+    fn diamond_req(kind: JobKind) -> JobRequest {
+        let g = from_sorted_unique(4, &[(0, 1), (0, 2), (0, 3), (1, 2), (2, 3)]);
+        JobRequest { id: 7, graph: Arc::new(g), kind }
+    }
+
+    #[test]
+    fn sparse_ktruss_job() {
+        let r = run_inline(
+            &diamond_req(JobKind::Ktruss { k: 3, mode: Mode::Fine }),
+            Engine::SparseCpu,
+        );
+        assert_eq!(r.id, 7);
+        assert_eq!(r.engine, Engine::SparseCpu);
+        match r.output.unwrap() {
+            JobOutput::Ktruss { truss_edges, .. } => assert_eq!(truss_edges, 5),
+            other => panic!("wrong output {other:?}"),
+        }
+    }
+
+    #[test]
+    fn kmax_and_decompose_and_triangles() {
+        match run_inline(&diamond_req(JobKind::Kmax), Engine::SparseCpu).output.unwrap() {
+            JobOutput::Kmax { kmax, .. } => assert_eq!(kmax, 3),
+            other => panic!("{other:?}"),
+        }
+        match run_inline(&diamond_req(JobKind::Decompose), Engine::SparseCpu).output.unwrap() {
+            JobOutput::Decompose { kmax, histogram } => {
+                assert_eq!(kmax, 3);
+                assert_eq!(histogram.iter().map(|&(_, c)| c).sum::<usize>(), 5);
+            }
+            other => panic!("{other:?}"),
+        }
+        match run_inline(&diamond_req(JobKind::Triangles), Engine::SparseCpu).output.unwrap() {
+            JobOutput::Triangles { count } => assert_eq!(count, 2),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn dense_request_without_artifacts_falls_back() {
+        let r = run_inline(
+            &diamond_req(JobKind::Ktruss { k: 3, mode: Mode::Coarse }),
+            Engine::DenseXla,
+        );
+        // no dense engine in run_inline -> sparse fallback, still correct
+        assert_eq!(r.engine, Engine::SparseCpu);
+        match r.output.unwrap() {
+            JobOutput::Ktruss { truss_edges, .. } => assert_eq!(truss_edges, 5),
+            other => panic!("{other:?}"),
+        }
+    }
+}

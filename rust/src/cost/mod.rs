@@ -1,0 +1,9 @@
+//! Task-cost measurement: exact per-task work traces of the support
+//! kernel and a replay driver that exposes them iteration by iteration.
+//! These feed the device timing models in [`crate::sim`].
+
+pub mod replay;
+pub mod trace;
+
+pub use replay::{replay_kmax, replay_ktruss, IterObservation};
+pub use trace::{trace_supports, SupportTrace};

@@ -1,0 +1,162 @@
+//! Replay the K-truss convergence loop while exposing per-iteration
+//! cost traces to an observer. One replay serves every simulated device
+//! and granularity at once, because all of them execute the same kernel
+//! over the same per-iteration task set — only the schedule differs.
+
+use super::trace::SupportTrace;
+use crate::algo::prune::prune;
+use crate::graph::{Csr, ZCsr};
+
+/// What the observer sees each iteration (before the next prune has
+/// destroyed the state).
+pub struct IterObservation<'a> {
+    /// 0-based iteration number within the current convergence loop.
+    pub iter: usize,
+    /// Live edges when the support pass ran.
+    pub live_edges: usize,
+    /// The support pass cost trace.
+    pub trace: &'a SupportTrace,
+    /// Row layout at the time of the pass (terminator slots included).
+    pub row_ptr: &'a [u32],
+    /// Slots in the working array.
+    pub slots: usize,
+    /// Vertices.
+    pub n: usize,
+    /// Edges removed by the prune that followed the pass.
+    pub removed: usize,
+}
+
+/// Replay the k-truss loop on `g`, invoking `obs` once per iteration.
+/// Returns (iterations, surviving edges).
+pub fn replay_ktruss(
+    g: &Csr,
+    k: u32,
+    mut obs: impl FnMut(&IterObservation),
+) -> (usize, usize) {
+    let mut z = ZCsr::from_csr(g);
+    let mut s: Vec<u32> = Vec::new();
+    let (iters, _) = replay_loop(&mut z, &mut s, k, 0, &mut obs);
+    (iters, z.live_edges())
+}
+
+/// Replay the incremental K_max peeling (paper's K=K_max setting: the
+/// *total* time to discover K_max is what the experiment measures).
+/// Returns (kmax, total iterations).
+pub fn replay_kmax(g: &Csr, mut obs: impl FnMut(u32, &IterObservation)) -> (u32, usize) {
+    if g.nnz() == 0 {
+        return (0, 0);
+    }
+    let mut z = ZCsr::from_csr(g);
+    let mut s: Vec<u32> = Vec::new();
+    let mut kmax = 2u32;
+    let mut total_iters = 0usize;
+    let mut k = 3u32;
+    loop {
+        let (iters, _) = replay_loop(&mut z, &mut s, k, 0, &mut |o: &IterObservation| obs(k, o));
+        total_iters += iters;
+        if z.live_edges() == 0 {
+            break;
+        }
+        kmax = k;
+        k += 1;
+    }
+    (kmax, total_iters)
+}
+
+fn replay_loop(
+    z: &mut ZCsr,
+    s: &mut Vec<u32>,
+    k: u32,
+    iter_base: usize,
+    obs: &mut impl FnMut(&IterObservation),
+) -> (usize, usize) {
+    let mut iters = 0usize;
+    // §Perf: reuse the trace buffers across iterations — the row layout
+    // (row_ptr) is immutable under prune-compaction, so it needs no
+    // per-iteration snapshot either.
+    let mut trace = super::trace::SupportTrace {
+        fine_steps: Vec::new(),
+        live_per_row: Vec::new(),
+        total_steps: 0,
+    };
+    loop {
+        let live = z.live_edges();
+        if live == 0 {
+            break;
+        }
+        super::trace::trace_supports_into(z, s, &mut trace);
+        let out = prune(z, s, k);
+        obs(&IterObservation {
+            iter: iter_base + iters,
+            live_edges: live,
+            trace: &trace,
+            row_ptr: z.row_ptr(),
+            slots: trace.fine_steps.len(),
+            n: z.n(),
+            removed: out.removed,
+        });
+        iters += 1;
+        if out.removed == 0 {
+            break;
+        }
+    }
+    (iters, z.live_edges())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::ktruss::{ktruss, Mode};
+    use crate::graph::builder::from_sorted_unique;
+
+    #[test]
+    fn replay_iterations_match_driver() {
+        let g = crate::gen::community::communities(200, 1000, 15, &mut crate::util::Rng::new(8));
+        let direct = ktruss(&g, 4, Mode::Fine);
+        let mut seen = 0usize;
+        let (iters, remaining) = replay_ktruss(&g, 4, |o| {
+            assert_eq!(o.iter, seen);
+            seen += 1;
+            assert!(o.live_edges > 0);
+        });
+        assert_eq!(iters, direct.iterations);
+        assert_eq!(remaining, direct.truss.nnz());
+        assert_eq!(seen, iters);
+    }
+
+    #[test]
+    fn replay_exposes_shrinking_work() {
+        // triangle + long tail: tail edges die over multiple iterations
+        let g = from_sorted_unique(
+            7,
+            &[(0, 1), (0, 2), (1, 2), (2, 3), (3, 4), (4, 5), (5, 6)],
+        );
+        let mut lives = Vec::new();
+        replay_ktruss(&g, 3, |o| lives.push(o.live_edges));
+        assert!(lives.len() >= 2);
+        for w in lives.windows(2) {
+            assert!(w[1] < w[0], "live edges must shrink: {lives:?}");
+        }
+    }
+
+    #[test]
+    fn replay_kmax_matches_kmax_module() {
+        let g = crate::gen::community::communities(150, 800, 15, &mut crate::util::Rng::new(9));
+        let want = crate::algo::kmax::kmax(&g);
+        let mut iters_seen = 0usize;
+        let (kmax, total) = replay_kmax(&g, |_, _| iters_seen += 1);
+        assert_eq!(kmax, want.kmax);
+        assert_eq!(total, want.total_iterations);
+        assert_eq!(iters_seen, total);
+    }
+
+    #[test]
+    fn observation_layout_is_consistent() {
+        let g = from_sorted_unique(4, &[(0, 1), (0, 2), (0, 3), (1, 2), (2, 3)]);
+        replay_ktruss(&g, 3, |o| {
+            assert_eq!(o.row_ptr.len(), o.n + 1);
+            assert_eq!(*o.row_ptr.last().unwrap() as usize, o.slots);
+            assert_eq!(o.trace.fine_steps.len(), o.slots);
+        });
+    }
+}

@@ -1,0 +1,163 @@
+//! Per-task cost tracing for the support kernel.
+//!
+//! The paper's load-imbalance argument (§III-A) is entirely about the
+//! *distribution of task costs*: a coarse task's cost is the total merge
+//! work of its row, a fine task's cost is the merge work of one nonzero.
+//! The tracer records the exact merge-step count of every fine task
+//! (slot); coarse task costs are derived by summing a row's slots.
+//! These distributions — not wallclock on this 1-core container — drive
+//! the calibrated CPU/GPU timing models in [`crate::sim`].
+
+use crate::algo::support::eager_update_seq;
+use crate::graph::ZCsr;
+use crate::util::stats::Summary;
+
+/// The measured cost of one support pass.
+#[derive(Clone, Debug)]
+pub struct SupportTrace {
+    /// Merge steps per slot (0 for terminators/tombstones). Length ==
+    /// `z.slots()` at the time of the pass.
+    pub fine_steps: Vec<u32>,
+    /// Live entries per row at the time of the pass (fine tasks that do
+    /// real work; terminator checks are modeled as overhead-only tasks).
+    pub live_per_row: Vec<u32>,
+    /// Σ fine_steps.
+    pub total_steps: u64,
+}
+
+impl SupportTrace {
+    /// Coarse task cost for row `i` in merge steps (excluding per-entry
+    /// overhead, which the machine model adds).
+    pub fn row_steps(&self, row_ptr: &[u32], i: usize) -> u64 {
+        let (s, e) = (row_ptr[i] as usize, row_ptr[i + 1] as usize);
+        self.fine_steps[s..e].iter().map(|&x| x as u64).sum()
+    }
+
+    /// All coarse task costs.
+    pub fn all_row_steps(&self, row_ptr: &[u32]) -> Vec<u64> {
+        (0..row_ptr.len() - 1).map(|i| self.row_steps(row_ptr, i)).collect()
+    }
+
+    /// Distribution summary of coarse task costs — the imbalance the
+    /// paper's Fig. 1 illustrates.
+    pub fn coarse_summary(&self, row_ptr: &[u32]) -> Option<Summary> {
+        let xs: Vec<f64> = self.all_row_steps(row_ptr).iter().map(|&x| x as f64).collect();
+        Summary::of(&xs)
+    }
+
+    /// Distribution summary of fine task costs.
+    pub fn fine_summary(&self) -> Option<Summary> {
+        let xs: Vec<f64> = self.fine_steps.iter().map(|&x| x as f64).collect();
+        Summary::of(&xs)
+    }
+}
+
+/// Run one support pass sequentially, filling `s` with supports and
+/// returning the per-slot cost trace.
+pub fn trace_supports(z: &ZCsr, s: &mut Vec<u32>) -> SupportTrace {
+    let mut trace = SupportTrace {
+        fine_steps: Vec::new(),
+        live_per_row: Vec::new(),
+        total_steps: 0,
+    };
+    trace_supports_into(z, s, &mut trace);
+    trace
+}
+
+/// Buffer-reusing variant (§Perf: the replay driver calls this once per
+/// iteration; reusing the two big vectors removes the dominant
+/// allocation from multi-iteration bench runs).
+pub fn trace_supports_into(z: &ZCsr, s: &mut Vec<u32>, trace: &mut SupportTrace) {
+    s.clear();
+    s.resize(z.slots(), 0);
+    trace.fine_steps.clear();
+    trace.fine_steps.resize(z.slots(), 0);
+    trace.live_per_row.clear();
+    trace.live_per_row.resize(z.n(), 0);
+    let mut total: u64 = 0;
+    let col = z.col();
+    for i in 0..z.n() {
+        let (start, end) = z.row_span(i);
+        for p in start..end {
+            let kappa = col[p];
+            if kappa == 0 {
+                break;
+            }
+            trace.live_per_row[i] += 1;
+            let (r0, _) = z.row_span(kappa as usize);
+            let steps = eager_update_seq(col, s, p, r0);
+            trace.fine_steps[p] = steps.min(u32::MAX as u64) as u32;
+            total += steps;
+        }
+    }
+    trace.total_steps = total;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::support::compute_supports_seq;
+    use crate::graph::builder::from_sorted_unique;
+
+    #[test]
+    fn trace_matches_untraced_supports() {
+        let g = crate::gen::rmat::rmat(
+            250,
+            1800,
+            crate::gen::rmat::RmatParams::social(),
+            &mut crate::util::Rng::new(15),
+        );
+        let z = ZCsr::from_csr(&g);
+        let mut s1 = Vec::new();
+        let mut s2 = Vec::new();
+        compute_supports_seq(&z, &mut s1);
+        let tr = trace_supports(&z, &mut s2);
+        assert_eq!(s1, s2);
+        assert_eq!(tr.fine_steps.len(), z.slots());
+        assert!(tr.total_steps > 0);
+    }
+
+    #[test]
+    fn row_steps_sum_to_total() {
+        let g = from_sorted_unique(4, &[(0, 1), (0, 2), (0, 3), (1, 2), (2, 3)]);
+        let z = ZCsr::from_csr(&g);
+        let mut s = Vec::new();
+        let tr = trace_supports(&z, &mut s);
+        let rows = tr.all_row_steps(z.row_ptr());
+        assert_eq!(rows.iter().sum::<u64>(), tr.total_steps);
+        assert_eq!(tr.row_steps(z.row_ptr(), 0), 2);
+        assert_eq!(tr.row_steps(z.row_ptr(), 3), 0);
+    }
+
+    #[test]
+    fn coarse_costs_more_skewed_than_fine_on_powerlaw() {
+        let g = crate::gen::rmat::rmat(
+            2000,
+            12_000,
+            crate::gen::rmat::RmatParams::autonomous_system(),
+            &mut crate::util::Rng::new(99),
+        );
+        let z = ZCsr::from_csr(&g);
+        let mut s = Vec::new();
+        let tr = trace_supports(&z, &mut s);
+        let coarse = tr.coarse_summary(z.row_ptr()).unwrap();
+        let fine = tr.fine_summary().unwrap();
+        // the paper's whole premise: row-level imbalance (max/mean) far
+        // exceeds nonzero-level imbalance
+        assert!(
+            coarse.imbalance() > 2.0 * fine.imbalance(),
+            "coarse {} fine {}",
+            coarse.imbalance(),
+            fine.imbalance()
+        );
+    }
+
+    #[test]
+    fn live_per_row_counts() {
+        let g = from_sorted_unique(4, &[(0, 1), (0, 2), (0, 3), (1, 2), (2, 3)]);
+        let z = ZCsr::from_csr(&g);
+        let mut s = Vec::new();
+        let tr = trace_supports(&z, &mut s);
+        assert_eq!(tr.live_per_row, vec![3, 1, 1, 0]);
+    }
+}

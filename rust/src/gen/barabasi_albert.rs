@@ -1,0 +1,133 @@
+//! Barabási–Albert preferential attachment with triadic closure — used
+//! for collaboration-network replicas (ca-*): BA gives the power-law
+//! hub structure and the triangle-closure step gives the high clustering
+//! coefficient characteristic of co-authorship graphs (each paper is a
+//! clique over its authors).
+
+use crate::graph::builder;
+use crate::graph::coo::EdgeList;
+use crate::graph::csr::{Csr, Vid};
+use crate::util::Rng;
+
+/// Preferential-attachment generator.
+///
+/// * `n` vertices are added one at a time; each new vertex attaches to
+///   `k ≈ m/n` targets sampled proportionally to current degree.
+/// * With probability `closure`, an attachment instead closes a triangle
+///   with a random neighbor of the previously chosen target (the
+///   Holme–Kim triad step), raising clustering to ca-* levels.
+/// * Generation overshoots/undershoots `m` slightly; the result is
+///   trimmed or topped up with random preferential edges to hit `m`
+///   exactly.
+pub fn ba_closure(n: usize, m: usize, closure: f64, rng: &mut Rng) -> Csr {
+    assert!(n >= 3);
+    let k = (m as f64 / n as f64).ceil().max(1.0) as usize;
+    // `targets` is the repeated-endpoint list: sampling uniformly from it
+    // is sampling proportional to degree.
+    let mut targets: Vec<Vid> = Vec::with_capacity(4 * m);
+    let mut el = EdgeList::with_capacity(n, m + n);
+    // seed clique on k+1 vertices
+    let seed = (k + 1).min(n);
+    for u in 0..seed {
+        for v in (u + 1)..seed {
+            el.push(u as Vid, v as Vid);
+            targets.push(u as Vid);
+            targets.push(v as Vid);
+        }
+    }
+    let mut last_target: Vid = 0;
+    for u in seed..n {
+        let mut added = 0usize;
+        let mut guard = 0usize;
+        while added < k && guard < 50 * k {
+            guard += 1;
+            let t = if added > 0 && rng.chance(closure) {
+                // triad step: neighbor of last target (approximate: any
+                // endpoint sharing an edge with it from the target list)
+                let start = rng.below(targets.len() as u64) as usize;
+                let mut found = last_target;
+                for off in 0..targets.len().min(64) {
+                    let idx = (start + off) % targets.len();
+                    if targets[idx] == last_target && idx + 1 < targets.len() {
+                        found = targets[idx ^ 1];
+                        break;
+                    }
+                }
+                found
+            } else {
+                targets[rng.below(targets.len() as u64) as usize]
+            };
+            if t as usize == u {
+                continue;
+            }
+            el.push(u as Vid, t);
+            targets.push(u as Vid);
+            targets.push(t);
+            last_target = t;
+            added += 1;
+        }
+    }
+    el.normalize();
+    // adjust to exactly m edges
+    if el.edges.len() > m {
+        // drop uniformly at random (deterministic under rng)
+        rng.shuffle(&mut el.edges);
+        el.edges.truncate(m);
+        el.edges.sort_unstable();
+    } else {
+        let mut have: std::collections::HashSet<(Vid, Vid)> = el.edges.iter().copied().collect();
+        let mut guard = 0usize;
+        while el.edges.len() < m && guard < 100 * m {
+            guard += 1;
+            let a = targets[rng.below(targets.len() as u64) as usize];
+            let b = targets[rng.below(targets.len() as u64) as usize];
+            if a == b {
+                continue;
+            }
+            let e = if a < b { (a, b) } else { (b, a) };
+            if have.insert(e) {
+                el.edges.push(e);
+            }
+        }
+        el.edges.sort_unstable();
+    }
+    assert_eq!(el.edges.len(), m, "ba_closure could not hit m={m}");
+    builder::from_sorted_unique(n, &el.edges)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{stats, validate};
+
+    #[test]
+    fn exact_counts_and_valid() {
+        let mut rng = Rng::new(21);
+        let g = ba_closure(500, 1500, 0.4, &mut rng);
+        assert_eq!(g.n(), 500);
+        assert_eq!(g.nnz(), 1500);
+        assert!(validate::check(&g).is_ok());
+    }
+
+    #[test]
+    fn has_hubs() {
+        let mut rng = Rng::new(23);
+        let g = ba_closure(1000, 3000, 0.3, &mut rng);
+        let s = stats::stats(&g);
+        // preferential attachment: max degree far above the mean
+        assert!(s.max_sym_degree as f64 > 5.0 * s.mean_sym_degree);
+    }
+
+    #[test]
+    fn closure_increases_triangles() {
+        let tri = |g: &Csr| crate::algo::triangle::count_triangles(g);
+        let lo = ba_closure(800, 2400, 0.0, &mut Rng::new(31));
+        let hi = ba_closure(800, 2400, 0.8, &mut Rng::new(31));
+        assert!(
+            tri(&hi) > tri(&lo),
+            "closure should add triangles: {} vs {}",
+            tri(&hi),
+            tri(&lo)
+        );
+    }
+}

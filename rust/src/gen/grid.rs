@@ -1,0 +1,109 @@
+//! Road-network replica generator (roadNet-PA/TX/CA): a 2-D lattice with
+//! random edge deletions and a sprinkle of diagonal shortcuts.
+//!
+//! Road networks are near-planar with tiny, near-uniform degree
+//! (mean ≈ 2.8, max ≈ 12) and very low triangle density. That uniformity
+//! is exactly why the paper sees *no* fine-vs-coarse speedup on the
+//! roadNet graphs (Table I: ~1.0x) — reproducing that null effect needs
+//! this family, not just power-law graphs.
+
+use crate::graph::builder;
+use crate::graph::coo::EdgeList;
+use crate::graph::csr::{Csr, Vid};
+use crate::util::Rng;
+
+/// Generate an `n`-vertex, exactly-`m`-edge road-like network.
+///
+/// `diag_frac` of the retained edges (approximately) are diagonal
+/// shortcuts, which create the sparse triangles real road networks have
+/// (highway merges, grid diagonals).
+pub fn road(n: usize, m: usize, diag_frac: f64, rng: &mut Rng) -> Csr {
+    assert!(n >= 4);
+    let side = (n as f64).sqrt().ceil() as usize;
+    let vid = |r: usize, c: usize| -> Option<Vid> {
+        let id = r * side + c;
+        (r < side && c < side && id < n).then_some(id as Vid)
+    };
+    // candidate edges: lattice + diagonals
+    let mut lattice: Vec<(Vid, Vid)> = Vec::with_capacity(2 * n);
+    let mut diags: Vec<(Vid, Vid)> = Vec::with_capacity(2 * n);
+    for r in 0..side {
+        for c in 0..side {
+            let Some(u) = vid(r, c) else { continue };
+            if let Some(v) = vid(r, c + 1) {
+                lattice.push((u, v));
+            }
+            if let Some(v) = vid(r + 1, c) {
+                lattice.push((u, v));
+            }
+            if let Some(v) = vid(r + 1, c + 1) {
+                diags.push((u, v));
+            }
+            if c > 0 {
+                if let Some(v) = vid(r + 1, c - 1) {
+                    diags.push((u.min(v), u.max(v)));
+                }
+            }
+        }
+    }
+    let want_diag = ((m as f64) * diag_frac) as usize;
+    let want_lat = m.saturating_sub(want_diag);
+    assert!(
+        want_lat <= lattice.len(),
+        "road: m={m} too large for lattice of n={n} (max lattice {})",
+        lattice.len()
+    );
+    rng.shuffle(&mut lattice);
+    rng.shuffle(&mut diags);
+    let mut el = EdgeList::with_capacity(n, m);
+    for &(u, v) in lattice.iter().take(want_lat) {
+        el.push(u, v);
+    }
+    for &(u, v) in diags.iter().take(want_diag.min(diags.len())) {
+        el.push(u, v);
+    }
+    // top up from remaining lattice if diagonals ran short
+    let mut extra = want_lat;
+    while el.len() < m && extra < lattice.len() {
+        let (u, v) = lattice[extra];
+        el.push(u, v);
+        extra += 1;
+    }
+    el.normalize();
+    assert_eq!(el.edges.len(), m, "road: could not hit m={m}");
+    builder::from_sorted_unique(n, &el.edges)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{stats, validate};
+
+    #[test]
+    fn exact_counts_and_valid() {
+        let mut rng = Rng::new(3);
+        let g = road(10_000, 14_000, 0.05, &mut rng);
+        assert_eq!(g.n(), 10_000);
+        assert_eq!(g.nnz(), 14_000);
+        assert!(validate::check(&g).is_ok());
+    }
+
+    #[test]
+    fn degree_is_near_uniform() {
+        let mut rng = Rng::new(5);
+        let g = road(5_000, 7_000, 0.05, &mut rng);
+        let s = stats::stats(&g);
+        assert!(s.max_sym_degree <= 8, "max degree {}", s.max_sym_degree);
+        assert!(s.degree_cv < 0.6, "cv {}", s.degree_cv);
+    }
+
+    #[test]
+    fn has_some_but_few_triangles() {
+        let mut rng = Rng::new(7);
+        let g = road(2_500, 3_500, 0.06, &mut rng);
+        let t = crate::algo::triangle::count_triangles(&g);
+        assert!(t > 0, "roads need a few triangles");
+        // triangle-to-edge ratio stays tiny, unlike social graphs
+        assert!((t as f64) < 0.2 * g.nnz() as f64, "t={t}");
+    }
+}

@@ -1,0 +1,13 @@
+//! Synthetic graph generators. The paper's inputs are SNAP graphs from
+//! the GraphChallenge collection; this container has no network access,
+//! so [`suite`] replicates every Table-I graph from a structural family
+//! generator with matched vertex/edge counts (DESIGN.md §2).
+
+pub mod barabasi_albert;
+pub mod community;
+pub mod erdos_renyi;
+pub mod grid;
+pub mod rmat;
+pub mod suite;
+
+pub use suite::{by_name, generate, load, GraphSpec, SUITE};

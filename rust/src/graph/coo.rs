@@ -1,0 +1,86 @@
+//! Edge-list (COO) intermediate representation used by generators and
+//! file loaders before conversion to upper-triangular CSR.
+
+use super::csr::Vid;
+
+/// A mutable undirected edge list. Stores edges in arbitrary orientation;
+/// normalization (u<v, dedup, self-loop removal) happens in the builder.
+#[derive(Clone, Debug, Default)]
+pub struct EdgeList {
+    pub n: usize,
+    pub edges: Vec<(Vid, Vid)>,
+}
+
+impl EdgeList {
+    pub fn new(n: usize) -> EdgeList {
+        EdgeList { n, edges: Vec::new() }
+    }
+
+    pub fn with_capacity(n: usize, m: usize) -> EdgeList {
+        EdgeList { n, edges: Vec::with_capacity(m) }
+    }
+
+    /// Add an undirected edge; self-loops are silently dropped, duplicate
+    /// edges are kept (deduped at build time).
+    #[inline]
+    pub fn push(&mut self, u: Vid, v: Vid) {
+        debug_assert!((u as usize) < self.n && (v as usize) < self.n);
+        if u != v {
+            self.edges.push((u, v));
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.edges.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.edges.is_empty()
+    }
+
+    /// Normalize in place: orient u<v, sort, dedup. Returns the number of
+    /// duplicates removed (useful for generator diagnostics).
+    pub fn normalize(&mut self) -> usize {
+        for e in self.edges.iter_mut() {
+            if e.0 > e.1 {
+                *e = (e.1, e.0);
+            }
+        }
+        self.edges.sort_unstable();
+        let before = self.edges.len();
+        self.edges.dedup();
+        before - self.edges.len()
+    }
+
+    /// Grow the vertex count (ids already pushed must stay valid).
+    pub fn grow_to(&mut self, n: usize) {
+        debug_assert!(n >= self.n);
+        self.n = n;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_drops_self_loops() {
+        let mut el = EdgeList::new(3);
+        el.push(0, 0);
+        el.push(0, 1);
+        assert_eq!(el.len(), 1);
+    }
+
+    #[test]
+    fn normalize_orients_sorts_dedups() {
+        let mut el = EdgeList::new(4);
+        el.push(2, 1);
+        el.push(1, 2);
+        el.push(3, 0);
+        el.push(0, 3);
+        el.push(0, 1);
+        let dups = el.normalize();
+        assert_eq!(dups, 2);
+        assert_eq!(el.edges, vec![(0, 1), (0, 3), (1, 2)]);
+    }
+}

@@ -1,0 +1,161 @@
+//! Canonical compressed-sparse-row (CSR) storage for the strictly
+//! upper-triangular adjacency matrix of an undirected, unweighted graph.
+//!
+//! Invariants (checked by [`crate::graph::validate`]):
+//! * `row_ptr.len() == n + 1`, monotone non-decreasing,
+//!   `row_ptr[0] == 0`, `row_ptr[n] == col_idx.len()`.
+//! * every stored entry is strictly upper-triangular: `col > row`.
+//! * each row's column indices are sorted ascending with no duplicates.
+//!
+//! Because the matrix is *strictly* upper-triangular, every stored column
+//! index is ≥ 1 — the value `0` never appears, which is what lets the
+//! zero-terminated working representation ([`crate::graph::ZCsr`]) use `0`
+//! as both row terminator and pruning tombstone (paper §III-D).
+
+/// Vertex / column index type. `u32` covers every GraphChallenge graph in
+/// the paper (largest: cit-Patents, 3.77M vertices, 16.5M edges).
+pub type Vid = u32;
+
+/// Strictly upper-triangular CSR adjacency matrix.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Csr {
+    /// Number of vertices (rows/cols of the square matrix).
+    n: usize,
+    /// Row start offsets into `col_idx`; length `n + 1`.
+    row_ptr: Vec<u32>,
+    /// Column indices, sorted ascending within each row.
+    col_idx: Vec<Vid>,
+}
+
+impl Csr {
+    /// Construct from raw parts, asserting structural invariants in debug
+    /// builds. Use [`crate::graph::builder`] to build from edge lists.
+    pub fn from_parts(n: usize, row_ptr: Vec<u32>, col_idx: Vec<Vid>) -> Csr {
+        debug_assert_eq!(row_ptr.len(), n + 1);
+        debug_assert_eq!(*row_ptr.last().unwrap() as usize, col_idx.len());
+        let g = Csr { n, row_ptr, col_idx };
+        debug_assert!(crate::graph::validate::check(&g).is_ok());
+        g
+    }
+
+    /// The empty graph on `n` vertices.
+    pub fn empty(n: usize) -> Csr {
+        Csr { n, row_ptr: vec![0; n + 1], col_idx: Vec::new() }
+    }
+
+    /// Number of vertices.
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Number of stored entries == number of undirected edges.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.col_idx.len()
+    }
+
+    #[inline]
+    pub fn row_ptr(&self) -> &[u32] {
+        &self.row_ptr
+    }
+
+    #[inline]
+    pub fn col_idx(&self) -> &[Vid] {
+        &self.col_idx
+    }
+
+    /// The sorted out-neighborhood (upper-triangular part) of vertex `i`:
+    /// the paper's `a₁₂ᵀ` for row partition `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[Vid] {
+        &self.col_idx[self.row_ptr[i] as usize..self.row_ptr[i + 1] as usize]
+    }
+
+    /// Out-degree (upper-triangular) of vertex `i`.
+    #[inline]
+    pub fn degree(&self, i: usize) -> usize {
+        (self.row_ptr[i + 1] - self.row_ptr[i]) as usize
+    }
+
+    /// True if edge `(u, v)` (with `u < v`) is present, via binary search.
+    pub fn has_edge(&self, u: Vid, v: Vid) -> bool {
+        let (u, v) = if u < v { (u, v) } else { (v, u) };
+        if u == v {
+            return false;
+        }
+        self.row(u as usize).binary_search(&v).is_ok()
+    }
+
+    /// Iterate all edges as `(u, v)` with `u < v`, row-major order.
+    pub fn edges(&self) -> impl Iterator<Item = (Vid, Vid)> + '_ {
+        (0..self.n).flat_map(move |u| self.row(u).iter().map(move |&v| (u as Vid, v)))
+    }
+
+    /// Full (symmetric) degree of every vertex — in-degree + out-degree of
+    /// the triangular form. Used by generators and stats.
+    pub fn symmetric_degrees(&self) -> Vec<u32> {
+        let mut deg = vec![0u32; self.n];
+        for (u, v) in self.edges() {
+            deg[u as usize] += 1;
+            deg[v as usize] += 1;
+        }
+        deg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// 4-cycle plus chord 0-2: triangle {0,1,2} and {0,2,3}.
+    pub fn diamond() -> Csr {
+        // edges: (0,1) (0,2) (0,3) (1,2) (2,3)
+        Csr::from_parts(4, vec![0, 3, 4, 5, 5], vec![1, 2, 3, 2, 3])
+    }
+
+    #[test]
+    fn basic_accessors() {
+        let g = diamond();
+        assert_eq!(g.n(), 4);
+        assert_eq!(g.nnz(), 5);
+        assert_eq!(g.row(0), &[1, 2, 3]);
+        assert_eq!(g.row(1), &[2]);
+        assert_eq!(g.row(3), &[] as &[Vid]);
+        assert_eq!(g.degree(0), 3);
+        assert_eq!(g.degree(3), 0);
+    }
+
+    #[test]
+    fn has_edge_symmetric_lookup() {
+        let g = diamond();
+        assert!(g.has_edge(0, 1));
+        assert!(g.has_edge(1, 0)); // normalized internally
+        assert!(g.has_edge(2, 3));
+        assert!(!g.has_edge(1, 3));
+        assert!(!g.has_edge(2, 2));
+    }
+
+    #[test]
+    fn edges_iterator_row_major() {
+        let g = diamond();
+        let es: Vec<(Vid, Vid)> = g.edges().collect();
+        assert_eq!(es, vec![(0, 1), (0, 2), (0, 3), (1, 2), (2, 3)]);
+    }
+
+    #[test]
+    fn symmetric_degrees_sum_to_2m() {
+        let g = diamond();
+        let deg = g.symmetric_degrees();
+        assert_eq!(deg, vec![3, 2, 3, 2]);
+        assert_eq!(deg.iter().sum::<u32>() as usize, 2 * g.nnz());
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = Csr::empty(5);
+        assert_eq!(g.n(), 5);
+        assert_eq!(g.nnz(), 0);
+        assert_eq!(g.edges().count(), 0);
+    }
+}

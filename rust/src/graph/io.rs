@@ -1,0 +1,175 @@
+//! Graph I/O: the SNAP/GraphChallenge TSV edge-list format the paper's
+//! inputs ship in, plus a compact binary cache format so generated
+//! replica graphs are built once and reloaded by benches.
+
+use super::builder;
+use super::coo::EdgeList;
+use super::csr::{Csr, Vid};
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+/// Parse a SNAP-style edge list: one `u<TAB>v` (or whitespace) pair per
+/// line, `#` comments ignored. Vertex ids are compacted to `0..n`.
+pub fn read_edge_list<R: Read>(r: R) -> Result<Csr> {
+    let reader = BufReader::new(r);
+    let mut raw: Vec<(u64, u64)> = Vec::new();
+    let mut max_id = 0u64;
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line.context("read line")?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let (Some(a), Some(b)) = (it.next(), it.next()) else {
+            bail!("line {}: expected two vertex ids, got {t:?}", lineno + 1);
+        };
+        let u: u64 = a.parse().with_context(|| format!("line {}: bad id {a:?}", lineno + 1))?;
+        let v: u64 = b.parse().with_context(|| format!("line {}: bad id {b:?}", lineno + 1))?;
+        max_id = max_id.max(u).max(v);
+        raw.push((u, v));
+    }
+    // Compact ids: many SNAP graphs have sparse id spaces.
+    let mut present = vec![false; (max_id + 1) as usize];
+    for &(u, v) in &raw {
+        present[u as usize] = true;
+        present[v as usize] = true;
+    }
+    let mut remap = vec![0 as Vid; (max_id + 1) as usize];
+    let mut n = 0usize;
+    for (id, &p) in present.iter().enumerate() {
+        if p {
+            remap[id] = n as Vid;
+            n += 1;
+        }
+    }
+    let mut el = EdgeList::with_capacity(n, raw.len());
+    for (u, v) in raw {
+        el.push(remap[u as usize], remap[v as usize]);
+    }
+    Ok(builder::from_edge_list(el))
+}
+
+/// Read an edge-list file from disk.
+pub fn read_edge_list_file(path: impl AsRef<Path>) -> Result<Csr> {
+    let f = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("open {}", path.as_ref().display()))?;
+    read_edge_list(f)
+}
+
+/// Write the upper-triangular edges as a TSV edge list.
+pub fn write_edge_list<W: Write>(g: &Csr, w: W) -> Result<()> {
+    let mut w = BufWriter::new(w);
+    writeln!(w, "# ktruss upper-triangular edge list: n={} m={}", g.n(), g.nnz())?;
+    for (u, v) in g.edges() {
+        writeln!(w, "{u}\t{v}")?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+const BIN_MAGIC: &[u8; 8] = b"KTRUSSG1";
+
+/// Write the compact binary cache format (little-endian u32s).
+pub fn write_binary<W: Write>(g: &Csr, w: W) -> Result<()> {
+    let mut w = BufWriter::new(w);
+    w.write_all(BIN_MAGIC)?;
+    w.write_all(&(g.n() as u64).to_le_bytes())?;
+    w.write_all(&(g.nnz() as u64).to_le_bytes())?;
+    for &x in g.row_ptr() {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    for &x in g.col_idx() {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Read the binary cache format.
+pub fn read_binary<R: Read>(r: R) -> Result<Csr> {
+    let mut r = BufReader::new(r);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic).context("read magic")?;
+    if &magic != BIN_MAGIC {
+        bail!("not a ktruss binary graph (bad magic)");
+    }
+    let mut buf8 = [0u8; 8];
+    r.read_exact(&mut buf8)?;
+    let n = u64::from_le_bytes(buf8) as usize;
+    r.read_exact(&mut buf8)?;
+    let m = u64::from_le_bytes(buf8) as usize;
+    let mut read_u32s = |count: usize| -> Result<Vec<u32>> {
+        let mut bytes = vec![0u8; count * 4];
+        r.read_exact(&mut bytes)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    };
+    let row_ptr = read_u32s(n + 1)?;
+    let col_idx = read_u32s(m)?;
+    if row_ptr.last().copied().unwrap_or(1) as usize != m {
+        bail!("corrupt binary graph: row_ptr end != nnz");
+    }
+    Ok(Csr::from_parts(n, row_ptr, col_idx))
+}
+
+/// Write binary cache to a path (creating parent dirs).
+pub fn write_binary_file(g: &Csr, path: impl AsRef<Path>) -> Result<()> {
+    if let Some(parent) = path.as_ref().parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    write_binary(g, std::fs::File::create(path.as_ref())?)
+}
+
+/// Read binary cache from a path.
+pub fn read_binary_file(path: impl AsRef<Path>) -> Result<Csr> {
+    read_binary(std::fs::File::open(path.as_ref())?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::from_sorted_unique;
+
+    #[test]
+    fn parse_edge_list_with_comments_and_dups() {
+        let text = "# SNAP header\n1 2\n2\t1\n2 3\n5 5\n3 5\n";
+        let g = read_edge_list(text.as_bytes()).unwrap();
+        // ids {1,2,3,5} compact to {0,1,2,3}; self-loop dropped, dup removed
+        assert_eq!(g.n(), 4);
+        assert_eq!(g.nnz(), 3);
+        assert!(g.has_edge(0, 1) && g.has_edge(1, 2) && g.has_edge(2, 3));
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(read_edge_list("1 two\n".as_bytes()).is_err());
+        assert!(read_edge_list("1\n".as_bytes()).is_err());
+    }
+
+    #[test]
+    fn tsv_roundtrip() {
+        let g = from_sorted_unique(5, &[(0, 1), (0, 4), (1, 2), (2, 3), (3, 4)]);
+        let mut buf = Vec::new();
+        write_edge_list(&g, &mut buf).unwrap();
+        let g2 = read_edge_list(buf.as_slice()).unwrap();
+        assert_eq!(g, g2);
+    }
+
+    #[test]
+    fn binary_roundtrip() {
+        let g = from_sorted_unique(6, &[(0, 2), (0, 5), (1, 3), (2, 4), (3, 5), (4, 5)]);
+        let mut buf = Vec::new();
+        write_binary(&g, &mut buf).unwrap();
+        let g2 = read_binary(buf.as_slice()).unwrap();
+        assert_eq!(g, g2);
+    }
+
+    #[test]
+    fn binary_rejects_bad_magic() {
+        assert!(read_binary(&b"NOTMAGIC\0\0\0\0"[..]).is_err());
+    }
+}

@@ -1,0 +1,15 @@
+//! Graph substrate: strictly upper-triangular CSR adjacency matrices,
+//! the zero-terminated working form used by the Eager K-truss kernels
+//! (paper §III-D), builders, I/O and validation.
+
+pub mod builder;
+pub mod coo;
+pub mod csr;
+pub mod io;
+pub mod stats;
+pub mod validate;
+pub mod zeroterm;
+
+pub use coo::EdgeList;
+pub use csr::{Csr, Vid};
+pub use zeroterm::ZCsr;

@@ -1,0 +1,118 @@
+//! Graph statistics used for (a) checking that synthetic SNAP replicas
+//! land in the right structural family and (b) the imbalance analysis
+//! that motivates the paper (§III-A): the distribution of per-row work
+//! is what coarse-grained parallelism is exposed to.
+
+use super::csr::Csr;
+use crate::util::stats::{cv, Summary};
+
+/// Degree / structure profile of a graph.
+#[derive(Debug, Clone)]
+pub struct GraphStats {
+    pub n: usize,
+    pub edges: usize,
+    pub max_sym_degree: u32,
+    pub mean_sym_degree: f64,
+    /// Coefficient of variation of the symmetric degree distribution —
+    /// the skew proxy (power-law graphs ≫ 1, roadNet ≈ 0.2).
+    pub degree_cv: f64,
+    /// Max out-degree of the upper-triangular form (the largest coarse
+    /// task's neighborhood length).
+    pub max_tri_degree: u32,
+    /// Summary of the upper-triangular row lengths (coarse task sizes,
+    /// first-order proxy; exact work is measured by `cost::trace`).
+    pub row_len: Summary,
+}
+
+/// Compute the profile.
+pub fn stats(g: &Csr) -> GraphStats {
+    let sym = g.symmetric_degrees();
+    let sym_f: Vec<f64> = sym.iter().map(|&d| d as f64).collect();
+    let rows: Vec<f64> = (0..g.n()).map(|i| g.degree(i) as f64).collect();
+    GraphStats {
+        n: g.n(),
+        edges: g.nnz(),
+        max_sym_degree: sym.iter().copied().max().unwrap_or(0),
+        mean_sym_degree: if g.n() == 0 { 0.0 } else { 2.0 * g.nnz() as f64 / g.n() as f64 },
+        degree_cv: cv(&sym_f).unwrap_or(0.0),
+        max_tri_degree: (0..g.n()).map(|i| g.degree(i) as u32).max().unwrap_or(0),
+        row_len: Summary::of(&rows).unwrap_or(Summary {
+            n: 0,
+            min: 0.0,
+            max: 0.0,
+            mean: 0.0,
+            stddev: 0.0,
+            p50: 0.0,
+            p95: 0.0,
+            p99: 0.0,
+        }),
+    }
+}
+
+/// Histogram of symmetric degrees in log₂ buckets: `counts[b]` counts
+/// vertices with degree in `[2^b, 2^(b+1))` (bucket 0 holds degree 0–1).
+pub fn degree_histogram(g: &Csr) -> Vec<usize> {
+    let sym = g.symmetric_degrees();
+    let max_b = sym
+        .iter()
+        .map(|&d| 64 - u64::from(d.max(1)).leading_zeros() as usize)
+        .max()
+        .unwrap_or(1);
+    let mut counts = vec![0usize; max_b];
+    for &d in &sym {
+        let b = (64 - u64::from(d.max(1)).leading_zeros() as usize) - 1;
+        counts[b] += 1;
+    }
+    counts
+}
+
+impl std::fmt::Display for GraphStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "n={} m={} deg(mean={:.2} max={} cv={:.2}) row(max={} p99={:.0})",
+            self.n,
+            self.edges,
+            self.mean_sym_degree,
+            self.max_sym_degree,
+            self.degree_cv,
+            self.max_tri_degree,
+            self.row_len.p99
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::from_sorted_unique;
+
+    #[test]
+    fn star_graph_is_skewed() {
+        // star: vertex 0 connected to all others
+        let edges: Vec<(u32, u32)> = (1..100).map(|v| (0u32, v)).collect();
+        let g = from_sorted_unique(100, &edges);
+        let s = stats(&g);
+        assert_eq!(s.max_sym_degree, 99);
+        assert!(s.degree_cv > 3.0, "cv={}", s.degree_cv);
+    }
+
+    #[test]
+    fn path_graph_is_uniform() {
+        let edges: Vec<(u32, u32)> = (0..99).map(|v| (v, v + 1)).collect();
+        let g = from_sorted_unique(100, &edges);
+        let s = stats(&g);
+        assert_eq!(s.max_sym_degree, 2);
+        assert!(s.degree_cv < 0.2, "cv={}", s.degree_cv);
+    }
+
+    #[test]
+    fn histogram_buckets() {
+        let edges: Vec<(u32, u32)> = (1..9).map(|v| (0u32, v)).collect();
+        let g = from_sorted_unique(9, &edges);
+        let h = degree_histogram(&g);
+        // 8 leaves with degree 1 (bucket 0), hub with degree 8 (bucket 3)
+        assert_eq!(h[0], 8);
+        assert_eq!(*h.last().unwrap(), 1);
+    }
+}

@@ -1,0 +1,150 @@
+//! Structural validation of graph representations. Every invariant the
+//! algorithms rely on is checked here; generators, loaders and the
+//! property tests all call through [`check`].
+
+use super::csr::Csr;
+use super::zeroterm::ZCsr;
+use thiserror::Error;
+
+/// Violations of the CSR invariants.
+#[derive(Debug, Error, PartialEq, Eq)]
+pub enum GraphError {
+    #[error("row_ptr length {got} != n+1 ({want})")]
+    RowPtrLen { got: usize, want: usize },
+    #[error("row_ptr not monotone at row {row}")]
+    RowPtrMonotone { row: usize },
+    #[error("row_ptr[{0}] does not start at 0")]
+    RowPtrStart(u32),
+    #[error("row_ptr end {got} != col_idx len {want}")]
+    RowPtrEnd { got: usize, want: usize },
+    #[error("entry ({row},{col}) not strictly upper-triangular")]
+    NotUpperTriangular { row: usize, col: u32 },
+    #[error("column {col} out of range in row {row} (n={n})")]
+    ColOutOfRange { row: usize, col: u32, n: usize },
+    #[error("row {row} not sorted ascending at position {pos}")]
+    RowNotSorted { row: usize, pos: usize },
+    #[error("duplicate column {col} in row {row}")]
+    DuplicateCol { row: usize, col: u32 },
+    #[error("zero-terminated row {row} missing terminator")]
+    MissingTerminator { row: usize },
+    #[error("zero-terminated row {row} has live entry after tombstone at {pos}")]
+    EntryAfterTombstone { row: usize, pos: usize },
+}
+
+/// Check all invariants of a canonical upper-triangular CSR.
+pub fn check(g: &Csr) -> Result<(), GraphError> {
+    let n = g.n();
+    let rp = g.row_ptr();
+    if rp.len() != n + 1 {
+        return Err(GraphError::RowPtrLen { got: rp.len(), want: n + 1 });
+    }
+    if rp[0] != 0 {
+        return Err(GraphError::RowPtrStart(rp[0]));
+    }
+    for i in 0..n {
+        if rp[i + 1] < rp[i] {
+            return Err(GraphError::RowPtrMonotone { row: i });
+        }
+    }
+    if rp[n] as usize != g.col_idx().len() {
+        return Err(GraphError::RowPtrEnd { got: rp[n] as usize, want: g.col_idx().len() });
+    }
+    for i in 0..n {
+        let row = g.row(i);
+        for (pos, &c) in row.iter().enumerate() {
+            if c as usize <= i {
+                return Err(GraphError::NotUpperTriangular { row: i, col: c });
+            }
+            if c as usize >= n {
+                return Err(GraphError::ColOutOfRange { row: i, col: c, n });
+            }
+            if pos > 0 {
+                if row[pos - 1] > c {
+                    return Err(GraphError::RowNotSorted { row: i, pos });
+                }
+                if row[pos - 1] == c {
+                    return Err(GraphError::DuplicateCol { row: i, col: c });
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Check the zero-terminated working form: every row ends with a
+/// terminator slot, live entries are a sorted strictly-upper-triangular
+/// prefix, and no live entry follows a tombstone (compaction invariant).
+pub fn check_zcsr(z: &ZCsr) -> Result<(), GraphError> {
+    let n = z.n();
+    for i in 0..n {
+        let raw = z.row_raw(i);
+        match raw.last() {
+            Some(0) => {}
+            _ => return Err(GraphError::MissingTerminator { row: i }),
+        }
+        let mut seen_zero = false;
+        let mut prev: u32 = 0;
+        for (pos, &c) in raw.iter().enumerate() {
+            if c == 0 {
+                seen_zero = true;
+                continue;
+            }
+            if seen_zero {
+                return Err(GraphError::EntryAfterTombstone { row: i, pos });
+            }
+            if c as usize <= i {
+                return Err(GraphError::NotUpperTriangular { row: i, col: c });
+            }
+            if c as usize >= n {
+                return Err(GraphError::ColOutOfRange { row: i, col: c, n });
+            }
+            if prev != 0 {
+                if prev > c {
+                    return Err(GraphError::RowNotSorted { row: i, pos });
+                }
+                if prev == c {
+                    return Err(GraphError::DuplicateCol { row: i, col: c });
+                }
+            }
+            prev = c;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::from_sorted_unique;
+
+    #[test]
+    fn valid_graph_passes() {
+        let g = from_sorted_unique(4, &[(0, 1), (0, 2), (1, 2), (2, 3)]);
+        assert!(check(&g).is_ok());
+        assert!(check_zcsr(&ZCsr::from_csr(&g)).is_ok());
+    }
+
+    #[test]
+    fn zcsr_detects_entry_after_tombstone() {
+        let g = from_sorted_unique(3, &[(0, 1), (0, 2)]);
+        let mut z = ZCsr::from_csr(&g);
+        let (s, _) = z.row_span(0);
+        z.col_mut()[s] = 0; // tombstone before live entry [0,2,0]
+        assert_eq!(
+            check_zcsr(&z),
+            Err(GraphError::EntryAfterTombstone { row: 0, pos: 1 })
+        );
+    }
+
+    #[test]
+    fn zcsr_detects_lower_triangular_entry() {
+        let g = from_sorted_unique(3, &[(1, 2)]);
+        let mut z = ZCsr::from_csr(&g);
+        let (s, _) = z.row_span(1);
+        z.col_mut()[s] = 1; // (1,1) self reference
+        assert!(matches!(
+            check_zcsr(&z),
+            Err(GraphError::NotUpperTriangular { row: 1, col: 1 })
+        ));
+    }
+}

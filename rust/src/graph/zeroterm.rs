@@ -1,0 +1,241 @@
+//! Zero-terminated CSR — the paper's working representation (§III-D).
+//!
+//! Each row of the strictly upper-triangular CSR is given one extra slot
+//! holding `0`. Because every real column index is ≥ 1 (strict upper
+//! triangularity), `0` doubles as:
+//!
+//! * the **row terminator**: intersection loops walk "the rest of the
+//!   row" without carrying an explicit bound, and
+//! * the **pruning tombstone**: `pruneEdges` compacts surviving entries
+//!   to the front of the row and zero-fills the tail, so a subsequent
+//!   pass terminates early exactly where the live row ends.
+//!
+//! The support array `S` is stored parallel to `col`, one counter per
+//! slot (terminator slots are dead weight — the cost the paper calls
+//! "minor", and which the `ablations` bench quantifies).
+
+use super::csr::{Csr, Vid};
+
+/// Zero-terminated upper-triangular CSR.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ZCsr {
+    n: usize,
+    /// Row spans over `col`; length `n + 1`. Row `i` occupies
+    /// `row_ptr[i] .. row_ptr[i+1]`, and `col[row_ptr[i+1] - 1]` is the
+    /// terminator slot (always part of the row).
+    row_ptr: Vec<u32>,
+    /// Column indices (≥ 1) followed by zero fill; one extra slot per row.
+    col: Vec<Vid>,
+    /// Edge count of the *original* graph (the ME/s denominator — the
+    /// paper normalizes by input edges, not surviving edges).
+    initial_edges: usize,
+}
+
+impl ZCsr {
+    /// Build the zero-terminated working copy from a canonical CSR.
+    pub fn from_csr(g: &Csr) -> ZCsr {
+        let n = g.n();
+        let mut row_ptr = Vec::with_capacity(n + 1);
+        let mut col = Vec::with_capacity(g.nnz() + n);
+        row_ptr.push(0u32);
+        for i in 0..n {
+            col.extend_from_slice(g.row(i));
+            col.push(0); // terminator
+            row_ptr.push(col.len() as u32);
+        }
+        ZCsr { n, row_ptr, col, initial_edges: g.nnz() }
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Total slots in `col` (live + tombstones + terminators).
+    #[inline]
+    pub fn slots(&self) -> usize {
+        self.col.len()
+    }
+
+    /// Edge count of the original input graph.
+    #[inline]
+    pub fn initial_edges(&self) -> usize {
+        self.initial_edges
+    }
+
+    #[inline]
+    pub fn row_ptr(&self) -> &[u32] {
+        &self.row_ptr
+    }
+
+    #[inline]
+    pub fn col(&self) -> &[Vid] {
+        &self.col
+    }
+
+    #[inline]
+    pub fn col_mut(&mut self) -> &mut [Vid] {
+        &mut self.col
+    }
+
+    /// The full row span including terminator/tombstone slots.
+    #[inline]
+    pub fn row_span(&self, i: usize) -> (usize, usize) {
+        (self.row_ptr[i] as usize, self.row_ptr[i + 1] as usize)
+    }
+
+    /// Slice of the full row (live entries, then zero fill).
+    #[inline]
+    pub fn row_raw(&self, i: usize) -> &[Vid] {
+        &self.col[self.row_ptr[i] as usize..self.row_ptr[i + 1] as usize]
+    }
+
+    /// Live entries of row `i` (leading nonzeros — rows are kept
+    /// compacted by `prune`).
+    pub fn row_live(&self, i: usize) -> &[Vid] {
+        let raw = self.row_raw(i);
+        let end = raw.iter().position(|&c| c == 0).unwrap_or(raw.len());
+        &raw[..end]
+    }
+
+    /// Number of live (nonzero) entries across all rows.
+    pub fn live_edges(&self) -> usize {
+        self.col.iter().filter(|&&c| c != 0).count()
+    }
+
+    /// Map a flat slot index to its row via binary search on `row_ptr`
+    /// — how the fine-grained flat `RangePolicy` recovers `i` from the
+    /// 1-D task index (paper Listing 1). `O(log n)`.
+    #[inline]
+    pub fn row_of(&self, p: usize) -> usize {
+        debug_assert!(p < self.col.len());
+        // partition_point returns the first row whose start is > p; -1.
+        self.row_ptr.partition_point(|&s| s as usize <= p) - 1
+    }
+
+    /// `row_of` with a monotone hint (the previous task's row). Falls
+    /// back to binary search on a miss. The §Perf pass measures this
+    /// against plain binary search.
+    #[inline]
+    pub fn row_of_hinted(&self, p: usize, hint: usize) -> usize {
+        if hint < self.n {
+            let (s, e) = self.row_span(hint);
+            if p >= s && p < e {
+                return hint;
+            }
+            if p >= e && hint + 1 < self.n {
+                let (s2, e2) = self.row_span(hint + 1);
+                if p >= s2 && p < e2 {
+                    return hint + 1;
+                }
+            }
+        }
+        self.row_of(p)
+    }
+
+    /// Extract the live entries back into a canonical CSR (for
+    /// validation and for reporting the surviving truss subgraph).
+    pub fn to_csr(&self) -> Csr {
+        let mut row_ptr = Vec::with_capacity(self.n + 1);
+        let mut col_idx = Vec::with_capacity(self.live_edges());
+        row_ptr.push(0u32);
+        for i in 0..self.n {
+            col_idx.extend_from_slice(self.row_live(i));
+            row_ptr.push(col_idx.len() as u32);
+        }
+        Csr::from_parts(self.n, row_ptr, col_idx)
+    }
+
+    /// Reset the working copy back to the given canonical CSR contents
+    /// (reusing allocations). Row *capacities* are rebuilt to match `g`.
+    pub fn reset_from(&mut self, g: &Csr) {
+        assert_eq!(g.n(), self.n);
+        self.col.clear();
+        self.row_ptr.clear();
+        self.row_ptr.push(0);
+        for i in 0..self.n {
+            self.col.extend_from_slice(g.row(i));
+            self.col.push(0);
+            self.row_ptr.push(self.col.len() as u32);
+        }
+        self.initial_edges = g.nnz();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::from_sorted_unique;
+
+    fn diamond() -> Csr {
+        from_sorted_unique(4, &[(0, 1), (0, 2), (0, 3), (1, 2), (2, 3)])
+    }
+
+    #[test]
+    fn terminators_present() {
+        let z = ZCsr::from_csr(&diamond());
+        assert_eq!(z.slots(), 5 + 4);
+        assert_eq!(z.row_raw(0), &[1, 2, 3, 0]);
+        assert_eq!(z.row_raw(1), &[2, 0]);
+        assert_eq!(z.row_raw(3), &[0]);
+        assert_eq!(z.live_edges(), 5);
+        assert_eq!(z.initial_edges(), 5);
+    }
+
+    #[test]
+    fn row_live_stops_at_terminator() {
+        let mut z = ZCsr::from_csr(&diamond());
+        assert_eq!(z.row_live(0), &[1, 2, 3]);
+        // tombstone the middle entry by compaction semantics: [1,3,0,0]
+        let (s, _) = z.row_span(0);
+        z.col_mut()[s + 1] = 3;
+        z.col_mut()[s + 2] = 0;
+        assert_eq!(z.row_live(0), &[1, 3]);
+        assert_eq!(z.live_edges(), 4);
+    }
+
+    #[test]
+    fn row_of_flat_index() {
+        let z = ZCsr::from_csr(&diamond());
+        // layout: row0 [1,2,3,0] row1 [2,0] row2 [3,0] row3 [0]
+        assert_eq!(z.row_of(0), 0);
+        assert_eq!(z.row_of(3), 0); // terminator slot still belongs to row 0
+        assert_eq!(z.row_of(4), 1);
+        assert_eq!(z.row_of(5), 1);
+        assert_eq!(z.row_of(6), 2);
+        assert_eq!(z.row_of(8), 3);
+    }
+
+    #[test]
+    fn row_of_hinted_agrees_with_search() {
+        let z = ZCsr::from_csr(&diamond());
+        let mut hint = 0usize;
+        for p in 0..z.slots() {
+            let r = z.row_of_hinted(p, hint);
+            assert_eq!(r, z.row_of(p), "p={p}");
+            hint = r;
+        }
+        // wildly wrong hints must still be correct
+        for p in 0..z.slots() {
+            assert_eq!(z.row_of_hinted(p, 3), z.row_of(p));
+        }
+    }
+
+    #[test]
+    fn to_csr_roundtrip() {
+        let g = diamond();
+        let z = ZCsr::from_csr(&g);
+        assert_eq!(z.to_csr(), g);
+    }
+
+    #[test]
+    fn reset_from_restores() {
+        let g = diamond();
+        let mut z = ZCsr::from_csr(&g);
+        let (s, _) = z.row_span(0);
+        z.col_mut()[s] = 0; // kill the whole row 0 prefix
+        assert_ne!(z.to_csr(), g);
+        z.reset_from(&g);
+        assert_eq!(z.to_csr(), g);
+    }
+}

@@ -1,0 +1,47 @@
+//! # ktruss — fine-grained parallel Eager K-truss
+//!
+//! A production-shaped reproduction of *"Exploration of Fine-Grained
+//! Parallelism for Load Balancing Eager K-truss on GPU and CPU"*
+//! (Blanco, Low, Kim — IEEE HPEC 2019), built as a three-layer
+//! rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the coordinator: graph substrate, the coarse-
+//!   and fine-grained Eager K-truss kernels, a Kokkos-style parallel
+//!   policy layer, calibrated CPU/GPU timing simulators (the paper's
+//!   48-thread Skylake and V100 testbeds are simulated; see DESIGN.md
+//!   §2), a PJRT runtime for the AOT-compiled dense path, and a serving
+//!   coordinator that batches and routes K-truss jobs.
+//! * **L2 (python/compile/model.py)** — the dense blocked linear-
+//!   algebraic formulation `S = (AᵀA) ∘ A` in JAX, AOT-lowered to HLO
+//!   text at build time.
+//! * **L1 (python/compile/kernels/)** — the Pallas tile kernel for the
+//!   support computation, validated against a pure-jnp oracle.
+//!
+//! Python never runs on the request path: `make artifacts` lowers the
+//! model once and the rust binary executes the HLO via PJRT.
+//!
+//! Quickstart (compile-checked; `no_run` because doctest binaries do
+//! not inherit the rpath to libxla_extension's bundled libstdc++):
+//!
+//! ```no_run
+//! use ktruss::graph::builder::from_sorted_unique;
+//! use ktruss::algo::ktruss::{ktruss, Mode};
+//!
+//! // diamond: triangles {0,1,2} and {0,2,3}
+//! let g = from_sorted_unique(4, &[(0,1),(0,2),(0,3),(1,2),(2,3)]);
+//! let res = ktruss(&g, 3, Mode::Fine);
+//! assert_eq!(res.truss.nnz(), 5); // every edge is in a triangle
+//! ```
+
+pub mod algo;
+pub mod bench_harness;
+pub mod cli;
+pub mod coordinator;
+pub mod cost;
+pub mod gen;
+pub mod graph;
+pub mod par;
+pub mod runtime;
+pub mod sim;
+pub mod testkit;
+pub mod util;

@@ -1,0 +1,9 @@
+//! Kokkos-style parallel substrate: a scoped worker pool with
+//! static/dynamic range scheduling, and the concurrent (atomic)
+//! realizations of the support and prune kernels.
+
+pub mod parallel_support;
+pub mod pool;
+
+pub use parallel_support::{compute_supports_par, ktruss_par, prune_par};
+pub use pool::{Pool, Schedule};

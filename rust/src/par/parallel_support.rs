@@ -1,0 +1,221 @@
+//! Concurrent `computeSupports` on the real worker pool — the rust
+//! analogue of the paper's Kokkos Listing 1, in both granularities.
+//!
+//! The support array is `AtomicU32` (the paper's `Atomic` memory trait):
+//! fine-grained tasks racing on shared `S₂₂` rows is the whole point,
+//! and relaxed fetch-adds are sufficient because supports are pure
+//! commutative counters read only after the pass completes.
+
+use super::pool::{Pool, Schedule};
+use crate::algo::support::{eager_update_atomic, Mode};
+use crate::graph::ZCsr;
+use std::sync::atomic::{AtomicU32, Ordering};
+
+/// Run one support pass concurrently; returns the plain support array.
+pub fn compute_supports_par(z: &ZCsr, pool: &Pool, mode: Mode, schedule: Schedule) -> Vec<u32> {
+    let s: Vec<AtomicU32> = (0..z.slots()).map(|_| AtomicU32::new(0)).collect();
+    compute_supports_into(z, pool, mode, schedule, &s);
+    s.into_iter().map(|x| x.into_inner()).collect()
+}
+
+/// Run one support pass into an existing (zeroed) atomic array.
+pub fn compute_supports_into(
+    z: &ZCsr,
+    pool: &Pool,
+    mode: Mode,
+    schedule: Schedule,
+    s: &[AtomicU32],
+) {
+    assert_eq!(s.len(), z.slots());
+    let col = z.col();
+    match mode {
+        Mode::Coarse => {
+            // one task per row (paper Algorithm 2): the task walks all
+            // live entries of a₁₂ᵀ
+            pool.parallel_for(z.n(), schedule, |_, i| {
+                let (start, end) = z.row_span(i);
+                for p in start..end {
+                    let kappa = col[p];
+                    if kappa == 0 {
+                        break;
+                    }
+                    let (r0, _) = z.row_span(kappa as usize);
+                    eager_update_atomic(col, s, p, r0);
+                }
+            });
+        }
+        Mode::Fine => {
+            // one task per slot (paper Algorithm 3 / Listing 1): a flat
+            // range over the zero-terminated nonzero array; terminator
+            // and tombstone slots are trivial no-ops, exactly as in the
+            // paper's flat RangePolicy formulation
+            pool.parallel_for(z.slots(), schedule, |_, p| {
+                let kappa = col[p];
+                if kappa == 0 {
+                    return;
+                }
+                let (r0, _) = z.row_span(kappa as usize);
+                eager_update_atomic(col, s, p, r0);
+            });
+        }
+    }
+}
+
+/// Concurrent prune: each row is compacted independently (rows never
+/// share slots), so a plain parallel-for over rows with interior
+/// mutability via raw pointer partitioning is safe.
+pub fn prune_par(z: &mut ZCsr, s: &mut [u32], k: u32, pool: &Pool) -> crate::algo::prune::PruneOutcome {
+    use std::sync::atomic::AtomicUsize;
+    let threshold = k.saturating_sub(2);
+    let removed = AtomicUsize::new(0);
+    let remaining = AtomicUsize::new(0);
+    let n = z.n();
+    let row_ptr: Vec<(usize, usize)> = (0..n).map(|i| z.row_span(i)).collect();
+    let col_ptr = SendPtr(z.col_mut().as_mut_ptr());
+    let s_ptr = SendPtr(s.as_mut_ptr());
+    pool.parallel_for(n, Schedule::Static, |_, i| {
+        let (start, end) = row_ptr[i];
+        // SAFETY: rows are disjoint slot ranges; each i touches only
+        // [start, end) of both arrays.
+        let col = unsafe { std::slice::from_raw_parts_mut(col_ptr.get().add(start), end - start) };
+        let sup = unsafe { std::slice::from_raw_parts_mut(s_ptr.get().add(start), end - start) };
+        let mut write = 0usize;
+        let mut local_removed = 0usize;
+        for p in 0..col.len() {
+            let c = col[p];
+            if c == 0 {
+                break;
+            }
+            if sup[p] >= threshold {
+                col[write] = c;
+                write += 1;
+            } else {
+                local_removed += 1;
+            }
+        }
+        for slot in col.iter_mut().skip(write) {
+            *slot = 0;
+        }
+        for sp in sup.iter_mut() {
+            *sp = 0;
+        }
+        removed.fetch_add(local_removed, Ordering::Relaxed);
+        remaining.fetch_add(write, Ordering::Relaxed);
+    });
+    crate::algo::prune::PruneOutcome {
+        removed: removed.into_inner(),
+        remaining: remaining.into_inner(),
+    }
+}
+
+/// Pointer wrapper that asserts cross-thread use is safe because the
+/// parallel-for partitions rows disjointly.
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+impl<T> SendPtr<T> {
+    /// Accessor (rather than field capture) so edition-2021 closures
+    /// capture the `Sync` wrapper, not the raw pointer field.
+    fn get(&self) -> *mut T {
+        self.0
+    }
+}
+
+/// Full concurrent k-truss (support + prune until convergence) — the
+/// production entry point used by the coordinator's CPU engine.
+pub fn ktruss_par(
+    g: &crate::graph::Csr,
+    k: u32,
+    pool: &Pool,
+    mode: Mode,
+    schedule: Schedule,
+) -> crate::algo::ktruss::KtrussResult {
+    let mut z = ZCsr::from_csr(g);
+    let s_atomic: Vec<AtomicU32> = (0..z.slots()).map(|_| AtomicU32::new(0)).collect();
+    let mut s_plain = vec![0u32; z.slots()];
+    let mut iterations = 0usize;
+    let mut stats = Vec::new();
+    loop {
+        let live = z.live_edges();
+        if live == 0 {
+            break;
+        }
+        compute_supports_into(&z, pool, mode, schedule, &s_atomic);
+        for (d, a) in s_plain.iter_mut().zip(s_atomic.iter()) {
+            *d = a.swap(0, Ordering::Relaxed);
+        }
+        let support_steps = s_plain.iter().map(|&x| x as u64).sum::<u64>() + live as u64;
+        let out = prune_par(&mut z, &mut s_plain, k, pool);
+        iterations += 1;
+        stats.push(crate::algo::ktruss::IterationStat {
+            live_edges: live,
+            removed: out.removed,
+            support_steps,
+        });
+        if out.removed == 0 {
+            break;
+        }
+    }
+    crate::algo::ktruss::KtrussResult { truss: z.to_csr(), iterations, stats, k, mode }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::ktruss::ktruss;
+    use crate::algo::support::compute_supports_seq;
+
+    fn random_graph(seed: u64) -> crate::graph::Csr {
+        crate::gen::rmat::rmat(
+            300,
+            2200,
+            crate::gen::rmat::RmatParams::social(),
+            &mut crate::util::Rng::new(seed),
+        )
+    }
+
+    #[test]
+    fn par_supports_match_seq_all_modes_and_schedules() {
+        let g = random_graph(1);
+        let z = ZCsr::from_csr(&g);
+        let mut want = Vec::new();
+        compute_supports_seq(&z, &mut want);
+        let pool = Pool::new(4);
+        for mode in [Mode::Coarse, Mode::Fine] {
+            for sched in [Schedule::Static, Schedule::Dynamic { chunk: 16 }] {
+                let got = compute_supports_par(&z, &pool, mode, sched);
+                assert_eq!(got, want, "{mode} {sched:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn par_ktruss_matches_seq() {
+        let g = random_graph(2);
+        let pool = Pool::new(4);
+        for k in [3u32, 5] {
+            let seq = ktruss(&g, k, Mode::Fine);
+            for mode in [Mode::Coarse, Mode::Fine] {
+                let par = ktruss_par(&g, k, &pool, mode, Schedule::Dynamic { chunk: 64 });
+                assert_eq!(par.truss, seq.truss, "k={k} {mode}");
+                assert_eq!(par.iterations, seq.iterations, "k={k} {mode}");
+            }
+        }
+    }
+
+    #[test]
+    fn prune_par_matches_seq() {
+        let g = random_graph(3);
+        let mut z1 = ZCsr::from_csr(&g);
+        let mut z2 = z1.clone();
+        let mut s1 = Vec::new();
+        compute_supports_seq(&z1, &mut s1);
+        let mut s2 = s1.clone();
+        let pool = Pool::new(3);
+        let a = crate::algo::prune::prune(&mut z1, &mut s1, 4);
+        let b = prune_par(&mut z2, &mut s2, 4, &pool);
+        assert_eq!(a, b);
+        assert_eq!(z1, z2);
+        assert_eq!(s1, s2);
+    }
+}

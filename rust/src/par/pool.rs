@@ -1,0 +1,224 @@
+//! A scoped worker pool with Kokkos-`RangePolicy`-style scheduling.
+//!
+//! This is the *real* concurrent execution path (atomics and all); it
+//! validates that the eager update kernel is safe under concurrency.
+//! Timing on this container is meaningless for the paper's experiments
+//! (1 hardware core) — the calibrated models in [`crate::sim`] produce
+//! the 48-thread/GPU timing instead (DESIGN.md §2).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// How a 1-D iteration range is divided among workers, mirroring the
+/// schedules Kokkos'/OpenMP's `RangePolicy` offers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Schedule {
+    /// Contiguous equal-count blocks, one per worker (OpenMP default,
+    /// and what the paper's flat RangePolicy compiles to on CPU).
+    Static,
+    /// Workers grab fixed-size chunks from a shared counter.
+    Dynamic { chunk: usize },
+}
+
+/// A fixed-width worker pool. Threads are spawned per call via
+/// `std::thread::scope` — simple, safe, and cheap relative to the
+/// kernels we run (ms-scale tasks).
+#[derive(Clone, Copy, Debug)]
+pub struct Pool {
+    workers: usize,
+}
+
+impl Pool {
+    /// A pool with `workers` threads (≥ 1).
+    pub fn new(workers: usize) -> Pool {
+        Pool { workers: workers.max(1) }
+    }
+
+    /// Pool sized to available hardware parallelism.
+    pub fn host() -> Pool {
+        Pool::new(
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1),
+        )
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Parallel-for over `0..n`: every index is passed to `f` exactly
+    /// once; `worker` is the executing worker's id.
+    pub fn parallel_for(&self, n: usize, schedule: Schedule, f: impl Fn(usize, usize) + Sync) {
+        if n == 0 {
+            return;
+        }
+        if self.workers == 1 {
+            for i in 0..n {
+                f(0, i);
+            }
+            return;
+        }
+        match schedule {
+            Schedule::Static => {
+                std::thread::scope(|scope| {
+                    for w in 0..self.workers {
+                        let f = &f;
+                        // contiguous block [lo, hi) for worker w
+                        let lo = n * w / self.workers;
+                        let hi = n * (w + 1) / self.workers;
+                        scope.spawn(move || {
+                            for i in lo..hi {
+                                f(w, i);
+                            }
+                        });
+                    }
+                });
+            }
+            Schedule::Dynamic { chunk } => {
+                let chunk = chunk.max(1);
+                let next = AtomicUsize::new(0);
+                std::thread::scope(|scope| {
+                    for w in 0..self.workers {
+                        let f = &f;
+                        let next = &next;
+                        scope.spawn(move || loop {
+                            let lo = next.fetch_add(chunk, Ordering::Relaxed);
+                            if lo >= n {
+                                break;
+                            }
+                            for i in lo..(lo + chunk).min(n) {
+                                f(w, i);
+                            }
+                        });
+                    }
+                });
+            }
+        }
+    }
+
+    /// Parallel map-reduce: apply `f` to each index, combine with `merge`.
+    pub fn parallel_reduce<T: Send>(
+        &self,
+        n: usize,
+        schedule: Schedule,
+        identity: impl Fn() -> T + Sync,
+        f: impl Fn(usize, &mut T) + Sync,
+        merge: impl Fn(T, T) -> T,
+    ) -> T {
+        if self.workers == 1 || n == 0 {
+            let mut acc = identity();
+            for i in 0..n {
+                f(i, &mut acc);
+            }
+            return acc;
+        }
+        let partials = std::sync::Mutex::new(Vec::with_capacity(self.workers));
+        match schedule {
+            Schedule::Static => {
+                std::thread::scope(|scope| {
+                    for w in 0..self.workers {
+                        let f = &f;
+                        let identity = &identity;
+                        let partials = &partials;
+                        let lo = n * w / self.workers;
+                        let hi = n * (w + 1) / self.workers;
+                        scope.spawn(move || {
+                            let mut acc = identity();
+                            for i in lo..hi {
+                                f(i, &mut acc);
+                            }
+                            partials.lock().unwrap().push(acc);
+                        });
+                    }
+                });
+            }
+            Schedule::Dynamic { chunk } => {
+                let chunk = chunk.max(1);
+                let next = AtomicUsize::new(0);
+                std::thread::scope(|scope| {
+                    for _ in 0..self.workers {
+                        let f = &f;
+                        let identity = &identity;
+                        let partials = &partials;
+                        let next = &next;
+                        scope.spawn(move || {
+                            let mut acc = identity();
+                            loop {
+                                let lo = next.fetch_add(chunk, Ordering::Relaxed);
+                                if lo >= n {
+                                    break;
+                                }
+                                for i in lo..(lo + chunk).min(n) {
+                                    f(i, &mut acc);
+                                }
+                            }
+                            partials.lock().unwrap().push(acc);
+                        });
+                    }
+                });
+            }
+        }
+        partials
+            .into_inner()
+            .unwrap()
+            .into_iter()
+            .fold(identity(), merge)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, AtomicUsize};
+
+    #[test]
+    fn covers_every_index_static() {
+        let pool = Pool::new(4);
+        let hits: Vec<AtomicUsize> = (0..100).map(|_| AtomicUsize::new(0)).collect();
+        pool.parallel_for(100, Schedule::Static, |_, i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn covers_every_index_dynamic() {
+        let pool = Pool::new(3);
+        let hits: Vec<AtomicUsize> = (0..97).map(|_| AtomicUsize::new(0)).collect();
+        pool.parallel_for(97, Schedule::Dynamic { chunk: 5 }, |_, i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn single_worker_sequential() {
+        let pool = Pool::new(1);
+        let sum = AtomicU64::new(0);
+        pool.parallel_for(10, Schedule::Static, |w, i| {
+            assert_eq!(w, 0);
+            sum.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 45);
+    }
+
+    #[test]
+    fn empty_range_is_noop() {
+        Pool::new(4).parallel_for(0, Schedule::Static, |_, _| panic!("should not run"));
+    }
+
+    #[test]
+    fn reduce_sums_correctly() {
+        let pool = Pool::new(4);
+        for sched in [Schedule::Static, Schedule::Dynamic { chunk: 7 }] {
+            let total = pool.parallel_reduce(
+                1000,
+                sched,
+                || 0u64,
+                |i, acc| *acc += i as u64,
+                |a, b| a + b,
+            );
+            assert_eq!(total, 499_500, "{sched:?}");
+        }
+    }
+}

@@ -1,0 +1,126 @@
+//! Artifact discovery: find the `artifacts/` directory produced by
+//! `make artifacts` and enumerate the exported entry points.
+
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// An exported AOT entry point.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArtifactEntry {
+    /// Entry name, e.g. `ktruss_step_256`.
+    pub name: String,
+    /// Entry kind: `support` or `ktruss_step`.
+    pub kind: String,
+    /// Dense block size n (matrix is n×n).
+    pub n: usize,
+    /// Absolute path of the `.hlo.txt` file.
+    pub path: PathBuf,
+}
+
+/// Locate the artifacts directory: `$KTRUSS_ARTIFACTS`, else
+/// `./artifacts`, else walking up from the executable (so `cargo test`
+/// from any cwd inside the repo finds it).
+pub fn artifacts_dir() -> Result<PathBuf> {
+    if let Some(dir) = std::env::var_os("KTRUSS_ARTIFACTS") {
+        let p = PathBuf::from(dir);
+        if p.is_dir() {
+            return Ok(p);
+        }
+        bail!("KTRUSS_ARTIFACTS={} is not a directory", p.display());
+    }
+    let mut cur = std::env::current_dir().context("cwd")?;
+    loop {
+        let cand = cur.join("artifacts");
+        if cand.join("manifest.json").is_file() {
+            return Ok(cand);
+        }
+        if !cur.pop() {
+            bail!(
+                "artifacts/ not found (run `make artifacts` or set KTRUSS_ARTIFACTS)"
+            );
+        }
+    }
+}
+
+/// Enumerate `<kind>_<n>.hlo.txt` entries in a directory.
+pub fn list_entries(dir: &Path) -> Result<Vec<ArtifactEntry>> {
+    let mut out = Vec::new();
+    for entry in std::fs::read_dir(dir).with_context(|| format!("read {}", dir.display()))? {
+        let path = entry?.path();
+        let Some(fname) = path.file_name().and_then(|s| s.to_str()) else { continue };
+        let Some(stem) = fname.strip_suffix(".hlo.txt") else { continue };
+        // name pattern: {kind}_{n}
+        let Some((kind, n_str)) = stem.rsplit_once('_') else { continue };
+        let Ok(n) = n_str.parse::<usize>() else { continue };
+        out.push(ArtifactEntry {
+            name: stem.to_string(),
+            kind: kind.to_string(),
+            n,
+            path: path.clone(),
+        });
+    }
+    out.sort_by(|a, b| a.name.cmp(&b.name));
+    Ok(out)
+}
+
+/// Find the smallest exported block size ≥ `need` for `kind`, falling
+/// back to the largest available.
+pub fn pick_entry<'a>(
+    entries: &'a [ArtifactEntry],
+    kind: &str,
+    need: usize,
+) -> Option<&'a ArtifactEntry> {
+    let mut of_kind: Vec<&ArtifactEntry> = entries.iter().filter(|e| e.kind == kind).collect();
+    of_kind.sort_by_key(|e| e.n);
+    of_kind
+        .iter()
+        .find(|e| e.n >= need)
+        .copied()
+        .or_else(|| of_kind.last().copied())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_entry_names() {
+        let dir = std::env::temp_dir().join(format!("ktruss-art-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("support_128.hlo.txt"), "x").unwrap();
+        std::fs::write(dir.join("ktruss_step_256.hlo.txt"), "x").unwrap();
+        std::fs::write(dir.join("manifest.json"), "{}").unwrap();
+        std::fs::write(dir.join("README"), "x").unwrap();
+        let entries = list_entries(&dir).unwrap();
+        assert_eq!(entries.len(), 2);
+        assert_eq!(entries[0].kind, "ktruss_step");
+        assert_eq!(entries[0].n, 256);
+        assert_eq!(entries[1].kind, "support");
+        assert_eq!(entries[1].n, 128);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn pick_prefers_smallest_sufficient() {
+        let mk = |kind: &str, n: usize| ArtifactEntry {
+            name: format!("{kind}_{n}"),
+            kind: kind.into(),
+            n,
+            path: PathBuf::new(),
+        };
+        let entries = vec![mk("support", 128), mk("support", 256)];
+        assert_eq!(pick_entry(&entries, "support", 100).unwrap().n, 128);
+        assert_eq!(pick_entry(&entries, "support", 129).unwrap().n, 256);
+        // too big: falls back to largest
+        assert_eq!(pick_entry(&entries, "support", 1000).unwrap().n, 256);
+        assert!(pick_entry(&entries, "nope", 1).is_none());
+    }
+
+    #[test]
+    fn artifacts_dir_resolves_in_repo() {
+        // the repo has artifacts/ built by `make artifacts`
+        if let Ok(dir) = artifacts_dir() {
+            assert!(dir.join("manifest.json").is_file());
+        }
+    }
+}

@@ -1,0 +1,95 @@
+//! PJRT client wrapper: load AOT-compiled HLO text artifacts and execute
+//! them from the rust request path. Adapted from the working pattern in
+//! /opt/xla-example/load_hlo (see README there for the interchange
+//! gotchas — HLO *text*, not serialized protos).
+
+use anyhow::{Context, Result};
+use once_cell::sync::OnceCell;
+use std::path::Path;
+use std::sync::Mutex;
+
+/// Process-wide PJRT CPU client. PJRT clients are expensive to create
+/// and internally thread-safe; executions are serialized with a mutex
+/// because the 0.1.6 crate does not declare `PjRtLoadedExecutable` Sync.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    exec_lock: Mutex<()>,
+}
+
+static RUNTIME: OnceCell<Runtime> = OnceCell::new();
+
+// SAFETY: the underlying PJRT CPU client is thread-safe; all mutation
+// through the wrapper goes through `exec_lock`.
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+
+impl Runtime {
+    /// Get (or create) the process-wide runtime.
+    pub fn global() -> Result<&'static Runtime> {
+        RUNTIME.get_or_try_init(|| {
+            let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+            Ok(Runtime { client, exec_lock: Mutex::new(()) })
+        })
+    }
+
+    /// Backend platform name (e.g. "cpu").
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Load an HLO-text artifact and compile it to an executable.
+    /// (`&'static self` because `Runtime::global()` is the only way to
+    /// obtain a runtime and executables outlive call sites.)
+    pub fn load_hlo_text(&'static self, path: impl AsRef<Path>) -> Result<Executable> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {}", path.display()))?;
+        Ok(Executable { exe, runtime: self })
+    }
+}
+
+/// A compiled artifact bound to the global runtime.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    runtime: &'static Runtime,
+}
+
+// SAFETY: executions are serialized through the runtime's exec_lock.
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+
+impl Executable {
+    /// Execute with literal inputs; returns the output tuple elements.
+    /// (aot.py lowers with `return_tuple=True`, so the single output is
+    /// always a tuple — possibly a 1-tuple.)
+    pub fn run(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let _guard = self.runtime.exec_lock.lock().unwrap();
+        let result = self.exe.execute::<xla::Literal>(args)?[0][0]
+            .to_literal_sync()
+            .context("fetch result literal")?;
+        result.to_tuple().context("decompose output tuple")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn global_runtime_initializes() {
+        let rt = Runtime::global().expect("runtime");
+        assert_eq!(rt.platform().to_lowercase(), "cpu");
+        assert!(rt.device_count() >= 1);
+    }
+}

@@ -1,0 +1,147 @@
+//! The dense linear-algebraic K-truss path: execute the AOT-compiled
+//! L2/L1 artifacts (jax + Pallas, lowered at build time) from rust.
+//!
+//! This is (a) the TPU-shaped realization of the paper's fine-grained
+//! insight (uniform-cost MXU tiles — see DESIGN.md §Hardware-Adaptation)
+//! and (b) an end-to-end independent oracle for the sparse path: same
+//! K-truss, computed by a different algorithm in a different language
+//! through a different runtime.
+
+use super::artifacts::{artifacts_dir, list_entries, pick_entry};
+use super::client::{Executable, Runtime};
+use crate::graph::{builder, Csr, Vid};
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Dense-path engine: caches compiled executables per entry point.
+pub struct DenseEngine {
+    entries: Vec<super::artifacts::ArtifactEntry>,
+    compiled: Mutex<HashMap<String, &'static Executable>>,
+}
+
+impl DenseEngine {
+    /// Discover artifacts and create an engine.
+    pub fn new() -> Result<DenseEngine> {
+        let dir = artifacts_dir()?;
+        let entries = list_entries(&dir)?;
+        if entries.is_empty() {
+            bail!("no artifacts in {} — run `make artifacts`", dir.display());
+        }
+        Ok(DenseEngine { entries, compiled: Mutex::new(HashMap::new()) })
+    }
+
+    /// Largest dense block size available.
+    pub fn max_n(&self) -> usize {
+        self.entries.iter().map(|e| e.n).max().unwrap_or(0)
+    }
+
+    fn executable(&self, kind: &str, need: usize) -> Result<&'static Executable> {
+        let entry = pick_entry(&self.entries, kind, need)
+            .with_context(|| format!("no '{kind}' artifact"))?
+            .clone();
+        let mut cache = self.compiled.lock().unwrap();
+        if let Some(exe) = cache.get(&entry.name) {
+            return Ok(exe);
+        }
+        let exe = Runtime::global()?.load_hlo_text(&entry.path)?;
+        // executables live for the process; leak to get a &'static we
+        // can hand out without self-referential lifetimes
+        let exe: &'static Executable = Box::leak(Box::new(exe));
+        cache.insert(entry.name.clone(), exe);
+        Ok(exe)
+    }
+
+    /// Compute per-edge supports of `g` via the dense AOT path.
+    /// Returns supports in row-major live-edge order (matching
+    /// `Csr::edges()`), or an error if the graph exceeds every block.
+    pub fn supports(&self, g: &Csr) -> Result<Vec<u32>> {
+        let n = g.n();
+        if n > self.max_n() {
+            bail!("graph n={n} exceeds dense block limit {}", self.max_n());
+        }
+        let exe = self.executable("support", n)?;
+        let block = pick_entry(&self.entries, "support", n).unwrap().n;
+        let a = to_dense_symmetric(g, block);
+        let lit = xla::Literal::vec1(&a).reshape(&[block as i64, block as i64])?;
+        let out = exe.run(&[lit])?;
+        let s: Vec<f32> = out[0].to_vec()?;
+        Ok(g.edges()
+            .map(|(u, v)| s[u as usize * block + v as usize] as u32)
+            .collect())
+    }
+
+    /// Full dense K-truss: iterate the AOT `ktruss_step` executable
+    /// until `removed == 0` (the convergence loop lives here, in rust).
+    /// Returns (truss subgraph, iterations).
+    pub fn ktruss(&self, g: &Csr, k: u32) -> Result<(Csr, usize)> {
+        let n = g.n();
+        if n > self.max_n() {
+            bail!("graph n={n} exceeds dense block limit {}", self.max_n());
+        }
+        let exe = self.executable("ktruss_step", n)?;
+        let block = pick_entry(&self.entries, "ktruss_step", n).unwrap().n;
+        let mut a = to_dense_symmetric(g, block);
+        let mut iterations = 0usize;
+        loop {
+            let a_lit = xla::Literal::vec1(&a).reshape(&[block as i64, block as i64])?;
+            let threshold = xla::Literal::scalar(k.saturating_sub(2) as f32);
+            let out = exe.run(&[a_lit, threshold])?;
+            a = out[0].to_vec()?;
+            let removed: f32 = out[1].to_vec::<f32>()?[0];
+            iterations += 1;
+            if removed == 0.0 {
+                break;
+            }
+            if iterations > 4 * block {
+                bail!("dense ktruss failed to converge after {iterations} iterations");
+            }
+        }
+        Ok((from_dense_symmetric(&a, block, n), iterations))
+    }
+}
+
+/// Pack the upper-triangular CSR into a symmetric dense 0/1 block of
+/// size `block × block` (row-major f32, zero-padded).
+pub fn to_dense_symmetric(g: &Csr, block: usize) -> Vec<f32> {
+    assert!(g.n() <= block);
+    let mut a = vec![0.0f32; block * block];
+    for (u, v) in g.edges() {
+        a[u as usize * block + v as usize] = 1.0;
+        a[v as usize * block + u as usize] = 1.0;
+    }
+    a
+}
+
+/// Extract the strictly-upper-triangular edges of a symmetric dense
+/// block back into a CSR on `n` vertices.
+pub fn from_dense_symmetric(a: &[f32], block: usize, n: usize) -> Csr {
+    let mut edges: Vec<(Vid, Vid)> = Vec::new();
+    for u in 0..n {
+        for v in (u + 1)..n {
+            if a[u * block + v] != 0.0 {
+                edges.push((u as Vid, v as Vid));
+            }
+        }
+    }
+    builder::from_sorted_unique(n, &edges)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::from_sorted_unique;
+
+    #[test]
+    fn dense_roundtrip() {
+        let g = from_sorted_unique(5, &[(0, 1), (0, 4), (2, 3)]);
+        let a = to_dense_symmetric(&g, 8);
+        assert_eq!(a[0 * 8 + 1], 1.0);
+        assert_eq!(a[1 * 8 + 0], 1.0);
+        assert_eq!(from_dense_symmetric(&a, 8, 5), g);
+    }
+
+    // Engine tests requiring built artifacts live in
+    // rust/tests/integration_runtime.rs so `cargo test --lib` stays
+    // independent of `make artifacts`.
+}

@@ -1,0 +1,10 @@
+//! PJRT runtime: loads the HLO-text artifacts that `make artifacts`
+//! produced from the jax/Pallas layers and executes them on the CPU
+//! PJRT client — python is never on this path.
+
+pub mod artifacts;
+pub mod client;
+pub mod dense;
+
+pub use client::{Executable, Runtime};
+pub use dense::DenseEngine;

@@ -1,0 +1,65 @@
+//! One-shot calibration of the merge-step cost against real wallclock:
+//! run the (single-thread) support kernel on a mid-size generated graph,
+//! divide measured nanoseconds by traced steps. This pins the absolute
+//! scale of the CPU model to this host; all *relative* results are
+//! independent of it.
+
+use crate::algo::support::compute_supports_seq;
+use crate::cost::trace::trace_supports;
+use crate::graph::ZCsr;
+use crate::util::timer::Timer;
+
+/// Calibration output.
+#[derive(Clone, Copy, Debug)]
+pub struct Calibration {
+    /// Measured nanoseconds per merge step (single thread).
+    pub step_ns: f64,
+    /// Steps in the calibration workload.
+    pub steps: u64,
+    /// Wall time of the measured pass, ms.
+    pub wall_ms: f64,
+}
+
+/// Measure step cost on a standard calibration graph.
+pub fn calibrate_step_ns() -> Calibration {
+    let g = crate::gen::rmat::rmat(
+        20_000,
+        150_000,
+        crate::gen::rmat::RmatParams::social(),
+        &mut crate::util::Rng::new(0xCA11B),
+    );
+    let z = ZCsr::from_csr(&g);
+    let mut s = Vec::new();
+    let tr = trace_supports(&z, &mut s);
+    // warm-up, then measure the untraced kernel (what production runs)
+    compute_supports_seq(&z, &mut s);
+    let trials = 5;
+    let t = Timer::start();
+    for _ in 0..trials {
+        compute_supports_seq(&z, &mut s);
+        std::hint::black_box(&s);
+    }
+    let wall_ms = t.elapsed_ms() / trials as f64;
+    let step_ns = wall_ms * 1e6 / tr.total_steps as f64;
+    Calibration { step_ns, steps: tr.total_steps, wall_ms }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn calibration_yields_sane_step_cost() {
+        let c = calibrate_step_ns();
+        // a compare-advance merge step lands in low single-digit ns on
+        // anything newer than ~2010; allow wide slack for CI noise
+        assert!(
+            (0.1..100.0).contains(&c.step_ns),
+            "step_ns {} wall {}ms steps {}",
+            c.step_ns,
+            c.wall_ms,
+            c.steps
+        );
+        assert!(c.steps > 100_000);
+    }
+}

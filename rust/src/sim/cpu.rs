@@ -1,0 +1,190 @@
+//! CPU multicore timing model.
+//!
+//! A support kernel is a parallel-for over tasks (rows for coarse,
+//! slots for fine). Given the exact per-task costs from the trace, the
+//! model computes the makespan under the chosen schedule:
+//!
+//! * `Static` — contiguous equal-count chunks, one per thread (what
+//!   Kokkos' RangePolicy does on the OpenMP backend, and what the paper
+//!   ran). Makespan = max chunk cost.
+//! * `Dynamic {chunk}` — workers pull fixed-size chunks from a queue;
+//!   simulated with an earliest-finish-time heap. Used by the
+//!   scheduling ablation.
+//!
+//! The kernel time is `max(makespan, bandwidth bound) + fork/join`.
+
+use super::machine::CpuMachine;
+use crate::algo::support::Mode;
+use crate::cost::trace::SupportTrace;
+use crate::par::Schedule;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Per-task cost in nanoseconds for the support kernel.
+fn task_costs_ns(m: &CpuMachine, trace: &SupportTrace, row_ptr: &[u32], mode: Mode) -> Vec<f64> {
+    match mode {
+        Mode::Coarse => (0..row_ptr.len() - 1)
+            .map(|i| {
+                let steps = trace.row_steps(row_ptr, i) as f64;
+                let live = trace.live_per_row[i] as f64;
+                m.coarse_task_ns + live * m.entry_ns + steps * m.step_ns
+            })
+            .collect(),
+        Mode::Fine => trace
+            .fine_steps
+            .iter()
+            .map(|&st| m.fine_task_ns + st as f64 * m.step_ns)
+            .collect(),
+    }
+}
+
+/// Makespan (ns) of `costs` under `schedule` on `threads` workers.
+pub fn makespan_ns(costs: &[f64], threads: usize, schedule: Schedule) -> f64 {
+    if costs.is_empty() {
+        return 0.0;
+    }
+    let threads = threads.max(1);
+    match schedule {
+        Schedule::Static => {
+            let n = costs.len();
+            let mut worst = 0.0f64;
+            for w in 0..threads {
+                let lo = n * w / threads;
+                let hi = n * (w + 1) / threads;
+                let sum: f64 = costs[lo..hi].iter().sum();
+                worst = worst.max(sum);
+            }
+            worst
+        }
+        Schedule::Dynamic { chunk } => {
+            let chunk = chunk.max(1);
+            // earliest-finish-time heap over worker clocks
+            let mut heap: BinaryHeap<Reverse<u64>> = (0..threads).map(|_| Reverse(0u64)).collect();
+            // fixed-point ns to keep the heap ordered (f64 is not Ord)
+            let mut makespan = 0u64;
+            for c in costs.chunks(chunk) {
+                let cost: f64 = c.iter().sum();
+                let Reverse(t) = heap.pop().unwrap();
+                let done = t + (cost * 16.0) as u64; // 1/16 ns resolution
+                makespan = makespan.max(done);
+                heap.push(Reverse(done));
+            }
+            makespan as f64 / 16.0
+        }
+    }
+}
+
+/// Seconds for one support pass.
+pub fn support_pass_s(
+    m: &CpuMachine,
+    trace: &SupportTrace,
+    row_ptr: &[u32],
+    mode: Mode,
+    schedule: Schedule,
+) -> f64 {
+    let costs = task_costs_ns(m, trace, row_ptr, mode);
+    let compute_ns = makespan_ns(&costs, m.threads, schedule);
+    // streaming bound: every step touches ~8B of column data, every task
+    // ~24B of pointers/support
+    let bytes = trace.total_steps as f64 * 8.0 + costs.len() as f64 * 24.0;
+    let bw_ns = bytes / m.mem_bw_gbs; // GB/s == B/ns
+    compute_ns.max(bw_ns) / 1e9 + m.fork_join_us / 1e6
+}
+
+/// Seconds for one prune pass (parallel compaction over rows; near
+/// perfectly balanced, bandwidth-bound).
+pub fn prune_pass_s(m: &CpuMachine, slots: usize) -> f64 {
+    let per_thread = slots as f64 / m.threads as f64 * m.prune_slot_ns;
+    let bw_ns = slots as f64 * 8.0 / m.mem_bw_gbs;
+    per_thread.max(bw_ns) / 1e9 + m.fork_join_us / 1e6
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::trace::trace_supports;
+    use crate::graph::ZCsr;
+
+    fn trace_of(g: &crate::graph::Csr) -> (ZCsr, SupportTrace) {
+        let z = ZCsr::from_csr(g);
+        let mut s = Vec::new();
+        let t = trace_supports(&z, &mut s);
+        (z, t)
+    }
+
+    #[test]
+    fn makespan_static_vs_dynamic_on_skewed_costs() {
+        // one huge task at the front, many small
+        let mut costs = vec![1000.0];
+        costs.extend(std::iter::repeat(1.0).take(999));
+        let static_ms = makespan_ns(&costs, 4, Schedule::Static);
+        let dyn_ms = makespan_ns(&costs, 4, Schedule::Dynamic { chunk: 8 });
+        // static: first chunk gets the big task plus 249 small
+        assert!(static_ms >= 1000.0);
+        // dynamic: big chunk runs alone while others share the rest
+        assert!(dyn_ms <= static_ms + 1.0);
+        // both bounded below by critical path and above by total
+        let total: f64 = costs.iter().sum();
+        assert!(dyn_ms >= 1000.0 && dyn_ms <= total);
+    }
+
+    #[test]
+    fn makespan_single_thread_is_total() {
+        let costs = vec![3.0, 5.0, 2.0];
+        assert!((makespan_ns(&costs, 1, Schedule::Static) - 10.0).abs() < 1e-9);
+        assert!((makespan_ns(&costs, 1, Schedule::Dynamic { chunk: 2 }) - 10.0).abs() < 0.2);
+    }
+
+    #[test]
+    fn more_threads_never_slower() {
+        let g = crate::gen::rmat::rmat(
+            500,
+            4000,
+            crate::gen::rmat::RmatParams::social(),
+            &mut crate::util::Rng::new(2),
+        );
+        let (z, tr) = trace_of(&g);
+        for mode in [Mode::Coarse, Mode::Fine] {
+            let mut prev = f64::INFINITY;
+            for t in [1usize, 2, 4, 8, 16, 48] {
+                let m = CpuMachine::skylake_8160(t);
+                let s = support_pass_s(&m, &tr, z.row_ptr(), mode, Schedule::Static);
+                assert!(s <= prev * 1.001, "mode={mode} t={t}: {s} > {prev}");
+                prev = s;
+            }
+        }
+    }
+
+    #[test]
+    fn fine_beats_coarse_on_skewed_graph_at_48t() {
+        // hub-heavy graph → coarse static badly imbalanced
+        let g = crate::gen::rmat::rmat(
+            3000,
+            20_000,
+            crate::gen::rmat::RmatParams::autonomous_system(),
+            &mut crate::util::Rng::new(4),
+        );
+        let (z, tr) = trace_of(&g);
+        let m = CpuMachine::skylake_8160(48);
+        let coarse = support_pass_s(&m, &tr, z.row_ptr(), Mode::Coarse, Schedule::Static);
+        let fine = support_pass_s(&m, &tr, z.row_ptr(), Mode::Fine, Schedule::Static);
+        assert!(fine < coarse, "fine {fine} vs coarse {coarse}");
+    }
+
+    #[test]
+    fn road_graph_near_parity() {
+        let g = crate::gen::grid::road(20_000, 28_000, 0.05, &mut crate::util::Rng::new(6));
+        let (z, tr) = trace_of(&g);
+        let m = CpuMachine::skylake_8160(48);
+        let coarse = support_pass_s(&m, &tr, z.row_ptr(), Mode::Coarse, Schedule::Static);
+        let fine = support_pass_s(&m, &tr, z.row_ptr(), Mode::Fine, Schedule::Static);
+        let ratio = coarse / fine;
+        assert!((0.5..2.0).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn prune_scales_with_slots() {
+        let m = CpuMachine::skylake_8160(48);
+        assert!(prune_pass_s(&m, 2_000_000) > prune_pass_s(&m, 1_000));
+    }
+}

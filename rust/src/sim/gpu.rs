@@ -1,0 +1,162 @@
+//! GPU SIMT timing model (V100-class).
+//!
+//! The flat `RangePolicy` grid maps 32 consecutive tasks to a warp.
+//! Lanes execute in lockstep, so a warp's duration is the *maximum*
+//! task cost among its lanes — intra-warp divergence is where coarse
+//! tasks burn the GPU (one mega-row makes 31 lanes idle). The kernel's
+//! duration combines:
+//!
+//! * **throughput term** — total warp-steps over the device's peak
+//!   scheduler throughput (valid while occupancy is high);
+//! * **tail/serial term** — the longest single warp at the degraded
+//!   lone-warp step cost (latency no longer hidden). This is what
+//!   serializes hub rows on the AS-topology graphs and reproduces the
+//!   paper's catastrophic GPU-C results on `as20000102`/`oregon*`;
+//! * **bandwidth term** — streamed bytes over HBM bandwidth;
+//! * **launch latency** per kernel, which dominates tiny graphs and
+//!   many-iteration K_max runs, exactly as in Table I.
+
+use super::machine::GpuMachine;
+use crate::algo::support::Mode;
+use crate::cost::trace::SupportTrace;
+
+/// Kernel-time estimate decomposed into the model's terms (seconds).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct KernelEstimate {
+    pub throughput_s: f64,
+    pub tail_s: f64,
+    pub bandwidth_s: f64,
+    pub launch_s: f64,
+}
+
+impl KernelEstimate {
+    /// Total kernel wall time: overlapping terms take the max, the
+    /// launch latency is additive.
+    pub fn total_s(&self) -> f64 {
+        self.throughput_s.max(self.tail_s).max(self.bandwidth_s) + self.launch_s
+    }
+}
+
+/// Per-task costs in *steps* for the support kernel.
+fn task_steps(m: &GpuMachine, trace: &SupportTrace, row_ptr: &[u32], mode: Mode) -> Vec<f64> {
+    match mode {
+        Mode::Coarse => (0..row_ptr.len() - 1)
+            .map(|i| trace.row_steps(row_ptr, i) as f64 + m.coarse_task_steps)
+            .collect(),
+        Mode::Fine => trace
+            .fine_steps
+            .iter()
+            .map(|&st| st as f64 + m.fine_task_steps)
+            .collect(),
+    }
+}
+
+/// Estimate one support kernel.
+pub fn support_kernel(
+    m: &GpuMachine,
+    trace: &SupportTrace,
+    row_ptr: &[u32],
+    mode: Mode,
+) -> KernelEstimate {
+    let costs = task_steps(m, trace, row_ptr, mode);
+    estimate_kernel(m, &costs, trace.total_steps as f64)
+}
+
+/// Estimate one prune kernel (flat over slots, ~uniform small tasks).
+pub fn prune_kernel(m: &GpuMachine, slots: usize) -> KernelEstimate {
+    let costs = vec![m.prune_slot_steps; slots];
+    estimate_kernel(m, &costs, slots as f64 * m.prune_slot_steps)
+}
+
+/// Public entry for synthetic task lists (used by the ultra-fine
+/// ablation, which builds its own task decomposition).
+pub fn estimate_tasks(m: &GpuMachine, task_costs: &[f64], total_steps: f64) -> KernelEstimate {
+    estimate_kernel(m, task_costs, total_steps)
+}
+
+/// Core model: warp-max aggregation + three-way bound.
+fn estimate_kernel(m: &GpuMachine, task_costs: &[f64], total_steps: f64) -> KernelEstimate {
+    if task_costs.is_empty() {
+        return KernelEstimate { launch_s: m.launch_us / 1e6, ..Default::default() };
+    }
+    let mut total_warp_steps = 0.0f64;
+    let mut longest_warp = 0.0f64;
+    for w in task_costs.chunks(m.warp_size) {
+        let wmax = w.iter().cloned().fold(0.0f64, f64::max);
+        total_warp_steps += wmax;
+        longest_warp = longest_warp.max(wmax);
+    }
+    let throughput_s = total_warp_steps / m.peak_steps_per_s();
+    let tail_s = longest_warp * m.serial_step_s();
+    // bytes: 8B of column data per merge step + 16B of pointers per task
+    let bytes = total_steps * 8.0 + task_costs.len() as f64 * 16.0;
+    let bandwidth_s = bytes / (m.mem_bw_gbs * 1e9);
+    KernelEstimate { throughput_s, tail_s, bandwidth_s, launch_s: m.launch_us / 1e6 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::trace::trace_supports;
+    use crate::graph::ZCsr;
+
+    fn trace_of(g: &crate::graph::Csr) -> (ZCsr, SupportTrace) {
+        let z = ZCsr::from_csr(g);
+        let mut s = Vec::new();
+        let t = trace_supports(&z, &mut s);
+        (z, t)
+    }
+
+    #[test]
+    fn fine_crushes_coarse_on_hub_graph() {
+        // AS-style topology: mega-hub rows serialize the coarse kernel
+        let g = crate::gen::rmat::rmat(
+            6500,
+            12_600,
+            crate::gen::rmat::RmatParams::autonomous_system(),
+            &mut crate::util::Rng::new(1),
+        );
+        let (z, tr) = trace_of(&g);
+        let m = GpuMachine::v100();
+        let coarse = support_kernel(&m, &tr, z.row_ptr(), Mode::Coarse).total_s();
+        let fine = support_kernel(&m, &tr, z.row_ptr(), Mode::Fine).total_s();
+        assert!(
+            coarse > 3.0 * fine,
+            "expected big GPU win for fine: coarse {coarse} fine {fine}"
+        );
+    }
+
+    #[test]
+    fn road_graph_parity() {
+        let g = crate::gen::grid::road(30_000, 42_000, 0.05, &mut crate::util::Rng::new(2));
+        let (z, tr) = trace_of(&g);
+        let m = GpuMachine::v100();
+        let coarse = support_kernel(&m, &tr, z.row_ptr(), Mode::Coarse).total_s();
+        let fine = support_kernel(&m, &tr, z.row_ptr(), Mode::Fine).total_s();
+        let ratio = coarse / fine;
+        assert!((0.4..2.5).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn tail_term_dominates_for_single_giant_task() {
+        let m = GpuMachine::v100();
+        let mut costs = vec![1.0; 32 * 100];
+        costs[0] = 1_000_000.0;
+        let est = estimate_kernel(&m, &costs, 1_003_200.0);
+        assert!(est.tail_s > est.throughput_s);
+        assert!(est.total_s() >= est.tail_s);
+    }
+
+    #[test]
+    fn launch_latency_floors_empty_kernels() {
+        let m = GpuMachine::v100();
+        let est = estimate_kernel(&m, &[], 0.0);
+        assert!((est.total_s() - 8e-6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prune_kernel_scales() {
+        let m = GpuMachine::v100();
+        assert!(prune_kernel(&m, 10_000_000).total_s() > prune_kernel(&m, 10_000).total_s());
+    }
+}

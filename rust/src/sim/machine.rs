@@ -1,0 +1,142 @@
+//! Machine models for the paper's two testbeds. This container has one
+//! CPU core and no GPU, so per-task cost traces (exact, measured) are
+//! combined with these calibrated throughput/overhead constants to
+//! produce timing estimates (DESIGN.md §2 documents the substitution).
+//!
+//! The constants are *not* fitted per-graph: they are set once from
+//! first-principles hardware numbers (clocks, SM counts, bandwidths)
+//! plus a single calibration of merge-step cost, and then every graph,
+//! K setting and granularity flows through the same model. What the
+//! reproduction must get right is the *relative* behaviour — who wins,
+//! by roughly what factor, and where the crossovers are.
+
+/// CPU model: dual-socket Intel Xeon Platinum 8160 (2×24 cores, 96
+/// hyperthreads; the paper ran 1–48 threads).
+#[derive(Clone, Copy, Debug)]
+pub struct CpuMachine {
+    /// Worker threads used by the run.
+    pub threads: usize,
+    /// Nanoseconds per merge step (single thread, sustained). Set by
+    /// `calibrate` on the container and consistent with ~3 cycles/step
+    /// at 2.1 GHz for a branchy compare-advance loop.
+    pub step_ns: f64,
+    /// Fixed per-coarse-task (row) overhead: loop setup, row-pointer
+    /// loads.
+    pub coarse_task_ns: f64,
+    /// Per-live-entry overhead inside a coarse task (row-span lookup of
+    /// the partner row).
+    pub entry_ns: f64,
+    /// Fixed per-fine-task (slot) overhead: flat-index → row resolve +
+    /// partner row lookup. Higher than `entry_ns` because the row of the
+    /// slot must be recovered (binary search with hint).
+    pub fine_task_ns: f64,
+    /// Fork/join cost of one parallel region (OpenMP barrier at 48T).
+    pub fork_join_us: f64,
+    /// Prune cost per slot (compaction walk, bandwidth-bound).
+    pub prune_slot_ns: f64,
+    /// Aggregate memory bandwidth in GB/s (caps streaming phases).
+    pub mem_bw_gbs: f64,
+}
+
+impl CpuMachine {
+    /// The paper's CPU node at a given thread count.
+    pub fn skylake_8160(threads: usize) -> CpuMachine {
+        CpuMachine {
+            threads: threads.max(1),
+            step_ns: 1.4,
+            coarse_task_ns: 18.0,
+            entry_ns: 4.0,
+            fine_task_ns: 9.0,
+            fork_join_us: 3.0,
+            prune_slot_ns: 0.8,
+            mem_bw_gbs: 200.0,
+        }
+    }
+
+    /// Replace the merge-step cost with a calibrated value (measured on
+    /// the host by [`crate::sim::calibrate`]).
+    pub fn with_step_ns(mut self, step_ns: f64) -> CpuMachine {
+        self.step_ns = step_ns;
+        self
+    }
+}
+
+/// GPU model: NVIDIA Tesla V100 (Volta) — 80 SMs, 4 warp schedulers
+/// each, 1.38 GHz, ~900 GB/s HBM2.
+#[derive(Clone, Copy, Debug)]
+pub struct GpuMachine {
+    pub sms: usize,
+    pub schedulers_per_sm: usize,
+    pub clock_ghz: f64,
+    pub warp_size: usize,
+    /// Cycles one merge step costs a *fully occupied* warp scheduler
+    /// (memory latency hidden by other resident warps).
+    pub step_cycles: f64,
+    /// Cycles per merge step when a warp runs alone (tail of a skewed
+    /// kernel: latency no longer hidden). This is what serializes the
+    /// mega-row coarse tasks on AS-topology graphs.
+    pub serial_step_cycles: f64,
+    /// Per-task overhead, in steps: index math + row lookups
+    /// (coarse task = one row; fine task = one slot).
+    pub coarse_task_steps: f64,
+    pub fine_task_steps: f64,
+    /// Kernel launch + sync latency per kernel, microseconds.
+    pub launch_us: f64,
+    /// Prune cost per slot in steps.
+    pub prune_slot_steps: f64,
+    /// HBM bandwidth GB/s.
+    pub mem_bw_gbs: f64,
+}
+
+impl GpuMachine {
+    /// The paper's Tesla V100.
+    pub fn v100() -> GpuMachine {
+        GpuMachine {
+            sms: 80,
+            schedulers_per_sm: 4,
+            clock_ghz: 1.38,
+            warp_size: 32,
+            step_cycles: 6.0,
+            serial_step_cycles: 15.0,
+            coarse_task_steps: 4.0,
+            fine_task_steps: 6.0,
+            launch_us: 8.0,
+            prune_slot_steps: 0.5,
+            mem_bw_gbs: 850.0,
+        }
+    }
+
+    /// Peak merge-step throughput (steps/second) with full occupancy.
+    pub fn peak_steps_per_s(&self) -> f64 {
+        self.sms as f64 * self.schedulers_per_sm as f64 * self.clock_ghz * 1e9 / self.step_cycles
+    }
+
+    /// Seconds per step for a lone warp (divergence/tail regime).
+    pub fn serial_step_s(&self) -> f64 {
+        self.serial_step_cycles / (self.clock_ghz * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn v100_peak_is_order_10e10() {
+        let g = GpuMachine::v100();
+        let peak = g.peak_steps_per_s();
+        assert!((1e10..1e12).contains(&peak), "{peak}");
+    }
+
+    #[test]
+    fn serial_step_slower_than_occupied() {
+        let g = GpuMachine::v100();
+        let occupied_step = g.step_cycles / (g.clock_ghz * 1e9);
+        assert!(g.serial_step_s() > occupied_step);
+    }
+
+    #[test]
+    fn cpu_threads_clamped() {
+        assert_eq!(CpuMachine::skylake_8160(0).threads, 1);
+    }
+}

@@ -1,0 +1,208 @@
+//! End-to-end simulated K-truss timing: replay the convergence loop
+//! once, estimate every device/granularity configuration from the same
+//! per-iteration traces.
+
+use super::cpu;
+use super::gpu;
+use super::machine::{CpuMachine, GpuMachine};
+use crate::algo::support::Mode;
+use crate::cost::replay::{replay_kmax, replay_ktruss, IterObservation};
+use crate::graph::Csr;
+use crate::par::Schedule;
+use crate::util::timer::me_per_s;
+
+/// A simulated execution target.
+#[derive(Clone, Copy, Debug)]
+pub enum Device {
+    Cpu(CpuMachine),
+    Gpu(GpuMachine),
+}
+
+impl Device {
+    pub fn name(&self) -> String {
+        match self {
+            Device::Cpu(m) => format!("cpu{}t", m.threads),
+            Device::Gpu(_) => "gpu".to_string(),
+        }
+    }
+}
+
+/// One configuration to estimate.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    pub label: String,
+    pub device: Device,
+    pub mode: Mode,
+    pub schedule: Schedule,
+}
+
+impl SimConfig {
+    pub fn cpu(threads: usize, mode: Mode) -> SimConfig {
+        SimConfig {
+            label: format!("CPU-{}-{}t", short(mode), threads),
+            device: Device::Cpu(CpuMachine::skylake_8160(threads)),
+            mode,
+            schedule: Schedule::Static,
+        }
+    }
+
+    pub fn gpu(mode: Mode) -> SimConfig {
+        SimConfig {
+            label: format!("GPU-{}", short(mode)),
+            device: Device::Gpu(GpuMachine::v100()),
+            mode,
+            schedule: Schedule::Static,
+        }
+    }
+}
+
+fn short(mode: Mode) -> &'static str {
+    match mode {
+        Mode::Coarse => "C",
+        Mode::Fine => "F",
+    }
+}
+
+/// Simulated timing of one full K-truss run under one configuration.
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    pub label: String,
+    /// Total wall time (all iterations, support + prune kernels).
+    pub seconds: f64,
+    /// Convergence iterations.
+    pub iterations: usize,
+    /// Millions of edges (of the input graph) per second.
+    pub me_per_s: f64,
+}
+
+impl SimResult {
+    pub fn time_ms(&self) -> f64 {
+        self.seconds * 1e3
+    }
+}
+
+/// Accumulate one iteration's kernel estimates into `totals`.
+fn accumulate(configs: &[SimConfig], totals: &mut [f64], o: &IterObservation) {
+    for (cfg, acc) in configs.iter().zip(totals.iter_mut()) {
+        let t = match &cfg.device {
+            Device::Cpu(m) => {
+                cpu::support_pass_s(m, o.trace, o.row_ptr, cfg.mode, cfg.schedule)
+                    + cpu::prune_pass_s(m, o.slots)
+            }
+            Device::Gpu(m) => {
+                gpu::support_kernel(m, o.trace, o.row_ptr, cfg.mode).total_s()
+                    + gpu::prune_kernel(m, o.slots).total_s()
+            }
+        };
+        *acc += t;
+    }
+}
+
+/// Simulate a fixed-k K-truss under every configuration. One replay of
+/// the actual algorithm drives all estimates.
+pub fn simulate_ktruss(g: &Csr, k: u32, configs: &[SimConfig]) -> Vec<SimResult> {
+    let mut totals = vec![0.0f64; configs.len()];
+    let (iterations, _) = replay_ktruss(g, k, |o| accumulate(configs, &mut totals, o));
+    finish(g, configs, totals, iterations)
+}
+
+/// Simulate the K_max discovery run (total time across all k levels —
+/// the paper's K=K_max experiment). Returns (kmax, results).
+pub fn simulate_kmax(g: &Csr, configs: &[SimConfig]) -> (u32, Vec<SimResult>) {
+    let mut totals = vec![0.0f64; configs.len()];
+    let (kmax, iterations) = replay_kmax(g, |_, o| accumulate(configs, &mut totals, o));
+    (kmax, finish(g, configs, totals, iterations))
+}
+
+fn finish(g: &Csr, configs: &[SimConfig], totals: Vec<f64>, iterations: usize) -> Vec<SimResult> {
+    configs
+        .iter()
+        .zip(totals)
+        .map(|(cfg, seconds)| SimResult {
+            label: cfg.label.clone(),
+            seconds,
+            iterations,
+            me_per_s: me_per_s(g.nnz(), seconds * 1e3),
+        })
+        .collect()
+}
+
+/// The paper's Table-I configuration set: CPU 48T coarse/fine + GPU
+/// coarse/fine.
+pub fn table1_configs() -> Vec<SimConfig> {
+    vec![
+        SimConfig::cpu(48, Mode::Coarse),
+        SimConfig::cpu(48, Mode::Fine),
+        SimConfig::gpu(Mode::Coarse),
+        SimConfig::gpu(Mode::Fine),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hub_graph() -> Csr {
+        crate::gen::rmat::rmat(
+            3000,
+            15_000,
+            crate::gen::rmat::RmatParams::autonomous_system(),
+            &mut crate::util::Rng::new(7),
+        )
+    }
+
+    #[test]
+    fn table1_shape_on_hub_graph() {
+        let g = hub_graph();
+        let res = simulate_ktruss(&g, 3, &table1_configs());
+        assert_eq!(res.len(), 4);
+        let by = |l: &str| res.iter().find(|r| r.label.contains(l)).unwrap().seconds;
+        let (cpu_c, cpu_f) = (by("CPU-C"), by("CPU-F"));
+        let (gpu_c, gpu_f) = (by("GPU-C"), by("GPU-F"));
+        // the paper's headline shape
+        assert!(cpu_f < cpu_c, "CPU fine should win: {cpu_f} vs {cpu_c}");
+        assert!(gpu_f < gpu_c, "GPU fine should win: {gpu_f} vs {gpu_c}");
+        let gpu_speedup = gpu_c / gpu_f;
+        let cpu_speedup = cpu_c / cpu_f;
+        assert!(
+            gpu_speedup > cpu_speedup,
+            "GPU gain ({gpu_speedup}) must exceed CPU gain ({cpu_speedup})"
+        );
+    }
+
+    #[test]
+    fn all_results_positive_and_iterations_agree() {
+        let g = hub_graph();
+        let res = simulate_ktruss(&g, 3, &table1_configs());
+        let iters = res[0].iterations;
+        for r in &res {
+            assert!(r.seconds > 0.0);
+            assert!(r.me_per_s > 0.0);
+            assert_eq!(r.iterations, iters);
+        }
+    }
+
+    #[test]
+    fn kmax_sim_runs() {
+        let g = crate::gen::community::communities(300, 1500, 15, &mut crate::util::Rng::new(2));
+        let (kmax, res) = simulate_kmax(&g, &table1_configs());
+        assert!(kmax >= 3);
+        assert!(res.iter().all(|r| r.seconds > 0.0));
+        // kmax run does at least as many iterations as fixed k=3
+        let k3 = simulate_ktruss(&g, 3, &table1_configs());
+        assert!(res[0].iterations >= k3[0].iterations);
+    }
+
+    #[test]
+    fn thread_sweep_speedup_profile() {
+        // fig-2 style: fine/coarse ratio per thread count is finite and
+        // positive everywhere
+        let g = hub_graph();
+        for t in [1usize, 8, 48] {
+            let cfgs = vec![SimConfig::cpu(t, Mode::Coarse), SimConfig::cpu(t, Mode::Fine)];
+            let res = simulate_ktruss(&g, 3, &cfgs);
+            let ratio = res[0].seconds / res[1].seconds;
+            assert!(ratio.is_finite() && ratio > 0.0);
+        }
+    }
+}

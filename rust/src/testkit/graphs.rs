@@ -1,0 +1,80 @@
+//! Random-graph strategies and tiny fixture graphs with known truss
+//! structure, shared by the property tests.
+
+use crate::gen::rmat::{rmat, RmatParams};
+use crate::graph::builder::from_sorted_unique;
+use crate::graph::{Csr, Vid};
+use crate::util::Rng;
+
+/// Draw a small random graph from a mixed family (the families stress
+/// different code paths: skew, tails, triangle density, no triangles).
+pub fn arbitrary_graph(rng: &mut Rng) -> Csr {
+    let n = rng.range(4, 200);
+    let max_m = n * (n - 1) / 2;
+    let m = rng.range(1, (4 * n).min(max_m) + 1);
+    match rng.below(4) {
+        0 => crate::gen::erdos_renyi::gnm(n, m, rng),
+        1 => rmat(n.max(8), m, RmatParams::social(), rng),
+        2 => rmat(n.max(8), m, RmatParams::autonomous_system(), rng),
+        _ => crate::gen::community::communities(n.max(8), m, 12, rng),
+    }
+}
+
+/// K_n clique.
+pub fn clique(n: usize) -> Csr {
+    let mut edges: Vec<(Vid, Vid)> = Vec::new();
+    for u in 0..n as Vid {
+        for v in (u + 1)..n as Vid {
+            edges.push((u, v));
+        }
+    }
+    from_sorted_unique(n, &edges)
+}
+
+/// Path graph 0-1-…-n-1 (triangle-free).
+pub fn path(n: usize) -> Csr {
+    let edges: Vec<(Vid, Vid)> = (0..n as Vid - 1).map(|u| (u, u + 1)).collect();
+    from_sorted_unique(n, &edges)
+}
+
+/// The "diamond": two triangles sharing edge (0,2).
+pub fn diamond() -> Csr {
+    from_sorted_unique(4, &[(0, 1), (0, 2), (0, 3), (1, 2), (2, 3)])
+}
+
+/// K5 with a pendant path — kmax 5, path trussness 2.
+pub fn clique_with_tail() -> Csr {
+    let mut edges: Vec<(Vid, Vid)> = Vec::new();
+    for u in 0..5 as Vid {
+        for v in (u + 1)..5 {
+            edges.push((u, v));
+        }
+    }
+    edges.extend([(4, 5), (5, 6)]);
+    from_sorted_unique(7, &edges)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::validate;
+
+    #[test]
+    fn fixtures_are_valid() {
+        for g in [clique(5), path(6), diamond(), clique_with_tail()] {
+            assert!(validate::check(&g).is_ok());
+        }
+        assert_eq!(clique(5).nnz(), 10);
+        assert_eq!(path(6).nnz(), 5);
+    }
+
+    #[test]
+    fn arbitrary_graphs_are_valid() {
+        let mut rng = Rng::new(42);
+        for _ in 0..20 {
+            let g = arbitrary_graph(&mut rng);
+            assert!(validate::check(&g).is_ok());
+            assert!(g.nnz() >= 1);
+        }
+    }
+}

@@ -1,0 +1,9 @@
+//! Mini property-testing kit. The offline crate set has no `proptest`,
+//! so we ship the 10% of it the invariant tests need: seeded generation
+//! of random inputs, a case loop with failure reporting, and greedy
+//! input shrinking for graphs.
+
+pub mod prop;
+pub mod graphs;
+
+pub use prop::{forall, Config};

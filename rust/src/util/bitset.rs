@@ -1,0 +1,147 @@
+//! Fixed-size bitset over `u64` words. Used by graph validation, the
+//! naive reference algorithm's adjacency tests, and generator dedup.
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BitSet {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl BitSet {
+    /// Create a bitset holding `len` bits, all clear.
+    pub fn new(len: usize) -> BitSet {
+        BitSet { words: vec![0; len.div_ceil(64)], len }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize) {
+        debug_assert!(i < self.len);
+        self.words[i >> 6] |= 1u64 << (i & 63);
+    }
+
+    #[inline]
+    pub fn clear(&mut self, i: usize) {
+        debug_assert!(i < self.len);
+        self.words[i >> 6] &= !(1u64 << (i & 63));
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        (self.words[i >> 6] >> (i & 63)) & 1 == 1
+    }
+
+    /// Set bit `i`, returning whether it was previously clear.
+    #[inline]
+    pub fn insert(&mut self, i: usize) -> bool {
+        let was = self.get(i);
+        self.set(i);
+        !was
+    }
+
+    /// Clear all bits.
+    pub fn reset(&mut self) {
+        self.words.fill(0);
+    }
+
+    /// Number of set bits.
+    pub fn count(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Iterate over indices of set bits in ascending order.
+    pub fn iter_ones(&self) -> impl Iterator<Item = usize> + '_ {
+        self.words.iter().enumerate().flat_map(|(wi, &w)| {
+            let mut bits = w;
+            std::iter::from_fn(move || {
+                if bits == 0 {
+                    None
+                } else {
+                    let b = bits.trailing_zeros() as usize;
+                    bits &= bits - 1;
+                    Some(wi * 64 + b)
+                }
+            })
+        })
+    }
+
+    /// Population count of the intersection with another bitset of the
+    /// same length (used for dense triangle counting checks).
+    pub fn intersect_count(&self, other: &BitSet) -> usize {
+        debug_assert_eq!(self.len, other.len);
+        self.words
+            .iter()
+            .zip(other.words.iter())
+            .map(|(a, b)| (a & b).count_ones() as usize)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_clear() {
+        let mut b = BitSet::new(130);
+        assert!(!b.get(0));
+        b.set(0);
+        b.set(64);
+        b.set(129);
+        assert!(b.get(0) && b.get(64) && b.get(129));
+        assert!(!b.get(1) && !b.get(63) && !b.get(128));
+        b.clear(64);
+        assert!(!b.get(64));
+        assert_eq!(b.count(), 2);
+    }
+
+    #[test]
+    fn insert_reports_novelty() {
+        let mut b = BitSet::new(10);
+        assert!(b.insert(3));
+        assert!(!b.insert(3));
+    }
+
+    #[test]
+    fn iter_ones_ascending() {
+        let mut b = BitSet::new(200);
+        for i in [0, 5, 63, 64, 65, 127, 128, 199] {
+            b.set(i);
+        }
+        let ones: Vec<usize> = b.iter_ones().collect();
+        assert_eq!(ones, vec![0, 5, 63, 64, 65, 127, 128, 199]);
+    }
+
+    #[test]
+    fn intersect_count_works() {
+        let mut a = BitSet::new(100);
+        let mut b = BitSet::new(100);
+        for i in 0..50 {
+            a.set(i);
+        }
+        for i in 25..75 {
+            b.set(i);
+        }
+        assert_eq!(a.intersect_count(&b), 25);
+    }
+
+    #[test]
+    fn reset_clears_everything() {
+        let mut b = BitSet::new(77);
+        for i in 0..77 {
+            b.set(i);
+        }
+        b.reset();
+        assert_eq!(b.count(), 0);
+    }
+}

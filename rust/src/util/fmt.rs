@@ -1,0 +1,149 @@
+//! Human-readable formatting helpers for CLI/bench reports: counts with
+//! k/M suffixes (matching the paper's "Vertices (k)" column style),
+//! fixed-width tables, and simple markdown emission.
+
+/// Format a count the way Table I does: `5.2k`, `3774.8k`, plain below 1000.
+pub fn count_k(n: usize) -> String {
+    if n < 1000 {
+        format!("{n}")
+    } else {
+        format!("{:.1}k", n as f64 / 1000.0)
+    }
+}
+
+/// Format milliseconds with 3 decimal places (Table I style).
+pub fn ms(x: f64) -> String {
+    format!("{x:.3}")
+}
+
+/// Format ME/s with 3 decimal places (Table I style).
+pub fn mes(x: f64) -> String {
+    format!("{x:.3}")
+}
+
+/// Format a speedup with 2 decimals and an `x` suffix.
+pub fn speedup(x: f64) -> String {
+    format!("{x:.2}x")
+}
+
+/// A minimal fixed-column text table builder for bench reports.
+#[derive(Debug, Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new<S: Into<String>>(header: Vec<S>) -> Table {
+        Table { header: header.into_iter().map(Into::into).collect(), rows: Vec::new() }
+    }
+
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) -> &mut Self {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        w
+    }
+
+    /// Render as an aligned plain-text table.
+    pub fn render(&self) -> String {
+        let w = self.widths();
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], w: &[usize]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>width$}", c, width = w[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.header, &w));
+        out.push('\n');
+        out.push_str(&"-".repeat(w.iter().sum::<usize>() + 2 * (w.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &w));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Render as GitHub-flavoured markdown (for EXPERIMENTS.md).
+    pub fn render_markdown(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("| {} |\n", self.header.join(" | ")));
+        out.push_str(&format!(
+            "|{}\n",
+            self.header.iter().map(|_| "---|").collect::<String>()
+        ));
+        for row in &self.rows {
+            out.push_str(&format!("| {} |\n", row.join(" | ")));
+        }
+        out
+    }
+
+    /// Render as CSV.
+    pub fn render_csv(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&self.header.join(","));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn count_k_style() {
+        assert_eq!(count_k(999), "999");
+        assert_eq!(count_k(5242), "5.2k");
+        assert_eq!(count_k(3_774_768), "3774.8k");
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(vec!["graph", "ms"]);
+        t.row(vec!["ca-GrQc", "1.051"]);
+        t.row(vec!["p2p-Gnutella08", "0.230"]);
+        let s = t.render();
+        assert!(s.contains("ca-GrQc"));
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert_eq!(lines[2].len(), lines[3].len());
+    }
+
+    #[test]
+    fn markdown_and_csv() {
+        let mut t = Table::new(vec!["a", "b"]);
+        t.row(vec!["1", "2"]);
+        assert_eq!(t.render_csv(), "a,b\n1,2\n");
+        assert!(t.render_markdown().starts_with("| a | b |\n|---|---|\n"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn row_width_checked() {
+        let mut t = Table::new(vec!["a", "b"]);
+        t.row(vec!["1"]);
+    }
+}

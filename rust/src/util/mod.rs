@@ -1,0 +1,12 @@
+//! Small shared utilities: deterministic RNG, statistics, timers,
+//! bitsets, and report formatting. Everything here is dependency-free.
+
+pub mod bitset;
+pub mod fmt;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+pub use bitset::BitSet;
+pub use rng::Rng;
+pub use timer::Timer;

@@ -1,0 +1,163 @@
+//! Small statistics helpers used by the bench harness and simulators:
+//! geometric mean (the paper reports geomean speedups), percentiles,
+//! histogram summaries of task-size distributions.
+
+/// Geometric mean of strictly positive samples. Returns `None` when the
+/// input is empty or contains a non-positive value.
+pub fn geomean(xs: &[f64]) -> Option<f64> {
+    if xs.is_empty() {
+        return None;
+    }
+    let mut acc = 0.0f64;
+    for &x in xs {
+        if x <= 0.0 || !x.is_finite() {
+            return None;
+        }
+        acc += x.ln();
+    }
+    Some((acc / xs.len() as f64).exp())
+}
+
+/// Arithmetic mean; `None` on empty input.
+pub fn mean(xs: &[f64]) -> Option<f64> {
+    if xs.is_empty() {
+        None
+    } else {
+        Some(xs.iter().sum::<f64>() / xs.len() as f64)
+    }
+}
+
+/// Population standard deviation; `None` on empty input.
+pub fn stddev(xs: &[f64]) -> Option<f64> {
+    let m = mean(xs)?;
+    let var = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64;
+    Some(var.sqrt())
+}
+
+/// p-th percentile (0..=100) by linear interpolation on sorted data.
+pub fn percentile(xs: &[f64], p: f64) -> Option<f64> {
+    if xs.is_empty() || !(0.0..=100.0).contains(&p) {
+        return None;
+    }
+    let mut sorted: Vec<f64> = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        Some(sorted[lo])
+    } else {
+        let frac = rank - lo as f64;
+        Some(sorted[lo] * (1.0 - frac) + sorted[hi] * frac)
+    }
+}
+
+/// Coefficient of variation (stddev / mean) — the imbalance proxy used in
+/// task-distribution reports.
+pub fn cv(xs: &[f64]) -> Option<f64> {
+    let m = mean(xs)?;
+    if m == 0.0 {
+        return None;
+    }
+    Some(stddev(xs)? / m)
+}
+
+/// Summary of a sample of task sizes / timings.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub min: f64,
+    pub max: f64,
+    pub mean: f64,
+    pub stddev: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Option<Summary> {
+        if xs.is_empty() {
+            return None;
+        }
+        Some(Summary {
+            n: xs.len(),
+            min: xs.iter().cloned().fold(f64::INFINITY, f64::min),
+            max: xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+            mean: mean(xs)?,
+            stddev: stddev(xs)?,
+            p50: percentile(xs, 50.0)?,
+            p95: percentile(xs, 95.0)?,
+            p99: percentile(xs, 99.0)?,
+        })
+    }
+
+    /// max/mean — the classic load-imbalance factor over per-worker loads.
+    pub fn imbalance(&self) -> f64 {
+        if self.mean == 0.0 {
+            1.0
+        } else {
+            self.max / self.mean
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geomean_basic() {
+        let g = geomean(&[1.0, 4.0]).unwrap();
+        assert!((g - 2.0).abs() < 1e-12);
+        assert_eq!(geomean(&[]), None);
+        assert_eq!(geomean(&[1.0, 0.0]), None);
+        assert_eq!(geomean(&[1.0, -2.0]), None);
+    }
+
+    #[test]
+    fn geomean_matches_paper_style_speedups() {
+        // geomean of reciprocal pair is 1.0
+        let g = geomean(&[2.0, 0.5]).unwrap();
+        assert!((g - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_endpoints() {
+        let xs = [5.0, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), Some(1.0));
+        assert_eq!(percentile(&xs, 100.0), Some(5.0));
+        assert_eq!(percentile(&xs, 50.0), Some(3.0));
+        assert_eq!(percentile(&xs, 101.0), None);
+        assert_eq!(percentile(&[], 50.0), None);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [0.0, 10.0];
+        assert_eq!(percentile(&xs, 25.0), Some(2.5));
+    }
+
+    #[test]
+    fn summary_and_imbalance() {
+        let s = Summary::of(&[1.0, 1.0, 1.0, 5.0]).unwrap();
+        assert_eq!(s.n, 4);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+        assert!((s.imbalance() - 2.5).abs() < 1e-12);
+        assert!(Summary::of(&[]).is_none());
+    }
+
+    #[test]
+    fn cv_zero_for_constant() {
+        assert!(cv(&[3.0, 3.0, 3.0]).unwrap() < 1e-12);
+    }
+
+    #[test]
+    fn stddev_known_value() {
+        // population stddev of [2,4,4,4,5,5,7,9] is 2
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((stddev(&xs).unwrap() - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,95 @@
+//! Wall-clock timing helpers for the real (non-simulated) measurement
+//! paths: single-thread calibration runs and the §Perf micro-benchmarks.
+
+use std::time::{Duration, Instant};
+
+/// A simple scoped stopwatch.
+#[derive(Debug)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Timer {
+        Timer { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed().as_secs_f64() * 1e3
+    }
+
+    pub fn restart(&mut self) -> Duration {
+        let e = self.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Run `f` once and return (result, elapsed ms).
+pub fn time_ms<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = Timer::start();
+    let out = f();
+    (out, t.elapsed_ms())
+}
+
+/// Repeat `f` `trials` times (after `warmup` unmeasured runs) and return
+/// the per-trial milliseconds. The paper reports the mean of 10 trials.
+pub fn bench_ms<T>(warmup: usize, trials: usize, mut f: impl FnMut() -> T) -> Vec<f64> {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    (0..trials)
+        .map(|_| {
+            let t = Timer::start();
+            std::hint::black_box(f());
+            t.elapsed_ms()
+        })
+        .collect()
+}
+
+/// Millions of edges processed per second — the paper's metric
+/// (edges = nnz of the upper-triangular matrix; time in milliseconds).
+pub fn me_per_s(edges: usize, time_ms: f64) -> f64 {
+    if time_ms <= 0.0 {
+        return f64::INFINITY;
+    }
+    edges as f64 / 1.0e6 / (time_ms / 1.0e3)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_advances() {
+        let t = Timer::start();
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(t.elapsed_ms() >= 1.0);
+    }
+
+    #[test]
+    fn time_ms_returns_value() {
+        let (v, ms) = time_ms(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(ms >= 0.0);
+    }
+
+    #[test]
+    fn bench_collects_trials() {
+        let xs = bench_ms(1, 5, || 1 + 1);
+        assert_eq!(xs.len(), 5);
+    }
+
+    #[test]
+    fn me_per_s_known() {
+        // 1M edges in 1000 ms = 1 ME/s
+        assert!((me_per_s(1_000_000, 1000.0) - 1.0).abs() < 1e-12);
+        // paper row: ca-GrQc 14.5k edges, 1.051ms -> 13.8 ME/s
+        let v = me_per_s(14_484, 1.051);
+        assert!((v - 13.78).abs() < 0.1, "{v}");
+    }
+}

@@ -1,0 +1,101 @@
+//! End-to-end CLI tests: drive the actual `ktruss` binary the way a
+//! user would (cargo exposes the built binary path via CARGO_BIN_EXE_*).
+
+use std::process::Command;
+
+fn ktruss(args: &[&str]) -> (String, String, bool) {
+    let out = Command::new(env!("CARGO_BIN_EXE_ktruss"))
+        .args(args)
+        .output()
+        .expect("run ktruss binary");
+    (
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+        out.status.success(),
+    )
+}
+
+#[test]
+fn help_lists_commands() {
+    let (stdout, _, ok) = ktruss(&["help"]);
+    assert!(ok);
+    for cmd in ["run", "kmax", "decompose", "generate", "suite", "bench", "serve"] {
+        assert!(stdout.contains(cmd), "help missing {cmd}");
+    }
+}
+
+#[test]
+fn unknown_command_exits_nonzero() {
+    let (_, _, ok) = ktruss(&["frobnicate"]);
+    assert!(!ok);
+}
+
+#[test]
+fn unknown_flag_is_rejected() {
+    let (_, stderr, ok) = ktruss(&["run", "--graph", "ca-GrQc", "--scale", "0.05", "--tpyo", "x"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown flag"), "stderr: {stderr}");
+}
+
+#[test]
+fn run_on_suite_graph_reports_truss() {
+    let (stdout, stderr, ok) =
+        ktruss(&["run", "--graph", "p2p-Gnutella08", "--k", "3", "--scale", "0.05"]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("3-truss:"), "stdout: {stdout}");
+    assert!(stdout.contains("iterations"));
+}
+
+#[test]
+fn kmax_and_decompose_agree_via_cli() {
+    let (km_out, _, ok1) = ktruss(&["kmax", "--graph", "ca-GrQc", "--scale", "0.05"]);
+    let (de_out, _, ok2) = ktruss(&["decompose", "--graph", "ca-GrQc", "--scale", "0.05"]);
+    assert!(ok1 && ok2);
+    let grab = |s: &str| -> u32 {
+        s.lines()
+            .find(|l| l.contains("kmax ="))
+            .and_then(|l| l.split('=').nth(1))
+            .and_then(|v| v.trim().split(|c: char| !c.is_ascii_digit()).next())
+            .and_then(|v| v.parse().ok())
+            .expect("kmax value")
+    };
+    assert_eq!(grab(&km_out), grab(&de_out));
+}
+
+#[test]
+fn generate_writes_loadable_file() {
+    let dir = std::env::temp_dir().join(format!("ktruss-cli-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("g.tsv");
+    let (_, stderr, ok) = ktruss(&[
+        "generate",
+        "--graph",
+        "as20000102",
+        "--scale",
+        "0.05",
+        "--out",
+        path.to_str().unwrap(),
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    // round-trip through `run --graph <file>`
+    let (stdout, stderr, ok) = ktruss(&["run", "--graph", path.to_str().unwrap(), "--k", "3"]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("3-truss:"));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn run_rejects_missing_graph_flag() {
+    let (_, stderr, ok) = ktruss(&["run"]);
+    assert!(!ok);
+    assert!(stderr.contains("--graph"), "stderr: {stderr}");
+}
+
+#[test]
+fn suite_lists_all_fifty() {
+    let (stdout, _, ok) = ktruss(&["suite"]);
+    assert!(ok);
+    assert!(stdout.contains("50"));
+    assert!(stdout.contains("cit-Patents"));
+    assert!(stdout.contains("roadNet-CA"));
+}

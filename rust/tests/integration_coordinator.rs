@@ -1,0 +1,126 @@
+//! Integration: coordinator service under concurrent load — many
+//! submitters, mixed job kinds and graph sizes, engine routing, and
+//! metrics accounting.
+
+use ktruss::algo::support::Mode;
+use ktruss::coordinator::{Coordinator, JobKind, JobOutput, ServiceConfig};
+use ktruss::util::Rng;
+use std::sync::Arc;
+
+fn service(pool: usize) -> Coordinator {
+    Coordinator::start(ServiceConfig {
+        pool_workers: pool,
+        enable_dense: false, // keep this test independent of artifacts
+        ..Default::default()
+    })
+}
+
+#[test]
+fn concurrent_submitters_all_jobs_complete_correctly() {
+    let c = Arc::new(service(2));
+    let mut handles = Vec::new();
+    for t in 0..4u64 {
+        let c = Arc::clone(&c);
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(t);
+            for i in 0..8 {
+                let n = rng.range(30, 200);
+                let m = (2 * n).min(n * (n - 1) / 2);
+                let g = Arc::new(ktruss::gen::erdos_renyi::gnm(n, m, &mut rng));
+                let want_triangles = ktruss::algo::triangle::count_triangles(&g);
+                let kind = if i % 2 == 0 {
+                    JobKind::Triangles
+                } else {
+                    JobKind::Ktruss { k: 3, mode: Mode::Fine }
+                };
+                let ticket = c.submit(Arc::clone(&g), kind);
+                let r = ticket.wait();
+                match r.output.expect("job ok") {
+                    JobOutput::Triangles { count } => assert_eq!(count, want_triangles),
+                    JobOutput::Ktruss { truss_edges, .. } => {
+                        let want = ktruss::algo::ktruss::ktruss(&g, 3, Mode::Fine).truss.nnz();
+                        assert_eq!(truss_edges, want);
+                    }
+                    other => panic!("{other:?}"),
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let (done, failed, mean_ms) = c.metrics.summary();
+    assert_eq!(done, 32);
+    assert_eq!(failed, 0);
+    assert!(mean_ms >= 0.0);
+    c.shutdown();
+}
+
+#[test]
+fn mixed_job_kinds_roundtrip() {
+    let c = service(2);
+    let g = Arc::new(ktruss::testkit::graphs::clique_with_tail());
+    let kt = c.submit(Arc::clone(&g), JobKind::Ktruss { k: 5, mode: Mode::Coarse }).wait();
+    match kt.output.unwrap() {
+        JobOutput::Ktruss { truss_edges, edges, .. } => {
+            assert_eq!(truss_edges, 10); // K5 survives
+            assert_eq!(edges.len(), 10);
+        }
+        other => panic!("{other:?}"),
+    }
+    let km = c.submit(Arc::clone(&g), JobKind::Kmax).wait();
+    match km.output.unwrap() {
+        JobOutput::Kmax { kmax, truss_edges } => {
+            assert_eq!(kmax, 5);
+            assert_eq!(truss_edges, 10);
+        }
+        other => panic!("{other:?}"),
+    }
+    let d = c.submit(Arc::clone(&g), JobKind::Decompose).wait();
+    match d.output.unwrap() {
+        JobOutput::Decompose { kmax, histogram } => {
+            assert_eq!(kmax, 5);
+            let total: usize = histogram.iter().map(|&(_, n)| n).sum();
+            assert_eq!(total, g.nnz());
+        }
+        other => panic!("{other:?}"),
+    }
+    c.shutdown();
+}
+
+#[test]
+fn tickets_can_be_polled() {
+    let c = service(1);
+    let g = Arc::new(ktruss::gen::erdos_renyi::gnm(500, 2000, &mut Rng::new(9)));
+    let ticket = c.submit(g, JobKind::Kmax);
+    // poll until done (bounded)
+    let mut result = None;
+    for _ in 0..10_000 {
+        if let Some(r) = ticket.try_get() {
+            result = Some(r);
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_micros(200));
+    }
+    assert!(result.expect("polled result").output.is_ok());
+    c.shutdown();
+}
+
+#[test]
+fn throughput_batching_many_small_jobs() {
+    let c = service(2);
+    let mut rng = Rng::new(77);
+    let tickets: Vec<_> = (0..64)
+        .map(|_| {
+            let n = rng.range(20, 60);
+            let g = Arc::new(ktruss::gen::erdos_renyi::gnm(n, n, &mut rng));
+            c.submit(g, JobKind::Triangles)
+        })
+        .collect();
+    for t in tickets {
+        assert!(t.wait().output.is_ok());
+    }
+    let (done, failed, _) = c.metrics.summary();
+    assert_eq!((done, failed), (64, 0));
+    c.shutdown();
+}

@@ -1,0 +1,110 @@
+//! Integration: the full sparse pipeline on suite replicas — generator
+//! → CSR → zero-terminated form → eager K-truss (both granularities,
+//! sequential and pooled) → oracle cross-checks.
+
+use ktruss::algo::ktruss::ktruss;
+use ktruss::algo::support::Mode;
+use ktruss::algo::{kmax, reference, triangle};
+use ktruss::gen::suite;
+use ktruss::graph::validate;
+use ktruss::par::{ktruss_par, Pool, Schedule};
+
+const SCALE: f64 = 0.04;
+
+#[test]
+fn suite_replicas_all_families_run_clean() {
+    // one representative per family
+    for name in [
+        "ca-GrQc",          // Collab
+        "p2p-Gnutella08",   // P2p
+        "as20000102",       // AutonomousSystem
+        "soc-Epinions1",    // Social
+        "amazon0302",       // Copurchase
+        "roadNet-PA",       // Road
+    ] {
+        let spec = suite::by_name(name).unwrap();
+        let g = suite::generate(spec, SCALE);
+        validate::check(&g).unwrap_or_else(|e| panic!("{name}: {e}"));
+        let r3 = ktruss(&g, 3, Mode::Fine);
+        let rc = ktruss(&g, 3, Mode::Coarse);
+        assert_eq!(r3.truss, rc.truss, "{name}: modes disagree");
+        // truss edge supports are internally consistent
+        if r3.truss.nnz() > 0 {
+            let sup = triangle::edge_supports_naive(&r3.truss);
+            assert!(sup.iter().all(|&s| s >= 1), "{name}: 3-truss edge without triangle");
+        }
+    }
+}
+
+#[test]
+fn pooled_matches_sequential_on_replicas() {
+    let pool = Pool::new(4);
+    for name in ["oregon1_010331", "ca-HepTh", "p2p-Gnutella04"] {
+        let spec = suite::by_name(name).unwrap();
+        let g = suite::generate(spec, SCALE);
+        for k in [3u32, 4] {
+            let seq = ktruss(&g, k, Mode::Fine);
+            for mode in [Mode::Coarse, Mode::Fine] {
+                for sched in [Schedule::Static, Schedule::Dynamic { chunk: 128 }] {
+                    let par = ktruss_par(&g, k, &pool, mode, sched);
+                    assert_eq!(par.truss, seq.truss, "{name} k={k} {mode} {sched:?}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn naive_oracle_agrees_on_small_replicas() {
+    for name in ["ca-GrQc", "as20000102"] {
+        let spec = suite::by_name(name).unwrap();
+        let g = suite::generate(spec, 0.02);
+        for k in [3u32, 4, 5] {
+            let eager: Vec<_> = ktruss(&g, k, Mode::Fine).truss.edges().collect();
+            let naive = reference::ktruss_naive(&g, k);
+            assert_eq!(eager, naive, "{name} k={k}");
+        }
+    }
+}
+
+#[test]
+fn kmax_values_are_family_plausible() {
+    // collaboration replicas are clique-rich (high kmax); road replicas
+    // are triangle-poor (kmax <= 4); gnutella is ER-like (kmax <= 5)
+    let k = |name: &str, scale: f64| {
+        let g = suite::generate(suite::by_name(name).unwrap(), scale);
+        kmax::kmax(&g).kmax
+    };
+    let collab = k("ca-GrQc", 0.05);
+    let road = k("roadNet-PA", 0.05);
+    let p2p = k("p2p-Gnutella08", 0.05);
+    assert!(collab >= 8, "collab kmax {collab}");
+    assert!(road <= 4, "road kmax {road}");
+    assert!(p2p <= 5, "p2p kmax {p2p}");
+}
+
+#[test]
+fn iteration_counts_decrease_edges_monotonically() {
+    let g = suite::generate(suite::by_name("oregon2_010331").unwrap(), SCALE);
+    let r = ktruss(&g, 4, Mode::Fine);
+    assert_eq!(r.stats.len(), r.iterations);
+    for w in r.stats.windows(2) {
+        assert!(w[1].live_edges < w[0].live_edges, "live edges must shrink");
+        assert_eq!(w[1].live_edges, w[0].live_edges - w[0].removed);
+    }
+    // last iteration removed nothing (convergence) unless truss emptied
+    let last = r.stats.last().unwrap();
+    assert!(last.removed == 0 || last.live_edges == last.removed);
+}
+
+#[test]
+fn graph_cache_roundtrip_at_scale() {
+    let dir = std::env::temp_dir().join(format!("ktruss-cache-{}", std::process::id()));
+    std::env::set_var("KTRUSS_GRAPH_CACHE", &dir);
+    let spec = suite::by_name("ca-HepTh").unwrap();
+    let a = suite::load(spec, 0.03).unwrap(); // generates + writes
+    let b = suite::load(spec, 0.03).unwrap(); // reads back
+    assert_eq!(a, b);
+    std::env::remove_var("KTRUSS_GRAPH_CACHE");
+    let _ = std::fs::remove_dir_all(&dir);
+}

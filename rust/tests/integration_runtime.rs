@@ -1,0 +1,102 @@
+//! Integration: the AOT bridge end-to-end — HLO text artifacts produced
+//! by `make artifacts` (jax + Pallas, interpret-mode) loaded and
+//! executed through the PJRT CPU client, validated against the sparse
+//! rust path. This is the three-layer composition test.
+
+use ktruss::algo::ktruss::{ktruss, Mode};
+use ktruss::algo::triangle;
+use ktruss::graph::builder::from_sorted_unique;
+use ktruss::graph::Csr;
+use ktruss::runtime::DenseEngine;
+use ktruss::util::Rng;
+
+fn engine() -> DenseEngine {
+    DenseEngine::new().expect("artifacts missing — run `make artifacts` first")
+}
+
+fn random_graph(n: usize, m: usize, seed: u64) -> Csr {
+    ktruss::gen::rmat::rmat(n, m, ktruss::gen::rmat::RmatParams::social(), &mut Rng::new(seed))
+}
+
+#[test]
+fn dense_supports_match_sparse_on_diamond() {
+    let g = from_sorted_unique(4, &[(0, 1), (0, 2), (0, 3), (1, 2), (2, 3)]);
+    let sup = engine().supports(&g).expect("dense supports");
+    assert_eq!(sup, vec![1, 2, 1, 1, 1]);
+}
+
+#[test]
+fn dense_supports_match_naive_on_random_graphs() {
+    let eng = engine();
+    for seed in [1u64, 2, 3] {
+        let g = random_graph(120, 800, seed);
+        let dense = eng.supports(&g).expect("dense supports");
+        let naive = triangle::edge_supports_naive(&g);
+        assert_eq!(dense, naive, "seed={seed}");
+    }
+}
+
+#[test]
+fn dense_ktruss_matches_sparse_across_k() {
+    let eng = engine();
+    let g = random_graph(100, 600, 11);
+    for k in [3u32, 4, 5, 7] {
+        let (dense_truss, iters) = eng.ktruss(&g, k).expect("dense ktruss");
+        let sparse = ktruss(&g, k, Mode::Fine);
+        assert_eq!(dense_truss, sparse.truss, "k={k}");
+        assert!(iters >= 1);
+    }
+}
+
+#[test]
+fn dense_ktruss_on_clique_with_tail() {
+    let eng = engine();
+    let mut edges = Vec::new();
+    for u in 0..6u32 {
+        for v in (u + 1)..6 {
+            edges.push((u, v));
+        }
+    }
+    edges.extend([(5, 6), (6, 7), (7, 8)]);
+    let g = from_sorted_unique(9, &edges);
+    let (truss, _) = eng.ktruss(&g, 6).unwrap();
+    assert_eq!(truss.nnz(), 15); // K6 survives, tail dies
+}
+
+#[test]
+fn dense_engine_rejects_oversized_graph() {
+    let eng = engine();
+    let big = ktruss::gen::erdos_renyi::gnm(eng.max_n() + 1, 500, &mut Rng::new(5));
+    assert!(eng.supports(&big).is_err());
+    assert!(eng.ktruss(&big, 3).is_err());
+}
+
+#[test]
+fn dense_picks_block_for_mid_size_graph() {
+    // between 128 and 256 -> must use the 256 block
+    let eng = engine();
+    if eng.max_n() < 256 {
+        return;
+    }
+    let g = random_graph(200, 1200, 21);
+    let dense = eng.supports(&g).expect("dense supports");
+    let naive = triangle::edge_supports_naive(&g);
+    assert_eq!(dense, naive);
+}
+
+#[test]
+fn coordinator_routes_small_jobs_to_dense() {
+    use ktruss::coordinator::{Coordinator, JobKind, JobOutput, ServiceConfig};
+    use std::sync::Arc;
+    let c = Coordinator::start(ServiceConfig { enable_dense: true, ..Default::default() });
+    let g = Arc::new(random_graph(90, 500, 31));
+    let sparse_want = ktruss(&g, 3, Mode::Fine);
+    let t = c.submit(Arc::clone(&g), JobKind::Ktruss { k: 3, mode: Mode::Fine });
+    let r = t.wait();
+    assert_eq!(r.engine, ktruss::coordinator::Engine::DenseXla, "expected dense routing");
+    match r.output.unwrap() {
+        JobOutput::Ktruss { truss_edges, .. } => assert_eq!(truss_edges, sparse_want.truss.nnz()),
+        other => panic!("{other:?}"),
+    }
+    c.shutdown();
+}

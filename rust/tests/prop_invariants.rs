@@ -1,0 +1,257 @@
+//! Property-based invariant tests over random graphs (testkit::forall
+//! stands in for proptest, which is unavailable offline).
+
+use ktruss::algo::ktruss::ktruss;
+use ktruss::algo::support::{compute_supports_seq, Mode};
+use ktruss::algo::{decompose, kmax, reference, triangle};
+use ktruss::graph::{validate, Csr, ZCsr};
+use ktruss::testkit::graphs::arbitrary_graph;
+use ktruss::testkit::{forall, Config};
+use std::collections::HashSet;
+
+/// Every edge of the k-truss must close ≥ k-2 triangles *within the
+/// truss* — the defining property, checked on the output subgraph.
+#[test]
+fn prop_truss_edges_have_min_support() {
+    forall(Config::cases(40), arbitrary_graph, |g| {
+        for k in [3u32, 4, 5] {
+            let truss = ktruss(g, k, Mode::Fine).truss;
+            if truss.nnz() == 0 {
+                continue;
+            }
+            let sup = triangle::edge_supports_naive(&truss);
+            if let Some(&bad) = sup.iter().find(|&&s| s < k - 2) {
+                return Err(format!("k={k}: edge with support {bad} survived"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// truss(k+1) ⊆ truss(k) (nesting).
+#[test]
+fn prop_truss_nesting() {
+    forall(Config::cases(40), arbitrary_graph, |g| {
+        let mut prev: Option<HashSet<(u32, u32)>> = None;
+        for k in [3u32, 4, 5, 6] {
+            let cur: HashSet<(u32, u32)> = ktruss(g, k, Mode::Coarse).truss.edges().collect();
+            if let Some(p) = &prev {
+                if !cur.is_subset(p) {
+                    return Err(format!("truss({k}) not nested in truss({})", k - 1));
+                }
+            }
+            prev = Some(cur);
+        }
+        Ok(())
+    });
+}
+
+/// Coarse, fine and the independent naive oracle agree.
+#[test]
+fn prop_modes_and_oracle_agree() {
+    forall(Config::cases(30), arbitrary_graph, |g| {
+        for k in [3u32, 5] {
+            let coarse: Vec<_> = ktruss(g, k, Mode::Coarse).truss.edges().collect();
+            let fine: Vec<_> = ktruss(g, k, Mode::Fine).truss.edges().collect();
+            let naive = reference::ktruss_naive(g, k);
+            if coarse != fine {
+                return Err(format!("k={k}: coarse != fine"));
+            }
+            if coarse != naive {
+                return Err(format!("k={k}: eager != naive oracle"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The k-truss is a fixpoint: running k-truss on its own output changes
+/// nothing.
+#[test]
+fn prop_truss_is_fixpoint() {
+    forall(Config::cases(30), arbitrary_graph, |g| {
+        let once = ktruss(g, 4, Mode::Fine).truss;
+        let twice = ktruss(&once, 4, Mode::Fine).truss;
+        if once != twice {
+            return Err("k-truss not a fixpoint".into());
+        }
+        Ok(())
+    });
+}
+
+/// Support sum is exactly 3× the triangle count, on every graph.
+#[test]
+fn prop_support_sum_is_three_triangles() {
+    forall(Config::cases(40), arbitrary_graph, |g| {
+        let z = ZCsr::from_csr(g);
+        let mut s = Vec::new();
+        compute_supports_seq(&z, &mut s);
+        let total: u64 = s.iter().map(|&x| x as u64).sum();
+        let tri = triangle::count_triangles(g);
+        if total != 3 * tri {
+            return Err(format!("sum(S)={total} != 3*{tri}"));
+        }
+        Ok(())
+    });
+}
+
+/// The zero-terminated working form stays structurally valid after the
+/// full convergence loop (compaction invariant).
+#[test]
+fn prop_zcsr_valid_after_convergence() {
+    forall(Config::cases(30), arbitrary_graph, |g| {
+        let mut z = ZCsr::from_csr(g);
+        let mut s = Vec::new();
+        ktruss::algo::ktruss::run_to_convergence(&mut z, &mut s, 4);
+        validate::check_zcsr(&z).map_err(|e| format!("invalid zcsr: {e}"))?;
+        validate::check(&z.to_csr()).map_err(|e| format!("invalid csr: {e}"))?;
+        Ok(())
+    });
+}
+
+/// kmax from the incremental search equals the decomposition's kmax,
+/// and both bound every edge's trussness.
+#[test]
+fn prop_kmax_consistency() {
+    forall(Config::cases(20), arbitrary_graph, |g| {
+        let km = kmax::kmax(g);
+        let d = decompose::decompose(g);
+        if g.nnz() > 0 && km.kmax != d.kmax {
+            return Err(format!("kmax {} != decompose kmax {}", km.kmax, d.kmax));
+        }
+        if let Some((&e, &t)) = d.trussness.iter().find(|&(_, &t)| t > d.kmax) {
+            return Err(format!("edge {e:?} trussness {t} exceeds kmax"));
+        }
+        Ok(())
+    });
+}
+
+/// IO round-trips preserve the graph exactly (TSV and binary).
+#[test]
+fn prop_io_roundtrip() {
+    forall(Config::cases(25), arbitrary_graph, |g| {
+        let mut tsv = Vec::new();
+        ktruss::graph::io::write_edge_list(g, &mut tsv).map_err(|e| e.to_string())?;
+        let g2 = ktruss::graph::io::read_edge_list(tsv.as_slice()).map_err(|e| e.to_string())?;
+        // vertex-id compaction may shrink isolated tail vertices, so
+        // compare edges, not the struct
+        let a: Vec<_> = g.edges().collect();
+        let b: Vec<_> = g2.edges().collect();
+        // relabeling is identity when ids are dense; compare counts +
+        // triangle census as a structure fingerprint
+        if a.len() != b.len() {
+            return Err("edge count changed through tsv".into());
+        }
+        if triangle::count_triangles(g) != triangle::count_triangles(&g2) {
+            return Err("triangle census changed through tsv".into());
+        }
+        let mut bin = Vec::new();
+        ktruss::graph::io::write_binary(g, &mut bin).map_err(|e| e.to_string())?;
+        let g3 = ktruss::graph::io::read_binary(bin.as_slice()).map_err(|e| e.to_string())?;
+        if &g3 != g {
+            return Err("binary roundtrip not identical".into());
+        }
+        Ok(())
+    });
+}
+
+/// Relabeling vertices never changes truss sizes or kmax (isomorphism
+/// invariance of the whole pipeline).
+#[test]
+fn prop_relabel_invariance() {
+    forall(Config::cases(20), arbitrary_graph, |g| {
+        let r = ktruss::graph::builder::relabel_by_degree(g);
+        for k in [3u32, 4] {
+            let a = ktruss(g, k, Mode::Fine).truss.nnz();
+            let b = ktruss(&r, k, Mode::Fine).truss.nnz();
+            if a != b {
+                return Err(format!("k={k}: truss size {a} vs {b} after relabel"));
+            }
+        }
+        if kmax::kmax(g).kmax != kmax::kmax(&r).kmax {
+            return Err("kmax changed under relabeling".into());
+        }
+        Ok(())
+    });
+}
+
+/// Simulated makespan obeys its bounds: critical path ≤ makespan and
+/// makespan ≤ total work (both schedules), for every graph.
+#[test]
+fn prop_makespan_bounds() {
+    use ktruss::cost::trace::trace_supports;
+    use ktruss::par::Schedule;
+    use ktruss::sim::cpu::makespan_ns;
+    forall(Config::cases(25), arbitrary_graph, |g| {
+        let z = ZCsr::from_csr(g);
+        let mut s = Vec::new();
+        let tr = trace_supports(&z, &mut s);
+        let costs: Vec<f64> = tr.fine_steps.iter().map(|&x| x as f64 + 1.0).collect();
+        let total: f64 = costs.iter().sum();
+        let critical = costs.iter().cloned().fold(0.0f64, f64::max);
+        for sched in [Schedule::Static, Schedule::Dynamic { chunk: 8 }] {
+            for threads in [1usize, 4, 48] {
+                let m = makespan_ns(&costs, threads, sched);
+                if m > total * 1.01 + 1.0 {
+                    return Err(format!("makespan {m} exceeds total {total}"));
+                }
+                if m + 1.0 < critical {
+                    return Err(format!("makespan {m} below critical path {critical}"));
+                }
+                if threads == 1 && (m - total).abs() > total * 0.02 + 1.0 {
+                    return Err(format!("1-thread makespan {m} != total {total}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The parallel (pool) execution agrees with sequential for every graph
+/// and both schedules — the atomics are race-free by construction.
+#[test]
+fn prop_parallel_matches_sequential() {
+    use ktruss::par::{compute_supports_par, Pool, Schedule};
+    forall(Config::cases(15), arbitrary_graph, |g| {
+        let z = ZCsr::from_csr(g);
+        let mut want = Vec::new();
+        compute_supports_seq(&z, &mut want);
+        let pool = Pool::new(3);
+        for mode in [Mode::Coarse, Mode::Fine] {
+            let got = compute_supports_par(&z, &pool, mode, Schedule::Dynamic { chunk: 7 });
+            if got != want {
+                return Err(format!("{mode}: parallel supports diverge"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Generators deliver exactly the requested sizes and valid structure
+/// across their parameter space.
+#[test]
+fn prop_generators_honor_contracts() {
+    forall(
+        Config::cases(25),
+        |rng| {
+            let n = rng.range(16, 400);
+            let m = rng.range(n / 2, 3 * n);
+            let fam = rng.below(4);
+            (n, m, fam, rng.split())
+        },
+        |&(n, m, fam, ref rng)| {
+            let mut rng = rng.clone();
+            let g: Csr = match fam {
+                0 => ktruss::gen::erdos_renyi::gnm(n, m, &mut rng),
+                1 => ktruss::gen::rmat::rmat(n, m, ktruss::gen::rmat::RmatParams::social(), &mut rng),
+                2 => ktruss::gen::community::communities(n, m, 16, &mut rng),
+                _ => ktruss::gen::barabasi_albert::ba_closure(n.max(8), m, 0.3, &mut rng),
+            };
+            if g.nnz() != m {
+                return Err(format!("family {fam}: m {} != requested {m}", g.nnz()));
+            }
+            validate::check(&g).map_err(|e| format!("family {fam}: {e}"))?;
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,113 @@
+//! The reproduction's success criteria (DESIGN.md §5): the *shape* of
+//! the paper's results must hold on the simulated testbeds — who wins,
+//! by roughly what factor, and where the null effects are.
+
+use ktruss::algo::support::Mode;
+use ktruss::gen::suite;
+use ktruss::sim::{simulate_kmax, simulate_ktruss, table1_configs, SimConfig};
+
+const SCALE: f64 = 0.1;
+
+fn by<'a>(res: &'a [ktruss::sim::SimResult], label: &str) -> &'a ktruss::sim::SimResult {
+    res.iter().find(|r| r.label.contains(label)).unwrap()
+}
+
+/// Fine must beat coarse on the hub-heavy families, on both devices
+/// (paper Figs 3-4: speedup above unity almost everywhere).
+#[test]
+fn fine_beats_coarse_on_skewed_families() {
+    for name in ["as20000102", "oregon1_010331", "soc-Epinions1", "email-Enron"] {
+        let g = suite::load(suite::by_name(name).unwrap(), SCALE).unwrap();
+        let res = simulate_ktruss(&g, 3, &table1_configs());
+        let cpu = by(&res, "CPU-C").seconds / by(&res, "CPU-F").seconds;
+        let gpu = by(&res, "GPU-C").seconds / by(&res, "GPU-F").seconds;
+        assert!(cpu > 1.0, "{name}: CPU fine/coarse {cpu} <= 1");
+        assert!(gpu > 1.0, "{name}: GPU fine/coarse {gpu} <= 1");
+    }
+}
+
+/// The GPU's fine-grained gain must dwarf the CPU's on power-law
+/// graphs (paper headline: 16.93x vs 1.48x at K=3).
+#[test]
+fn gpu_gain_exceeds_cpu_gain() {
+    let mut gpu_gains = Vec::new();
+    let mut cpu_gains = Vec::new();
+    for name in ["as20000102", "oregon2_010331", "soc-Slashdot0811", "email-Enron"] {
+        let g = suite::load(suite::by_name(name).unwrap(), SCALE).unwrap();
+        let res = simulate_ktruss(&g, 3, &table1_configs());
+        cpu_gains.push(by(&res, "CPU-C").seconds / by(&res, "CPU-F").seconds);
+        gpu_gains.push(by(&res, "GPU-C").seconds / by(&res, "GPU-F").seconds);
+    }
+    let cpu = ktruss::util::stats::geomean(&cpu_gains).unwrap();
+    let gpu = ktruss::util::stats::geomean(&gpu_gains).unwrap();
+    assert!(
+        gpu > 2.0 * cpu,
+        "GPU geomean gain {gpu:.2} must clearly exceed CPU's {cpu:.2}"
+    );
+}
+
+/// Road networks show near-parity between granularities (paper Table I:
+/// roadNet rows ~1.0x, even slightly below on GPU) — the null effect.
+#[test]
+fn road_networks_near_parity() {
+    let g = suite::load(suite::by_name("roadNet-PA").unwrap(), SCALE).unwrap();
+    let res = simulate_ktruss(&g, 3, &table1_configs());
+    let cpu = by(&res, "CPU-C").seconds / by(&res, "CPU-F").seconds;
+    let gpu = by(&res, "GPU-C").seconds / by(&res, "GPU-F").seconds;
+    assert!((0.5..2.0).contains(&cpu), "road CPU ratio {cpu}");
+    assert!((0.5..2.0).contains(&gpu), "road GPU ratio {gpu}");
+}
+
+/// The GPU-coarse catastrophe on small AS graphs (paper: as20000102
+/// GPU-C at 0.085 ME/s vs GPU-F 6.8 ME/s — 80x apart; oregon* similar).
+#[test]
+fn gpu_coarse_collapses_on_as_topologies() {
+    let g = suite::load(suite::by_name("as20000102").unwrap(), 0.25).unwrap();
+    let res = simulate_ktruss(&g, 3, &table1_configs());
+    let ratio = by(&res, "GPU-C").seconds / by(&res, "GPU-F").seconds;
+    assert!(ratio > 5.0, "AS-graph GPU collapse ratio {ratio} too mild");
+}
+
+/// Fig-2 shape: the fine/coarse CPU advantage grows (or at least does
+/// not invert) as threads increase on a skewed graph — imbalance only
+/// matters when there are workers to starve.
+#[test]
+fn thread_scaling_amplifies_fine_advantage() {
+    let g = suite::load(suite::by_name("oregon2_010331").unwrap(), SCALE).unwrap();
+    let mut configs = Vec::new();
+    for &t in &[1usize, 8, 48] {
+        configs.push(SimConfig::cpu(t, Mode::Coarse));
+        configs.push(SimConfig::cpu(t, Mode::Fine));
+    }
+    let (_, res) = simulate_kmax(&g, &configs);
+    let ratio_at = |i: usize| res[2 * i].seconds / res[2 * i + 1].seconds;
+    let (r1, r48) = (ratio_at(0), ratio_at(2));
+    assert!(
+        r48 > r1 * 0.9,
+        "fine advantage should not collapse with threads: 1t {r1:.2} vs 48t {r48:.2}"
+    );
+    // at 1 thread there is no imbalance to fix — ratio near 1
+    assert!((0.7..1.6).contains(&r1), "1-thread ratio should be ~1, got {r1:.2}");
+}
+
+/// K=3 speedups exceed K=Kmax speedups on the CPU (paper: 1.48 vs 1.26
+/// — pruning shrinks the graph and with it the exploitable imbalance).
+#[test]
+fn k3_speedup_geq_kmax_speedup_cpu() {
+    let mut k3 = Vec::new();
+    let mut km = Vec::new();
+    let cfgs = vec![SimConfig::cpu(48, Mode::Coarse), SimConfig::cpu(48, Mode::Fine)];
+    for name in ["oregon1_010331", "as-caida20071105", "soc-Epinions1"] {
+        let g = suite::load(suite::by_name(name).unwrap(), SCALE).unwrap();
+        let r3 = simulate_ktruss(&g, 3, &cfgs);
+        k3.push(r3[0].seconds / r3[1].seconds);
+        let (_, rk) = simulate_kmax(&g, &cfgs);
+        km.push(rk[0].seconds / rk[1].seconds);
+    }
+    let g3 = ktruss::util::stats::geomean(&k3).unwrap();
+    let gk = ktruss::util::stats::geomean(&km).unwrap();
+    assert!(
+        g3 > gk * 0.8,
+        "K=3 geomean {g3:.2} should be >= Kmax geomean {gk:.2} (paper: 1.48 vs 1.26)"
+    );
+}
