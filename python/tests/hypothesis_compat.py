@@ -1,0 +1,73 @@
+"""Use real hypothesis when available; otherwise a deterministic
+fallback so the suite still runs in the offline image (which ships
+jax/pytest but not hypothesis).
+
+The fallback keeps the test-authoring surface this suite uses —
+``@settings``, ``@given``, ``st.floats`` / ``st.integers`` /
+``st.sampled_from`` — and runs each property over a small fixed grid of
+boundary + midpoint samples instead of a random search. Deterministic
+by construction, so CI never flakes on it.
+"""
+
+try:  # pragma: no cover - trivially exercised by import
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # offline image: build the fallback
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        """A fixed list of representative samples."""
+
+        def __init__(self, samples):
+            self.samples = list(samples)
+
+    class _St:
+        @staticmethod
+        def floats(min_value, max_value, **_kw):
+            mid = (min_value + max_value) / 2.0
+            return _Strategy([min_value, mid, max_value])
+
+        @staticmethod
+        def integers(min_value, max_value, **_kw):
+            mid = (min_value + max_value) // 2
+            return _Strategy([min_value, mid, max_value])
+
+        @staticmethod
+        def sampled_from(elements):
+            return _Strategy(elements)
+
+    st = _St()
+
+    def settings(**_kw):
+        def deco(f):
+            return f
+
+        return deco
+
+    def given(**strategies):
+        names = list(strategies)
+
+        def deco(f):
+            def wrapper(*args):
+                # 5 deterministic cases cycling each strategy's samples
+                # out of phase, so combinations vary across cases
+                for case in range(5):
+                    kwargs = {
+                        name: strategies[name].samples[
+                            (case + i) % len(strategies[name].samples)
+                        ]
+                        for i, name in enumerate(names)
+                    }
+                    f(*args, **kwargs)
+
+            # keep pytest's collection name; deliberately no
+            # functools.wraps — pytest must see the (*args) signature,
+            # not the wrapped one, or it would treat the property
+            # arguments as fixtures
+            wrapper.__name__ = f.__name__
+            wrapper.__doc__ = f.__doc__
+            return wrapper
+
+        return deco

@@ -9,7 +9,7 @@ equality is the right assertion, not allclose-with-slop).
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from compile.kernels.eager_support import (
     mxu_utilization_estimate,

@@ -25,10 +25,14 @@ fn main() {
 
         let sched = ablations::ablate_schedule(&g);
         body.push_str(&format!(
-            "2. 48T support kernel: coarse-static {:.4} ms | coarse-dynamic {:.4} ms | fine-static {:.4} ms\n",
+            "2. 48T support kernel: coarse-static {:.4} ms | coarse-dynamic {:.4} ms | fine-static {:.4} ms\n   \
+             schedule axis: coarse-workaware {:.4} ms | coarse-stealing {:.4} ms | fine-workaware {:.4} ms\n",
             sched.coarse_static_s * 1e3,
             sched.coarse_dynamic_s * 1e3,
-            sched.fine_static_s * 1e3
+            sched.fine_static_s * 1e3,
+            sched.coarse_workaware_s * 1e3,
+            sched.coarse_stealing_s * 1e3,
+            sched.fine_workaware_s * 1e3
         ));
 
         for seg in [16u32, 64, 256] {

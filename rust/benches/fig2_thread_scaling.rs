@@ -1,6 +1,8 @@
 //! `cargo bench --bench fig2_thread_scaling` — regenerates Fig 2:
 //! speedup of fine- over coarse-grained on the CPU model across
-//! {1,2,4,8,16,32,48} threads at K = K_max, one row per graph.
+//! {1,2,4,8,16,32,48} threads at K = K_max, one row per graph — plus
+//! the schedule-ablation sweep: coarse-grained K=3 under
+//! static/dynamic/workaware/stealing at every thread count.
 
 use ktruss::bench_harness::{figs, report, Workload};
 
@@ -8,6 +10,10 @@ fn main() {
     let w = Workload::from_env().expect("workload config");
     println!("{}", w.banner("Fig 2 (fine/coarse CPU speedup vs threads, K=Kmax)"));
     let f = figs::run_fig2(&w, |msg| eprintln!("  [{msg}]")).expect("fig2 run");
-    let body = format!("{}\n[scale {}]\n", f.render(), f.scale);
+    let mut body = f.render();
+    body.push_str("\n## schedule sweep (coarse, K=3, speedup over static)\n");
+    let s = figs::run_fig2_schedules(&w, |msg| eprintln!("  [sched {msg}]")).expect("sched sweep");
+    body.push_str(&s.render());
+    body.push_str(&format!("\n[scale {}]\n", f.scale));
     report::emit("fig2_thread_scaling.txt", &body).expect("save report");
 }

@@ -83,12 +83,21 @@ pub fn ablate_zeroterm(g: &Csr, trials: usize) -> ZeroTermAblation {
     }
 }
 
-/// Ablation 2 result: simulated 48T support-kernel times.
+/// Ablation 2 result: simulated 48T support-kernel times across the
+/// full schedule axis (static | dynamic | workaware | stealing), both
+/// granularities where the schedule can still matter.
 #[derive(Clone, Debug)]
 pub struct ScheduleAblation {
     pub coarse_static_s: f64,
     pub coarse_dynamic_s: f64,
     pub fine_static_s: f64,
+    /// Scan-binned equal-work chunks over coarse tasks — how much of
+    /// fine-grained's win schedule-level balancing recovers.
+    pub coarse_workaware_s: f64,
+    /// Work stealing over coarse tasks.
+    pub coarse_stealing_s: f64,
+    /// Work-aware binning layered *under* fine tasks (both mechanisms).
+    pub fine_workaware_s: f64,
 }
 
 /// Measure ablation 2 (first support pass of the K=3 run).
@@ -97,16 +106,16 @@ pub fn ablate_schedule(g: &Csr) -> ScheduleAblation {
     let mut s = Vec::new();
     let tr = trace_supports(&z, &mut s);
     let m = CpuMachine::skylake_8160(48);
+    let pass = |mode: Mode, sched: Schedule| {
+        crate::sim::cpu::support_pass_s(&m, &tr, z.row_ptr(), mode, sched)
+    };
     ScheduleAblation {
-        coarse_static_s: crate::sim::cpu::support_pass_s(&m, &tr, z.row_ptr(), Mode::Coarse, Schedule::Static),
-        coarse_dynamic_s: crate::sim::cpu::support_pass_s(
-            &m,
-            &tr,
-            z.row_ptr(),
-            Mode::Coarse,
-            Schedule::Dynamic { chunk: 16 },
-        ),
-        fine_static_s: crate::sim::cpu::support_pass_s(&m, &tr, z.row_ptr(), Mode::Fine, Schedule::Static),
+        coarse_static_s: pass(Mode::Coarse, Schedule::Static),
+        coarse_dynamic_s: pass(Mode::Coarse, Schedule::Dynamic { chunk: 16 }),
+        fine_static_s: pass(Mode::Fine, Schedule::Static),
+        coarse_workaware_s: pass(Mode::Coarse, Schedule::WorkAware),
+        coarse_stealing_s: pass(Mode::Coarse, Schedule::Stealing),
+        fine_workaware_s: pass(Mode::Fine, Schedule::WorkAware),
     }
 }
 
@@ -262,6 +271,28 @@ mod tests {
         let a = ablate_schedule(&g);
         assert!(a.coarse_dynamic_s <= a.coarse_static_s * 1.001);
         assert!(a.fine_static_s <= a.coarse_dynamic_s * 1.2);
+    }
+
+    #[test]
+    fn workaware_and_stealing_bounded_by_static() {
+        let g = crate::gen::rmat::rmat(
+            3000,
+            15_000,
+            crate::gen::rmat::RmatParams::autonomous_system(),
+            &mut crate::util::Rng::new(9),
+        );
+        let a = ablate_schedule(&g);
+        // provable sandwich: workaware/stealing ≤ 2× the static
+        // makespan (total/threads + max ≤ 2·static), and all positive
+        for (label, s) in [
+            ("coarse_workaware", a.coarse_workaware_s),
+            ("coarse_stealing", a.coarse_stealing_s),
+            ("fine_workaware", a.fine_workaware_s),
+        ] {
+            assert!(s > 0.0, "{label}");
+        }
+        assert!(a.coarse_workaware_s <= a.coarse_static_s * 2.0, "workaware blew past static");
+        assert!(a.coarse_stealing_s <= a.coarse_static_s * 2.0, "stealing blew past static");
     }
 
     #[test]

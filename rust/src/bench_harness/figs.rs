@@ -11,6 +11,7 @@
 
 use super::workload::Workload;
 use crate::algo::support::Mode;
+use crate::par::Schedule;
 use crate::sim::{simulate_kmax, simulate_ktruss, SimConfig};
 use crate::util::fmt::{mes, speedup, Table};
 use crate::util::stats::geomean;
@@ -18,6 +19,22 @@ use anyhow::Result;
 
 /// The paper's Fig-2 thread axis.
 pub const THREADS: [usize; 7] = [1, 2, 4, 8, 16, 32, 48];
+
+/// The schedule-ablation axis the thread-scaling sweep runs — the one
+/// canonical list from the pool, re-exported so it cannot drift.
+pub use crate::par::ALL_SCHEDULES as SCHEDULES;
+
+/// Short, stable label for a schedule (table column/row keys; chunk
+/// size elided). Exhaustive match: a new `Schedule` variant fails to
+/// compile here rather than silently missing from the sweep.
+pub fn schedule_name(s: Schedule) -> &'static str {
+    match s {
+        Schedule::Static => "static",
+        Schedule::Dynamic { .. } => "dynamic",
+        Schedule::WorkAware => "workaware",
+        Schedule::Stealing => "stealing",
+    }
+}
 
 /// Fig 2: per-graph speedup series over the thread axis.
 #[derive(Clone, Debug)]
@@ -63,6 +80,66 @@ pub fn run_fig2(w: &Workload, mut progress: impl FnMut(&str)) -> Result<Fig2> {
         series.push((spec.name.to_string(), kmax, sp));
     }
     Ok(Fig2 { series, scale: w.scale })
+}
+
+/// Schedule sweep companion to Fig 2: coarse-grained K=3 runtime under
+/// every schedule across the thread axis, reported as speedup over
+/// coarse-static at the same thread count. Shows how much of the
+/// fine-grained win schedule-level load balancing recovers on its own.
+#[derive(Clone, Debug)]
+pub struct Fig2Schedules {
+    /// (graph, schedule label, speedup-over-static per THREADS entry).
+    pub series: Vec<(String, &'static str, [f64; 7])>,
+    pub scale: f64,
+}
+
+impl Fig2Schedules {
+    pub fn render(&self) -> String {
+        let mut t = Table::new(vec![
+            "graph", "schedule", "1t", "2t", "4t", "8t", "16t", "32t", "48t",
+        ]);
+        for (name, sched, sp) in &self.series {
+            let mut row = vec![name.clone(), sched.to_string()];
+            row.extend(sp.iter().map(|&x| speedup(x)));
+            t.row(row);
+        }
+        format!(
+            "{}\n(values are coarse static_time/schedule_time at K=3; workaware/stealing recover\n part of the fine-grained win without changing the task granularity)\n",
+            t.render()
+        )
+    }
+}
+
+/// Run the schedule sweep (one replay per graph drives all
+/// threads × schedules configurations).
+pub fn run_fig2_schedules(w: &Workload, mut progress: impl FnMut(&str)) -> Result<Fig2Schedules> {
+    let mut configs = Vec::new();
+    for &t in &THREADS {
+        for &sch in &SCHEDULES {
+            configs.push(SimConfig::cpu_sched(t, Mode::Coarse, sch));
+        }
+    }
+    // baseline index found by kind, not position, so reordering the
+    // shared schedule axis cannot silently renormalize the figure
+    let base = SCHEDULES
+        .iter()
+        .position(|s| matches!(s, Schedule::Static))
+        .expect("schedule axis must include Static");
+    let mut series = Vec::new();
+    for spec in &w.specs {
+        let g = w.load(spec)?;
+        let res = simulate_ktruss(&g, 3, &configs);
+        for (si, &sch) in SCHEDULES.iter().enumerate() {
+            let mut sp = [0.0f64; 7];
+            for ti in 0..THREADS.len() {
+                let static_s = res[ti * SCHEDULES.len() + base].seconds;
+                sp[ti] = static_s / res[ti * SCHEDULES.len() + si].seconds;
+            }
+            series.push((spec.name.to_string(), schedule_name(sch), sp));
+        }
+        progress(spec.name);
+    }
+    Ok(Fig2Schedules { series, scale: w.scale })
 }
 
 /// Fig 3/4 panel: per-graph coarse and fine ME/s for one device, one K
@@ -176,6 +253,21 @@ mod tests {
         assert!(*kmax >= 3);
         assert!(sp.iter().all(|x| x.is_finite() && *x > 0.0));
         assert!(f.render().contains("48t"));
+    }
+
+    #[test]
+    fn fig2_schedule_sweep_produces_all_series() {
+        let f = run_fig2_schedules(&tiny_workload(), |_| {}).unwrap();
+        // one series per schedule for the single graph
+        assert_eq!(f.series.len(), SCHEDULES.len());
+        for (name, sched, sp) in &f.series {
+            assert_eq!(name, "as20000102");
+            assert!(sp.iter().all(|x| x.is_finite() && *x > 0.0), "{sched}");
+        }
+        // the static series is identically 1.0 (it is its own baseline)
+        let static_series = f.series.iter().find(|(_, s, _)| *s == "static").unwrap();
+        assert!(static_series.2.iter().all(|&x| (x - 1.0).abs() < 1e-9));
+        assert!(f.render().contains("workaware"));
     }
 
     #[test]

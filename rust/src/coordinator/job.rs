@@ -2,6 +2,7 @@
 
 use crate::algo::support::Mode;
 use crate::graph::{Csr, Vid};
+use crate::par::Schedule;
 use std::sync::Arc;
 
 /// Unique job id assigned at submission.
@@ -60,6 +61,11 @@ pub enum JobOutput {
 pub struct JobResult {
     pub id: JobId,
     pub engine: Engine,
+    /// Pool schedule the sparse fixed-k truss engine ran under. `None`
+    /// for dense executions (the AOT path has no schedule axis) and
+    /// for job kinds whose sparse path is sequential (kmax, decompose,
+    /// triangles). Provenance for the per-job schedule policy.
+    pub schedule: Option<Schedule>,
     pub wall_ms: f64,
     /// Ok(output) or the error message (no anyhow across channels).
     pub output: Result<JobOutput, String>,

@@ -9,3 +9,4 @@ pub mod worker;
 
 pub use job::{Engine, JobKind, JobOutput, JobRequest, JobResult};
 pub use service::{Coordinator, ServiceConfig, Ticket};
+pub use worker::{choose_schedule, Worker};

@@ -11,7 +11,7 @@ use super::metrics::Metrics;
 use super::router::{route, RouterConfig};
 use super::worker::Worker;
 use crate::graph::Csr;
-use crate::par::Pool;
+use crate::par::{Pool, Schedule};
 use crate::runtime::DenseEngine;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -29,6 +29,10 @@ pub struct ServiceConfig {
     pub batch_window: Duration,
     /// Try to construct the dense engine (requires artifacts).
     pub enable_dense: bool,
+    /// Fixed pool schedule for sparse jobs; `None` lets the worker pick
+    /// one per job from the graph's degree skew
+    /// (see [`super::worker::choose_schedule`]).
+    pub schedule: Option<Schedule>,
 }
 
 impl Default for ServiceConfig {
@@ -38,6 +42,7 @@ impl Default for ServiceConfig {
             max_batch: 16,
             batch_window: Duration::from_millis(2),
             enable_dense: true,
+            schedule: None,
         }
     }
 }
@@ -126,7 +131,7 @@ fn dispatch_loop(rx: Receiver<Msg>, cfg: ServiceConfig, metrics: Arc<Metrics>) {
         .as_ref()
         .map(|d| RouterConfig::new(d.max_n()))
         .unwrap_or_else(RouterConfig::disabled);
-    let worker = Worker::new(Pool::new(cfg.pool_workers), dense);
+    let worker = Worker::with_schedule(Pool::new(cfg.pool_workers), dense, cfg.schedule);
     let mut batch: Vec<(JobRequest, Sender<JobResult>)> = Vec::new();
     'outer: loop {
         batch.clear();
@@ -232,6 +237,26 @@ mod tests {
         assert!(t2.id > t1.id);
         t1.wait();
         t2.wait();
+    }
+
+    #[test]
+    fn fixed_schedule_override_applies_to_every_job() {
+        let c = Coordinator::start(ServiceConfig {
+            schedule: Some(Schedule::WorkAware),
+            ..cfg_no_dense()
+        });
+        let g = Arc::new(crate::gen::erdos_renyi::gnm(120, 500, &mut crate::util::Rng::new(3)));
+        let want = crate::algo::ktruss::ktruss(&g, 3, Mode::Fine).truss.nnz();
+        for _ in 0..4 {
+            let t = c.submit(Arc::clone(&g), JobKind::Ktruss { k: 3, mode: Mode::Fine });
+            let r = t.wait();
+            assert_eq!(r.schedule, Some(Schedule::WorkAware));
+            match r.output.unwrap() {
+                JobOutput::Ktruss { truss_edges, .. } => assert_eq!(truss_edges, want),
+                other => panic!("{other:?}"),
+            }
+        }
+        c.shutdown();
     }
 
     #[test]

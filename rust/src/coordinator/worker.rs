@@ -1,15 +1,49 @@
 //! Job execution: dispatch a routed request to the chosen engine.
+//!
+//! The sparse engine picks a pool [`Schedule`] **per job**: a fixed
+//! override from [`ServiceConfig`](super::service::ServiceConfig) when
+//! the operator set one, otherwise a skew heuristic over the job's
+//! graph (see [`choose_schedule`]). The chosen schedule is recorded in
+//! the [`JobResult`] for provenance.
 
 use super::job::{Engine, JobKind, JobOutput, JobRequest, JobResult};
 use crate::algo::{decompose, kmax, triangle};
+use crate::graph::Csr;
 use crate::par::{ktruss_par, Pool, Schedule};
 use crate::runtime::DenseEngine;
 use crate::util::Timer;
 
+/// Pick a schedule from the graph's degree skew. The thresholds encode
+/// the paper's load-imbalance finding: the more the max row dwarfs the
+/// mean, the more a cost-aware schedule buys.
+///
+/// * tiny jobs → `Static` (spawn/binning overhead dominates),
+/// * heavy skew (max/mean ≥ 8, the power-law hub regime) → `Stealing`
+///   (estimation error is absorbed at runtime),
+/// * moderate skew (≥ 3) → `WorkAware` (scan-binned chunks),
+/// * near-uniform (road-network-like) → `Dynamic` (cheap and adequate).
+pub fn choose_schedule(g: &Csr) -> Schedule {
+    let n = g.n();
+    if n == 0 || g.nnz() < 2048 {
+        return Schedule::Static;
+    }
+    let mean = g.nnz() as f64 / n as f64;
+    let max = (0..n).map(|i| g.row(i).len()).max().unwrap_or(0) as f64;
+    let skew = if mean > 0.0 { max / mean } else { 0.0 };
+    if skew >= 8.0 {
+        Schedule::Stealing
+    } else if skew >= 3.0 {
+        Schedule::WorkAware
+    } else {
+        Schedule::Dynamic { chunk: 256 }
+    }
+}
+
 /// Stateless executor with handles to both engines.
 pub struct Worker {
     pub pool: Pool,
-    pub schedule: Schedule,
+    /// Fixed schedule override; `None` = per-job heuristic choice.
+    pub schedule: Option<Schedule>,
     /// None when artifacts are unavailable (dense jobs then fall back to
     /// the sparse path with a provenance note).
     pub dense: Option<DenseEngine>,
@@ -17,32 +51,61 @@ pub struct Worker {
 
 impl Worker {
     pub fn new(pool: Pool, dense: Option<DenseEngine>) -> Worker {
-        Worker { pool, schedule: Schedule::Dynamic { chunk: 256 }, dense }
+        Worker { pool, schedule: None, dense }
+    }
+
+    pub fn with_schedule(pool: Pool, dense: Option<DenseEngine>, schedule: Option<Schedule>) -> Worker {
+        Worker { pool, schedule, dense }
+    }
+
+    /// The schedule this worker runs `req` under.
+    pub fn pick_schedule(&self, req: &JobRequest) -> Schedule {
+        self.schedule.unwrap_or_else(|| choose_schedule(&req.graph))
+    }
+
+    /// Schedule for the sparse engine: `Some` only for job kinds whose
+    /// sparse path actually runs on the pool (fixed-k truss). Kmax,
+    /// decompose and triangle counting execute sequential algorithms,
+    /// so no schedule is picked (or paid for) there.
+    fn sparse_schedule(&self, req: &JobRequest) -> Option<Schedule> {
+        match req.kind {
+            JobKind::Ktruss { .. } => Some(self.pick_schedule(req)),
+            _ => None,
+        }
     }
 
     /// Execute one request on `engine` (already routed).
     pub fn execute(&self, req: &JobRequest, engine: Engine) -> JobResult {
         let t = Timer::start();
-        let (engine_used, output) = match engine {
+        let (engine_used, schedule, output) = match engine {
             Engine::DenseXla => match self.execute_dense(req) {
-                Ok(out) => (Engine::DenseXla, Ok(out)),
+                Ok(out) => (Engine::DenseXla, None, Ok(out)),
                 // dense failure (missing artifacts, size) falls back
-                Err(_) => (Engine::SparseCpu, self.execute_sparse(req)),
+                Err(_) => {
+                    let s = self.sparse_schedule(req);
+                    let out = self.execute_sparse(req, s.unwrap_or(Schedule::Static));
+                    (Engine::SparseCpu, s, out)
+                }
             },
-            Engine::SparseCpu => (Engine::SparseCpu, self.execute_sparse(req)),
+            Engine::SparseCpu => {
+                let s = self.sparse_schedule(req);
+                let out = self.execute_sparse(req, s.unwrap_or(Schedule::Static));
+                (Engine::SparseCpu, s, out)
+            }
         };
         JobResult {
             id: req.id,
             engine: engine_used,
+            schedule,
             wall_ms: t.elapsed_ms(),
             output: output.map_err(|e| format!("{e:#}")),
         }
     }
 
-    fn execute_sparse(&self, req: &JobRequest) -> anyhow::Result<JobOutput> {
+    fn execute_sparse(&self, req: &JobRequest, schedule: Schedule) -> anyhow::Result<JobOutput> {
         Ok(match req.kind {
             JobKind::Ktruss { k, mode } => {
-                let r = ktruss_par(&req.graph, k, &self.pool, mode, self.schedule);
+                let r = ktruss_par(&req.graph, k, &self.pool, mode, schedule);
                 JobOutput::Ktruss {
                     truss_edges: r.truss.nnz(),
                     iterations: r.iterations,
@@ -108,6 +171,8 @@ mod tests {
         );
         assert_eq!(r.id, 7);
         assert_eq!(r.engine, Engine::SparseCpu);
+        // a tiny job must have been scheduled statically
+        assert_eq!(r.schedule, Some(Schedule::Static));
         match r.output.unwrap() {
             JobOutput::Ktruss { truss_edges, .. } => assert_eq!(truss_edges, 5),
             other => panic!("wrong output {other:?}"),
@@ -141,9 +206,47 @@ mod tests {
         );
         // no dense engine in run_inline -> sparse fallback, still correct
         assert_eq!(r.engine, Engine::SparseCpu);
+        assert!(r.schedule.is_some(), "fallback must record its schedule");
         match r.output.unwrap() {
             JobOutput::Ktruss { truss_edges, .. } => assert_eq!(truss_edges, 5),
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn schedule_override_wins_over_heuristic() {
+        let worker = Worker::with_schedule(Pool::new(2), None, Some(Schedule::Stealing));
+        let req = diamond_req(JobKind::Ktruss { k: 3, mode: Mode::Fine });
+        assert_eq!(worker.pick_schedule(&req), Schedule::Stealing);
+        let r = worker.execute(&req, Engine::SparseCpu);
+        assert_eq!(r.schedule, Some(Schedule::Stealing));
+        match r.output.unwrap() {
+            JobOutput::Ktruss { truss_edges, .. } => assert_eq!(truss_edges, 5),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn heuristic_tracks_skew() {
+        // tiny → static
+        let tiny = from_sorted_unique(3, &[(0, 1), (1, 2)]);
+        assert_eq!(choose_schedule(&tiny), Schedule::Static);
+        // hub-heavy rmat → a cost-aware schedule
+        let hub = crate::gen::rmat::rmat(
+            4000,
+            24_000,
+            crate::gen::rmat::RmatParams::autonomous_system(),
+            &mut crate::util::Rng::new(5),
+        );
+        assert!(matches!(
+            choose_schedule(&hub),
+            Schedule::WorkAware | Schedule::Stealing
+        ));
+        // near-uniform road lattice → dynamic
+        let road = crate::gen::grid::road(4000, 5600, 0.05, &mut crate::util::Rng::new(6));
+        assert!(matches!(
+            choose_schedule(&road),
+            Schedule::Dynamic { .. } | Schedule::WorkAware
+        ));
     }
 }

@@ -4,32 +4,59 @@
 
 use super::csr::Csr;
 use super::zeroterm::ZCsr;
-use thiserror::Error;
 
 /// Violations of the CSR invariants.
-#[derive(Debug, Error, PartialEq, Eq)]
+///
+/// (`Display`/`Error` are hand-implemented — the offline crate set has
+/// no `thiserror`.)
+#[derive(Debug, PartialEq, Eq)]
 pub enum GraphError {
-    #[error("row_ptr length {got} != n+1 ({want})")]
     RowPtrLen { got: usize, want: usize },
-    #[error("row_ptr not monotone at row {row}")]
     RowPtrMonotone { row: usize },
-    #[error("row_ptr[{0}] does not start at 0")]
     RowPtrStart(u32),
-    #[error("row_ptr end {got} != col_idx len {want}")]
     RowPtrEnd { got: usize, want: usize },
-    #[error("entry ({row},{col}) not strictly upper-triangular")]
     NotUpperTriangular { row: usize, col: u32 },
-    #[error("column {col} out of range in row {row} (n={n})")]
     ColOutOfRange { row: usize, col: u32, n: usize },
-    #[error("row {row} not sorted ascending at position {pos}")]
     RowNotSorted { row: usize, pos: usize },
-    #[error("duplicate column {col} in row {row}")]
     DuplicateCol { row: usize, col: u32 },
-    #[error("zero-terminated row {row} missing terminator")]
     MissingTerminator { row: usize },
-    #[error("zero-terminated row {row} has live entry after tombstone at {pos}")]
     EntryAfterTombstone { row: usize, pos: usize },
 }
+
+impl std::fmt::Display for GraphError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            GraphError::RowPtrLen { got, want } => {
+                write!(f, "row_ptr length {got} != n+1 ({want})")
+            }
+            GraphError::RowPtrMonotone { row } => write!(f, "row_ptr not monotone at row {row}"),
+            GraphError::RowPtrStart(v) => write!(f, "row_ptr[{v}] does not start at 0"),
+            GraphError::RowPtrEnd { got, want } => {
+                write!(f, "row_ptr end {got} != col_idx len {want}")
+            }
+            GraphError::NotUpperTriangular { row, col } => {
+                write!(f, "entry ({row},{col}) not strictly upper-triangular")
+            }
+            GraphError::ColOutOfRange { row, col, n } => {
+                write!(f, "column {col} out of range in row {row} (n={n})")
+            }
+            GraphError::RowNotSorted { row, pos } => {
+                write!(f, "row {row} not sorted ascending at position {pos}")
+            }
+            GraphError::DuplicateCol { row, col } => {
+                write!(f, "duplicate column {col} in row {row}")
+            }
+            GraphError::MissingTerminator { row } => {
+                write!(f, "zero-terminated row {row} missing terminator")
+            }
+            GraphError::EntryAfterTombstone { row, pos } => {
+                write!(f, "zero-terminated row {row} has live entry after tombstone at {pos}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for GraphError {}
 
 /// Check all invariants of a canonical upper-triangular CSR.
 pub fn check(g: &Csr) -> Result<(), GraphError> {

@@ -68,12 +68,14 @@ fn print_help() {
          USAGE: ktruss <command> [flags]\n\n\
          COMMANDS\n\
            run        --graph <name|path> [--k 3] [--mode fine|coarse] [--par N] [--engine sparse|dense]\n\
+                      [--schedule static|dynamic[:chunk]|workaware|stealing]\n\
            kmax       --graph <name|path>\n\
            decompose  --graph <name|path>\n\
            generate   --graph <name> [--scale 1.0] [--out file.tsv] [--format tsv|bin]\n\
            suite      [--scale 0.15] [--stats]\n\
            bench      <table1|fig2|fig3|fig4|ablations> [--k 3] (env: KTRUSS_SUITE, KTRUSS_SCALE)\n\
-           serve      [--jobs 32] [--pool 4] (demo batch through the coordinator)\n\
+           serve      [--jobs 32] [--pool 4] [--schedule <s>] (demo batch through the coordinator;\n\
+                      without --schedule the worker picks a schedule per job from graph skew)\n\
            calibrate\n\
            info\n\n\
          GRAPH SOURCES: a SNAP suite name (e.g. ca-GrQc, see `ktruss suite`) generates the\n\
@@ -115,22 +117,32 @@ fn cmd_run(args: &Args) -> Result<()> {
     let mode = parse_mode(args)?;
     let par = args.get_as::<usize>("par", 1)?;
     let engine = args.get("engine", "sparse");
+    let schedule_flag = args.opt("schedule");
+    let schedule: Schedule = match &schedule_flag {
+        Some(s) => s.parse().map_err(|e| anyhow::anyhow!("--schedule: {e}"))?,
+        None => Schedule::Dynamic { chunk: 256 },
+    };
     args.reject_unknown()?;
+    if schedule_flag.is_some() && (engine != "sparse" || par <= 1) {
+        eprintln!(
+            "note: --schedule only affects the sparse pool engine; add --par <N> (N > 1) to use it"
+        );
+    }
     println!("graph: {}", stats::stats(&g));
     let t = Timer::start();
     let (edges, iterations, engine_used) = match engine.as_str() {
         "dense" => {
             let eng = ktruss::runtime::DenseEngine::new()?;
             let (truss, iters) = eng.ktruss(&g, k)?;
-            (truss.nnz(), iters, "dense-xla (AOT jax/Pallas via PJRT)")
+            (truss.nnz(), iters, "dense-xla (AOT jax/Pallas via PJRT)".to_string())
         }
         "sparse" if par > 1 => {
-            let r = ktruss_par(&g, k, &Pool::new(par), mode, Schedule::Dynamic { chunk: 256 });
-            (r.truss.nnz(), r.iterations, "sparse-cpu (pool)")
+            let r = ktruss_par(&g, k, &Pool::new(par), mode, schedule);
+            (r.truss.nnz(), r.iterations, format!("sparse-cpu (pool, {schedule})"))
         }
         "sparse" => {
             let r = ktruss_seq(&g, k, mode);
-            (r.truss.nnz(), r.iterations, "sparse-cpu (sequential)")
+            (r.truss.nnz(), r.iterations, "sparse-cpu (sequential)".to_string())
         }
         other => bail!("--engine must be sparse|dense, got {other:?}"),
     };
@@ -273,6 +285,12 @@ fn run_ablations(w: &Workload) -> Result<String> {
             sched.coarse_dynamic_s * 1e3,
             sched.fine_static_s * 1e3
         ));
+        out.push_str(&format!(
+            "schedule axis: coarse-workaware {:.3} ms, coarse-stealing {:.3} ms, fine-workaware {:.3} ms\n",
+            sched.coarse_workaware_s * 1e3,
+            sched.coarse_stealing_s * 1e3,
+            sched.fine_workaware_s * 1e3
+        ));
         let uf = ablations::ablate_ultrafine(&g, 64);
         out.push_str(&format!(
             "GPU fine vs ultra-fine(seg=64): {:.3} ms vs {:.3} ms\n",
@@ -291,9 +309,21 @@ fn run_ablations(w: &Workload) -> Result<String> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let jobs = args.get_as::<usize>("jobs", 32)?;
     let pool = args.get_as::<usize>("pool", 4)?;
+    // no --schedule flag ⇒ the worker picks per job from graph skew
+    let schedule: Option<Schedule> = match args.opt("schedule") {
+        Some(s) => Some(s.parse().map_err(|e| anyhow::anyhow!("--schedule: {e}"))?),
+        None => None,
+    };
     args.reject_unknown()?;
-    let c = Coordinator::start(ServiceConfig { pool_workers: pool, ..Default::default() });
-    println!("coordinator up (pool={pool}); submitting {jobs} mixed jobs…");
+    let c = Coordinator::start(ServiceConfig {
+        pool_workers: pool,
+        schedule,
+        ..Default::default()
+    });
+    println!(
+        "coordinator up (pool={pool}, schedule={}); submitting {jobs} mixed jobs…",
+        schedule.map(|s| s.to_string()).unwrap_or_else(|| "auto".to_string())
+    );
     let mut rng = ktruss::util::Rng::new(1);
     let mut tickets = Vec::new();
     let t = Timer::start();

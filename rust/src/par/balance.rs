@@ -1,0 +1,334 @@
+//! Work-aware load balancing for the support/prune kernels — the
+//! schedule-level complement to the paper's task-granularity argument.
+//!
+//! The paper (§III-A) shows that coarse-grained Eager K-truss is limited
+//! by the *distribution* of per-task cost, not by available parallelism,
+//! and fixes it by shrinking the task (one task per nonzero). This
+//! module attacks the same imbalance along the orthogonal axis the
+//! related work explores: keep the task definition, change the
+//! *schedule*. Each piece maps to a published technique:
+//!
+//! * **Cost estimation** ([`estimate_costs`]) — per-task work bounds
+//!   read directly off the zero-terminated CSR: a fine task's merge
+//!   over slot `p` of row `i` with partner row `κ` executes at most
+//!   `tail(i, p) + live(κ)` steps (each step advances one of the two
+//!   pointers), and a coarse task is the sum over its row's live slots.
+//!   This is the static analogue of the exact per-task traces
+//!   [`crate::cost::trace`] measures.
+//! * **Scan-based binning** ([`scan_bins`], [`Schedule::WorkAware`]) —
+//!   the Hornet K-truss `ScanBased`/`BinarySearch` load-balancing
+//!   idiom (SNIPPETS.md Snippet 1): prefix-sum the estimated costs,
+//!   then binary-search the `w·total/W` quantiles so each of the `W`
+//!   workers receives one contiguous chunk of approximately equal
+//!   *work* (not equal *count*). Guaranteed: every chunk's work is at
+//!   most `total/W + max_single_cost`.
+//! * **Work stealing** ([`run_stealing`], [`Schedule::Stealing`]) —
+//!   the dynamic strategy of "Dynamic Load Balancing Strategies for
+//!   Graph Applications on GPUs" (PAPERS.md): workers own chunk deques
+//!   (seeded by the same scan binning, several chunks per worker) and
+//!   steal from a victim's tail when their own deque drains. Cost
+//!   *estimation errors* — the one thing static binning cannot fix —
+//!   are absorbed at runtime. The implementation never blocks (a
+//!   worker exits after one full empty sweep, and tasks never spawn
+//!   new work), so there is no lost-wakeup or deadlock state by
+//!   construction; the `integration_balance` stress test exercises the
+//!   many-threads-few-tasks corner.
+//!
+//! [`Schedule::WorkAware`]: super::pool::Schedule::WorkAware
+//! [`Schedule::Stealing`]: super::pool::Schedule::Stealing
+
+use crate::algo::support::Mode;
+use crate::graph::ZCsr;
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+/// How many scan-binned chunks each worker's deque is seeded with under
+/// [`Schedule::Stealing`](super::pool::Schedule::Stealing). More chunks
+/// → finer stealing granularity but more queue traffic; 4 matches the
+/// over-decomposition factor the GPU load-balancing literature uses.
+pub const STEAL_CHUNKS_PER_WORKER: usize = 4;
+
+/// Estimated cost (in merge steps, ≥ 1) of every task of one support
+/// pass: one entry per **row** for [`Mode::Coarse`], one entry per
+/// **slot** for [`Mode::Fine`]. Terminator/tombstone slots cost 1 (the
+/// terminator check itself).
+pub fn estimate_costs(z: &ZCsr, mode: Mode) -> Vec<u64> {
+    let n = z.n();
+    let col = z.col();
+    // live entries per row (rows are kept compacted by prune)
+    let live: Vec<u32> = (0..n).map(|i| z.row_live(i).len() as u32).collect();
+    match mode {
+        Mode::Coarse => (0..n)
+            .map(|i| {
+                let (start, _) = z.row_span(i);
+                let li = live[i] as usize;
+                let mut cost = 1u64;
+                for off in 0..li {
+                    let kappa = col[start + off] as usize;
+                    let tail = (li - off - 1) as u64;
+                    cost += 1 + tail + live[kappa] as u64;
+                }
+                cost
+            })
+            .collect(),
+        Mode::Fine => {
+            let mut costs = vec![1u64; z.slots()];
+            for i in 0..n {
+                let (start, _) = z.row_span(i);
+                let li = live[i] as usize;
+                for off in 0..li {
+                    let kappa = col[start + off] as usize;
+                    let tail = (li - off - 1) as u64;
+                    costs[start + off] = 1 + tail + live[kappa] as u64;
+                }
+            }
+            costs
+        }
+    }
+}
+
+/// Scan-based binning: pack `costs.len()` tasks into `bins` contiguous
+/// half-open ranges of approximately equal total cost, via prefix sums
+/// and quantile binary search. The ranges partition `0..costs.len()`
+/// exactly (some may be empty), in order.
+///
+/// Balance guarantee: every bin's work ≤ `total/bins + max(costs)`
+/// (the quantile boundary can overshoot by at most one task).
+pub fn scan_bins(costs: &[u64], bins: usize) -> Vec<(usize, usize)> {
+    let n = costs.len();
+    let bins = bins.max(1);
+    let mut prefix: Vec<u64> = Vec::with_capacity(n + 1);
+    prefix.push(0);
+    let mut acc = 0u64;
+    for &c in costs {
+        acc = acc.saturating_add(c);
+        prefix.push(acc);
+    }
+    let total = acc;
+    let mut out = Vec::with_capacity(bins);
+    let mut lo = 0usize;
+    for w in 1..=bins {
+        let hi = if w == bins {
+            n
+        } else {
+            let target = ((total as u128) * (w as u128) / (bins as u128)) as u64;
+            // first index whose prefix reaches the quantile — the
+            // boundary task lands in the *current* bin, so a single
+            // giant task is isolated rather than pushed downstream
+            prefix.partition_point(|&x| x < target).clamp(lo, n)
+        };
+        out.push((lo, hi));
+        lo = hi;
+    }
+    out
+}
+
+/// Split `0..n` into `chunks` contiguous ranges of approximately equal
+/// *count* (the cost-oblivious fallback when no estimate is available).
+pub fn even_chunks(n: usize, chunks: usize) -> Vec<(usize, usize)> {
+    let chunks = chunks.max(1).min(n.max(1));
+    (0..chunks).map(|c| (n * c / chunks, n * (c + 1) / chunks)).collect()
+}
+
+/// Execute `chunks` on `workers` threads with work stealing, invoking
+/// `run_chunk(worker, lo, hi)` once per chunk. Chunks are dealt
+/// round-robin into per-worker deques; a worker pops its own deque from
+/// the front and steals from a victim's back when empty. Workers never
+/// block: one full empty sweep means global completion (chunks cannot
+/// spawn chunks), so the worker exits.
+pub fn run_stealing_chunks(
+    workers: usize,
+    chunks: Vec<(usize, usize)>,
+    run_chunk: impl Fn(usize, usize, usize) + Sync,
+) {
+    let workers = workers.max(1);
+    if workers == 1 {
+        for (lo, hi) in chunks {
+            run_chunk(0, lo, hi);
+        }
+        return;
+    }
+    let queues: Vec<Mutex<VecDeque<(usize, usize)>>> =
+        (0..workers).map(|_| Mutex::new(VecDeque::new())).collect();
+    for (idx, (lo, hi)) in chunks.into_iter().enumerate() {
+        if lo < hi {
+            queues[idx % workers].lock().unwrap().push_back((lo, hi));
+        }
+    }
+    std::thread::scope(|scope| {
+        for w in 0..workers {
+            let run_chunk = &run_chunk;
+            let queues = &queues;
+            scope.spawn(move || loop {
+                let own = queues[w].lock().unwrap().pop_front();
+                let (lo, hi) = match own {
+                    Some(c) => c,
+                    None => {
+                        let mut stolen = None;
+                        for off in 1..workers {
+                            let victim = (w + off) % workers;
+                            if let Some(c) = queues[victim].lock().unwrap().pop_back() {
+                                stolen = Some(c);
+                                break;
+                            }
+                        }
+                        match stolen {
+                            Some(c) => c,
+                            None => break, // all deques empty — done
+                        }
+                    }
+                };
+                run_chunk(w, lo, hi);
+            });
+        }
+    });
+}
+
+/// Per-index convenience over [`run_stealing_chunks`]: `f(worker, i)`
+/// for every index covered by `chunks`, each exactly once.
+pub fn run_stealing(
+    workers: usize,
+    chunks: Vec<(usize, usize)>,
+    f: impl Fn(usize, usize) + Sync,
+) {
+    run_stealing_chunks(workers, chunks, |w, lo, hi| {
+        for i in lo..hi {
+            f(w, i);
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::from_sorted_unique;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn scan_bins_partition_exactly() {
+        let costs: Vec<u64> = (0..97).map(|i| (i % 7) + 1).collect();
+        for bins in [1usize, 2, 3, 8, 97, 200] {
+            let b = scan_bins(&costs, bins);
+            assert_eq!(b.len(), bins.max(1));
+            assert_eq!(b[0].0, 0);
+            assert_eq!(b[b.len() - 1].1, costs.len());
+            for w in b.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "bins must be contiguous");
+                assert!(w[0].0 <= w[0].1);
+            }
+        }
+    }
+
+    #[test]
+    fn scan_bins_balance_bound() {
+        // heavily skewed costs: one giant task among many small ones
+        let mut costs = vec![2u64; 500];
+        costs[137] = 10_000;
+        let bins = 8;
+        let b = scan_bins(&costs, bins);
+        let total: u64 = costs.iter().sum();
+        let max_cost = *costs.iter().max().unwrap();
+        for &(lo, hi) in &b {
+            let work: u64 = costs[lo..hi].iter().sum();
+            assert!(
+                work <= total / bins as u64 + max_cost + 1,
+                "bin [{lo},{hi}) work {work} exceeds bound"
+            );
+        }
+    }
+
+    #[test]
+    fn scan_bins_uniform_costs_are_even_blocks() {
+        let costs = vec![3u64; 64];
+        let b = scan_bins(&costs, 4);
+        assert_eq!(b, vec![(0, 16), (16, 32), (32, 48), (48, 64)]);
+    }
+
+    #[test]
+    fn scan_bins_empty_costs() {
+        assert_eq!(scan_bins(&[], 4), vec![(0, 0); 4]);
+    }
+
+    #[test]
+    fn even_chunks_cover() {
+        for (n, k) in [(10usize, 3usize), (0, 4), (5, 9), (100, 1)] {
+            let c = even_chunks(n, k);
+            let covered: usize = c.iter().map(|(lo, hi)| hi - lo).sum();
+            assert_eq!(covered, n, "n={n} k={k}");
+            if let Some(&(lo, _)) = c.first() {
+                assert_eq!(lo, 0);
+            }
+            if let Some(&(_, hi)) = c.last() {
+                assert_eq!(hi, n);
+            }
+        }
+    }
+
+    #[test]
+    fn stealing_covers_every_index_once() {
+        let n = 1000;
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        let chunks = even_chunks(n, 13);
+        run_stealing(4, chunks, |_, i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn stealing_more_workers_than_chunks_terminates() {
+        // the many-threads-few-tasks corner: most workers find every
+        // deque empty and must exit after one sweep
+        let n = 3;
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        run_stealing(16, vec![(0, 1), (1, 2), (2, 3)], |_, i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn stealing_no_chunks_is_noop() {
+        run_stealing(8, Vec::new(), |_, _| panic!("no work exists"));
+    }
+
+    #[test]
+    fn estimate_costs_shapes_and_bounds() {
+        // diamond: row0 [1,2,3,0] row1 [2,0] row2 [3,0] row3 [0]
+        let g = from_sorted_unique(4, &[(0, 1), (0, 2), (0, 3), (1, 2), (2, 3)]);
+        let z = crate::graph::ZCsr::from_csr(&g);
+        let fine = estimate_costs(&z, Mode::Fine);
+        assert_eq!(fine.len(), z.slots());
+        assert!(fine.iter().all(|&c| c >= 1));
+        let coarse = estimate_costs(&z, Mode::Coarse);
+        assert_eq!(coarse.len(), z.n());
+        // the coarse estimate dominates the exact trace (upper bound)
+        let mut s = Vec::new();
+        let tr = crate::cost::trace::trace_supports(&z, &mut s);
+        for i in 0..z.n() {
+            assert!(
+                coarse[i] >= tr.row_steps(z.row_ptr(), i),
+                "row {i}: estimate {} below actual {}",
+                coarse[i],
+                tr.row_steps(z.row_ptr(), i)
+            );
+        }
+    }
+
+    #[test]
+    fn fine_estimates_upper_bound_actual_steps() {
+        let g = crate::gen::rmat::rmat(
+            300,
+            2000,
+            crate::gen::rmat::RmatParams::social(),
+            &mut crate::util::Rng::new(11),
+        );
+        let z = crate::graph::ZCsr::from_csr(&g);
+        let mut s = Vec::new();
+        let tr = crate::cost::trace::trace_supports(&z, &mut s);
+        let est = estimate_costs(&z, Mode::Fine);
+        for (p, (&e, &actual)) in est.iter().zip(tr.fine_steps.iter()).enumerate() {
+            assert!(e >= actual as u64, "slot {p}: estimate {e} < actual {actual}");
+        }
+    }
+}

@@ -1,9 +1,12 @@
 //! Kokkos-style parallel substrate: a scoped worker pool with
-//! static/dynamic range scheduling, and the concurrent (atomic)
-//! realizations of the support and prune kernels.
+//! static/dynamic range scheduling, work-aware scan-binned and
+//! work-stealing schedules (see [`balance`]), and the concurrent
+//! (atomic) realizations of the support and prune kernels.
 
+pub mod balance;
 pub mod parallel_support;
 pub mod pool;
 
+pub use balance::{estimate_costs, scan_bins};
 pub use parallel_support::{compute_supports_par, ktruss_par, prune_par};
-pub use pool::{Pool, Schedule};
+pub use pool::{Pool, Schedule, ALL_SCHEDULES};

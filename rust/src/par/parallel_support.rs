@@ -5,7 +5,13 @@
 //! fine-grained tasks racing on shared `S₂₂` rows is the whole point,
 //! and relaxed fetch-adds are sufficient because supports are pure
 //! commutative counters read only after the pass completes.
+//!
+//! The work-aware schedules ([`Schedule::WorkAware`],
+//! [`Schedule::Stealing`]) feed per-task cost estimates from
+//! [`super::balance::estimate_costs`] into the pool; the cost-oblivious
+//! schedules run the plain parallel-for.
 
+use super::balance;
 use super::pool::{Pool, Schedule};
 use crate::algo::support::{eager_update_atomic, Mode};
 use crate::graph::ZCsr;
@@ -16,6 +22,11 @@ pub fn compute_supports_par(z: &ZCsr, pool: &Pool, mode: Mode, schedule: Schedul
     let s: Vec<AtomicU32> = (0..z.slots()).map(|_| AtomicU32::new(0)).collect();
     compute_supports_into(z, pool, mode, schedule, &s);
     s.into_iter().map(|x| x.into_inner()).collect()
+}
+
+/// Whether `schedule` wants per-task cost estimates.
+fn needs_costs(schedule: Schedule) -> bool {
+    matches!(schedule, Schedule::WorkAware | Schedule::Stealing)
 }
 
 /// Run one support pass into an existing (zeroed) atomic array.
@@ -32,7 +43,7 @@ pub fn compute_supports_into(
         Mode::Coarse => {
             // one task per row (paper Algorithm 2): the task walks all
             // live entries of a₁₂ᵀ
-            pool.parallel_for(z.n(), schedule, |_, i| {
+            let task = |_w: usize, i: usize| {
                 let (start, end) = z.row_span(i);
                 for p in start..end {
                     let kappa = col[p];
@@ -42,30 +53,51 @@ pub fn compute_supports_into(
                     let (r0, _) = z.row_span(kappa as usize);
                     eager_update_atomic(col, s, p, r0);
                 }
-            });
+            };
+            if needs_costs(schedule) {
+                let costs = balance::estimate_costs(z, mode);
+                pool.parallel_for_costed(z.n(), &costs, schedule, task);
+            } else {
+                pool.parallel_for(z.n(), schedule, task);
+            }
         }
         Mode::Fine => {
             // one task per slot (paper Algorithm 3 / Listing 1): a flat
             // range over the zero-terminated nonzero array; terminator
             // and tombstone slots are trivial no-ops, exactly as in the
             // paper's flat RangePolicy formulation
-            pool.parallel_for(z.slots(), schedule, |_, p| {
+            let task = |_w: usize, p: usize| {
                 let kappa = col[p];
                 if kappa == 0 {
                     return;
                 }
                 let (r0, _) = z.row_span(kappa as usize);
                 eager_update_atomic(col, s, p, r0);
-            });
+            };
+            if needs_costs(schedule) {
+                let costs = balance::estimate_costs(z, mode);
+                pool.parallel_for_costed(z.slots(), &costs, schedule, task);
+            } else {
+                pool.parallel_for(z.slots(), schedule, task);
+            }
         }
     }
 }
 
 /// Concurrent prune: each row is compacted independently (rows never
 /// share slots), so a plain parallel-for over rows with interior
-/// mutability via raw pointer partitioning is safe.
-pub fn prune_par(z: &mut ZCsr, s: &mut [u32], k: u32, pool: &Pool) -> crate::algo::prune::PruneOutcome {
+/// mutability via raw pointer partitioning is safe. Work-aware
+/// schedules bin rows by slot count (compaction cost is linear in the
+/// row's slot span).
+pub fn prune_par(
+    z: &mut ZCsr,
+    s: &mut [u32],
+    k: u32,
+    pool: &Pool,
+    schedule: Schedule,
+) -> crate::algo::prune::PruneOutcome {
     use std::sync::atomic::AtomicUsize;
+    assert_eq!(s.len(), z.slots());
     let threshold = k.saturating_sub(2);
     let removed = AtomicUsize::new(0);
     let remaining = AtomicUsize::new(0);
@@ -73,7 +105,7 @@ pub fn prune_par(z: &mut ZCsr, s: &mut [u32], k: u32, pool: &Pool) -> crate::alg
     let row_ptr: Vec<(usize, usize)> = (0..n).map(|i| z.row_span(i)).collect();
     let col_ptr = SendPtr(z.col_mut().as_mut_ptr());
     let s_ptr = SendPtr(s.as_mut_ptr());
-    pool.parallel_for(n, Schedule::Static, |_, i| {
+    let body = |_w: usize, i: usize| {
         let (start, end) = row_ptr[i];
         // SAFETY: rows are disjoint slot ranges; each i touches only
         // [start, end) of both arrays.
@@ -101,7 +133,13 @@ pub fn prune_par(z: &mut ZCsr, s: &mut [u32], k: u32, pool: &Pool) -> crate::alg
         }
         removed.fetch_add(local_removed, Ordering::Relaxed);
         remaining.fetch_add(write, Ordering::Relaxed);
-    });
+    };
+    if needs_costs(schedule) {
+        let costs: Vec<u64> = row_ptr.iter().map(|&(lo, hi)| (hi - lo) as u64).collect();
+        pool.parallel_for_costed(n, &costs, schedule, body);
+    } else {
+        pool.parallel_for(n, schedule, body);
+    }
     crate::algo::prune::PruneOutcome {
         removed: removed.into_inner(),
         remaining: remaining.into_inner(),
@@ -145,7 +183,7 @@ pub fn ktruss_par(
             *d = a.swap(0, Ordering::Relaxed);
         }
         let support_steps = s_plain.iter().map(|&x| x as u64).sum::<u64>() + live as u64;
-        let out = prune_par(&mut z, &mut s_plain, k, pool);
+        let out = prune_par(&mut z, &mut s_plain, k, pool, schedule);
         iterations += 1;
         stats.push(crate::algo::ktruss::IterationStat {
             live_edges: live,
@@ -164,6 +202,7 @@ mod tests {
     use super::*;
     use crate::algo::ktruss::ktruss;
     use crate::algo::support::compute_supports_seq;
+    use crate::par::pool::ALL_SCHEDULES;
 
     fn random_graph(seed: u64) -> crate::graph::Csr {
         crate::gen::rmat::rmat(
@@ -182,7 +221,7 @@ mod tests {
         compute_supports_seq(&z, &mut want);
         let pool = Pool::new(4);
         for mode in [Mode::Coarse, Mode::Fine] {
-            for sched in [Schedule::Static, Schedule::Dynamic { chunk: 16 }] {
+            for sched in ALL_SCHEDULES {
                 let got = compute_supports_par(&z, &pool, mode, sched);
                 assert_eq!(got, want, "{mode} {sched:?}");
             }
@@ -196,9 +235,11 @@ mod tests {
         for k in [3u32, 5] {
             let seq = ktruss(&g, k, Mode::Fine);
             for mode in [Mode::Coarse, Mode::Fine] {
-                let par = ktruss_par(&g, k, &pool, mode, Schedule::Dynamic { chunk: 64 });
-                assert_eq!(par.truss, seq.truss, "k={k} {mode}");
-                assert_eq!(par.iterations, seq.iterations, "k={k} {mode}");
+                for sched in [Schedule::Dynamic { chunk: 64 }, Schedule::WorkAware] {
+                    let par = ktruss_par(&g, k, &pool, mode, sched);
+                    assert_eq!(par.truss, seq.truss, "k={k} {mode} {sched:?}");
+                    assert_eq!(par.iterations, seq.iterations, "k={k} {mode} {sched:?}");
+                }
             }
         }
     }
@@ -206,16 +247,86 @@ mod tests {
     #[test]
     fn prune_par_matches_seq() {
         let g = random_graph(3);
-        let mut z1 = ZCsr::from_csr(&g);
-        let mut z2 = z1.clone();
-        let mut s1 = Vec::new();
-        compute_supports_seq(&z1, &mut s1);
-        let mut s2 = s1.clone();
-        let pool = Pool::new(3);
+        let z0 = ZCsr::from_csr(&g);
+        let mut s0 = Vec::new();
+        compute_supports_seq(&z0, &mut s0);
+        let mut z1 = z0.clone();
+        let mut s1 = s0.clone();
         let a = crate::algo::prune::prune(&mut z1, &mut s1, 4);
-        let b = prune_par(&mut z2, &mut s2, 4, &pool);
-        assert_eq!(a, b);
-        assert_eq!(z1, z2);
-        assert_eq!(s1, s2);
+        let pool = Pool::new(3);
+        for sched in ALL_SCHEDULES {
+            let mut z2 = z0.clone();
+            let mut s2 = s0.clone();
+            let b = prune_par(&mut z2, &mut s2, 4, &pool, sched);
+            assert_eq!(a, b, "{sched:?}");
+            assert_eq!(z1, z2, "{sched:?}");
+            assert_eq!(s1, s2, "{sched:?}");
+        }
+    }
+
+    #[test]
+    fn prune_par_empty_graph() {
+        let g = crate::graph::Csr::empty(0);
+        let pool = Pool::new(4);
+        for sched in ALL_SCHEDULES {
+            let mut z = ZCsr::from_csr(&g);
+            let mut s: Vec<u32> = vec![0; z.slots()];
+            let out = prune_par(&mut z, &mut s, 3, &pool, sched);
+            assert_eq!(out.removed, 0, "{sched:?}");
+            assert_eq!(out.remaining, 0, "{sched:?}");
+        }
+        // vertices but no edges: every row is just its terminator
+        let g = crate::graph::Csr::empty(5);
+        for sched in ALL_SCHEDULES {
+            let mut z = ZCsr::from_csr(&g);
+            let mut s: Vec<u32> = vec![0; z.slots()];
+            let out = prune_par(&mut z, &mut s, 3, &pool, sched);
+            assert_eq!((out.removed, out.remaining), (0, 0), "{sched:?}");
+            assert!(crate::graph::validate::check_zcsr(&z).is_ok(), "{sched:?}");
+        }
+    }
+
+    #[test]
+    fn prune_par_all_edges_die_in_one_pass() {
+        // a path has zero support everywhere: k=3 kills every edge at once
+        let g = crate::testkit::graphs::path(12);
+        let pool = Pool::new(3);
+        for sched in ALL_SCHEDULES {
+            let mut z = ZCsr::from_csr(&g);
+            let mut s = Vec::new();
+            compute_supports_seq(&z, &mut s);
+            let out = prune_par(&mut z, &mut s, 3, &pool, sched);
+            assert_eq!(out.removed, g.nnz(), "{sched:?}");
+            assert_eq!(out.remaining, 0, "{sched:?}");
+            assert_eq!(z.live_edges(), 0, "{sched:?}");
+            assert!(s.iter().all(|&x| x == 0), "{sched:?}: supports reset");
+            assert!(crate::graph::validate::check_zcsr(&z).is_ok(), "{sched:?}");
+        }
+    }
+
+    #[test]
+    fn prune_par_row_of_only_tombstones() {
+        // craft a working form whose row 0 is entirely tombstones (a
+        // prior pass killed the whole row): prune must leave it alone
+        // and still compact the healthy rows correctly
+        let g = crate::graph::builder::from_sorted_unique(
+            4,
+            &[(0, 1), (0, 2), (0, 3), (1, 2), (2, 3)],
+        );
+        let pool = Pool::new(4);
+        for sched in ALL_SCHEDULES {
+            let mut z = ZCsr::from_csr(&g);
+            let (start, end) = z.row_span(0);
+            for p in start..end {
+                z.col_mut()[p] = 0;
+            }
+            let mut s = vec![5u32; z.slots()];
+            let out = prune_par(&mut z, &mut s, 3, &pool, sched);
+            assert_eq!(out.removed, 0, "{sched:?}");
+            assert_eq!(out.remaining, 2, "{sched:?}"); // (1,2) and (2,3) survive
+            assert_eq!(z.row_live(0), &[] as &[u32], "{sched:?}");
+            assert!(s.iter().all(|&x| x == 0), "{sched:?}");
+            assert!(crate::graph::validate::check_zcsr(&z).is_ok(), "{sched:?}");
+        }
     }
 }

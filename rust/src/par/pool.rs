@@ -5,11 +5,21 @@
 //! Timing on this container is meaningless for the paper's experiments
 //! (1 hardware core) — the calibrated models in [`crate::sim`] produce
 //! the 48-thread/GPU timing instead (DESIGN.md §2).
+//!
+//! Beyond the paper's `Static`/`Dynamic` pair, the pool executes the
+//! two work-aware schedules from [`super::balance`]: scan-binned
+//! equal-work chunks (`WorkAware`) and chunk deques with work stealing
+//! (`Stealing`). Cost estimates flow in through
+//! [`Pool::parallel_for_costed`]; without estimates the work-aware
+//! schedules degrade to their cost-oblivious equivalents.
 
+use super::balance;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// How a 1-D iteration range is divided among workers, mirroring the
-/// schedules Kokkos'/OpenMP's `RangePolicy` offers.
+/// schedules Kokkos'/OpenMP's `RangePolicy` offers plus the two
+/// work-aware strategies from the load-balancing literature
+/// (see [`super::balance`] for the technique-to-paper mapping).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Schedule {
     /// Contiguous equal-count blocks, one per worker (OpenMP default,
@@ -17,6 +27,50 @@ pub enum Schedule {
     Static,
     /// Workers grab fixed-size chunks from a shared counter.
     Dynamic { chunk: usize },
+    /// Scan-binned contiguous chunks of approximately equal estimated
+    /// *work*, one per worker (Hornet `ScanBased`/`BinarySearch`
+    /// idiom). Falls back to `Static` when no cost estimate is
+    /// available.
+    WorkAware,
+    /// Per-worker chunk deques (seeded by scan binning) with work
+    /// stealing from victims' tails.
+    Stealing,
+}
+
+impl std::fmt::Display for Schedule {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Schedule::Static => write!(f, "static"),
+            Schedule::Dynamic { chunk } => write!(f, "dynamic:{chunk}"),
+            Schedule::WorkAware => write!(f, "workaware"),
+            Schedule::Stealing => write!(f, "stealing"),
+        }
+    }
+}
+
+impl std::str::FromStr for Schedule {
+    type Err = String;
+
+    /// Parse `static`, `dynamic`, `dynamic:<chunk>`, `workaware`,
+    /// `stealing` (the CLI `--schedule` grammar).
+    fn from_str(s: &str) -> Result<Schedule, String> {
+        match s {
+            "static" => Ok(Schedule::Static),
+            "dynamic" => Ok(Schedule::Dynamic { chunk: 256 }),
+            "workaware" | "work-aware" => Ok(Schedule::WorkAware),
+            "stealing" | "steal" => Ok(Schedule::Stealing),
+            other => other
+                .strip_prefix("dynamic:")
+                .and_then(|c| c.parse::<usize>().ok())
+                .filter(|&c| c > 0)
+                .map(|chunk| Schedule::Dynamic { chunk })
+                .ok_or_else(|| {
+                    format!(
+                        "unknown schedule {other:?} (expected static|dynamic[:chunk]|workaware|stealing)"
+                    )
+                }),
+        }
+    }
 }
 
 /// A fixed-width worker pool. Threads are spawned per call via
@@ -59,7 +113,9 @@ impl Pool {
             return;
         }
         match schedule {
-            Schedule::Static => {
+            // WorkAware without cost estimates degenerates to uniform
+            // costs, whose scan bins are exactly the static blocks.
+            Schedule::Static | Schedule::WorkAware => {
                 std::thread::scope(|scope| {
                     for w in 0..self.workers {
                         let f = &f;
@@ -93,6 +149,57 @@ impl Pool {
                     }
                 });
             }
+            Schedule::Stealing => {
+                let chunks =
+                    balance::even_chunks(n, self.workers * balance::STEAL_CHUNKS_PER_WORKER);
+                balance::run_stealing(self.workers, chunks, |w, i| f(w, i));
+            }
+        }
+    }
+
+    /// Parallel-for with per-task cost estimates (`costs.len() == n`).
+    /// `WorkAware` scan-bins the costs into one equal-work chunk per
+    /// worker; `Stealing` seeds the deques with equal-work chunks.
+    /// Cost-oblivious schedules ignore `costs`.
+    pub fn parallel_for_costed(
+        &self,
+        n: usize,
+        costs: &[u64],
+        schedule: Schedule,
+        f: impl Fn(usize, usize) + Sync,
+    ) {
+        assert_eq!(costs.len(), n, "one cost per task required");
+        if n == 0 {
+            return;
+        }
+        if self.workers == 1 {
+            for i in 0..n {
+                f(0, i);
+            }
+            return;
+        }
+        match schedule {
+            Schedule::WorkAware => {
+                let bins = balance::scan_bins(costs, self.workers);
+                std::thread::scope(|scope| {
+                    for (w, &(lo, hi)) in bins.iter().enumerate() {
+                        let f = &f;
+                        scope.spawn(move || {
+                            for i in lo..hi {
+                                f(w, i);
+                            }
+                        });
+                    }
+                });
+            }
+            Schedule::Stealing => {
+                let chunks = balance::scan_bins(
+                    costs,
+                    self.workers * balance::STEAL_CHUNKS_PER_WORKER,
+                );
+                balance::run_stealing(self.workers, chunks, |w, i| f(w, i));
+            }
+            other => self.parallel_for(n, other, f),
         }
     }
 
@@ -114,7 +221,7 @@ impl Pool {
         }
         let partials = std::sync::Mutex::new(Vec::with_capacity(self.workers));
         match schedule {
-            Schedule::Static => {
+            Schedule::Static | Schedule::WorkAware => {
                 std::thread::scope(|scope| {
                     for w in 0..self.workers {
                         let f = &f;
@@ -157,6 +264,19 @@ impl Pool {
                     }
                 });
             }
+            Schedule::Stealing => {
+                let chunks =
+                    balance::even_chunks(n, self.workers * balance::STEAL_CHUNKS_PER_WORKER);
+                // accumulate per chunk (chunks are coarse, so the
+                // per-chunk lock is off the hot path)
+                balance::run_stealing_chunks(self.workers, chunks, |_w, lo, hi| {
+                    let mut acc = identity();
+                    for i in lo..hi {
+                        f(i, &mut acc);
+                    }
+                    partials.lock().unwrap().push(acc);
+                });
+            }
         }
         partials
             .into_inner()
@@ -165,6 +285,14 @@ impl Pool {
             .fold(identity(), merge)
     }
 }
+
+/// Every schedule variant, for exhaustive test sweeps.
+pub const ALL_SCHEDULES: [Schedule; 4] = [
+    Schedule::Static,
+    Schedule::Dynamic { chunk: 16 },
+    Schedule::WorkAware,
+    Schedule::Stealing,
+];
 
 #[cfg(test)]
 mod tests {
@@ -192,6 +320,39 @@ mod tests {
     }
 
     #[test]
+    fn covers_every_index_all_schedules() {
+        for sched in ALL_SCHEDULES {
+            let pool = Pool::new(4);
+            let hits: Vec<AtomicUsize> = (0..251).map(|_| AtomicUsize::new(0)).collect();
+            pool.parallel_for(251, sched, |_, i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            assert!(
+                hits.iter().all(|h| h.load(Ordering::Relaxed) == 1),
+                "{sched:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn costed_covers_every_index_all_schedules() {
+        // skewed costs so the scan bins are genuinely uneven in count
+        let n = 300usize;
+        let costs: Vec<u64> = (0..n).map(|i| if i % 50 == 0 { 1000 } else { 1 }).collect();
+        for sched in ALL_SCHEDULES {
+            let pool = Pool::new(4);
+            let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+            pool.parallel_for_costed(n, &costs, sched, |_, i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            assert!(
+                hits.iter().all(|h| h.load(Ordering::Relaxed) == 1),
+                "{sched:?}"
+            );
+        }
+    }
+
+    #[test]
     fn single_worker_sequential() {
         let pool = Pool::new(1);
         let sum = AtomicU64::new(0);
@@ -204,13 +365,16 @@ mod tests {
 
     #[test]
     fn empty_range_is_noop() {
-        Pool::new(4).parallel_for(0, Schedule::Static, |_, _| panic!("should not run"));
+        for sched in ALL_SCHEDULES {
+            Pool::new(4).parallel_for(0, sched, |_, _| panic!("should not run"));
+            Pool::new(4).parallel_for_costed(0, &[], sched, |_, _| panic!("should not run"));
+        }
     }
 
     #[test]
     fn reduce_sums_correctly() {
         let pool = Pool::new(4);
-        for sched in [Schedule::Static, Schedule::Dynamic { chunk: 7 }] {
+        for sched in ALL_SCHEDULES {
             let total = pool.parallel_reduce(
                 1000,
                 sched,
@@ -220,5 +384,23 @@ mod tests {
             );
             assert_eq!(total, 499_500, "{sched:?}");
         }
+    }
+
+    #[test]
+    fn schedule_display_roundtrips_through_fromstr() {
+        for sched in [
+            Schedule::Static,
+            Schedule::Dynamic { chunk: 64 },
+            Schedule::WorkAware,
+            Schedule::Stealing,
+        ] {
+            let s = sched.to_string();
+            let back: Schedule = s.parse().unwrap_or_else(|e| panic!("{s}: {e}"));
+            assert_eq!(back, sched, "{s}");
+        }
+        assert_eq!("dynamic".parse::<Schedule>().unwrap(), Schedule::Dynamic { chunk: 256 });
+        assert!("nope".parse::<Schedule>().is_err());
+        assert!("dynamic:0".parse::<Schedule>().is_err());
+        assert!("dynamic:x".parse::<Schedule>().is_err());
     }
 }

@@ -8,7 +8,7 @@
 //! through a different runtime.
 
 use super::artifacts::{artifacts_dir, list_entries, pick_entry};
-use super::client::{Executable, Runtime};
+use super::client::{Executable, Runtime, Tensor};
 use crate::graph::{builder, Csr, Vid};
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
@@ -63,9 +63,8 @@ impl DenseEngine {
         let exe = self.executable("support", n)?;
         let block = pick_entry(&self.entries, "support", n).unwrap().n;
         let a = to_dense_symmetric(g, block);
-        let lit = xla::Literal::vec1(&a).reshape(&[block as i64, block as i64])?;
-        let out = exe.run(&[lit])?;
-        let s: Vec<f32> = out[0].to_vec()?;
+        let out = exe.run_f32(&[Tensor::matrix(a, block)])?;
+        let s = &out[0];
         Ok(g.edges()
             .map(|(u, v)| s[u as usize * block + v as usize] as u32)
             .collect())
@@ -84,11 +83,10 @@ impl DenseEngine {
         let mut a = to_dense_symmetric(g, block);
         let mut iterations = 0usize;
         loop {
-            let a_lit = xla::Literal::vec1(&a).reshape(&[block as i64, block as i64])?;
-            let threshold = xla::Literal::scalar(k.saturating_sub(2) as f32);
-            let out = exe.run(&[a_lit, threshold])?;
-            a = out[0].to_vec()?;
-            let removed: f32 = out[1].to_vec::<f32>()?[0];
+            let threshold = Tensor::scalar(k.saturating_sub(2) as f32);
+            let mut out = exe.run_f32(&[Tensor::matrix(a, block), threshold])?;
+            let removed: f32 = out[1][0];
+            a = out.swap_remove(0);
             iterations += 1;
             if removed == 0.0 {
                 break;

@@ -1,6 +1,10 @@
 //! PJRT runtime: loads the HLO-text artifacts that `make artifacts`
 //! produced from the jax/Pallas layers and executes them on the CPU
 //! PJRT client — python is never on this path.
+//!
+//! In the offline build the PJRT client itself is a stub (see
+//! [`client`]); the dense engine then degrades gracefully to the
+//! sparse path everywhere it is consumed.
 
 pub mod artifacts;
 pub mod client;

@@ -71,6 +71,31 @@ pub fn makespan_ns(costs: &[f64], threads: usize, schedule: Schedule) -> f64 {
             }
             makespan as f64 / 16.0
         }
+        Schedule::WorkAware => {
+            // scan-binned equal-work contiguous chunks, one per thread.
+            // Same binner the pool runs, but fed the *exact* traced
+            // costs rather than the pool's static upper-bound estimates
+            // — i.e. an idealized (best-case) work-aware makespan.
+            let fixed: Vec<u64> = costs.iter().map(|&c| (c * 16.0).round() as u64 + 1).collect();
+            let bins = crate::par::balance::scan_bins(&fixed, threads);
+            bins.iter()
+                .map(|&(lo, hi)| costs[lo..hi].iter().sum::<f64>())
+                .fold(0.0, f64::max)
+        }
+        Schedule::Stealing => {
+            // idealized stealing ≈ per-task self-scheduling: greedy
+            // earliest-finish assignment (what the deques converge to
+            // once steal granularity is fine enough)
+            let mut heap: BinaryHeap<Reverse<u64>> = (0..threads).map(|_| Reverse(0u64)).collect();
+            let mut makespan = 0u64;
+            for &c in costs {
+                let Reverse(t) = heap.pop().unwrap();
+                let done = t + (c * 16.0).round() as u64;
+                makespan = makespan.max(done);
+                heap.push(Reverse(done));
+            }
+            makespan as f64 / 16.0
+        }
     }
 }
 
@@ -133,6 +158,25 @@ mod tests {
         let costs = vec![3.0, 5.0, 2.0];
         assert!((makespan_ns(&costs, 1, Schedule::Static) - 10.0).abs() < 1e-9);
         assert!((makespan_ns(&costs, 1, Schedule::Dynamic { chunk: 2 }) - 10.0).abs() < 0.2);
+        assert!((makespan_ns(&costs, 1, Schedule::WorkAware) - 10.0).abs() < 1e-9);
+        assert!((makespan_ns(&costs, 1, Schedule::Stealing) - 10.0).abs() < 0.2);
+    }
+
+    #[test]
+    fn workaware_and_stealing_bounded_on_skewed_costs() {
+        // one huge task among many small: the imbalance the schedules fix
+        let mut costs = vec![1000.0];
+        costs.extend(std::iter::repeat(1.0).take(999));
+        let total: f64 = costs.iter().sum();
+        let static_ms = makespan_ns(&costs, 8, Schedule::Static);
+        for sched in [Schedule::WorkAware, Schedule::Stealing] {
+            let m = makespan_ns(&costs, 8, sched);
+            // sandwich: critical path ≤ m ≤ total, and never beyond
+            // 2× static (provable: ≤ total/threads + max ≤ 2·static)
+            assert!(m >= 1000.0 - 1.0, "{sched:?}: {m}");
+            assert!(m <= total + 1.0, "{sched:?}: {m}");
+            assert!(m <= 2.0 * static_ms + 1.0, "{sched:?}: {m} vs static {static_ms}");
+        }
     }
 
     #[test]

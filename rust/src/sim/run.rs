@@ -54,6 +54,17 @@ impl SimConfig {
             schedule: Schedule::Static,
         }
     }
+
+    /// CPU configuration with an explicit schedule (the schedule
+    /// ablation axis: static | dynamic | workaware | stealing).
+    pub fn cpu_sched(threads: usize, mode: Mode, schedule: Schedule) -> SimConfig {
+        SimConfig {
+            label: format!("CPU-{}-{}t-{}", short(mode), threads, schedule),
+            device: Device::Cpu(CpuMachine::skylake_8160(threads)),
+            mode,
+            schedule,
+        }
+    }
 }
 
 fn short(mode: Mode) -> &'static str {

@@ -1,0 +1,134 @@
+//! Integration: the work-aware schedules end-to-end on the workloads
+//! they exist for — skewed power-law replicas and adversarial
+//! star/hub graphs — plus a stress test for the stealing path's
+//! termination in the many-threads-few-tasks corner.
+
+use ktruss::algo::ktruss::ktruss;
+use ktruss::algo::support::{compute_supports_seq, Mode};
+use ktruss::graph::builder::from_sorted_unique;
+use ktruss::graph::{validate, Csr, Vid, ZCsr};
+use ktruss::par::{compute_supports_par, ktruss_par, Pool, Schedule};
+use ktruss::util::Rng;
+
+/// A star with a triangle fringe: vertex 0 connects to everyone (the
+/// pathological hot row for coarse scheduling) and consecutive leaves
+/// are chained so triangles (0, i, i+1) exist.
+fn star_with_fringe(leaves: usize) -> Csr {
+    let mut edges: Vec<(Vid, Vid)> = Vec::new();
+    for v in 1..=leaves as Vid {
+        edges.push((0, v));
+    }
+    for v in 1..leaves as Vid {
+        edges.push((v, v + 1));
+    }
+    edges.sort_unstable();
+    from_sorted_unique(leaves + 1, &edges)
+}
+
+fn skewed_rmat(seed: u64) -> Csr {
+    ktruss::gen::rmat::rmat(
+        2000,
+        14_000,
+        ktruss::gen::rmat::RmatParams::autonomous_system(),
+        &mut Rng::new(seed),
+    )
+}
+
+#[test]
+fn skewed_rmat_ktruss_matches_sequential_under_new_schedules() {
+    let g = skewed_rmat(42);
+    let pool = Pool::new(4);
+    for k in [3u32, 4] {
+        let want = ktruss(&g, k, Mode::Fine);
+        for sched in [Schedule::WorkAware, Schedule::Stealing] {
+            for mode in [Mode::Coarse, Mode::Fine] {
+                let got = ktruss_par(&g, k, &pool, mode, sched);
+                assert_eq!(got.truss, want.truss, "k={k} {mode} {sched:?}");
+                assert_eq!(got.iterations, want.iterations, "k={k} {mode} {sched:?}");
+                assert!(validate::check(&got.truss).is_ok(), "k={k} {mode} {sched:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn star_graph_hot_row_all_schedules_agree() {
+    // the one-huge-task workload: coarse scheduling puts ~all work in
+    // row 0, exactly what work-aware binning must survive
+    let g = star_with_fringe(400);
+    let z = ZCsr::from_csr(&g);
+    let mut want = Vec::new();
+    compute_supports_seq(&z, &mut want);
+    let pool = Pool::new(4);
+    for mode in [Mode::Coarse, Mode::Fine] {
+        for sched in [Schedule::WorkAware, Schedule::Stealing] {
+            let got = compute_supports_par(&z, &pool, mode, sched);
+            assert_eq!(got, want, "{mode} {sched:?}");
+        }
+    }
+    // and the truss itself: every (0,i,i+1) triangle keeps its edges
+    let want_truss = ktruss(&g, 3, Mode::Fine);
+    for sched in [Schedule::WorkAware, Schedule::Stealing] {
+        let got = ktruss_par(&g, 3, &pool, Mode::Coarse, sched);
+        assert_eq!(got.truss, want_truss.truss, "{sched:?}");
+    }
+}
+
+#[test]
+fn star_cost_estimate_identifies_the_hot_row() {
+    let g = star_with_fringe(300);
+    let z = ZCsr::from_csr(&g);
+    let costs = ktruss::par::estimate_costs(&z, Mode::Coarse);
+    let hot = costs[0];
+    let rest_max = costs[1..].iter().max().copied().unwrap_or(0);
+    assert!(
+        hot > 10 * rest_max.max(1),
+        "row 0 estimate {hot} should dwarf the rest (max {rest_max})"
+    );
+    // and the binner must isolate it: with 4 bins, the hot row's bin
+    // carries row 0 alone or nearly so
+    let bins = ktruss::par::scan_bins(&costs, 4);
+    let hot_bin = bins.iter().find(|&&(lo, hi)| lo == 0 && hi > 0).unwrap();
+    let hot_bin_rows = hot_bin.1 - hot_bin.0;
+    assert!(
+        hot_bin_rows < costs.len() / 2,
+        "hot bin spans {hot_bin_rows} rows — binning failed to isolate the hub"
+    );
+}
+
+#[test]
+fn many_threads_few_tasks_terminates() {
+    // 32 workers, a graph with 4 rows: most stealing workers find
+    // nothing and must exit cleanly (no lost-wakeup/deadlock). Repeat
+    // to give races a chance to bite.
+    let g = from_sorted_unique(4, &[(0, 1), (0, 2), (0, 3), (1, 2), (2, 3)]);
+    let z = ZCsr::from_csr(&g);
+    let mut want = Vec::new();
+    compute_supports_seq(&z, &mut want);
+    let pool = Pool::new(32);
+    for trial in 0..50 {
+        for sched in [Schedule::Stealing, Schedule::WorkAware] {
+            let got = compute_supports_par(&z, &pool, Mode::Fine, sched);
+            assert_eq!(got, want, "trial {trial} {sched:?}");
+        }
+    }
+    // empty graph through the full pooled driver, all schedules
+    let empty = Csr::empty(6);
+    for sched in [Schedule::Stealing, Schedule::WorkAware] {
+        let r = ktruss_par(&empty, 3, &pool, Mode::Fine, sched);
+        assert_eq!(r.truss.nnz(), 0, "{sched:?}");
+    }
+}
+
+#[test]
+fn oversubscribed_pool_on_skewed_graph() {
+    // more workers than a small skewed graph can feed: correctness and
+    // termination under heavy stealing contention
+    let g = skewed_rmat(7);
+    let z = ZCsr::from_csr(&g);
+    let mut want = Vec::new();
+    compute_supports_seq(&z, &mut want);
+    let pool = Pool::new(16);
+    let got = compute_supports_par(&z, &pool, Mode::Coarse, Schedule::Stealing);
+    assert_eq!(got, want);
+}

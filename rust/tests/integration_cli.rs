@@ -85,6 +85,45 @@ fn generate_writes_loadable_file() {
 }
 
 #[test]
+fn run_accepts_every_schedule() {
+    for sched in ["static", "dynamic:64", "workaware", "stealing"] {
+        let (stdout, stderr, ok) = ktruss(&[
+            "run",
+            "--graph",
+            "as20000102",
+            "--k",
+            "3",
+            "--scale",
+            "0.05",
+            "--par",
+            "2",
+            "--schedule",
+            sched,
+        ]);
+        assert!(ok, "--schedule {sched}: {stderr}");
+        assert!(stdout.contains("3-truss:"), "--schedule {sched}: {stdout}");
+    }
+}
+
+#[test]
+fn run_rejects_bad_schedule() {
+    let (_, stderr, ok) = ktruss(&[
+        "run", "--graph", "ca-GrQc", "--scale", "0.05", "--par", "2", "--schedule", "bogus",
+    ]);
+    assert!(!ok);
+    assert!(stderr.contains("schedule"), "stderr: {stderr}");
+}
+
+#[test]
+fn serve_accepts_schedule_override() {
+    let (stdout, stderr, ok) =
+        ktruss(&["serve", "--jobs", "6", "--pool", "2", "--schedule", "workaware"]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("schedule=workaware"), "stdout: {stdout}");
+    assert!(stdout.contains("all 6 jobs completed"), "stdout: {stdout}");
+}
+
+#[test]
 fn run_rejects_missing_graph_flag() {
     let (_, stderr, ok) = ktruss(&["run"]);
     assert!(!ok);

@@ -1,0 +1,187 @@
+//! Property tests for the work-aware scheduling subsystem
+//! (`par::balance` + the new `Schedule` variants): schedule-independent
+//! correctness of the support pass over every generator family, and
+//! the scan binner's partition/balance invariants.
+
+use ktruss::algo::support::{compute_supports_seq, Mode};
+use ktruss::gen::suite;
+use ktruss::graph::ZCsr;
+use ktruss::par::{balance, compute_supports_par, Pool, Schedule, ALL_SCHEDULES};
+use ktruss::testkit::graphs::arbitrary_graph;
+use ktruss::testkit::{forall, Config};
+
+/// The support array must be schedule-invariant: every schedule (old
+/// and new), in both granularities, reproduces the sequential result
+/// exactly, on arbitrary random graphs.
+#[test]
+fn prop_supports_schedule_invariant_on_arbitrary_graphs() {
+    forall(Config::cases(15), arbitrary_graph, |g| {
+        let z = ZCsr::from_csr(g);
+        let mut want = Vec::new();
+        compute_supports_seq(&z, &mut want);
+        let pool = Pool::new(4);
+        for mode in [Mode::Coarse, Mode::Fine] {
+            for sched in ALL_SCHEDULES {
+                let got = compute_supports_par(&z, &pool, mode, sched);
+                if got != want {
+                    return Err(format!("{mode} {sched:?}: parallel supports diverge"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Same invariant over every *suite generator family* (collab, p2p,
+/// autonomous-system, social, co-purchase, road replicas).
+#[test]
+fn prop_supports_schedule_invariant_on_every_suite_family() {
+    let representatives = [
+        "ca-GrQc",          // Collab
+        "p2p-Gnutella08",   // P2p
+        "as20000102",       // AutonomousSystem
+        "email-Enron",      // Social
+        "amazon0302",       // Copurchase
+        "roadNet-PA",       // Road
+    ];
+    let pool = Pool::new(4);
+    for name in representatives {
+        let spec = suite::by_name(name).unwrap();
+        let g = suite::generate(spec, 0.03);
+        let z = ZCsr::from_csr(&g);
+        let mut want = Vec::new();
+        compute_supports_seq(&z, &mut want);
+        for mode in [Mode::Coarse, Mode::Fine] {
+            for sched in ALL_SCHEDULES {
+                let got = compute_supports_par(&z, &pool, mode, sched);
+                assert_eq!(got, want, "{name} {mode} {sched:?}");
+            }
+        }
+    }
+}
+
+/// The scan binner partitions `0..n` exactly once: contiguous,
+/// in-order, first bin starts at 0, last bin ends at n.
+#[test]
+fn prop_scan_bins_partition_exactly_once() {
+    forall(
+        Config::cases(50),
+        |rng| {
+            let n = rng.range(0, 500);
+            let bins = rng.range(1, 65);
+            let costs: Vec<u64> = (0..n).map(|_| rng.below(1000)).collect();
+            (costs, bins)
+        },
+        |(costs, bins)| {
+            let b = balance::scan_bins(costs, *bins);
+            if b.len() != *bins {
+                return Err(format!("{} bins, wanted {bins}", b.len()));
+            }
+            let mut expect_lo = 0usize;
+            for &(lo, hi) in &b {
+                if lo != expect_lo {
+                    return Err(format!("gap/overlap at {lo} (expected {expect_lo})"));
+                }
+                if hi < lo {
+                    return Err(format!("inverted bin [{lo},{hi})"));
+                }
+                expect_lo = hi;
+            }
+            if expect_lo != costs.len() {
+                return Err(format!("bins end at {expect_lo}, not {}", costs.len()));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Balance invariant: every bin's work is ≤ total/bins + max(cost)
+/// (the boundary can overshoot by at most one task), which implies
+/// max-bin-work ≤ 2× the mean bin work whenever no single task
+/// exceeds the mean.
+#[test]
+fn prop_scan_bins_balanced() {
+    forall(
+        Config::cases(50),
+        |rng| {
+            let n = rng.range(1, 400);
+            let bins = rng.range(1, 33);
+            // mixed distribution, occasionally with a giant outlier
+            let mut costs: Vec<u64> = (0..n).map(|_| 1 + rng.below(20)).collect();
+            if rng.chance(0.5) {
+                let i = rng.range(0, n);
+                costs[i] = 5_000;
+            }
+            (costs, bins)
+        },
+        |(costs, bins)| {
+            let b = balance::scan_bins(costs, *bins);
+            let total: u64 = costs.iter().sum();
+            let max_cost = *costs.iter().max().unwrap();
+            let mean = total / *bins as u64;
+            for &(lo, hi) in &b {
+                let work: u64 = costs[lo..hi].iter().sum();
+                if work > mean + max_cost + 1 {
+                    return Err(format!(
+                        "bin [{lo},{hi}) work {work} > mean {mean} + max {max_cost}"
+                    ));
+                }
+                if max_cost <= mean && work > 2 * mean + 1 {
+                    return Err(format!("bin work {work} > 2×mean {mean} with bounded tasks"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Cost estimates are true upper bounds on the exact traced work, for
+/// both granularities, on arbitrary graphs.
+#[test]
+fn prop_cost_estimates_dominate_traces() {
+    forall(Config::cases(20), arbitrary_graph, |g| {
+        let z = ZCsr::from_csr(g);
+        let mut s = Vec::new();
+        let tr = ktruss::cost::trace::trace_supports(&z, &mut s);
+        let fine = balance::estimate_costs(&z, Mode::Fine);
+        for (p, (&est, &act)) in fine.iter().zip(tr.fine_steps.iter()).enumerate() {
+            if est < act as u64 {
+                return Err(format!("fine slot {p}: estimate {est} < actual {act}"));
+            }
+        }
+        let coarse = balance::estimate_costs(&z, Mode::Coarse);
+        for i in 0..z.n() {
+            let act = tr.row_steps(z.row_ptr(), i);
+            if coarse[i] < act {
+                return Err(format!("coarse row {i}: estimate {} < actual {act}", coarse[i]));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Full k-truss through the pool agrees with the sequential driver for
+/// the work-aware schedules on arbitrary graphs.
+#[test]
+fn prop_ktruss_par_workaware_matches_seq() {
+    use ktruss::algo::ktruss::ktruss;
+    use ktruss::par::ktruss_par;
+    forall(Config::cases(10), arbitrary_graph, |g| {
+        let pool = Pool::new(3);
+        for k in [3u32, 5] {
+            let want = ktruss(g, k, Mode::Fine);
+            for sched in [Schedule::WorkAware, Schedule::Stealing] {
+                for mode in [Mode::Coarse, Mode::Fine] {
+                    let got = ktruss_par(g, k, &pool, mode, sched);
+                    if got.truss != want.truss {
+                        return Err(format!("k={k} {mode} {sched:?}: truss diverges"));
+                    }
+                    if got.iterations != want.iterations {
+                        return Err(format!("k={k} {mode} {sched:?}: iteration count diverges"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}

@@ -189,7 +189,12 @@ fn prop_makespan_bounds() {
         let costs: Vec<f64> = tr.fine_steps.iter().map(|&x| x as f64 + 1.0).collect();
         let total: f64 = costs.iter().sum();
         let critical = costs.iter().cloned().fold(0.0f64, f64::max);
-        for sched in [Schedule::Static, Schedule::Dynamic { chunk: 8 }] {
+        for sched in [
+            Schedule::Static,
+            Schedule::Dynamic { chunk: 8 },
+            Schedule::WorkAware,
+            Schedule::Stealing,
+        ] {
             for threads in [1usize, 4, 48] {
                 let m = makespan_ns(&costs, threads, sched);
                 if m > total * 1.01 + 1.0 {
@@ -208,7 +213,8 @@ fn prop_makespan_bounds() {
 }
 
 /// The parallel (pool) execution agrees with sequential for every graph
-/// and both schedules — the atomics are race-free by construction.
+/// and every schedule — the atomics are race-free by construction.
+/// (The exhaustive schedule × generator sweep lives in prop_balance.rs.)
 #[test]
 fn prop_parallel_matches_sequential() {
     use ktruss::par::{compute_supports_par, Pool, Schedule};
@@ -218,9 +224,11 @@ fn prop_parallel_matches_sequential() {
         compute_supports_seq(&z, &mut want);
         let pool = Pool::new(3);
         for mode in [Mode::Coarse, Mode::Fine] {
-            let got = compute_supports_par(&z, &pool, mode, Schedule::Dynamic { chunk: 7 });
-            if got != want {
-                return Err(format!("{mode}: parallel supports diverge"));
+            for sched in [Schedule::Dynamic { chunk: 7 }, Schedule::WorkAware, Schedule::Stealing] {
+                let got = compute_supports_par(&z, &pool, mode, sched);
+                if got != want {
+                    return Err(format!("{mode} {sched:?}: parallel supports diverge"));
+                }
             }
         }
         Ok(())

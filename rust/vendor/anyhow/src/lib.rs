@@ -1,0 +1,187 @@
+//! Minimal offline drop-in for the parts of the `anyhow` crate this
+//! workspace uses: [`Result`], [`Error`], the [`Context`] extension
+//! trait, and the `anyhow!` / `bail!` macros.
+//!
+//! The build environment has no network registry, so the real crates.io
+//! dependency is replaced by this path dependency with the same crate
+//! name. Semantics follow anyhow where the workspace relies on them:
+//!
+//! * `{e}` (plain `Display`) prints the outermost context frame only;
+//! * `{e:#}` (alternate) prints the whole chain, colon-separated;
+//! * `?` converts any `std::error::Error` into [`Error`], capturing its
+//!   `source()` chain as additional frames;
+//! * [`Context`] is implemented for `Result` (any convertible error,
+//!   including [`Error`] itself) and for `Option`.
+//!
+//! Like real anyhow, [`Error`] deliberately does **not** implement
+//! `std::error::Error` — that is what keeps the blanket `From` impl
+//! coherent with the reflexive `impl From<T> for T`.
+
+use std::fmt;
+
+/// A lightweight context-carrying error: an ordered stack of
+/// human-readable frames, outermost context first, root cause last.
+pub struct Error {
+    frames: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a printable message.
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error { frames: vec![m.to_string()] }
+    }
+
+    /// Wrap this error with an outer context frame.
+    pub fn context(mut self, c: impl fmt::Display) -> Error {
+        self.frames.insert(0, c.to_string());
+        self
+    }
+
+    /// The frames, outermost context first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.frames.iter().map(|s| s.as_str())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.frames.join(": "))
+        } else {
+            f.write_str(self.frames.first().map(String::as_str).unwrap_or("error"))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.frames.first().map(String::as_str).unwrap_or("error"))?;
+        if self.frames.len() > 1 {
+            f.write_str("\n\nCaused by:")?;
+            for frame in &self.frames[1..] {
+                write!(f, "\n    {frame}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut frames = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            frames.push(s.to_string());
+            src = s.source();
+        }
+        Error { frames }
+    }
+}
+
+/// `anyhow::Result<T>`: `std::result::Result` with [`Error`] defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(...)` / `.with_context(|| ...)` to
+/// `Result` and `Option`.
+pub trait Context<T>: Sized {
+    /// Attach a context message, converting the error to [`Error`].
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    /// Attach a lazily-built context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.into().context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => { $crate::Error::msg(format!($($arg)*)) };
+}
+
+/// Early-return an `Err` built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => { return ::core::result::Result::Err($crate::anyhow!($($arg)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing thing")
+    }
+
+    #[test]
+    fn display_prints_outermost_alternate_prints_chain() {
+        let e: Error = Error::from(io_err()).context("loading config");
+        assert_eq!(format!("{e}"), "loading config");
+        assert_eq!(format!("{e:#}"), "loading config: missing thing");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<u32> {
+            let n: u32 = "17".parse()?;
+            Ok(n)
+        }
+        assert_eq!(inner().unwrap(), 17);
+        fn failing() -> Result<u32> {
+            let n: u32 = "x".parse()?;
+            Ok(n)
+        }
+        assert!(failing().is_err());
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("outer").unwrap_err();
+        assert!(format!("{e:#}").starts_with("outer: "));
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("want {}", 5)).unwrap_err();
+        assert_eq!(format!("{e}"), "want 5");
+        assert_eq!(Some(3).context("never used").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros_build_and_bail() {
+        fn f(flag: bool) -> Result<u32> {
+            if flag {
+                bail!("flag was {flag}");
+            }
+            Ok(1)
+        }
+        assert_eq!(f(false).unwrap(), 1);
+        assert_eq!(format!("{}", f(true).unwrap_err()), "flag was true");
+        let e = anyhow!("code {}", 7);
+        assert_eq!(e.to_string(), "code 7");
+    }
+
+    #[test]
+    fn chain_is_ordered_outermost_first() {
+        let e = Error::msg("root").context("mid").context("top");
+        let frames: Vec<&str> = e.chain().collect();
+        assert_eq!(frames, vec!["top", "mid", "root"]);
+        assert!(format!("{e:?}").contains("Caused by:"));
+    }
+}
