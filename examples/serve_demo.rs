@@ -1,24 +1,27 @@
-//! Serving demo: the coordinator as a long-lived service — a mixed
-//! stream of K-truss / K_max / triangle jobs over graphs of varying
-//! size, with routing between the dense AOT engine (small graphs) and
-//! the sparse pool (large ones), plus latency metrics.
+//! Serving demo: the sharded executor as a long-lived service — a
+//! mixed-priority stream of K-truss / K_max / triangle jobs over graphs
+//! of varying size, with soft deadlines on the interactive class,
+//! cost-model batch packing across shards, and per-shard metrics.
 //!
 //! Run: `cargo run --release --example serve_demo`
 
 use ktruss::algo::support::Mode;
-use ktruss::coordinator::{Coordinator, JobKind, JobOutput, ServiceConfig};
+use ktruss::coordinator::{JobKind, JobOutput};
+use ktruss::serve::{Executor, Priority, ServeConfig, SubmitOpts};
 use ktruss::util::{Rng, Timer};
 use std::sync::Arc;
+use std::time::Duration;
 
 fn main() {
-    let c = Coordinator::start(ServiceConfig {
-        pool_workers: 2,
+    let ex = Executor::start(ServeConfig {
+        shards: 2,
+        workers_per_shard: 2,
         max_batch: 8,
         ..Default::default()
     });
     let mut rng = Rng::new(2024);
     let total_jobs = 48;
-    println!("submitting {total_jobs} mixed jobs (sizes 60..2000 vertices)…");
+    println!("submitting {total_jobs} mixed-priority jobs (sizes 60..2000 vertices)…");
 
     let t = Timer::start();
     let mut tickets = Vec::new();
@@ -38,7 +41,17 @@ fn main() {
             2 => JobKind::Triangles,
             _ => JobKind::Kmax,
         };
-        tickets.push((i, c.submit(g, kind)));
+        // small graphs are the interactive class: high priority, soft
+        // deadline; the rest is best-effort batch work
+        let opts = if i % 3 == 0 {
+            SubmitOpts {
+                priority: Priority::High,
+                deadline: Some(Duration::from_millis(250)),
+            }
+        } else {
+            SubmitOpts { priority: Priority::Low, deadline: None }
+        };
+        tickets.push((i, ex.submit_with(g, kind, opts)));
     }
 
     let mut dense = 0usize;
@@ -66,7 +79,15 @@ fn main() {
         "all {total_jobs} jobs done in {:.1} ms  (routing: {dense} dense-xla, {sparse} sparse-cpu)",
         t.elapsed_ms()
     );
-    println!("metrics: {}", c.metrics.render());
-    println!("latency histogram (us buckets): {:?}", c.metrics.latency_histogram());
-    c.shutdown();
+    println!("metrics: {}", ex.metrics.render());
+    println!("{}", ex.metrics.render_shards());
+    if let (Some(p50), Some(p99)) = (ex.metrics.quantile(0.50), ex.metrics.quantile(0.99)) {
+        println!("serving latency: p50 {p50:.3} ms  p99 {p99:.3} ms");
+    }
+    println!(
+        "cost model after the run: {:.2} ns/step over {} jobs",
+        ex.cost_model.ns_per_step(),
+        ex.cost_model.samples()
+    );
+    ex.shutdown();
 }

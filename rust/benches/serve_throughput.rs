@@ -1,0 +1,35 @@
+//! Serving throughput sweep: open-loop skewed job arrivals against the
+//! sharded executor at several shard counts (same total worker budget).
+//! Reports jobs/s, p50/p99 serving latency, deadline-miss rate and
+//! steal counts per shard count.
+//!
+//! Env knobs: `KTRUSS_SERVE_JOBS`, `KTRUSS_SERVE_ARRIVAL_US`,
+//! `KTRUSS_SERVE_WORKERS`, `KTRUSS_SERVE_SHARDS` (comma list).
+
+use anyhow::Result;
+use ktruss::bench_harness::{report, serve_bench};
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> Result<()> {
+    let default = serve_bench::ThroughputConfig::default();
+    let shard_counts = match std::env::var("KTRUSS_SERVE_SHARDS") {
+        Ok(v) => v
+            .split(',')
+            .filter_map(|s| s.trim().parse::<usize>().ok())
+            .filter(|&s| s > 0)
+            .collect(),
+        Err(_) => default.shard_counts.clone(),
+    };
+    let cfg = serve_bench::ThroughputConfig {
+        jobs: env_usize("KTRUSS_SERVE_JOBS", default.jobs),
+        arrival_us: env_usize("KTRUSS_SERVE_ARRIVAL_US", default.arrival_us as usize) as u64,
+        total_workers: env_usize("KTRUSS_SERVE_WORKERS", default.total_workers),
+        shard_counts,
+        ..default
+    };
+    let r = serve_bench::run(&cfg, |msg| eprintln!("  [{msg}]"))?;
+    report::emit("serve_throughput.txt", &r.render())
+}

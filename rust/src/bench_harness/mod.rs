@@ -5,6 +5,7 @@
 pub mod ablations;
 pub mod figs;
 pub mod report;
+pub mod serve_bench;
 pub mod table1;
 pub mod workload;
 

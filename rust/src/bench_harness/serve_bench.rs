@@ -1,0 +1,299 @@
+//! Serving throughput workload: open-loop job arrivals over the
+//! generator families, replayed against the sharded executor at
+//! several shard counts (same *total* worker budget), reporting
+//! throughput, p50/p99 serving latency, deadline-miss rate, and steal
+//! counts per shard count.
+//!
+//! The job mix is deliberately skewed — a stream of small interactive
+//! jobs with an occasional heavy batch job — because that is the regime
+//! where sharding pays: a single-pool dispatcher serializes the stream
+//! behind each heavy job (head-of-line blocking, the paper's coarse-
+//! task pathology at job granularity), while ≥2 shards isolate the
+//! heavy job on one shard and keep small jobs flowing through the
+//! others.
+
+use crate::algo::support::Mode;
+use crate::coordinator::job::JobKind;
+use crate::gen;
+use crate::graph::Csr;
+use crate::serve::{Executor, Priority, ServeConfig, SubmitOpts, Ticket};
+use crate::util::{Rng, Timer};
+use anyhow::Result;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Workload knobs.
+#[derive(Clone, Debug)]
+pub struct ThroughputConfig {
+    /// Jobs per shard-count run.
+    pub jobs: usize,
+    /// Open-loop inter-arrival gap in microseconds (arrivals do not
+    /// wait for completions).
+    pub arrival_us: u64,
+    /// Total worker budget, split evenly across shards in each run.
+    pub total_workers: usize,
+    /// Shard counts to sweep (each run replays the identical job set).
+    pub shard_counts: Vec<usize>,
+    /// Soft deadline attached to high-priority jobs.
+    pub deadline_ms: u64,
+    /// Workload RNG seed (graphs and kinds are pre-generated once).
+    pub seed: u64,
+}
+
+impl Default for ThroughputConfig {
+    fn default() -> Self {
+        ThroughputConfig {
+            jobs: 120,
+            arrival_us: 300,
+            total_workers: 4,
+            shard_counts: vec![1, 2, 4],
+            deadline_ms: 50,
+            seed: 42,
+        }
+    }
+}
+
+/// One pre-generated job of the workload.
+struct JobSpec {
+    graph: Arc<Csr>,
+    kind: JobKind,
+    priority: Priority,
+    deadline: Option<Duration>,
+}
+
+/// Measured outcome of one shard-count run.
+#[derive(Clone, Debug)]
+pub struct ShardRun {
+    pub shards: usize,
+    pub workers_per_shard: usize,
+    pub wall_ms: f64,
+    /// Completed jobs per second over the whole run.
+    pub throughput_jps: f64,
+    /// Serving latency (queueing + execution) quantiles, ms.
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    /// Soft-deadline misses / jobs that carried a deadline.
+    pub miss_rate: f64,
+    pub stolen: u64,
+}
+
+/// Full sweep report.
+#[derive(Clone, Debug)]
+pub struct ThroughputReport {
+    pub jobs: usize,
+    pub arrival_us: u64,
+    pub total_workers: usize,
+    pub runs: Vec<ShardRun>,
+}
+
+impl ThroughputReport {
+    /// Throughput of the best multi-shard run over the 1-shard run
+    /// (`None` when the sweep lacks either side).
+    pub fn sharding_speedup(&self) -> Option<f64> {
+        let single = self.runs.iter().find(|r| r.shards == 1)?;
+        let best = self
+            .runs
+            .iter()
+            .filter(|r| r.shards > 1)
+            .map(|r| r.throughput_jps)
+            .fold(f64::NAN, f64::max);
+        if best.is_nan() || single.throughput_jps <= 0.0 {
+            return None;
+        }
+        Some(best / single.throughput_jps)
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "# serve throughput: {} open-loop jobs, {} us inter-arrival, {} total workers\n\
+             # skewed mix: ~87% small interactive jobs (25% high-priority w/ deadline), ~13% heavy batch jobs\n\
+             {:>7} {:>12} {:>10} {:>10} {:>10} {:>10} {:>9} {:>7}\n",
+            self.jobs,
+            self.arrival_us,
+            self.total_workers,
+            "shards",
+            "workers/sh",
+            "wall_ms",
+            "jobs/s",
+            "p50_ms",
+            "p99_ms",
+            "miss%",
+            "stolen"
+        );
+        for r in &self.runs {
+            out.push_str(&format!(
+                "{:>7} {:>12} {:>10.1} {:>10.1} {:>10.3} {:>10.3} {:>9.1} {:>7}\n",
+                r.shards,
+                r.workers_per_shard,
+                r.wall_ms,
+                r.throughput_jps,
+                r.p50_ms,
+                r.p99_ms,
+                r.miss_rate * 100.0,
+                r.stolen
+            ));
+        }
+        if let Some(s) = self.sharding_speedup() {
+            out.push_str(&format!(
+                "# best multi-shard throughput vs single-pool dispatcher: {s:.2}x\n"
+            ));
+        }
+        out
+    }
+}
+
+/// Pre-generate the job set once so every shard count replays an
+/// identical workload.
+fn generate_jobs(cfg: &ThroughputConfig) -> Vec<JobSpec> {
+    let mut rng = Rng::new(cfg.seed);
+    let mut jobs = Vec::with_capacity(cfg.jobs);
+    for i in 0..cfg.jobs {
+        if i % 8 == 7 {
+            // heavy batch job: large power-law graph, multi-round kind
+            let n = rng.range(500, 1100);
+            let m = (5 * n).min(n * (n - 1) / 2);
+            let g = Arc::new(gen::rmat::rmat(
+                n,
+                m,
+                gen::rmat::RmatParams::social(),
+                &mut rng,
+            ));
+            let kind = if i % 16 == 15 { JobKind::Decompose } else { JobKind::Kmax };
+            jobs.push(JobSpec { graph: g, kind, priority: Priority::Low, deadline: None });
+        } else {
+            // small interactive job
+            let n = rng.range(40, 160);
+            let m = (2 * n + rng.range(0, n)).min(n * (n - 1) / 2);
+            let g = Arc::new(gen::erdos_renyi::gnm(n, m, &mut rng));
+            let kind = match i % 3 {
+                0 => JobKind::Triangles,
+                1 => JobKind::Ktruss { k: 3, mode: Mode::Fine },
+                _ => JobKind::Ktruss { k: 4, mode: Mode::Coarse },
+            };
+            let (priority, deadline) = if i % 4 == 0 {
+                (Priority::High, Some(Duration::from_millis(cfg.deadline_ms)))
+            } else {
+                (Priority::Normal, None)
+            };
+            jobs.push(JobSpec { graph: g, kind, priority, deadline });
+        }
+    }
+    jobs
+}
+
+/// Replay the workload once against `shards` shards.
+fn run_one(cfg: &ThroughputConfig, jobs: &[JobSpec], shards: usize) -> Result<ShardRun> {
+    let serve_cfg = ServeConfig {
+        shards,
+        enable_dense: false,
+        batch_window: Duration::from_millis(1),
+        ..Default::default()
+    }
+    .with_total_workers(cfg.total_workers);
+    let workers_per_shard = serve_cfg.workers_per_shard;
+    let ex = Executor::start(serve_cfg);
+    let deadline_jobs = jobs.iter().filter(|j| j.deadline.is_some()).count() as u64;
+    let t = Timer::start();
+    let mut tickets: Vec<Ticket> = Vec::with_capacity(jobs.len());
+    for j in jobs {
+        tickets.push(ex.submit_with(
+            Arc::clone(&j.graph),
+            j.kind.clone(),
+            SubmitOpts { priority: j.priority, deadline: j.deadline },
+        ));
+        if cfg.arrival_us > 0 {
+            std::thread::sleep(Duration::from_micros(cfg.arrival_us));
+        }
+    }
+    for ticket in tickets {
+        let r = ticket.wait();
+        if let Err(e) = &r.output {
+            anyhow::bail!("job {} failed: {e}", r.id);
+        }
+    }
+    let wall_ms = t.elapsed_ms();
+    let p50_ms = ex.metrics.quantile(0.50).unwrap_or(0.0);
+    let p99_ms = ex.metrics.quantile(0.99).unwrap_or(0.0);
+    let misses = ex.metrics.deadline_misses();
+    let stolen = ex.metrics.steals();
+    ex.shutdown();
+    Ok(ShardRun {
+        shards,
+        workers_per_shard,
+        wall_ms,
+        throughput_jps: jobs.len() as f64 / (wall_ms / 1e3).max(1e-9),
+        p50_ms,
+        p99_ms,
+        miss_rate: if deadline_jobs == 0 { 0.0 } else { misses as f64 / deadline_jobs as f64 },
+        stolen,
+    })
+}
+
+/// Run the full shard-count sweep.
+pub fn run(cfg: &ThroughputConfig, progress: impl Fn(&str)) -> Result<ThroughputReport> {
+    if cfg.jobs == 0 || cfg.shard_counts.is_empty() {
+        anyhow::bail!("serve bench needs ≥1 job and ≥1 shard count");
+    }
+    let jobs = generate_jobs(cfg);
+    let mut runs = Vec::new();
+    for &shards in &cfg.shard_counts {
+        let shards = shards.max(1);
+        if shards > cfg.total_workers.max(1) {
+            // a shard floor of 1 worker would exceed the budget and
+            // falsely credit the extra parallelism to sharding
+            progress(&format!(
+                "skipping shards={shards}: exceeds the {}-worker budget",
+                cfg.total_workers
+            ));
+            continue;
+        }
+        progress(&format!("shards={shards}: replaying {} jobs", jobs.len()));
+        runs.push(run_one(cfg, &jobs, shards)?);
+    }
+    if runs.is_empty() {
+        anyhow::bail!("every shard count exceeded the {}-worker budget", cfg.total_workers);
+    }
+    Ok(ThroughputReport {
+        jobs: cfg.jobs,
+        arrival_us: cfg.arrival_us,
+        total_workers: cfg.total_workers,
+        runs,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_sweep_completes_and_renders() {
+        let cfg = ThroughputConfig {
+            jobs: 16,
+            arrival_us: 50,
+            total_workers: 2,
+            shard_counts: vec![1, 2],
+            deadline_ms: 40,
+            seed: 7,
+        };
+        let report = run(&cfg, |_| {}).unwrap();
+        assert_eq!(report.runs.len(), 2);
+        for r in &report.runs {
+            assert!(r.wall_ms > 0.0);
+            assert!(r.throughput_jps > 0.0);
+            assert!(r.p99_ms >= r.p50_ms);
+            assert!((0.0..=1.0).contains(&r.miss_rate));
+        }
+        let text = report.render();
+        assert!(text.contains("jobs/s"));
+        assert!(text.contains("p99_ms"));
+        assert!(report.sharding_speedup().is_some());
+    }
+
+    #[test]
+    fn degenerate_configs_are_rejected() {
+        let no_jobs = ThroughputConfig { jobs: 0, ..Default::default() };
+        assert!(run(&no_jobs, |_| {}).is_err());
+        let no_shards = ThroughputConfig { shard_counts: Vec::new(), ..Default::default() };
+        assert!(run(&no_shards, |_| {}).is_err());
+    }
+}

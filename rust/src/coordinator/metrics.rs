@@ -1,9 +1,24 @@
-//! Lock-free service metrics: per-engine job counts and a coarse
-//! log₂-bucketed latency histogram, suitable for scraping from the CLI.
+//! Lock-free service metrics: per-engine job counts, a coarse
+//! log₂-bucketed latency histogram with quantile extraction, and
+//! per-shard serving gauges (jobs, steals, queue depth, deadline
+//! misses), suitable for scraping from the CLI.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
 const BUCKETS: usize = 24; // 2^0 .. 2^23 microseconds (~8.4 s)
+
+/// Serving counters for one executor shard.
+#[derive(Debug, Default)]
+pub struct ShardMetrics {
+    /// Jobs this shard executed (including stolen ones).
+    pub jobs: AtomicU64,
+    /// Jobs this shard stole from another shard's queue.
+    pub stolen: AtomicU64,
+    /// Completions past their soft deadline.
+    pub deadline_miss: AtomicU64,
+    /// Current queued jobs (gauge, set by the dispatcher/shard).
+    pub queue_depth: AtomicU64,
+}
 
 /// Aggregated coordinator metrics.
 #[derive(Debug, Default)]
@@ -15,11 +30,21 @@ pub struct Metrics {
     pub dense_jobs: AtomicU64,
     latency_us: [AtomicU64; BUCKETS],
     latency_sum_us: AtomicU64,
+    shards: Vec<ShardMetrics>,
 }
 
 impl Metrics {
     pub fn new() -> Metrics {
         Metrics::default()
+    }
+
+    /// Metrics with `shards` per-shard counter blocks (the sharded
+    /// executor path; `new()` keeps a shard-less instance).
+    pub fn with_shards(shards: usize) -> Metrics {
+        Metrics {
+            shards: (0..shards).map(|_| ShardMetrics::default()).collect(),
+            ..Metrics::default()
+        }
     }
 
     pub fn record_submit(&self) {
@@ -40,10 +65,55 @@ impl Metrics {
             }
         };
         let us = (wall_ms * 1e3).max(0.0) as u64;
+        // floor(log₂), clamped into the top bucket — out-of-range
+        // samples saturate rather than vanish
         let bucket = (64 - us.max(1).leading_zeros() as usize - 1).min(BUCKETS - 1);
         self.latency_us[bucket].fetch_add(1, Ordering::Relaxed);
         self.latency_sum_us.fetch_add(us, Ordering::Relaxed);
     }
+
+    // --- per-shard serving counters -------------------------------------
+
+    /// Per-shard counter blocks (empty unless built `with_shards`).
+    pub fn shards(&self) -> &[ShardMetrics] {
+        &self.shards
+    }
+
+    pub fn record_shard_done(&self, shard: usize) {
+        if let Some(s) = self.shards.get(shard) {
+            s.jobs.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn record_steal(&self, shard: usize) {
+        if let Some(s) = self.shards.get(shard) {
+            s.stolen.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn record_deadline_miss(&self, shard: usize) {
+        if let Some(s) = self.shards.get(shard) {
+            s.deadline_miss.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn set_queue_depth(&self, shard: usize, depth: u64) {
+        if let Some(s) = self.shards.get(shard) {
+            s.queue_depth.store(depth, Ordering::Relaxed);
+        }
+    }
+
+    /// Total soft-deadline misses across shards.
+    pub fn deadline_misses(&self) -> u64 {
+        self.shards.iter().map(|s| s.deadline_miss.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Total cross-shard steals.
+    pub fn steals(&self) -> u64 {
+        self.shards.iter().map(|s| s.stolen.load(Ordering::Relaxed)).sum()
+    }
+
+    // --- summaries ------------------------------------------------------
 
     /// (completed, failed, mean latency ms).
     pub fn summary(&self) -> (u64, u64, f64) {
@@ -69,10 +139,30 @@ impl Metrics {
             .collect()
     }
 
-    /// Render a one-line scrape.
+    /// Latency quantile `q` ∈ [0, 1] in **milliseconds**, resolved to
+    /// the floor of the log₂ bucket holding the q-th sample (so the CLI
+    /// never re-derives bucket math). `None` until a sample lands.
+    pub fn quantile(&self, q: f64) -> Option<f64> {
+        let counts: Vec<u64> = self.latency_us.iter().map(|c| c.load(Ordering::Relaxed)).collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return None;
+        }
+        let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (b, &c) in counts.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                return Some((1u64 << b) as f64 / 1e3);
+            }
+        }
+        Some((1u64 << (BUCKETS - 1)) as f64 / 1e3)
+    }
+
+    /// Render a one-line scrape (shard totals appended when present).
     pub fn render(&self) -> String {
         let (done, failed, mean) = self.summary();
-        format!(
+        let mut line = format!(
             "submitted={} completed={} failed={} sparse={} dense={} mean_latency_ms={:.3}",
             self.submitted.load(Ordering::Relaxed),
             done,
@@ -80,7 +170,37 @@ impl Metrics {
             self.sparse_jobs.load(Ordering::Relaxed),
             self.dense_jobs.load(Ordering::Relaxed),
             mean
-        )
+        );
+        if let (Some(p50), Some(p99)) = (self.quantile(0.50), self.quantile(0.99)) {
+            line.push_str(&format!(" p50_ms={p50:.3} p99_ms={p99:.3}"));
+        }
+        if !self.shards.is_empty() {
+            line.push_str(&format!(
+                " shards={} stolen={} deadline_miss={}",
+                self.shards.len(),
+                self.steals(),
+                self.deadline_misses()
+            ));
+        }
+        line
+    }
+
+    /// One line per shard, for the CLI's verbose serving report.
+    pub fn render_shards(&self) -> String {
+        self.shards
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                format!(
+                    "shard {i}: jobs={} stolen={} deadline_miss={} queue_depth={}",
+                    s.jobs.load(Ordering::Relaxed),
+                    s.stolen.load(Ordering::Relaxed),
+                    s.deadline_miss.load(Ordering::Relaxed),
+                    s.queue_depth.load(Ordering::Relaxed)
+                )
+            })
+            .collect::<Vec<_>>()
+            .join("\n")
     }
 }
 
@@ -113,5 +233,59 @@ mod tests {
         assert_eq!(h.len(), 2);
         assert_eq!(h[0].0, 1);
         assert_eq!(h[1].0, 512);
+    }
+
+    #[test]
+    fn out_of_range_samples_clamp_into_top_bucket() {
+        let m = Metrics::new();
+        // ~100 s ≫ the 2^23 us top bucket: must saturate, not vanish
+        m.record_done(Engine::SparseCpu, 100_000.0, true);
+        let h = m.latency_histogram();
+        assert_eq!(h.len(), 1);
+        assert_eq!(h[0], (1u64 << (BUCKETS - 1), 1));
+        // and the quantile resolves to the top bucket floor
+        assert_eq!(m.quantile(0.5), Some((1u64 << (BUCKETS - 1)) as f64 / 1e3));
+    }
+
+    #[test]
+    fn quantile_resolves_bucket_floors() {
+        let m = Metrics::new();
+        assert_eq!(m.quantile(0.5), None);
+        m.record_done(Engine::SparseCpu, 0.001, true); // bucket 0 (1us)
+        m.record_done(Engine::SparseCpu, 0.001, true); // bucket 0
+        m.record_done(Engine::SparseCpu, 1.0, true); // bucket 9 (512us)
+        // p50: 2nd of 3 samples -> bucket 0 -> 1us = 0.001 ms
+        assert_eq!(m.quantile(0.5), Some(0.001));
+        // p99: 3rd sample -> bucket 9 -> 512us = 0.512 ms
+        assert_eq!(m.quantile(0.99), Some(0.512));
+        assert_eq!(m.quantile(0.0), Some(0.001));
+        assert_eq!(m.quantile(1.0), Some(0.512));
+    }
+
+    #[test]
+    fn shard_counters_roundtrip() {
+        let m = Metrics::with_shards(2);
+        assert_eq!(m.shards().len(), 2);
+        m.record_shard_done(0);
+        m.record_shard_done(1);
+        m.record_shard_done(1);
+        m.record_steal(1);
+        m.record_deadline_miss(0);
+        m.set_queue_depth(0, 7);
+        assert_eq!(m.shards()[1].jobs.load(Ordering::Relaxed), 2);
+        assert_eq!(m.steals(), 1);
+        assert_eq!(m.deadline_misses(), 1);
+        assert_eq!(m.shards()[0].queue_depth.load(Ordering::Relaxed), 7);
+        // out-of-range shard ids are ignored, not panics
+        m.record_shard_done(9);
+        m.record_steal(9);
+        m.record_deadline_miss(9);
+        m.set_queue_depth(9, 1);
+        let line = m.render();
+        assert!(line.contains("shards=2"));
+        assert!(line.contains("deadline_miss=1"));
+        assert!(m.render_shards().contains("shard 1: jobs=2 stolen=1"));
+        // shard-less metrics render without the shard suffix
+        assert!(!Metrics::new().render().contains("shards="));
     }
 }

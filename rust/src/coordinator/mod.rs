@@ -1,5 +1,6 @@
-//! L3 serving coordinator: job queue, batching dispatcher, engine
-//! routing (sparse CPU pool vs dense AOT/PJRT path) and metrics.
+//! L3 serving coordinator: job types, engine routing (sparse CPU pool
+//! vs dense AOT/PJRT path), per-job workers, serving metrics, and the
+//! [`Coordinator`] facade over the sharded [`crate::serve`] executor.
 
 pub mod job;
 pub mod metrics;
@@ -8,5 +9,7 @@ pub mod service;
 pub mod worker;
 
 pub use job::{Engine, JobKind, JobOutput, JobRequest, JobResult};
+pub use metrics::{Metrics, ShardMetrics};
+pub use router::{route, route_costed, RouterConfig};
 pub use service::{Coordinator, ServiceConfig, Ticket};
 pub use worker::{choose_schedule, Worker};

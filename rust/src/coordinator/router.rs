@@ -2,10 +2,21 @@
 //! sparse CPU path executes it. The dense path is profitable only for
 //! graphs that fit a compiled block (and is mandatory for none — it can
 //! be disabled entirely when artifacts are absent, e.g. in unit tests).
+//!
+//! Routing takes two inputs: graph *shape* (vertex count vs the largest
+//! compiled dense block) and, on the serving path, the cost model's
+//! work estimate ([`route_costed`]) — a job can fit a dense block yet
+//! carry enough merge work that the sparse pool's work-aware schedules
+//! beat the O(n³)-ish dense formulation.
 
 use super::job::{Engine, JobKind, JobRequest};
+use anyhow::Result;
 
 /// Routing policy knobs.
+///
+/// Invariant: `dense_threshold ≤ dense_limit`. The constructors uphold
+/// it ([`RouterConfig::with_threshold`] rejects violations); `route`
+/// additionally clamps defensively because the fields stay public.
 #[derive(Clone, Copy, Debug)]
 pub struct RouterConfig {
     /// Largest dense block available (0 disables the dense path).
@@ -13,22 +24,58 @@ pub struct RouterConfig {
     /// Route graphs at or below this vertex count to the dense engine
     /// (must be ≤ dense_limit).
     pub dense_threshold: usize,
+    /// Route to the dense engine only when the job's estimated work is
+    /// at or below this many merge steps (`u64::MAX` = shape-only
+    /// routing; see [`crate::serve::cost_model`]).
+    pub dense_step_ceiling: u64,
 }
 
 impl RouterConfig {
     pub fn new(dense_limit: usize) -> RouterConfig {
-        RouterConfig { dense_limit, dense_threshold: dense_limit }
+        RouterConfig { dense_limit, dense_threshold: dense_limit, dense_step_ceiling: u64::MAX }
     }
 
     pub fn disabled() -> RouterConfig {
-        RouterConfig { dense_limit: 0, dense_threshold: 0 }
+        RouterConfig { dense_limit: 0, dense_threshold: 0, dense_step_ceiling: u64::MAX }
+    }
+
+    /// A config with an explicit threshold, rejecting the inconsistent
+    /// `threshold > limit` case instead of silently clamping it.
+    pub fn with_threshold(dense_limit: usize, dense_threshold: usize) -> Result<RouterConfig> {
+        if dense_threshold > dense_limit {
+            anyhow::bail!(
+                "dense_threshold {dense_threshold} exceeds dense_limit {dense_limit} \
+                 (graphs above the largest compiled block can never route dense)"
+            );
+        }
+        Ok(RouterConfig { dense_limit, dense_threshold, dense_step_ceiling: u64::MAX })
+    }
+
+    /// Builder: cap the estimated work routed to the dense engine.
+    pub fn with_step_ceiling(mut self, ceiling: u64) -> RouterConfig {
+        self.dense_step_ceiling = ceiling;
+        self
     }
 }
 
-/// Pick the engine for a request.
+/// Pick the engine for a request (shape-only: no cost estimate).
 pub fn route(cfg: &RouterConfig, req: &JobRequest) -> Engine {
+    route_costed(cfg, req, 0)
+}
+
+/// Pick the engine for a request whose estimated work is `est_steps`
+/// (0 = unknown, shape-only routing).
+pub fn route_costed(cfg: &RouterConfig, req: &JobRequest, est_steps: u64) -> Engine {
+    debug_assert!(
+        cfg.dense_threshold <= cfg.dense_limit,
+        "inconsistent RouterConfig: threshold {} > limit {}",
+        cfg.dense_threshold,
+        cfg.dense_limit
+    );
     let n = req.graph.n();
-    let dense_ok = cfg.dense_limit > 0 && n <= cfg.dense_threshold.min(cfg.dense_limit);
+    let dense_ok = cfg.dense_limit > 0
+        && n <= cfg.dense_threshold.min(cfg.dense_limit)
+        && est_steps <= cfg.dense_step_ceiling;
     match req.kind {
         // only fixed-k truss has a dense AOT entry point; everything
         // else runs sparse
@@ -49,18 +96,27 @@ mod tests {
         JobRequest { id: 0, graph: Arc::new(from_sorted_unique(n_vertices, &edges)), kind }
     }
 
+    fn ktruss() -> JobKind {
+        JobKind::Ktruss { k: 3, mode: Mode::Fine }
+    }
+
     #[test]
     fn small_ktruss_goes_dense() {
         let cfg = RouterConfig::new(256);
-        let r = req(100, JobKind::Ktruss { k: 3, mode: Mode::Fine });
-        assert_eq!(route(&cfg, &r), Engine::DenseXla);
+        assert_eq!(route(&cfg, &req(100, ktruss())), Engine::DenseXla);
     }
 
     #[test]
     fn large_ktruss_goes_sparse() {
         let cfg = RouterConfig::new(256);
-        let r = req(1000, JobKind::Ktruss { k: 3, mode: Mode::Fine });
-        assert_eq!(route(&cfg, &r), Engine::SparseCpu);
+        assert_eq!(route(&cfg, &req(1000, ktruss())), Engine::SparseCpu);
+    }
+
+    #[test]
+    fn threshold_boundary_is_inclusive() {
+        let cfg = RouterConfig::with_threshold(256, 64).unwrap();
+        assert_eq!(route(&cfg, &req(64, ktruss())), Engine::DenseXla);
+        assert_eq!(route(&cfg, &req(65, ktruss())), Engine::SparseCpu);
     }
 
     #[test]
@@ -74,7 +130,27 @@ mod tests {
     #[test]
     fn disabled_dense_routes_everything_sparse() {
         let cfg = RouterConfig::disabled();
-        let r = req(10, JobKind::Ktruss { k: 3, mode: Mode::Fine });
-        assert_eq!(route(&cfg, &r), Engine::SparseCpu);
+        assert_eq!(route(&cfg, &req(10, ktruss())), Engine::SparseCpu);
+        // a zero threshold on a live limit likewise never routes dense
+        let cfg = RouterConfig::with_threshold(256, 0).unwrap();
+        assert_eq!(route(&cfg, &req(10, ktruss())), Engine::SparseCpu);
+    }
+
+    #[test]
+    fn inconsistent_threshold_is_rejected_at_construction() {
+        assert!(RouterConfig::with_threshold(100, 101).is_err());
+        assert!(RouterConfig::with_threshold(100, 100).is_ok());
+        assert!(RouterConfig::with_threshold(0, 0).is_ok());
+    }
+
+    #[test]
+    fn step_ceiling_diverts_heavy_jobs_to_sparse() {
+        let cfg = RouterConfig::new(256).with_step_ceiling(1000);
+        let r = req(100, ktruss());
+        assert_eq!(route_costed(&cfg, &r, 999), Engine::DenseXla);
+        assert_eq!(route_costed(&cfg, &r, 1000), Engine::DenseXla);
+        assert_eq!(route_costed(&cfg, &r, 1001), Engine::SparseCpu);
+        // unknown cost (0) routes by shape alone
+        assert_eq!(route_costed(&cfg, &r, 0), Engine::DenseXla);
     }
 }

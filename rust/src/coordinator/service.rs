@@ -1,28 +1,32 @@
-//! The serving coordinator: a submission queue, a batching loop, and
-//! routed execution with metrics — the L3 "request path" of the stack.
+//! The serving coordinator — now a thin facade over the sharded
+//! [`crate::serve::Executor`] (the L3 "request path" of the stack).
 //!
-//! Shape: callers `submit()` jobs and receive a ticket; a dispatcher
-//! thread drains the queue in batches (batching amortizes pool spin-up
-//! and keeps dense-path executions back-to-back on the PJRT client),
-//! routes each job, executes, and delivers results through the ticket.
+//! Shape: callers `submit()` jobs and receive a ticket; the executor's
+//! dispatcher drains the admission queue in batches, packs each batch
+//! across shards by estimated cost, and shard workers route + execute
+//! each job, delivering results through the ticket. The historical
+//! single-pool API is preserved exactly (one shard by default); the
+//! `shards` knob turns the same handle into the scale-out path.
 
-use super::job::{JobId, JobKind, JobRequest, JobResult};
+use super::job::JobKind;
 use super::metrics::Metrics;
-use super::router::{route, RouterConfig};
-use super::worker::Worker;
 use crate::graph::Csr;
-use crate::par::{Pool, Schedule};
-use crate::runtime::DenseEngine;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use crate::par::Schedule;
+use crate::serve::{Executor, ServeConfig};
+use std::sync::Arc;
 use std::time::Duration;
+
+/// Ticket for a submitted job (the executor's ticket, unchanged:
+/// `id`, blocking `wait()`, non-blocking `try_get()`).
+pub use crate::serve::Ticket;
 
 /// Configuration of the coordinator service.
 #[derive(Clone, Copy, Debug)]
 pub struct ServiceConfig {
-    /// Worker pool width for sparse jobs.
+    /// Worker pool width for sparse jobs (per shard).
     pub pool_workers: usize,
+    /// Worker shards (1 = the historical single-pool dispatcher).
+    pub shards: usize,
     /// Max jobs drained per batch.
     pub max_batch: usize,
     /// How long the dispatcher waits to fill a batch.
@@ -39,6 +43,7 @@ impl Default for ServiceConfig {
     fn default() -> Self {
         ServiceConfig {
             pool_workers: 4,
+            shards: 1,
             max_batch: 16,
             batch_window: Duration::from_millis(2),
             enable_dense: true,
@@ -47,139 +52,42 @@ impl Default for ServiceConfig {
     }
 }
 
-/// Ticket for a submitted job.
-pub struct Ticket {
-    pub id: JobId,
-    rx: Receiver<JobResult>,
-}
-
-impl Ticket {
-    /// Block until the result arrives.
-    pub fn wait(self) -> JobResult {
-        self.rx.recv().expect("coordinator dropped without reply")
-    }
-
-    /// Non-blocking poll.
-    pub fn try_get(&self) -> Option<JobResult> {
-        self.rx.try_recv().ok()
-    }
-}
-
-enum Msg {
-    Job(JobRequest, Sender<JobResult>),
-    Shutdown,
-}
-
-/// The coordinator handle. Dropping it shuts the dispatcher down.
+/// The coordinator handle. Dropping it shuts the executor down.
 pub struct Coordinator {
-    tx: Sender<Msg>,
-    next_id: AtomicU64,
+    exec: Executor,
     pub metrics: Arc<Metrics>,
-    dispatcher: Mutex<Option<std::thread::JoinHandle<()>>>,
 }
 
 impl Coordinator {
     /// Start the service.
     pub fn start(cfg: ServiceConfig) -> Coordinator {
-        let (tx, rx) = channel::<Msg>();
-        let metrics = Arc::new(Metrics::new());
-        let m2 = Arc::clone(&metrics);
-        let dispatcher = std::thread::Builder::new()
-            .name("ktruss-coordinator".into())
-            .spawn(move || dispatch_loop(rx, cfg, m2))
-            .expect("spawn coordinator");
-        Coordinator {
-            tx,
-            next_id: AtomicU64::new(1),
-            metrics,
-            dispatcher: Mutex::new(Some(dispatcher)),
-        }
+        let exec = Executor::start(ServeConfig {
+            shards: cfg.shards.max(1),
+            workers_per_shard: cfg.pool_workers,
+            max_batch: cfg.max_batch,
+            batch_window: cfg.batch_window,
+            enable_dense: cfg.enable_dense,
+            schedule: cfg.schedule,
+            ..Default::default()
+        });
+        let metrics = Arc::clone(&exec.metrics);
+        Coordinator { exec, metrics }
     }
 
     /// Submit a job; returns a ticket to wait on.
     pub fn submit(&self, graph: Arc<Csr>, kind: JobKind) -> Ticket {
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let (rtx, rrx) = channel();
-        self.metrics.record_submit();
-        self.tx
-            .send(Msg::Job(JobRequest { id, graph, kind }, rtx))
-            .expect("coordinator is down");
-        Ticket { id, rx: rrx }
+        self.exec.submit(graph, kind)
+    }
+
+    /// The backing sharded executor (priority/deadline submission).
+    pub fn executor(&self) -> &Executor {
+        &self.exec
     }
 
     /// Graceful shutdown (also triggered by Drop).
     pub fn shutdown(&self) {
-        let _ = self.tx.send(Msg::Shutdown);
-        if let Some(h) = self.dispatcher.lock().unwrap().take() {
-            let _ = h.join();
-        }
+        self.exec.shutdown();
     }
-}
-
-impl Drop for Coordinator {
-    fn drop(&mut self) {
-        let _ = self.tx.send(Msg::Shutdown);
-        if let Some(h) = self.dispatcher.lock().unwrap().take() {
-            let _ = h.join();
-        }
-    }
-}
-
-fn dispatch_loop(rx: Receiver<Msg>, cfg: ServiceConfig, metrics: Arc<Metrics>) {
-    let dense = if cfg.enable_dense { DenseEngine::new().ok() } else { None };
-    let router_cfg = dense
-        .as_ref()
-        .map(|d| RouterConfig::new(d.max_n()))
-        .unwrap_or_else(RouterConfig::disabled);
-    let worker = Worker::with_schedule(Pool::new(cfg.pool_workers), dense, cfg.schedule);
-    let mut batch: Vec<(JobRequest, Sender<JobResult>)> = Vec::new();
-    'outer: loop {
-        batch.clear();
-        // block for the first job
-        match rx.recv() {
-            Ok(Msg::Job(j, t)) => batch.push((j, t)),
-            Ok(Msg::Shutdown) | Err(_) => break 'outer,
-        }
-        // drain up to max_batch within the window
-        let deadline = std::time::Instant::now() + cfg.batch_window;
-        while batch.len() < cfg.max_batch {
-            let now = std::time::Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(Msg::Job(j, t)) => batch.push((j, t)),
-                Ok(Msg::Shutdown) => {
-                    process_batch(&worker, &router_cfg, &metrics, &mut batch);
-                    break 'outer;
-                }
-                Err(_) => break,
-            }
-        }
-        process_batch(&worker, &router_cfg, &metrics, &mut batch);
-    }
-}
-
-fn process_batch(
-    worker: &Worker,
-    router_cfg: &RouterConfig,
-    metrics: &Metrics,
-    batch: &mut Vec<(JobRequest, Sender<JobResult>)>,
-) {
-    // route first, then execute dense jobs together (PJRT locality)
-    let mut routed: Vec<(usize, crate::coordinator::job::Engine)> = batch
-        .iter()
-        .enumerate()
-        .map(|(i, (req, _))| (i, route(router_cfg, req)))
-        .collect();
-    routed.sort_by_key(|&(_, e)| e as u8);
-    for (idx, engine) in routed {
-        let (req, reply) = &batch[idx];
-        let result = worker.execute(req, engine);
-        metrics.record_done(result.engine, result.wall_ms, result.output.is_ok());
-        let _ = reply.send(result);
-    }
-    batch.clear();
 }
 
 #[cfg(test)]
@@ -256,6 +164,23 @@ mod tests {
                 other => panic!("{other:?}"),
             }
         }
+        c.shutdown();
+    }
+
+    #[test]
+    fn multi_shard_facade_roundtrip() {
+        let c = Coordinator::start(ServiceConfig { shards: 2, ..cfg_no_dense() });
+        let g = Arc::new(crate::gen::erdos_renyi::gnm(80, 300, &mut crate::util::Rng::new(5)));
+        let want = crate::algo::triangle::count_triangles(&g);
+        let tickets: Vec<Ticket> =
+            (0..8).map(|_| c.submit(Arc::clone(&g), JobKind::Triangles)).collect();
+        for t in tickets {
+            match t.wait().output.unwrap() {
+                JobOutput::Triangles { count } => assert_eq!(count, want),
+                other => panic!("{other:?}"),
+            }
+        }
+        assert_eq!(c.metrics.shards().len(), 2);
         c.shutdown();
     }
 

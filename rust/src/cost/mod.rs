@@ -1,9 +1,13 @@
 //! Task-cost measurement: exact per-task work traces of the support
-//! kernel and a replay driver that exposes them iteration by iteration.
-//! These feed the device timing models in [`crate::sim`].
+//! kernel, a replay driver that exposes them iteration by iteration,
+//! and persistence for measured job traces (the serving cost model's
+//! calibration feedback). These feed the device timing models in
+//! [`crate::sim`] and the batch scheduler in [`crate::serve`].
 
+pub mod persist;
 pub mod replay;
 pub mod trace;
 
+pub use persist::TraceRecord;
 pub use replay::{replay_kmax, replay_ktruss, IterObservation};
 pub use trace::{trace_supports, SupportTrace};

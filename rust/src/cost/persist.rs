@@ -1,0 +1,119 @@
+//! Persistence for measured job traces — the calibration feedback loop
+//! of the serving cost model.
+//!
+//! Each record pairs a job's *static* cost estimate (merge steps read
+//! off the graph, see `serve::cost_model`) with the *measured* wall
+//! time of executing it. Replaying these records re-seeds the cost
+//! model's ns-per-step calibration at startup, so batch packing starts
+//! from observed hardware behaviour instead of the built-in default —
+//! the job-level analogue of feeding `cost::replay` traces back into
+//! the work-aware binner.
+//!
+//! Format: line-oriented TSV (`kind n m est_steps wall_ms`), `#`-prefix
+//! comments. Hand-rolled because the offline crate set has no serde.
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// One measured execution of a served job.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceRecord {
+    /// Job kind label (`ktruss`, `kmax`, `decompose`, `triangles`).
+    pub kind: String,
+    /// Vertices of the job's graph.
+    pub n: usize,
+    /// Edges of the job's graph.
+    pub m: usize,
+    /// The cost model's static estimate at admission time.
+    pub est_steps: u64,
+    /// Measured execution wall time (excluding queueing).
+    pub wall_ms: f64,
+}
+
+/// Write `records` to `path` (atomically enough for calibration data:
+/// full rewrite, no partial appends).
+pub fn save(path: &Path, records: &[TraceRecord]) -> Result<()> {
+    let mut out = String::from("# ktruss serve calibration: kind n m est_steps wall_ms\n");
+    for r in records {
+        out.push_str(&format!(
+            "{}\t{}\t{}\t{}\t{:.6}\n",
+            r.kind, r.n, r.m, r.est_steps, r.wall_ms
+        ));
+    }
+    std::fs::write(path, out).with_context(|| format!("write trace file {}", path.display()))
+}
+
+/// Load records from `path`. Unparseable lines are an error (the file
+/// is machine-written); comment and blank lines are skipped.
+pub fn load(path: &Path) -> Result<Vec<TraceRecord>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("read trace file {}", path.display()))?;
+    let mut out = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let fields: Vec<&str> = line.split_whitespace().collect();
+        if fields.len() != 5 {
+            anyhow::bail!(
+                "{}:{}: expected 5 fields, got {}",
+                path.display(),
+                lineno + 1,
+                fields.len()
+            );
+        }
+        let at = |what: &str| format!("{}:{}: bad {what}", path.display(), lineno + 1);
+        let rec = TraceRecord {
+            kind: fields[0].to_string(),
+            n: fields[1].parse().with_context(|| at("n"))?,
+            m: fields[2].parse().with_context(|| at("m"))?,
+            est_steps: fields[3].parse().with_context(|| at("est_steps"))?,
+            wall_ms: fields[4].parse().with_context(|| at("wall_ms"))?,
+        };
+        out.push(rec);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(name)
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let path = tmp("ktruss-persist-roundtrip.tsv");
+        let records = vec![
+            TraceRecord { kind: "ktruss".into(), n: 100, m: 400, est_steps: 9000, wall_ms: 1.25 },
+            TraceRecord { kind: "kmax".into(), n: 50, m: 80, est_steps: 700, wall_ms: 0.5 },
+        ];
+        save(&path, &records).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back, records);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn load_skips_comments_and_rejects_garbage() {
+        let path = tmp("ktruss-persist-garbage.tsv");
+        std::fs::write(&path, "# header\n\nktruss\t10\t20\t30\t0.5\n").unwrap();
+        let recs = load(&path).unwrap();
+        assert_eq!(recs.len(), 1);
+        assert_eq!(recs[0].est_steps, 30);
+
+        std::fs::write(&path, "ktruss\t10\t20\n").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::write(&path, "ktruss\tx\t20\t30\t0.5\n").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn load_missing_file_is_an_error() {
+        assert!(load(&tmp("ktruss-persist-definitely-missing.tsv")).is_err());
+    }
+}

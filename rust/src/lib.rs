@@ -42,6 +42,7 @@ pub mod gen;
 pub mod graph;
 pub mod par;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod testkit;
 pub mod util;

@@ -7,7 +7,8 @@
 //!   generate   materialize a SNAP-replica graph to a file
 //!   suite      list the replica suite with structural stats
 //!   bench      regenerate a paper table/figure (table1|fig2|fig3|fig4|ablations)
-//!   serve      start the coordinator and run a demo batch of jobs
+//!              or run the serving throughput workload (serve)
+//!   serve      start the sharded executor and run a mixed-priority job stream
 //!   calibrate  measure the host's merge-step cost for the CPU model
 //!   info       runtime/artifact environment report
 
@@ -17,14 +18,17 @@ use ktruss::algo::support::Mode;
 // `algo::ktruss` *module* here would shadow the `ktruss` crate name.
 use ktruss::algo::ktruss::ktruss as ktruss_seq;
 use ktruss::algo::{decompose, kmax};
-use ktruss::bench_harness::{ablations, figs, report, table1, Workload};
+use ktruss::bench_harness::{ablations, figs, report, serve_bench, table1, Workload};
 use ktruss::cli::Args;
-use ktruss::coordinator::{Coordinator, JobKind, ServiceConfig};
+use ktruss::coordinator::JobKind;
+use ktruss::cost::persist;
 use ktruss::gen::suite;
 use ktruss::graph::{io, stats, Csr};
 use ktruss::par::{ktruss_par, Pool, Schedule};
+use ktruss::serve::{CostModel, Executor, Priority, ServeConfig, SubmitOpts};
 use ktruss::util::Timer;
 use std::sync::Arc;
+use std::time::Duration;
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -69,13 +73,19 @@ fn print_help() {
          COMMANDS\n\
            run        --graph <name|path> [--k 3] [--mode fine|coarse] [--par N] [--engine sparse|dense]\n\
                       [--schedule static|dynamic[:chunk]|workaware|stealing]\n\
+                      [--shards N] [--priority high|normal|low] [--deadline-ms D]\n\
+                      (--shards > 1 serves the job through the sharded executor)\n\
            kmax       --graph <name|path>\n\
            decompose  --graph <name|path>\n\
            generate   --graph <name> [--scale 1.0] [--out file.tsv] [--format tsv|bin]\n\
            suite      [--scale 0.15] [--stats]\n\
            bench      <table1|fig2|fig3|fig4|ablations> [--k 3] (env: KTRUSS_SUITE, KTRUSS_SCALE)\n\
-           serve      [--jobs 32] [--pool 4] [--schedule <s>] (demo batch through the coordinator;\n\
-                      without --schedule the worker picks a schedule per job from graph skew)\n\
+           bench serve [--jobs 120] [--arrival-us 300] [--workers 4] [--shard-counts 1,2,4]\n\
+           serve      [--jobs 32] [--shards 2] [--pool 4] [--schedule <s>] [--priority <p>]\n\
+                      [--deadline-ms D] [--calibration file.tsv]\n\
+                      (demo job stream through the sharded executor; --pool is the TOTAL worker\n\
+                      budget split across shards; without --schedule the worker picks per job;\n\
+                      without --priority the stream mixes priority classes)\n\
            calibrate\n\
            info\n\n\
          GRAPH SOURCES: a SNAP suite name (e.g. ca-GrQc, see `ktruss suite`) generates the\n\
@@ -116,13 +126,60 @@ fn cmd_run(args: &Args) -> Result<()> {
     let k = args.get_as::<u32>("k", 3)?;
     let mode = parse_mode(args)?;
     let par = args.get_as::<usize>("par", 1)?;
-    let engine = args.get("engine", "sparse");
+    let engine_flag = args.opt("engine");
+    let engine = engine_flag.clone().unwrap_or_else(|| "sparse".to_string());
     let schedule_flag = args.opt("schedule");
     let schedule: Schedule = match &schedule_flag {
         Some(s) => s.parse().map_err(|e| anyhow::anyhow!("--schedule: {e}"))?,
         None => Schedule::Dynamic { chunk: 256 },
     };
+    let shards = args.get_as::<usize>("shards", 1)?;
+    let priority: Priority = args
+        .get("priority", "normal")
+        .parse()
+        .map_err(|e| anyhow::anyhow!("--priority: {e}"))?;
+    let deadline_ms = args.get_as::<u64>("deadline-ms", 0)?;
     args.reject_unknown()?;
+    if shards > 1 {
+        // serve the single job through the sharded executor (exercises
+        // admission, cost-model routing and the serving metrics)
+        if engine_flag.is_some() {
+            eprintln!("note: --engine is ignored with --shards; the executor routes per job");
+        }
+        println!("graph: {}", stats::stats(&g));
+        let ex = Executor::start(
+            ServeConfig {
+                shards,
+                schedule: schedule_flag.map(|_| schedule),
+                ..Default::default()
+            }
+            .with_total_workers(par),
+        );
+        let t = Timer::start();
+        let ticket = ex.submit_with(
+            Arc::new(g),
+            JobKind::Ktruss { k, mode },
+            SubmitOpts {
+                priority,
+                deadline: (deadline_ms > 0).then(|| Duration::from_millis(deadline_ms)),
+            },
+        );
+        let r = ticket.wait();
+        let wall = t.elapsed_ms();
+        match r.output.map_err(|e| anyhow::anyhow!("{e}"))? {
+            ktruss::coordinator::JobOutput::Ktruss { truss_edges, iterations, .. } => {
+                println!(
+                    "{k}-truss: {truss_edges} edges survive, {iterations} iterations, \
+                     {wall:.3} ms [{} via {shards}-shard executor, priority={priority}]",
+                    r.engine
+                );
+            }
+            other => bail!("unexpected output {other:?}"),
+        }
+        println!("metrics: {}", ex.metrics.render());
+        ex.shutdown();
+        return Ok(());
+    }
     if schedule_flag.is_some() && (engine != "sparse" || par <= 1) {
         eprintln!(
             "note: --schedule only affects the sparse pool engine; add --par <N> (N > 1) to use it"
@@ -230,8 +287,11 @@ fn cmd_bench(args: &Args) -> Result<()> {
     let which = args
         .positional
         .first()
-        .context("bench needs a target: table1|fig2|fig3|fig4|ablations")?
+        .context("bench needs a target: table1|fig2|fig3|fig4|ablations|serve")?
         .clone();
+    if which == "serve" {
+        return cmd_bench_serve(args);
+    }
     let k = args.get_as::<u32>("k", 3)?;
     args.reject_unknown()?;
     let w = Workload::from_env()?;
@@ -262,6 +322,36 @@ fn cmd_bench(args: &Args) -> Result<()> {
         other => bail!("unknown bench target {other:?}"),
     }
     Ok(())
+}
+
+/// The serving throughput workload (no replica suite involved: the job
+/// stream is generated directly, see `bench_harness::serve_bench`).
+fn cmd_bench_serve(args: &Args) -> Result<()> {
+    let default = serve_bench::ThroughputConfig::default();
+    let shard_counts: Vec<usize> = args
+        .get("shard-counts", "1,2,4")
+        .split(',')
+        .map(|s| {
+            s.trim()
+                .parse::<usize>()
+                .map_err(|_| anyhow::anyhow!("--shard-counts: bad entry {s:?}"))
+        })
+        .collect::<Result<_>>()?;
+    let cfg = serve_bench::ThroughputConfig {
+        jobs: args.get_as::<usize>("jobs", default.jobs)?,
+        arrival_us: args.get_as::<u64>("arrival-us", default.arrival_us)?,
+        total_workers: args.get_as::<usize>("workers", default.total_workers)?,
+        shard_counts,
+        deadline_ms: args.get_as::<u64>("deadline-ms", default.deadline_ms)?,
+        seed: args.get_as::<u64>("seed", default.seed)?,
+    };
+    args.reject_unknown()?;
+    println!(
+        "# serve: {} jobs, shard counts {:?}, {} total workers",
+        cfg.jobs, cfg.shard_counts, cfg.total_workers
+    );
+    let r = serve_bench::run(&cfg, |msg| eprintln!("  [{msg}]"))?;
+    report::emit("serve_throughput.txt", &r.render())
 }
 
 fn run_ablations(w: &Workload) -> Result<String> {
@@ -308,20 +398,46 @@ fn run_ablations(w: &Workload) -> Result<String> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let jobs = args.get_as::<usize>("jobs", 32)?;
+    let shards = args.get_as::<usize>("shards", 2)?.max(1);
+    // --pool is the TOTAL worker budget, split evenly across shards
     let pool = args.get_as::<usize>("pool", 4)?;
     // no --schedule flag ⇒ the worker picks per job from graph skew
     let schedule: Option<Schedule> = match args.opt("schedule") {
         Some(s) => Some(s.parse().map_err(|e| anyhow::anyhow!("--schedule: {e}"))?),
         None => None,
     };
+    // no --priority flag ⇒ the demo stream mixes priority classes
+    let fixed_priority: Option<Priority> = match args.opt("priority") {
+        Some(p) => Some(p.parse().map_err(|e| anyhow::anyhow!("--priority: {e}"))?),
+        None => None,
+    };
+    let deadline_ms = args.get_as::<u64>("deadline-ms", 0)?;
+    let calibration = args.opt("calibration");
     args.reject_unknown()?;
-    let c = Coordinator::start(ServiceConfig {
-        pool_workers: pool,
-        schedule,
-        ..Default::default()
-    });
+
+    // seed the cost model from persisted traces when available (the
+    // loaded history is kept and merged back on save)
+    let prior_records = match &calibration {
+        Some(path) if std::path::Path::new(path).exists() => {
+            let records = persist::load(std::path::Path::new(path))?;
+            println!("calibration: seeded from {} records in {path}", records.len());
+            records
+        }
+        _ => Vec::new(),
+    };
+    let model = if prior_records.is_empty() {
+        CostModel::new()
+    } else {
+        CostModel::from_records(&prior_records)
+    };
+    // --pool is the exact TOTAL budget; with_total_workers spreads the
+    // remainder over the first shards
+    let serve_cfg =
+        ServeConfig { shards, schedule, ..Default::default() }.with_total_workers(pool);
+    let (wps, extra) = (serve_cfg.workers_per_shard, serve_cfg.workers_remainder);
+    let ex = Executor::start_with_model(serve_cfg, model);
     println!(
-        "coordinator up (pool={pool}, schedule={}); submitting {jobs} mixed jobs…",
+        "executor up (shards={shards}, workers/shard={wps}+{extra}, schedule={}); submitting {jobs} mixed jobs…",
         schedule.map(|s| s.to_string()).unwrap_or_else(|| "auto".to_string())
     );
     let mut rng = ktruss::util::Rng::new(1);
@@ -337,7 +453,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
             2 => JobKind::Triangles,
             _ => JobKind::Kmax,
         };
-        tickets.push(c.submit(g, kind));
+        let priority = fixed_priority.unwrap_or(match i % 4 {
+            0 => Priority::High,
+            3 => Priority::Low,
+            _ => Priority::Normal,
+        });
+        let deadline = (deadline_ms > 0).then(|| Duration::from_millis(deadline_ms));
+        tickets.push(ex.submit_with(g, kind, SubmitOpts { priority, deadline }));
     }
     for ticket in tickets {
         let r = ticket.wait();
@@ -347,8 +469,29 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     let total_ms = t.elapsed_ms();
     println!("all {jobs} jobs completed in {total_ms:.1} ms");
-    println!("metrics: {}", c.metrics.render());
-    c.shutdown();
+    println!("metrics: {}", ex.metrics.render());
+    println!("{}", ex.metrics.render_shards());
+    if let (Some(p50), Some(p99)) = (ex.metrics.quantile(0.50), ex.metrics.quantile(0.99)) {
+        println!("serving latency: p50 {p50:.3} ms, p99 {p99:.3} ms");
+    }
+    println!(
+        "cost model: {:.2} ns/step over {} observations",
+        ex.cost_model.ns_per_step(),
+        ex.cost_model.samples()
+    );
+    if let Some(path) = calibration {
+        // append this run's observations to the loaded history,
+        // keeping the freshest records when over the cap
+        let mut records = prior_records;
+        records.extend(ex.cost_model.records());
+        if records.len() > ktruss::serve::cost_model::RECORD_CAP {
+            let drop = records.len() - ktruss::serve::cost_model::RECORD_CAP;
+            records.drain(..drop);
+        }
+        persist::save(std::path::Path::new(&path), &records)?;
+        println!("calibration: saved {} records to {path}", records.len());
+    }
+    ex.shutdown();
     Ok(())
 }
 

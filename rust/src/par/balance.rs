@@ -87,6 +87,74 @@ pub fn estimate_costs(z: &ZCsr, mode: Mode) -> Vec<u64> {
     }
 }
 
+/// A per-task cost vector for one support/prune pass, tagged by how it
+/// was obtained. Two sources:
+///
+/// * [`Costs::estimate`] — the static upper bounds of
+///   [`estimate_costs`] (all the binner has before the first pass);
+/// * [`Costs::from_trace`] — *measured* per-slot merge steps from the
+///   previous pass (either the in-situ measurement `ktruss_par`
+///   records, or a [`crate::cost::trace::SupportTrace`] from the replay
+///   driver). As pruning skews rows away from the static bounds, the
+///   measured costs keep the scan bins tight — the ROADMAP's
+///   "feed measured traces back into the work-aware binner" item.
+///
+/// Slots that died since the measurement (terminators/tombstones) are
+/// masked to cost 1; surviving entries may have shifted within their
+/// row under prune-compaction, so fine-grained trace costs are a
+/// per-row-faithful approximation rather than exact per-slot truth —
+/// which is all scan binning needs.
+#[derive(Clone, Debug)]
+pub struct Costs {
+    /// One entry per task (row for [`Mode::Coarse`], slot for
+    /// [`Mode::Fine`]), every entry ≥ 1.
+    pub per_task: Vec<u64>,
+}
+
+impl Costs {
+    /// Static upper bounds read off the current working form.
+    pub fn estimate(z: &ZCsr, mode: Mode) -> Costs {
+        Costs { per_task: estimate_costs(z, mode) }
+    }
+
+    /// Measured per-slot merge steps from the previous pass
+    /// (`fine_steps.len() == z.slots()`), masked against the *current*
+    /// working form `z` (post-prune) and aggregated to `mode`'s task
+    /// granularity.
+    pub fn from_trace(fine_steps: &[u32], z: &ZCsr, mode: Mode) -> Costs {
+        assert_eq!(fine_steps.len(), z.slots(), "one measured step count per slot");
+        let col = z.col();
+        let per_task = match mode {
+            Mode::Fine => (0..z.slots())
+                .map(|p| if col[p] == 0 { 1 } else { (fine_steps[p] as u64).max(1) })
+                .collect(),
+            Mode::Coarse => (0..z.n())
+                .map(|i| {
+                    let (start, end) = z.row_span(i);
+                    let mut cost = 1u64;
+                    for p in start..end {
+                        if col[p] == 0 {
+                            break;
+                        }
+                        cost += (fine_steps[p] as u64).max(1);
+                    }
+                    cost
+                })
+                .collect(),
+        };
+        Costs { per_task }
+    }
+
+    /// Number of tasks covered.
+    pub fn len(&self) -> usize {
+        self.per_task.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.per_task.is_empty()
+    }
+}
+
 /// Scan-based binning: pack `costs.len()` tasks into `bins` contiguous
 /// half-open ranges of approximately equal total cost, via prefix sums
 /// and quantile binary search. The ranges partition `0..costs.len()`
@@ -312,6 +380,64 @@ mod tests {
                 coarse[i],
                 tr.row_steps(z.row_ptr(), i)
             );
+        }
+    }
+
+    #[test]
+    fn costs_from_trace_match_measured_steps_on_fresh_graph() {
+        let g = from_sorted_unique(4, &[(0, 1), (0, 2), (0, 3), (1, 2), (2, 3)]);
+        let z = crate::graph::ZCsr::from_csr(&g);
+        let mut s = Vec::new();
+        let tr = crate::cost::trace::trace_supports(&z, &mut s);
+        let fine = Costs::from_trace(&tr.fine_steps, &z, Mode::Fine);
+        assert_eq!(fine.len(), z.slots());
+        for (p, &c) in fine.per_task.iter().enumerate() {
+            assert_eq!(c, (tr.fine_steps[p] as u64).max(1), "slot {p}");
+            assert!(c >= 1);
+        }
+        let coarse = Costs::from_trace(&tr.fine_steps, &z, Mode::Coarse);
+        assert_eq!(coarse.len(), z.n());
+        for i in 0..z.n() {
+            // row cost = 1 (overhead) + sum of max(step, 1) over live slots
+            let (start, _) = z.row_span(i);
+            let want: u64 = 1 + z
+                .row_live(i)
+                .iter()
+                .enumerate()
+                .map(|(off, _)| (tr.fine_steps[start + off] as u64).max(1))
+                .sum::<u64>();
+            assert_eq!(coarse.per_task[i], want, "row {i}");
+        }
+    }
+
+    #[test]
+    fn costs_from_trace_mask_dead_slots() {
+        // kill row 0 entirely: its slots must cost 1 regardless of the
+        // (stale) measured steps
+        let g = from_sorted_unique(4, &[(0, 1), (0, 2), (0, 3), (1, 2), (2, 3)]);
+        let mut z = crate::graph::ZCsr::from_csr(&g);
+        let stale = vec![50u32; z.slots()];
+        let (start, end) = z.row_span(0);
+        for p in start..end {
+            z.col_mut()[p] = 0;
+        }
+        let fine = Costs::from_trace(&stale, &z, Mode::Fine);
+        for p in start..end {
+            assert_eq!(fine.per_task[p], 1, "dead slot {p}");
+        }
+        let coarse = Costs::from_trace(&stale, &z, Mode::Coarse);
+        assert_eq!(coarse.per_task[0], 1, "dead row");
+        assert!(coarse.per_task[1] > 1, "live row keeps measured cost");
+    }
+
+    #[test]
+    fn costs_estimate_wraps_estimate_costs() {
+        let g = from_sorted_unique(4, &[(0, 1), (0, 2), (0, 3), (1, 2), (2, 3)]);
+        let z = crate::graph::ZCsr::from_csr(&g);
+        for mode in [Mode::Coarse, Mode::Fine] {
+            let c = Costs::estimate(&z, mode);
+            assert_eq!(c.per_task, estimate_costs(&z, mode));
+            assert!(!c.is_empty());
         }
     }
 

@@ -7,6 +7,6 @@ pub mod balance;
 pub mod parallel_support;
 pub mod pool;
 
-pub use balance::{estimate_costs, scan_bins};
+pub use balance::{estimate_costs, scan_bins, Costs};
 pub use parallel_support::{compute_supports_par, ktruss_par, prune_par};
 pub use pool::{Pool, Schedule, ALL_SCHEDULES};

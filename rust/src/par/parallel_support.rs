@@ -11,7 +11,7 @@
 //! [`super::balance::estimate_costs`] into the pool; the cost-oblivious
 //! schedules run the plain parallel-for.
 
-use super::balance;
+use super::balance::{self, Costs};
 use super::pool::{Pool, Schedule};
 use crate::algo::support::{eager_update_atomic, Mode};
 use crate::graph::ZCsr;
@@ -30,6 +30,7 @@ fn needs_costs(schedule: Schedule) -> bool {
 }
 
 /// Run one support pass into an existing (zeroed) atomic array.
+/// Work-aware schedules bin on the static cost estimates.
 pub fn compute_supports_into(
     z: &ZCsr,
     pool: &Pool,
@@ -37,8 +38,46 @@ pub fn compute_supports_into(
     schedule: Schedule,
     s: &[AtomicU32],
 ) {
+    compute_supports_costed(z, pool, mode, schedule, s, None, None);
+}
+
+/// Run one support pass into an existing (zeroed) atomic array, with
+/// explicit control over the work-aware binner's cost source and with
+/// optional in-situ cost measurement.
+///
+/// * `costs` — per-task costs for the binner ([`Costs::estimate`] or
+///   [`Costs::from_trace`]); `None` computes the static estimate
+///   internally (only when `schedule` needs costs at all).
+/// * `measured` — when `Some`, every slot's exact merge-step count is
+///   recorded (`measured.len() == z.slots()`; terminator/tombstone
+///   slots record 0). One relaxed store per slot — cheap relative to
+///   the merge itself, and it turns the *next* pass's binning from
+///   upper bounds into ground truth (see [`ktruss_par`]).
+pub fn compute_supports_costed(
+    z: &ZCsr,
+    pool: &Pool,
+    mode: Mode,
+    schedule: Schedule,
+    s: &[AtomicU32],
+    costs: Option<&Costs>,
+    measured: Option<&[AtomicU32]>,
+) {
     assert_eq!(s.len(), z.slots());
+    if let Some(m) = measured {
+        assert_eq!(m.len(), z.slots(), "one measured-step cell per slot");
+    }
     let col = z.col();
+    // resolve the binner's cost vector (work-aware schedules only)
+    let owned_costs: Option<Costs> = if needs_costs(schedule) && costs.is_none() {
+        Some(Costs::estimate(z, mode))
+    } else {
+        None
+    };
+    let cost_vec: Option<&[u64]> = if needs_costs(schedule) {
+        costs.or(owned_costs.as_ref()).map(|c| c.per_task.as_slice())
+    } else {
+        None
+    };
     match mode {
         Mode::Coarse => {
             // one task per row (paper Algorithm 2): the task walks all
@@ -51,14 +90,18 @@ pub fn compute_supports_into(
                         break;
                     }
                     let (r0, _) = z.row_span(kappa as usize);
-                    eager_update_atomic(col, s, p, r0);
+                    let steps = eager_update_atomic(col, s, p, r0);
+                    if let Some(m) = measured {
+                        m[p].store(steps.min(u32::MAX as u64) as u32, Ordering::Relaxed);
+                    }
                 }
             };
-            if needs_costs(schedule) {
-                let costs = balance::estimate_costs(z, mode);
-                pool.parallel_for_costed(z.n(), &costs, schedule, task);
-            } else {
-                pool.parallel_for(z.n(), schedule, task);
+            match cost_vec {
+                Some(c) => {
+                    assert_eq!(c.len(), z.n(), "coarse costs are per row");
+                    pool.parallel_for_costed(z.n(), c, schedule, task);
+                }
+                None => pool.parallel_for(z.n(), schedule, task),
             }
         }
         Mode::Fine => {
@@ -69,16 +112,23 @@ pub fn compute_supports_into(
             let task = |_w: usize, p: usize| {
                 let kappa = col[p];
                 if kappa == 0 {
+                    if let Some(m) = measured {
+                        m[p].store(0, Ordering::Relaxed);
+                    }
                     return;
                 }
                 let (r0, _) = z.row_span(kappa as usize);
-                eager_update_atomic(col, s, p, r0);
+                let steps = eager_update_atomic(col, s, p, r0);
+                if let Some(m) = measured {
+                    m[p].store(steps.min(u32::MAX as u64) as u32, Ordering::Relaxed);
+                }
             };
-            if needs_costs(schedule) {
-                let costs = balance::estimate_costs(z, mode);
-                pool.parallel_for_costed(z.slots(), &costs, schedule, task);
-            } else {
-                pool.parallel_for(z.slots(), schedule, task);
+            match cost_vec {
+                Some(c) => {
+                    assert_eq!(c.len(), z.slots(), "fine costs are per slot");
+                    pool.parallel_for_costed(z.slots(), c, schedule, task);
+                }
+                None => pool.parallel_for(z.slots(), schedule, task),
             }
         }
     }
@@ -161,6 +211,13 @@ impl<T> SendPtr<T> {
 
 /// Full concurrent k-truss (support + prune until convergence) — the
 /// production entry point used by the coordinator's CPU engine.
+///
+/// Work-aware schedules run a *calibrated* convergence loop: iteration
+/// 0 bins on the static upper bounds, every later iteration bins on
+/// the **measured** per-slot merge steps of the previous pass
+/// ([`Costs::from_trace`], masked against the post-prune working form).
+/// Pruning skews rows away from the static bounds; replaying the exact
+/// last-iteration costs keeps the scan bins tight as the truss shrinks.
 pub fn ktruss_par(
     g: &crate::graph::Csr,
     k: u32,
@@ -171,6 +228,16 @@ pub fn ktruss_par(
     let mut z = ZCsr::from_csr(g);
     let s_atomic: Vec<AtomicU32> = (0..z.slots()).map(|_| AtomicU32::new(0)).collect();
     let mut s_plain = vec![0u32; z.slots()];
+    // measure per-slot steps only when a work-aware schedule will
+    // consume them next iteration
+    let measure = needs_costs(schedule);
+    let measured: Vec<AtomicU32> = if measure {
+        (0..z.slots()).map(|_| AtomicU32::new(0)).collect()
+    } else {
+        Vec::new()
+    };
+    let mut measured_snap: Vec<u32> = Vec::new();
+    let mut costs: Option<Costs> = None;
     let mut iterations = 0usize;
     let mut stats = Vec::new();
     loop {
@@ -178,7 +245,15 @@ pub fn ktruss_par(
         if live == 0 {
             break;
         }
-        compute_supports_into(&z, pool, mode, schedule, &s_atomic);
+        compute_supports_costed(
+            &z,
+            pool,
+            mode,
+            schedule,
+            &s_atomic,
+            costs.as_ref(),
+            if measure { Some(measured.as_slice()) } else { None },
+        );
         for (d, a) in s_plain.iter_mut().zip(s_atomic.iter()) {
             *d = a.swap(0, Ordering::Relaxed);
         }
@@ -192,6 +267,14 @@ pub fn ktruss_par(
         });
         if out.removed == 0 {
             break;
+        }
+        if measure {
+            // feed the measured pass back into the binner, masked
+            // against the just-pruned working form (row_ptr is stable
+            // under prune-compaction, so slot indices stay aligned)
+            measured_snap.clear();
+            measured_snap.extend(measured.iter().map(|a| a.load(Ordering::Relaxed)));
+            costs = Some(Costs::from_trace(&measured_snap, &z, mode));
         }
     }
     crate::algo::ktruss::KtrussResult { truss: z.to_csr(), iterations, stats, k, mode }
@@ -234,12 +317,66 @@ mod tests {
         let pool = Pool::new(4);
         for k in [3u32, 5] {
             let seq = ktruss(&g, k, Mode::Fine);
+            // WorkAware and Stealing exercise the measured-cost
+            // feedback loop (trace-calibrated bins after iteration 0)
             for mode in [Mode::Coarse, Mode::Fine] {
-                for sched in [Schedule::Dynamic { chunk: 64 }, Schedule::WorkAware] {
+                for sched in
+                    [Schedule::Dynamic { chunk: 64 }, Schedule::WorkAware, Schedule::Stealing]
+                {
                     let par = ktruss_par(&g, k, &pool, mode, sched);
                     assert_eq!(par.truss, seq.truss, "k={k} {mode} {sched:?}");
                     assert_eq!(par.iterations, seq.iterations, "k={k} {mode} {sched:?}");
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn costed_pass_measures_exact_trace_steps() {
+        // the in-situ measurement of the parallel pass must agree with
+        // the sequential tracer slot for slot
+        let g = random_graph(9);
+        let z = ZCsr::from_csr(&g);
+        let mut s_trace = Vec::new();
+        let tr = crate::cost::trace::trace_supports(&z, &mut s_trace);
+        let pool = Pool::new(4);
+        for (mode, sched) in [
+            (Mode::Fine, Schedule::WorkAware),
+            (Mode::Coarse, Schedule::Stealing),
+            (Mode::Fine, Schedule::Dynamic { chunk: 32 }),
+        ] {
+            let s: Vec<AtomicU32> = (0..z.slots()).map(|_| AtomicU32::new(0)).collect();
+            let measured: Vec<AtomicU32> = (0..z.slots()).map(|_| AtomicU32::new(0)).collect();
+            compute_supports_costed(&z, &pool, mode, sched, &s, None, Some(&measured));
+            let got: Vec<u32> = s.iter().map(|x| x.load(Ordering::Relaxed)).collect();
+            assert_eq!(got, s_trace, "{mode} {sched:?}: supports");
+            for (p, (m, want)) in measured.iter().zip(tr.fine_steps.iter()).enumerate() {
+                assert_eq!(m.load(Ordering::Relaxed), *want, "{mode} {sched:?}: slot {p}");
+            }
+        }
+    }
+
+    #[test]
+    fn costed_pass_accepts_external_cost_vectors() {
+        // binning on externally supplied (even deliberately wrong)
+        // costs must never change the computed supports, only the
+        // partitioning
+        let g = random_graph(10);
+        let z = ZCsr::from_csr(&g);
+        let mut want = Vec::new();
+        compute_supports_seq(&z, &mut want);
+        let pool = Pool::new(3);
+        for mode in [Mode::Coarse, Mode::Fine] {
+            let n_tasks = match mode {
+                Mode::Coarse => z.n(),
+                Mode::Fine => z.slots(),
+            };
+            let skewed = Costs { per_task: (0..n_tasks).map(|i| (i as u64 % 17) + 1).collect() };
+            for sched in [Schedule::WorkAware, Schedule::Stealing] {
+                let s: Vec<AtomicU32> = (0..z.slots()).map(|_| AtomicU32::new(0)).collect();
+                compute_supports_costed(&z, &pool, mode, sched, &s, Some(&skewed), None);
+                let got: Vec<u32> = s.iter().map(|x| x.load(Ordering::Relaxed)).collect();
+                assert_eq!(got, want, "{mode} {sched:?}");
             }
         }
     }

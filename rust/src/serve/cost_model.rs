@@ -1,0 +1,261 @@
+//! Per-job runtime estimation for batch packing — GraphBLAST-style
+//! cost-model routing applied at job granularity.
+//!
+//! Two halves:
+//!
+//! * **Static estimate** ([`estimate_steps`]): an upper-bound merge-step
+//!   count read directly off the CSR, the job-level aggregate of the
+//!   per-task bounds `par::balance::estimate_costs` computes for the
+//!   support pass (a row's live entries each merge their tail with the
+//!   partner row), scaled by a per-kind iteration factor. Units are
+//!   abstract "steps" — only *ratios* matter for the executor's
+//!   equal-work batch packing.
+//! * **Calibration** ([`CostModel`]): an EWMA of observed ns-per-step
+//!   from completed jobs, optionally seeded from persisted
+//!   [`cost::persist`](crate::cost::persist) trace records of prior
+//!   runs. This converts steps into predicted milliseconds for
+//!   deadline-aware decisions, and tightens as the service runs — the
+//!   job-level analogue of feeding measured `cost::replay` traces back
+//!   into the work-aware binner.
+
+use crate::coordinator::job::JobKind;
+use crate::cost::persist::TraceRecord;
+use crate::graph::Csr;
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+/// Conservative default until the first observation lands (observed
+/// per-estimated-step wall cost is well below the raw merge-step cost
+/// because estimates are upper bounds).
+pub const DEFAULT_NS_PER_STEP: f64 = 10.0;
+
+/// EWMA smoothing factor for ns-per-step observations.
+const EWMA_ALPHA: f64 = 0.2;
+
+/// Retain at most this many trace records for persistence (a ring:
+/// once full, the oldest observation is dropped for each new one, so
+/// the retained window is always the freshest). Shared with the CLI's
+/// calibration-file merge so persisted history obeys the same cap.
+pub const RECORD_CAP: usize = 4096;
+
+/// Short label for a job kind (trace record key).
+pub fn kind_label(kind: &JobKind) -> &'static str {
+    match kind {
+        JobKind::Ktruss { .. } => "ktruss",
+        JobKind::Kmax => "kmax",
+        JobKind::Decompose => "decompose",
+        JobKind::Triangles => "triangles",
+    }
+}
+
+/// Static upper-bound work estimate for one job, in merge steps.
+///
+/// Per support pass: row `i` with `lᵢ` live entries costs
+/// `lᵢ + lᵢ(lᵢ−1)/2 + Σ_{κ∈row i} l_κ` (per-entry overhead + tail
+/// merges + partner-row merges). The per-kind multiplier folds in how
+/// many passes the algorithm typically drives (K_max and decomposition
+/// re-run the convergence loop per k).
+pub fn estimate_steps(g: &Csr, kind: &JobKind) -> u64 {
+    let n = g.n();
+    let live: Vec<u32> = (0..n).map(|i| g.row(i).len() as u32).collect();
+    let mut merge: u64 = 0;
+    for i in 0..n {
+        let li = live[i] as u64;
+        merge += li + li * li.saturating_sub(1) / 2;
+        for &kappa in g.row(i) {
+            merge += live[kappa as usize] as u64;
+        }
+    }
+    let mult: u64 = match kind {
+        JobKind::Triangles => 1,
+        JobKind::Ktruss { .. } => 3,
+        JobKind::Kmax => 8,
+        JobKind::Decompose => 12,
+    };
+    merge.saturating_mul(mult).max(1)
+}
+
+struct ModelState {
+    ns_per_step: f64,
+    samples: u64,
+    records: VecDeque<TraceRecord>,
+}
+
+/// Thread-safe replay-calibrated cost model shared by the executor's
+/// shards (each completed job refines the estimate-to-wall mapping).
+pub struct CostModel {
+    state: Mutex<ModelState>,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        CostModel::new()
+    }
+}
+
+impl CostModel {
+    pub fn new() -> CostModel {
+        CostModel {
+            state: Mutex::new(ModelState {
+                ns_per_step: DEFAULT_NS_PER_STEP,
+                samples: 0,
+                records: VecDeque::new(),
+            }),
+        }
+    }
+
+    /// Seed the calibration from persisted trace records (replayed in
+    /// order through the same EWMA the live path uses).
+    pub fn from_records(records: &[TraceRecord]) -> CostModel {
+        let model = CostModel::new();
+        {
+            let mut st = model.state.lock().unwrap();
+            for r in records {
+                update(&mut st, r.est_steps, r.wall_ms);
+            }
+        }
+        model
+    }
+
+    /// Record one completed job: refine ns-per-step and retain the
+    /// trace record for persistence (freshest [`RECORD_CAP`] kept).
+    pub fn observe(&self, kind: &JobKind, n: usize, m: usize, est_steps: u64, wall_ms: f64) {
+        let mut st = self.state.lock().unwrap();
+        update(&mut st, est_steps, wall_ms);
+        if st.records.len() == RECORD_CAP {
+            st.records.pop_front();
+        }
+        st.records.push_back(TraceRecord {
+            kind: kind_label(kind).to_string(),
+            n,
+            m,
+            est_steps,
+            wall_ms,
+        });
+    }
+
+    /// Current calibrated cost of one estimated step, in nanoseconds.
+    pub fn ns_per_step(&self) -> f64 {
+        self.state.lock().unwrap().ns_per_step
+    }
+
+    /// Observations folded into the calibration so far.
+    pub fn samples(&self) -> u64 {
+        self.state.lock().unwrap().samples
+    }
+
+    /// Predicted wall time for a job with the given static estimate.
+    pub fn predict_ms(&self, est_steps: u64) -> f64 {
+        est_steps as f64 * self.ns_per_step() / 1e6
+    }
+
+    /// Snapshot of retained trace records, oldest first (for
+    /// [`crate::cost::persist`]).
+    pub fn records(&self) -> Vec<TraceRecord> {
+        self.state.lock().unwrap().records.iter().cloned().collect()
+    }
+}
+
+fn update(st: &mut ModelState, est_steps: u64, wall_ms: f64) {
+    if est_steps == 0 || !wall_ms.is_finite() || wall_ms < 0.0 {
+        return;
+    }
+    let observed = wall_ms * 1e6 / est_steps as f64;
+    st.ns_per_step = if st.samples == 0 {
+        observed
+    } else {
+        EWMA_ALPHA * observed + (1.0 - EWMA_ALPHA) * st.ns_per_step
+    };
+    st.samples += 1;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::support::Mode;
+    use crate::graph::builder::from_sorted_unique;
+
+    #[test]
+    fn estimate_grows_with_size_and_kind() {
+        let mut rng = crate::util::Rng::new(7);
+        let small = crate::gen::erdos_renyi::gnm(50, 150, &mut rng);
+        let big = crate::gen::erdos_renyi::gnm(500, 3000, &mut rng);
+        let kt = JobKind::Ktruss { k: 3, mode: Mode::Fine };
+        assert!(estimate_steps(&big, &kt) > estimate_steps(&small, &kt));
+        // kind multipliers: triangles < ktruss < kmax < decompose
+        assert!(estimate_steps(&small, &JobKind::Triangles) < estimate_steps(&small, &kt));
+        assert!(estimate_steps(&small, &kt) < estimate_steps(&small, &JobKind::Kmax));
+        assert!(
+            estimate_steps(&small, &JobKind::Kmax) < estimate_steps(&small, &JobKind::Decompose)
+        );
+    }
+
+    #[test]
+    fn estimate_is_positive_even_for_empty_graphs() {
+        let g = crate::graph::Csr::empty(0);
+        assert_eq!(estimate_steps(&g, &JobKind::Triangles), 1);
+    }
+
+    #[test]
+    fn estimate_dominates_measured_support_steps() {
+        // the job estimate must upper-bound one measured support pass
+        // (it folds in ≥1 pass plus per-entry overhead)
+        let g = crate::gen::rmat::rmat(
+            200,
+            1500,
+            crate::gen::rmat::RmatParams::social(),
+            &mut crate::util::Rng::new(3),
+        );
+        let z = crate::graph::ZCsr::from_csr(&g);
+        let mut s = Vec::new();
+        let tr = crate::cost::trace::trace_supports(&z, &mut s);
+        let est = estimate_steps(&g, &JobKind::Triangles);
+        assert!(est >= tr.total_steps, "estimate {est} < measured {}", tr.total_steps);
+    }
+
+    #[test]
+    fn observe_calibrates_ns_per_step() {
+        let m = CostModel::new();
+        assert_eq!(m.samples(), 0);
+        let kind = JobKind::Triangles;
+        // 1000 steps in 0.01 ms = 10 ns/step exactly
+        m.observe(&kind, 10, 20, 1000, 0.01);
+        assert!((m.ns_per_step() - 10.0).abs() < 1e-9);
+        assert_eq!(m.samples(), 1);
+        // EWMA pulls toward new observations
+        m.observe(&kind, 10, 20, 1000, 0.1); // 100 ns/step
+        assert!(m.ns_per_step() > 10.0 && m.ns_per_step() < 100.0);
+        assert!((m.predict_ms(1_000_000) - m.ns_per_step()).abs() < 1e-9);
+        // degenerate observations are ignored
+        m.observe(&kind, 10, 20, 0, 1.0);
+        m.observe(&kind, 10, 20, 100, f64::NAN);
+        assert_eq!(m.samples(), 2);
+    }
+
+    #[test]
+    fn record_cap_is_a_ring_keeping_the_freshest() {
+        let m = CostModel::new();
+        for i in 0..RECORD_CAP + 10 {
+            m.observe(&JobKind::Triangles, i, i, 100, 0.001);
+        }
+        let records = m.records();
+        assert_eq!(records.len(), RECORD_CAP);
+        assert_eq!(records.first().unwrap().n, 10, "oldest 10 evicted");
+        assert_eq!(records.last().unwrap().n, RECORD_CAP + 9);
+    }
+
+    #[test]
+    fn records_roundtrip_through_from_records() {
+        let m = CostModel::new();
+        let g = from_sorted_unique(3, &[(0, 1), (1, 2)]);
+        let est = estimate_steps(&g, &JobKind::Kmax);
+        m.observe(&JobKind::Kmax, g.n(), g.nnz(), est, 0.5);
+        m.observe(&JobKind::Kmax, g.n(), g.nnz(), est, 0.6);
+        let records = m.records();
+        assert_eq!(records.len(), 2);
+        assert_eq!(records[0].kind, "kmax");
+        let seeded = CostModel::from_records(&records);
+        assert_eq!(seeded.samples(), 2);
+        assert!((seeded.ns_per_step() - m.ns_per_step()).abs() < 1e-9);
+    }
+}

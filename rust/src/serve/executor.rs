@@ -1,0 +1,635 @@
+//! The sharded serving executor: a central priority/EDF admission
+//! queue, a dispatcher that packs batches across shards by estimated
+//! cost, and N shard threads (each owning a worker pool) with
+//! cross-shard stealing of queued jobs.
+//!
+//! This is the paper's fine-grained load-balancing argument re-applied
+//! one level up. A batch of heterogeneous jobs is a coarse task set
+//! with exactly the skew pathology of §III-A: one decomposition job can
+//! dwarf a hundred triangle counts. So the dispatcher treats jobs like
+//! the support pass treats rows — estimate per-task cost
+//! ([`super::cost_model`]), pack the batch into equal-*work* (not
+//! equal-count) shard assignments ([`pack_batch`]), and absorb
+//! estimation error at runtime by letting a drained shard steal the
+//! globally most urgent queued job (the Hornet bin-and-steal idiom at
+//! job granularity; stealing the *most* urgent job is the job-level
+//! twist — the idle thief executes it immediately, so the steal can
+//! only pull urgent work forward).
+
+use super::cost_model::{estimate_steps, CostModel};
+use super::queue::{Admission, Priority, ServeQueue};
+use crate::coordinator::job::{JobId, JobKind, JobRequest, JobResult};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::router::{route_costed, RouterConfig};
+use crate::coordinator::worker::Worker;
+use crate::graph::Csr;
+use crate::par::{Pool, Schedule};
+use crate::runtime::DenseEngine;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Configuration of the sharded executor.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    /// Worker shards; each owns a `par::Pool` and executes one job at a
+    /// time (intra-job parallelism comes from the pool).
+    pub shards: usize,
+    /// Pool width per shard.
+    pub workers_per_shard: usize,
+    /// The first `workers_remainder` shards get one extra pool worker —
+    /// lets a total worker budget that does not divide evenly across
+    /// shards be honored exactly (`total = shards * workers_per_shard +
+    /// workers_remainder`).
+    pub workers_remainder: usize,
+    /// Route to the dense engine only when a job's estimated work is at
+    /// or below this many merge steps (`u64::MAX` = shape-only
+    /// routing); see [`crate::coordinator::router::route_costed`].
+    pub dense_step_ceiling: u64,
+    /// Max jobs the dispatcher packs per batch.
+    pub max_batch: usize,
+    /// How long the dispatcher waits to fill a batch.
+    pub batch_window: Duration,
+    /// Try to construct the dense engine per shard (requires artifacts).
+    pub enable_dense: bool,
+    /// Fixed pool schedule for sparse jobs; `None` = per-job heuristic.
+    pub schedule: Option<Schedule>,
+    /// Allow drained shards to steal queued jobs from loaded shards.
+    pub steal: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            shards: 2,
+            workers_per_shard: 2,
+            workers_remainder: 0,
+            dense_step_ceiling: u64::MAX,
+            max_batch: 16,
+            batch_window: Duration::from_millis(2),
+            enable_dense: true,
+            schedule: None,
+            steal: true,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Split a TOTAL worker budget across this config's shards exactly:
+    /// every shard gets `total / shards` workers and the first
+    /// `total % shards` shards one extra (minimum 1 worker per shard,
+    /// which is the only case where the budget can be exceeded).
+    pub fn with_total_workers(mut self, total: usize) -> ServeConfig {
+        let shards = self.shards.max(1);
+        self.workers_per_shard = (total / shards).max(1);
+        self.workers_remainder = if total / shards == 0 { 0 } else { total % shards };
+        self
+    }
+}
+
+/// Per-job submission options.
+#[derive(Clone, Copy, Debug)]
+pub struct SubmitOpts {
+    pub priority: Priority,
+    /// Soft deadline relative to submission; misses are counted in the
+    /// metrics, the job still runs to completion.
+    pub deadline: Option<Duration>,
+}
+
+impl Default for SubmitOpts {
+    fn default() -> Self {
+        SubmitOpts { priority: Priority::Normal, deadline: None }
+    }
+}
+
+/// Ticket for a submitted job.
+pub struct Ticket {
+    pub id: JobId,
+    rx: Receiver<JobResult>,
+}
+
+impl Ticket {
+    /// Block until the result arrives.
+    pub fn wait(self) -> JobResult {
+        self.rx.recv().expect("executor dropped without reply")
+    }
+
+    /// Non-blocking poll.
+    pub fn try_get(&self) -> Option<JobResult> {
+        self.rx.try_recv().ok()
+    }
+}
+
+/// Central admission queue state (guarded by one mutex, signalled on
+/// every submit and on shutdown).
+struct AdmState {
+    queue: ServeQueue,
+    shutdown: bool,
+}
+
+struct AdmissionShared {
+    state: Mutex<AdmState>,
+    cv: Condvar,
+}
+
+/// Per-shard run queues plus the dispatch-complete flag, all under one
+/// mutex: stealing needs an atomic view of every queue anyway, and the
+/// queues hold jobs (not tasks) so the lock is far off the hot path.
+struct ShardQueues {
+    queues: Vec<ServeQueue>,
+    dispatch_done: bool,
+}
+
+struct ShardShared {
+    state: Mutex<ShardQueues>,
+    work_cv: Condvar,
+    /// Estimated steps of the job each shard is currently executing
+    /// (0 = idle). Lets the dispatcher's packing baseline see a shard
+    /// blocked on a heavy job as loaded even when its queue is empty.
+    inflight: Vec<AtomicU64>,
+}
+
+/// The sharded executor handle. Dropping it drains queued jobs and
+/// shuts the shards down.
+pub struct Executor {
+    cfg: ServeConfig,
+    adm: Arc<AdmissionShared>,
+    next_id: AtomicU64,
+    pub metrics: Arc<Metrics>,
+    pub cost_model: Arc<CostModel>,
+    dispatcher: Mutex<Option<std::thread::JoinHandle<()>>>,
+    shard_handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl Executor {
+    /// Start with a fresh (uncalibrated) cost model.
+    pub fn start(cfg: ServeConfig) -> Executor {
+        Executor::start_with_model(cfg, CostModel::new())
+    }
+
+    /// Start with a pre-seeded cost model (e.g. loaded from persisted
+    /// trace records, see [`crate::cost::persist`]).
+    pub fn start_with_model(cfg: ServeConfig, model: CostModel) -> Executor {
+        // normalize degenerate knobs: 0 shards is meaningless and a
+        // 0-size batch would make the dispatcher spin without ever
+        // draining the queue (and hang shutdown)
+        let cfg = ServeConfig { shards: cfg.shards.max(1), max_batch: cfg.max_batch.max(1), ..cfg };
+        let metrics = Arc::new(Metrics::with_shards(cfg.shards));
+        let cost_model = Arc::new(model);
+        let adm = Arc::new(AdmissionShared {
+            state: Mutex::new(AdmState { queue: ServeQueue::new(), shutdown: false }),
+            cv: Condvar::new(),
+        });
+        let shards = Arc::new(ShardShared {
+            state: Mutex::new(ShardQueues {
+                queues: (0..cfg.shards).map(|_| ServeQueue::new()).collect(),
+                dispatch_done: false,
+            }),
+            work_cv: Condvar::new(),
+            inflight: (0..cfg.shards).map(|_| AtomicU64::new(0)).collect(),
+        });
+        let mut shard_handles = Vec::with_capacity(cfg.shards);
+        for me in 0..cfg.shards {
+            let shards = Arc::clone(&shards);
+            let metrics = Arc::clone(&metrics);
+            let cost_model = Arc::clone(&cost_model);
+            let handle = std::thread::Builder::new()
+                .name(format!("ktruss-shard-{me}"))
+                .spawn(move || shard_loop(me, cfg, &shards, &metrics, &cost_model))
+                .expect("spawn shard");
+            shard_handles.push(handle);
+        }
+        let dispatcher = {
+            let adm = Arc::clone(&adm);
+            let shards = Arc::clone(&shards);
+            let metrics = Arc::clone(&metrics);
+            std::thread::Builder::new()
+                .name("ktruss-dispatch".into())
+                .spawn(move || dispatch_loop(cfg, &adm, &shards, &metrics))
+                .expect("spawn dispatcher")
+        };
+        Executor {
+            cfg,
+            adm,
+            next_id: AtomicU64::new(1),
+            metrics,
+            cost_model,
+            dispatcher: Mutex::new(Some(dispatcher)),
+            shard_handles: Mutex::new(shard_handles),
+        }
+    }
+
+    pub fn config(&self) -> ServeConfig {
+        self.cfg
+    }
+
+    /// Submit at normal priority, no deadline.
+    pub fn submit(&self, graph: Arc<Csr>, kind: JobKind) -> Ticket {
+        self.submit_with(graph, kind, SubmitOpts::default())
+    }
+
+    /// Submit with explicit priority and soft deadline.
+    pub fn submit_with(&self, graph: Arc<Csr>, kind: JobKind, opts: SubmitOpts) -> Ticket {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (rtx, rrx) = channel();
+        let est_steps = estimate_steps(&graph, &kind);
+        let now = Instant::now();
+        let adm = Admission {
+            req: JobRequest { id, graph, kind },
+            priority: opts.priority,
+            deadline: opts.deadline.map(|d| now + d),
+            submitted: now,
+            est_steps,
+            reply: rtx,
+        };
+        self.metrics.record_submit();
+        let down = {
+            let mut st = self.adm.state.lock().unwrap();
+            if st.shutdown {
+                true
+            } else {
+                st.queue.push(adm);
+                false
+            }
+        };
+        // panic only after the guard is dropped — panicking with the
+        // admission mutex held would poison it and turn the Executor's
+        // Drop (which locks it again) into a double panic / abort
+        assert!(!down, "executor is down");
+        self.adm.cv.notify_all();
+        Ticket { id, rx: rrx }
+    }
+
+    /// Graceful shutdown: queued jobs are still dispatched and executed
+    /// before the shards exit. Also triggered by `Drop`. Idempotent.
+    pub fn shutdown(&self) {
+        {
+            let mut st = self.adm.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.adm.cv.notify_all();
+        if let Some(h) = self.dispatcher.lock().unwrap().take() {
+            let _ = h.join();
+        }
+        for h in self.shard_handles.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Executor {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Dispatcher: drain the admission queue in batches (the queue is
+/// already priority/EDF-sorted), pack each batch into equal
+/// estimated-work shard assignments, and hand them to the shards.
+fn dispatch_loop(
+    cfg: ServeConfig,
+    adm: &AdmissionShared,
+    shards: &ShardShared,
+    metrics: &Metrics,
+) {
+    loop {
+        let batch = {
+            let mut st = adm.state.lock().unwrap();
+            while st.queue.is_empty() && !st.shutdown {
+                st = adm.cv.wait(st).unwrap();
+            }
+            if st.queue.is_empty() && st.shutdown {
+                break;
+            }
+            // accumulate up to max_batch within the window (skipped
+            // when shutting down: drain as fast as possible)
+            let deadline = Instant::now() + cfg.batch_window;
+            while st.queue.len() < cfg.max_batch && !st.shutdown {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (guard, _) = adm.cv.wait_timeout(st, deadline - now).unwrap();
+                st = guard;
+            }
+            st.queue.take_front(cfg.max_batch)
+        };
+        if batch.is_empty() {
+            continue;
+        }
+        // Pack the batch into approximately equal-work shard
+        // assignments. Placement decides only *where* a job runs; each
+        // shard's queue re-sorts by urgency, so it never changes *when*
+        // a job runs relative to its queue peers.
+        let costs: Vec<u64> = batch.iter().map(|a| a.est_steps).collect();
+        {
+            let mut st = shards.state.lock().unwrap();
+            // baseline = queued work + the job each shard is executing
+            // right now, so a shard blocked on a heavy job with an
+            // empty queue does not look idle
+            let baseline: Vec<u64> = st
+                .queues
+                .iter()
+                .enumerate()
+                .map(|(w, q)| q.queued_steps() + shards.inflight[w].load(Ordering::Relaxed))
+                .collect();
+            let assignment = pack_batch(&costs, &baseline);
+            for (a, &w) in batch.into_iter().zip(assignment.iter()) {
+                st.queues[w].push(a);
+            }
+            for w in 0..st.queues.len() {
+                metrics.set_queue_depth(w, st.queues[w].len() as u64);
+            }
+        }
+        shards.work_cv.notify_all();
+    }
+    {
+        let mut st = shards.state.lock().unwrap();
+        st.dispatch_done = true;
+    }
+    shards.work_cv.notify_all();
+}
+
+/// Equal-work batch packing: walk the urgency-ordered batch and place
+/// each job on the currently least-loaded shard (existing queue
+/// backlog plus work assigned earlier in this batch) — the job-level
+/// analogue of the support pass's equal-work binning, with the
+/// prefix-sum quantile search replaced by a running argmin. The
+/// quantile form was deliberately **not** reused here: contiguous bins
+/// over an urgency-sorted batch hand each shard one contiguous urgency
+/// band (every High job on shard 0, every Low on shard N−1), so the
+/// most urgent work would serialize on a single shard. Greedy
+/// least-loaded keeps shard work equal to within one job (the classic
+/// LPT bound) while striping each urgency class across shards.
+///
+/// Returns one shard index per batch entry. `baseline[w]` is shard
+/// `w`'s already-queued estimated work.
+fn pack_batch(costs: &[u64], baseline: &[u64]) -> Vec<usize> {
+    let mut load = baseline.to_vec();
+    let mut assignment = Vec::with_capacity(costs.len());
+    for &c in costs {
+        let mut best = 0usize;
+        for (w, &l) in load.iter().enumerate() {
+            if l < load[best] {
+                best = w;
+            }
+        }
+        load[best] += c.max(1);
+        assignment.push(best);
+    }
+    assignment
+}
+
+/// One shard: pop the most urgent job from the own queue, steal the
+/// globally most urgent queued job from the other shards when drained,
+/// execute, account, reply. Exits when dispatch is complete and every
+/// queue is empty.
+fn shard_loop(
+    me: usize,
+    cfg: ServeConfig,
+    shards: &ShardShared,
+    metrics: &Metrics,
+    cost_model: &CostModel,
+) {
+    let dense = if cfg.enable_dense { DenseEngine::new().ok() } else { None };
+    let router_cfg = dense
+        .as_ref()
+        .map(|d| RouterConfig::new(d.max_n()).with_step_ceiling(cfg.dense_step_ceiling))
+        .unwrap_or_else(RouterConfig::disabled);
+    let width = cfg.workers_per_shard + usize::from(me < cfg.workers_remainder);
+    let worker = Worker::with_schedule(Pool::new(width), dense, cfg.schedule);
+    loop {
+        let adm = {
+            let mut st = shards.state.lock().unwrap();
+            loop {
+                if let Some(a) = st.queues[me].pop_front() {
+                    // publish in-flight work inside the critical
+                    // section: the dispatcher must never observe an
+                    // empty queue AND a zero inflight for a shard that
+                    // just took a heavy job
+                    shards.inflight[me].store(a.est_steps.max(1), Ordering::Relaxed);
+                    metrics.set_queue_depth(me, st.queues[me].len() as u64);
+                    break Some(a);
+                }
+                if cfg.steal {
+                    // steal the globally most urgent queued job: this
+                    // shard is idle and executes it immediately, so
+                    // the steal strictly advances the most urgent
+                    // waiting work, wherever estimation error or a
+                    // long-running job stranded it
+                    let mut victim: Option<usize> = None;
+                    let mut best: Option<super::queue::UrgencyKey> = None;
+                    for (i, q) in st.queues.iter().enumerate() {
+                        if i == me {
+                            continue;
+                        }
+                        if let Some(front) = q.peek_front() {
+                            let key = front.key();
+                            let more_urgent = match best {
+                                None => true,
+                                Some(b) => key < b,
+                            };
+                            if more_urgent {
+                                best = Some(key);
+                                victim = Some(i);
+                            }
+                        }
+                    }
+                    if let Some(v) = victim {
+                        if let Some(a) = st.queues[v].pop_front() {
+                            shards.inflight[me].store(a.est_steps.max(1), Ordering::Relaxed);
+                            metrics.record_steal(me);
+                            metrics.set_queue_depth(v, st.queues[v].len() as u64);
+                            break Some(a);
+                        }
+                    }
+                }
+                if st.dispatch_done && st.queues.iter().all(|q| q.is_empty()) {
+                    break None;
+                }
+                // timeout bounds the window between a dispatch-done
+                // store and this shard's re-check
+                let (guard, _) =
+                    shards.work_cv.wait_timeout(st, Duration::from_millis(20)).unwrap();
+                st = guard;
+            }
+        };
+        let Some(adm) = adm else {
+            return;
+        };
+        let engine = route_costed(&router_cfg, &adm.req, adm.est_steps);
+        let result = worker.execute(&adm.req, engine);
+        shards.inflight[me].store(0, Ordering::Relaxed);
+        // metrics record the *serving* latency (queueing + execution);
+        // JobResult::wall_ms stays execution-only
+        let serve_ms = adm.submitted.elapsed().as_secs_f64() * 1e3;
+        let ok = result.output.is_ok();
+        metrics.record_done(result.engine, serve_ms, ok);
+        metrics.record_shard_done(me);
+        if let Some(deadline) = adm.deadline {
+            if Instant::now() > deadline {
+                metrics.record_deadline_miss(me);
+            }
+        }
+        if ok {
+            cost_model.observe(
+                &adm.req.kind,
+                adm.req.graph.n(),
+                adm.req.graph.nnz(),
+                adm.est_steps,
+                result.wall_ms,
+            );
+        }
+        let _ = adm.reply.send(result);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::support::Mode;
+    use crate::coordinator::job::JobOutput;
+    use crate::graph::builder::from_sorted_unique;
+
+    fn cfg(shards: usize, workers: usize) -> ServeConfig {
+        ServeConfig {
+            shards,
+            workers_per_shard: workers,
+            enable_dense: false,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn single_shard_roundtrip() {
+        let ex = Executor::start(cfg(1, 2));
+        let g = Arc::new(from_sorted_unique(4, &[(0, 1), (0, 2), (0, 3), (1, 2), (2, 3)]));
+        let t = ex.submit(Arc::clone(&g), JobKind::Ktruss { k: 3, mode: Mode::Fine });
+        match t.wait().output.unwrap() {
+            JobOutput::Ktruss { truss_edges, .. } => assert_eq!(truss_edges, 5),
+            other => panic!("{other:?}"),
+        }
+        ex.shutdown();
+    }
+
+    #[test]
+    fn multi_shard_mixed_jobs_all_complete() {
+        let ex = Executor::start(cfg(3, 1));
+        let g = Arc::new(crate::gen::erdos_renyi::gnm(120, 500, &mut crate::util::Rng::new(2)));
+        let want_tri = crate::algo::triangle::count_triangles(&g);
+        let tickets: Vec<Ticket> = (0..12)
+            .map(|i| {
+                let kind = match i % 3 {
+                    0 => JobKind::Triangles,
+                    1 => JobKind::Ktruss { k: 3, mode: Mode::Fine },
+                    _ => JobKind::Kmax,
+                };
+                ex.submit(Arc::clone(&g), kind)
+            })
+            .collect();
+        for t in tickets {
+            let r = t.wait();
+            if let JobOutput::Triangles { count } = r.output.unwrap() {
+                assert_eq!(count, want_tri);
+            }
+        }
+        let (done, failed, _) = ex.metrics.summary();
+        assert_eq!((done, failed), (12, 0));
+        // every executed job is attributed to exactly one shard
+        let per_shard: u64 =
+            ex.metrics.shards().iter().map(|s| s.jobs.load(Ordering::Relaxed)).sum();
+        assert_eq!(per_shard, 12);
+        ex.shutdown();
+    }
+
+    #[test]
+    fn shutdown_executes_already_queued_jobs() {
+        let ex = Executor::start(cfg(2, 1));
+        let g = Arc::new(from_sorted_unique(3, &[(0, 1), (1, 2)]));
+        let tickets: Vec<Ticket> =
+            (0..6).map(|_| ex.submit(Arc::clone(&g), JobKind::Triangles)).collect();
+        ex.shutdown(); // must drain, not drop
+        for t in tickets {
+            assert!(t.wait().output.is_ok());
+        }
+    }
+
+    #[test]
+    fn shutdown_is_idempotent() {
+        let ex = Executor::start(cfg(2, 1));
+        ex.shutdown();
+        ex.shutdown();
+    }
+
+    #[test]
+    fn ids_are_unique_and_monotone() {
+        let ex = Executor::start(cfg(2, 1));
+        let g = Arc::new(from_sorted_unique(3, &[(0, 1), (1, 2)]));
+        let t1 = ex.submit(Arc::clone(&g), JobKind::Triangles);
+        let t2 = ex.submit(Arc::clone(&g), JobKind::Triangles);
+        assert!(t2.id > t1.id);
+        t1.wait();
+        t2.wait();
+        ex.shutdown();
+    }
+
+    #[test]
+    fn pack_batch_stripes_urgency_and_balances_work() {
+        // equal-cost jobs (urgency-sorted: the first half is the High
+        // class) must stripe across shards, not band onto shard 0
+        let assignment = pack_batch(&[5, 5, 5, 5], &[0, 0]);
+        assert_eq!(assignment, vec![0, 1, 0, 1]);
+        // a heavy head job occupies one shard; the tail shares the rest
+        let assignment = pack_batch(&[100, 1, 1, 1], &[0, 0]);
+        assert_eq!(assignment[0], 0);
+        assert!(assignment[1..].iter().all(|&w| w == 1));
+        // existing backlog steers new work to the idle shard
+        let assignment = pack_batch(&[3, 3], &[50, 0]);
+        assert_eq!(assignment, vec![1, 1]);
+        // load stays equal to within one job on skewed input
+        let costs = [9u64, 7, 5, 4, 3, 2, 2, 1];
+        let assignment = pack_batch(&costs, &[0, 0, 0]);
+        let mut load = [0u64; 3];
+        for (i, &w) in assignment.iter().enumerate() {
+            load[w] += costs[i];
+        }
+        let max = *load.iter().max().unwrap();
+        let min = *load.iter().min().unwrap();
+        assert!(max - min <= 9, "loads {load:?}");
+    }
+
+    #[test]
+    fn uneven_worker_budget_is_fully_distributed() {
+        // 5 total workers over 2 shards: shard 0 gets 3, shard 1 gets 2
+        let ex = Executor::start(ServeConfig {
+            workers_per_shard: 2,
+            workers_remainder: 1,
+            ..cfg(2, 2)
+        });
+        let g = Arc::new(crate::gen::erdos_renyi::gnm(150, 700, &mut crate::util::Rng::new(8)));
+        let want = crate::algo::triangle::count_triangles(&g);
+        let tickets: Vec<Ticket> =
+            (0..6).map(|_| ex.submit(Arc::clone(&g), JobKind::Triangles)).collect();
+        for t in tickets {
+            match t.wait().output.unwrap() {
+                JobOutput::Triangles { count } => assert_eq!(count, want),
+                other => panic!("{other:?}"),
+            }
+        }
+        ex.shutdown();
+    }
+
+    #[test]
+    fn cost_model_learns_from_served_jobs() {
+        let ex = Executor::start(cfg(1, 1));
+        let g = Arc::new(crate::gen::erdos_renyi::gnm(100, 300, &mut crate::util::Rng::new(4)));
+        for _ in 0..3 {
+            ex.submit(Arc::clone(&g), JobKind::Triangles).wait();
+        }
+        assert!(ex.cost_model.samples() >= 3);
+        assert!(ex.cost_model.ns_per_step() > 0.0);
+        assert!(!ex.cost_model.records().is_empty());
+        ex.shutdown();
+    }
+}

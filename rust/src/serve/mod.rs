@@ -1,0 +1,47 @@
+//! L3 serving scale-out: a sharded, priority-aware executor with
+//! replay-calibrated batch scheduling.
+//!
+//! # Architecture (bottom-up)
+//!
+//! * **L1 — kernels** ([`crate::algo`]): the eager update merge, the
+//!   support/prune passes, in coarse and fine granularity.
+//! * **L2 — pool & balance** ([`crate::par`]): the Kokkos-style worker
+//!   pool and the work-aware schedules (scan-binned chunks, stealing
+//!   deques) that balance *tasks within one job*.
+//! * **L3 — serve** (this module): balance *jobs within a batch* with
+//!   the same machinery one level up:
+//!
+//!   | within one job (L2)               | across jobs (L3)                     |
+//!   |-----------------------------------|--------------------------------------|
+//!   | per-row/slot cost bounds          | per-job estimate ([`cost_model`])    |
+//!   | `scan_bins` over rows             | least-loaded equal-work packing      |
+//!   | chunk deques + stealing           | shard queues + job stealing          |
+//!   | measured trace feedback           | ns/step calibration from completions |
+//!
+//! # Shape
+//!
+//! [`Executor::start`] spawns N shard threads (each owning a
+//! [`crate::par::Pool`] and an optional dense engine) plus one
+//! dispatcher. [`Executor::submit_with`] admits a job with a
+//! [`Priority`] class and an optional soft deadline into the central
+//! [`ServeQueue`] (strict priority between classes, EDF within one,
+//! FIFO otherwise). The dispatcher drains the queue in batches, packs
+//! each batch across shards by equal estimated work (least-loaded
+//! greedy over the cost-model estimates, so urgency classes stripe
+//! across shards instead of banding onto one), and drained shards
+//! steal the globally most urgent queued job (the idle thief executes
+//! it immediately, pulling urgent work forward).
+//! Completions refine the [`CostModel`]'s
+//! ns-per-step calibration, which can be persisted and re-loaded via
+//! [`crate::cost::persist`].
+//!
+//! The single-pool [`crate::coordinator::Coordinator`] API survives as
+//! a thin facade over a one-shard executor.
+
+pub mod cost_model;
+pub mod executor;
+pub mod queue;
+
+pub use cost_model::{estimate_steps, kind_label, CostModel};
+pub use executor::{Executor, ServeConfig, SubmitOpts, Ticket};
+pub use queue::{Admission, Priority, ServeQueue};

@@ -1,0 +1,243 @@
+//! Priority-aware admission queue for the serving executor.
+//!
+//! Jobs are ordered by (priority class, earliest soft deadline,
+//! submission order): strict priority between classes, EDF within a
+//! class, FIFO among jobs of the same class without deadlines. The same
+//! queue type backs both the central admission queue and the per-shard
+//! run queues, so a shard always executes its most urgent queued job —
+//! and an idle thief steals the victim's most urgent job too, which
+//! only ever makes that job finish *earlier* than the victim would
+//! have managed (the thief runs it immediately; the victim is busy).
+
+use crate::coordinator::job::{JobRequest, JobResult};
+use std::sync::mpsc::Sender;
+use std::time::Instant;
+
+/// Job priority class. Smaller is more urgent (the derived `Ord`
+/// follows declaration order).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Priority {
+    /// Latency-sensitive interactive work.
+    High,
+    /// Default class.
+    Normal,
+    /// Batch / best-effort work.
+    Low,
+}
+
+impl std::fmt::Display for Priority {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Priority::High => write!(f, "high"),
+            Priority::Normal => write!(f, "normal"),
+            Priority::Low => write!(f, "low"),
+        }
+    }
+}
+
+impl std::str::FromStr for Priority {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Priority, String> {
+        match s {
+            "high" => Ok(Priority::High),
+            "normal" => Ok(Priority::Normal),
+            "low" => Ok(Priority::Low),
+            other => Err(format!("unknown priority {other:?} (expected high|normal|low)")),
+        }
+    }
+}
+
+/// An admitted job: the request plus its serving envelope (priority,
+/// soft deadline, admission timestamp, cost-model estimate, and the
+/// reply channel the result is delivered on).
+pub struct Admission {
+    pub req: JobRequest,
+    pub priority: Priority,
+    /// Absolute soft deadline; `None` = best-effort. Misses are counted,
+    /// never enforced (the job still runs to completion).
+    pub deadline: Option<Instant>,
+    /// When the job was admitted (end-to-end latency baseline).
+    pub submitted: Instant,
+    /// Estimated work in abstract merge steps (see `serve::cost_model`).
+    pub est_steps: u64,
+    pub reply: Sender<JobResult>,
+}
+
+/// The total urgency order: priority class, then deadline-holders
+/// (EDF) before best-effort, then admission order. Smaller = more
+/// urgent; unique per job (the id component breaks every tie).
+pub(crate) type UrgencyKey = (Priority, bool, Instant, u64);
+
+impl Admission {
+    /// This job's [`UrgencyKey`] (`JobRequest::id` is assigned
+    /// monotonically at submission).
+    pub(crate) fn key(&self) -> UrgencyKey {
+        (
+            self.priority,
+            self.deadline.is_none(),
+            self.deadline.unwrap_or(self.submitted),
+            self.req.id,
+        )
+    }
+}
+
+/// A queue of admissions kept sorted most-urgent-first.
+///
+/// Insertion is a binary search plus a shift (O(n)) — deliberately
+/// simple: serving queues are tens of jobs deep, and the sorted layout
+/// gives the most urgent job in O(1) (`pop_front`, also what a thief
+/// takes when stealing from another shard's queue).
+#[derive(Default)]
+pub struct ServeQueue {
+    items: Vec<Admission>,
+}
+
+impl ServeQueue {
+    pub fn new() -> ServeQueue {
+        ServeQueue { items: Vec::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// Total estimated work queued, in merge steps (the stealing victim
+    /// heuristic: steal from the shard with the most queued *work*, not
+    /// the most queued *jobs* — the paper's count-vs-cost distinction).
+    pub fn queued_steps(&self) -> u64 {
+        self.items.iter().map(|a| a.est_steps).sum()
+    }
+
+    /// Insert in priority order (stable: ties go behind existing items).
+    pub fn push(&mut self, a: Admission) {
+        let key = a.key();
+        let pos = self.items.partition_point(|x| x.key() <= key);
+        self.items.insert(pos, a);
+    }
+
+    /// The most urgent queued job, if any (not removed).
+    pub fn peek_front(&self) -> Option<&Admission> {
+        self.items.first()
+    }
+
+    /// Remove and return the most urgent job.
+    pub fn pop_front(&mut self) -> Option<Admission> {
+        if self.items.is_empty() {
+            None
+        } else {
+            Some(self.items.remove(0))
+        }
+    }
+
+    /// Drain up to `k` jobs from the front (one dispatch batch), most
+    /// urgent first.
+    pub fn take_front(&mut self, k: usize) -> Vec<Admission> {
+        let k = k.min(self.items.len());
+        self.items.drain(..k).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::support::Mode;
+    use crate::coordinator::job::JobKind;
+    use crate::graph::builder::from_sorted_unique;
+    use std::sync::mpsc::channel;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    fn adm(id: u64, priority: Priority, deadline_ms: Option<u64>) -> Admission {
+        let g = Arc::new(from_sorted_unique(3, &[(0, 1), (1, 2)]));
+        // the receiver side is dropped: queue tests never deliver results
+        let (tx, _rx) = channel();
+        let now = Instant::now();
+        Admission {
+            req: JobRequest { id, graph: g, kind: JobKind::Ktruss { k: 3, mode: Mode::Fine } },
+            priority,
+            deadline: deadline_ms.map(|ms| now + Duration::from_millis(ms)),
+            submitted: now,
+            est_steps: 1,
+            reply: tx,
+        }
+    }
+
+    fn ids(q: &mut ServeQueue) -> Vec<u64> {
+        let mut out = Vec::new();
+        while let Some(a) = q.pop_front() {
+            out.push(a.req.id);
+        }
+        out
+    }
+
+    #[test]
+    fn priority_classes_are_strict() {
+        let mut q = ServeQueue::new();
+        q.push(adm(1, Priority::Low, None));
+        q.push(adm(2, Priority::High, None));
+        q.push(adm(3, Priority::Normal, None));
+        q.push(adm(4, Priority::High, None));
+        assert_eq!(ids(&mut q), vec![2, 4, 3, 1]);
+    }
+
+    #[test]
+    fn edf_within_class_and_deadlines_before_best_effort() {
+        let mut q = ServeQueue::new();
+        q.push(adm(1, Priority::Normal, None));
+        q.push(adm(2, Priority::Normal, Some(500)));
+        q.push(adm(3, Priority::Normal, Some(100)));
+        q.push(adm(4, Priority::Normal, None));
+        // earliest deadline first, then FIFO among no-deadline jobs
+        assert_eq!(ids(&mut q), vec![3, 2, 1, 4]);
+    }
+
+    #[test]
+    fn deadline_never_outranks_class() {
+        let mut q = ServeQueue::new();
+        q.push(adm(1, Priority::Low, Some(1)));
+        q.push(adm(2, Priority::Normal, None));
+        assert_eq!(ids(&mut q), vec![2, 1]);
+    }
+
+    #[test]
+    fn pop_front_takes_most_urgent_until_empty() {
+        let mut q = ServeQueue::new();
+        q.push(adm(1, Priority::High, None));
+        q.push(adm(2, Priority::Low, None));
+        q.push(adm(3, Priority::Normal, None));
+        assert_eq!(q.pop_front().unwrap().req.id, 1);
+        assert_eq!(q.pop_front().unwrap().req.id, 3);
+        assert_eq!(q.pop_front().unwrap().req.id, 2);
+        assert!(q.pop_front().is_none());
+    }
+
+    #[test]
+    fn take_front_is_bounded_and_ordered() {
+        let mut q = ServeQueue::new();
+        for id in 0..5 {
+            q.push(adm(id, Priority::Normal, None));
+        }
+        let batch = q.take_front(3);
+        assert_eq!(batch.iter().map(|a| a.req.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.take_front(10).len(), 2);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn queued_steps_sums_estimates() {
+        let mut q = ServeQueue::new();
+        let mut a = adm(1, Priority::Normal, None);
+        a.est_steps = 10;
+        let mut b = adm(2, Priority::Normal, None);
+        b.est_steps = 32;
+        q.push(a);
+        q.push(b);
+        assert_eq!(q.queued_steps(), 42);
+    }
+}

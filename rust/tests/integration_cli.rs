@@ -124,6 +124,81 @@ fn serve_accepts_schedule_override() {
 }
 
 #[test]
+fn serve_sharded_with_priorities_and_deadlines() {
+    let (stdout, stderr, ok) = ktruss(&[
+        "serve", "--jobs", "8", "--shards", "2", "--pool", "2", "--priority", "high",
+        "--deadline-ms", "5000",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("shards=2"), "stdout: {stdout}");
+    assert!(stdout.contains("all 8 jobs completed"), "stdout: {stdout}");
+    assert!(stdout.contains("shard 0:"), "stdout: {stdout}");
+    assert!(stdout.contains("shard 1:"), "stdout: {stdout}");
+    assert!(stdout.contains("cost model:"), "stdout: {stdout}");
+}
+
+#[test]
+fn serve_rejects_bad_priority() {
+    let (_, stderr, ok) = ktruss(&["serve", "--jobs", "2", "--priority", "urgent"]);
+    assert!(!ok);
+    assert!(stderr.contains("priority"), "stderr: {stderr}");
+}
+
+#[test]
+fn serve_persists_calibration_roundtrip() {
+    let dir = std::env::temp_dir().join(format!("ktruss-serve-cal-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("cal.tsv");
+    let path_s = path.to_str().unwrap();
+    let (stdout, stderr, ok) =
+        ktruss(&["serve", "--jobs", "4", "--shards", "1", "--calibration", path_s]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("calibration: saved"), "stdout: {stdout}");
+    assert!(path.exists());
+    // second run seeds from the saved records
+    let (stdout, stderr, ok) =
+        ktruss(&["serve", "--jobs", "4", "--shards", "1", "--calibration", path_s]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("calibration: seeded from"), "stdout: {stdout}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn run_through_sharded_executor() {
+    let (stdout, stderr, ok) = ktruss(&[
+        "run", "--graph", "ca-GrQc", "--scale", "0.05", "--k", "3", "--par", "2", "--shards",
+        "2", "--priority", "high",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("3-truss:"), "stdout: {stdout}");
+    assert!(stdout.contains("2-shard executor"), "stdout: {stdout}");
+}
+
+#[test]
+fn bench_serve_smoke() {
+    let dir = std::env::temp_dir().join(format!("ktruss-bench-serve-{}", std::process::id()));
+    let (stdout, stderr, ok) = Command::new(env!("CARGO_BIN_EXE_ktruss"))
+        .args([
+            "bench", "serve", "--jobs", "12", "--arrival-us", "100", "--workers", "2",
+            "--shard-counts", "1,2",
+        ])
+        .env("KTRUSS_BENCH_OUT", &dir)
+        .output()
+        .map(|out| {
+            (
+                String::from_utf8_lossy(&out.stdout).into_owned(),
+                String::from_utf8_lossy(&out.stderr).into_owned(),
+                out.status.success(),
+            )
+        })
+        .expect("run ktruss binary");
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("jobs/s"), "stdout: {stdout}");
+    assert!(stdout.contains("serve_throughput.txt"), "stdout: {stdout}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn run_rejects_missing_graph_flag() {
     let (_, stderr, ok) = ktruss(&["run"]);
     assert!(!ok);
