@@ -1,0 +1,18 @@
+//! `cargo bench --bench gpu_sched` — regenerates the GPU
+//! schedule × granularity sweep: static vs work-aware vs stealing warp
+//! scheduling across coarse/fine/segment granularities on the skewed
+//! RMAT and star hot-row workloads (the schedule-aware GPU machine
+//! model's headline figure).
+
+use ktruss::bench_harness::{figs, report};
+
+fn main() {
+    let seg_len = std::env::var("KTRUSS_SEG_LEN")
+        .ok()
+        .and_then(|s| s.parse::<u32>().ok())
+        .unwrap_or(ktruss::algo::support::DEFAULT_SEGMENT_LEN);
+    println!("# gpu-sched: schedule x granularity sweep (seg_len {seg_len})");
+    let sweep = figs::run_gpu_schedule_sweep(seg_len, |msg| eprintln!("  [{msg}]"))
+        .expect("gpu schedule sweep");
+    report::emit("gpu_schedule_sweep.txt", &sweep.render()).expect("save report");
+}

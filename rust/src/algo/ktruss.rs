@@ -40,6 +40,7 @@ impl KtrussResult {
         self.truss.nnz()
     }
 
+    /// Whether the truss came out empty.
     pub fn is_empty(&self) -> bool {
         self.truss.nnz() == 0
     }

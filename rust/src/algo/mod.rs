@@ -1,7 +1,13 @@
-//! The Eager K-truss algorithm family (paper Algorithms 1–3):
-//! support computation in coarse and fine granularity, pruning,
-//! the convergence driver, K_max search, full truss decomposition,
-//! and the independent naive oracle.
+//! **L1 — kernels.** The Eager K-truss algorithm family (paper
+//! Algorithms 1–3): support computation across the full granularity
+//! ladder — [`support::Mode::Coarse`] (one task per row),
+//! [`support::Mode::Fine`] (one task per nonzero), and the ultra-fine
+//! [`support::Granularity::Segment`] split (one task per ≤ L-entry
+//! partner-row segment) — plus pruning, the convergence driver, K_max
+//! search, full truss decomposition, and the independent naive oracle.
+//! This layer owns load balancing at *merge-step* granularity: how the
+//! pass's work is cut into tasks; [`crate::par`] decides how tasks map
+//! to workers, [`crate::serve`] how jobs map to shards.
 
 pub mod decompose;
 pub mod kmax;

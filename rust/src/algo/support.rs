@@ -39,6 +39,95 @@ impl std::fmt::Display for Mode {
     }
 }
 
+/// Default partner-row segment length for [`Granularity::Segment`]
+/// (nonzeros per ultra-fine task). Matches the ≤64-step segments the
+/// ultra-fine ablation models.
+pub const DEFAULT_SEGMENT_LEN: u32 = 64;
+
+/// Task granularity of a support pass: the paper's coarse/fine pair
+/// ([`Mode`]) plus the ultra-fine **segment split** the paper sketches
+/// as future work (§III-B): each fine task's merge is further divided
+/// into fixed-length segments of its partner row, so even one enormous
+/// nonzero (hub×hub edge) decomposes into many near-uniform tasks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Granularity {
+    /// One task per row — [`Mode::Coarse`].
+    Coarse,
+    /// One task per nonzero slot — [`Mode::Fine`].
+    Fine,
+    /// One task per ≤`len`-entry segment of a fine task's partner row
+    /// (see [`segment_tasks`]).
+    Segment {
+        /// Maximum partner-row entries per segment task (≥ 1).
+        len: u32,
+    },
+}
+
+impl Granularity {
+    /// The [`Mode`] this granularity corresponds to, when the pass can
+    /// run through the plain coarse/fine kernels (`None` for the
+    /// segment split, which has its own task enumeration).
+    pub fn mode(self) -> Option<Mode> {
+        match self {
+            Granularity::Coarse => Some(Mode::Coarse),
+            Granularity::Fine => Some(Mode::Fine),
+            Granularity::Segment { .. } => None,
+        }
+    }
+
+    /// Short stable label for config/table keys: `C`, `F`, `S<len>`.
+    pub fn short(self) -> String {
+        match self {
+            Granularity::Coarse => "C".to_string(),
+            Granularity::Fine => "F".to_string(),
+            Granularity::Segment { len } => format!("S{len}"),
+        }
+    }
+}
+
+impl From<Mode> for Granularity {
+    fn from(m: Mode) -> Granularity {
+        match m {
+            Mode::Coarse => Granularity::Coarse,
+            Mode::Fine => Granularity::Fine,
+        }
+    }
+}
+
+impl std::fmt::Display for Granularity {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Granularity::Coarse => write!(f, "coarse"),
+            Granularity::Fine => write!(f, "fine"),
+            Granularity::Segment { len } => write!(f, "segment:{len}"),
+        }
+    }
+}
+
+impl std::str::FromStr for Granularity {
+    type Err = String;
+
+    /// Parse `coarse`, `fine`, `segment`, `segment:<len>` (the CLI
+    /// `--granularity` grammar).
+    fn from_str(s: &str) -> Result<Granularity, String> {
+        match s {
+            "coarse" => Ok(Granularity::Coarse),
+            "fine" => Ok(Granularity::Fine),
+            "segment" => Ok(Granularity::Segment { len: DEFAULT_SEGMENT_LEN }),
+            other => other
+                .strip_prefix("segment:")
+                .and_then(|l| l.parse::<u32>().ok())
+                .filter(|&l| l > 0)
+                .map(|len| Granularity::Segment { len })
+                .ok_or_else(|| {
+                    format!(
+                        "unknown granularity {other:?} (expected coarse|fine|segment[:len])"
+                    )
+                }),
+        }
+    }
+}
+
 /// Eager update for the single live slot `p` (row tail starts at `p+1`,
 /// row `κ` starts at `r0`). Sequential support array. Returns the number
 /// of merge steps executed (the task's work, consumed by the cost model).
@@ -218,6 +307,150 @@ pub fn compute_supports_seq(z: &ZCsr, s: &mut Vec<u32>) {
     }
 }
 
+/// One ultra-fine task of the segment-split support pass: the merge of
+/// row `i`'s live tail after slot `p` against the partner-row segment
+/// `col[lo..hi]` (a ≤`len`-entry contiguous slice of row `κ = col[p]`'s
+/// live entries). The segments of one fine task partition its partner
+/// row, so the union of segment matches is exactly the fine task's
+/// intersection and every `(q, r)` match pair is found once.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SegTask {
+    /// Flat slot index of the fine task this segment belongs to.
+    pub p: u32,
+    /// End (exclusive) of the live entries of `p`'s row — the merge's
+    /// left side is `col[p+1..tail_end]`.
+    pub tail_end: u32,
+    /// Start (inclusive) of the partner-row segment, as a flat slot index.
+    pub lo: u32,
+    /// End (exclusive) of the partner-row segment.
+    pub hi: u32,
+}
+
+impl SegTask {
+    /// Static cost estimate in merge steps (for the scan binner): the
+    /// segment length plus one step of setup (the tail lower-bound
+    /// search the kernel performs).
+    pub fn estimated_steps(&self) -> u64 {
+        (self.hi - self.lo) as u64 + 1
+    }
+}
+
+/// Enumerate the segment-split task list of one support pass: for every
+/// live slot `p` with a non-empty tail and non-empty partner row, one
+/// [`SegTask`] per ≤`len`-entry segment of the partner row's live
+/// entries. Slots whose merge is trivially empty (no tail, or empty
+/// partner row) produce no tasks — they contribute no matches.
+pub fn segment_tasks(z: &ZCsr, len: u32) -> Vec<SegTask> {
+    let len = len.max(1) as usize;
+    let col = z.col();
+    let n = z.n();
+    let live: Vec<u32> = (0..n).map(|i| z.row_live(i).len() as u32).collect();
+    let mut tasks = Vec::new();
+    for i in 0..n {
+        let (start, _) = z.row_span(i);
+        let li = live[i] as usize;
+        let tail_end = (start + li) as u32;
+        for off in 0..li {
+            let p = start + off;
+            if li - off - 1 == 0 {
+                continue; // last live slot: empty tail, no merge work
+            }
+            let kappa = col[p] as usize;
+            let lk = live[kappa] as usize;
+            if lk == 0 {
+                continue; // empty partner row, no merge work
+            }
+            let (r0, _) = z.row_span(kappa);
+            let mut lo = 0usize;
+            while lo < lk {
+                let hi = (lo + len).min(lk);
+                tasks.push(SegTask {
+                    p: p as u32,
+                    tail_end,
+                    lo: (r0 + lo) as u32,
+                    hi: (r0 + hi) as u32,
+                });
+                lo = hi;
+            }
+        }
+    }
+    tasks
+}
+
+/// Eager update for one [`SegTask`], sequential support array. Returns
+/// merge steps executed. The kernel first binary-searches the live tail
+/// for the segment's first value (entries below it cannot match inside
+/// this segment), then runs the bounded sorted merge; both sides carry
+/// explicit bounds, so no zero-terminator reliance is needed here.
+#[inline]
+pub fn eager_update_segment_seq(col: &[Vid], s: &mut [u32], t: &SegTask) -> u64 {
+    let p = t.p as usize;
+    let tail_end = t.tail_end as usize;
+    let (mut r, r_end) = (t.lo as usize, t.hi as usize);
+    let tail = &col[p + 1..tail_end];
+    let mut q = p + 1 + tail.partition_point(|&c| c < col[r]);
+    let mut steps = 0u64;
+    while q < tail_end && r < r_end {
+        steps += 1;
+        match col[q].cmp(&col[r]) {
+            std::cmp::Ordering::Less => q += 1,
+            std::cmp::Ordering::Greater => r += 1,
+            std::cmp::Ordering::Equal => {
+                s[p] += 1;
+                s[q] += 1;
+                s[r] += 1;
+                q += 1;
+                r += 1;
+            }
+        }
+    }
+    steps
+}
+
+/// Atomic variant of [`eager_update_segment_seq`] for the pool: segment
+/// tasks of the *same* fine task race on `s[p]` (and on shared `S₂₂`
+/// rows), so every bump is a relaxed fetch-add.
+#[inline]
+pub fn eager_update_segment_atomic(col: &[Vid], s: &[AtomicU32], t: &SegTask) -> u64 {
+    let p = t.p as usize;
+    let tail_end = t.tail_end as usize;
+    let (mut r, r_end) = (t.lo as usize, t.hi as usize);
+    let tail = &col[p + 1..tail_end];
+    let mut q = p + 1 + tail.partition_point(|&c| c < col[r]);
+    let mut steps = 0u64;
+    while q < tail_end && r < r_end {
+        steps += 1;
+        match col[q].cmp(&col[r]) {
+            std::cmp::Ordering::Less => q += 1,
+            std::cmp::Ordering::Greater => r += 1,
+            std::cmp::Ordering::Equal => {
+                s[p].fetch_add(1, Ordering::Relaxed);
+                s[q].fetch_add(1, Ordering::Relaxed);
+                s[r].fetch_add(1, Ordering::Relaxed);
+                q += 1;
+                r += 1;
+            }
+        }
+    }
+    steps
+}
+
+/// Sequential segment-split `computeSupports`: clears `s`, enumerates
+/// the [`segment_tasks`] list and applies every segment merge. Returns
+/// total merge steps (consumed by segment-overhead calibration). The
+/// result is identical to [`compute_supports_seq`] — verified by the
+/// segment property tests.
+pub fn compute_supports_segmented_seq(z: &ZCsr, len: u32, s: &mut Vec<u32>) -> u64 {
+    s.clear();
+    s.resize(z.slots(), 0);
+    let col = z.col();
+    let mut steps = 0u64;
+    for t in &segment_tasks(z, len) {
+        steps += eager_update_segment_seq(col, s, t);
+    }
+    steps
+}
+
 /// Support slot values give the triangle count per live edge; the total
 /// triangle count of the graph is `sum(S) / 3` (each triangle bumps
 /// three slots).
@@ -328,6 +561,107 @@ mod tests {
         }
         let s_at_plain: Vec<u32> = s_at.iter().map(|x| x.load(Ordering::Relaxed)).collect();
         assert_eq!(s_seq, s_at_plain);
+    }
+
+    #[test]
+    fn granularity_display_roundtrips_through_fromstr() {
+        for g in [
+            Granularity::Coarse,
+            Granularity::Fine,
+            Granularity::Segment { len: 64 },
+            Granularity::Segment { len: 7 },
+        ] {
+            let s = g.to_string();
+            let back: Granularity = s.parse().unwrap_or_else(|e| panic!("{s}: {e}"));
+            assert_eq!(back, g, "{s}");
+        }
+        assert_eq!(
+            "segment".parse::<Granularity>().unwrap(),
+            Granularity::Segment { len: DEFAULT_SEGMENT_LEN }
+        );
+        assert!("nope".parse::<Granularity>().is_err());
+        assert!("segment:0".parse::<Granularity>().is_err());
+        assert!("segment:x".parse::<Granularity>().is_err());
+        assert_eq!(Granularity::from(Mode::Coarse).mode(), Some(Mode::Coarse));
+        assert_eq!(Granularity::Segment { len: 4 }.mode(), None);
+        assert_eq!(Granularity::Segment { len: 4 }.short(), "S4");
+    }
+
+    #[test]
+    fn segment_tasks_partition_partner_rows() {
+        let g = from_sorted_unique(4, &[(0, 1), (0, 2), (0, 3), (1, 2), (2, 3)]);
+        let z = ZCsr::from_csr(&g);
+        for len in [1u32, 2, 64] {
+            let tasks = segment_tasks(&z, len);
+            for t in &tasks {
+                assert!(t.lo < t.hi, "{t:?}");
+                assert!((t.hi - t.lo) <= len, "{t:?}");
+                assert!((t.p as usize) + 1 < t.tail_end as usize, "{t:?}");
+                assert!(t.estimated_steps() >= 1);
+            }
+            // segments of one fine task must partition its partner row:
+            // group by p and check contiguity
+            let mut by_p: std::collections::HashMap<u32, Vec<(u32, u32)>> =
+                std::collections::HashMap::new();
+            for t in &tasks {
+                by_p.entry(t.p).or_default().push((t.lo, t.hi));
+            }
+            for (p, mut segs) in by_p {
+                segs.sort_unstable();
+                let kappa = z.col()[p as usize] as usize;
+                let (r0, _) = z.row_span(kappa);
+                let lk = z.row_live(kappa).len();
+                assert_eq!(segs.first().unwrap().0 as usize, r0, "p={p}");
+                assert_eq!(segs.last().unwrap().1 as usize, r0 + lk, "p={p}");
+                for w in segs.windows(2) {
+                    assert_eq!(w[0].1, w[1].0, "p={p}: segments must be contiguous");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn segmented_supports_match_plain_on_fixtures() {
+        let diamond = from_sorted_unique(4, &[(0, 1), (0, 2), (0, 3), (1, 2), (2, 3)]);
+        let k4 = from_sorted_unique(4, &[(0, 1), (0, 2), (0, 3), (1, 2), (1, 3), (2, 3)]);
+        let rmat = crate::gen::rmat::rmat(
+            300,
+            2500,
+            crate::gen::rmat::RmatParams::autonomous_system(),
+            &mut crate::util::Rng::new(17),
+        );
+        for g in [&diamond, &k4, &rmat] {
+            let z = ZCsr::from_csr(g);
+            let mut want = Vec::new();
+            compute_supports_seq(&z, &mut want);
+            for len in [1u32, 2, 3, 64] {
+                let mut got = Vec::new();
+                compute_supports_segmented_seq(&z, len, &mut got);
+                assert_eq!(got, want, "len={len}");
+            }
+        }
+    }
+
+    #[test]
+    fn segmented_pass_on_empty_and_star_graphs() {
+        // triangle-free star: hub row is hot but every partner row is
+        // empty, so the task list is empty and all supports stay 0
+        let mut edges = Vec::new();
+        for v in 1..50u32 {
+            edges.push((0, v));
+        }
+        let star = from_sorted_unique(50, &edges);
+        let z = ZCsr::from_csr(&star);
+        assert!(segment_tasks(&z, 8).is_empty());
+        let mut s = Vec::new();
+        let steps = compute_supports_segmented_seq(&z, 8, &mut s);
+        assert_eq!(steps, 0);
+        assert!(s.iter().all(|&x| x == 0));
+        // empty graph
+        let z = ZCsr::from_csr(&crate::graph::Csr::empty(0));
+        let mut s = Vec::new();
+        compute_supports_segmented_seq(&z, 8, &mut s);
+        assert!(s.is_empty());
     }
 
     #[test]

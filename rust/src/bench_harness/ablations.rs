@@ -55,7 +55,9 @@ pub fn support_bounds_carried(g: &Csr, s: &mut Vec<u32>) {
 /// Ablation 1 result: mean ms per support pass for each representation.
 #[derive(Clone, Debug)]
 pub struct ZeroTermAblation {
+    /// Mean ms per pass over the zero-terminated working form.
     pub zeroterm_ms: f64,
+    /// Mean ms per pass over the bounds-carried canonical CSR.
     pub bounds_ms: f64,
 }
 
@@ -88,8 +90,11 @@ pub fn ablate_zeroterm(g: &Csr, trials: usize) -> ZeroTermAblation {
 /// granularities where the schedule can still matter.
 #[derive(Clone, Debug)]
 pub struct ScheduleAblation {
+    /// Coarse tasks under the static schedule (the paper's baseline).
     pub coarse_static_s: f64,
+    /// Coarse tasks under chunked dynamic self-scheduling.
     pub coarse_dynamic_s: f64,
+    /// Fine tasks under the static schedule.
     pub fine_static_s: f64,
     /// Scan-binned equal-work chunks over coarse tasks — how much of
     /// fine-grained's win schedule-level balancing recovers.
@@ -107,7 +112,7 @@ pub fn ablate_schedule(g: &Csr) -> ScheduleAblation {
     let tr = trace_supports(&z, &mut s);
     let m = CpuMachine::skylake_8160(48);
     let pass = |mode: Mode, sched: Schedule| {
-        crate::sim::cpu::support_pass_s(&m, &tr, z.row_ptr(), mode, sched)
+        crate::sim::cpu::support_pass_s(&m, &tr, z.row_ptr(), mode.into(), sched)
     };
     ScheduleAblation {
         coarse_static_s: pass(Mode::Coarse, Schedule::Static),
@@ -122,9 +127,11 @@ pub fn ablate_schedule(g: &Csr) -> ScheduleAblation {
 /// Ablation 3 result: simulated GPU kernel times.
 #[derive(Clone, Debug)]
 pub struct UltraFineAblation {
+    /// Plain fine-granularity kernel time.
     pub fine_s: f64,
     /// time with fine tasks split into ≤`segment`-step subtasks
     pub ultra_s: f64,
+    /// Segment length of the split.
     pub segment: u32,
 }
 
@@ -176,7 +183,7 @@ pub fn ablate_reorder(g: &Csr) -> ReorderAblation {
         let z = ZCsr::from_csr(g);
         let mut s = Vec::new();
         let tr = trace_supports(&z, &mut s);
-        crate::sim::cpu::support_pass_s(&m, &tr, z.row_ptr(), mode, Schedule::Static)
+        crate::sim::cpu::support_pass_s(&m, &tr, z.row_ptr(), mode.into(), Schedule::Static)
     };
     let sorted = crate::graph::builder::relabel_by_degree(g);
     ReorderAblation {
@@ -189,7 +196,9 @@ pub fn ablate_reorder(g: &Csr) -> ReorderAblation {
 /// Ablation 4 result: nanoseconds per flat-index resolution.
 #[derive(Clone, Debug)]
 pub struct FlatIndexAblation {
+    /// ns per flat-slot→row resolve via plain binary search.
     pub binary_search_ns: f64,
+    /// ns per resolve with the monotone row hint.
     pub hinted_ns: f64,
 }
 

@@ -11,8 +11,9 @@
 
 use super::workload::Workload;
 use crate::algo::support::Mode;
+use crate::graph::Csr;
 use crate::par::Schedule;
-use crate::sim::{simulate_kmax, simulate_ktruss, SimConfig};
+use crate::sim::{simulate_kmax, simulate_ktruss, SimConfig, GPU_SCHEDULES};
 use crate::util::fmt::{mes, speedup, Table};
 use crate::util::stats::geomean;
 use anyhow::Result;
@@ -41,10 +42,12 @@ pub fn schedule_name(s: Schedule) -> &'static str {
 pub struct Fig2 {
     /// (graph, kmax, speedups per THREADS entry).
     pub series: Vec<(String, u32, [f64; 7])>,
+    /// Replica scale the series were generated at.
     pub scale: f64,
 }
 
 impl Fig2 {
+    /// Render the figure as an aligned plain-text table.
     pub fn render(&self) -> String {
         let mut t = Table::new(vec![
             "graph", "kmax", "1t", "2t", "4t", "8t", "16t", "32t", "48t",
@@ -90,10 +93,12 @@ pub fn run_fig2(w: &Workload, mut progress: impl FnMut(&str)) -> Result<Fig2> {
 pub struct Fig2Schedules {
     /// (graph, schedule label, speedup-over-static per THREADS entry).
     pub series: Vec<(String, &'static str, [f64; 7])>,
+    /// Replica scale the series were generated at.
     pub scale: f64,
 }
 
 impl Fig2Schedules {
+    /// Render the sweep as an aligned plain-text table.
     pub fn render(&self) -> String {
         let mut t = Table::new(vec![
             "graph", "schedule", "1t", "2t", "4t", "8t", "16t", "32t", "48t",
@@ -142,24 +147,173 @@ pub fn run_fig2_schedules(w: &Workload, mut progress: impl FnMut(&str)) -> Resul
     Ok(Fig2Schedules { series, scale: w.scale })
 }
 
+/// GPU schedule × granularity sweep: the schedule-aware GPU machine
+/// model across coarse/fine/segment under static/work-aware/stealing,
+/// on the workloads where the distinction matters — a skewed power-law
+/// RMAT (hub rows clustered at low vertex ids, so static contiguous
+/// waves pile hot warps onto few schedulers) and the star hot-row graph
+/// (one mega task: only a finer granularity, not a schedule, helps).
+#[derive(Clone, Debug)]
+pub struct GpuScheduleSweep {
+    /// Segment length of the `Granularity::Segment` rows.
+    pub seg_len: u32,
+    /// (graph, granularity label, seconds per [`GPU_SCHEDULES`] entry).
+    pub rows: Vec<(String, String, [f64; 3])>,
+}
+
+impl GpuScheduleSweep {
+    /// Speedup of schedule `si` over static for row `row`.
+    fn speedup_over_static(&self, row: usize, si: usize) -> f64 {
+        let (_, _, secs) = &self.rows[row];
+        secs[0] / secs[si]
+    }
+
+    /// Segment-over-coarse speedup (static schedule) for `graph`, if
+    /// both rows exist.
+    pub fn segment_vs_coarse(&self, graph: &str) -> Option<f64> {
+        let sec = |gran: &str| {
+            self.rows
+                .iter()
+                .find(|(g, gl, _)| g == graph && gl == gran)
+                .map(|(_, _, s)| s[0])
+        };
+        Some(sec("coarse")? / sec(&format!("segment:{}", self.seg_len))?)
+    }
+
+    /// Render the sweep as an aligned table plus per-graph summaries.
+    pub fn render(&self) -> String {
+        let mut t = Table::new(vec![
+            "graph",
+            "granularity",
+            "static ms",
+            "workaware ms",
+            "stealing ms",
+            "workaware",
+            "stealing",
+        ]);
+        for (ri, (graph, gran, secs)) in self.rows.iter().enumerate() {
+            t.row(vec![
+                graph.clone(),
+                gran.clone(),
+                format!("{:.3}", secs[0] * 1e3),
+                format!("{:.3}", secs[1] * 1e3),
+                format!("{:.3}", secs[2] * 1e3),
+                speedup(self.speedup_over_static(ri, 1)),
+                speedup(self.speedup_over_static(ri, 2)),
+            ]);
+        }
+        let mut out = format!(
+            "{}\n(schedule columns are speedup over static at the same granularity; the\n schedule fixes across-warp imbalance, the granularity fixes the intra-warp\n divergence/tail a schedule cannot touch)\n",
+            t.render()
+        );
+        let graphs: Vec<&String> = {
+            let mut seen = Vec::new();
+            for (g, _, _) in &self.rows {
+                if !seen.contains(&g) {
+                    seen.push(g);
+                }
+            }
+            seen
+        };
+        for g in graphs {
+            if let Some(sp) = self.segment_vs_coarse(g) {
+                out.push_str(&format!("segment/coarse on {g} (static): {}\n", speedup(sp)));
+            }
+        }
+        out
+    }
+}
+
+/// Run the GPU schedule sweep over explicit `(label, graph)` pairs.
+/// Rows are keyed off each config's own `gran`/`schedule` fields (not
+/// the grid's construction order), so a reordered or extended
+/// [`crate::sim::gpu_schedule_grid`] cannot silently mislabel cells.
+pub fn run_gpu_schedule_sweep_on(
+    graphs: &[(String, Csr)],
+    k: u32,
+    seg_len: u32,
+    mut progress: impl FnMut(&str),
+) -> Result<GpuScheduleSweep> {
+    let configs = crate::sim::gpu_schedule_grid(seg_len);
+    let mut rows: Vec<(String, String, [f64; 3])> = Vec::new();
+    for (name, g) in graphs {
+        let res = simulate_ktruss(g, k, &configs);
+        for (cfg, r) in configs.iter().zip(res.iter()) {
+            let si = GPU_SCHEDULES
+                .iter()
+                .position(|&s| s == cfg.schedule)
+                .expect("grid schedule must be on the GPU_SCHEDULES axis");
+            let gran_label = cfg.gran.to_string();
+            match rows
+                .iter_mut()
+                .find(|(n, gl, _)| n == name && *gl == gran_label)
+            {
+                Some((_, _, secs)) => secs[si] = r.seconds,
+                None => {
+                    let mut secs = [0.0f64; 3];
+                    secs[si] = r.seconds;
+                    rows.push((name.clone(), gran_label, secs));
+                }
+            }
+        }
+        progress(name.as_str());
+    }
+    Ok(GpuScheduleSweep { seg_len, rows })
+}
+
+/// Run the GPU schedule sweep on its standard adversarial trio: a
+/// skewed AS-topology RMAT, the hub-divergence comb (clustered
+/// divergent warps — where the schedule axis pays off hardest), and
+/// the star hot-row graph (one mega task — where only granularity
+/// helps).
+pub fn run_gpu_schedule_sweep(
+    seg_len: u32,
+    progress: impl FnMut(&str),
+) -> Result<GpuScheduleSweep> {
+    let graphs = vec![
+        (
+            "rmat-skew".to_string(),
+            crate::gen::rmat::rmat(
+                20_000,
+                120_000,
+                crate::gen::rmat::RmatParams::autonomous_system(),
+                &mut crate::util::Rng::new(0x6B5),
+            ),
+        ),
+        (
+            "hub-comb".to_string(),
+            crate::testkit::graphs::hub_divergence_comb(600, 2400, 1500),
+        ),
+        (
+            "star-hot".to_string(),
+            crate::testkit::graphs::star_with_fringe(4000),
+        ),
+    ];
+    run_gpu_schedule_sweep_on(&graphs, 3, seg_len, progress)
+}
+
 /// Fig 3/4 panel: per-graph coarse and fine ME/s for one device, one K
 /// setting.
 #[derive(Clone, Debug)]
 pub struct MesPanel {
+    /// Device label (`CPU 48 threads` / `GPU (V100)`).
     pub device: String,
     /// "3" or "kmax".
     pub k_setting: String,
     /// (graph, coarse ME/s, fine ME/s, k used).
     pub rows: Vec<(String, f64, f64, u32)>,
+    /// Replica scale the panel was generated at.
     pub scale: f64,
 }
 
 impl MesPanel {
+    /// Geometric-mean fine-over-coarse speedup across the panel.
     pub fn geomean_speedup(&self) -> f64 {
         let r: Vec<f64> = self.rows.iter().map(|(_, c, f, _)| f / c).collect();
         geomean(&r).unwrap_or(f64::NAN)
     }
 
+    /// Render the panel as an aligned plain-text table.
     pub fn render(&self) -> String {
         let mut t = Table::new(vec!["graph", "k", "coarse ME/s", "fine ME/s", "speedup"]);
         for (name, c, f, k) in &self.rows {
@@ -184,7 +338,9 @@ impl MesPanel {
 /// Which device a panel simulates.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PanelDevice {
+    /// The paper's 48-thread Skylake node.
     Cpu48,
+    /// The paper's Tesla V100.
     Gpu,
 }
 
@@ -281,6 +437,34 @@ mod tests {
                 assert!(p.render().contains("geomean"));
             }
         }
+    }
+
+    #[test]
+    fn gpu_schedule_sweep_shapes() {
+        let graphs = vec![
+            (
+                "rmat-small".to_string(),
+                crate::gen::rmat::rmat(
+                    2000,
+                    12_000,
+                    crate::gen::rmat::RmatParams::autonomous_system(),
+                    &mut crate::util::Rng::new(5),
+                ),
+            ),
+            ("star-small".to_string(), crate::testkit::graphs::star_with_fringe(600)),
+        ];
+        let sweep = run_gpu_schedule_sweep_on(&graphs, 3, 64, |_| {}).unwrap();
+        // 2 graphs × 3 granularities
+        assert_eq!(sweep.rows.len(), 6);
+        for (g, gran, secs) in &sweep.rows {
+            assert!(secs.iter().all(|s| s.is_finite() && *s > 0.0), "{g} {gran}");
+        }
+        // the hot-row claim: segment beats coarse on the star graph
+        let sp = sweep.segment_vs_coarse("star-small").unwrap();
+        assert!(sp > 1.0, "segment/coarse on star: {sp}");
+        let rendered = sweep.render();
+        assert!(rendered.contains("workaware"));
+        assert!(rendered.contains("segment/coarse on star-small"));
     }
 
     #[test]

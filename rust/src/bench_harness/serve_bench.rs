@@ -64,25 +64,34 @@ struct JobSpec {
 /// Measured outcome of one shard-count run.
 #[derive(Clone, Debug)]
 pub struct ShardRun {
+    /// Shard count of this run.
     pub shards: usize,
+    /// Pool workers per shard.
     pub workers_per_shard: usize,
+    /// Total wall time of the run, ms.
     pub wall_ms: f64,
     /// Completed jobs per second over the whole run.
     pub throughput_jps: f64,
-    /// Serving latency (queueing + execution) quantiles, ms.
+    /// Serving latency (queueing + execution) p50, ms.
     pub p50_ms: f64,
+    /// Serving latency (queueing + execution) p99, ms.
     pub p99_ms: f64,
     /// Soft-deadline misses / jobs that carried a deadline.
     pub miss_rate: f64,
+    /// Jobs executed by a shard other than the one they were packed to.
     pub stolen: u64,
 }
 
 /// Full sweep report.
 #[derive(Clone, Debug)]
 pub struct ThroughputReport {
+    /// Jobs submitted per shard-count run.
     pub jobs: usize,
+    /// Open-loop inter-arrival gap, microseconds.
     pub arrival_us: u64,
+    /// Total pool workers split across the shards.
     pub total_workers: usize,
+    /// One entry per swept shard count.
     pub runs: Vec<ShardRun>,
 }
 
@@ -103,6 +112,7 @@ impl ThroughputReport {
         Some(best / single.throughput_jps)
     }
 
+    /// Render the sweep as an aligned plain-text table.
     pub fn render(&self) -> String {
         let mut out = format!(
             "# serve throughput: {} open-loop jobs, {} us inter-arrival, {} total workers\n\

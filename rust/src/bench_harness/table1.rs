@@ -11,8 +11,11 @@ use anyhow::Result;
 /// One Table-I row.
 #[derive(Clone, Debug)]
 pub struct Row {
+    /// Replica graph name.
     pub name: String,
+    /// Vertices of the generated replica.
     pub vertices: usize,
+    /// Edges of the generated replica.
     pub edges: usize,
     /// [CPU-C, CPU-F, GPU-C, GPU-F] total times, ms.
     pub time_ms: [f64; 4],
@@ -23,8 +26,11 @@ pub struct Row {
 /// Aggregated result of the Table-I run.
 #[derive(Clone, Debug)]
 pub struct Table1 {
+    /// One row per replica graph.
     pub rows: Vec<Row>,
+    /// The k the runs used.
     pub k: u32,
+    /// Replica scale the table was generated at.
     pub scale: f64,
 }
 

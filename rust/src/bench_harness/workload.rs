@@ -15,7 +15,9 @@ use anyhow::{bail, Result};
 /// Resolved workload configuration.
 #[derive(Clone, Debug)]
 pub struct Workload {
+    /// Replica specs to run, in suite order.
     pub specs: Vec<&'static GraphSpec>,
+    /// Size multiplier for the generated replicas.
     pub scale: f64,
 }
 

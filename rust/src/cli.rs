@@ -8,6 +8,7 @@ use std::collections::HashMap;
 /// Parsed command line.
 #[derive(Debug, Default, Clone)]
 pub struct Args {
+    /// Positional (non-flag) arguments in order of appearance.
     pub positional: Vec<String>,
     flags: HashMap<String, String>,
     /// flags consumed so far (for unknown-flag reporting)

@@ -24,8 +24,11 @@ pub enum JobKind {
 /// A submitted request.
 #[derive(Clone, Debug)]
 pub struct JobRequest {
+    /// Monotonically assigned job id.
     pub id: JobId,
+    /// Input graph (shared, never copied per job).
     pub graph: Arc<Csr>,
+    /// What to compute.
     pub kind: JobKind,
 }
 
@@ -50,22 +53,49 @@ impl std::fmt::Display for Engine {
 /// Result payload per job kind.
 #[derive(Clone, Debug)]
 pub enum JobOutput {
-    Ktruss { truss_edges: usize, iterations: usize, edges: Vec<(Vid, Vid)> },
-    Kmax { kmax: u32, truss_edges: usize },
-    Decompose { kmax: u32, histogram: Vec<(u32, usize)> },
-    Triangles { count: u64 },
+    /// Fixed-k truss: surviving edge count, iterations, edge list.
+    Ktruss {
+        /// Edges surviving in the k-truss.
+        truss_edges: usize,
+        /// Convergence iterations.
+        iterations: usize,
+        /// The surviving edges themselves.
+        edges: Vec<(Vid, Vid)>,
+    },
+    /// K_max discovery: the largest non-empty k and its truss size.
+    Kmax {
+        /// Largest k with a non-empty truss.
+        kmax: u32,
+        /// Edges of the K_max-truss.
+        truss_edges: usize,
+    },
+    /// Full decomposition: kmax plus the trussness histogram.
+    Decompose {
+        /// Largest k with a non-empty truss.
+        kmax: u32,
+        /// (k, edges with trussness exactly k) pairs.
+        histogram: Vec<(u32, usize)>,
+    },
+    /// Triangle count of the whole graph.
+    Triangles {
+        /// Total triangles.
+        count: u64,
+    },
 }
 
 /// Completed job envelope.
 #[derive(Clone, Debug)]
 pub struct JobResult {
+    /// Id of the completed job.
     pub id: JobId,
+    /// Engine that executed it (routing provenance).
     pub engine: Engine,
     /// Pool schedule the sparse fixed-k truss engine ran under. `None`
     /// for dense executions (the AOT path has no schedule axis) and
     /// for job kinds whose sparse path is sequential (kmax, decompose,
     /// triangles). Provenance for the per-job schedule policy.
     pub schedule: Option<Schedule>,
+    /// Execution wall time (excluding queueing), ms.
     pub wall_ms: f64,
     /// Ok(output) or the error message (no anyhow across channels).
     pub output: Result<JobOutput, String>,

@@ -23,10 +23,15 @@ pub struct ShardMetrics {
 /// Aggregated coordinator metrics.
 #[derive(Debug, Default)]
 pub struct Metrics {
+    /// Jobs submitted.
     pub submitted: AtomicU64,
+    /// Jobs completed (ok or failed).
     pub completed: AtomicU64,
+    /// Jobs that completed with an error.
     pub failed: AtomicU64,
+    /// Jobs the sparse CPU engine executed.
     pub sparse_jobs: AtomicU64,
+    /// Jobs the dense XLA engine executed.
     pub dense_jobs: AtomicU64,
     latency_us: [AtomicU64; BUCKETS],
     latency_sum_us: AtomicU64,
@@ -34,6 +39,7 @@ pub struct Metrics {
 }
 
 impl Metrics {
+    /// A shard-less metrics block (single-pool coordinator path).
     pub fn new() -> Metrics {
         Metrics::default()
     }
@@ -47,10 +53,13 @@ impl Metrics {
         }
     }
 
+    /// Count one submission.
     pub fn record_submit(&self) {
         self.submitted.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Count one completion: engine attribution, latency bucket, error
+    /// tally.
     pub fn record_done(&self, engine: crate::coordinator::job::Engine, wall_ms: f64, ok: bool) {
         self.completed.fetch_add(1, Ordering::Relaxed);
         if !ok {
@@ -79,24 +88,28 @@ impl Metrics {
         &self.shards
     }
 
+    /// Count one job executed by `shard`.
     pub fn record_shard_done(&self, shard: usize) {
         if let Some(s) = self.shards.get(shard) {
             s.jobs.fetch_add(1, Ordering::Relaxed);
         }
     }
 
+    /// Count one job `shard` stole from another shard's queue.
     pub fn record_steal(&self, shard: usize) {
         if let Some(s) = self.shards.get(shard) {
             s.stolen.fetch_add(1, Ordering::Relaxed);
         }
     }
 
+    /// Count one soft-deadline miss on `shard`.
     pub fn record_deadline_miss(&self, shard: usize) {
         if let Some(s) = self.shards.get(shard) {
             s.deadline_miss.fetch_add(1, Ordering::Relaxed);
         }
     }
 
+    /// Record `shard`'s current queue depth gauge.
     pub fn set_queue_depth(&self, shard: usize, depth: u64) {
         if let Some(s) = self.shards.get(shard) {
             s.queue_depth.store(depth, Ordering::Relaxed);

@@ -1,6 +1,11 @@
-//! L3 serving coordinator: job types, engine routing (sparse CPU pool
-//! vs dense AOT/PJRT path), per-job workers, serving metrics, and the
-//! [`Coordinator`] facade over the sharded [`crate::serve`] executor.
+//! **L3 — serving vocabulary.** Job types, engine routing (sparse CPU
+//! pool vs dense AOT/PJRT path), per-job workers, serving metrics, and
+//! the [`Coordinator`] facade over the sharded [`crate::serve`]
+//! executor. Load balancing at *job* granularity lives in
+//! [`crate::serve`]; this module supplies the pieces it schedules —
+//! what a job is, which engine and pool schedule it should run under
+//! ([`worker::Worker::pick_schedule`] chooses per-job from graph
+//! skew), and the counters that make the balance observable.
 
 pub mod job;
 pub mod metrics;

@@ -31,10 +31,13 @@ pub struct RouterConfig {
 }
 
 impl RouterConfig {
+    /// Shape-only routing: dense for graphs up to `dense_limit`
+    /// vertices.
     pub fn new(dense_limit: usize) -> RouterConfig {
         RouterConfig { dense_limit, dense_threshold: dense_limit, dense_step_ceiling: u64::MAX }
     }
 
+    /// Never route to the dense engine.
     pub fn disabled() -> RouterConfig {
         RouterConfig { dense_limit: 0, dense_threshold: 0, dense_step_ceiling: u64::MAX }
     }

@@ -55,6 +55,7 @@ impl Default for ServiceConfig {
 /// The coordinator handle. Dropping it shuts the executor down.
 pub struct Coordinator {
     exec: Executor,
+    /// Latency and per-engine counters of the underlying executor.
     pub metrics: Arc<Metrics>,
 }
 

@@ -41,6 +41,7 @@ pub fn choose_schedule(g: &Csr) -> Schedule {
 
 /// Stateless executor with handles to both engines.
 pub struct Worker {
+    /// The pool sparse jobs run on.
     pub pool: Pool,
     /// Fixed schedule override; `None` = per-job heuristic choice.
     pub schedule: Option<Schedule>,
@@ -50,10 +51,13 @@ pub struct Worker {
 }
 
 impl Worker {
+    /// A worker with the per-job schedule heuristic.
     pub fn new(pool: Pool, dense: Option<DenseEngine>) -> Worker {
         Worker { pool, schedule: None, dense }
     }
 
+    /// A worker with an explicit schedule override (`None` keeps the
+    /// heuristic).
     pub fn with_schedule(pool: Pool, dense: Option<DenseEngine>, schedule: Option<Schedule>) -> Worker {
         Worker { pool, schedule, dense }
     }

@@ -13,8 +13,11 @@ use std::collections::HashSet;
 /// (0.57, 0.19, 0.19, 0.05); AS-style hub-dominated graphs go higher.
 #[derive(Clone, Copy, Debug)]
 pub struct RmatParams {
+    /// Top-left quadrant probability (hub–hub edges).
     pub a: f64,
+    /// Top-right quadrant probability.
     pub b: f64,
+    /// Bottom-left quadrant probability.
     pub c: f64,
     /// Per-coordinate random noise applied at each recursion level to
     /// avoid the lattice artifacts of pure R-MAT.

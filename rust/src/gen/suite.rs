@@ -37,9 +37,13 @@ pub enum Family {
 /// One row of Table I: the graph we must replicate.
 #[derive(Clone, Copy, Debug)]
 pub struct GraphSpec {
+    /// SNAP dataset name (Table I row key).
     pub name: &'static str,
+    /// Vertex count of the original dataset.
     pub vertices: usize,
+    /// Edge count of the original dataset.
     pub edges: usize,
+    /// Generator family used to replicate the structure.
     pub family: Family,
 }
 

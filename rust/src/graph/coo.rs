@@ -7,15 +7,19 @@ use super::csr::Vid;
 /// normalization (u<v, dedup, self-loop removal) happens in the builder.
 #[derive(Clone, Debug, Default)]
 pub struct EdgeList {
+    /// Vertex count (edge endpoints must stay below it).
     pub n: usize,
+    /// The edges, arbitrary orientation, duplicates allowed.
     pub edges: Vec<(Vid, Vid)>,
 }
 
 impl EdgeList {
+    /// An empty edge list over `n` vertices.
     pub fn new(n: usize) -> EdgeList {
         EdgeList { n, edges: Vec::new() }
     }
 
+    /// An empty edge list with room for `m` edges.
     pub fn with_capacity(n: usize, m: usize) -> EdgeList {
         EdgeList { n, edges: Vec::with_capacity(m) }
     }
@@ -30,10 +34,12 @@ impl EdgeList {
         }
     }
 
+    /// Edges pushed so far (duplicates included).
     pub fn len(&self) -> usize {
         self.edges.len()
     }
 
+    /// Whether no edges were pushed.
     pub fn is_empty(&self) -> bool {
         self.edges.is_empty()
     }

@@ -55,11 +55,13 @@ impl Csr {
         self.col_idx.len()
     }
 
+    /// Row offsets; length `n + 1`.
     #[inline]
     pub fn row_ptr(&self) -> &[u32] {
         &self.row_ptr
     }
 
+    /// Column indices, row-major, sorted within each row.
     #[inline]
     pub fn col_idx(&self) -> &[Vid] {
         &self.col_idx

@@ -9,9 +9,13 @@ use crate::util::stats::{cv, Summary};
 /// Degree / structure profile of a graph.
 #[derive(Debug, Clone)]
 pub struct GraphStats {
+    /// Vertices.
     pub n: usize,
+    /// Undirected edges.
     pub edges: usize,
+    /// Largest symmetric degree.
     pub max_sym_degree: u32,
+    /// Mean symmetric degree.
     pub mean_sym_degree: f64,
     /// Coefficient of variation of the symmetric degree distribution —
     /// the skew proxy (power-law graphs ≫ 1, roadNet ≈ 0.2).

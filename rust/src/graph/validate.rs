@@ -11,16 +11,69 @@ use super::zeroterm::ZCsr;
 /// no `thiserror`.)
 #[derive(Debug, PartialEq, Eq)]
 pub enum GraphError {
-    RowPtrLen { got: usize, want: usize },
-    RowPtrMonotone { row: usize },
+    /// `row_ptr` has the wrong length for the vertex count.
+    RowPtrLen {
+        /// Observed length.
+        got: usize,
+        /// Required length (`n + 1`).
+        want: usize,
+    },
+    /// `row_ptr` decreases at `row`.
+    RowPtrMonotone {
+        /// First offending row.
+        row: usize,
+    },
+    /// `row_ptr[0]` is not 0 (holds the offending value).
     RowPtrStart(u32),
-    RowPtrEnd { got: usize, want: usize },
-    NotUpperTriangular { row: usize, col: u32 },
-    ColOutOfRange { row: usize, col: u32, n: usize },
-    RowNotSorted { row: usize, pos: usize },
-    DuplicateCol { row: usize, col: u32 },
-    MissingTerminator { row: usize },
-    EntryAfterTombstone { row: usize, pos: usize },
+    /// `row_ptr[n]` does not match the entry count.
+    RowPtrEnd {
+        /// Observed final offset.
+        got: usize,
+        /// Required final offset (the entry count).
+        want: usize,
+    },
+    /// An entry at or below the diagonal.
+    NotUpperTriangular {
+        /// Offending row.
+        row: usize,
+        /// Offending column value.
+        col: u32,
+    },
+    /// A column index ≥ n.
+    ColOutOfRange {
+        /// Offending row.
+        row: usize,
+        /// Offending column value.
+        col: u32,
+        /// Vertex count bound.
+        n: usize,
+    },
+    /// Row entries not strictly ascending.
+    RowNotSorted {
+        /// Offending row.
+        row: usize,
+        /// Position within the row.
+        pos: usize,
+    },
+    /// The same column stored twice in one row.
+    DuplicateCol {
+        /// Offending row.
+        row: usize,
+        /// Duplicated column value.
+        col: u32,
+    },
+    /// A zero-terminated row without its trailing `0` slot.
+    MissingTerminator {
+        /// Offending row.
+        row: usize,
+    },
+    /// A live entry after a tombstone (violates prune compaction).
+    EntryAfterTombstone {
+        /// Offending row.
+        row: usize,
+        /// Position of the stray live entry.
+        pos: usize,
+    },
 }
 
 impl std::fmt::Display for GraphError {

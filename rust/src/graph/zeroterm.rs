@@ -46,6 +46,7 @@ impl ZCsr {
         ZCsr { n, row_ptr, col, initial_edges: g.nnz() }
     }
 
+    /// Vertex count.
     #[inline]
     pub fn n(&self) -> usize {
         self.n
@@ -63,16 +64,19 @@ impl ZCsr {
         self.initial_edges
     }
 
+    /// Row spans over `col`; length `n + 1`.
     #[inline]
     pub fn row_ptr(&self) -> &[u32] {
         &self.row_ptr
     }
 
+    /// The zero-terminated column array.
     #[inline]
     pub fn col(&self) -> &[Vid] {
         &self.col
     }
 
+    /// Mutable column array (prune compaction writes through this).
     #[inline]
     pub fn col_mut(&mut self) -> &mut [Vid] {
         &mut self.col

@@ -33,6 +33,8 @@
 //! assert_eq!(res.truss.nnz(), 5); // every edge is in a triangle
 //! ```
 
+#![warn(missing_docs)]
+
 pub mod algo;
 pub mod bench_harness;
 pub mod cli;

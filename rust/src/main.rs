@@ -6,14 +6,17 @@
 //!   decompose  full truss decomposition (trussness histogram)
 //!   generate   materialize a SNAP-replica graph to a file
 //!   suite      list the replica suite with structural stats
-//!   bench      regenerate a paper table/figure (table1|fig2|fig3|fig4|ablations)
-//!              or run the serving throughput workload (serve)
+//!   bench      regenerate a paper table/figure (table1|fig2|fig3|fig4|ablations),
+//!              the GPU schedule sweep (gpu-sched), or the serving throughput
+//!              workload (serve)
 //!   serve      start the sharded executor and run a mixed-priority job stream
+//!   sim        estimate one graph on the calibrated machine models across the
+//!              schedule x granularity grid
 //!   calibrate  measure the host's merge-step cost for the CPU model
 //!   info       runtime/artifact environment report
 
 use anyhow::{bail, Context, Result};
-use ktruss::algo::support::Mode;
+use ktruss::algo::support::{Granularity, Mode, DEFAULT_SEGMENT_LEN};
 // NB: import the function under a distinct name — importing the
 // `algo::ktruss` *module* here would shadow the `ktruss` crate name.
 use ktruss::algo::ktruss::ktruss as ktruss_seq;
@@ -24,8 +27,10 @@ use ktruss::coordinator::JobKind;
 use ktruss::cost::persist;
 use ktruss::gen::suite;
 use ktruss::graph::{io, stats, Csr};
-use ktruss::par::{ktruss_par, Pool, Schedule};
+use ktruss::par::{ktruss_par, ktruss_par_gran, Pool, Schedule};
 use ktruss::serve::{CostModel, Executor, Priority, ServeConfig, SubmitOpts};
+use ktruss::sim::{simulate_ktruss, SimConfig, GPU_SCHEDULES};
+use ktruss::util::fmt::{speedup, Table};
 use ktruss::util::Timer;
 use std::sync::Arc;
 use std::time::Duration;
@@ -52,6 +57,7 @@ fn main() {
         "suite" => cmd_suite(&args),
         "bench" => cmd_bench(&args),
         "serve" => cmd_serve(&args),
+        "sim" => cmd_sim(&args),
         "calibrate" => cmd_calibrate(&args),
         "info" => cmd_info(&args),
         other => {
@@ -72,20 +78,27 @@ fn print_help() {
          USAGE: ktruss <command> [flags]\n\n\
          COMMANDS\n\
            run        --graph <name|path> [--k 3] [--mode fine|coarse] [--par N] [--engine sparse|dense]\n\
+                      [--granularity coarse|fine|segment[:len]]\n\
                       [--schedule static|dynamic[:chunk]|workaware|stealing]\n\
                       [--shards N] [--priority high|normal|low] [--deadline-ms D]\n\
-                      (--shards > 1 serves the job through the sharded executor)\n\
+                      (--shards > 1 serves the job through the sharded executor;\n\
+                      --granularity segment runs the ultra-fine pooled kernel)\n\
            kmax       --graph <name|path>\n\
            decompose  --graph <name|path>\n\
            generate   --graph <name> [--scale 1.0] [--out file.tsv] [--format tsv|bin]\n\
            suite      [--scale 0.15] [--stats]\n\
            bench      <table1|fig2|fig3|fig4|ablations> [--k 3] (env: KTRUSS_SUITE, KTRUSS_SCALE)\n\
+           bench gpu-sched [--seg-len 64]  (GPU schedule x granularity sweep)\n\
            bench serve [--jobs 120] [--arrival-us 300] [--workers 4] [--shard-counts 1,2,4]\n\
            serve      [--jobs 32] [--shards 2] [--pool 4] [--schedule <s>] [--priority <p>]\n\
                       [--deadline-ms D] [--calibration file.tsv]\n\
                       (demo job stream through the sharded executor; --pool is the TOTAL worker\n\
                       budget split across shards; without --schedule the worker picks per job;\n\
                       without --priority the stream mixes priority classes)\n\
+           sim        --graph <name|path> [--k 3] [--granularity <g>|all]\n\
+                      [--gpu-schedule static|work-aware|stealing|all] [--cpu-threads N]\n\
+                      (timing estimates on the calibrated V100 model; static is always\n\
+                      included as the speedup baseline; --cpu-threads adds CPU rows)\n\
            calibrate\n\
            info\n\n\
          GRAPH SOURCES: a SNAP suite name (e.g. ca-GrQc, see `ktruss suite`) generates the\n\
@@ -124,7 +137,18 @@ fn parse_mode(args: &Args) -> Result<Mode> {
 fn cmd_run(args: &Args) -> Result<()> {
     let g = load_graph(args)?;
     let k = args.get_as::<u32>("k", 3)?;
-    let mode = parse_mode(args)?;
+    let mut mode = parse_mode(args)?;
+    // --granularity supersedes --mode; coarse/fine map onto the mode,
+    // the segment split routes to its own pooled kernel below
+    let gran: Option<Granularity> = match args.opt("granularity") {
+        Some(s) => Some(s.parse().map_err(|e| anyhow::anyhow!("--granularity: {e}"))?),
+        None => None,
+    };
+    match gran {
+        Some(Granularity::Coarse) => mode = Mode::Coarse,
+        Some(Granularity::Fine) => mode = Mode::Fine,
+        _ => {}
+    }
     let par = args.get_as::<usize>("par", 1)?;
     let engine_flag = args.opt("engine");
     let engine = engine_flag.clone().unwrap_or_else(|| "sparse".to_string());
@@ -140,6 +164,14 @@ fn cmd_run(args: &Args) -> Result<()> {
         .map_err(|e| anyhow::anyhow!("--priority: {e}"))?;
     let deadline_ms = args.get_as::<u64>("deadline-ms", 0)?;
     args.reject_unknown()?;
+    if let Some(seg @ Granularity::Segment { .. }) = gran {
+        if shards > 1 {
+            bail!("--granularity {seg} runs the pooled sparse kernel; drop --shards");
+        }
+        if engine == "dense" {
+            bail!("--granularity {seg} requires --engine sparse");
+        }
+    }
     if shards > 1 {
         // serve the single job through the sharded executor (exercises
         // admission, cost-model routing and the serving metrics)
@@ -180,7 +212,10 @@ fn cmd_run(args: &Args) -> Result<()> {
         ex.shutdown();
         return Ok(());
     }
-    if schedule_flag.is_some() && (engine != "sparse" || par <= 1) {
+    if schedule_flag.is_some()
+        && (engine != "sparse" || par <= 1)
+        && !matches!(gran, Some(Granularity::Segment { .. }))
+    {
         eprintln!(
             "note: --schedule only affects the sparse pool engine; add --par <N> (N > 1) to use it"
         );
@@ -192,6 +227,15 @@ fn cmd_run(args: &Args) -> Result<()> {
             let eng = ktruss::runtime::DenseEngine::new()?;
             let (truss, iters) = eng.ktruss(&g, k)?;
             (truss.nnz(), iters, "dense-xla (AOT jax/Pallas via PJRT)".to_string())
+        }
+        "sparse" if matches!(gran, Some(Granularity::Segment { .. })) => {
+            let seg = gran.unwrap();
+            let r = ktruss_par_gran(&g, k, &Pool::new(par.max(1)), seg, schedule);
+            (
+                r.truss.nnz(),
+                r.iterations,
+                format!("sparse-cpu (pool, {seg}, {schedule})"),
+            )
         }
         "sparse" if par > 1 => {
             let r = ktruss_par(&g, k, &Pool::new(par), mode, schedule);
@@ -287,10 +331,19 @@ fn cmd_bench(args: &Args) -> Result<()> {
     let which = args
         .positional
         .first()
-        .context("bench needs a target: table1|fig2|fig3|fig4|ablations|serve")?
+        .context("bench needs a target: table1|fig2|fig3|fig4|ablations|gpu-sched|serve")?
         .clone();
     if which == "serve" {
         return cmd_bench_serve(args);
+    }
+    if which == "gpu-sched" {
+        // the sweep generates its own adversarial graphs (skewed RMAT +
+        // star hot-row); the replica suite is not involved
+        let seg_len = args.get_as::<u32>("seg-len", DEFAULT_SEGMENT_LEN)?;
+        args.reject_unknown()?;
+        println!("# gpu-sched: GPU schedule x granularity sweep (seg_len {seg_len})");
+        let sweep = figs::run_gpu_schedule_sweep(seg_len, |msg| eprintln!("  [{msg}]"))?;
+        return report::emit("gpu_schedule_sweep.txt", &sweep.render());
     }
     let k = args.get_as::<u32>("k", 3)?;
     args.reject_unknown()?;
@@ -492,6 +545,80 @@ fn cmd_serve(args: &Args) -> Result<()> {
         println!("calibration: saved {} records to {path}", records.len());
     }
     ex.shutdown();
+    Ok(())
+}
+
+/// `sim`: timing estimates for one graph on the calibrated machine
+/// models, across the schedule × granularity grid. Static is always in
+/// the config set — it is the speedup baseline of every other schedule
+/// at the same granularity/device.
+fn cmd_sim(args: &Args) -> Result<()> {
+    let g = load_graph(args)?;
+    let k = args.get_as::<u32>("k", 3)?;
+    let gran_flag = args.get("granularity", "all");
+    let grans: Vec<Granularity> = if gran_flag == "all" {
+        vec![
+            Granularity::Coarse,
+            Granularity::Fine,
+            Granularity::Segment { len: DEFAULT_SEGMENT_LEN },
+        ]
+    } else {
+        vec![gran_flag
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--granularity: {e}"))?]
+    };
+    let sched_flag = args.get("gpu-schedule", "all");
+    let scheds: Vec<Schedule> = if sched_flag == "all" {
+        GPU_SCHEDULES.to_vec()
+    } else {
+        let s: Schedule = sched_flag
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--gpu-schedule: {e}"))?;
+        if s == Schedule::Static {
+            vec![s]
+        } else {
+            vec![Schedule::Static, s]
+        }
+    };
+    let cpu_threads = args.get_as::<usize>("cpu-threads", 0)?;
+    args.reject_unknown()?;
+    println!("graph: {}", stats::stats(&g));
+    // one block of configs per granularity (and per device), static
+    // first so every row's baseline is the block head
+    let mut configs: Vec<SimConfig> = Vec::new();
+    let mut baseline: Vec<usize> = Vec::new();
+    for &gran in &grans {
+        let b = configs.len();
+        for &sched in &scheds {
+            configs.push(SimConfig::gpu_gran(gran, sched));
+            baseline.push(b);
+        }
+        if cpu_threads > 0 {
+            let b = configs.len();
+            for &sched in &scheds {
+                configs.push(SimConfig::cpu_gran(cpu_threads, gran, sched));
+                baseline.push(b);
+            }
+        }
+    }
+    let t = Timer::start();
+    let res = simulate_ktruss(&g, k, &configs);
+    let wall = t.elapsed_ms();
+    let mut table = Table::new(vec!["config", "time ms", "ME/s", "vs static"]);
+    for (i, r) in res.iter().enumerate() {
+        table.row(vec![
+            r.label.clone(),
+            format!("{:.3}", r.time_ms()),
+            format!("{:.3}", r.me_per_s),
+            speedup(res[baseline[i]].seconds / r.seconds),
+        ]);
+    }
+    println!("{}", table.render());
+    println!(
+        "k={k}, {} convergence iterations; replay took {wall:.1} ms host time",
+        res.first().map(|r| r.iterations).unwrap_or(0)
+    );
+    println!("(vs static = speedup over the static schedule at the same granularity/device)");
     Ok(())
 }
 

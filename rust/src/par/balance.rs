@@ -37,7 +37,7 @@
 //! [`Schedule::WorkAware`]: super::pool::Schedule::WorkAware
 //! [`Schedule::Stealing`]: super::pool::Schedule::Stealing
 
-use crate::algo::support::Mode;
+use crate::algo::support::{Granularity, Mode};
 use crate::graph::ZCsr;
 use std::collections::VecDeque;
 use std::sync::Mutex;
@@ -145,11 +145,61 @@ impl Costs {
         Costs { per_task }
     }
 
+    /// Per-task base merge steps derived from a measured trace using
+    /// only the row layout — **the one shared derivation both timing
+    /// models consume** ([`crate::sim::cpu`] and [`crate::sim::gpu`]
+    /// both call this, so their task-cost views cannot drift; each
+    /// model then adds its own per-task overhead constants on top).
+    ///
+    /// `fine_steps` holds the traced merge steps per slot (0 for
+    /// terminators/tombstones, exactly what
+    /// [`crate::cost::trace::SupportTrace`] records) and `row_ptr` the
+    /// zero-terminated row layout at the time of the pass. Tasks:
+    ///
+    /// * [`Granularity::Coarse`] — one task per row: `1 + Σ` of its
+    ///   slots' steps (the `+1` keeps the ≥ 1 invariant for empty rows);
+    /// * [`Granularity::Fine`] — one task per slot: `max(steps, 1)`;
+    /// * [`Granularity::Segment`] — each *worked* slot's steps split
+    ///   into `ceil(steps/len)` tasks of ≤ `len` steps (the modeled
+    ///   analogue of the real kernel's partner-row segments, which
+    ///   bound each segment's merge by its length plus the in-range
+    ///   tail). Zero-step slots produce **no** tasks, mirroring
+    ///   [`crate::algo::support::segment_tasks`], which enumerates
+    ///   nothing for terminators/tombstones and trivially empty merges.
+    pub fn from_trace_rows(fine_steps: &[u32], row_ptr: &[u32], gran: Granularity) -> Costs {
+        let slots = *row_ptr.last().expect("row_ptr is never empty") as usize;
+        assert_eq!(fine_steps.len(), slots, "one traced step count per slot");
+        let per_task = match gran {
+            Granularity::Coarse => (0..row_ptr.len() - 1)
+                .map(|i| {
+                    let (s, e) = (row_ptr[i] as usize, row_ptr[i + 1] as usize);
+                    1 + fine_steps[s..e].iter().map(|&x| x as u64).sum::<u64>()
+                })
+                .collect(),
+            Granularity::Fine => fine_steps.iter().map(|&st| (st as u64).max(1)).collect(),
+            Granularity::Segment { len } => {
+                let len = len.max(1);
+                let mut tasks = Vec::with_capacity(fine_steps.len());
+                for &st in fine_steps {
+                    let mut left = st;
+                    while left > 0 {
+                        let seg = left.min(len);
+                        tasks.push(seg as u64);
+                        left -= seg;
+                    }
+                }
+                tasks
+            }
+        };
+        Costs { per_task }
+    }
+
     /// Number of tasks covered.
     pub fn len(&self) -> usize {
         self.per_task.len()
     }
 
+    /// Whether the pass has no tasks at all.
     pub fn is_empty(&self) -> bool {
         self.per_task.is_empty()
     }
@@ -428,6 +478,42 @@ mod tests {
         let coarse = Costs::from_trace(&stale, &z, Mode::Coarse);
         assert_eq!(coarse.per_task[0], 1, "dead row");
         assert!(coarse.per_task[1] > 1, "live row keeps measured cost");
+    }
+
+    #[test]
+    fn costs_from_trace_rows_all_granularities() {
+        let g = from_sorted_unique(4, &[(0, 1), (0, 2), (0, 3), (1, 2), (2, 3)]);
+        let z = crate::graph::ZCsr::from_csr(&g);
+        let mut s = Vec::new();
+        let tr = crate::cost::trace::trace_supports(&z, &mut s);
+        // fine: max(steps, 1) per slot
+        let fine = Costs::from_trace_rows(&tr.fine_steps, z.row_ptr(), Granularity::Fine);
+        assert_eq!(fine.len(), z.slots());
+        for (p, &c) in fine.per_task.iter().enumerate() {
+            assert_eq!(c, (tr.fine_steps[p] as u64).max(1), "slot {p}");
+        }
+        // coarse: 1 + row sum, and totals line up with the tracer
+        let coarse = Costs::from_trace_rows(&tr.fine_steps, z.row_ptr(), Granularity::Coarse);
+        assert_eq!(coarse.len(), z.n());
+        for i in 0..z.n() {
+            assert_eq!(coarse.per_task[i], 1 + tr.row_steps(z.row_ptr(), i), "row {i}");
+        }
+        // segment: pieces are ≤ len, every piece ≥ 1, the split
+        // preserves the total traced steps exactly, and zero-step slots
+        // (terminators, tombstones, empty merges) contribute no tasks —
+        // just like the real segment kernel's task enumeration
+        for len in [1u32, 2, 64] {
+            let seg =
+                Costs::from_trace_rows(&tr.fine_steps, z.row_ptr(), Granularity::Segment { len });
+            assert!(seg.per_task.iter().all(|&c| c >= 1 && c <= len.max(1) as u64));
+            assert_eq!(seg.per_task.iter().sum::<u64>(), tr.total_steps, "len={len}");
+            let want_tasks: usize = tr
+                .fine_steps
+                .iter()
+                .map(|&st| (st as usize).div_ceil(len as usize))
+                .sum();
+            assert_eq!(seg.len(), want_tasks, "len={len}");
+        }
     }
 
     #[test]

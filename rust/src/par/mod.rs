@@ -1,12 +1,19 @@
-//! Kokkos-style parallel substrate: a scoped worker pool with
-//! static/dynamic range scheduling, work-aware scan-binned and
-//! work-stealing schedules (see [`balance`]), and the concurrent
-//! (atomic) realizations of the support and prune kernels.
+//! **L2 — pool & balance.** Kokkos-style parallel substrate: a scoped
+//! worker pool with static/dynamic range scheduling, work-aware
+//! scan-binned and work-stealing schedules (see [`balance`]), and the
+//! concurrent (atomic) realizations of the support and prune kernels
+//! at every granularity (coarse rows, fine nonzeros, partner-row
+//! segments). This layer owns load balancing at *task* granularity:
+//! given the tasks [`crate::algo`] defines, distribute them across the
+//! pool so no worker starves behind a hub row.
 
 pub mod balance;
 pub mod parallel_support;
 pub mod pool;
 
 pub use balance::{estimate_costs, scan_bins, Costs};
-pub use parallel_support::{compute_supports_par, ktruss_par, prune_par};
+pub use parallel_support::{
+    compute_supports_gran, compute_supports_par, compute_supports_segmented, ktruss_par,
+    ktruss_par_gran, prune_par,
+};
 pub use pool::{Pool, Schedule, ALL_SCHEDULES};

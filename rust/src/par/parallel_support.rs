@@ -13,7 +13,9 @@
 
 use super::balance::{self, Costs};
 use super::pool::{Pool, Schedule};
-use crate::algo::support::{eager_update_atomic, Mode};
+use crate::algo::support::{
+    eager_update_atomic, eager_update_segment_atomic, segment_tasks, Granularity, Mode,
+};
 use crate::graph::ZCsr;
 use std::sync::atomic::{AtomicU32, Ordering};
 
@@ -134,6 +136,56 @@ pub fn compute_supports_costed(
     }
 }
 
+/// Run one **segment-split** support pass into an existing (zeroed)
+/// atomic array — the ultra-fine granularity: one task per ≤`len`-entry
+/// partner-row segment of each fine task ([`segment_tasks`]). Segment
+/// tasks of the same fine task race on the same support slot, so the
+/// accumulation is atomic throughout. Work-aware schedules scan-bin the
+/// per-segment cost estimates ([`crate::algo::support::SegTask::estimated_steps`])
+/// into equal-work chunks; segments are already near-uniform, so this
+/// mainly absorbs the variable in-range tail work.
+pub fn compute_supports_segmented(
+    z: &ZCsr,
+    pool: &Pool,
+    len: u32,
+    schedule: Schedule,
+    s: &[AtomicU32],
+) {
+    assert_eq!(s.len(), z.slots());
+    let tasks = segment_tasks(z, len);
+    let col = z.col();
+    let body = |_w: usize, ti: usize| {
+        eager_update_segment_atomic(col, s, &tasks[ti]);
+    };
+    if needs_costs(schedule) {
+        let costs: Vec<u64> = tasks.iter().map(|t| t.estimated_steps()).collect();
+        pool.parallel_for_costed(tasks.len(), &costs, schedule, body);
+    } else {
+        pool.parallel_for(tasks.len(), schedule, body);
+    }
+}
+
+/// Run one support pass at any [`Granularity`]; returns the plain
+/// support array. Coarse/fine dispatch to [`compute_supports_par`], the
+/// segment split to [`compute_supports_segmented`]. All granularities
+/// produce identical supports (verified by the segment property tests).
+pub fn compute_supports_gran(
+    z: &ZCsr,
+    pool: &Pool,
+    gran: Granularity,
+    schedule: Schedule,
+) -> Vec<u32> {
+    match gran {
+        Granularity::Coarse => compute_supports_par(z, pool, Mode::Coarse, schedule),
+        Granularity::Fine => compute_supports_par(z, pool, Mode::Fine, schedule),
+        Granularity::Segment { len } => {
+            let s: Vec<AtomicU32> = (0..z.slots()).map(|_| AtomicU32::new(0)).collect();
+            compute_supports_segmented(z, pool, len, schedule, &s);
+            s.into_iter().map(|x| x.into_inner()).collect()
+        }
+    }
+}
+
 /// Concurrent prune: each row is compacted independently (rows never
 /// share slots), so a plain parallel-for over rows with interior
 /// mutability via raw pointer partitioning is safe. Work-aware
@@ -218,6 +270,17 @@ impl<T> SendPtr<T> {
 /// ([`Costs::from_trace`], masked against the post-prune working form).
 /// Pruning skews rows away from the static bounds; replaying the exact
 /// last-iteration costs keeps the scan bins tight as the truss shrinks.
+///
+/// ```
+/// use ktruss::algo::support::Mode;
+/// use ktruss::graph::builder::from_sorted_unique;
+/// use ktruss::par::{ktruss_par, Pool, Schedule};
+///
+/// // diamond: triangles {0,1,2} and {0,2,3} — every edge survives k=3
+/// let g = from_sorted_unique(4, &[(0, 1), (0, 2), (0, 3), (1, 2), (2, 3)]);
+/// let r = ktruss_par(&g, 3, &Pool::new(2), Mode::Fine, Schedule::WorkAware);
+/// assert_eq!(r.truss.nnz(), 5);
+/// ```
 pub fn ktruss_par(
     g: &crate::graph::Csr,
     k: u32,
@@ -280,6 +343,62 @@ pub fn ktruss_par(
     crate::algo::ktruss::KtrussResult { truss: z.to_csr(), iterations, stats, k, mode }
 }
 
+/// Full concurrent k-truss at any [`Granularity`]. Coarse/fine delegate
+/// to [`ktruss_par`]; the segment split runs its own convergence loop
+/// over [`compute_supports_segmented`] + [`prune_par`] (segment costs
+/// are re-estimated from the compacted working form each iteration, so
+/// the binner tracks pruning without a measured-trace feedback path).
+///
+/// The returned [`crate::algo::ktruss::KtrussResult`] records
+/// [`Mode::Fine`] for segment runs — the segment split is a sub-division
+/// of fine tasks and produces identical results at every granularity.
+pub fn ktruss_par_gran(
+    g: &crate::graph::Csr,
+    k: u32,
+    pool: &Pool,
+    gran: Granularity,
+    schedule: Schedule,
+) -> crate::algo::ktruss::KtrussResult {
+    let len = match gran {
+        Granularity::Coarse => return ktruss_par(g, k, pool, Mode::Coarse, schedule),
+        Granularity::Fine => return ktruss_par(g, k, pool, Mode::Fine, schedule),
+        Granularity::Segment { len } => len,
+    };
+    let mut z = ZCsr::from_csr(g);
+    let s_atomic: Vec<AtomicU32> = (0..z.slots()).map(|_| AtomicU32::new(0)).collect();
+    let mut s_plain = vec![0u32; z.slots()];
+    let mut iterations = 0usize;
+    let mut stats = Vec::new();
+    loop {
+        let live = z.live_edges();
+        if live == 0 {
+            break;
+        }
+        compute_supports_segmented(&z, pool, len, schedule, &s_atomic);
+        for (d, a) in s_plain.iter_mut().zip(s_atomic.iter()) {
+            *d = a.swap(0, Ordering::Relaxed);
+        }
+        let support_steps = s_plain.iter().map(|&x| x as u64).sum::<u64>() + live as u64;
+        let out = prune_par(&mut z, &mut s_plain, k, pool, schedule);
+        iterations += 1;
+        stats.push(crate::algo::ktruss::IterationStat {
+            live_edges: live,
+            removed: out.removed,
+            support_steps,
+        });
+        if out.removed == 0 {
+            break;
+        }
+    }
+    crate::algo::ktruss::KtrussResult {
+        truss: z.to_csr(),
+        iterations,
+        stats,
+        k,
+        mode: Mode::Fine,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -329,6 +448,57 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn segmented_par_supports_match_seq_all_schedules() {
+        let g = random_graph(21);
+        let z = ZCsr::from_csr(&g);
+        let mut want = Vec::new();
+        compute_supports_seq(&z, &mut want);
+        let pool = Pool::new(4);
+        for len in [1u32, 7, 64] {
+            for sched in ALL_SCHEDULES {
+                let got =
+                    compute_supports_gran(&z, &pool, Granularity::Segment { len }, sched);
+                assert_eq!(got, want, "len={len} {sched:?}");
+            }
+        }
+        // and the gran dispatcher's coarse/fine paths agree too
+        for gran in [Granularity::Coarse, Granularity::Fine] {
+            let got = compute_supports_gran(&z, &pool, gran, Schedule::WorkAware);
+            assert_eq!(got, want, "{gran}");
+        }
+    }
+
+    #[test]
+    fn ktruss_par_gran_matches_seq() {
+        let g = random_graph(22);
+        let pool = Pool::new(4);
+        for k in [3u32, 5] {
+            let seq = ktruss(&g, k, Mode::Fine);
+            for len in [2u32, 64] {
+                for sched in [Schedule::Static, Schedule::WorkAware, Schedule::Stealing] {
+                    let par =
+                        ktruss_par_gran(&g, k, &pool, Granularity::Segment { len }, sched);
+                    assert_eq!(par.truss, seq.truss, "k={k} len={len} {sched:?}");
+                    assert_eq!(par.iterations, seq.iterations, "k={k} len={len} {sched:?}");
+                }
+            }
+            // coarse/fine delegation path
+            let par = ktruss_par_gran(&g, k, &pool, Granularity::Coarse, Schedule::WorkAware);
+            assert_eq!(par.truss, seq.truss, "k={k} coarse delegation");
+        }
+    }
+
+    #[test]
+    fn ktruss_par_gran_empty_graph() {
+        let pool = Pool::new(3);
+        let empty = crate::graph::Csr::empty(5);
+        let r =
+            ktruss_par_gran(&empty, 3, &pool, Granularity::Segment { len: 4 }, Schedule::WorkAware);
+        assert_eq!(r.truss.nnz(), 0);
+        assert_eq!(r.iterations, 0);
     }
 
     #[test]

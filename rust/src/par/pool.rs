@@ -96,6 +96,7 @@ impl Pool {
         )
     }
 
+    /// Worker threads this pool runs.
     pub fn workers(&self) -> usize {
         self.workers
     }

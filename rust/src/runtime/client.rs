@@ -42,6 +42,7 @@ impl Runtime {
         "unavailable".to_string()
     }
 
+    /// Devices the backend exposes (always 0 in the stubbed build).
     pub fn device_count(&self) -> usize {
         0
     }
@@ -55,7 +56,9 @@ impl Runtime {
 
 /// A dense f32 tensor handed to an executable (row-major data + dims).
 pub struct Tensor {
+    /// Row-major element data.
     pub data: Vec<f32>,
+    /// Dimension sizes, outermost first.
     pub dims: Vec<usize>,
 }
 

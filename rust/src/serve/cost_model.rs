@@ -94,6 +94,7 @@ impl Default for CostModel {
 }
 
 impl CostModel {
+    /// A fresh model at the default ns/step prior, no observations.
     pub fn new() -> CostModel {
         CostModel {
             state: Mutex::new(ModelState {

@@ -9,7 +9,7 @@
 //! dwarf a hundred triangle counts. So the dispatcher treats jobs like
 //! the support pass treats rows — estimate per-task cost
 //! ([`super::cost_model`]), pack the batch into equal-*work* (not
-//! equal-count) shard assignments ([`pack_batch`]), and absorb
+//! equal-count) shard assignments (the private `pack_batch`), and absorb
 //! estimation error at runtime by letting a drained shard steal the
 //! globally most urgent queued job (the Hornet bin-and-steal idiom at
 //! job granularity; stealing the *most* urgent job is the job-level
@@ -91,6 +91,7 @@ impl ServeConfig {
 /// Per-job submission options.
 #[derive(Clone, Copy, Debug)]
 pub struct SubmitOpts {
+    /// Urgency class of the job.
     pub priority: Priority,
     /// Soft deadline relative to submission; misses are counted in the
     /// metrics, the job still runs to completion.
@@ -105,6 +106,7 @@ impl Default for SubmitOpts {
 
 /// Ticket for a submitted job.
 pub struct Ticket {
+    /// Id assigned to the submitted job.
     pub id: JobId,
     rx: Receiver<JobResult>,
 }
@@ -152,11 +154,28 @@ struct ShardShared {
 
 /// The sharded executor handle. Dropping it drains queued jobs and
 /// shuts the shards down.
+///
+/// ```
+/// use std::sync::Arc;
+/// use ktruss::coordinator::JobKind;
+/// use ktruss::graph::builder::from_sorted_unique;
+/// use ktruss::serve::{Executor, ServeConfig};
+///
+/// let ex = Executor::start(ServeConfig { shards: 2, ..Default::default() });
+/// let g = Arc::new(from_sorted_unique(3, &[(0, 1), (0, 2), (1, 2)]));
+/// let ticket = ex.submit(g, JobKind::Triangles);
+/// let result = ticket.wait();
+/// assert!(result.output.is_ok());
+/// ex.shutdown();
+/// ```
 pub struct Executor {
     cfg: ServeConfig,
     adm: Arc<AdmissionShared>,
     next_id: AtomicU64,
+    /// Latency quantiles, per-shard counters and deadline accounting.
     pub metrics: Arc<Metrics>,
+    /// The ns/step-calibrated per-job cost model (refined by every
+    /// completion).
     pub cost_model: Arc<CostModel>,
     dispatcher: Mutex<Option<std::thread::JoinHandle<()>>>,
     shard_handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
@@ -220,6 +239,7 @@ impl Executor {
         }
     }
 
+    /// The (normalized) configuration the executor started with.
     pub fn config(&self) -> ServeConfig {
         self.cfg
     }

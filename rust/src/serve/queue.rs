@@ -52,7 +52,9 @@ impl std::str::FromStr for Priority {
 /// soft deadline, admission timestamp, cost-model estimate, and the
 /// reply channel the result is delivered on).
 pub struct Admission {
+    /// The job itself (graph, kind, id).
     pub req: JobRequest,
+    /// Urgency class (strict priority between classes).
     pub priority: Priority,
     /// Absolute soft deadline; `None` = best-effort. Misses are counted,
     /// never enforced (the job still runs to completion).
@@ -61,6 +63,7 @@ pub struct Admission {
     pub submitted: Instant,
     /// Estimated work in abstract merge steps (see `serve::cost_model`).
     pub est_steps: u64,
+    /// Channel the result is delivered on.
     pub reply: Sender<JobResult>,
 }
 
@@ -94,14 +97,17 @@ pub struct ServeQueue {
 }
 
 impl ServeQueue {
+    /// An empty queue.
     pub fn new() -> ServeQueue {
         ServeQueue { items: Vec::new() }
     }
 
+    /// Queued jobs.
     pub fn len(&self) -> usize {
         self.items.len()
     }
 
+    /// Whether no jobs are queued.
     pub fn is_empty(&self) -> bool {
         self.items.is_empty()
     }

@@ -4,7 +4,9 @@
 //! scale of the CPU model to this host; all *relative* results are
 //! independent of it.
 
-use crate::algo::support::compute_supports_seq;
+use crate::algo::support::{
+    compute_supports_seq, compute_supports_segmented_seq, segment_tasks,
+};
 use crate::cost::trace::trace_supports;
 use crate::graph::ZCsr;
 use crate::util::timer::Timer;
@@ -20,14 +22,19 @@ pub struct Calibration {
     pub wall_ms: f64,
 }
 
-/// Measure step cost on a standard calibration graph.
-pub fn calibrate_step_ns() -> Calibration {
-    let g = crate::gen::rmat::rmat(
+/// The standard calibration workload (social-graph replica, mid-size).
+fn calibration_graph() -> crate::graph::Csr {
+    crate::gen::rmat::rmat(
         20_000,
         150_000,
         crate::gen::rmat::RmatParams::social(),
         &mut crate::util::Rng::new(0xCA11B),
-    );
+    )
+}
+
+/// Measure step cost on a standard calibration graph.
+pub fn calibrate_step_ns() -> Calibration {
+    let g = calibration_graph();
     let z = ZCsr::from_csr(&g);
     let mut s = Vec::new();
     let tr = trace_supports(&z, &mut s);
@@ -42,6 +49,51 @@ pub fn calibrate_step_ns() -> Calibration {
     let wall_ms = t.elapsed_ms() / trials as f64;
     let step_ns = wall_ms * 1e6 / tr.total_steps as f64;
     Calibration { step_ns, steps: tr.total_steps, wall_ms }
+}
+
+/// Calibration of the segment split's per-task overhead (the
+/// machine-model constant behind
+/// [`crate::sim::machine::CpuMachine::segment_task_ns`]).
+#[derive(Clone, Copy, Debug)]
+pub struct SegmentCalibration {
+    /// Segment length the measurement ran with.
+    pub seg_len: u32,
+    /// Segment tasks in the calibration pass.
+    pub tasks: usize,
+    /// Measured extra nanoseconds per segment task over the plain
+    /// sequential pass (≥ 0; task setup + in-tail lower-bound search).
+    pub per_task_ns: f64,
+    /// Wall time of one segmented pass, ms.
+    pub wall_ms: f64,
+}
+
+/// Measure the segment split's per-task overhead: time the segmented
+/// sequential pass against the plain one on the calibration graph and
+/// attribute the difference to the task count. Noise can push the
+/// difference below zero on a shared host; it is clamped at 0.
+pub fn calibrate_segment_overhead(seg_len: u32) -> SegmentCalibration {
+    let g = calibration_graph();
+    let z = ZCsr::from_csr(&g);
+    let tasks = segment_tasks(&z, seg_len).len();
+    let mut s = Vec::new();
+    // warm-ups
+    compute_supports_seq(&z, &mut s);
+    compute_supports_segmented_seq(&z, seg_len, &mut s);
+    let trials = 3;
+    let t = Timer::start();
+    for _ in 0..trials {
+        compute_supports_seq(&z, &mut s);
+        std::hint::black_box(&s);
+    }
+    let plain_ms = t.elapsed_ms() / trials as f64;
+    let t = Timer::start();
+    for _ in 0..trials {
+        compute_supports_segmented_seq(&z, seg_len, &mut s);
+        std::hint::black_box(&s);
+    }
+    let wall_ms = t.elapsed_ms() / trials as f64;
+    let per_task_ns = ((wall_ms - plain_ms) * 1e6 / tasks.max(1) as f64).max(0.0);
+    SegmentCalibration { seg_len, tasks, per_task_ns, wall_ms }
 }
 
 #[cfg(test)]
@@ -61,5 +113,17 @@ mod tests {
             c.steps
         );
         assert!(c.steps > 100_000);
+    }
+
+    #[test]
+    fn segment_calibration_yields_sane_overhead() {
+        let c = calibrate_segment_overhead(64);
+        assert_eq!(c.seg_len, 64);
+        assert!(c.tasks > 10_000, "tasks {}", c.tasks);
+        assert!(c.per_task_ns.is_finite() && c.per_task_ns >= 0.0);
+        // even with the segmented pass's bookkeeping the overhead of a
+        // single task stays far below a microsecond
+        assert!(c.per_task_ns < 1000.0, "per_task_ns {}", c.per_task_ns);
+        assert!(c.wall_ms > 0.0);
     }
 }

@@ -14,26 +14,42 @@
 //! The kernel time is `max(makespan, bandwidth bound) + fork/join`.
 
 use super::machine::CpuMachine;
-use crate::algo::support::Mode;
+use crate::algo::support::Granularity;
 use crate::cost::trace::SupportTrace;
-use crate::par::Schedule;
+use crate::par::{balance, Schedule};
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
-/// Per-task cost in nanoseconds for the support kernel.
-fn task_costs_ns(m: &CpuMachine, trace: &SupportTrace, row_ptr: &[u32], mode: Mode) -> Vec<f64> {
-    match mode {
-        Mode::Coarse => (0..row_ptr.len() - 1)
-            .map(|i| {
-                let steps = trace.row_steps(row_ptr, i) as f64;
+/// Per-task cost in nanoseconds for the support kernel: shared base
+/// steps from [`balance::Costs::from_trace_rows`] (the same derivation
+/// the GPU model reads, so the two models cannot drift) plus this
+/// model's per-task overheads.
+fn task_costs_ns(
+    m: &CpuMachine,
+    trace: &SupportTrace,
+    row_ptr: &[u32],
+    gran: Granularity,
+) -> Vec<f64> {
+    let base = balance::Costs::from_trace_rows(&trace.fine_steps, row_ptr, gran);
+    match gran {
+        Granularity::Coarse => base
+            .per_task
+            .iter()
+            .enumerate()
+            .map(|(i, &steps)| {
                 let live = trace.live_per_row[i] as f64;
-                m.coarse_task_ns + live * m.entry_ns + steps * m.step_ns
+                m.coarse_task_ns + live * m.entry_ns + steps as f64 * m.step_ns
             })
             .collect(),
-        Mode::Fine => trace
-            .fine_steps
+        Granularity::Fine => base
+            .per_task
             .iter()
             .map(|&st| m.fine_task_ns + st as f64 * m.step_ns)
+            .collect(),
+        Granularity::Segment { .. } => base
+            .per_task
+            .iter()
+            .map(|&st| m.segment_task_ns() + st as f64 * m.step_ns)
             .collect(),
     }
 }
@@ -99,15 +115,15 @@ pub fn makespan_ns(costs: &[f64], threads: usize, schedule: Schedule) -> f64 {
     }
 }
 
-/// Seconds for one support pass.
+/// Seconds for one support pass at any granularity under `schedule`.
 pub fn support_pass_s(
     m: &CpuMachine,
     trace: &SupportTrace,
     row_ptr: &[u32],
-    mode: Mode,
+    gran: Granularity,
     schedule: Schedule,
 ) -> f64 {
-    let costs = task_costs_ns(m, trace, row_ptr, mode);
+    let costs = task_costs_ns(m, trace, row_ptr, gran);
     let compute_ns = makespan_ns(&costs, m.threads, schedule);
     // streaming bound: every step touches ~8B of column data, every task
     // ~24B of pointers/support
@@ -188,12 +204,16 @@ mod tests {
             &mut crate::util::Rng::new(2),
         );
         let (z, tr) = trace_of(&g);
-        for mode in [Mode::Coarse, Mode::Fine] {
+        for gran in [
+            Granularity::Coarse,
+            Granularity::Fine,
+            Granularity::Segment { len: 64 },
+        ] {
             let mut prev = f64::INFINITY;
             for t in [1usize, 2, 4, 8, 16, 48] {
                 let m = CpuMachine::skylake_8160(t);
-                let s = support_pass_s(&m, &tr, z.row_ptr(), mode, Schedule::Static);
-                assert!(s <= prev * 1.001, "mode={mode} t={t}: {s} > {prev}");
+                let s = support_pass_s(&m, &tr, z.row_ptr(), gran, Schedule::Static);
+                assert!(s <= prev * 1.001, "gran={gran} t={t}: {s} > {prev}");
                 prev = s;
             }
         }
@@ -210,8 +230,8 @@ mod tests {
         );
         let (z, tr) = trace_of(&g);
         let m = CpuMachine::skylake_8160(48);
-        let coarse = support_pass_s(&m, &tr, z.row_ptr(), Mode::Coarse, Schedule::Static);
-        let fine = support_pass_s(&m, &tr, z.row_ptr(), Mode::Fine, Schedule::Static);
+        let coarse = support_pass_s(&m, &tr, z.row_ptr(), Granularity::Coarse, Schedule::Static);
+        let fine = support_pass_s(&m, &tr, z.row_ptr(), Granularity::Fine, Schedule::Static);
         assert!(fine < coarse, "fine {fine} vs coarse {coarse}");
     }
 
@@ -220,8 +240,8 @@ mod tests {
         let g = crate::gen::grid::road(20_000, 28_000, 0.05, &mut crate::util::Rng::new(6));
         let (z, tr) = trace_of(&g);
         let m = CpuMachine::skylake_8160(48);
-        let coarse = support_pass_s(&m, &tr, z.row_ptr(), Mode::Coarse, Schedule::Static);
-        let fine = support_pass_s(&m, &tr, z.row_ptr(), Mode::Fine, Schedule::Static);
+        let coarse = support_pass_s(&m, &tr, z.row_ptr(), Granularity::Coarse, Schedule::Static);
+        let fine = support_pass_s(&m, &tr, z.row_ptr(), Granularity::Fine, Schedule::Static);
         let ratio = coarse / fine;
         assert!((0.5..2.0).contains(&ratio), "ratio {ratio}");
     }

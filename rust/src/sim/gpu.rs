@@ -1,31 +1,70 @@
-//! GPU SIMT timing model (V100-class).
+//! GPU SIMT timing model (V100-class), schedule- and granularity-aware.
 //!
-//! The flat `RangePolicy` grid maps 32 consecutive tasks to a warp.
-//! Lanes execute in lockstep, so a warp's duration is the *maximum*
-//! task cost among its lanes — intra-warp divergence is where coarse
-//! tasks burn the GPU (one mega-row makes 31 lanes idle). The kernel's
-//! duration combines:
+//! Tasks (rows for coarse, slots for fine, partner-row segments for the
+//! segment split) are packed into warps of 32 lanes executing in
+//! lockstep, so a warp's duration is the *maximum* task cost among its
+//! lanes — intra-warp divergence is where coarse tasks burn the GPU
+//! (one mega-row makes 31 lanes idle). Warp formation is fixed — 32
+//! consecutive tasks per warp, duration = lane maximum — because
+//! lockstep lanes cannot be fed fewer tasks without idling; what the
+//! [`Schedule`] governs is the warp→scheduler *assignment*, the exact
+//! CPU makespan model shifted one level up (warps are the tasks,
+//! warp-scheduler slots are the workers):
 //!
-//! * **throughput term** — total warp-steps over the device's peak
-//!   scheduler throughput (valid while occupancy is high);
+//! * [`Schedule::Static`] — the flat grid is issued in contiguous
+//!   equal-*count* waves per scheduler (what the paper's Kokkos
+//!   `RangePolicy` compiles to): a clustered hot region of the
+//!   iteration space serializes on a few schedulers. Mirrors the CPU
+//!   model's static contiguous-block makespan.
+//! * [`Schedule::WorkAware`] — scan-binned equal-*work* warp chunks:
+//!   each scheduler receives a contiguous chain of warps of
+//!   approximately equal total work, via the same
+//!   [`balance::scan_bins`] the real pool runs over the per-task costs
+//!   (aggregated to warp durations). The binner's isolate-the-giant
+//!   property puts a hot warp alone on its scheduler.
+//! * [`Schedule::Stealing`] — persistent blocks with a global work
+//!   counter ("Dynamic Load Balancing Strategies for Graph Applications
+//!   on GPUs", arXiv:1711.00231): each persistent warp grabs the next
+//!   32-task chunk when it drains, i.e. earliest-finish greedy
+//!   dispatch, so no scheduler idles behind a hot wave.
+//!   [`Schedule::Dynamic`] is modeled the same way.
+//!
+//! The kernel's duration combines:
+//!
+//! * **throughput/makespan term** — the warp-level makespan over the
+//!   device's warp-scheduler slots at the occupied step rate (reduces
+//!   to total-warp-steps over peak throughput when warps are balanced);
 //! * **tail/serial term** — the longest single warp at the degraded
 //!   lone-warp step cost (latency no longer hidden). This is what
 //!   serializes hub rows on the AS-topology graphs and reproduces the
-//!   paper's catastrophic GPU-C results on `as20000102`/`oregon*`;
+//!   paper's catastrophic GPU-C results on `as20000102`/`oregon*`. No
+//!   *schedule* can shrink it — only a finer granularity splits the
+//!   giant task, which is exactly the paper's argument;
 //! * **bandwidth term** — streamed bytes over HBM bandwidth;
 //! * **launch latency** per kernel, which dominates tiny graphs and
 //!   many-iteration K_max runs, exactly as in Table I.
+//!
+//! Per-task base costs come from [`balance::Costs::from_trace_rows`] —
+//! the same derivation the CPU model uses — so the two machine models
+//! read one shared view of the traced work and cannot drift.
 
 use super::machine::GpuMachine;
-use crate::algo::support::Mode;
+use crate::algo::support::{Granularity, Mode};
 use crate::cost::trace::SupportTrace;
+use crate::par::{balance, Schedule};
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
 
 /// Kernel-time estimate decomposed into the model's terms (seconds).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct KernelEstimate {
+    /// Warp-level makespan over the scheduler slots (occupied rate).
     pub throughput_s: f64,
+    /// Longest single warp at the degraded lone-warp rate.
     pub tail_s: f64,
+    /// Streamed bytes over HBM bandwidth.
     pub bandwidth_s: f64,
+    /// Kernel launch + sync latency.
     pub launch_s: f64,
 }
 
@@ -37,56 +76,144 @@ impl KernelEstimate {
     }
 }
 
-/// Per-task costs in *steps* for the support kernel.
-fn task_steps(m: &GpuMachine, trace: &SupportTrace, row_ptr: &[u32], mode: Mode) -> Vec<f64> {
-    match mode {
-        Mode::Coarse => (0..row_ptr.len() - 1)
-            .map(|i| trace.row_steps(row_ptr, i) as f64 + m.coarse_task_steps)
-            .collect(),
-        Mode::Fine => trace
-            .fine_steps
-            .iter()
-            .map(|&st| st as f64 + m.fine_task_steps)
-            .collect(),
-    }
+/// Per-task costs in *steps* for the support kernel: shared base steps
+/// from [`balance::Costs::from_trace_rows`] plus this model's per-task
+/// overhead for the granularity.
+fn task_steps(
+    m: &GpuMachine,
+    trace: &SupportTrace,
+    row_ptr: &[u32],
+    gran: Granularity,
+) -> Vec<f64> {
+    let base = balance::Costs::from_trace_rows(&trace.fine_steps, row_ptr, gran);
+    let overhead = match gran {
+        Granularity::Coarse => m.coarse_task_steps,
+        Granularity::Fine => m.fine_task_steps,
+        Granularity::Segment { .. } => m.segment_task_steps(),
+    };
+    base.per_task.iter().map(|&c| c as f64 + overhead).collect()
 }
 
-/// Estimate one support kernel.
+/// Estimate one support kernel under the default static schedule
+/// (back-compatible entry for the coarse/fine pair).
 pub fn support_kernel(
     m: &GpuMachine,
     trace: &SupportTrace,
     row_ptr: &[u32],
     mode: Mode,
 ) -> KernelEstimate {
-    let costs = task_steps(m, trace, row_ptr, mode);
-    estimate_kernel(m, &costs, trace.total_steps as f64)
+    support_kernel_sched(m, trace, row_ptr, mode.into(), Schedule::Static)
 }
 
-/// Estimate one prune kernel (flat over slots, ~uniform small tasks).
+/// Estimate one support kernel at any granularity under any schedule.
+pub fn support_kernel_sched(
+    m: &GpuMachine,
+    trace: &SupportTrace,
+    row_ptr: &[u32],
+    gran: Granularity,
+    schedule: Schedule,
+) -> KernelEstimate {
+    let costs = task_steps(m, trace, row_ptr, gran);
+    estimate_kernel(m, &costs, trace.total_steps as f64, schedule)
+}
+
+/// Estimate one prune kernel (flat over slots, ~uniform small tasks —
+/// the schedule cannot matter, so the static path is used).
 pub fn prune_kernel(m: &GpuMachine, slots: usize) -> KernelEstimate {
     let costs = vec![m.prune_slot_steps; slots];
-    estimate_kernel(m, &costs, slots as f64 * m.prune_slot_steps)
+    estimate_kernel(m, &costs, slots as f64 * m.prune_slot_steps, Schedule::Static)
 }
 
 /// Public entry for synthetic task lists (used by the ultra-fine
-/// ablation, which builds its own task decomposition).
+/// ablation and the schedule shape tests, which build their own task
+/// decompositions).
 pub fn estimate_tasks(m: &GpuMachine, task_costs: &[f64], total_steps: f64) -> KernelEstimate {
-    estimate_kernel(m, task_costs, total_steps)
+    estimate_kernel(m, task_costs, total_steps, Schedule::Static)
 }
 
-/// Core model: warp-max aggregation + three-way bound.
-fn estimate_kernel(m: &GpuMachine, task_costs: &[f64], total_steps: f64) -> KernelEstimate {
+/// [`estimate_tasks`] with an explicit warp/dispatch schedule.
+pub fn estimate_tasks_sched(
+    m: &GpuMachine,
+    task_costs: &[f64],
+    total_steps: f64,
+    schedule: Schedule,
+) -> KernelEstimate {
+    estimate_kernel(m, task_costs, total_steps, schedule)
+}
+
+/// Per-warp durations (steps): 32 consecutive tasks per warp, duration
+/// = lane maximum (lockstep). Identical for every schedule — lockstep
+/// lanes cannot be fed fewer tasks without idling, so only a finer
+/// *granularity* (not a schedule) can shrink a warp.
+fn warp_durations(m: &GpuMachine, task_costs: &[f64]) -> Vec<f64> {
+    task_costs
+        .chunks(m.warp_size)
+        .map(|chunk| chunk.iter().cloned().fold(0.0f64, f64::max))
+        .collect()
+}
+
+/// Makespan (steps) of the warp durations over the device's scheduler
+/// slots — the CPU makespan model one level up. Static issues
+/// contiguous equal-count waves per slot; `WorkAware` scan-bins the
+/// warp durations into one equal-work contiguous chain per slot;
+/// `Stealing`/`Dynamic` dispatch earliest-finish (persistent blocks on
+/// a global counter).
+fn slot_makespan_steps(warps: &[f64], slots: usize, schedule: Schedule) -> f64 {
+    if warps.is_empty() {
+        return 0.0;
+    }
+    let slots = slots.max(1);
+    match schedule {
+        Schedule::Static => {
+            let n = warps.len();
+            let mut worst = 0.0f64;
+            for s in 0..slots {
+                let lo = n * s / slots;
+                let hi = n * (s + 1) / slots;
+                let sum: f64 = warps[lo..hi].iter().sum();
+                worst = worst.max(sum);
+            }
+            worst
+        }
+        Schedule::WorkAware => {
+            // fixed-point costs (≥ 1 each) keep the binner integral,
+            // exactly as the CPU model's WorkAware branch does
+            let fixed: Vec<u64> = warps.iter().map(|&c| (c * 16.0).round() as u64 + 1).collect();
+            let bins = balance::scan_bins(&fixed, slots);
+            bins.iter()
+                .map(|&(lo, hi)| warps[lo..hi].iter().sum::<f64>())
+                .fold(0.0, f64::max)
+        }
+        Schedule::Dynamic { .. } | Schedule::Stealing => {
+            // earliest-finish greedy over slot clocks (1/16-step
+            // fixed point keeps the heap ordered, as in sim::cpu)
+            let mut heap: BinaryHeap<Reverse<u64>> = (0..slots).map(|_| Reverse(0u64)).collect();
+            let mut makespan = 0u64;
+            for &c in warps {
+                let Reverse(t) = heap.pop().unwrap();
+                let done = t + (c * 16.0).round() as u64;
+                makespan = makespan.max(done);
+                heap.push(Reverse(done));
+            }
+            makespan as f64 / 16.0
+        }
+    }
+}
+
+/// Core model: warp formation + slot makespan + tail/bandwidth bounds.
+fn estimate_kernel(
+    m: &GpuMachine,
+    task_costs: &[f64],
+    total_steps: f64,
+    schedule: Schedule,
+) -> KernelEstimate {
     if task_costs.is_empty() {
         return KernelEstimate { launch_s: m.launch_us / 1e6, ..Default::default() };
     }
-    let mut total_warp_steps = 0.0f64;
-    let mut longest_warp = 0.0f64;
-    for w in task_costs.chunks(m.warp_size) {
-        let wmax = w.iter().cloned().fold(0.0f64, f64::max);
-        total_warp_steps += wmax;
-        longest_warp = longest_warp.max(wmax);
-    }
-    let throughput_s = total_warp_steps / m.peak_steps_per_s();
+    let warps = warp_durations(m, task_costs);
+    let longest_warp = warps.iter().cloned().fold(0.0f64, f64::max);
+    let makespan = slot_makespan_steps(&warps, m.warp_slots(), schedule);
+    let throughput_s = makespan * m.occupied_step_s();
     let tail_s = longest_warp * m.serial_step_s();
     // bytes: 8B of column data per merge step + 16B of pointers per task
     let bytes = total_steps * 8.0 + task_costs.len() as f64 * 16.0;
@@ -142,7 +269,7 @@ mod tests {
         let m = GpuMachine::v100();
         let mut costs = vec![1.0; 32 * 100];
         costs[0] = 1_000_000.0;
-        let est = estimate_kernel(&m, &costs, 1_003_200.0);
+        let est = estimate_tasks(&m, &costs, 1_003_200.0);
         assert!(est.tail_s > est.throughput_s);
         assert!(est.total_s() >= est.tail_s);
     }
@@ -150,7 +277,7 @@ mod tests {
     #[test]
     fn launch_latency_floors_empty_kernels() {
         let m = GpuMachine::v100();
-        let est = estimate_kernel(&m, &[], 0.0);
+        let est = estimate_tasks(&m, &[], 0.0);
         assert!((est.total_s() - 8e-6).abs() < 1e-9);
     }
 
@@ -158,5 +285,115 @@ mod tests {
     fn prune_kernel_scales() {
         let m = GpuMachine::v100();
         assert!(prune_kernel(&m, 10_000_000).total_s() > prune_kernel(&m, 10_000).total_s());
+    }
+
+    #[test]
+    fn workaware_and_stealing_beat_static_on_clustered_hot_region() {
+        // 1000 warps over 320 slots, heavy tasks clustered at the front
+        // (hub rows sit at low vertex ids in power-law orderings): the
+        // static contiguous waves pile several hot warps onto the same
+        // schedulers, dynamic dispatch spreads them
+        let m = GpuMachine::v100();
+        let n = 32 * 1000;
+        let costs: Vec<f64> = (0..n).map(|i| if i < 3200 { 100.0 } else { 1.0 }).collect();
+        let total: f64 = costs.iter().sum();
+        let stat = estimate_tasks_sched(&m, &costs, total, Schedule::Static);
+        let wa = estimate_tasks_sched(&m, &costs, total, Schedule::WorkAware);
+        let steal = estimate_tasks_sched(&m, &costs, total, Schedule::Stealing);
+        assert!(
+            wa.throughput_s < 0.6 * stat.throughput_s,
+            "workaware {} vs static {}",
+            wa.throughput_s,
+            stat.throughput_s
+        );
+        assert!(
+            steal.throughput_s < 0.6 * stat.throughput_s,
+            "stealing {} vs static {}",
+            steal.throughput_s,
+            stat.throughput_s
+        );
+        // the tail term is granularity physics, not schedule physics:
+        // the longest warp stays within a small factor across schedules
+        assert!(wa.tail_s <= stat.tail_s * 1.01 + 1e-12);
+        assert!((steal.tail_s - stat.tail_s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn schedules_tie_when_warps_fit_the_slots() {
+        // fewer warps than schedulers: every warp runs concurrently, no
+        // schedule can help (or hurt)
+        let m = GpuMachine::v100();
+        let costs: Vec<f64> = (0..32 * 100).map(|i| 1.0 + (i % 13) as f64).collect();
+        let total: f64 = costs.iter().sum();
+        let stat = estimate_tasks_sched(&m, &costs, total, Schedule::Static);
+        let steal = estimate_tasks_sched(&m, &costs, total, Schedule::Stealing);
+        assert!((stat.throughput_s - steal.throughput_s).abs() < 1e-9);
+    }
+
+    #[test]
+    fn workaware_not_worse_than_static_on_star_hot_row() {
+        // the satellite acceptance check: on the star hot-row graph the
+        // work-aware GPU model's predicted support-kernel time must not
+        // exceed static's, at every granularity
+        let g = crate::testkit::graphs::star_with_fringe(1200);
+        let (z, tr) = trace_of(&g);
+        let m = GpuMachine::v100();
+        for gran in [
+            Granularity::Coarse,
+            Granularity::Fine,
+            Granularity::Segment { len: 64 },
+        ] {
+            let stat =
+                support_kernel_sched(&m, &tr, z.row_ptr(), gran, Schedule::Static).total_s();
+            let wa =
+                support_kernel_sched(&m, &tr, z.row_ptr(), gran, Schedule::WorkAware).total_s();
+            assert!(wa <= stat * 1.001, "{gran}: workaware {wa} vs static {stat}");
+        }
+    }
+
+    #[test]
+    fn segment_granularity_beats_coarse_on_hot_row_graph() {
+        // hub row + triangle fringe: the hot coarse task dominates the
+        // tail term; the segment split decomposes it
+        let g = crate::testkit::graphs::star_with_fringe(1500);
+        let (z, tr) = trace_of(&g);
+        let m = GpuMachine::v100();
+        for sched in [Schedule::Static, Schedule::WorkAware] {
+            let coarse =
+                support_kernel_sched(&m, &tr, z.row_ptr(), Granularity::Coarse, sched).total_s();
+            let seg = support_kernel_sched(
+                &m,
+                &tr,
+                z.row_ptr(),
+                Granularity::Segment { len: 64 },
+                sched,
+            )
+            .total_s();
+            assert!(seg < coarse, "{sched:?}: segment {seg} vs coarse {coarse}");
+        }
+    }
+
+    #[test]
+    fn segment_splits_bound_warp_divergence() {
+        // a single giant fine task: segment-splitting caps the longest
+        // warp at ~len steps, so the tail term collapses
+        let m = GpuMachine::v100();
+        let row_ptr = vec![0u32, 2, 3];
+        let fine_steps = vec![100_000u32, 0, 0];
+        let tr = SupportTrace {
+            fine_steps,
+            live_per_row: vec![1, 0],
+            total_steps: 100_000,
+        };
+        let fine =
+            support_kernel_sched(&m, &tr, &row_ptr, Granularity::Fine, Schedule::Static);
+        let seg = support_kernel_sched(
+            &m,
+            &tr,
+            &row_ptr,
+            Granularity::Segment { len: 64 },
+            Schedule::Static,
+        );
+        assert!(seg.tail_s < fine.tail_s / 100.0, "seg {} fine {}", seg.tail_s, fine.tail_s);
     }
 }

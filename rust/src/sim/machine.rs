@@ -59,15 +59,28 @@ impl CpuMachine {
         self.step_ns = step_ns;
         self
     }
+
+    /// Fixed per-segment-task overhead: a fine task's resolve plus the
+    /// in-tail lower-bound search that locates the segment's merge
+    /// window (the bookkeeping cost the paper warns about for the
+    /// ultra-fine split; ~1.5× a fine task, consistent with what
+    /// [`crate::sim::calibrate::calibrate_segment_overhead`] measures).
+    pub fn segment_task_ns(&self) -> f64 {
+        self.fine_task_ns * 1.5
+    }
 }
 
 /// GPU model: NVIDIA Tesla V100 (Volta) — 80 SMs, 4 warp schedulers
 /// each, 1.38 GHz, ~900 GB/s HBM2.
 #[derive(Clone, Copy, Debug)]
 pub struct GpuMachine {
+    /// Streaming multiprocessors.
     pub sms: usize,
+    /// Warp schedulers per SM.
     pub schedulers_per_sm: usize,
+    /// Core clock, GHz.
     pub clock_ghz: f64,
+    /// Lanes per warp.
     pub warp_size: usize,
     /// Cycles one merge step costs a *fully occupied* warp scheduler
     /// (memory latency hidden by other resident warps).
@@ -79,6 +92,7 @@ pub struct GpuMachine {
     /// Per-task overhead, in steps: index math + row lookups
     /// (coarse task = one row; fine task = one slot).
     pub coarse_task_steps: f64,
+    /// Per-fine-task overhead, in steps.
     pub fine_task_steps: f64,
     /// Kernel launch + sync latency per kernel, microseconds.
     pub launch_us: f64,
@@ -114,6 +128,26 @@ impl GpuMachine {
     /// Seconds per step for a lone warp (divergence/tail regime).
     pub fn serial_step_s(&self) -> f64 {
         self.serial_step_cycles / (self.clock_ghz * 1e9)
+    }
+
+    /// Concurrent warp-execution slots: one warp in flight per warp
+    /// scheduler (80 SMs × 4 = 320 on the V100). The schedule-aware
+    /// kernel model treats these as the processors of a warp-level
+    /// makespan problem.
+    pub fn warp_slots(&self) -> usize {
+        self.sms * self.schedulers_per_sm
+    }
+
+    /// Seconds one warp-step costs a fully occupied scheduler.
+    pub fn occupied_step_s(&self) -> f64 {
+        self.step_cycles / (self.clock_ghz * 1e9)
+    }
+
+    /// Per-segment-task overhead in steps: fine-task resolve plus the
+    /// segment-locate search (see [`CpuMachine::segment_task_ns`] for
+    /// the same 1.5× rationale on the CPU side).
+    pub fn segment_task_steps(&self) -> f64 {
+        self.fine_task_steps * 1.5
     }
 }
 

@@ -11,4 +11,7 @@ pub mod machine;
 pub mod run;
 
 pub use machine::{CpuMachine, GpuMachine};
-pub use run::{simulate_kmax, simulate_ktruss, table1_configs, Device, SimConfig, SimResult};
+pub use run::{
+    gpu_schedule_grid, simulate_kmax, simulate_ktruss, table1_configs, Device, SimConfig,
+    SimResult, GPU_SCHEDULES,
+};

@@ -5,7 +5,7 @@
 use super::cpu;
 use super::gpu;
 use super::machine::{CpuMachine, GpuMachine};
-use crate::algo::support::Mode;
+use crate::algo::support::{Granularity, Mode};
 use crate::cost::replay::{replay_kmax, replay_ktruss, IterObservation};
 use crate::graph::Csr;
 use crate::par::Schedule;
@@ -14,11 +14,14 @@ use crate::util::timer::me_per_s;
 /// A simulated execution target.
 #[derive(Clone, Copy, Debug)]
 pub enum Device {
+    /// The calibrated multicore CPU model.
     Cpu(CpuMachine),
+    /// The calibrated V100 model.
     Gpu(GpuMachine),
 }
 
 impl Device {
+    /// Short device label (`cpu48t`, `gpu`).
     pub fn name(&self) -> String {
         match self {
             Device::Cpu(m) => format!("cpu{}t", m.threads),
@@ -30,53 +33,91 @@ impl Device {
 /// One configuration to estimate.
 #[derive(Clone, Debug)]
 pub struct SimConfig {
+    /// Human-readable row key (`CPU-C-48t`, `GPU-F-workaware`, …).
     pub label: String,
+    /// Machine model the configuration runs on.
     pub device: Device,
-    pub mode: Mode,
+    /// Task granularity of the support pass.
+    pub gran: Granularity,
+    /// Warp/thread schedule of the support pass.
     pub schedule: Schedule,
 }
 
 impl SimConfig {
+    /// CPU configuration at the paper's default static schedule.
     pub fn cpu(threads: usize, mode: Mode) -> SimConfig {
-        SimConfig {
-            label: format!("CPU-{}-{}t", short(mode), threads),
-            device: Device::Cpu(CpuMachine::skylake_8160(threads)),
-            mode,
-            schedule: Schedule::Static,
-        }
+        SimConfig::cpu_gran(threads, mode.into(), Schedule::Static)
     }
 
+    /// GPU configuration at the paper's default static schedule.
     pub fn gpu(mode: Mode) -> SimConfig {
-        SimConfig {
-            label: format!("GPU-{}", short(mode)),
-            device: Device::Gpu(GpuMachine::v100()),
-            mode,
-            schedule: Schedule::Static,
-        }
+        SimConfig::gpu_gran(mode.into(), Schedule::Static)
     }
 
     /// CPU configuration with an explicit schedule (the schedule
     /// ablation axis: static | dynamic | workaware | stealing).
     pub fn cpu_sched(threads: usize, mode: Mode, schedule: Schedule) -> SimConfig {
         SimConfig {
-            label: format!("CPU-{}-{}t-{}", short(mode), threads, schedule),
+            label: format!("CPU-{}-{}t-{}", Granularity::from(mode).short(), threads, schedule),
             device: Device::Cpu(CpuMachine::skylake_8160(threads)),
-            mode,
+            gran: mode.into(),
             schedule,
         }
     }
+
+    /// CPU configuration at any point of the schedule × granularity
+    /// grid. Static-schedule labels stay schedule-suffix-free so the
+    /// Table-I row keys (`CPU-C-48t`) are stable.
+    pub fn cpu_gran(threads: usize, gran: Granularity, schedule: Schedule) -> SimConfig {
+        let label = match schedule {
+            Schedule::Static => format!("CPU-{}-{}t", gran.short(), threads),
+            _ => format!("CPU-{}-{}t-{}", gran.short(), threads, schedule),
+        };
+        SimConfig {
+            label,
+            device: Device::Cpu(CpuMachine::skylake_8160(threads)),
+            gran,
+            schedule,
+        }
+    }
+
+    /// GPU configuration at any point of the schedule × granularity
+    /// grid (`GPU-C`, `GPU-F-workaware`, `GPU-S64-stealing`, …).
+    pub fn gpu_gran(gran: Granularity, schedule: Schedule) -> SimConfig {
+        let label = match schedule {
+            Schedule::Static => format!("GPU-{}", gran.short()),
+            _ => format!("GPU-{}-{}", gran.short(), schedule),
+        };
+        SimConfig { label, device: Device::Gpu(GpuMachine::v100()), gran, schedule }
+    }
 }
 
-fn short(mode: Mode) -> &'static str {
-    match mode {
-        Mode::Coarse => "C",
-        Mode::Fine => "F",
+/// The GPU schedule axis the sweeps report (dynamic is modeled
+/// identically to stealing on the GPU, so it is elided).
+pub const GPU_SCHEDULES: [Schedule; 3] =
+    [Schedule::Static, Schedule::WorkAware, Schedule::Stealing];
+
+/// The full GPU schedule × granularity grid: coarse/fine/segment under
+/// static/work-aware/stealing (9 configurations, static first per
+/// granularity so speedup baselines are adjacent).
+pub fn gpu_schedule_grid(seg_len: u32) -> Vec<SimConfig> {
+    let mut out = Vec::new();
+    for gran in [
+        Granularity::Coarse,
+        Granularity::Fine,
+        Granularity::Segment { len: seg_len },
+    ] {
+        for sched in GPU_SCHEDULES {
+            out.push(SimConfig::gpu_gran(gran, sched));
+        }
     }
+    out
 }
 
 /// Simulated timing of one full K-truss run under one configuration.
 #[derive(Clone, Debug)]
 pub struct SimResult {
+    /// The configuration's label.
     pub label: String,
     /// Total wall time (all iterations, support + prune kernels).
     pub seconds: f64,
@@ -87,6 +128,7 @@ pub struct SimResult {
 }
 
 impl SimResult {
+    /// Total wall time in milliseconds.
     pub fn time_ms(&self) -> f64 {
         self.seconds * 1e3
     }
@@ -97,11 +139,12 @@ fn accumulate(configs: &[SimConfig], totals: &mut [f64], o: &IterObservation) {
     for (cfg, acc) in configs.iter().zip(totals.iter_mut()) {
         let t = match &cfg.device {
             Device::Cpu(m) => {
-                cpu::support_pass_s(m, o.trace, o.row_ptr, cfg.mode, cfg.schedule)
+                cpu::support_pass_s(m, o.trace, o.row_ptr, cfg.gran, cfg.schedule)
                     + cpu::prune_pass_s(m, o.slots)
             }
             Device::Gpu(m) => {
-                gpu::support_kernel(m, o.trace, o.row_ptr, cfg.mode).total_s()
+                gpu::support_kernel_sched(m, o.trace, o.row_ptr, cfg.gran, cfg.schedule)
+                    .total_s()
                     + gpu::prune_kernel(m, o.slots).total_s()
             }
         };
@@ -202,6 +245,44 @@ mod tests {
         // kmax run does at least as many iterations as fixed k=3
         let k3 = simulate_ktruss(&g, 3, &table1_configs());
         assert!(res[0].iterations >= k3[0].iterations);
+    }
+
+    #[test]
+    fn gpu_schedule_grid_shapes() {
+        let g = hub_graph();
+        let cfgs = gpu_schedule_grid(64);
+        assert_eq!(cfgs.len(), 9);
+        let res = simulate_ktruss(&g, 3, &cfgs);
+        assert_eq!(res.len(), 9);
+        // per granularity (chunks of 3: static, workaware, stealing):
+        // the work-aware schedules stay within the provable sandwich of
+        // the static makespan and never blow past it
+        for chunk in res.chunks(3) {
+            let stat = chunk[0].seconds;
+            for r in &chunk[1..] {
+                assert!(r.seconds > 0.0, "{}", r.label);
+                assert!(
+                    r.seconds <= stat * 2.0 + 1e-9,
+                    "{}: {} vs static {}",
+                    r.label,
+                    r.seconds,
+                    stat
+                );
+            }
+        }
+        // finer granularity beats coarse on the hub graph at every
+        // schedule (the schedule alone cannot split the mega-row)
+        for si in 0..3 {
+            let coarse = res[si].seconds;
+            let fine = res[3 + si].seconds;
+            let seg = res[6 + si].seconds;
+            assert!(fine < coarse, "{}: fine {fine} vs coarse {coarse}", res[si].label);
+            assert!(seg < coarse, "{}: segment {seg} vs coarse {coarse}", res[si].label);
+        }
+        // labels carry the grid coordinates
+        assert!(res[0].label == "GPU-C");
+        assert!(res[4].label.contains("workaware"), "{}", res[4].label);
+        assert!(res[6].label.contains("S64"), "{}", res[6].label);
     }
 
     #[test]

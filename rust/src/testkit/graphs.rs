@@ -42,6 +42,56 @@ pub fn diamond() -> Csr {
     from_sorted_unique(4, &[(0, 1), (0, 2), (0, 3), (1, 2), (2, 3)])
 }
 
+/// Hub-and-fringe "hot row" graph: vertex 0 connects to every leaf and
+/// consecutive leaves are chained, so every edge sits in a triangle
+/// `(0, i, i+1)` while all of the merge work concentrates in row 0 —
+/// the adversarial workload for coarse-grained scheduling.
+pub fn star_with_fringe(leaves: usize) -> Csr {
+    let mut edges: Vec<(Vid, Vid)> = Vec::new();
+    for v in 1..=leaves as Vid {
+        edges.push((0, v));
+    }
+    for v in 1..leaves as Vid {
+        edges.push((v, v + 1));
+    }
+    edges.sort_unstable();
+    from_sorted_unique(leaves + 1, &edges)
+}
+
+/// Hub-divergence "comb": the adversarial workload for *static GPU
+/// scheduling at fine granularity*. `heavy` low-id rows each hold one
+/// expensive nonzero — an edge to the hub, whose ~`span`-step merge
+/// dwarfs the row's 31 trivial leaf edges — so every 32-slot warp in
+/// the low-id region carries exactly one hot lane (maximal intra-warp
+/// divergence), the hot warps are clustered at the front of the flat
+/// index space (static contiguous waves pile them onto few
+/// schedulers), and no single task is large enough for the serial tail
+/// to mask the imbalance. `filler` rows of leaf-only edges pad the warp
+/// count far past the scheduler-slot count.
+pub fn hub_divergence_comb(heavy: usize, filler: usize, span: usize) -> Csr {
+    let hub = (heavy + filler) as Vid;
+    let far = hub + span as Vid; // last vertex of the hub's range
+    let leaves: Vec<Vid> = (1..=30).map(|j| far + j).collect();
+    let mut edges: Vec<(Vid, Vid)> = Vec::new();
+    for i in 0..heavy as Vid {
+        edges.push((i, hub));
+        edges.push((i, far));
+        for &l in &leaves {
+            edges.push((i, l));
+        }
+    }
+    for f in heavy as Vid..hub {
+        for &l in &leaves {
+            edges.push((f, l));
+        }
+    }
+    for j in 1..=span as Vid {
+        edges.push((hub, hub + j));
+    }
+    edges.sort_unstable();
+    from_sorted_unique(far as usize + 31, &edges)
+}
+
 /// K5 with a pendant path — kmax 5, path trussness 2.
 pub fn clique_with_tail() -> Csr {
     let mut edges: Vec<(Vid, Vid)> = Vec::new();
@@ -61,11 +111,29 @@ mod tests {
 
     #[test]
     fn fixtures_are_valid() {
-        for g in [clique(5), path(6), diamond(), clique_with_tail()] {
+        for g in [clique(5), path(6), diamond(), clique_with_tail(), star_with_fringe(20)] {
             assert!(validate::check(&g).is_ok());
         }
         assert_eq!(clique(5).nnz(), 10);
         assert_eq!(path(6).nnz(), 5);
+        assert_eq!(star_with_fringe(20).nnz(), 20 + 19);
+    }
+
+    #[test]
+    fn comb_has_one_hot_slot_per_heavy_row() {
+        let g = hub_divergence_comb(50, 100, 200);
+        assert!(validate::check(&g).is_ok());
+        assert_eq!(g.nnz(), 50 * 32 + 100 * 30 + 200);
+        let z = crate::graph::ZCsr::from_csr(&g);
+        let mut s = Vec::new();
+        let tr = crate::cost::trace::trace_supports(&z, &mut s);
+        // the hub-edge slot of each heavy row costs ~span steps, every
+        // other slot of the row is trivial
+        for i in 0..50 {
+            let (start, _) = z.row_span(i);
+            assert_eq!(tr.fine_steps[start], 200, "row {i} hub slot");
+            assert!(tr.fine_steps[start + 1..start + 32].iter().all(|&st| st <= 1));
+        }
     }
 
     #[test]

@@ -26,6 +26,7 @@ impl Default for Config {
 }
 
 impl Config {
+    /// Default config with an explicit case count.
     pub fn cases(n: usize) -> Config {
         Config { cases: n, ..Default::default() }
     }

@@ -2,6 +2,7 @@
 //! naive reference algorithm's adjacency tests, and generator dedup.
 
 #[derive(Clone, Debug, PartialEq, Eq)]
+/// Fixed-size bitset (bit `i` of `words[i/64]`).
 pub struct BitSet {
     words: Vec<u64>,
     len: usize,
@@ -13,28 +14,33 @@ impl BitSet {
         BitSet { words: vec![0; len.div_ceil(64)], len }
     }
 
+    /// Bits the set holds.
     #[inline]
     pub fn len(&self) -> usize {
         self.len
     }
 
+    /// Whether the set holds zero bits.
     #[inline]
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }
 
+    /// Set bit `i`.
     #[inline]
     pub fn set(&mut self, i: usize) {
         debug_assert!(i < self.len);
         self.words[i >> 6] |= 1u64 << (i & 63);
     }
 
+    /// Clear bit `i`.
     #[inline]
     pub fn clear(&mut self, i: usize) {
         debug_assert!(i < self.len);
         self.words[i >> 6] &= !(1u64 << (i & 63));
     }
 
+    /// Read bit `i`.
     #[inline]
     pub fn get(&self, i: usize) -> bool {
         debug_assert!(i < self.len);

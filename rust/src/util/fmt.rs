@@ -34,10 +34,12 @@ pub struct Table {
 }
 
 impl Table {
+    /// A table with the given column headers and no rows.
     pub fn new<S: Into<String>>(header: Vec<S>) -> Table {
         Table { header: header.into_iter().map(Into::into).collect(), rows: Vec::new() }
     }
 
+    /// Append one row (must match the header width).
     pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) -> &mut Self {
         let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
         assert_eq!(cells.len(), self.header.len(), "row width mismatch");
@@ -45,6 +47,7 @@ impl Table {
         self
     }
 
+    /// Rows appended so far.
     pub fn n_rows(&self) -> usize {
         self.rows.len()
     }

@@ -65,17 +65,26 @@ pub fn cv(xs: &[f64]) -> Option<f64> {
 /// Summary of a sample of task sizes / timings.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Summary {
+    /// Sample size.
     pub n: usize,
+    /// Smallest sample.
     pub min: f64,
+    /// Largest sample.
     pub max: f64,
+    /// Arithmetic mean.
     pub mean: f64,
+    /// Population standard deviation.
     pub stddev: f64,
+    /// Median.
     pub p50: f64,
+    /// 95th percentile.
     pub p95: f64,
+    /// 99th percentile.
     pub p99: f64,
 }
 
 impl Summary {
+    /// Summarize a sample (`None` when empty).
     pub fn of(xs: &[f64]) -> Option<Summary> {
         if xs.is_empty() {
             return None;

@@ -10,18 +10,22 @@ pub struct Timer {
 }
 
 impl Timer {
+    /// Start the stopwatch now.
     pub fn start() -> Timer {
         Timer { start: Instant::now() }
     }
 
+    /// Time since start.
     pub fn elapsed(&self) -> Duration {
         self.start.elapsed()
     }
 
+    /// Time since start, in milliseconds.
     pub fn elapsed_ms(&self) -> f64 {
         self.elapsed().as_secs_f64() * 1e3
     }
 
+    /// Read the elapsed time and restart the stopwatch.
     pub fn restart(&mut self) -> Duration {
         let e = self.elapsed();
         self.start = Instant::now();

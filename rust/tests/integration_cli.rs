@@ -19,8 +19,11 @@ fn ktruss(args: &[&str]) -> (String, String, bool) {
 fn help_lists_commands() {
     let (stdout, _, ok) = ktruss(&["help"]);
     assert!(ok);
-    for cmd in ["run", "kmax", "decompose", "generate", "suite", "bench", "serve"] {
+    for cmd in ["run", "kmax", "decompose", "generate", "suite", "bench", "serve", "sim"] {
         assert!(stdout.contains(cmd), "help missing {cmd}");
+    }
+    for flag in ["--granularity", "--gpu-schedule", "gpu-sched"] {
+        assert!(stdout.contains(flag), "help missing {flag}");
     }
 }
 
@@ -103,6 +106,112 @@ fn run_accepts_every_schedule() {
         assert!(ok, "--schedule {sched}: {stderr}");
         assert!(stdout.contains("3-truss:"), "--schedule {sched}: {stdout}");
     }
+}
+
+#[test]
+fn run_accepts_every_granularity() {
+    let mut edge_lines: Vec<String> = Vec::new();
+    for gran in ["coarse", "fine", "segment", "segment:16"] {
+        let (stdout, stderr, ok) = ktruss(&[
+            "run",
+            "--graph",
+            "as20000102",
+            "--k",
+            "3",
+            "--scale",
+            "0.05",
+            "--par",
+            "2",
+            "--granularity",
+            gran,
+        ]);
+        assert!(ok, "--granularity {gran}: {stderr}");
+        assert!(stdout.contains("3-truss:"), "--granularity {gran}: {stdout}");
+        let line = stdout
+            .lines()
+            .find(|l| l.contains("3-truss:"))
+            .unwrap()
+            .split(',')
+            .next()
+            .unwrap()
+            .to_string();
+        edge_lines.push(line);
+    }
+    // every granularity must report the identical surviving edge count
+    assert!(
+        edge_lines.windows(2).all(|w| w[0] == w[1]),
+        "granularities disagree: {edge_lines:?}"
+    );
+    // segment runs announce the segmented engine
+    let (stdout, stderr, ok) = ktruss(&[
+        "run", "--graph", "ca-GrQc", "--scale", "0.05", "--granularity", "segment:32",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("segment:32"), "stdout: {stdout}");
+}
+
+#[test]
+fn run_rejects_bad_granularity_combinations() {
+    let (_, stderr, ok) = ktruss(&[
+        "run", "--graph", "ca-GrQc", "--scale", "0.05", "--granularity", "bogus",
+    ]);
+    assert!(!ok);
+    assert!(stderr.contains("granularity"), "stderr: {stderr}");
+    let (_, stderr, ok) = ktruss(&[
+        "run", "--graph", "ca-GrQc", "--scale", "0.05", "--granularity", "segment", "--shards",
+        "2",
+    ]);
+    assert!(!ok);
+    assert!(stderr.contains("shards"), "stderr: {stderr}");
+}
+
+#[test]
+fn sim_reports_schedule_granularity_grid() {
+    let (stdout, stderr, ok) = ktruss(&[
+        "sim",
+        "--graph",
+        "as20000102",
+        "--scale",
+        "0.05",
+        "--granularity",
+        "all",
+        "--gpu-schedule",
+        "all",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    for label in ["GPU-C", "GPU-F", "GPU-S64", "workaware", "stealing", "vs static"] {
+        assert!(stdout.contains(label), "missing {label}: {stdout}");
+    }
+}
+
+#[test]
+fn sim_single_schedule_keeps_static_baseline() {
+    let (stdout, stderr, ok) = ktruss(&[
+        "sim",
+        "--graph",
+        "as20000102",
+        "--scale",
+        "0.05",
+        "--granularity",
+        "fine",
+        "--gpu-schedule",
+        "work-aware",
+        "--cpu-threads",
+        "48",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("GPU-F"), "stdout: {stdout}");
+    assert!(stdout.contains("GPU-F-workaware"), "stdout: {stdout}");
+    assert!(stdout.contains("CPU-F-48t"), "stdout: {stdout}");
+}
+
+#[test]
+fn sim_rejects_bad_gpu_schedule() {
+    let (_, stderr, ok) = ktruss(&[
+        "sim", "--graph", "ca-GrQc", "--scale", "0.05", "--gpu-schedule", "bogus",
+    ]);
+    assert!(!ok);
+    assert!(stderr.contains("gpu-schedule"), "stderr: {stderr}");
 }
 
 #[test]

@@ -3,10 +3,12 @@
 //! correctness of the support pass over every generator family, and
 //! the scan binner's partition/balance invariants.
 
-use ktruss::algo::support::{compute_supports_seq, Mode};
+use ktruss::algo::support::{compute_supports_seq, Granularity, Mode};
 use ktruss::gen::suite;
 use ktruss::graph::ZCsr;
-use ktruss::par::{balance, compute_supports_par, Pool, Schedule, ALL_SCHEDULES};
+use ktruss::par::{
+    balance, compute_supports_gran, compute_supports_par, Pool, Schedule, ALL_SCHEDULES,
+};
 use ktruss::testkit::graphs::arbitrary_graph;
 use ktruss::testkit::{forall, Config};
 
@@ -55,6 +57,67 @@ fn prop_supports_schedule_invariant_on_every_suite_family() {
             for sched in ALL_SCHEDULES {
                 let got = compute_supports_par(&z, &pool, mode, sched);
                 assert_eq!(got, want, "{name} {mode} {sched:?}");
+            }
+        }
+    }
+}
+
+/// The ultra-fine segment split must reproduce the sequential supports
+/// exactly — per slot, hence also per row — for arbitrary segment
+/// lengths, on arbitrary random graphs from every `testkit` family.
+#[test]
+fn prop_segmented_supports_match_row_level_supports() {
+    forall(Config::cases(15), arbitrary_graph, |g| {
+        let z = ZCsr::from_csr(g);
+        let mut want = Vec::new();
+        compute_supports_seq(&z, &mut want);
+        let pool = Pool::new(4);
+        for len in [1u32, 3, 32] {
+            for sched in [Schedule::Static, Schedule::WorkAware, Schedule::Stealing] {
+                let got =
+                    compute_supports_gran(&z, &pool, Granularity::Segment { len }, sched);
+                if got != want {
+                    return Err(format!("len={len} {sched:?}: segmented supports diverge"));
+                }
+                // row-level aggregation agrees too (implied by the
+                // per-slot equality, asserted for the paper's row sums)
+                for i in 0..z.n() {
+                    let (lo, hi) = z.row_span(i);
+                    let a: u64 = got[lo..hi].iter().map(|&x| x as u64).sum();
+                    let b: u64 = want[lo..hi].iter().map(|&x| x as u64).sum();
+                    if a != b {
+                        return Err(format!("len={len} {sched:?}: row {i} support sum"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Segment-split supports over every *suite generator family*
+/// (collab, p2p, autonomous-system, social, co-purchase, road).
+#[test]
+fn prop_segmented_supports_on_every_suite_family() {
+    let representatives = [
+        "ca-GrQc",        // Collab
+        "p2p-Gnutella08", // P2p
+        "as20000102",     // AutonomousSystem
+        "email-Enron",    // Social
+        "amazon0302",     // Copurchase
+        "roadNet-PA",     // Road
+    ];
+    let pool = Pool::new(4);
+    for name in representatives {
+        let spec = suite::by_name(name).unwrap();
+        let g = suite::generate(spec, 0.03);
+        let z = ZCsr::from_csr(&g);
+        let mut want = Vec::new();
+        compute_supports_seq(&z, &mut want);
+        for len in [2u32, 64] {
+            for sched in [Schedule::WorkAware, Schedule::Stealing] {
+                let got = compute_supports_gran(&z, &pool, Granularity::Segment { len }, sched);
+                assert_eq!(got, want, "{name} len={len} {sched:?}");
             }
         }
     }
