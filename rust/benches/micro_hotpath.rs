@@ -5,12 +5,20 @@
 //! * support kernel via the worker pool (1/2/4 threads)
 //! * prune pass
 //! * full K=3 and K_max runs on a mid-size replica
+//! * a cascade-heavy workload comparing the incremental frontier driver
+//!   against full recompute (exact merge-step totals — the CI smoke
+//!   asserts the reduction and this bench panics if it regresses)
+//!
+//! Pass `cascade` as the first bench argument
+//! (`cargo bench --bench micro_hotpath -- cascade`) to run only the
+//! cascade comparison (what CI does).
 //!
 //! The §Perf log in EXPERIMENTS.md tracks these numbers across
 //! optimization iterations.
 
+use ktruss::algo::incremental::SupportMode;
 use ktruss::algo::kmax;
-use ktruss::algo::ktruss::ktruss as run_ktruss;
+use ktruss::algo::ktruss::{ktruss as run_ktruss, ktruss_mode};
 use ktruss::algo::support::{compute_supports_seq, Mode};
 use ktruss::bench_harness::report;
 use ktruss::cost::trace::trace_supports;
@@ -20,7 +28,70 @@ use ktruss::util::stats::mean;
 use ktruss::util::timer::bench_ms;
 use ktruss::util::Rng;
 
+/// Cascade-heavy workload: the deterministic serial peel chain (one or
+/// two frontier edges per round for ~d/2 rounds — the worst case for
+/// full recompute) plus a skewed AS-topology RMAT for a realistic mix.
+/// Reports exact merge-step totals per support mode and **panics**
+/// unless, on the peel chain, the incremental driver converges in ≥ 4
+/// iterations, produces the identical truss, and does ≥ 3x fewer total
+/// merge-steps than full recompute with auto never exceeding full —
+/// the invariants the CI smoke step enforces.
+fn cascade_section() -> String {
+    let mut body = String::new();
+    let chain = ktruss::testkit::graphs::peel_chain(48);
+    let rmat = ktruss::gen::rmat::rmat(
+        6000,
+        45_000,
+        ktruss::gen::rmat::RmatParams::autonomous_system(),
+        &mut Rng::new(0xCA5C),
+    );
+    for (name, g, k, enforce) in
+        [("peel-chain", &chain, 4u32, true), ("rmat-as", &rmat, 5u32, false)]
+    {
+        let full = ktruss_mode(g, k, Mode::Fine, SupportMode::Full);
+        let inc = ktruss_mode(g, k, Mode::Fine, SupportMode::Incremental);
+        let auto = ktruss_mode(g, k, Mode::Fine, SupportMode::Auto);
+        assert_eq!(full.truss, inc.truss, "{name}: trusses must be identical");
+        assert_eq!(full.truss, auto.truss, "{name}: trusses must be identical");
+        let (fs, is, as_) = (
+            full.total_support_steps(),
+            inc.total_support_steps(),
+            auto.total_support_steps(),
+        );
+        let reduction = fs as f64 / is.max(1) as f64;
+        body.push_str(&format!(
+            "cascade[{name}] k={k}: iterations={} full_steps={fs} incremental_steps={is} \
+             auto_steps={as_} reduction={reduction:.2}x\n",
+            full.iterations,
+        ));
+        if enforce {
+            assert!(
+                full.iterations >= 4,
+                "{name}: cascade workload must take >= 4 iterations, got {}",
+                full.iterations
+            );
+            assert!(
+                reduction >= 3.0,
+                "{name}: incremental must reduce merge-steps >= 3x, got {reduction:.2}x"
+            );
+            assert!(
+                as_ <= fs,
+                "{name}: auto must never exceed full recompute ({as_} vs {fs})"
+            );
+        }
+    }
+    body.push_str("cascade-ok\n");
+    body
+}
+
 fn main() {
+    let cascade_only = std::env::args().any(|a| a == "cascade");
+    if cascade_only {
+        let body = cascade_section();
+        print!("{body}");
+        report::emit("micro_cascade.txt", &body).expect("save report");
+        return;
+    }
     let mut body = String::new();
     let g = ktruss::gen::rmat::rmat(
         20_000,
@@ -92,6 +163,10 @@ fn main() {
     body.push_str(&format!("ktruss_k3:          {:8.3} ms\n", mean(&times).unwrap()));
     let times = bench_ms(0, 1, || kmax::kmax(&g));
     body.push_str(&format!("kmax_full:          {:8.3} ms\n", mean(&times).unwrap()));
+
+    // 5. cascade workload: incremental vs full merge-step totals
+    body.push('\n');
+    body.push_str(&cascade_section());
 
     report::emit("micro_hotpath.txt", &body).expect("save report");
 }

@@ -3,7 +3,8 @@
 //! query; the coordinator exposes it as a job type and the examples use
 //! it to report community structure.
 
-use super::ktruss::run_to_convergence;
+use super::incremental::SupportMode;
+use super::ktruss::run_to_convergence_mode;
 use crate::graph::{Csr, Vid, ZCsr};
 use std::collections::HashMap;
 
@@ -55,8 +56,12 @@ pub fn decompose(g: &Csr) -> Decomposition {
     let mut prev_edges: Vec<(Vid, Vid)> = g.edges().collect();
     let mut kmax = 2u32;
     let mut k = 3u32;
+    let mut warm = false;
     loop {
-        run_to_convergence(&mut z, &mut s, k);
+        // warm re-entry: each k-level reuses the supports the previous
+        // level's convergence left behind (see `algo::kmax`)
+        run_to_convergence_mode(&mut z, &mut s, k, SupportMode::Auto, warm);
+        warm = true;
         let cur = z.to_csr();
         let cur_edges: std::collections::HashSet<(Vid, Vid)> = cur.edges().collect();
         // edges alive at k-1 but not at k have trussness k-1

@@ -1,0 +1,802 @@
+//! Incremental, frontier-driven support maintenance — the PKT idea
+//! (Kabir & Madduri, *Shared-memory Graph Truss Decomposition*) applied
+//! to the Eager K-truss convergence loop.
+//!
+//! The full driver recomputes `S = AᵀA ∘ A` over every live edge each
+//! iteration, so a cascade that prunes 1% of the edges per round still
+//! pays 100% of the merge work per round. This module replaces the
+//! recompute with an exact *update*: when a batch `D` of edges dies,
+//! every triangle of the pre-prune graph that contains a dying edge is
+//! destroyed, and each **surviving** edge of such a triangle loses
+//! exactly one support. After the update, `S` equals what a full
+//! recompute on the pruned graph would produce — slot for slot.
+//!
+//! ## Triangle enumeration over the zero-terminated CSR
+//!
+//! A triangle `(a, b, c)` with `a < b < c` occupies three slots of the
+//! upper-triangular working form: `p_ab` (edge `a–b`, in row `a`),
+//! `p_ac` (edge `a–c`, in row `a`, after `p_ab`), and `p_bc` (edge
+//! `b–c`, in row `b`). The flat slot order is therefore always
+//! `p_ab < p_ac < p_bc`. A dying edge can sit in any of the three
+//! positions, and each position has its own enumeration:
+//!
+//! * **ab** — the dying edge spans the two smallest endpoints: the
+//!   standard eager merge of row `a`'s live tail after `p_ab` against
+//!   row `b` finds every `c` (exactly the forward intersection the full
+//!   kernel runs).
+//! * **ac** — the dying edge spans the smallest and largest endpoint:
+//!   `b` ranges over row `a`'s live entries *before* `p_ac`; each
+//!   candidate is confirmed by a binary search for `c` in row `b`.
+//! * **bc** — the dying edge spans the two largest endpoints: `a` ranges
+//!   over the in-neighbors of `b` (or of `c`, whichever list is
+//!   shorter), confirmed by binary searches for `b` and `c` in row `a`.
+//!   In-neighbors come from a one-time [`InNbrs`] index built from the
+//!   graph at loop entry; stale entries (edges pruned since) simply
+//!   fail the search and are skipped.
+//!
+//! ## Exactly-once attribution
+//!
+//! A destroyed triangle may contain one, two or three dying edges; its
+//! surviving legs must be decremented exactly once. The triangle is
+//! *attributed* to its lowest-slot dying edge: the `ab` enumeration
+//! always claims the triangle when `p_ab` dies; the `ac` enumeration
+//! skips candidates whose `ab` slot is dying; the `bc` enumeration
+//! skips candidates whose `ab` or `ac` slot is dying. Dying legs are
+//! never decremented (their slots are compacted away immediately
+//! after). Dying status is a snapshot taken before any decrement, so
+//! a survivor whose support drops below the threshold mid-update is
+//! still treated as a survivor this round — it dies *next* round,
+//! exactly as in the full driver.
+//!
+//! ## Cost accounting
+//!
+//! Every kernel returns exact step counts (merge compares + binary
+//! search probes + candidate scans), so `IterationStat.support_steps`,
+//! the replay tracer and the simulators stay truthful, and
+//! [`frontier_costs`] produces per-task upper bounds the work-aware
+//! binner and the [`crossover`] heuristic consume.
+
+use crate::graph::zeroterm::ZCsr;
+use crate::graph::Vid;
+use std::sync::atomic::{AtomicU32, Ordering};
+
+/// How the convergence loop maintains the support array across
+/// iterations.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SupportMode {
+    /// Recompute `S = AᵀA ∘ A` from scratch every iteration (the
+    /// original Eager K-truss loop).
+    Full,
+    /// After the first full pass, update `S` by decrementing only the
+    /// triangles destroyed by each iteration's pruned-edge frontier.
+    Incremental,
+    /// Per-iteration choice: run the frontier update when its estimated
+    /// work is below [`DEFAULT_CROSSOVER_FRAC`] of the full-pass
+    /// estimate, fall back to the full recompute otherwise.
+    Auto,
+}
+
+impl SupportMode {
+    /// Whether this mode ever runs the frontier update (and therefore
+    /// needs the [`InNbrs`] index).
+    pub fn allows_incremental(self) -> bool {
+        !matches!(self, SupportMode::Full)
+    }
+}
+
+impl std::fmt::Display for SupportMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SupportMode::Full => write!(f, "full"),
+            SupportMode::Incremental => write!(f, "incremental"),
+            SupportMode::Auto => write!(f, "auto"),
+        }
+    }
+}
+
+impl std::str::FromStr for SupportMode {
+    type Err = String;
+
+    /// Parse `full`, `incremental` (or `inc`), `auto` — the CLI
+    /// `--support-mode` grammar.
+    fn from_str(s: &str) -> Result<SupportMode, String> {
+        match s {
+            "full" => Ok(SupportMode::Full),
+            "incremental" | "inc" => Ok(SupportMode::Incremental),
+            "auto" => Ok(SupportMode::Auto),
+            other => Err(format!(
+                "unknown support mode {other:?} (expected full|incremental|auto)"
+            )),
+        }
+    }
+}
+
+/// Crossover fraction of [`SupportMode::Auto`]: the frontier update
+/// runs only when its estimated work is at most this fraction of the
+/// full-pass proxy (conservative, because both sides are upper bounds
+/// with different slack).
+pub const DEFAULT_CROSSOVER_FRAC: f64 = 0.5;
+
+/// In-neighbor index over the upper-triangular working form: for every
+/// vertex `v`, the rows `a < v` whose row contained `v` **at build
+/// time**, ascending. The graph only shrinks under pruning, so the
+/// lists are a superset of the live in-neighbors forever; consumers
+/// re-validate each entry with a binary search on the current row (a
+/// pruned edge fails the search and is skipped).
+#[derive(Clone, Debug)]
+pub struct InNbrs {
+    /// `offsets[v]..offsets[v+1]` spans `src` for vertex `v`.
+    offsets: Vec<u32>,
+    /// Concatenated in-neighbor lists (row indices), ascending per
+    /// vertex.
+    src: Vec<Vid>,
+}
+
+impl InNbrs {
+    /// Build the index from the current live entries of `z` (one
+    /// `O(nnz)` scan).
+    pub fn build(z: &ZCsr) -> InNbrs {
+        let n = z.n();
+        let mut offsets = vec![0u32; n + 1];
+        for i in 0..n {
+            for &v in z.row_live(i) {
+                offsets[v as usize + 1] += 1;
+            }
+        }
+        for v in 0..n {
+            offsets[v + 1] += offsets[v];
+        }
+        let mut cursor: Vec<u32> = offsets[..n].to_vec();
+        let mut src = vec![0 as Vid; offsets[n] as usize];
+        for i in 0..n {
+            for &v in z.row_live(i) {
+                let c = &mut cursor[v as usize];
+                src[*c as usize] = i as Vid;
+                *c += 1;
+            }
+        }
+        InNbrs { offsets, src }
+    }
+
+    /// The (possibly stale) in-neighbor list of `v`, ascending.
+    #[inline]
+    pub fn of(&self, v: usize) -> &[Vid] {
+        &self.src[self.offsets[v] as usize..self.offsets[v + 1] as usize]
+    }
+
+    /// List length for `v` (for cost estimates).
+    #[inline]
+    pub fn len_of(&self, v: usize) -> usize {
+        (self.offsets[v + 1] - self.offsets[v]) as usize
+    }
+}
+
+/// One frontier task: a dying edge, identified by its row and flat slot.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FrontierTask {
+    /// Row (smaller endpoint) of the dying edge.
+    pub row: u32,
+    /// Flat slot index of the dying edge.
+    pub p: u32,
+}
+
+/// The pruned-edge frontier of one iteration, plus the snapshots the
+/// update kernels need.
+#[derive(Clone, Debug)]
+pub struct Frontier {
+    /// One task per dying edge, in ascending slot order.
+    pub tasks: Vec<FrontierTask>,
+    /// Per-slot dying snapshot (`true` ⇒ the slot is pruned this
+    /// round). Length == `z.slots()`.
+    pub dying: Vec<bool>,
+    /// Live entries per row of the *pre-prune* graph (dying edges
+    /// included) — the bounds every enumeration walks.
+    pub live: Vec<u32>,
+}
+
+impl Frontier {
+    /// Number of dying edges.
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    /// Whether the iteration converged (nothing to prune).
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+}
+
+/// Scan the support array and collect the dying frontier at threshold
+/// `k - 2`: every live slot whose support is below it. Reads supports
+/// through `get` so both the plain and the atomic drivers share the
+/// scan.
+pub fn mark_frontier_with(z: &ZCsr, k: u32, get: impl Fn(usize) -> u32) -> Frontier {
+    let threshold = k.saturating_sub(2);
+    let col = z.col();
+    let n = z.n();
+    let mut tasks = Vec::new();
+    let mut dying = vec![false; z.slots()];
+    let mut live = vec![0u32; n];
+    for i in 0..n {
+        let (start, end) = z.row_span(i);
+        for p in start..end {
+            if col[p] == 0 {
+                break;
+            }
+            live[i] += 1;
+            if get(p) < threshold {
+                dying[p] = true;
+                tasks.push(FrontierTask { row: i as u32, p: p as u32 });
+            }
+        }
+    }
+    Frontier { tasks, dying, live }
+}
+
+/// [`mark_frontier_with`] over a plain support array.
+pub fn mark_frontier(z: &ZCsr, s: &[u32], k: u32) -> Frontier {
+    debug_assert_eq!(s.len(), z.slots());
+    mark_frontier_with(z, k, |p| s[p])
+}
+
+/// Binary search `v` in the live region of `row` (`len` live entries),
+/// counting probes into `steps`. Returns the flat slot on a hit.
+#[inline]
+fn find_slot(
+    col: &[Vid],
+    start: usize,
+    len: usize,
+    v: Vid,
+    steps: &mut u64,
+) -> Option<usize> {
+    let mut lo = 0usize;
+    let mut hi = len;
+    while lo < hi {
+        let mid = (lo + hi) / 2;
+        *steps += 1;
+        match col[start + mid].cmp(&v) {
+            std::cmp::Ordering::Less => lo = mid + 1,
+            std::cmp::Ordering::Greater => hi = mid,
+            std::cmp::Ordering::Equal => return Some(start + mid),
+        }
+    }
+    None
+}
+
+/// Apply one frontier task against a plain support array: enumerate
+/// every destroyed triangle attributed to this dying edge and decrement
+/// its surviving legs. Returns exact steps (merge compares + search
+/// probes + candidate scans).
+pub fn frontier_task_seq(
+    z: &ZCsr,
+    s: &mut [u32],
+    f: &Frontier,
+    in_nbrs: &InNbrs,
+    t: FrontierTask,
+) -> u64 {
+    let mut steps = 0u64;
+    frontier_task_impl(
+        z,
+        f,
+        in_nbrs,
+        t,
+        &mut steps,
+        |slot| {
+            debug_assert!(s[slot] > 0, "support underflow at slot {slot}");
+            s[slot] -= 1;
+        },
+    );
+    steps
+}
+
+/// Atomic variant of [`frontier_task_seq`] for the worker pool:
+/// concurrent frontier tasks may decrement the same surviving slot, so
+/// every bump is a relaxed `fetch_sub` (decrements are commutative and
+/// `S` is read only after the pass, exactly as in the full kernel).
+pub fn frontier_task_atomic(
+    z: &ZCsr,
+    s: &[AtomicU32],
+    f: &Frontier,
+    in_nbrs: &InNbrs,
+    t: FrontierTask,
+) -> u64 {
+    let mut steps = 0u64;
+    frontier_task_impl(z, f, in_nbrs, t, &mut steps, |slot| {
+        s[slot].fetch_sub(1, Ordering::Relaxed);
+    });
+    steps
+}
+
+/// Shared enumeration body: `dec(slot)` performs one support decrement.
+#[inline]
+fn frontier_task_impl(
+    z: &ZCsr,
+    f: &Frontier,
+    in_nbrs: &InNbrs,
+    t: FrontierTask,
+    steps: &mut u64,
+    mut dec: impl FnMut(usize),
+) {
+    let col = z.col();
+    let dying = &f.dying[..];
+    let live = &f.live[..];
+    let u = t.row as usize;
+    let p = t.p as usize;
+    let v = col[p] as usize;
+    debug_assert!(v != 0, "frontier task on a dead slot");
+    let (u_start, _) = z.row_span(u);
+    let u_end = u_start + live[u] as usize;
+    let (v_start, _) = z.row_span(v);
+    let v_end = v_start + live[v] as usize;
+
+    // position ab: merge the live tail after p with row v — every match
+    // w closes triangle (u, v, w), always attributed here
+    let mut q = p + 1;
+    let mut r = v_start;
+    while q < u_end && r < v_end {
+        *steps += 1;
+        match col[q].cmp(&col[r]) {
+            std::cmp::Ordering::Less => q += 1,
+            std::cmp::Ordering::Greater => r += 1,
+            std::cmp::Ordering::Equal => {
+                if !dying[q] {
+                    dec(q);
+                }
+                if !dying[r] {
+                    dec(r);
+                }
+                q += 1;
+                r += 1;
+            }
+        }
+    }
+
+    // position ac: b ranges over row u's live prefix before p; the
+    // triangle (u, b, v) is attributed here unless its ab slot dies too
+    for pb in u_start..p {
+        *steps += 1;
+        if dying[pb] {
+            continue; // lower-slot dying edge claims the triangle
+        }
+        let b = col[pb] as usize;
+        let (b_start, _) = z.row_span(b);
+        if let Some(r) = find_slot(col, b_start, live[b] as usize, v as Vid, steps) {
+            dec(pb); // ab leg, known surviving
+            if !dying[r] {
+                dec(r);
+            }
+        }
+    }
+
+    // position bc: a ranges over the shorter in-neighbor list of u or v
+    // (entries are stale-tolerant; both legs are re-validated on the
+    // current rows); attributed here only when both other legs survive
+    let iu = in_nbrs.of(u);
+    let iv = in_nbrs.of(v);
+    // candidates must satisfy a < u; iv is ascending, so cut it there
+    let iv_cut = iv.partition_point(|&a| (a as usize) < u);
+    if iu.len() <= iv_cut {
+        for &a in iu {
+            *steps += 1;
+            let a = a as usize;
+            let (a_start, _) = z.row_span(a);
+            let Some(pa) = find_slot(col, a_start, live[a] as usize, u as Vid, steps) else {
+                continue; // edge (a, u) pruned in an earlier round
+            };
+            if dying[pa] {
+                continue;
+            }
+            let Some(pav) = find_slot(col, a_start, live[a] as usize, v as Vid, steps) else {
+                continue;
+            };
+            if dying[pav] {
+                continue;
+            }
+            dec(pa);
+            dec(pav);
+        }
+    } else {
+        for &a in &iv[..iv_cut] {
+            *steps += 1;
+            let a = a as usize;
+            let (a_start, _) = z.row_span(a);
+            let Some(pav) = find_slot(col, a_start, live[a] as usize, v as Vid, steps) else {
+                continue;
+            };
+            let Some(pa) = find_slot(col, a_start, live[a] as usize, u as Vid, steps) else {
+                continue;
+            };
+            if dying[pa] || dying[pav] {
+                continue;
+            }
+            dec(pa);
+            dec(pav);
+        }
+    }
+}
+
+/// Run the whole frontier update sequentially. Returns total steps.
+pub fn decrement_frontier_seq(
+    z: &ZCsr,
+    s: &mut [u32],
+    f: &Frontier,
+    in_nbrs: &InNbrs,
+) -> u64 {
+    let mut total = 0u64;
+    for &t in &f.tasks {
+        total += frontier_task_seq(z, s, f, in_nbrs, t);
+    }
+    total
+}
+
+/// [`decrement_frontier_seq`] that also records each task's exact step
+/// count (for the replay tracer and the simulators). Returns
+/// `(total, per_task_steps)`.
+pub fn decrement_frontier_traced(
+    z: &ZCsr,
+    s: &mut [u32],
+    f: &Frontier,
+    in_nbrs: &InNbrs,
+) -> (u64, Vec<u32>) {
+    let mut total = 0u64;
+    let mut per_task = Vec::with_capacity(f.tasks.len());
+    for &t in &f.tasks {
+        let st = frontier_task_seq(z, s, f, in_nbrs, t);
+        per_task.push(st.min(u32::MAX as u64) as u32);
+        total += st;
+    }
+    (total, per_task)
+}
+
+/// Compact every row by dropping the dying slots, moving each
+/// survivor's **support along with its column** (the whole point of the
+/// incremental pass: supports are maintained, not reset). Dead tails
+/// are zero-filled in both arrays. Returns the prune outcome.
+pub fn compact_preserving(
+    z: &mut ZCsr,
+    s: &mut [u32],
+    dying: &[bool],
+) -> crate::algo::prune::PruneOutcome {
+    assert_eq!(s.len(), z.slots());
+    assert_eq!(dying.len(), z.slots());
+    let mut removed = 0usize;
+    let mut remaining = 0usize;
+    for i in 0..z.n() {
+        let (start, end) = z.row_span(i);
+        let col = z.col_mut();
+        let mut write = start;
+        for p in start..end {
+            let c = col[p];
+            if c == 0 {
+                break;
+            }
+            if dying[p] {
+                removed += 1;
+            } else {
+                col[write] = c;
+                s[write] = s[p];
+                write += 1;
+            }
+        }
+        remaining += write - start;
+        for slot in col.iter_mut().take(end).skip(write) {
+            *slot = 0;
+        }
+        for sp in s.iter_mut().take(end).skip(write) {
+            *sp = 0;
+        }
+    }
+    crate::algo::prune::PruneOutcome { removed, remaining }
+}
+
+/// Per-task upper bounds on the frontier update's steps, in the same
+/// units the kernels count: merge compares (tail + partner), prefix
+/// candidates with one bounded binary search each, and in-neighbor
+/// candidates with two. Feeds the work-aware binner and, summed, the
+/// [`crossover`] heuristic.
+pub fn frontier_costs(z: &ZCsr, f: &Frontier, in_nbrs: &InNbrs) -> Vec<u64> {
+    let col = z.col();
+    // probe bound: a binary search over ≤ lmax entries probes at most
+    // floor(log2(lmax)) + 1 times
+    let lmax = f.live.iter().copied().max().unwrap_or(0);
+    let probe = (u32::BITS - lmax.leading_zeros()) as u64 + 1;
+    f.tasks
+        .iter()
+        .map(|t| {
+            let u = t.row as usize;
+            let p = t.p as usize;
+            let v = col[p] as usize;
+            let (u_start, _) = z.row_span(u);
+            let tail = (u_start + f.live[u] as usize - (p + 1)) as u64;
+            let partner = f.live[v] as u64;
+            let prefix = (p - u_start) as u64;
+            let cand = in_nbrs.len_of(u).min(in_nbrs.len_of(v)) as u64;
+            1 + tail + partner + prefix * (1 + probe) + cand * (1 + 2 * probe)
+        })
+        .collect()
+}
+
+/// Upper bound on one full support pass over the current working form
+/// (the same static bound the work-aware binner uses, summed).
+pub fn full_pass_estimate(z: &ZCsr) -> u64 {
+    crate::par::balance::estimate_costs(z, crate::algo::support::Mode::Fine)
+        .iter()
+        .sum()
+}
+
+/// The auto-mode crossover: run the frontier update when its estimated
+/// work is at most `frac` of the full-pass proxy. The proxy is the
+/// smaller of the static full-pass bound on the *current* (pre-compact)
+/// form and the measured steps of the most recent full pass — both
+/// upper-bound what a recompute would cost, with different slack.
+pub fn crossover(frontier_est: u64, full_est: u64, last_full_steps: u64, frac: f64) -> bool {
+    let proxy = full_est.min(last_full_steps).max(1);
+    (frontier_est as f64) <= frac * proxy as f64
+}
+
+/// The per-round driver decision, shared by **every** convergence loop
+/// (sequential, pooled coarse/fine, pooled segment, and the replay
+/// tracer — one implementation, so the simulators' replay can never
+/// desynchronize from the decisions production makes): should this
+/// round's support update run incrementally? When the [`SupportMode::Auto`]
+/// check computed the per-task frontier estimates, they are handed back
+/// so the frontier pass's work-aware binner can reuse them.
+pub fn decide_incremental(
+    z: &ZCsr,
+    f: &Frontier,
+    in_nbrs: Option<&InNbrs>,
+    support: SupportMode,
+    last_full_steps: u64,
+) -> (bool, Option<Vec<u64>>) {
+    match support {
+        SupportMode::Full => (false, None),
+        SupportMode::Incremental => (true, None),
+        SupportMode::Auto => {
+            let nbrs = in_nbrs.expect("auto mode builds the index");
+            let fc = frontier_costs(z, f, nbrs);
+            let est: u64 = fc.iter().sum();
+            let go = crossover(
+                est,
+                full_pass_estimate(z),
+                last_full_steps,
+                DEFAULT_CROSSOVER_FRAC,
+            );
+            (go, Some(fc))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::support::compute_supports_seq;
+    use crate::graph::builder::from_sorted_unique;
+    use crate::graph::Csr;
+
+    fn working(g: &Csr) -> (ZCsr, Vec<u32>) {
+        let z = ZCsr::from_csr(g);
+        let mut s = Vec::new();
+        compute_supports_seq(&z, &mut s);
+        (z, s)
+    }
+
+    /// Reference: prune with `prune()` (zeroing) and recompute fully.
+    fn full_reference(z: &ZCsr, s: &[u32], k: u32) -> (ZCsr, Vec<u32>) {
+        let mut z2 = z.clone();
+        let mut s2 = s.to_vec();
+        crate::algo::prune::prune(&mut z2, &mut s2, k);
+        compute_supports_seq(&z2, &mut s2);
+        (z2, s2)
+    }
+
+    /// Incremental: mark, decrement, compact-preserving.
+    fn incremental_round(z: &ZCsr, s: &[u32], k: u32) -> (ZCsr, Vec<u32>, usize) {
+        let mut z2 = z.clone();
+        let mut s2 = s.to_vec();
+        let in_nbrs = InNbrs::build(&z2);
+        let f = mark_frontier(&z2, &s2, k);
+        decrement_frontier_seq(&z2, &mut s2, &f, &in_nbrs);
+        compact_preserving(&mut z2, &mut s2, &f.dying);
+        (z2, s2, f.len())
+    }
+
+    #[test]
+    fn support_mode_roundtrips_through_fromstr() {
+        for m in [SupportMode::Full, SupportMode::Incremental, SupportMode::Auto] {
+            let s = m.to_string();
+            let back: SupportMode = s.parse().unwrap_or_else(|e| panic!("{s}: {e}"));
+            assert_eq!(back, m, "{s}");
+        }
+        assert_eq!("inc".parse::<SupportMode>().unwrap(), SupportMode::Incremental);
+        assert!("nope".parse::<SupportMode>().is_err());
+        assert!(SupportMode::Auto.allows_incremental());
+        assert!(!SupportMode::Full.allows_incremental());
+    }
+
+    #[test]
+    fn in_nbrs_index_matches_columns() {
+        let g = from_sorted_unique(4, &[(0, 1), (0, 2), (0, 3), (1, 2), (2, 3)]);
+        let z = ZCsr::from_csr(&g);
+        let idx = InNbrs::build(&z);
+        assert_eq!(idx.of(0), &[] as &[Vid]);
+        assert_eq!(idx.of(1), &[0]);
+        assert_eq!(idx.of(2), &[0, 1]);
+        assert_eq!(idx.of(3), &[0, 2]);
+        assert_eq!(idx.len_of(2), 2);
+    }
+
+    #[test]
+    fn mark_frontier_finds_sub_threshold_slots() {
+        // diamond + pendant (3,4): pendant has support 0
+        let g = from_sorted_unique(5, &[(0, 1), (0, 2), (0, 3), (1, 2), (2, 3), (3, 4)]);
+        let (z, s) = working(&g);
+        let f = mark_frontier(&z, &s, 3); // threshold 1
+        assert_eq!(f.len(), 1);
+        let t = f.tasks[0];
+        assert_eq!(t.row, 3);
+        assert_eq!(z.col()[t.p as usize], 4);
+        assert!(f.dying[t.p as usize]);
+        // pre-prune live counts include the dying edge
+        assert_eq!(f.live[3], 2);
+    }
+
+    #[test]
+    fn one_round_matches_full_recompute_on_fixtures() {
+        let fixtures: Vec<Csr> = vec![
+            from_sorted_unique(5, &[(0, 1), (0, 2), (0, 3), (1, 2), (2, 3), (3, 4)]),
+            crate::testkit::graphs::clique_with_tail(),
+            crate::testkit::graphs::star_with_fringe(40),
+            crate::gen::rmat::rmat(
+                200,
+                1500,
+                crate::gen::rmat::RmatParams::autonomous_system(),
+                &mut crate::util::Rng::new(7),
+            ),
+        ];
+        for g in &fixtures {
+            let (z, s) = working(g);
+            for k in [3u32, 4, 5, 8] {
+                let (z_full, s_full) = full_reference(&z, &s, k);
+                let (z_inc, s_inc, _) = incremental_round(&z, &s, k);
+                assert_eq!(z_inc, z_full, "k={k}");
+                assert_eq!(s_inc, s_full, "k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn multi_round_cascade_stays_exact() {
+        // run the incremental rounds to convergence, checking the
+        // maintained supports against a recompute every round
+        let g = crate::gen::rmat::rmat(
+            300,
+            2200,
+            crate::gen::rmat::RmatParams::social(),
+            &mut crate::util::Rng::new(21),
+        );
+        let (mut z, mut s) = working(&g);
+        let in_nbrs = InNbrs::build(&z);
+        for k in [4u32, 5] {
+            let mut rounds = 0usize;
+            loop {
+                let f = mark_frontier(&z, &s, k);
+                if f.is_empty() {
+                    break;
+                }
+                decrement_frontier_seq(&z, &mut s, &f, &in_nbrs);
+                compact_preserving(&mut z, &mut s, &f.dying);
+                let mut want = Vec::new();
+                compute_supports_seq(&z, &mut want);
+                assert_eq!(s, want, "k={k} round={rounds}");
+                rounds += 1;
+                if z.live_edges() == 0 {
+                    break;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn atomic_task_matches_seq_task() {
+        let g = crate::gen::erdos_renyi::gnm(150, 900, &mut crate::util::Rng::new(9));
+        let (z, s) = working(&g);
+        let in_nbrs = InNbrs::build(&z);
+        let f = mark_frontier(&z, &s, 4);
+        let mut s_seq = s.clone();
+        let steps_seq = decrement_frontier_seq(&z, &mut s_seq, &f, &in_nbrs);
+        let s_at: Vec<AtomicU32> = s.iter().map(|&x| AtomicU32::new(x)).collect();
+        let mut steps_at = 0u64;
+        for &t in &f.tasks {
+            steps_at += frontier_task_atomic(&z, &s_at, &f, &in_nbrs, t);
+        }
+        let s_at_plain: Vec<u32> = s_at.iter().map(|x| x.load(Ordering::Relaxed)).collect();
+        assert_eq!(s_seq, s_at_plain);
+        assert_eq!(steps_seq, steps_at);
+    }
+
+    #[test]
+    fn frontier_costs_dominate_actual_steps() {
+        let g = crate::gen::rmat::rmat(
+            250,
+            1800,
+            crate::gen::rmat::RmatParams::autonomous_system(),
+            &mut crate::util::Rng::new(13),
+        );
+        let (z, s) = working(&g);
+        let in_nbrs = InNbrs::build(&z);
+        for k in [4u32, 6] {
+            let f = mark_frontier(&z, &s, k);
+            let costs = frontier_costs(&z, &f, &in_nbrs);
+            assert_eq!(costs.len(), f.len());
+            let mut s2 = s.clone();
+            let (_, per_task) = decrement_frontier_traced(&z, &mut s2, &f, &in_nbrs);
+            for (i, (&est, &actual)) in costs.iter().zip(per_task.iter()).enumerate() {
+                assert!(
+                    est >= actual as u64,
+                    "k={k} task {i}: estimate {est} below actual {actual}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn compact_preserving_handles_tombstone_only_rows() {
+        // row 0 dies entirely; surviving rows keep their supports
+        let g = from_sorted_unique(4, &[(0, 1), (0, 2), (0, 3), (1, 2), (2, 3)]);
+        let (mut z, mut s) = working(&g);
+        let mut dying = vec![false; z.slots()];
+        let (start, _) = z.row_span(0);
+        for p in start..start + 3 {
+            dying[p] = true;
+        }
+        let out = compact_preserving(&mut z, &mut s, &dying);
+        assert_eq!(out.removed, 3);
+        assert_eq!(out.remaining, 2);
+        assert_eq!(z.row_live(0), &[] as &[u32]);
+        assert!(crate::graph::validate::check_zcsr(&z).is_ok());
+        // and a second compaction over the tombstone-only row is a no-op
+        let dying = vec![false; z.slots()];
+        let out = compact_preserving(&mut z, &mut s, &dying);
+        assert_eq!(out.removed, 0);
+        assert_eq!(out.remaining, 2);
+    }
+
+    #[test]
+    fn empty_frontier_is_a_noop() {
+        let g = from_sorted_unique(3, &[(0, 1), (0, 2), (1, 2)]);
+        let (z, s) = working(&g);
+        let in_nbrs = InNbrs::build(&z);
+        let f = mark_frontier(&z, &s, 3);
+        assert!(f.is_empty());
+        let mut s2 = s.clone();
+        assert_eq!(decrement_frontier_seq(&z, &mut s2, &f, &in_nbrs), 0);
+        assert_eq!(s2, s);
+    }
+
+    #[test]
+    fn all_edges_die_in_one_pass() {
+        // a path has zero support everywhere: the whole graph is the
+        // frontier, every triangle enumeration finds nothing
+        let g = crate::testkit::graphs::path(10);
+        let (mut z, mut s) = working(&g);
+        let in_nbrs = InNbrs::build(&z);
+        let f = mark_frontier(&z, &s, 3);
+        assert_eq!(f.len(), g.nnz());
+        // triangle-free: no matches, so no decrement ever fires
+        decrement_frontier_seq(&z, &mut s, &f, &in_nbrs);
+        let out = compact_preserving(&mut z, &mut s, &f.dying);
+        assert_eq!(out.remaining, 0);
+        assert_eq!(z.live_edges(), 0);
+        assert!(s.iter().all(|&x| x == 0));
+    }
+
+    #[test]
+    fn crossover_prefers_small_frontiers() {
+        assert!(crossover(10, 1000, 1000, DEFAULT_CROSSOVER_FRAC));
+        assert!(!crossover(900, 1000, 1000, DEFAULT_CROSSOVER_FRAC));
+        // the measured side tightens the proxy
+        assert!(!crossover(300, 100_000, 400, DEFAULT_CROSSOVER_FRAC));
+        // degenerate zero proxies never divide by zero
+        assert!(!crossover(1, 0, 0, DEFAULT_CROSSOVER_FRAC));
+    }
+}

@@ -2,9 +2,13 @@
 //! experimental setting). Exploits the nesting `truss(k+1) ⊆ truss(k)`:
 //! we walk k upward, re-running the convergence loop *on the already
 //! pruned graph*, so each step only strips the newly sub-threshold
-//! edges.
+//! edges. The convergence driver leaves the maintained support array
+//! valid whenever live edges remain, so every k-level after the first
+//! re-enters **warm** — no full support recompute per level (see
+//! [`run_to_convergence_mode`]).
 
-use super::ktruss::{run_to_convergence, IterationStat};
+use super::incremental::SupportMode;
+use super::ktruss::{run_to_convergence_mode, IterationStat};
 use crate::graph::{Csr, ZCsr};
 
 /// Result of the `K_max` search.
@@ -35,8 +39,13 @@ pub fn kmax(g: &Csr) -> KmaxResult {
     let mut total_iterations = 0usize;
     let mut per_k = Vec::new();
     let mut k = 3u32;
+    let mut warm = false;
     loop {
-        let (iters, stats) = run_to_convergence(&mut z, &mut s, k);
+        let (iters, stats) =
+            run_to_convergence_mode(&mut z, &mut s, k, SupportMode::Auto, warm);
+        // the driver leaves s valid for the survivors on every non-empty
+        // exit, so the next k-level skips its initial full pass
+        warm = true;
         total_iterations += iters;
         per_k.push((k, stats));
         if z.live_edges() == 0 {

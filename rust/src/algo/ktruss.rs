@@ -1,7 +1,10 @@
 //! The K-truss driver: Algorithm 1's convergence loop over
-//! `computeSupports` + `pruneEdges`, in both parallel granularities.
+//! `computeSupports` + `pruneEdges`, in both parallel granularities and
+//! both support-maintenance modes (full recompute vs the incremental
+//! frontier update of [`super::incremental`]).
 
-use super::prune::{prune, PruneOutcome};
+use super::incremental::{self, InNbrs, SupportMode};
+use super::prune::prune;
 use super::support::compute_supports_seq;
 pub use super::support::Mode;
 use crate::graph::{Csr, ZCsr};
@@ -14,8 +17,15 @@ pub struct IterationStat {
     pub live_edges: usize,
     /// Edges pruned at the end of the iteration.
     pub removed: usize,
-    /// Total merge-steps of the support pass (the real work measure).
+    /// Exact merge/search steps of the pass that produced this
+    /// iteration's supports (the real work measure).
     pub support_steps: u64,
+    /// Whether those supports came from incremental maintenance rather
+    /// than a full recompute: a frontier update, or — for the first
+    /// iteration of a warm-chained k-level (see
+    /// [`run_to_convergence_mode`]) — supports inherited unchanged from
+    /// the previous level with zero pass work (`support_steps == 0`).
+    pub incremental: bool,
 }
 
 /// Result of a K-truss computation.
@@ -44,15 +54,30 @@ impl KtrussResult {
     pub fn is_empty(&self) -> bool {
         self.truss.nnz() == 0
     }
+
+    /// Total support-pass steps across all iterations (the end-to-end
+    /// work measure the incremental driver shrinks).
+    pub fn total_support_steps(&self) -> u64 {
+        self.stats.iter().map(|s| s.support_steps).sum()
+    }
 }
 
-/// Compute the k-truss of `g`. `mode` selects the task granularity used
-/// by parallel/simulated executions; the sequential result is identical
+/// Compute the k-truss of `g` under the default [`SupportMode::Auto`]
+/// driver. `mode` selects the task granularity used by
+/// parallel/simulated executions; the sequential result is identical
 /// for both (and is verified so by tests).
 pub fn ktruss(g: &Csr, k: u32, mode: Mode) -> KtrussResult {
+    ktruss_mode(g, k, mode, SupportMode::Auto)
+}
+
+/// [`ktruss`] with an explicit support-maintenance mode. All modes
+/// produce the identical truss in the identical number of iterations;
+/// they differ only in how much work each iteration's support pass
+/// performs (recorded exactly in [`IterationStat::support_steps`]).
+pub fn ktruss_mode(g: &Csr, k: u32, mode: Mode, support: SupportMode) -> KtrussResult {
     let mut z = ZCsr::from_csr(g);
     let mut s: Vec<u32> = Vec::new();
-    let (iterations, stats) = run_to_convergence(&mut z, &mut s, k);
+    let (iterations, stats) = run_to_convergence_mode(&mut z, &mut s, k, support, false);
     KtrussResult { truss: z.to_csr(), iterations, stats, k, mode }
 }
 
@@ -60,35 +85,98 @@ pub fn ktruss(g: &Csr, k: u32, mode: Mode) -> KtrussResult {
 /// (iterations, per-iteration stats). Used by [`ktruss`], by the
 /// decomposition (which re-enters with increasing k), and by the
 /// simulators (which replay the same loop through the cost tracer).
+/// Runs the default [`SupportMode::Auto`] driver, cold.
 pub fn run_to_convergence(z: &mut ZCsr, s: &mut Vec<u32>, k: u32) -> (usize, Vec<IterationStat>) {
+    run_to_convergence_mode(z, s, k, SupportMode::Auto, false)
+}
+
+/// The convergence loop with explicit support maintenance.
+///
+/// Each round marks the sub-threshold frontier from the current
+/// supports, records the iteration, and — when the frontier is
+/// non-empty — brings the supports up to date for the shrunken graph
+/// either by the incremental frontier update (decrement destroyed
+/// triangles, compact rows *preserving* survivor supports) or by the
+/// classic prune-and-recompute. [`SupportMode::Auto`] decides per round
+/// via [`incremental::crossover`] on estimated frontier work vs a
+/// full-pass proxy.
+///
+/// `warm` may be `true` only when `s` already holds the exact supports
+/// of `z`'s current live edges (the state this function leaves behind
+/// whenever it converges with live edges remaining) — then the initial
+/// full pass is skipped, which is how [`super::kmax`] and
+/// [`super::decompose`] chain k-levels incrementally. With
+/// `warm == false` (or a mismatched `s`), the loop starts with a full
+/// pass, exactly like the original driver.
+pub fn run_to_convergence_mode(
+    z: &mut ZCsr,
+    s: &mut Vec<u32>,
+    k: u32,
+    support: SupportMode,
+    warm: bool,
+) -> (usize, Vec<IterationStat>) {
     let mut iterations = 0usize;
     let mut stats = Vec::new();
+    if z.live_edges() == 0 {
+        return (iterations, stats);
+    }
+    let use_inc = support.allows_incremental();
+    // one-time in-neighbor index; the graph only shrinks, so it stays a
+    // valid superset for every later round (entries re-validated by
+    // binary search in the kernel)
+    let in_nbrs: Option<InNbrs> = if use_inc { Some(InNbrs::build(z)) } else { None };
+    // steps and provenance of the pass that produced the *current* s
+    let mut pass_steps: u64;
+    let mut pass_incremental: bool;
+    // measured steps of the most recent full pass (crossover proxy)
+    let mut last_full_steps: u64;
+    if use_inc && warm && s.len() == z.slots() {
+        // supports inherited from a previous k-level: no pass ran
+        pass_steps = 0;
+        pass_incremental = true;
+        last_full_steps = incremental::full_pass_estimate(z);
+    } else {
+        pass_steps = compute_supports_seq(z, s);
+        pass_incremental = false;
+        last_full_steps = pass_steps;
+    }
     loop {
         let live = z.live_edges();
         if live == 0 {
             break;
         }
-        // Step 1: computeSupports (S ← AᵀA ∘ A, eager)
-        let steps_before = sum_steps(z, s);
-        // Step 2: pruneEdges (M ← S ≥ k-2; A ← A ∘ M)
-        let out: PruneOutcome = prune(z, s, k);
+        let f = incremental::mark_frontier(z, s, k);
         iterations += 1;
-        stats.push(IterationStat { live_edges: live, removed: out.removed, support_steps: steps_before });
-        if out.removed == 0 {
-            break; // isUnchanged(M)
+        stats.push(IterationStat {
+            live_edges: live,
+            removed: f.len(),
+            support_steps: pass_steps,
+            incremental: pass_incremental,
+        });
+        if f.is_empty() {
+            break; // isUnchanged(M): s stays valid for the survivors
+        }
+        let (go_incremental, _) =
+            incremental::decide_incremental(z, &f, in_nbrs.as_ref(), support, last_full_steps);
+        if go_incremental {
+            let nbrs = in_nbrs.as_ref().expect("incremental mode builds the index");
+            pass_steps = incremental::decrement_frontier_seq(z, s, &f, nbrs);
+            pass_incremental = true;
+            incremental::compact_preserving(z, s, &f.dying);
+        } else {
+            // classic path: compact (resetting supports), then recompute
+            prune(z, s, k);
+            if z.live_edges() == 0 {
+                pass_steps = 0;
+                pass_incremental = false;
+            } else {
+                pass_steps = compute_supports_seq(z, s);
+                pass_incremental = false;
+                last_full_steps = pass_steps;
+            }
         }
     }
     (iterations, stats)
-}
-
-/// Run the support pass and return total merge-steps (work measure).
-fn sum_steps(z: &ZCsr, s: &mut Vec<u32>) -> u64 {
-    // compute_supports_seq clears + fills s
-    compute_supports_seq(z, s);
-    // steps are re-derived by a cheap second walk only when tracing is
-    // requested; here we approximate with support-sum + live edges,
-    // which the cost tracer replaces with exact counts.
-    s.iter().map(|&x| x as u64).sum::<u64>() + z.live_edges() as u64
 }
 
 #[cfg(test)]
@@ -156,6 +244,75 @@ mod tests {
     }
 
     #[test]
+    fn support_modes_agree_and_iterations_match() {
+        let g = crate::gen::rmat::rmat(
+            400,
+            3000,
+            crate::gen::rmat::RmatParams::autonomous_system(),
+            &mut crate::util::Rng::new(78),
+        );
+        for k in [3, 4, 5, 8] {
+            let full = ktruss_mode(&g, k, Mode::Fine, SupportMode::Full);
+            let inc = ktruss_mode(&g, k, Mode::Fine, SupportMode::Incremental);
+            let auto = ktruss_mode(&g, k, Mode::Fine, SupportMode::Auto);
+            assert_eq!(full.truss, inc.truss, "k={k}");
+            assert_eq!(full.truss, auto.truss, "k={k}");
+            assert_eq!(full.iterations, inc.iterations, "k={k}");
+            assert_eq!(full.iterations, auto.iterations, "k={k}");
+            // provenance: the full driver never flags incremental, the
+            // forced-incremental driver flags everything after pass 0
+            assert!(full.stats.iter().all(|st| !st.incremental), "k={k}");
+            assert!(
+                inc.stats.iter().skip(1).all(|st| st.incremental),
+                "k={k}"
+            );
+        }
+    }
+
+    #[test]
+    fn incremental_cascade_does_less_work() {
+        // multi-iteration cascade: the frontier rounds must be cheaper
+        // than recomputing every round
+        let g = crate::gen::rmat::rmat(
+            600,
+            4500,
+            crate::gen::rmat::RmatParams::autonomous_system(),
+            &mut crate::util::Rng::new(91),
+        );
+        for k in [4u32, 5] {
+            let full = ktruss_mode(&g, k, Mode::Fine, SupportMode::Full);
+            if full.iterations < 3 {
+                continue; // no cascade at this k on this seed
+            }
+            let inc = ktruss_mode(&g, k, Mode::Fine, SupportMode::Incremental);
+            assert!(
+                inc.total_support_steps() < full.total_support_steps(),
+                "k={k}: inc {} vs full {}",
+                inc.total_support_steps(),
+                full.total_support_steps()
+            );
+        }
+    }
+
+    #[test]
+    fn warm_reentry_matches_cold() {
+        // converge at k, then re-enter warm at k+1: identical outcome to
+        // a cold run at k+1 on the pruned graph
+        let g = crate::gen::community::communities(200, 1200, 15, &mut crate::util::Rng::new(5));
+        let mut z = ZCsr::from_csr(&g);
+        let mut s: Vec<u32> = Vec::new();
+        run_to_convergence_mode(&mut z, &mut s, 3, SupportMode::Auto, false);
+        let pruned = z.to_csr();
+        let mut z_cold = ZCsr::from_csr(&pruned);
+        let mut s_cold: Vec<u32> = Vec::new();
+        let (it_cold, _) =
+            run_to_convergence_mode(&mut z_cold, &mut s_cold, 4, SupportMode::Auto, false);
+        let (it_warm, _) = run_to_convergence_mode(&mut z, &mut s, 4, SupportMode::Auto, true);
+        assert_eq!(z.to_csr(), z_cold.to_csr());
+        assert_eq!(it_warm, it_cold);
+    }
+
+    #[test]
     fn stats_are_consistent() {
         let g = from_sorted_unique(6, &[(0, 1), (0, 2), (1, 2), (2, 3), (3, 4), (4, 5)]);
         let r = ktruss(&g, 3, Mode::Fine);
@@ -163,5 +320,22 @@ mod tests {
         assert_eq!(r.stats[0].live_edges, 6);
         let total_removed: usize = r.stats.iter().map(|s| s.removed).sum();
         assert_eq!(total_removed, 6 - r.edges());
+    }
+
+    #[test]
+    fn exact_steps_match_trace_in_full_mode() {
+        // satellite check: the driver's support_steps equal the exact
+        // per-iteration traced totals, not the old sum(S)+live proxy
+        let g = crate::gen::rmat::rmat(
+            250,
+            1800,
+            crate::gen::rmat::RmatParams::social(),
+            &mut crate::util::Rng::new(15),
+        );
+        let r = ktruss_mode(&g, 4, Mode::Fine, SupportMode::Full);
+        let mut traced: Vec<u64> = Vec::new();
+        crate::cost::replay::replay_ktruss(&g, 4, |o| traced.push(o.trace.total_steps));
+        let got: Vec<u64> = r.stats.iter().map(|s| s.support_steps).collect();
+        assert_eq!(got, traced);
     }
 }

@@ -8,8 +8,14 @@
 //! This layer owns load balancing at *merge-step* granularity: how the
 //! pass's work is cut into tasks; [`crate::par`] decides how tasks map
 //! to workers, [`crate::serve`] how jobs map to shards.
+//!
+//! The convergence driver maintains supports across iterations in one
+//! of three [`SupportMode`]s: full recompute, incremental
+//! frontier-driven decrement ([`incremental`]), or a per-iteration
+//! auto crossover (the default).
 
 pub mod decompose;
+pub mod incremental;
 pub mod kmax;
 pub mod ktruss;
 pub mod prune;
@@ -17,5 +23,6 @@ pub mod reference;
 pub mod support;
 pub mod triangle;
 
+pub use incremental::SupportMode;
 pub use ktruss::{ktruss, KtrussResult};
 pub use support::Mode;

@@ -217,11 +217,13 @@ pub fn eager_update_seq_checked(col: &[Vid], s: &mut [u32], p: usize, r0: usize)
     steps
 }
 
-/// Full sequential support pass over the checked kernel (perf baseline).
-pub fn compute_supports_seq_checked(z: &ZCsr, s: &mut Vec<u32>) {
+/// Full sequential support pass over the checked kernel (perf
+/// baseline). Returns total merge steps.
+pub fn compute_supports_seq_checked(z: &ZCsr, s: &mut Vec<u32>) -> u64 {
     s.clear();
     s.resize(z.slots(), 0);
     let col = z.col();
+    let mut steps = 0u64;
     for i in 0..z.n() {
         let (start, end) = z.row_span(i);
         for p in start..end {
@@ -230,9 +232,10 @@ pub fn compute_supports_seq_checked(z: &ZCsr, s: &mut Vec<u32>) {
                 break;
             }
             let (r0, _) = z.row_span(kappa as usize);
-            eager_update_seq_checked(col, s, p, r0);
+            steps += eager_update_seq_checked(col, s, p, r0);
         }
     }
+    steps
 }
 
 /// Atomic variant of [`eager_update_seq`] used by the real thread pool:
@@ -299,12 +302,16 @@ pub fn row_task_seq(z: &ZCsr, s: &mut [u32], i: usize) -> u64 {
 /// Sequential `computeSupports`: clears `s` and applies the eager update
 /// over all rows. This is the single-thread execution used both for the
 /// ground-truth result and for wallclock calibration of the simulators.
-pub fn compute_supports_seq(z: &ZCsr, s: &mut Vec<u32>) {
+/// Returns the **exact** total merge steps of the pass (the work
+/// measure `IterationStat.support_steps` records — no approximation).
+pub fn compute_supports_seq(z: &ZCsr, s: &mut Vec<u32>) -> u64 {
     s.clear();
     s.resize(z.slots(), 0);
+    let mut steps = 0u64;
     for i in 0..z.n() {
-        row_task_seq(z, s, i);
+        steps += row_task_seq(z, s, i);
     }
+    steps
 }
 
 /// One ultra-fine task of the segment-split support pass: the merge of
@@ -533,10 +540,15 @@ mod tests {
         );
         let z = ZCsr::from_csr(&g);
         let mut fast = Vec::new();
-        compute_supports_seq(&z, &mut fast);
+        let steps_fast = compute_supports_seq(&z, &mut fast);
         let mut checked = Vec::new();
-        compute_supports_seq_checked(&z, &mut checked);
+        let steps_checked = compute_supports_seq_checked(&z, &mut checked);
         assert_eq!(fast, checked);
+        assert_eq!(steps_fast, steps_checked);
+        // the returned totals are the exact traced step counts
+        let mut s = Vec::new();
+        let tr = crate::cost::trace::trace_supports(&z, &mut s);
+        assert_eq!(steps_fast, tr.total_steps);
     }
 
     #[test]

@@ -1,5 +1,6 @@
 //! Job types the coordinator serves.
 
+use crate::algo::incremental::SupportMode;
 use crate::algo::support::Mode;
 use crate::graph::{Csr, Vid};
 use crate::par::Schedule;
@@ -95,6 +96,12 @@ pub struct JobResult {
     /// for job kinds whose sparse path is sequential (kmax, decompose,
     /// triangles). Provenance for the per-job schedule policy.
     pub schedule: Option<Schedule>,
+    /// Support-maintenance mode the sparse fixed-k truss engine ran
+    /// under (`None` for dense executions and non-truss kinds).
+    /// Provenance for the per-job support policy, and the calibration
+    /// label the serving cost model keys on
+    /// ([`crate::serve::cost_model::job_label`]).
+    pub support: Option<SupportMode>,
     /// Execution wall time (excluding queueing), ms.
     pub wall_ms: f64,
     /// Ok(output) or the error message (no anyhow across channels).

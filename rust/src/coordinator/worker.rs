@@ -1,15 +1,18 @@
 //! Job execution: dispatch a routed request to the chosen engine.
 //!
-//! The sparse engine picks a pool [`Schedule`] **per job**: a fixed
-//! override from [`ServiceConfig`](super::service::ServiceConfig) when
-//! the operator set one, otherwise a skew heuristic over the job's
-//! graph (see [`choose_schedule`]). The chosen schedule is recorded in
-//! the [`JobResult`] for provenance.
+//! The sparse engine picks a pool [`Schedule`] **and a
+//! [`SupportMode`]** per job: fixed overrides from
+//! [`ServiceConfig`](super::service::ServiceConfig) when the operator
+//! set them, otherwise per-job heuristics over the job's graph (see
+//! [`choose_schedule`] and [`choose_support`]). Both choices are
+//! recorded in the [`JobResult`] for provenance — the serving cost
+//! model keys its per-label calibration on the support choice.
 
 use super::job::{Engine, JobKind, JobOutput, JobRequest, JobResult};
+use crate::algo::incremental::SupportMode;
 use crate::algo::{decompose, kmax, triangle};
 use crate::graph::Csr;
-use crate::par::{ktruss_par, Pool, Schedule};
+use crate::par::{ktruss_par_mode, Pool, Schedule};
 use crate::runtime::DenseEngine;
 use crate::util::Timer;
 
@@ -39,27 +42,69 @@ pub fn choose_schedule(g: &Csr) -> Schedule {
     }
 }
 
+/// Pick a support-maintenance mode for one job from its graph stats.
+/// Cascades (many prune iterations with shrinking frontiers) are where
+/// the incremental driver wins; dense low-k cores converge in one or
+/// two rounds where a full recompute is already optimal:
+///
+/// * non-truss kinds → `Full` (their sparse paths drive the loop
+///   internally; the label stays mode-free),
+/// * tiny jobs → `Full` (frontier bookkeeping dominates),
+/// * heavy degree skew (max/mean ≥ 8 — the hub regime whose fringes
+///   peel over many rounds) → `Incremental`,
+/// * everything else → `Auto` (per-round crossover decides).
+pub fn choose_support(g: &Csr, kind: &JobKind) -> SupportMode {
+    if !matches!(kind, JobKind::Ktruss { .. }) {
+        return SupportMode::Full;
+    }
+    let n = g.n();
+    if n == 0 || g.nnz() < 2048 {
+        return SupportMode::Full;
+    }
+    let mean = g.nnz() as f64 / n as f64;
+    let max = (0..n).map(|i| g.row(i).len()).max().unwrap_or(0) as f64;
+    let skew = if mean > 0.0 { max / mean } else { 0.0 };
+    if skew >= 8.0 {
+        SupportMode::Incremental
+    } else {
+        SupportMode::Auto
+    }
+}
+
 /// Stateless executor with handles to both engines.
 pub struct Worker {
     /// The pool sparse jobs run on.
     pub pool: Pool,
     /// Fixed schedule override; `None` = per-job heuristic choice.
     pub schedule: Option<Schedule>,
+    /// Fixed support-mode override; `None` = per-job heuristic choice.
+    pub support: Option<SupportMode>,
     /// None when artifacts are unavailable (dense jobs then fall back to
     /// the sparse path with a provenance note).
     pub dense: Option<DenseEngine>,
 }
 
 impl Worker {
-    /// A worker with the per-job schedule heuristic.
+    /// A worker with the per-job schedule/support heuristics.
     pub fn new(pool: Pool, dense: Option<DenseEngine>) -> Worker {
-        Worker { pool, schedule: None, dense }
+        Worker { pool, schedule: None, support: None, dense }
     }
 
     /// A worker with an explicit schedule override (`None` keeps the
-    /// heuristic).
+    /// heuristic); support mode stays heuristic.
     pub fn with_schedule(pool: Pool, dense: Option<DenseEngine>, schedule: Option<Schedule>) -> Worker {
-        Worker { pool, schedule, dense }
+        Worker { pool, schedule, support: None, dense }
+    }
+
+    /// A worker with explicit schedule and support-mode overrides
+    /// (`None` keeps the respective heuristic).
+    pub fn with_policy(
+        pool: Pool,
+        dense: Option<DenseEngine>,
+        schedule: Option<Schedule>,
+        support: Option<SupportMode>,
+    ) -> Worker {
+        Worker { pool, schedule, support, dense }
     }
 
     /// The schedule this worker runs `req` under.
@@ -67,13 +112,19 @@ impl Worker {
         self.schedule.unwrap_or_else(|| choose_schedule(&req.graph))
     }
 
-    /// Schedule for the sparse engine: `Some` only for job kinds whose
-    /// sparse path actually runs on the pool (fixed-k truss). Kmax,
-    /// decompose and triangle counting execute sequential algorithms,
-    /// so no schedule is picked (or paid for) there.
-    fn sparse_schedule(&self, req: &JobRequest) -> Option<Schedule> {
+    /// The support mode this worker runs `req` under.
+    pub fn pick_support(&self, req: &JobRequest) -> SupportMode {
+        self.support
+            .unwrap_or_else(|| choose_support(&req.graph, &req.kind))
+    }
+
+    /// Schedule and support mode for the sparse engine: `Some` only for
+    /// job kinds whose sparse path actually runs on the pool (fixed-k
+    /// truss). Kmax, decompose and triangle counting execute sequential
+    /// algorithms, so no policy is picked (or paid for) there.
+    fn sparse_policy(&self, req: &JobRequest) -> Option<(Schedule, SupportMode)> {
         match req.kind {
-            JobKind::Ktruss { .. } => Some(self.pick_schedule(req)),
+            JobKind::Ktruss { .. } => Some((self.pick_schedule(req), self.pick_support(req))),
             _ => None,
         }
     }
@@ -81,35 +132,43 @@ impl Worker {
     /// Execute one request on `engine` (already routed).
     pub fn execute(&self, req: &JobRequest, engine: Engine) -> JobResult {
         let t = Timer::start();
-        let (engine_used, schedule, output) = match engine {
+        let (engine_used, policy, output) = match engine {
             Engine::DenseXla => match self.execute_dense(req) {
                 Ok(out) => (Engine::DenseXla, None, Ok(out)),
                 // dense failure (missing artifacts, size) falls back
                 Err(_) => {
-                    let s = self.sparse_schedule(req);
-                    let out = self.execute_sparse(req, s.unwrap_or(Schedule::Static));
-                    (Engine::SparseCpu, s, out)
+                    let p = self.sparse_policy(req);
+                    let (s, m) = p.unwrap_or((Schedule::Static, SupportMode::Auto));
+                    let out = self.execute_sparse(req, s, m);
+                    (Engine::SparseCpu, p, out)
                 }
             },
             Engine::SparseCpu => {
-                let s = self.sparse_schedule(req);
-                let out = self.execute_sparse(req, s.unwrap_or(Schedule::Static));
-                (Engine::SparseCpu, s, out)
+                let p = self.sparse_policy(req);
+                let (s, m) = p.unwrap_or((Schedule::Static, SupportMode::Auto));
+                let out = self.execute_sparse(req, s, m);
+                (Engine::SparseCpu, p, out)
             }
         };
         JobResult {
             id: req.id,
             engine: engine_used,
-            schedule,
+            schedule: policy.map(|(s, _)| s),
+            support: policy.map(|(_, m)| m),
             wall_ms: t.elapsed_ms(),
             output: output.map_err(|e| format!("{e:#}")),
         }
     }
 
-    fn execute_sparse(&self, req: &JobRequest, schedule: Schedule) -> anyhow::Result<JobOutput> {
+    fn execute_sparse(
+        &self,
+        req: &JobRequest,
+        schedule: Schedule,
+        support: SupportMode,
+    ) -> anyhow::Result<JobOutput> {
         Ok(match req.kind {
             JobKind::Ktruss { k, mode } => {
-                let r = ktruss_par(&req.graph, k, &self.pool, mode, schedule);
+                let r = ktruss_par_mode(&req.graph, k, &self.pool, mode, schedule, support);
                 JobOutput::Ktruss {
                     truss_edges: r.truss.nnz(),
                     iterations: r.iterations,
@@ -175,8 +234,9 @@ mod tests {
         );
         assert_eq!(r.id, 7);
         assert_eq!(r.engine, Engine::SparseCpu);
-        // a tiny job must have been scheduled statically
+        // a tiny job must have been scheduled statically, full recompute
         assert_eq!(r.schedule, Some(Schedule::Static));
+        assert_eq!(r.support, Some(SupportMode::Full));
         match r.output.unwrap() {
             JobOutput::Ktruss { truss_edges, .. } => assert_eq!(truss_edges, 5),
             other => panic!("wrong output {other:?}"),
@@ -228,6 +288,53 @@ mod tests {
             JobOutput::Ktruss { truss_edges, .. } => assert_eq!(truss_edges, 5),
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn support_override_wins_and_is_recorded() {
+        let worker = Worker::with_policy(
+            Pool::new(2),
+            None,
+            Some(Schedule::WorkAware),
+            Some(SupportMode::Incremental),
+        );
+        let req = diamond_req(JobKind::Ktruss { k: 3, mode: Mode::Fine });
+        assert_eq!(worker.pick_support(&req), SupportMode::Incremental);
+        let r = worker.execute(&req, Engine::SparseCpu);
+        assert_eq!(r.support, Some(SupportMode::Incremental));
+        assert_eq!(r.schedule, Some(Schedule::WorkAware));
+        match r.output.unwrap() {
+            JobOutput::Ktruss { truss_edges, .. } => assert_eq!(truss_edges, 5),
+            other => panic!("{other:?}"),
+        }
+        // non-truss kinds record no support policy
+        let r = worker.execute(&diamond_req(JobKind::Triangles), Engine::SparseCpu);
+        assert_eq!(r.support, None);
+        assert_eq!(r.schedule, None);
+    }
+
+    #[test]
+    fn support_heuristic_tracks_shape() {
+        let kt = JobKind::Ktruss { k: 3, mode: Mode::Fine };
+        // tiny → full
+        let tiny = from_sorted_unique(3, &[(0, 1), (1, 2)]);
+        assert_eq!(choose_support(&tiny, &kt), SupportMode::Full);
+        // hub-heavy → incremental (cascading fringe peels)
+        let hub = crate::gen::rmat::rmat(
+            4000,
+            24_000,
+            crate::gen::rmat::RmatParams::autonomous_system(),
+            &mut crate::util::Rng::new(5),
+        );
+        assert!(matches!(
+            choose_support(&hub, &kt),
+            SupportMode::Incremental | SupportMode::Auto
+        ));
+        // near-uniform road lattice → auto (crossover decides per round)
+        let road = crate::gen::grid::road(4000, 5600, 0.05, &mut crate::util::Rng::new(6));
+        assert_eq!(choose_support(&road, &kt), SupportMode::Auto);
+        // non-truss kinds never pick a mode
+        assert_eq!(choose_support(&hub, &JobKind::Kmax), SupportMode::Full);
     }
 
     #[test]

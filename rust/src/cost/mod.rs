@@ -9,5 +9,8 @@ pub mod replay;
 pub mod trace;
 
 pub use persist::TraceRecord;
-pub use replay::{replay_kmax, replay_ktruss, IterObservation};
+pub use replay::{
+    replay_kmax, replay_ktruss, replay_ktruss_mode, FrontierIterObservation, IterObservation,
+    PassObservation,
+};
 pub use trace::{trace_supports, SupportTrace};

@@ -2,8 +2,16 @@
 //! cost traces to an observer. One replay serves every simulated device
 //! and granularity at once, because all of them execute the same kernel
 //! over the same per-iteration task set — only the schedule differs.
+//!
+//! Two replay drivers: [`replay_ktruss`] traces the classic
+//! full-recompute loop, [`replay_ktruss_mode`] traces the
+//! support-maintenance driver of [`crate::algo::incremental`] — its
+//! observer receives a [`PassObservation`] per iteration, either a full
+//! pass trace or the frontier task set (dying edges with exact per-task
+//! steps), mirroring the real drivers' per-round crossover decisions.
 
 use super::trace::SupportTrace;
+use crate::algo::incremental::{self, InNbrs, SupportMode};
 use crate::algo::prune::prune;
 use crate::graph::{Csr, ZCsr};
 
@@ -61,6 +69,125 @@ pub fn replay_kmax(g: &Csr, mut obs: impl FnMut(u32, &IterObservation)) -> (u32,
         k += 1;
     }
     (kmax, total_iters)
+}
+
+/// What the observer of [`replay_ktruss_mode`] sees each iteration: the
+/// pass that produced the iteration's supports was either a full
+/// recompute or an incremental frontier update.
+pub enum PassObservation<'a> {
+    /// A full support pass ran; same payload as [`replay_ktruss`].
+    Full(IterObservation<'a>),
+    /// The incremental frontier update ran.
+    Frontier(FrontierIterObservation<'a>),
+}
+
+/// Frontier-pass payload of [`PassObservation::Frontier`].
+pub struct FrontierIterObservation<'a> {
+    /// 0-based iteration number within the current convergence loop.
+    pub iter: usize,
+    /// Live edges when the frontier was marked.
+    pub live_edges: usize,
+    /// Exact steps of each frontier task (one dying edge each).
+    pub task_steps: &'a [u32],
+    /// Row of each frontier task's dying edge (ascending — feeds the
+    /// granularity grouping of [`crate::par::balance::Costs::from_frontier`]).
+    pub task_rows: &'a [u32],
+    /// Σ `task_steps`.
+    pub total_steps: u64,
+    /// Slots in the working array.
+    pub slots: usize,
+    /// Vertices.
+    pub n: usize,
+    /// Edges removed by the compaction that followed the update.
+    pub removed: usize,
+}
+
+/// Replay the support-maintenance driver
+/// ([`crate::algo::ktruss::run_to_convergence_mode`], cold) on `g`,
+/// invoking `obs` once per iteration with the pass that produced that
+/// iteration's supports. Makes the same per-round full-vs-frontier
+/// decisions as the real driver, so the simulators price exactly the
+/// kernel launches production would issue. Returns
+/// (iterations, surviving edges).
+pub fn replay_ktruss_mode(
+    g: &Csr,
+    k: u32,
+    support: SupportMode,
+    mut obs: impl FnMut(&PassObservation),
+) -> (usize, usize) {
+    let mut z = ZCsr::from_csr(g);
+    let mut s: Vec<u32> = Vec::new();
+    let mut iters = 0usize;
+    if z.live_edges() == 0 {
+        return (0, 0);
+    }
+    let use_inc = support.allows_incremental();
+    let in_nbrs: Option<InNbrs> = if use_inc { Some(InNbrs::build(&z)) } else { None };
+    let mut trace = SupportTrace {
+        fine_steps: Vec::new(),
+        live_per_row: Vec::new(),
+        total_steps: 0,
+    };
+    // the pass that produced the current supports: full trace, or the
+    // frontier task steps/rows
+    super::trace::trace_supports_into(&z, &mut s, &mut trace);
+    let mut pass_full = true;
+    let mut frontier_steps: Vec<u32> = Vec::new();
+    let mut frontier_rows: Vec<u32> = Vec::new();
+    let mut last_full_steps = trace.total_steps;
+    loop {
+        let live = z.live_edges();
+        if live == 0 {
+            break;
+        }
+        let f = incremental::mark_frontier(&z, &s, k);
+        let removed = f.len();
+        if pass_full {
+            obs(&PassObservation::Full(IterObservation {
+                iter: iters,
+                live_edges: live,
+                trace: &trace,
+                row_ptr: z.row_ptr(),
+                slots: z.slots(),
+                n: z.n(),
+                removed,
+            }));
+        } else {
+            obs(&PassObservation::Frontier(FrontierIterObservation {
+                iter: iters,
+                live_edges: live,
+                task_steps: &frontier_steps,
+                task_rows: &frontier_rows,
+                total_steps: frontier_steps.iter().map(|&x| x as u64).sum(),
+                slots: z.slots(),
+                n: z.n(),
+                removed,
+            }));
+        }
+        iters += 1;
+        if f.is_empty() {
+            break;
+        }
+        let (go_incremental, _) =
+            incremental::decide_incremental(&z, &f, in_nbrs.as_ref(), support, last_full_steps);
+        if go_incremental {
+            let nbrs = in_nbrs.as_ref().expect("incremental mode builds the index");
+            let (_, per_task) = incremental::decrement_frontier_traced(&z, &mut s, &f, nbrs);
+            frontier_steps = per_task;
+            frontier_rows = f.tasks.iter().map(|t| t.row).collect();
+            pass_full = false;
+            incremental::compact_preserving(&mut z, &mut s, &f.dying);
+        } else {
+            prune(&mut z, &mut s, k);
+            if z.live_edges() == 0 {
+                break;
+            }
+            super::trace::trace_supports_into(&z, &mut s, &mut trace);
+            pass_full = true;
+            last_full_steps = trace.total_steps;
+        }
+    }
+    (iters, z.live_edges())
 }
 
 fn replay_loop(
@@ -148,6 +275,43 @@ mod tests {
         assert_eq!(kmax, want.kmax);
         assert_eq!(total, want.total_iterations);
         assert_eq!(iters_seen, total);
+    }
+
+    #[test]
+    fn replay_mode_matches_driver_stats() {
+        use crate::algo::incremental::SupportMode;
+        use crate::algo::ktruss::ktruss_mode;
+        let g = crate::gen::rmat::rmat(
+            300,
+            2200,
+            crate::gen::rmat::RmatParams::autonomous_system(),
+            &mut crate::util::Rng::new(44),
+        );
+        for support in [SupportMode::Full, SupportMode::Incremental, SupportMode::Auto] {
+            for k in [4u32, 5] {
+                let r = ktruss_mode(&g, k, Mode::Fine, support);
+                let mut steps: Vec<u64> = Vec::new();
+                let mut kinds: Vec<bool> = Vec::new();
+                let (iters, remaining) = replay_ktruss_mode(&g, k, support, |o| match o {
+                    PassObservation::Full(f) => {
+                        steps.push(f.trace.total_steps);
+                        kinds.push(false);
+                    }
+                    PassObservation::Frontier(f) => {
+                        steps.push(f.total_steps);
+                        kinds.push(true);
+                        assert_eq!(f.task_steps.len(), f.task_rows.len());
+                    }
+                });
+                assert_eq!(iters, r.iterations, "{support} k={k}");
+                assert_eq!(remaining, r.truss.nnz(), "{support} k={k}");
+                let want_steps: Vec<u64> =
+                    r.stats.iter().map(|s| s.support_steps).collect();
+                let want_kinds: Vec<bool> = r.stats.iter().map(|s| s.incremental).collect();
+                assert_eq!(steps, want_steps, "{support} k={k}");
+                assert_eq!(kinds, want_kinds, "{support} k={k}");
+            }
+        }
     }
 
     #[test]

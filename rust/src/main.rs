@@ -16,10 +16,11 @@
 //!   info       runtime/artifact environment report
 
 use anyhow::{bail, Context, Result};
+use ktruss::algo::incremental::SupportMode;
 use ktruss::algo::support::{Granularity, Mode, DEFAULT_SEGMENT_LEN};
 // NB: import the function under a distinct name — importing the
 // `algo::ktruss` *module* here would shadow the `ktruss` crate name.
-use ktruss::algo::ktruss::ktruss as ktruss_seq;
+use ktruss::algo::ktruss::ktruss_mode as ktruss_seq_mode;
 use ktruss::algo::{decompose, kmax};
 use ktruss::bench_harness::{ablations, figs, report, serve_bench, table1, Workload};
 use ktruss::cli::Args;
@@ -27,9 +28,9 @@ use ktruss::coordinator::JobKind;
 use ktruss::cost::persist;
 use ktruss::gen::suite;
 use ktruss::graph::{io, stats, Csr};
-use ktruss::par::{ktruss_par, ktruss_par_gran, Pool, Schedule};
+use ktruss::par::{ktruss_par_gran_mode, ktruss_par_mode, Pool, Schedule};
 use ktruss::serve::{CostModel, Executor, Priority, ServeConfig, SubmitOpts};
-use ktruss::sim::{simulate_ktruss, SimConfig, GPU_SCHEDULES};
+use ktruss::sim::{simulate_ktruss_mode, SimConfig, GPU_SCHEDULES};
 use ktruss::util::fmt::{speedup, Table};
 use ktruss::util::Timer;
 use std::sync::Arc;
@@ -80,9 +81,12 @@ fn print_help() {
            run        --graph <name|path> [--k 3] [--mode fine|coarse] [--par N] [--engine sparse|dense]\n\
                       [--granularity coarse|fine|segment[:len]]\n\
                       [--schedule static|dynamic[:chunk]|workaware|stealing]\n\
+                      [--support-mode full|incremental|auto]\n\
                       [--shards N] [--priority high|normal|low] [--deadline-ms D]\n\
                       (--shards > 1 serves the job through the sharded executor;\n\
-                      --granularity segment runs the ultra-fine pooled kernel)\n\
+                      --granularity segment runs the ultra-fine pooled kernel;\n\
+                      --support-mode auto (default) switches between full recompute\n\
+                      and the incremental frontier update per iteration)\n\
            kmax       --graph <name|path>\n\
            decompose  --graph <name|path>\n\
            generate   --graph <name> [--scale 1.0] [--out file.tsv] [--format tsv|bin]\n\
@@ -91,14 +95,16 @@ fn print_help() {
            bench gpu-sched [--seg-len 64]  (GPU schedule x granularity sweep)\n\
            bench serve [--jobs 120] [--arrival-us 300] [--workers 4] [--shard-counts 1,2,4]\n\
            serve      [--jobs 32] [--shards 2] [--pool 4] [--schedule <s>] [--priority <p>]\n\
-                      [--deadline-ms D] [--calibration file.tsv]\n\
+                      [--support-mode full|incremental|auto] [--deadline-ms D] [--calibration file.tsv]\n\
                       (demo job stream through the sharded executor; --pool is the TOTAL worker\n\
-                      budget split across shards; without --schedule the worker picks per job;\n\
-                      without --priority the stream mixes priority classes)\n\
+                      budget split across shards; without --schedule/--support-mode the worker\n\
+                      picks per job; without --priority the stream mixes priority classes)\n\
            sim        --graph <name|path> [--k 3] [--granularity <g>|all]\n\
                       [--gpu-schedule static|work-aware|stealing|all] [--cpu-threads N]\n\
+                      [--support-mode full|incremental|auto]\n\
                       (timing estimates on the calibrated V100 model; static is always\n\
-                      included as the speedup baseline; --cpu-threads adds CPU rows)\n\
+                      included as the speedup baseline; --cpu-threads adds CPU rows;\n\
+                      --support-mode replays the incremental driver's kernel launches)\n\
            calibrate\n\
            info\n\n\
          GRAPH SOURCES: a SNAP suite name (e.g. ca-GrQc, see `ktruss suite`) generates the\n\
@@ -157,6 +163,13 @@ fn cmd_run(args: &Args) -> Result<()> {
         Some(s) => s.parse().map_err(|e| anyhow::anyhow!("--schedule: {e}"))?,
         None => Schedule::Dynamic { chunk: 256 },
     };
+    // direct paths default to the auto driver; the executor path keeps
+    // its per-job heuristic unless the flag pins a mode
+    let support_flag: Option<SupportMode> = match args.opt("support-mode") {
+        Some(s) => Some(s.parse().map_err(|e| anyhow::anyhow!("--support-mode: {e}"))?),
+        None => None,
+    };
+    let support = support_flag.unwrap_or(SupportMode::Auto);
     let shards = args.get_as::<usize>("shards", 1)?;
     let priority: Priority = args
         .get("priority", "normal")
@@ -183,6 +196,7 @@ fn cmd_run(args: &Args) -> Result<()> {
             ServeConfig {
                 shards,
                 schedule: schedule_flag.map(|_| schedule),
+                support: support_flag,
                 ..Default::default()
             }
             .with_total_workers(par),
@@ -230,20 +244,32 @@ fn cmd_run(args: &Args) -> Result<()> {
         }
         "sparse" if matches!(gran, Some(Granularity::Segment { .. })) => {
             let seg = gran.unwrap();
-            let r = ktruss_par_gran(&g, k, &Pool::new(par.max(1)), seg, schedule);
+            let r = ktruss_par_gran_mode(&g, k, &Pool::new(par.max(1)), seg, schedule, support);
             (
                 r.truss.nnz(),
                 r.iterations,
-                format!("sparse-cpu (pool, {seg}, {schedule})"),
+                format!("sparse-cpu (pool, {seg}, {schedule}, support={support})"),
             )
         }
         "sparse" if par > 1 => {
-            let r = ktruss_par(&g, k, &Pool::new(par), mode, schedule);
-            (r.truss.nnz(), r.iterations, format!("sparse-cpu (pool, {schedule})"))
+            let r = ktruss_par_mode(&g, k, &Pool::new(par), mode, schedule, support);
+            (
+                r.truss.nnz(),
+                r.iterations,
+                format!("sparse-cpu (pool, {schedule}, support={support})"),
+            )
         }
         "sparse" => {
-            let r = ktruss_seq(&g, k, mode);
-            (r.truss.nnz(), r.iterations, "sparse-cpu (sequential)".to_string())
+            let r = ktruss_seq_mode(&g, k, mode, support);
+            let inc_iters = r.stats.iter().filter(|s| s.incremental).count();
+            (
+                r.truss.nnz(),
+                r.iterations,
+                format!(
+                    "sparse-cpu (sequential, support={support}, {inc_iters} incremental iterations, {} total steps)",
+                    r.total_support_steps()
+                ),
+            )
         }
         other => bail!("--engine must be sparse|dense, got {other:?}"),
     };
@@ -464,6 +490,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         Some(p) => Some(p.parse().map_err(|e| anyhow::anyhow!("--priority: {e}"))?),
         None => None,
     };
+    // no --support-mode flag ⇒ the worker picks per job
+    let support: Option<SupportMode> = match args.opt("support-mode") {
+        Some(s) => Some(s.parse().map_err(|e| anyhow::anyhow!("--support-mode: {e}"))?),
+        None => None,
+    };
     let deadline_ms = args.get_as::<u64>("deadline-ms", 0)?;
     let calibration = args.opt("calibration");
     args.reject_unknown()?;
@@ -485,8 +516,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     // --pool is the exact TOTAL budget; with_total_workers spreads the
     // remainder over the first shards
-    let serve_cfg =
-        ServeConfig { shards, schedule, ..Default::default() }.with_total_workers(pool);
+    let serve_cfg = ServeConfig { shards, schedule, support, ..Default::default() }
+        .with_total_workers(pool);
     let (wps, extra) = (serve_cfg.workers_per_shard, serve_cfg.workers_remainder);
     let ex = Executor::start_with_model(serve_cfg, model);
     println!(
@@ -581,6 +612,10 @@ fn cmd_sim(args: &Args) -> Result<()> {
         }
     };
     let cpu_threads = args.get_as::<usize>("cpu-threads", 0)?;
+    let support: SupportMode = args
+        .get("support-mode", "full")
+        .parse()
+        .map_err(|e| anyhow::anyhow!("--support-mode: {e}"))?;
     args.reject_unknown()?;
     println!("graph: {}", stats::stats(&g));
     // one block of configs per granularity (and per device), static
@@ -602,7 +637,7 @@ fn cmd_sim(args: &Args) -> Result<()> {
         }
     }
     let t = Timer::start();
-    let res = simulate_ktruss(&g, k, &configs);
+    let res = simulate_ktruss_mode(&g, k, &configs, support);
     let wall = t.elapsed_ms();
     let mut table = Table::new(vec!["config", "time ms", "ME/s", "vs static"]);
     for (i, r) in res.iter().enumerate() {
@@ -615,7 +650,7 @@ fn cmd_sim(args: &Args) -> Result<()> {
     }
     println!("{}", table.render());
     println!(
-        "k={k}, {} convergence iterations; replay took {wall:.1} ms host time",
+        "k={k}, support={support}, {} convergence iterations; replay took {wall:.1} ms host time",
         res.first().map(|r| r.iterations).unwrap_or(0)
     );
     println!("(vs static = speedup over the static schedule at the same granularity/device)");

@@ -194,6 +194,62 @@ impl Costs {
         Costs { per_task }
     }
 
+    /// Per-task base steps of one **incremental frontier pass**
+    /// ([`crate::algo::incremental`]), derived from the traced
+    /// per-frontier-task step counts — the frontier analogue of
+    /// [`Costs::from_trace_rows`], and likewise the one shared
+    /// derivation both timing models consume. `task_steps[i]` is the
+    /// exact steps of frontier task `i` and `task_rows[i]` the row of
+    /// its dying edge (ascending, as `mark_frontier` emits). Tasks:
+    ///
+    /// * [`Granularity::Coarse`] — one task per frontier *row*: `1 + Σ`
+    ///   of its dying edges' steps (the row-grouped enumeration
+    ///   `decrement_frontier_par_gran` runs);
+    /// * [`Granularity::Fine`] — one task per dying edge:
+    ///   `max(steps, 1)`;
+    /// * [`Granularity::Segment`] — each task's steps split into
+    ///   `ceil(steps/len)` pieces of ≤ `len` steps (zero-step tasks
+    ///   still contribute one unit task — the enumeration itself runs
+    ///   even when it finds no triangle).
+    pub fn from_frontier(task_steps: &[u32], task_rows: &[u32], gran: Granularity) -> Costs {
+        assert_eq!(task_steps.len(), task_rows.len(), "one row per frontier task");
+        let per_task = match gran {
+            Granularity::Fine => task_steps.iter().map(|&st| (st as u64).max(1)).collect(),
+            Granularity::Coarse => {
+                let mut tasks: Vec<u64> = Vec::new();
+                let mut i = 0usize;
+                while i < task_steps.len() {
+                    let row = task_rows[i];
+                    let mut cost = 1u64;
+                    while i < task_steps.len() && task_rows[i] == row {
+                        cost += task_steps[i] as u64;
+                        i += 1;
+                    }
+                    tasks.push(cost);
+                }
+                tasks
+            }
+            Granularity::Segment { len } => {
+                let len = len.max(1);
+                let mut tasks = Vec::with_capacity(task_steps.len());
+                for &st in task_steps {
+                    if st == 0 {
+                        tasks.push(1);
+                        continue;
+                    }
+                    let mut left = st;
+                    while left > 0 {
+                        let seg = left.min(len);
+                        tasks.push(seg as u64);
+                        left -= seg;
+                    }
+                }
+                tasks
+            }
+        };
+        Costs { per_task }
+    }
+
     /// Number of tasks covered.
     pub fn len(&self) -> usize {
         self.per_task.len()
@@ -514,6 +570,19 @@ mod tests {
                 .sum();
             assert_eq!(seg.len(), want_tasks, "len={len}");
         }
+    }
+
+    #[test]
+    fn costs_from_frontier_all_granularities() {
+        let task_steps = [5u32, 0, 3, 7, 2];
+        let task_rows = [0u32, 0, 2, 2, 5];
+        let fine = Costs::from_frontier(&task_steps, &task_rows, Granularity::Fine);
+        assert_eq!(fine.per_task, vec![5, 1, 3, 7, 2]);
+        let coarse = Costs::from_frontier(&task_steps, &task_rows, Granularity::Coarse);
+        assert_eq!(coarse.per_task, vec![1 + 5, 1 + 3 + 7, 1 + 2]);
+        let seg = Costs::from_frontier(&task_steps, &task_rows, Granularity::Segment { len: 3 });
+        assert_eq!(seg.per_task, vec![3, 2, 1, 3, 3, 1, 2]);
+        assert!(Costs::from_frontier(&[], &[], Granularity::Coarse).is_empty());
     }
 
     #[test]

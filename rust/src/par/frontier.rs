@@ -1,0 +1,311 @@
+//! Concurrent realization of the incremental frontier update
+//! ([`crate::algo::incremental`]) on the worker pool.
+//!
+//! The pruned-edge frontier is exactly the task-skew regime the paper's
+//! load-balancing machinery targets: a handful of dying edges whose
+//! triangle enumerations range from one compare (a pendant edge) to a
+//! hub-row merge thousands of steps long. The work-aware schedules
+//! therefore bin the **frontier**, not the whole graph: per-task upper
+//! bounds from [`crate::algo::incremental::frontier_costs`] flow
+//! through the same scan binner / stealing deques the full support
+//! pass uses ([`crate::par::balance`]), so `WorkAware` and `Stealing`
+//! schedules see equal-work chunks of dying edges.
+//!
+//! Support decrements are relaxed atomic `fetch_sub`s — concurrent
+//! frontier tasks may hit the same surviving leg, and decrements are
+//! pure commutative counters read only after the pass, mirroring the
+//! full kernel's atomic increments.
+
+use super::parallel_support::{counter_total, worker_counters};
+use super::pool::{Pool, Schedule};
+use crate::algo::incremental::{frontier_task_atomic, Frontier, InNbrs};
+use crate::algo::prune::PruneOutcome;
+use crate::algo::support::Granularity;
+use crate::graph::ZCsr;
+use std::sync::atomic::{AtomicU32, AtomicUsize, Ordering};
+
+/// Whether `schedule` wants per-task cost estimates (same predicate the
+/// support pass uses).
+fn needs_costs(schedule: Schedule) -> bool {
+    matches!(schedule, Schedule::WorkAware | Schedule::Stealing)
+}
+
+/// Run the frontier update concurrently: one task per dying edge,
+/// atomic decrements into `s`. Work-aware schedules bin the per-task
+/// cost estimates (`costs`, one entry per frontier task — computed
+/// internally when `None`). Returns the exact total steps executed.
+pub fn decrement_frontier_par(
+    z: &ZCsr,
+    pool: &Pool,
+    f: &Frontier,
+    in_nbrs: &InNbrs,
+    schedule: Schedule,
+    s: &[AtomicU32],
+    costs: Option<&[u64]>,
+) -> u64 {
+    assert_eq!(s.len(), z.slots());
+    let tasks = &f.tasks;
+    let totals = worker_counters(pool);
+    let body = |w: usize, ti: usize| {
+        let steps = frontier_task_atomic(z, s, f, in_nbrs, tasks[ti]);
+        totals[w].0.fetch_add(steps, Ordering::Relaxed);
+    };
+    if needs_costs(schedule) {
+        let computed: Vec<u64>;
+        let cost_vec: &[u64] = match costs {
+            Some(c) => c,
+            None => {
+                computed = crate::algo::incremental::frontier_costs(z, f, in_nbrs);
+                &computed
+            }
+        };
+        assert_eq!(cost_vec.len(), tasks.len(), "one cost per frontier task");
+        pool.parallel_for_costed(tasks.len(), cost_vec, schedule, body);
+    } else {
+        pool.parallel_for(tasks.len(), schedule, body);
+    }
+    counter_total(&totals)
+}
+
+/// [`decrement_frontier_par`] at an explicit [`Granularity`]:
+/// `Coarse` groups the frontier tasks of one row into a single pool
+/// task (the row-task analogue — a row whose edges die together is
+/// enumerated by one worker); `Fine` and `Segment` run one pool task
+/// per dying edge — a frontier task is already the fine decomposition,
+/// and each one's enumeration is bounded by the dying edge's own
+/// neighborhood, so the partner-row segment split degenerates to it
+/// (the simulators model the segment split of frontier costs
+/// explicitly; see [`crate::par::balance::Costs::from_frontier`]).
+///
+/// `costs` are optional precomputed per-frontier-task estimates (the
+/// auto drivers already computed them for the crossover — reused here,
+/// aggregated per row group for `Coarse`).
+#[allow(clippy::too_many_arguments)]
+pub fn decrement_frontier_par_gran(
+    z: &ZCsr,
+    pool: &Pool,
+    f: &Frontier,
+    in_nbrs: &InNbrs,
+    gran: Granularity,
+    schedule: Schedule,
+    s: &[AtomicU32],
+    costs: Option<&[u64]>,
+) -> u64 {
+    if !matches!(gran, Granularity::Coarse) {
+        return decrement_frontier_par(z, pool, f, in_nbrs, schedule, s, costs);
+    }
+    // group consecutive tasks by row (mark_frontier emits ascending
+    // slot order, so a row's tasks are contiguous)
+    let mut groups: Vec<(usize, usize)> = Vec::new();
+    let mut start = 0usize;
+    for i in 1..=f.tasks.len() {
+        if i == f.tasks.len() || f.tasks[i].row != f.tasks[start].row {
+            groups.push((start, i));
+            start = i;
+        }
+    }
+    let totals = worker_counters(pool);
+    let body = |w: usize, gi: usize| {
+        let (lo, hi) = groups[gi];
+        let mut steps = 0u64;
+        for t in &f.tasks[lo..hi] {
+            steps += frontier_task_atomic(z, s, f, in_nbrs, *t);
+        }
+        totals[w].0.fetch_add(steps, Ordering::Relaxed);
+    };
+    if needs_costs(schedule) {
+        let computed: Vec<u64>;
+        let per_task: &[u64] = match costs {
+            Some(c) => c,
+            None => {
+                computed = crate::algo::incremental::frontier_costs(z, f, in_nbrs);
+                &computed
+            }
+        };
+        assert_eq!(per_task.len(), f.tasks.len(), "one cost per frontier task");
+        let group_costs: Vec<u64> = groups
+            .iter()
+            .map(|&(lo, hi)| per_task[lo..hi].iter().sum::<u64>().max(1))
+            .collect();
+        pool.parallel_for_costed(groups.len(), &group_costs, schedule, body);
+    } else {
+        pool.parallel_for(groups.len(), schedule, body);
+    }
+    counter_total(&totals)
+}
+
+/// Concurrent support-preserving compaction: drop the dying slots of
+/// every row, moving each survivor's support along with its column.
+/// Rows are disjoint slot ranges, so a parallel-for over rows with raw
+/// pointer partitioning is safe (the same argument as `prune_par`);
+/// `s` is the atomic support array the frontier pass just updated,
+/// accessed with relaxed loads/stores (the pass has completed — the
+/// pool's scope join is the synchronization point).
+pub fn compact_preserving_par(
+    z: &mut ZCsr,
+    s: &[AtomicU32],
+    dying: &[bool],
+    pool: &Pool,
+    schedule: Schedule,
+) -> PruneOutcome {
+    assert_eq!(s.len(), z.slots());
+    assert_eq!(dying.len(), z.slots());
+    let removed = AtomicUsize::new(0);
+    let remaining = AtomicUsize::new(0);
+    let n = z.n();
+    let row_ptr: Vec<(usize, usize)> = (0..n).map(|i| z.row_span(i)).collect();
+    let col_ptr = SendPtr(z.col_mut().as_mut_ptr());
+    let body = |_w: usize, i: usize| {
+        let (start, end) = row_ptr[i];
+        // SAFETY: rows are disjoint slot ranges; each i touches only
+        // [start, end) of the column array.
+        let col = unsafe { std::slice::from_raw_parts_mut(col_ptr.get().add(start), end - start) };
+        let sup = &s[start..end];
+        let mut write = 0usize;
+        let mut local_removed = 0usize;
+        for p in 0..col.len() {
+            let c = col[p];
+            if c == 0 {
+                break;
+            }
+            if dying[start + p] {
+                local_removed += 1;
+            } else {
+                col[write] = c;
+                let v = sup[p].load(Ordering::Relaxed);
+                sup[write].store(v, Ordering::Relaxed);
+                write += 1;
+            }
+        }
+        for slot in col.iter_mut().skip(write) {
+            *slot = 0;
+        }
+        for sp in sup.iter().skip(write) {
+            sp.store(0, Ordering::Relaxed);
+        }
+        removed.fetch_add(local_removed, Ordering::Relaxed);
+        remaining.fetch_add(write, Ordering::Relaxed);
+    };
+    if needs_costs(schedule) {
+        let costs: Vec<u64> = row_ptr.iter().map(|&(lo, hi)| (hi - lo) as u64).collect();
+        pool.parallel_for_costed(n, &costs, schedule, body);
+    } else {
+        pool.parallel_for(n, schedule, body);
+    }
+    PruneOutcome { removed: removed.into_inner(), remaining: remaining.into_inner() }
+}
+
+/// Pointer wrapper asserting cross-thread use is safe because the
+/// parallel-for partitions rows disjointly.
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+impl<T> SendPtr<T> {
+    fn get(&self) -> *mut T {
+        self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::incremental::{compact_preserving, decrement_frontier_seq, mark_frontier};
+    use crate::algo::support::compute_supports_seq;
+    use crate::par::pool::ALL_SCHEDULES;
+
+    fn working(g: &crate::graph::Csr) -> (ZCsr, Vec<u32>) {
+        let z = ZCsr::from_csr(g);
+        let mut s = Vec::new();
+        compute_supports_seq(&z, &mut s);
+        (z, s)
+    }
+
+    #[test]
+    fn par_frontier_matches_seq_all_schedules() {
+        let g = crate::gen::rmat::rmat(
+            300,
+            2200,
+            crate::gen::rmat::RmatParams::autonomous_system(),
+            &mut crate::util::Rng::new(31),
+        );
+        let (z, s0) = working(&g);
+        let in_nbrs = InNbrs::build(&z);
+        let pool = Pool::new(4);
+        for k in [4u32, 5] {
+            let f = mark_frontier(&z, &s0, k);
+            let mut s_seq = s0.clone();
+            let want_steps = decrement_frontier_seq(&z, &mut s_seq, &f, &in_nbrs);
+            for sched in ALL_SCHEDULES {
+                let s_at: Vec<AtomicU32> =
+                    s0.iter().map(|&x| AtomicU32::new(x)).collect();
+                let steps =
+                    decrement_frontier_par(&z, &pool, &f, &in_nbrs, sched, &s_at, None);
+                let got: Vec<u32> =
+                    s_at.iter().map(|x| x.load(Ordering::Relaxed)).collect();
+                assert_eq!(got, s_seq, "k={k} {sched:?}");
+                assert_eq!(steps, want_steps, "k={k} {sched:?}");
+            }
+            // the coarse (row-grouped) enumeration agrees too
+            for gran in
+                [Granularity::Coarse, Granularity::Fine, Granularity::Segment { len: 8 }]
+            {
+                let s_at: Vec<AtomicU32> =
+                    s0.iter().map(|&x| AtomicU32::new(x)).collect();
+                let steps = decrement_frontier_par_gran(
+                    &z,
+                    &pool,
+                    &f,
+                    &in_nbrs,
+                    gran,
+                    Schedule::WorkAware,
+                    &s_at,
+                    None,
+                );
+                let got: Vec<u32> =
+                    s_at.iter().map(|x| x.load(Ordering::Relaxed)).collect();
+                assert_eq!(got, s_seq, "k={k} {gran}");
+                assert_eq!(steps, want_steps, "k={k} {gran}");
+            }
+        }
+    }
+
+    #[test]
+    fn par_compaction_matches_seq() {
+        let g = crate::gen::erdos_renyi::gnm(200, 1400, &mut crate::util::Rng::new(6));
+        let (z0, s0) = working(&g);
+        let in_nbrs = InNbrs::build(&z0);
+        let f = mark_frontier(&z0, &s0, 4);
+        // sequential reference
+        let mut z_seq = z0.clone();
+        let mut s_seq = s0.clone();
+        decrement_frontier_seq(&z_seq, &mut s_seq, &f, &in_nbrs);
+        let want = compact_preserving(&mut z_seq, &mut s_seq, &f.dying);
+        let pool = Pool::new(3);
+        for sched in ALL_SCHEDULES {
+            let mut z_par = z0.clone();
+            let s_at: Vec<AtomicU32> = s0.iter().map(|&x| AtomicU32::new(x)).collect();
+            decrement_frontier_par(&z_par, &pool, &f, &in_nbrs, sched, &s_at, None);
+            let got = compact_preserving_par(&mut z_par, &s_at, &f.dying, &pool, sched);
+            assert_eq!(got, want, "{sched:?}");
+            assert_eq!(z_par, z_seq, "{sched:?}");
+            let s_got: Vec<u32> = s_at.iter().map(|x| x.load(Ordering::Relaxed)).collect();
+            assert_eq!(s_got, s_seq, "{sched:?}");
+            assert!(crate::graph::validate::check_zcsr(&z_par).is_ok(), "{sched:?}");
+        }
+    }
+
+    #[test]
+    fn empty_frontier_par_is_noop() {
+        let g = crate::graph::builder::from_sorted_unique(3, &[(0, 1), (0, 2), (1, 2)]);
+        let (z, s0) = working(&g);
+        let in_nbrs = InNbrs::build(&z);
+        let f = mark_frontier(&z, &s0, 3);
+        assert!(f.is_empty());
+        let pool = Pool::new(4);
+        let s_at: Vec<AtomicU32> = s0.iter().map(|&x| AtomicU32::new(x)).collect();
+        for sched in ALL_SCHEDULES {
+            let steps = decrement_frontier_par(&z, &pool, &f, &in_nbrs, sched, &s_at, None);
+            assert_eq!(steps, 0, "{sched:?}");
+        }
+    }
+}

@@ -5,15 +5,19 @@
 //! at every granularity (coarse rows, fine nonzeros, partner-row
 //! segments). This layer owns load balancing at *task* granularity:
 //! given the tasks [`crate::algo`] defines, distribute them across the
-//! pool so no worker starves behind a hub row.
+//! pool so no worker starves behind a hub row. The incremental support
+//! driver's frontier pass ([`frontier`]) runs here too, binning the
+//! pruned-edge frontier instead of the whole graph.
 
 pub mod balance;
+pub mod frontier;
 pub mod parallel_support;
 pub mod pool;
 
 pub use balance::{estimate_costs, scan_bins, Costs};
+pub use frontier::{compact_preserving_par, decrement_frontier_par, decrement_frontier_par_gran};
 pub use parallel_support::{
     compute_supports_gran, compute_supports_par, compute_supports_segmented, ktruss_par,
-    ktruss_par_gran, prune_par,
+    ktruss_par_gran, ktruss_par_gran_mode, ktruss_par_mode, prune_par,
 };
 pub use pool::{Pool, Schedule, ALL_SCHEDULES};

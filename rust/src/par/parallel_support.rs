@@ -12,12 +12,14 @@
 //! schedules run the plain parallel-for.
 
 use super::balance::{self, Costs};
+use super::frontier;
 use super::pool::{Pool, Schedule};
+use crate::algo::incremental::{self, InNbrs, SupportMode};
 use crate::algo::support::{
     eager_update_atomic, eager_update_segment_atomic, segment_tasks, Granularity, Mode,
 };
 use crate::graph::ZCsr;
-use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 
 /// Run one support pass concurrently; returns the plain support array.
 pub fn compute_supports_par(z: &ZCsr, pool: &Pool, mode: Mode, schedule: Schedule) -> Vec<u32> {
@@ -31,16 +33,34 @@ fn needs_costs(schedule: Schedule) -> bool {
     matches!(schedule, Schedule::WorkAware | Schedule::Stealing)
 }
 
+/// Cache-line-padded per-worker step counter: each worker's accumulator
+/// owns its own 64B line, so the hot kernel's step accounting never
+/// false-shares a line between cores (a plain `Vec<AtomicU64>` packs
+/// eight counters per line and would ping-pong it on every task).
+#[repr(align(64))]
+pub(crate) struct PaddedCounter(pub(crate) AtomicU64);
+
+/// One zeroed counter per pool worker.
+pub(crate) fn worker_counters(pool: &Pool) -> Vec<PaddedCounter> {
+    (0..pool.workers()).map(|_| PaddedCounter(AtomicU64::new(0))).collect()
+}
+
+/// Sum the per-worker counters after the pass joined.
+pub(crate) fn counter_total(counters: &[PaddedCounter]) -> u64 {
+    counters.iter().map(|c| c.0.load(Ordering::Relaxed)).sum()
+}
+
 /// Run one support pass into an existing (zeroed) atomic array.
-/// Work-aware schedules bin on the static cost estimates.
+/// Work-aware schedules bin on the static cost estimates. Returns the
+/// exact total merge steps of the pass.
 pub fn compute_supports_into(
     z: &ZCsr,
     pool: &Pool,
     mode: Mode,
     schedule: Schedule,
     s: &[AtomicU32],
-) {
-    compute_supports_costed(z, pool, mode, schedule, s, None, None);
+) -> u64 {
+    compute_supports_costed(z, pool, mode, schedule, s, None, None)
 }
 
 /// Run one support pass into an existing (zeroed) atomic array, with
@@ -55,6 +75,10 @@ pub fn compute_supports_into(
 ///   slots record 0). One relaxed store per slot — cheap relative to
 ///   the merge itself, and it turns the *next* pass's binning from
 ///   upper bounds into ground truth (see [`ktruss_par`]).
+///
+/// Returns the exact total merge steps of the pass (accumulated in
+/// per-worker counters, so the hot loop pays no shared-counter
+/// contention).
 pub fn compute_supports_costed(
     z: &ZCsr,
     pool: &Pool,
@@ -63,11 +87,12 @@ pub fn compute_supports_costed(
     s: &[AtomicU32],
     costs: Option<&Costs>,
     measured: Option<&[AtomicU32]>,
-) {
+) -> u64 {
     assert_eq!(s.len(), z.slots());
     if let Some(m) = measured {
         assert_eq!(m.len(), z.slots(), "one measured-step cell per slot");
     }
+    let totals = worker_counters(pool);
     let col = z.col();
     // resolve the binner's cost vector (work-aware schedules only)
     let owned_costs: Option<Costs> = if needs_costs(schedule) && costs.is_none() {
@@ -84,8 +109,9 @@ pub fn compute_supports_costed(
         Mode::Coarse => {
             // one task per row (paper Algorithm 2): the task walks all
             // live entries of a₁₂ᵀ
-            let task = |_w: usize, i: usize| {
+            let task = |w: usize, i: usize| {
                 let (start, end) = z.row_span(i);
+                let mut row_steps = 0u64;
                 for p in start..end {
                     let kappa = col[p];
                     if kappa == 0 {
@@ -93,10 +119,12 @@ pub fn compute_supports_costed(
                     }
                     let (r0, _) = z.row_span(kappa as usize);
                     let steps = eager_update_atomic(col, s, p, r0);
+                    row_steps += steps;
                     if let Some(m) = measured {
                         m[p].store(steps.min(u32::MAX as u64) as u32, Ordering::Relaxed);
                     }
                 }
+                totals[w].0.fetch_add(row_steps, Ordering::Relaxed);
             };
             match cost_vec {
                 Some(c) => {
@@ -111,7 +139,7 @@ pub fn compute_supports_costed(
             // range over the zero-terminated nonzero array; terminator
             // and tombstone slots are trivial no-ops, exactly as in the
             // paper's flat RangePolicy formulation
-            let task = |_w: usize, p: usize| {
+            let task = |w: usize, p: usize| {
                 let kappa = col[p];
                 if kappa == 0 {
                     if let Some(m) = measured {
@@ -121,6 +149,7 @@ pub fn compute_supports_costed(
                 }
                 let (r0, _) = z.row_span(kappa as usize);
                 let steps = eager_update_atomic(col, s, p, r0);
+                totals[w].0.fetch_add(steps, Ordering::Relaxed);
                 if let Some(m) = measured {
                     m[p].store(steps.min(u32::MAX as u64) as u32, Ordering::Relaxed);
                 }
@@ -134,6 +163,7 @@ pub fn compute_supports_costed(
             }
         }
     }
+    counter_total(&totals)
 }
 
 /// Run one **segment-split** support pass into an existing (zeroed)
@@ -143,19 +173,22 @@ pub fn compute_supports_costed(
 /// accumulation is atomic throughout. Work-aware schedules scan-bin the
 /// per-segment cost estimates ([`crate::algo::support::SegTask::estimated_steps`])
 /// into equal-work chunks; segments are already near-uniform, so this
-/// mainly absorbs the variable in-range tail work.
+/// mainly absorbs the variable in-range tail work. Returns the exact
+/// total merge steps of the pass.
 pub fn compute_supports_segmented(
     z: &ZCsr,
     pool: &Pool,
     len: u32,
     schedule: Schedule,
     s: &[AtomicU32],
-) {
+) -> u64 {
     assert_eq!(s.len(), z.slots());
     let tasks = segment_tasks(z, len);
     let col = z.col();
-    let body = |_w: usize, ti: usize| {
-        eager_update_segment_atomic(col, s, &tasks[ti]);
+    let totals = worker_counters(pool);
+    let body = |w: usize, ti: usize| {
+        let steps = eager_update_segment_atomic(col, s, &tasks[ti]);
+        totals[w].0.fetch_add(steps, Ordering::Relaxed);
     };
     if needs_costs(schedule) {
         let costs: Vec<u64> = tasks.iter().map(|t| t.estimated_steps()).collect();
@@ -163,6 +196,7 @@ pub fn compute_supports_segmented(
     } else {
         pool.parallel_for(tasks.len(), schedule, body);
     }
+    counter_total(&totals)
 }
 
 /// Run one support pass at any [`Granularity`]; returns the plain
@@ -261,15 +295,9 @@ impl<T> SendPtr<T> {
     }
 }
 
-/// Full concurrent k-truss (support + prune until convergence) — the
-/// production entry point used by the coordinator's CPU engine.
-///
-/// Work-aware schedules run a *calibrated* convergence loop: iteration
-/// 0 bins on the static upper bounds, every later iteration bins on
-/// the **measured** per-slot merge steps of the previous pass
-/// ([`Costs::from_trace`], masked against the post-prune working form).
-/// Pruning skews rows away from the static bounds; replaying the exact
-/// last-iteration costs keeps the scan bins tight as the truss shrinks.
+/// Full concurrent k-truss (support + prune until convergence) under
+/// the default [`SupportMode::Auto`] driver — the production entry
+/// point used by the coordinator's CPU engine.
 ///
 /// ```
 /// use ktruss::algo::support::Mode;
@@ -288,70 +316,133 @@ pub fn ktruss_par(
     mode: Mode,
     schedule: Schedule,
 ) -> crate::algo::ktruss::KtrussResult {
+    ktruss_par_mode(g, k, pool, mode, schedule, SupportMode::Auto)
+}
+
+/// [`ktruss_par`] with an explicit support-maintenance mode.
+///
+/// Full recomputes run a *calibrated* pass under the work-aware
+/// schedules: the first bins on the static upper bounds, every later
+/// one on the **measured** per-slot merge steps of the previous full
+/// pass ([`Costs::from_trace`], masked against the current working
+/// form). Incremental iterations instead run the parallel frontier
+/// pass ([`frontier::decrement_frontier_par`]): the binner receives
+/// per-frontier-task cost estimates, so the work-aware schedules bin
+/// the *frontier*, not the whole graph — and the same estimate total
+/// drives the [`SupportMode::Auto`] crossover back to a full recompute
+/// when the frontier is too large to be worth it.
+pub fn ktruss_par_mode(
+    g: &crate::graph::Csr,
+    k: u32,
+    pool: &Pool,
+    mode: Mode,
+    schedule: Schedule,
+    support: SupportMode,
+) -> crate::algo::ktruss::KtrussResult {
     let mut z = ZCsr::from_csr(g);
     let s_atomic: Vec<AtomicU32> = (0..z.slots()).map(|_| AtomicU32::new(0)).collect();
     let mut s_plain = vec![0u32; z.slots()];
     // measure per-slot steps only when a work-aware schedule will
-    // consume them next iteration
+    // consume them at the next full pass
     let measure = needs_costs(schedule);
     let measured: Vec<AtomicU32> = if measure {
         (0..z.slots()).map(|_| AtomicU32::new(0)).collect()
     } else {
         Vec::new()
     };
+    let measured_opt = if measure { Some(measured.as_slice()) } else { None };
     let mut measured_snap: Vec<u32> = Vec::new();
-    let mut costs: Option<Costs> = None;
+    let use_inc = support.allows_incremental();
     let mut iterations = 0usize;
     let mut stats = Vec::new();
+    if z.live_edges() == 0 {
+        return crate::algo::ktruss::KtrussResult {
+            truss: z.to_csr(),
+            iterations,
+            stats,
+            k,
+            mode,
+        };
+    }
+    let in_nbrs: Option<InNbrs> = if use_inc { Some(InNbrs::build(&z)) } else { None };
+    // initial full pass (statically binned)
+    let mut pass_steps = compute_supports_costed(
+        &z, pool, mode, schedule, &s_atomic, None, measured_opt,
+    );
+    let mut pass_incremental = false;
+    let mut last_full_steps = pass_steps;
+    if measure {
+        measured_snap.extend(measured.iter().map(|a| a.load(Ordering::Relaxed)));
+    }
     loop {
         let live = z.live_edges();
         if live == 0 {
             break;
         }
-        compute_supports_costed(
-            &z,
-            pool,
-            mode,
-            schedule,
-            &s_atomic,
-            costs.as_ref(),
-            if measure { Some(measured.as_slice()) } else { None },
-        );
-        for (d, a) in s_plain.iter_mut().zip(s_atomic.iter()) {
-            *d = a.swap(0, Ordering::Relaxed);
-        }
-        let support_steps = s_plain.iter().map(|&x| x as u64).sum::<u64>() + live as u64;
-        let out = prune_par(&mut z, &mut s_plain, k, pool, schedule);
+        let f = incremental::mark_frontier_with(&z, k, |p| {
+            s_atomic[p].load(Ordering::Relaxed)
+        });
         iterations += 1;
         stats.push(crate::algo::ktruss::IterationStat {
             live_edges: live,
-            removed: out.removed,
-            support_steps,
+            removed: f.len(),
+            support_steps: pass_steps,
+            incremental: pass_incremental,
         });
-        if out.removed == 0 {
+        if f.is_empty() {
             break;
         }
-        if measure {
-            // feed the measured pass back into the binner, masked
-            // against the just-pruned working form (row_ptr is stable
-            // under prune-compaction, so slot indices stay aligned)
-            measured_snap.clear();
-            measured_snap.extend(measured.iter().map(|a| a.load(Ordering::Relaxed)));
-            costs = Some(Costs::from_trace(&measured_snap, &z, mode));
+        // decide how to bring S up to date for the shrunken graph (the
+        // shared per-round decision; auto hands back the frontier cost
+        // estimates for the binner)
+        let (go_incremental, frontier_cost_vec) =
+            incremental::decide_incremental(&z, &f, in_nbrs.as_ref(), support, last_full_steps);
+        if go_incremental {
+            let nbrs = in_nbrs.as_ref().expect("incremental mode builds the index");
+            pass_steps = frontier::decrement_frontier_par(
+                &z,
+                pool,
+                &f,
+                nbrs,
+                schedule,
+                &s_atomic,
+                frontier_cost_vec.as_deref(),
+            );
+            pass_incremental = true;
+            frontier::compact_preserving_par(&mut z, &s_atomic, &f.dying, pool, schedule);
+        } else {
+            // classic path: drain the atomic supports, prune (resetting
+            // them), recompute with trace-calibrated binning
+            for (d, a) in s_plain.iter_mut().zip(s_atomic.iter()) {
+                *d = a.swap(0, Ordering::Relaxed);
+            }
+            prune_par(&mut z, &mut s_plain, k, pool, schedule);
+            if z.live_edges() == 0 {
+                pass_steps = 0;
+                pass_incremental = false;
+            } else {
+                // feed the measured previous full pass into the binner,
+                // masked against the just-pruned working form (row_ptr
+                // is stable under compaction, so slots stay row-aligned)
+                let costs = (measure && !measured_snap.is_empty())
+                    .then(|| Costs::from_trace(&measured_snap, &z, mode));
+                pass_steps = compute_supports_costed(
+                    &z, pool, mode, schedule, &s_atomic, costs.as_ref(), measured_opt,
+                );
+                pass_incremental = false;
+                last_full_steps = pass_steps;
+                if measure {
+                    measured_snap.clear();
+                    measured_snap.extend(measured.iter().map(|a| a.load(Ordering::Relaxed)));
+                }
+            }
         }
     }
     crate::algo::ktruss::KtrussResult { truss: z.to_csr(), iterations, stats, k, mode }
 }
 
-/// Full concurrent k-truss at any [`Granularity`]. Coarse/fine delegate
-/// to [`ktruss_par`]; the segment split runs its own convergence loop
-/// over [`compute_supports_segmented`] + [`prune_par`] (segment costs
-/// are re-estimated from the compacted working form each iteration, so
-/// the binner tracks pruning without a measured-trace feedback path).
-///
-/// The returned [`crate::algo::ktruss::KtrussResult`] records
-/// [`Mode::Fine`] for segment runs — the segment split is a sub-division
-/// of fine tasks and produces identical results at every granularity.
+/// Full concurrent k-truss at any [`Granularity`] under the default
+/// [`SupportMode::Auto`] driver. See [`ktruss_par_gran_mode`].
 pub fn ktruss_par_gran(
     g: &crate::graph::Csr,
     k: u32,
@@ -359,35 +450,99 @@ pub fn ktruss_par_gran(
     gran: Granularity,
     schedule: Schedule,
 ) -> crate::algo::ktruss::KtrussResult {
+    ktruss_par_gran_mode(g, k, pool, gran, schedule, SupportMode::Auto)
+}
+
+/// Full concurrent k-truss at any [`Granularity`] with an explicit
+/// support-maintenance mode. Coarse/fine delegate to
+/// [`ktruss_par_mode`]; the segment split runs its own convergence loop
+/// whose **full** passes use [`compute_supports_segmented`] (segment
+/// costs re-estimated from the compacted working form each iteration)
+/// and whose **incremental** iterations run the frontier pass at the
+/// matching granularity ([`frontier::decrement_frontier_par_gran`]).
+///
+/// The returned [`crate::algo::ktruss::KtrussResult`] records
+/// [`Mode::Fine`] for segment runs — the segment split is a sub-division
+/// of fine tasks and produces identical results at every granularity.
+pub fn ktruss_par_gran_mode(
+    g: &crate::graph::Csr,
+    k: u32,
+    pool: &Pool,
+    gran: Granularity,
+    schedule: Schedule,
+    support: SupportMode,
+) -> crate::algo::ktruss::KtrussResult {
     let len = match gran {
-        Granularity::Coarse => return ktruss_par(g, k, pool, Mode::Coarse, schedule),
-        Granularity::Fine => return ktruss_par(g, k, pool, Mode::Fine, schedule),
+        Granularity::Coarse => return ktruss_par_mode(g, k, pool, Mode::Coarse, schedule, support),
+        Granularity::Fine => return ktruss_par_mode(g, k, pool, Mode::Fine, schedule, support),
         Granularity::Segment { len } => len,
     };
     let mut z = ZCsr::from_csr(g);
     let s_atomic: Vec<AtomicU32> = (0..z.slots()).map(|_| AtomicU32::new(0)).collect();
     let mut s_plain = vec![0u32; z.slots()];
+    let use_inc = support.allows_incremental();
     let mut iterations = 0usize;
     let mut stats = Vec::new();
+    if z.live_edges() == 0 {
+        return crate::algo::ktruss::KtrussResult {
+            truss: z.to_csr(),
+            iterations,
+            stats,
+            k,
+            mode: Mode::Fine,
+        };
+    }
+    let in_nbrs: Option<InNbrs> = if use_inc { Some(InNbrs::build(&z)) } else { None };
+    let mut pass_steps = compute_supports_segmented(&z, pool, len, schedule, &s_atomic);
+    let mut pass_incremental = false;
+    let mut last_full_steps = pass_steps;
     loop {
         let live = z.live_edges();
         if live == 0 {
             break;
         }
-        compute_supports_segmented(&z, pool, len, schedule, &s_atomic);
-        for (d, a) in s_plain.iter_mut().zip(s_atomic.iter()) {
-            *d = a.swap(0, Ordering::Relaxed);
-        }
-        let support_steps = s_plain.iter().map(|&x| x as u64).sum::<u64>() + live as u64;
-        let out = prune_par(&mut z, &mut s_plain, k, pool, schedule);
+        let f = incremental::mark_frontier_with(&z, k, |p| {
+            s_atomic[p].load(Ordering::Relaxed)
+        });
         iterations += 1;
         stats.push(crate::algo::ktruss::IterationStat {
             live_edges: live,
-            removed: out.removed,
-            support_steps,
+            removed: f.len(),
+            support_steps: pass_steps,
+            incremental: pass_incremental,
         });
-        if out.removed == 0 {
+        if f.is_empty() {
             break;
+        }
+        let (go_incremental, frontier_cost_vec) =
+            incremental::decide_incremental(&z, &f, in_nbrs.as_ref(), support, last_full_steps);
+        if go_incremental {
+            let nbrs = in_nbrs.as_ref().expect("incremental mode builds the index");
+            pass_steps = frontier::decrement_frontier_par_gran(
+                &z,
+                pool,
+                &f,
+                nbrs,
+                gran,
+                schedule,
+                &s_atomic,
+                frontier_cost_vec.as_deref(),
+            );
+            pass_incremental = true;
+            frontier::compact_preserving_par(&mut z, &s_atomic, &f.dying, pool, schedule);
+        } else {
+            for (d, a) in s_plain.iter_mut().zip(s_atomic.iter()) {
+                *d = a.swap(0, Ordering::Relaxed);
+            }
+            prune_par(&mut z, &mut s_plain, k, pool, schedule);
+            if z.live_edges() == 0 {
+                pass_steps = 0;
+                pass_incremental = false;
+            } else {
+                pass_steps = compute_supports_segmented(&z, pool, len, schedule, &s_atomic);
+                pass_incremental = false;
+                last_full_steps = pass_steps;
+            }
         }
     }
     crate::algo::ktruss::KtrussResult {
@@ -489,6 +644,79 @@ mod tests {
             let par = ktruss_par_gran(&g, k, &pool, Granularity::Coarse, Schedule::WorkAware);
             assert_eq!(par.truss, seq.truss, "k={k} coarse delegation");
         }
+    }
+
+    #[test]
+    fn par_mode_drivers_match_seq_exactly() {
+        // truss, iterations AND exact per-iteration support steps must
+        // agree between the sequential and pooled drivers in every
+        // support mode (the crossover sees identical inputs, so even
+        // auto's per-round decisions coincide)
+        let g = random_graph(33);
+        let pool = Pool::new(4);
+        for support in [SupportMode::Full, SupportMode::Incremental, SupportMode::Auto] {
+            for k in [3u32, 5] {
+                let seq = crate::algo::ktruss::ktruss_mode(&g, k, Mode::Fine, support);
+                for sched in [Schedule::Static, Schedule::WorkAware, Schedule::Stealing] {
+                    let par = ktruss_par_mode(&g, k, &pool, Mode::Fine, sched, support);
+                    assert_eq!(par.truss, seq.truss, "k={k} {support} {sched:?}");
+                    assert_eq!(par.iterations, seq.iterations, "k={k} {support} {sched:?}");
+                    let seq_steps: Vec<u64> =
+                        seq.stats.iter().map(|s| s.support_steps).collect();
+                    let par_steps: Vec<u64> =
+                        par.stats.iter().map(|s| s.support_steps).collect();
+                    assert_eq!(par_steps, seq_steps, "k={k} {support} {sched:?}");
+                    let seq_inc: Vec<bool> = seq.stats.iter().map(|s| s.incremental).collect();
+                    let par_inc: Vec<bool> = par.stats.iter().map(|s| s.incremental).collect();
+                    assert_eq!(par_inc, seq_inc, "k={k} {support} {sched:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn segment_mode_driver_matches_seq() {
+        let g = random_graph(34);
+        let pool = Pool::new(3);
+        for support in [SupportMode::Full, SupportMode::Incremental, SupportMode::Auto] {
+            for k in [3u32, 5] {
+                let seq = ktruss(&g, k, Mode::Fine);
+                let par = ktruss_par_gran_mode(
+                    &g,
+                    k,
+                    &pool,
+                    Granularity::Segment { len: 16 },
+                    Schedule::WorkAware,
+                    support,
+                );
+                assert_eq!(par.truss, seq.truss, "k={k} {support}");
+                assert_eq!(par.iterations, seq.iterations, "k={k} {support}");
+            }
+        }
+    }
+
+    #[test]
+    fn costed_pass_returns_exact_total_steps() {
+        let g = random_graph(35);
+        let z = ZCsr::from_csr(&g);
+        let mut s_trace = Vec::new();
+        let tr = crate::cost::trace::trace_supports(&z, &mut s_trace);
+        let pool = Pool::new(4);
+        for mode in [Mode::Coarse, Mode::Fine] {
+            for sched in [Schedule::Static, Schedule::WorkAware, Schedule::Stealing] {
+                let s: Vec<AtomicU32> = (0..z.slots()).map(|_| AtomicU32::new(0)).collect();
+                let total = compute_supports_costed(&z, &pool, mode, sched, &s, None, None);
+                assert_eq!(total, tr.total_steps, "{mode} {sched:?}");
+            }
+        }
+        // the segmented pass counts its own (bounded-merge) steps: they
+        // must match the sequential segmented kernel's total exactly
+        let mut s_seg = Vec::new();
+        let want_seg =
+            crate::algo::support::compute_supports_segmented_seq(&z, 16, &mut s_seg);
+        let s: Vec<AtomicU32> = (0..z.slots()).map(|_| AtomicU32::new(0)).collect();
+        let total = compute_supports_segmented(&z, &pool, 16, Schedule::WorkAware, &s);
+        assert_eq!(total, want_seg, "segment");
     }
 
     #[test]

@@ -10,18 +10,24 @@
 //!   partner row), scaled by a per-kind iteration factor. Units are
 //!   abstract "steps" — only *ratios* matter for the executor's
 //!   equal-work batch packing.
-//! * **Calibration** ([`CostModel`]): an EWMA of observed ns-per-step
-//!   from completed jobs, optionally seeded from persisted
-//!   [`cost::persist`](crate::cost::persist) trace records of prior
-//!   runs. This converts steps into predicted milliseconds for
-//!   deadline-aware decisions, and tightens as the service runs — the
-//!   job-level analogue of feeding measured `cost::replay` traces back
-//!   into the work-aware binner.
+//! * **Calibration** ([`CostModel`]): EWMAs of observed ns-per-step
+//!   from completed jobs — one **per job label** (kind, and for truss
+//!   jobs the support mode that actually ran: an incremental iteration
+//!   profile has a very different ns-per-estimated-step than a full
+//!   recompute, and the two must not pollute one shared estimate) plus
+//!   a global fallback for labels with no samples yet. Optionally
+//!   seeded from persisted [`cost::persist`](crate::cost::persist)
+//!   trace records of prior runs (records carry the label). This
+//!   converts steps into predicted milliseconds for deadline-aware
+//!   decisions, and tightens as the service runs — the job-level
+//!   analogue of feeding measured `cost::replay` traces back into the
+//!   work-aware binner.
 
+use crate::algo::incremental::SupportMode;
 use crate::coordinator::job::JobKind;
 use crate::cost::persist::TraceRecord;
 use crate::graph::Csr;
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::sync::Mutex;
 
 /// Conservative default until the first observation lands (observed
@@ -48,6 +54,17 @@ pub fn kind_label(kind: &JobKind) -> &'static str {
     }
 }
 
+/// Calibration label for a completed job: the kind label, suffixed with
+/// the support mode the truss driver actually ran under (recorded in
+/// [`crate::coordinator::job::JobResult::support`]). Distinct labels
+/// keep incremental and full iteration profiles in separate EWMAs.
+pub fn job_label(kind: &JobKind, support: Option<SupportMode>) -> String {
+    match support {
+        Some(mode) => format!("{}+{mode}", kind_label(kind)),
+        None => kind_label(kind).to_string(),
+    }
+}
+
 /// Static upper-bound work estimate for one job, in merge steps.
 ///
 /// Per support pass: row `i` with `lᵢ` live entries costs
@@ -56,6 +73,19 @@ pub fn kind_label(kind: &JobKind) -> &'static str {
 /// many passes the algorithm typically drives (K_max and decomposition
 /// re-run the convergence loop per k).
 pub fn estimate_steps(g: &Csr, kind: &JobKind) -> u64 {
+    estimate_steps_mode(g, kind, SupportMode::Full)
+}
+
+/// [`estimate_steps`] under an explicit support-maintenance profile.
+/// `support` only affects the fixed-k truss (the one kind whose driver
+/// the serving policy actually selects): incremental/auto pays one full
+/// pass plus frontier-sized updates, so its multiplier collapses to a
+/// single pass plus an `O(nnz)` frontier term. K_max and decomposition
+/// *always* chain k-levels warm through the incremental driver, so
+/// their multipliers are fixed (and lower than the pre-incremental
+/// 8x/12x) regardless of `support` — a submit-time override must not
+/// move their estimates when it cannot move their execution.
+pub fn estimate_steps_mode(g: &Csr, kind: &JobKind, support: SupportMode) -> u64 {
     let n = g.n();
     let live: Vec<u32> = (0..n).map(|i| g.row(i).len() as u32).collect();
     let mut merge: u64 = 0;
@@ -66,18 +96,46 @@ pub fn estimate_steps(g: &Csr, kind: &JobKind) -> u64 {
             merge += live[kappa as usize] as u64;
         }
     }
-    let mult: u64 = match kind {
-        JobKind::Triangles => 1,
-        JobKind::Ktruss { .. } => 3,
-        JobKind::Kmax => 8,
-        JobKind::Decompose => 12,
+    let est = match kind {
+        JobKind::Triangles => merge,
+        JobKind::Ktruss { .. } if support.allows_incremental() => {
+            merge.saturating_add(g.nnz() as u64)
+        }
+        JobKind::Ktruss { .. } => merge.saturating_mul(3),
+        JobKind::Kmax => merge.saturating_mul(4),
+        JobKind::Decompose => merge.saturating_mul(6),
     };
-    merge.saturating_mul(mult).max(1)
+    est.max(1)
+}
+
+/// One exponentially-weighted ns-per-step estimate.
+#[derive(Clone, Copy)]
+struct Ewma {
+    ns_per_step: f64,
+    samples: u64,
+}
+
+impl Ewma {
+    fn new() -> Ewma {
+        Ewma { ns_per_step: DEFAULT_NS_PER_STEP, samples: 0 }
+    }
+
+    fn fold(&mut self, observed: f64) {
+        self.ns_per_step = if self.samples == 0 {
+            observed
+        } else {
+            EWMA_ALPHA * observed + (1.0 - EWMA_ALPHA) * self.ns_per_step
+        };
+        self.samples += 1;
+    }
 }
 
 struct ModelState {
-    ns_per_step: f64,
-    samples: u64,
+    /// Fallback over every observation (labels with no samples yet
+    /// predict through this).
+    global: Ewma,
+    /// One EWMA per job label ([`job_label`]).
+    per_label: HashMap<String, Ewma>,
     records: VecDeque<TraceRecord>,
 }
 
@@ -98,36 +156,53 @@ impl CostModel {
     pub fn new() -> CostModel {
         CostModel {
             state: Mutex::new(ModelState {
-                ns_per_step: DEFAULT_NS_PER_STEP,
-                samples: 0,
+                global: Ewma::new(),
+                per_label: HashMap::new(),
                 records: VecDeque::new(),
             }),
         }
     }
 
     /// Seed the calibration from persisted trace records (replayed in
-    /// order through the same EWMA the live path uses).
+    /// order through the same per-label EWMAs the live path uses —
+    /// records carry the label in their `kind` field).
     pub fn from_records(records: &[TraceRecord]) -> CostModel {
         let model = CostModel::new();
         {
             let mut st = model.state.lock().unwrap();
             for r in records {
-                update(&mut st, r.est_steps, r.wall_ms);
+                update(&mut st, &r.kind, r.est_steps, r.wall_ms);
             }
         }
         model
     }
 
-    /// Record one completed job: refine ns-per-step and retain the
-    /// trace record for persistence (freshest [`RECORD_CAP`] kept).
+    /// Record one completed job under its kind label (no support-mode
+    /// provenance). Prefer [`CostModel::observe_labeled`] when the
+    /// executed support mode is known.
     pub fn observe(&self, kind: &JobKind, n: usize, m: usize, est_steps: u64, wall_ms: f64) {
+        self.observe_labeled(kind_label(kind), n, m, est_steps, wall_ms);
+    }
+
+    /// Record one completed job under an explicit calibration label
+    /// (see [`job_label`]): refine that label's EWMA plus the global
+    /// fallback, and retain the trace record for persistence (freshest
+    /// [`RECORD_CAP`] kept).
+    pub fn observe_labeled(
+        &self,
+        label: &str,
+        n: usize,
+        m: usize,
+        est_steps: u64,
+        wall_ms: f64,
+    ) {
         let mut st = self.state.lock().unwrap();
-        update(&mut st, est_steps, wall_ms);
+        update(&mut st, label, est_steps, wall_ms);
         if st.records.len() == RECORD_CAP {
             st.records.pop_front();
         }
         st.records.push_back(TraceRecord {
-            kind: kind_label(kind).to_string(),
+            kind: label.to_string(),
             n,
             m,
             est_steps,
@@ -135,19 +210,46 @@ impl CostModel {
         });
     }
 
-    /// Current calibrated cost of one estimated step, in nanoseconds.
+    /// Globally calibrated cost of one estimated step, in nanoseconds.
     pub fn ns_per_step(&self) -> f64 {
-        self.state.lock().unwrap().ns_per_step
+        self.state.lock().unwrap().global.ns_per_step
     }
 
-    /// Observations folded into the calibration so far.
+    /// Calibrated ns/step for one job label, falling back to the global
+    /// estimate until the label has samples of its own.
+    pub fn ns_per_step_for(&self, label: &str) -> f64 {
+        let st = self.state.lock().unwrap();
+        match st.per_label.get(label) {
+            Some(e) if e.samples > 0 => e.ns_per_step,
+            _ => st.global.ns_per_step,
+        }
+    }
+
+    /// Observations folded into the calibration so far (all labels).
     pub fn samples(&self) -> u64 {
-        self.state.lock().unwrap().samples
+        self.state.lock().unwrap().global.samples
     }
 
-    /// Predicted wall time for a job with the given static estimate.
+    /// Observations folded into one label's EWMA.
+    pub fn samples_for(&self, label: &str) -> u64 {
+        self.state
+            .lock()
+            .unwrap()
+            .per_label
+            .get(label)
+            .map(|e| e.samples)
+            .unwrap_or(0)
+    }
+
+    /// Predicted wall time for a job with the given static estimate
+    /// (global calibration).
     pub fn predict_ms(&self, est_steps: u64) -> f64 {
         est_steps as f64 * self.ns_per_step() / 1e6
+    }
+
+    /// Predicted wall time under one label's calibration.
+    pub fn predict_ms_for(&self, label: &str, est_steps: u64) -> f64 {
+        est_steps as f64 * self.ns_per_step_for(label) / 1e6
     }
 
     /// Snapshot of retained trace records, oldest first (for
@@ -157,17 +259,16 @@ impl CostModel {
     }
 }
 
-fn update(st: &mut ModelState, est_steps: u64, wall_ms: f64) {
+fn update(st: &mut ModelState, label: &str, est_steps: u64, wall_ms: f64) {
     if est_steps == 0 || !wall_ms.is_finite() || wall_ms < 0.0 {
         return;
     }
     let observed = wall_ms * 1e6 / est_steps as f64;
-    st.ns_per_step = if st.samples == 0 {
-        observed
-    } else {
-        EWMA_ALPHA * observed + (1.0 - EWMA_ALPHA) * st.ns_per_step
-    };
-    st.samples += 1;
+    st.global.fold(observed);
+    st.per_label
+        .entry(label.to_string())
+        .or_insert_with(Ewma::new)
+        .fold(observed);
 }
 
 #[cfg(test)]
@@ -231,6 +332,59 @@ mod tests {
         m.observe(&kind, 10, 20, 0, 1.0);
         m.observe(&kind, 10, 20, 100, f64::NAN);
         assert_eq!(m.samples(), 2);
+    }
+
+    #[test]
+    fn per_label_calibration_is_isolated() {
+        let m = CostModel::new();
+        let kind = JobKind::Ktruss { k: 3, mode: Mode::Fine };
+        let full = job_label(&kind, Some(SupportMode::Full));
+        let inc = job_label(&kind, Some(SupportMode::Incremental));
+        assert_eq!(full, "ktruss+full");
+        assert_eq!(inc, "ktruss+incremental");
+        // full iterations: 10 ns/step; incremental: 1 ns/step
+        m.observe_labeled(&full, 10, 20, 1000, 0.01);
+        m.observe_labeled(&inc, 10, 20, 1000, 0.001);
+        assert!((m.ns_per_step_for(&full) - 10.0).abs() < 1e-9);
+        assert!((m.ns_per_step_for(&inc) - 1.0).abs() < 1e-9);
+        assert_eq!(m.samples_for(&full), 1);
+        assert_eq!(m.samples_for(&inc), 1);
+        // the global fallback blends both; unseen labels use it
+        assert_eq!(m.samples(), 2);
+        assert!((m.ns_per_step_for("kmax") - m.ns_per_step()).abs() < 1e-9);
+        assert!(
+            (m.predict_ms_for(&inc, 1_000_000) - m.ns_per_step_for(&inc)).abs() < 1e-9
+        );
+        // per-label estimates survive a persist roundtrip
+        let seeded = CostModel::from_records(&m.records());
+        assert!((seeded.ns_per_step_for(&inc) - 1.0).abs() < 1e-9);
+        assert!((seeded.ns_per_step_for(&full) - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn incremental_estimate_is_leaner_for_truss_jobs() {
+        let g = crate::gen::erdos_renyi::gnm(200, 1200, &mut crate::util::Rng::new(11));
+        let kt = JobKind::Ktruss { k: 4, mode: Mode::Fine };
+        let full = estimate_steps_mode(&g, &kt, SupportMode::Full);
+        let inc = estimate_steps_mode(&g, &kt, SupportMode::Incremental);
+        let auto = estimate_steps_mode(&g, &kt, SupportMode::Auto);
+        assert!(inc < full, "inc {inc} vs full {full}");
+        assert_eq!(inc, auto);
+        // and the incremental profile still upper-bounds one real pass
+        let z = crate::graph::ZCsr::from_csr(&g);
+        let mut s = Vec::new();
+        let tr = crate::cost::trace::trace_supports(&z, &mut s);
+        assert!(inc >= tr.total_steps);
+        // kinds the support policy cannot steer are mode-invariant: an
+        // override must not move an estimate it cannot move in execution
+        for kind in [JobKind::Triangles, JobKind::Kmax, JobKind::Decompose] {
+            assert_eq!(
+                estimate_steps_mode(&g, &kind, SupportMode::Incremental),
+                estimate_steps(&g, &kind),
+                "{}",
+                kind_label(&kind)
+            );
+        }
     }
 
     #[test]

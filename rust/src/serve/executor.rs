@@ -16,12 +16,13 @@
 //! twist — the idle thief executes it immediately, so the steal can
 //! only pull urgent work forward).
 
-use super::cost_model::{estimate_steps, CostModel};
+use super::cost_model::{estimate_steps_mode, job_label, CostModel};
 use super::queue::{Admission, Priority, ServeQueue};
+use crate::algo::incremental::SupportMode;
 use crate::coordinator::job::{JobId, JobKind, JobRequest, JobResult};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::router::{route_costed, RouterConfig};
-use crate::coordinator::worker::Worker;
+use crate::coordinator::worker::{choose_support, Worker};
 use crate::graph::Csr;
 use crate::par::{Pool, Schedule};
 use crate::runtime::DenseEngine;
@@ -55,6 +56,10 @@ pub struct ServeConfig {
     pub enable_dense: bool,
     /// Fixed pool schedule for sparse jobs; `None` = per-job heuristic.
     pub schedule: Option<Schedule>,
+    /// Fixed support-maintenance mode for sparse truss jobs; `None` =
+    /// per-job heuristic ([`choose_support`]). The same policy is used
+    /// at submit time to pick the job's cost-estimate profile.
+    pub support: Option<SupportMode>,
     /// Allow drained shards to steal queued jobs from loaded shards.
     pub steal: bool,
 }
@@ -70,6 +75,7 @@ impl Default for ServeConfig {
             batch_window: Duration::from_millis(2),
             enable_dense: true,
             schedule: None,
+            support: None,
             steal: true,
         }
     }
@@ -253,7 +259,11 @@ impl Executor {
     pub fn submit_with(&self, graph: Arc<Csr>, kind: JobKind, opts: SubmitOpts) -> Ticket {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (rtx, rrx) = channel();
-        let est_steps = estimate_steps(&graph, &kind);
+        // estimate under the support profile the worker will pick for
+        // this job (the heuristic is deterministic on the graph, so the
+        // submit-time estimate and the execution agree)
+        let support = self.cfg.support.unwrap_or_else(|| choose_support(&graph, &kind));
+        let est_steps = estimate_steps_mode(&graph, &kind, support);
         let now = Instant::now();
         let adm = Admission {
             req: JobRequest { id, graph, kind },
@@ -418,7 +428,7 @@ fn shard_loop(
         .map(|d| RouterConfig::new(d.max_n()).with_step_ceiling(cfg.dense_step_ceiling))
         .unwrap_or_else(RouterConfig::disabled);
     let width = cfg.workers_per_shard + usize::from(me < cfg.workers_remainder);
-    let worker = Worker::with_schedule(Pool::new(width), dense, cfg.schedule);
+    let worker = Worker::with_policy(Pool::new(width), dense, cfg.schedule, cfg.support);
     loop {
         let adm = {
             let mut st = shards.state.lock().unwrap();
@@ -493,8 +503,11 @@ fn shard_loop(
             }
         }
         if ok {
-            cost_model.observe(
-                &adm.req.kind,
+            // calibrate under the label of what actually ran: truss
+            // jobs carry their support-mode provenance, so incremental
+            // and full iteration profiles stay in separate EWMAs
+            cost_model.observe_labeled(
+                &job_label(&adm.req.kind, result.support),
                 adm.req.graph.n(),
                 adm.req.graph.nnz(),
                 adm.est_steps,

@@ -42,6 +42,6 @@ pub mod cost_model;
 pub mod executor;
 pub mod queue;
 
-pub use cost_model::{estimate_steps, kind_label, CostModel};
+pub use cost_model::{estimate_steps, estimate_steps_mode, job_label, kind_label, CostModel};
 pub use executor::{Executor, ServeConfig, SubmitOpts, Ticket};
 pub use queue::{Admission, Priority, ServeQueue};

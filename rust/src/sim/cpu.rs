@@ -140,6 +140,39 @@ pub fn prune_pass_s(m: &CpuMachine, slots: usize) -> f64 {
     per_thread.max(bw_ns) / 1e9 + m.fork_join_us / 1e6
 }
 
+/// Seconds for one **incremental frontier pass**
+/// ([`crate::algo::incremental`]): the task set is the pruned-edge
+/// frontier (exact per-task steps from the replay tracer), regrouped to
+/// `gran` through the shared [`balance::Costs::from_frontier`]
+/// derivation and scheduled like any other pass — a frontier-sized
+/// kernel launch instead of a whole-graph one.
+pub fn frontier_pass_s(
+    m: &CpuMachine,
+    task_steps: &[u32],
+    task_rows: &[u32],
+    gran: Granularity,
+    schedule: Schedule,
+) -> f64 {
+    let base = balance::Costs::from_frontier(task_steps, task_rows, gran);
+    let overhead = match gran {
+        Granularity::Coarse => m.coarse_task_ns,
+        Granularity::Fine => m.fine_task_ns,
+        Granularity::Segment { .. } => m.segment_task_ns(),
+    };
+    let costs: Vec<f64> = base
+        .per_task
+        .iter()
+        .map(|&st| overhead + st as f64 * m.step_ns)
+        .collect();
+    let compute_ns = makespan_ns(&costs, m.threads, schedule);
+    let total_steps: f64 = task_steps.iter().map(|&x| x as f64).sum();
+    // same streaming model as the full pass: ~8B of column data per
+    // step, ~24B of pointers/support per task
+    let bytes = total_steps * 8.0 + costs.len() as f64 * 24.0;
+    let bw_ns = bytes / m.mem_bw_gbs;
+    compute_ns.max(bw_ns) / 1e9 + m.fork_join_us / 1e6
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

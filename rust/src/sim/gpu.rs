@@ -124,6 +124,31 @@ pub fn prune_kernel(m: &GpuMachine, slots: usize) -> KernelEstimate {
     estimate_kernel(m, &costs, slots as f64 * m.prune_slot_steps, Schedule::Static)
 }
 
+/// Estimate one **incremental frontier kernel**
+/// ([`crate::algo::incremental`]): the launch covers only the
+/// pruned-edge frontier. Per-task base steps come from the shared
+/// [`balance::Costs::from_frontier`] derivation (same as the CPU
+/// model), warp formation and schedule handling are identical to the
+/// full support kernel — a frontier skewed onto one hub edge still
+/// pays the serial-tail term, which only a finer granularity splits.
+pub fn frontier_kernel(
+    m: &GpuMachine,
+    task_steps: &[u32],
+    task_rows: &[u32],
+    gran: Granularity,
+    schedule: Schedule,
+) -> KernelEstimate {
+    let base = balance::Costs::from_frontier(task_steps, task_rows, gran);
+    let overhead = match gran {
+        Granularity::Coarse => m.coarse_task_steps,
+        Granularity::Fine => m.fine_task_steps,
+        Granularity::Segment { .. } => m.segment_task_steps(),
+    };
+    let costs: Vec<f64> = base.per_task.iter().map(|&c| c as f64 + overhead).collect();
+    let total_steps: f64 = task_steps.iter().map(|&x| x as f64).sum();
+    estimate_kernel(m, &costs, total_steps, schedule)
+}
+
 /// Public entry for synthetic task lists (used by the ultra-fine
 /// ablation and the schedule shape tests, which build their own task
 /// decompositions).

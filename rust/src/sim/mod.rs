@@ -12,6 +12,6 @@ pub mod run;
 
 pub use machine::{CpuMachine, GpuMachine};
 pub use run::{
-    gpu_schedule_grid, simulate_kmax, simulate_ktruss, table1_configs, Device, SimConfig,
-    SimResult, GPU_SCHEDULES,
+    gpu_schedule_grid, simulate_kmax, simulate_ktruss, simulate_ktruss_mode, table1_configs,
+    Device, SimConfig, SimResult, GPU_SCHEDULES,
 };

@@ -92,6 +92,43 @@ pub fn hub_divergence_comb(heavy: usize, filler: usize, span: usize) -> Csr {
     from_sorted_unique(far as usize + 31, &edges)
 }
 
+/// Deterministic **deep-cascade** fixture for the incremental support
+/// driver: at k = 4 the peel front travels one gap-1 chain edge per
+/// round from each end, so convergence takes ~`d/2` iterations with a
+/// frontier of one or two edges each — the regime where recomputing
+/// `S = AᵀA ∘ A` from scratch every round is maximally wasteful.
+///
+/// Structure: chain `x_0..x_d` with gap-1 edges `(x_j, x_{j+1})` and
+/// gap-2 edges `(x_j, x_{j+2})`; every gap-2 edge is additionally the
+/// diagonal of a private K4 `{x_j, x_{j+2}, r_j, s_j}` (support 2 from
+/// the clique — stable at k = 4 forever). An interior gap-1 edge sits
+/// in exactly the two strip triangles `(x_{j-1}, x_j, x_{j+1})` and
+/// `(x_j, x_{j+1}, x_{j+2})` — support exactly 2, alive but with zero
+/// slack — while the two end edges have support 1 and die in round
+/// one. Each death destroys one strip triangle and drops the next
+/// gap-1 edge to support 1: a strictly serial peel. The K4s and gap-2
+/// edges survive as the final truss.
+pub fn peel_chain(d: usize) -> Csr {
+    assert!(d >= 4, "peel_chain needs a chain of at least 4 edges");
+    let base = (d + 1) as Vid;
+    let mut edges: Vec<(Vid, Vid)> = Vec::new();
+    for j in 0..d as Vid {
+        edges.push((j, j + 1));
+    }
+    for j in 0..(d as Vid - 1) {
+        edges.push((j, j + 2));
+        let r = base + 2 * j;
+        let s = base + 2 * j + 1;
+        edges.push((j, r));
+        edges.push((j, s));
+        edges.push((j + 2, r));
+        edges.push((j + 2, s));
+        edges.push((r, s));
+    }
+    edges.sort_unstable();
+    from_sorted_unique(base as usize + 2 * (d - 1), &edges)
+}
+
 /// K5 with a pendant path — kmax 5, path trussness 2.
 pub fn clique_with_tail() -> Csr {
     let mut edges: Vec<(Vid, Vid)> = Vec::new();
@@ -134,6 +171,28 @@ mod tests {
             assert_eq!(tr.fine_steps[start], 200, "row {i} hub slot");
             assert!(tr.fine_steps[start + 1..start + 32].iter().all(|&st| st <= 1));
         }
+    }
+
+    #[test]
+    fn peel_chain_cascades_serially() {
+        let d = 12;
+        let g = peel_chain(d);
+        assert!(validate::check(&g).is_ok());
+        // d gap-1 + (d-1) gap-2 + 5 per K4 helper
+        assert_eq!(g.nnz(), d + (d - 1) * 6);
+        let r = crate::algo::ktruss::ktruss(&g, 4, crate::algo::support::Mode::Fine);
+        // the two fronts peel ~one edge per round each until they meet
+        assert!(
+            r.iterations >= d / 2,
+            "expected a deep cascade, got {} iterations",
+            r.iterations
+        );
+        // exactly the gap-1 chain dies; K4s and gap-2 diagonals survive
+        assert_eq!(r.truss.nnz(), g.nnz() - d);
+        // stable at k=3 (everything sits in at least one triangle)
+        let r3 = crate::algo::ktruss::ktruss(&g, 3, crate::algo::support::Mode::Fine);
+        assert_eq!(r3.truss.nnz(), g.nnz());
+        assert_eq!(r3.iterations, 1);
     }
 
     #[test]

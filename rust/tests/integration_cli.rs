@@ -308,6 +308,70 @@ fn bench_serve_smoke() {
 }
 
 #[test]
+fn run_accepts_every_support_mode() {
+    let mut edge_lines: Vec<String> = Vec::new();
+    for mode in ["full", "incremental", "auto"] {
+        let (stdout, stderr, ok) = ktruss(&[
+            "run",
+            "--graph",
+            "as20000102",
+            "--k",
+            "4",
+            "--scale",
+            "0.05",
+            "--support-mode",
+            mode,
+        ]);
+        assert!(ok, "--support-mode {mode}: {stderr}");
+        assert!(stdout.contains("4-truss:"), "--support-mode {mode}: {stdout}");
+        assert!(stdout.contains(&format!("support={mode}")), "stdout: {stdout}");
+        let line = stdout
+            .lines()
+            .find(|l| l.contains("4-truss:"))
+            .unwrap()
+            .split(',')
+            .next()
+            .unwrap()
+            .to_string();
+        edge_lines.push(line);
+    }
+    // every support mode must report the identical surviving edge count
+    assert!(
+        edge_lines.windows(2).all(|w| w[0] == w[1]),
+        "support modes disagree: {edge_lines:?}"
+    );
+}
+
+#[test]
+fn run_rejects_bad_support_mode() {
+    let (_, stderr, ok) = ktruss(&[
+        "run", "--graph", "ca-GrQc", "--scale", "0.05", "--support-mode", "bogus",
+    ]);
+    assert!(!ok);
+    assert!(stderr.contains("support mode"), "stderr: {stderr}");
+}
+
+#[test]
+fn sim_supports_incremental_mode() {
+    let (stdout, stderr, ok) = ktruss(&[
+        "sim",
+        "--graph",
+        "as20000102",
+        "--scale",
+        "0.05",
+        "--granularity",
+        "fine",
+        "--gpu-schedule",
+        "work-aware",
+        "--support-mode",
+        "auto",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("support=auto"), "stdout: {stdout}");
+    assert!(stdout.contains("GPU-F-workaware"), "stdout: {stdout}");
+}
+
+#[test]
 fn run_rejects_missing_graph_flag() {
     let (_, stderr, ok) = ktruss(&["run"]);
     assert!(!ok);
