@@ -1,0 +1,29 @@
+//! `cargo bench --bench plan_ablation` — the plan-ablation sweep: the
+//! auto planner against every fixed plan across the testkit fixture
+//! families, evaluated twice (the planner's predicted scores and a full
+//! convergence-loop replay through the CPU machine model).
+//!
+//! Panics — and the CI smoke job fails — unless the auto plan is
+//! within 1.05x of the best fixed plan (predicted) on every fixture
+//! AND strictly beats the `static/coarse/full` baseline (simulated,
+//! end to end) on every skewed fixture. Prints `plan-ablation-ok` when
+//! both hold.
+
+use ktruss::bench_harness::{plan_ablation, report};
+
+fn main() {
+    let report_data = plan_ablation::run(48, 3, |msg| eprintln!("  [{msg}]")).expect("sweep");
+    let text = report_data.render();
+    println!("{text}");
+    assert!(
+        report_data.auto_within_margin(),
+        "auto plan exceeded {}x of the best fixed plan",
+        plan_ablation::AUTO_MARGIN
+    );
+    assert!(
+        report_data.auto_beats_static_coarse(),
+        "auto plan failed to beat static-coarse on a skewed fixture"
+    );
+    println!("plan-ablation-ok");
+    report::emit("plan_ablation.txt", &text).expect("write report");
+}

@@ -58,6 +58,7 @@
 
 use crate::graph::zeroterm::ZCsr;
 use crate::graph::Vid;
+use crate::util::bitset::BitSet;
 use std::sync::atomic::{AtomicU32, Ordering};
 
 /// How the convergence loop maintains the support array across
@@ -111,10 +112,13 @@ impl std::str::FromStr for SupportMode {
     }
 }
 
-/// Crossover fraction of [`SupportMode::Auto`]: the frontier update
-/// runs only when its estimated work is at most this fraction of the
-/// full-pass proxy (conservative, because both sides are upper bounds
-/// with different slack).
+/// Default crossover fraction of [`SupportMode::Auto`]: the frontier
+/// update runs only when its estimated work is at most this fraction of
+/// the full-pass proxy (conservative, because both sides are upper
+/// bounds with different slack). The fraction itself now lives in the
+/// [`ExecutionPlan`](crate::plan::ExecutionPlan) — every driver receives
+/// it from its plan, and this constant is only the value plans default
+/// to.
 pub const DEFAULT_CROSSOVER_FRAC: f64 = 0.5;
 
 /// In-neighbor index over the upper-triangular working form: for every
@@ -186,9 +190,11 @@ pub struct FrontierTask {
 pub struct Frontier {
     /// One task per dying edge, in ascending slot order.
     pub tasks: Vec<FrontierTask>,
-    /// Per-slot dying snapshot (`true` ⇒ the slot is pruned this
-    /// round). Length == `z.slots()`.
-    pub dying: Vec<bool>,
+    /// Per-slot dying snapshot (bit set ⇒ the slot is pruned this
+    /// round). One bit per slot (`len() == z.slots()`) — the
+    /// byte-per-slot mask this replaced cost 8x the memory traffic on
+    /// the three hot membership probes of every enumeration.
+    pub dying: BitSet,
     /// Live entries per row of the *pre-prune* graph (dying edges
     /// included) — the bounds every enumeration walks.
     pub live: Vec<u32>,
@@ -215,7 +221,7 @@ pub fn mark_frontier_with(z: &ZCsr, k: u32, get: impl Fn(usize) -> u32) -> Front
     let col = z.col();
     let n = z.n();
     let mut tasks = Vec::new();
-    let mut dying = vec![false; z.slots()];
+    let mut dying = BitSet::new(z.slots());
     let mut live = vec![0u32; n];
     for i in 0..n {
         let (start, end) = z.row_span(i);
@@ -225,7 +231,7 @@ pub fn mark_frontier_with(z: &ZCsr, k: u32, get: impl Fn(usize) -> u32) -> Front
             }
             live[i] += 1;
             if get(p) < threshold {
-                dying[p] = true;
+                dying.set(p);
                 tasks.push(FrontierTask { row: i as u32, p: p as u32 });
             }
         }
@@ -318,7 +324,7 @@ fn frontier_task_impl(
     mut dec: impl FnMut(usize),
 ) {
     let col = z.col();
-    let dying = &f.dying[..];
+    let dying = &f.dying;
     let live = &f.live[..];
     let u = t.row as usize;
     let p = t.p as usize;
@@ -339,10 +345,10 @@ fn frontier_task_impl(
             std::cmp::Ordering::Less => q += 1,
             std::cmp::Ordering::Greater => r += 1,
             std::cmp::Ordering::Equal => {
-                if !dying[q] {
+                if !dying.get(q) {
                     dec(q);
                 }
-                if !dying[r] {
+                if !dying.get(r) {
                     dec(r);
                 }
                 q += 1;
@@ -355,14 +361,14 @@ fn frontier_task_impl(
     // triangle (u, b, v) is attributed here unless its ab slot dies too
     for pb in u_start..p {
         *steps += 1;
-        if dying[pb] {
+        if dying.get(pb) {
             continue; // lower-slot dying edge claims the triangle
         }
         let b = col[pb] as usize;
         let (b_start, _) = z.row_span(b);
         if let Some(r) = find_slot(col, b_start, live[b] as usize, v as Vid, steps) {
             dec(pb); // ab leg, known surviving
-            if !dying[r] {
+            if !dying.get(r) {
                 dec(r);
             }
         }
@@ -383,13 +389,13 @@ fn frontier_task_impl(
             let Some(pa) = find_slot(col, a_start, live[a] as usize, u as Vid, steps) else {
                 continue; // edge (a, u) pruned in an earlier round
             };
-            if dying[pa] {
+            if dying.get(pa) {
                 continue;
             }
             let Some(pav) = find_slot(col, a_start, live[a] as usize, v as Vid, steps) else {
                 continue;
             };
-            if dying[pav] {
+            if dying.get(pav) {
                 continue;
             }
             dec(pa);
@@ -406,7 +412,7 @@ fn frontier_task_impl(
             let Some(pa) = find_slot(col, a_start, live[a] as usize, u as Vid, steps) else {
                 continue;
             };
-            if dying[pa] || dying[pav] {
+            if dying.get(pa) || dying.get(pav) {
                 continue;
             }
             dec(pa);
@@ -455,7 +461,7 @@ pub fn decrement_frontier_traced(
 pub fn compact_preserving(
     z: &mut ZCsr,
     s: &mut [u32],
-    dying: &[bool],
+    dying: &BitSet,
 ) -> crate::algo::prune::PruneOutcome {
     assert_eq!(s.len(), z.slots());
     assert_eq!(dying.len(), z.slots());
@@ -470,7 +476,7 @@ pub fn compact_preserving(
             if c == 0 {
                 break;
             }
-            if dying[p] {
+            if dying.get(p) {
                 removed += 1;
             } else {
                 col[write] = c;
@@ -489,39 +495,61 @@ pub fn compact_preserving(
     crate::algo::prune::PruneOutcome { removed, remaining }
 }
 
-/// Per-task upper bounds on the frontier update's steps, in the same
-/// units the kernels count: merge compares (tail + partner), prefix
-/// candidates with one bounded binary search each, and in-neighbor
-/// candidates with two. Feeds the work-aware binner and, summed, the
-/// [`crossover`] heuristic.
-pub fn frontier_costs(z: &ZCsr, f: &Frontier, in_nbrs: &InNbrs) -> Vec<u64> {
-    let col = z.col();
-    // probe bound: a binary search over ≤ lmax entries probes at most
-    // floor(log2(lmax)) + 1 times
+/// The binary-search probe bound for one frontier: a search over
+/// ≤ `lmax` live entries probes at most `floor(log2(lmax)) + 1` times.
+#[inline]
+fn probe_bound(f: &Frontier) -> u64 {
     let lmax = f.live.iter().copied().max().unwrap_or(0);
-    let probe = (u32::BITS - lmax.leading_zeros()) as u64 + 1;
+    (u32::BITS - lmax.leading_zeros()) as u64 + 1
+}
+
+/// Upper bound on one frontier task's steps, in the same units the
+/// kernels count: merge compares (tail + partner), prefix candidates
+/// with one bounded binary search each, and in-neighbor candidates with
+/// two.
+#[inline]
+fn frontier_task_cost(z: &ZCsr, f: &Frontier, in_nbrs: &InNbrs, probe: u64, t: FrontierTask) -> u64 {
+    let col = z.col();
+    let u = t.row as usize;
+    let p = t.p as usize;
+    let v = col[p] as usize;
+    let (u_start, _) = z.row_span(u);
+    let tail = (u_start + f.live[u] as usize - (p + 1)) as u64;
+    let partner = f.live[v] as u64;
+    let prefix = (p - u_start) as u64;
+    let cand = in_nbrs.len_of(u).min(in_nbrs.len_of(v)) as u64;
+    1 + tail + partner + prefix * (1 + probe) + cand * (1 + 2 * probe)
+}
+
+/// Per-task upper bounds on the frontier update's steps (see
+/// [`frontier_task_cost`]'s terms). Feeds the work-aware binner and,
+/// summed, the [`crossover`] heuristic.
+pub fn frontier_costs(z: &ZCsr, f: &Frontier, in_nbrs: &InNbrs) -> Vec<u64> {
+    let probe = probe_bound(f);
     f.tasks
         .iter()
-        .map(|t| {
-            let u = t.row as usize;
-            let p = t.p as usize;
-            let v = col[p] as usize;
-            let (u_start, _) = z.row_span(u);
-            let tail = (u_start + f.live[u] as usize - (p + 1)) as u64;
-            let partner = f.live[v] as u64;
-            let prefix = (p - u_start) as u64;
-            let cand = in_nbrs.len_of(u).min(in_nbrs.len_of(v)) as u64;
-            1 + tail + partner + prefix * (1 + probe) + cand * (1 + 2 * probe)
-        })
+        .map(|&t| frontier_task_cost(z, f, in_nbrs, probe, t))
         .collect()
 }
 
-/// Upper bound on one full support pass over the current working form
-/// (the same static bound the work-aware binner uses, summed).
-pub fn full_pass_estimate(z: &ZCsr) -> u64 {
-    crate::par::balance::estimate_costs(z, crate::algo::support::Mode::Fine)
+/// Sum of [`frontier_costs`] without materializing the per-task vector
+/// — what the sequential drivers (and any pool run under a
+/// cost-oblivious schedule) feed the [`crossover`]; they never need the
+/// per-task breakdown, so the auto check stops allocating a cost vector
+/// every round.
+pub fn frontier_costs_sum(z: &ZCsr, f: &Frontier, in_nbrs: &InNbrs) -> u64 {
+    let probe = probe_bound(f);
+    f.tasks
         .iter()
+        .map(|&t| frontier_task_cost(z, f, in_nbrs, probe, t))
         .sum()
+}
+
+/// Upper bound on one full support pass over the current working form
+/// (the same static bound the work-aware binner uses, summed without
+/// allocating the per-task vector).
+pub fn full_pass_estimate(z: &ZCsr) -> u64 {
+    crate::par::balance::estimate_costs_sum(z, crate::algo::support::Mode::Fine)
 }
 
 /// The auto-mode crossover: run the frontier update when its estimated
@@ -538,30 +566,37 @@ pub fn crossover(frontier_est: u64, full_est: u64, last_full_steps: u64, frac: f
 /// (sequential, pooled coarse/fine, pooled segment, and the replay
 /// tracer — one implementation, so the simulators' replay can never
 /// desynchronize from the decisions production makes): should this
-/// round's support update run incrementally? When the [`SupportMode::Auto`]
-/// check computed the per-task frontier estimates, they are handed back
-/// so the frontier pass's work-aware binner can reuse them.
+/// round's support update run incrementally?
+///
+/// `frac` is the crossover fraction the caller's
+/// [`ExecutionPlan`](crate::plan::ExecutionPlan) carries
+/// ([`DEFAULT_CROSSOVER_FRAC`] unless a plan overrode it). When
+/// `want_costs` is set (a work-aware schedule will bin the frontier),
+/// the [`SupportMode::Auto`] check hands back the per-task frontier
+/// estimates it computed so the binner can reuse them; otherwise the
+/// check runs through the allocation-free [`frontier_costs_sum`].
 pub fn decide_incremental(
     z: &ZCsr,
     f: &Frontier,
     in_nbrs: Option<&InNbrs>,
     support: SupportMode,
     last_full_steps: u64,
+    frac: f64,
+    want_costs: bool,
 ) -> (bool, Option<Vec<u64>>) {
     match support {
         SupportMode::Full => (false, None),
         SupportMode::Incremental => (true, None),
         SupportMode::Auto => {
             let nbrs = in_nbrs.expect("auto mode builds the index");
-            let fc = frontier_costs(z, f, nbrs);
-            let est: u64 = fc.iter().sum();
-            let go = crossover(
-                est,
-                full_pass_estimate(z),
-                last_full_steps,
-                DEFAULT_CROSSOVER_FRAC,
-            );
-            (go, Some(fc))
+            let (est, fc) = if want_costs {
+                let fc = frontier_costs(z, f, nbrs);
+                (fc.iter().sum(), Some(fc))
+            } else {
+                (frontier_costs_sum(z, f, nbrs), None)
+            };
+            let go = crossover(est, full_pass_estimate(z), last_full_steps, frac);
+            (go, fc)
         }
     }
 }
@@ -635,7 +670,7 @@ mod tests {
         let t = f.tasks[0];
         assert_eq!(t.row, 3);
         assert_eq!(z.col()[t.p as usize], 4);
-        assert!(f.dying[t.p as usize]);
+        assert!(f.dying.get(t.p as usize));
         // pre-prune live counts include the dying edge
         assert_eq!(f.live[3], 2);
     }
@@ -744,10 +779,10 @@ mod tests {
         // row 0 dies entirely; surviving rows keep their supports
         let g = from_sorted_unique(4, &[(0, 1), (0, 2), (0, 3), (1, 2), (2, 3)]);
         let (mut z, mut s) = working(&g);
-        let mut dying = vec![false; z.slots()];
+        let mut dying = BitSet::new(z.slots());
         let (start, _) = z.row_span(0);
         for p in start..start + 3 {
-            dying[p] = true;
+            dying.set(p);
         }
         let out = compact_preserving(&mut z, &mut s, &dying);
         assert_eq!(out.removed, 3);
@@ -755,7 +790,7 @@ mod tests {
         assert_eq!(z.row_live(0), &[] as &[u32]);
         assert!(crate::graph::validate::check_zcsr(&z).is_ok());
         // and a second compaction over the tombstone-only row is a no-op
-        let dying = vec![false; z.slots()];
+        let dying = BitSet::new(z.slots());
         let out = compact_preserving(&mut z, &mut s, &dying);
         assert_eq!(out.removed, 0);
         assert_eq!(out.remaining, 2);

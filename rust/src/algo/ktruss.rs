@@ -108,6 +108,9 @@ pub fn run_to_convergence(z: &mut ZCsr, s: &mut Vec<u32>, k: u32) -> (usize, Vec
 /// [`super::decompose`] chain k-levels incrementally. With
 /// `warm == false` (or a mismatched `s`), the loop starts with a full
 /// pass, exactly like the original driver.
+///
+/// Runs at the default crossover fraction; the planner-driven entry is
+/// [`run_to_convergence_plan`].
 pub fn run_to_convergence_mode(
     z: &mut ZCsr,
     s: &mut Vec<u32>,
@@ -115,9 +118,33 @@ pub fn run_to_convergence_mode(
     support: SupportMode,
     warm: bool,
 ) -> (usize, Vec<IterationStat>) {
+    run_to_convergence_plan(z, s, k, support, incremental::DEFAULT_CROSSOVER_FRAC, warm)
+}
+
+/// [`run_to_convergence_mode`] with an explicit auto-crossover fraction
+/// — the knob an [`ExecutionPlan`](crate::plan::ExecutionPlan) carries.
+/// The heuristic itself lives in [`incremental::decide_incremental`];
+/// this driver only forwards the plan's fraction.
+///
+/// Live edges are maintained as a running counter fed by each round's
+/// [`crate::algo::prune::PruneOutcome`] — the loop never rescans the
+/// `O(slots)` column array — and the auto check runs through the
+/// sum-only estimate variants (no per-round cost-vector allocation; the
+/// sequential frontier pass has no binner to feed).
+pub fn run_to_convergence_plan(
+    z: &mut ZCsr,
+    s: &mut Vec<u32>,
+    k: u32,
+    support: SupportMode,
+    crossover: f64,
+    warm: bool,
+) -> (usize, Vec<IterationStat>) {
     let mut iterations = 0usize;
     let mut stats = Vec::new();
-    if z.live_edges() == 0 {
+    // the one O(slots) scan; every later round updates the counter from
+    // the prune/compaction outcome
+    let mut live = z.live_edges();
+    if live == 0 {
         return (iterations, stats);
     }
     let use_inc = support.allows_incremental();
@@ -141,7 +168,6 @@ pub fn run_to_convergence_mode(
         last_full_steps = pass_steps;
     }
     loop {
-        let live = z.live_edges();
         if live == 0 {
             break;
         }
@@ -156,17 +182,24 @@ pub fn run_to_convergence_mode(
         if f.is_empty() {
             break; // isUnchanged(M): s stays valid for the survivors
         }
-        let (go_incremental, _) =
-            incremental::decide_incremental(z, &f, in_nbrs.as_ref(), support, last_full_steps);
+        let (go_incremental, _) = incremental::decide_incremental(
+            z,
+            &f,
+            in_nbrs.as_ref(),
+            support,
+            last_full_steps,
+            crossover,
+            false,
+        );
         if go_incremental {
             let nbrs = in_nbrs.as_ref().expect("incremental mode builds the index");
             pass_steps = incremental::decrement_frontier_seq(z, s, &f, nbrs);
             pass_incremental = true;
-            incremental::compact_preserving(z, s, &f.dying);
+            live = incremental::compact_preserving(z, s, &f.dying).remaining;
         } else {
             // classic path: compact (resetting supports), then recompute
-            prune(z, s, k);
-            if z.live_edges() == 0 {
+            live = prune(z, s, k).remaining;
+            if live == 0 {
                 pass_steps = 0;
                 pass_incremental = false;
             } else {

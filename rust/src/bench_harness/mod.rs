@@ -4,6 +4,7 @@
 
 pub mod ablations;
 pub mod figs;
+pub mod plan_ablation;
 pub mod report;
 pub mod serve_bench;
 pub mod table1;

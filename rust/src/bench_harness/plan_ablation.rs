@@ -1,0 +1,254 @@
+//! Plan ablation: the auto planner against every fixed plan, across
+//! the testkit fixture families.
+//!
+//! Two comparisons per fixture, with deliberately different evaluators:
+//!
+//! * **predicted** — the planner's own per-candidate scores
+//!   ([`Planner::explain`]). The chosen plan is provably within
+//!   `1 / `[`PLAN_SWITCH_MARGIN`] of the best-scored candidate, so the
+//!   `auto ≤ 1.05 × best-fixed` bound checks the selection plumbing and
+//!   its stickiness margin end to end.
+//! * **simulated** — a full convergence-loop replay of the chosen plan
+//!   and of the pre-planner `static/coarse/full` baseline through the
+//!   calibrated CPU machine model ([`simulate_ktruss_mode`], exact
+//!   traced task costs). On the skewed fixtures the auto plan must beat
+//!   the static-coarse baseline **strictly** — this is the model-level
+//!   claim the planner exists to exploit, evaluated by a richer model
+//!   than the one that made the choice.
+//!
+//! The `plan-ablation` bench binary (and the CI smoke job behind it)
+//! fails unless both properties hold.
+
+use crate::algo::incremental::SupportMode;
+use crate::algo::support::Granularity;
+use crate::graph::Csr;
+use crate::par::Schedule;
+use crate::plan::{ExecutionPlan, Planner, PLAN_SWITCH_MARGIN};
+use crate::sim::{simulate_ktruss_mode, SimConfig};
+use crate::util::fmt::Table;
+use anyhow::Result;
+
+/// The CI bound: the auto plan's predicted cost may exceed the best
+/// fixed candidate's by at most this factor (the stickiness margin
+/// guarantees `1 / PLAN_SWITCH_MARGIN ≈ 1.031`, comfortably inside).
+pub const AUTO_MARGIN: f64 = 1.05;
+
+/// One fixture's measurements.
+#[derive(Clone, Debug)]
+pub struct FixtureResult {
+    /// Fixture name.
+    pub name: String,
+    /// Whether this fixture is degree-skewed (the strict-win check
+    /// applies only to skewed fixtures; on flat ones every plan ties).
+    pub skewed: bool,
+    /// The plan the auto planner chose.
+    pub auto_plan: ExecutionPlan,
+    /// Predicted cost of the chosen plan (planner's scoring), ms.
+    pub auto_predicted_ms: f64,
+    /// Best predicted cost over every fixed candidate, ms.
+    pub best_fixed_ms: f64,
+    /// Simulated end-to-end makespan of the chosen plan (full replay
+    /// through the CPU machine model), ms.
+    pub auto_sim_ms: f64,
+    /// Simulated end-to-end makespan of the `static/coarse/full`
+    /// baseline, ms.
+    pub static_coarse_sim_ms: f64,
+}
+
+impl FixtureResult {
+    /// predicted auto / predicted best-fixed.
+    pub fn predicted_ratio(&self) -> f64 {
+        self.auto_predicted_ms / self.best_fixed_ms.max(1e-12)
+    }
+
+    /// simulated static-coarse / simulated auto (the end-to-end win).
+    pub fn sim_speedup(&self) -> f64 {
+        self.static_coarse_sim_ms / self.auto_sim_ms.max(1e-12)
+    }
+}
+
+/// The full sweep report.
+#[derive(Clone, Debug)]
+pub struct PlanAblationReport {
+    /// CPU threads the planner and the simulated pool ran at.
+    pub threads: usize,
+    /// Truss threshold used throughout.
+    pub k: u32,
+    /// One entry per fixture.
+    pub rows: Vec<FixtureResult>,
+}
+
+impl PlanAblationReport {
+    /// Whether every fixture's auto plan is within [`AUTO_MARGIN`] of
+    /// its best fixed candidate (predicted).
+    pub fn auto_within_margin(&self) -> bool {
+        self.rows.iter().all(|r| r.predicted_ratio() <= AUTO_MARGIN)
+    }
+
+    /// Whether the auto plan strictly beats the static-coarse baseline
+    /// (simulated, end to end) on every skewed fixture.
+    pub fn auto_beats_static_coarse(&self) -> bool {
+        self.rows
+            .iter()
+            .filter(|r| r.skewed)
+            .all(|r| r.auto_sim_ms < r.static_coarse_sim_ms)
+    }
+
+    /// Render the sweep as an aligned table plus the two check lines.
+    pub fn render(&self) -> String {
+        let mut table = Table::new(vec![
+            "fixture",
+            "auto plan",
+            "pred ms",
+            "best fixed ms",
+            "ratio",
+            "sim auto ms",
+            "sim C-static ms",
+            "speedup",
+        ]);
+        for r in &self.rows {
+            table.row(vec![
+                r.name.clone(),
+                r.auto_plan.to_string(),
+                format!("{:.4}", r.auto_predicted_ms),
+                format!("{:.4}", r.best_fixed_ms),
+                format!("{:.3}", r.predicted_ratio()),
+                format!("{:.4}", r.auto_sim_ms),
+                format!("{:.4}", r.static_coarse_sim_ms),
+                format!("{:.2}x", r.sim_speedup()),
+            ]);
+        }
+        let mut out = format!(
+            "# plan ablation: auto vs fixed plans, CPU model at {} threads, k={}\n\
+             # stickiness margin {:.2} -> predicted ratio bound {:.3}\n",
+            self.threads,
+            self.k,
+            PLAN_SWITCH_MARGIN,
+            1.0 / PLAN_SWITCH_MARGIN,
+        );
+        out.push_str(&table.render());
+        out.push_str(&format!(
+            "auto-within-{AUTO_MARGIN}x-of-best: {}\n",
+            if self.auto_within_margin() { "yes" } else { "NO" }
+        ));
+        out.push_str(&format!(
+            "auto-beats-static-coarse-on-skewed: {}\n",
+            if self.auto_beats_static_coarse() { "yes" } else { "NO" }
+        ));
+        out
+    }
+}
+
+/// Simulated end-to-end makespan (ms) of one plan: replay the full
+/// convergence loop under the plan's support mode and price every
+/// kernel launch on the CPU model at the plan's granularity/schedule.
+fn sim_ms(g: &Csr, k: u32, plan: &ExecutionPlan, threads: usize) -> f64 {
+    let cfg = SimConfig::cpu_gran(threads, plan.granularity, plan.schedule);
+    simulate_ktruss_mode(g, k, &[cfg], plan.support)[0].seconds * 1e3
+}
+
+/// Run the sweep over the fixture families at `threads` model threads.
+pub fn run(threads: usize, k: u32, progress: impl Fn(&str)) -> Result<PlanAblationReport> {
+    let mut rng = crate::util::Rng::new(0x91A);
+    let fixtures: Vec<(&str, bool, Csr)> = vec![
+        (
+            "hub-comb",
+            true,
+            crate::testkit::graphs::hub_divergence_comb(64, 256, 800),
+        ),
+        ("star-fringe", true, crate::testkit::graphs::star_with_fringe(1200)),
+        (
+            "rmat-as",
+            true,
+            crate::gen::rmat::rmat(
+                3000,
+                15_000,
+                crate::gen::rmat::RmatParams::autonomous_system(),
+                &mut rng,
+            ),
+        ),
+        (
+            "road-grid",
+            false,
+            crate::gen::grid::road(3000, 5800, 0.05, &mut rng),
+        ),
+    ];
+    let planner = Planner::new(threads);
+    let static_coarse =
+        ExecutionPlan::fixed(Schedule::Static, Granularity::Coarse, SupportMode::Full);
+    let mut rows = Vec::with_capacity(fixtures.len());
+    for (name, skewed, g) in &fixtures {
+        progress(&format!("{name}: planning and replaying (n={}, m={})", g.n(), g.nnz()));
+        let ex = planner.explain(g, k);
+        let auto_plan = ex.plan();
+        let row = FixtureResult {
+            name: name.to_string(),
+            skewed: *skewed,
+            auto_plan,
+            auto_predicted_ms: ex.predicted_ms(),
+            best_fixed_ms: ex.best_ms(),
+            auto_sim_ms: sim_ms(g, k, &auto_plan, threads),
+            static_coarse_sim_ms: sim_ms(g, k, &static_coarse, threads),
+        };
+        progress(&format!(
+            "{name}: auto {} (ratio {:.3}, sim speedup {:.2}x)",
+            row.auto_plan,
+            row.predicted_ratio(),
+            row.sim_speedup()
+        ));
+        rows.push(row);
+    }
+    Ok(PlanAblationReport { threads, k, rows })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_sweep_holds_both_invariants() {
+        // smaller fixtures than the bench uses, same invariants: the
+        // chosen plan stays within the margin by construction, and the
+        // skewed fixture wins strictly end to end
+        let threads = 48;
+        let g = crate::testkit::graphs::hub_divergence_comb(32, 128, 400);
+        let planner = Planner::new(threads);
+        let ex = planner.explain(&g, 3);
+        assert!(ex.predicted_ms() <= ex.best_ms() * AUTO_MARGIN);
+        let auto_plan = ex.plan();
+        let static_coarse = ExecutionPlan::fixed(
+            Schedule::Static,
+            Granularity::Coarse,
+            SupportMode::Full,
+        );
+        let auto = sim_ms(&g, 3, &auto_plan, threads);
+        let base = sim_ms(&g, 3, &static_coarse, threads);
+        assert!(auto < base, "auto {auto} vs static-coarse {base}");
+    }
+
+    #[test]
+    fn report_renders_checks() {
+        let report = PlanAblationReport {
+            threads: 8,
+            k: 3,
+            rows: vec![FixtureResult {
+                name: "x".into(),
+                skewed: true,
+                auto_plan: ExecutionPlan::fixed(
+                    Schedule::WorkAware,
+                    Granularity::Fine,
+                    SupportMode::Auto,
+                ),
+                auto_predicted_ms: 1.0,
+                best_fixed_ms: 1.0,
+                auto_sim_ms: 1.0,
+                static_coarse_sim_ms: 2.0,
+            }],
+        };
+        assert!(report.auto_within_margin());
+        assert!(report.auto_beats_static_coarse());
+        let text = report.render();
+        assert!(text.contains("auto-within-"));
+        assert!(text.contains("auto-beats-static-coarse-on-skewed: yes"));
+    }
+}

@@ -4,6 +4,7 @@ use crate::algo::incremental::SupportMode;
 use crate::algo::support::Mode;
 use crate::graph::{Csr, Vid};
 use crate::par::Schedule;
+use crate::plan::ExecutionPlan;
 use std::sync::Arc;
 
 /// Unique job id assigned at submission.
@@ -91,16 +92,19 @@ pub struct JobResult {
     pub id: JobId,
     /// Engine that executed it (routing provenance).
     pub engine: Engine,
-    /// Pool schedule the sparse fixed-k truss engine ran under. `None`
-    /// for dense executions (the AOT path has no schedule axis) and
+    /// The full [`ExecutionPlan`] the sparse fixed-k truss engine ran
+    /// under — for jobs served through the executor this is the
+    /// submit-time plan, carried unchanged through the admission queue.
+    /// `None` for dense executions (the AOT path has no plan axes) and
     /// for job kinds whose sparse path is sequential (kmax, decompose,
-    /// triangles). Provenance for the per-job schedule policy.
+    /// triangles).
+    pub plan: Option<ExecutionPlan>,
+    /// The plan's schedule axis, mirrored flat for convenience (always
+    /// `plan.map(|p| p.schedule)`).
     pub schedule: Option<Schedule>,
-    /// Support-maintenance mode the sparse fixed-k truss engine ran
-    /// under (`None` for dense executions and non-truss kinds).
-    /// Provenance for the per-job support policy, and the calibration
-    /// label the serving cost model keys on
-    /// ([`crate::serve::cost_model::job_label`]).
+    /// The plan's support axis, mirrored flat (always
+    /// `plan.map(|p| p.support)`) — the calibration label the serving
+    /// cost model keys on ([`crate::serve::cost_model::job_label`]).
     pub support: Option<SupportMode>,
     /// Execution wall time (excluding queueing), ms.
     pub wall_ms: f64,

@@ -3,9 +3,11 @@
 //! the [`Coordinator`] facade over the sharded [`crate::serve`]
 //! executor. Load balancing at *job* granularity lives in
 //! [`crate::serve`]; this module supplies the pieces it schedules —
-//! what a job is, which engine and pool schedule it should run under
-//! ([`worker::Worker::pick_schedule`] chooses per-job from graph
-//! skew), and the counters that make the balance observable.
+//! what a job is, which engine it should run on, and the counters that
+//! make the balance observable. *How* a sparse truss job executes is
+//! one [`crate::plan::ExecutionPlan`], computed once at admission by
+//! [`crate::plan::Planner`] and carried to [`worker::Worker`] through
+//! the queue.
 
 pub mod job;
 pub mod metrics;
@@ -17,4 +19,4 @@ pub use job::{Engine, JobKind, JobOutput, JobRequest, JobResult};
 pub use metrics::{Metrics, ShardMetrics};
 pub use router::{route, route_costed, RouterConfig};
 pub use service::{Coordinator, ServiceConfig, Ticket};
-pub use worker::{choose_schedule, Worker};
+pub use worker::Worker;

@@ -33,9 +33,9 @@ pub struct ServiceConfig {
     pub batch_window: Duration,
     /// Try to construct the dense engine (requires artifacts).
     pub enable_dense: bool,
-    /// Fixed pool schedule for sparse jobs; `None` lets the worker pick
-    /// one per job from the graph's degree skew
-    /// (see [`super::worker::choose_schedule`]).
+    /// Fixed pool schedule for sparse jobs; `None` lets the submit-time
+    /// planner pick one per job (the schedule becomes a pinned axis of
+    /// the executor's [`crate::plan::PlanSpec`]).
     pub schedule: Option<Schedule>,
 }
 
@@ -68,7 +68,7 @@ impl Coordinator {
             max_batch: cfg.max_batch,
             batch_window: cfg.batch_window,
             enable_dense: cfg.enable_dense,
-            schedule: cfg.schedule,
+            plan: crate::plan::PlanSpec { schedule: cfg.schedule, ..Default::default() },
             ..Default::default()
         });
         let metrics = Arc::clone(&exec.metrics);

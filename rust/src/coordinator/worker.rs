@@ -1,160 +1,99 @@
 //! Job execution: dispatch a routed request to the chosen engine.
 //!
-//! The sparse engine picks a pool [`Schedule`] **and a
-//! [`SupportMode`]** per job: fixed overrides from
-//! [`ServiceConfig`](super::service::ServiceConfig) when the operator
-//! set them, otherwise per-job heuristics over the job's graph (see
-//! [`choose_schedule`] and [`choose_support`]). Both choices are
-//! recorded in the [`JobResult`] for provenance — the serving cost
-//! model keys its per-label calibration on the support choice.
+//! The sparse engine runs every fixed-k truss job under one
+//! [`ExecutionPlan`] — schedule × granularity × support mode ×
+//! crossover, decided by [`crate::plan::Planner`]. The serving executor
+//! computes the plan **once at submit time** and carries it through the
+//! admission queue ([`Worker::execute_planned`] receives it); direct
+//! callers without a precomputed plan get one from this worker's own
+//! planner. The executed plan is recorded in the [`JobResult`] for
+//! provenance — the serving cost model keys its per-label calibration
+//! on the plan's support mode.
 
 use super::job::{Engine, JobKind, JobOutput, JobRequest, JobResult};
-use crate::algo::incremental::SupportMode;
 use crate::algo::{decompose, kmax, triangle};
-use crate::graph::Csr;
-use crate::par::{ktruss_par_mode, Pool, Schedule};
+use crate::par::{ktruss_par_plan, Pool};
+use crate::plan::{ExecutionPlan, PlanSpec, Planner};
 use crate::runtime::DenseEngine;
 use crate::util::Timer;
-
-/// Pick a schedule from the graph's degree skew. The thresholds encode
-/// the paper's load-imbalance finding: the more the max row dwarfs the
-/// mean, the more a cost-aware schedule buys.
-///
-/// * tiny jobs → `Static` (spawn/binning overhead dominates),
-/// * heavy skew (max/mean ≥ 8, the power-law hub regime) → `Stealing`
-///   (estimation error is absorbed at runtime),
-/// * moderate skew (≥ 3) → `WorkAware` (scan-binned chunks),
-/// * near-uniform (road-network-like) → `Dynamic` (cheap and adequate).
-pub fn choose_schedule(g: &Csr) -> Schedule {
-    let n = g.n();
-    if n == 0 || g.nnz() < 2048 {
-        return Schedule::Static;
-    }
-    let mean = g.nnz() as f64 / n as f64;
-    let max = (0..n).map(|i| g.row(i).len()).max().unwrap_or(0) as f64;
-    let skew = if mean > 0.0 { max / mean } else { 0.0 };
-    if skew >= 8.0 {
-        Schedule::Stealing
-    } else if skew >= 3.0 {
-        Schedule::WorkAware
-    } else {
-        Schedule::Dynamic { chunk: 256 }
-    }
-}
-
-/// Pick a support-maintenance mode for one job from its graph stats.
-/// Cascades (many prune iterations with shrinking frontiers) are where
-/// the incremental driver wins; dense low-k cores converge in one or
-/// two rounds where a full recompute is already optimal:
-///
-/// * non-truss kinds → `Full` (their sparse paths drive the loop
-///   internally; the label stays mode-free),
-/// * tiny jobs → `Full` (frontier bookkeeping dominates),
-/// * heavy degree skew (max/mean ≥ 8 — the hub regime whose fringes
-///   peel over many rounds) → `Incremental`,
-/// * everything else → `Auto` (per-round crossover decides).
-pub fn choose_support(g: &Csr, kind: &JobKind) -> SupportMode {
-    if !matches!(kind, JobKind::Ktruss { .. }) {
-        return SupportMode::Full;
-    }
-    let n = g.n();
-    if n == 0 || g.nnz() < 2048 {
-        return SupportMode::Full;
-    }
-    let mean = g.nnz() as f64 / n as f64;
-    let max = (0..n).map(|i| g.row(i).len()).max().unwrap_or(0) as f64;
-    let skew = if mean > 0.0 { max / mean } else { 0.0 };
-    if skew >= 8.0 {
-        SupportMode::Incremental
-    } else {
-        SupportMode::Auto
-    }
-}
 
 /// Stateless executor with handles to both engines.
 pub struct Worker {
     /// The pool sparse jobs run on.
     pub pool: Pool,
-    /// Fixed schedule override; `None` = per-job heuristic choice.
-    pub schedule: Option<Schedule>,
-    /// Fixed support-mode override; `None` = per-job heuristic choice.
-    pub support: Option<SupportMode>,
+    /// Planner for jobs that arrive without a precomputed plan (its
+    /// spec carries the operator's pinned axes; its thread count is the
+    /// pool's width).
+    pub planner: Planner,
     /// None when artifacts are unavailable (dense jobs then fall back to
     /// the sparse path with a provenance note).
     pub dense: Option<DenseEngine>,
 }
 
 impl Worker {
-    /// A worker with the per-job schedule/support heuristics.
+    /// A worker whose planner chooses every axis per job.
     pub fn new(pool: Pool, dense: Option<DenseEngine>) -> Worker {
-        Worker { pool, schedule: None, support: None, dense }
+        Worker::with_spec(pool, dense, PlanSpec::auto())
     }
 
-    /// A worker with an explicit schedule override (`None` keeps the
-    /// heuristic); support mode stays heuristic.
-    pub fn with_schedule(pool: Pool, dense: Option<DenseEngine>, schedule: Option<Schedule>) -> Worker {
-        Worker { pool, schedule, support: None, dense }
+    /// A worker with operator-pinned plan axes (`PlanSpec::auto()` for
+    /// fully per-job planning).
+    pub fn with_spec(pool: Pool, dense: Option<DenseEngine>, spec: PlanSpec) -> Worker {
+        let planner = Planner::new(pool.workers()).with_spec(spec);
+        Worker { pool, planner, dense }
     }
 
-    /// A worker with explicit schedule and support-mode overrides
-    /// (`None` keeps the respective heuristic).
-    pub fn with_policy(
-        pool: Pool,
-        dense: Option<DenseEngine>,
-        schedule: Option<Schedule>,
-        support: Option<SupportMode>,
-    ) -> Worker {
-        Worker { pool, schedule, support, dense }
-    }
-
-    /// The schedule this worker runs `req` under.
-    pub fn pick_schedule(&self, req: &JobRequest) -> Schedule {
-        self.schedule.unwrap_or_else(|| choose_schedule(&req.graph))
-    }
-
-    /// The support mode this worker runs `req` under.
-    pub fn pick_support(&self, req: &JobRequest) -> SupportMode {
-        self.support
-            .unwrap_or_else(|| choose_support(&req.graph, &req.kind))
-    }
-
-    /// Schedule and support mode for the sparse engine: `Some` only for
-    /// job kinds whose sparse path actually runs on the pool (fixed-k
+    /// The plan this worker would run `req` under: `Some` only for job
+    /// kinds whose sparse path actually runs on the pool (fixed-k
     /// truss). Kmax, decompose and triangle counting execute sequential
-    /// algorithms, so no policy is picked (or paid for) there.
-    fn sparse_policy(&self, req: &JobRequest) -> Option<(Schedule, SupportMode)> {
+    /// algorithms, so no plan is computed (or paid for) there.
+    pub fn pick_plan(&self, req: &JobRequest) -> Option<ExecutionPlan> {
         match req.kind {
-            JobKind::Ktruss { .. } => Some((self.pick_schedule(req), self.pick_support(req))),
+            JobKind::Ktruss { k, .. } => Some(self.planner.choose(&req.graph, k)),
             _ => None,
         }
     }
 
-    /// Execute one request on `engine` (already routed).
+    /// Execute one request on `engine` (already routed), planning here.
     pub fn execute(&self, req: &JobRequest, engine: Engine) -> JobResult {
+        self.execute_planned(req, engine, None)
+    }
+
+    /// Execute one request on `engine` under a precomputed plan. The
+    /// serving executor passes the submit-time plan so the max-degree
+    /// scan and candidate scoring run exactly once per job; `None`
+    /// plans (direct callers, non-truss kinds) fall back to
+    /// [`Worker::pick_plan`].
+    pub fn execute_planned(
+        &self,
+        req: &JobRequest,
+        engine: Engine,
+        plan: Option<ExecutionPlan>,
+    ) -> JobResult {
         let t = Timer::start();
-        let (engine_used, policy, output) = match engine {
+        let sparse_plan = |w: &Worker| plan.or_else(|| w.pick_plan(req));
+        let (engine_used, used_plan, output) = match engine {
             Engine::DenseXla => match self.execute_dense(req) {
                 Ok(out) => (Engine::DenseXla, None, Ok(out)),
                 // dense failure (missing artifacts, size) falls back
                 Err(_) => {
-                    let p = self.sparse_policy(req);
-                    let (s, m) = p.unwrap_or((Schedule::Static, SupportMode::Auto));
-                    let out = self.execute_sparse(req, s, m);
+                    let p = sparse_plan(self);
+                    let out = self.execute_sparse(req, p);
                     (Engine::SparseCpu, p, out)
                 }
             },
             Engine::SparseCpu => {
-                let p = self.sparse_policy(req);
-                let (s, m) = p.unwrap_or((Schedule::Static, SupportMode::Auto));
-                let out = self.execute_sparse(req, s, m);
+                let p = sparse_plan(self);
+                let out = self.execute_sparse(req, p);
                 (Engine::SparseCpu, p, out)
             }
         };
         JobResult {
             id: req.id,
             engine: engine_used,
-            schedule: policy.map(|(s, _)| s),
-            support: policy.map(|(_, m)| m),
+            plan: used_plan,
+            schedule: used_plan.map(|p| p.schedule),
+            support: used_plan.map(|p| p.support),
             wall_ms: t.elapsed_ms(),
             output: output.map_err(|e| format!("{e:#}")),
         }
@@ -163,12 +102,20 @@ impl Worker {
     fn execute_sparse(
         &self,
         req: &JobRequest,
-        schedule: Schedule,
-        support: SupportMode,
+        plan: Option<ExecutionPlan>,
     ) -> anyhow::Result<JobOutput> {
         Ok(match req.kind {
             JobKind::Ktruss { k, mode } => {
-                let r = ktruss_par_mode(&req.graph, k, &self.pool, mode, schedule, support);
+                // truss jobs always carry a plan by construction; the
+                // fallback pins the requested mode defensively
+                let plan = plan.unwrap_or_else(|| {
+                    ExecutionPlan::fixed(
+                        crate::par::Schedule::Static,
+                        mode.into(),
+                        crate::algo::incremental::SupportMode::Auto,
+                    )
+                });
+                let r = ktruss_par_plan(&req.graph, k, &self.pool, &plan);
                 JobOutput::Ktruss {
                     truss_edges: r.truss.nnz(),
                     iterations: r.iterations,
@@ -217,8 +164,10 @@ pub fn run_inline(req: &JobRequest, engine: Engine) -> JobResult {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::algo::support::Mode;
+    use crate::algo::incremental::SupportMode;
+    use crate::algo::support::{Granularity, Mode};
     use crate::graph::builder::from_sorted_unique;
+    use crate::par::Schedule;
     use std::sync::Arc;
 
     fn diamond_req(kind: JobKind) -> JobRequest {
@@ -234,7 +183,12 @@ mod tests {
         );
         assert_eq!(r.id, 7);
         assert_eq!(r.engine, Engine::SparseCpu);
-        // a tiny job must have been scheduled statically, full recompute
+        // a tiny job must have been planned static/coarse/full
+        let plan = r.plan.expect("truss jobs carry their plan");
+        assert_eq!(plan.schedule, Schedule::Static);
+        assert_eq!(plan.granularity, Granularity::Coarse);
+        assert_eq!(plan.support, SupportMode::Full);
+        // the flat provenance mirrors the plan
         assert_eq!(r.schedule, Some(Schedule::Static));
         assert_eq!(r.support, Some(SupportMode::Full));
         match r.output.unwrap() {
@@ -270,7 +224,7 @@ mod tests {
         );
         // no dense engine in run_inline -> sparse fallback, still correct
         assert_eq!(r.engine, Engine::SparseCpu);
-        assert!(r.schedule.is_some(), "fallback must record its schedule");
+        assert!(r.plan.is_some(), "fallback must record its plan");
         match r.output.unwrap() {
             JobOutput::Ktruss { truss_edges, .. } => assert_eq!(truss_edges, 5),
             other => panic!("{other:?}"),
@@ -278,86 +232,66 @@ mod tests {
     }
 
     #[test]
-    fn schedule_override_wins_over_heuristic() {
-        let worker = Worker::with_schedule(Pool::new(2), None, Some(Schedule::Stealing));
+    fn pinned_spec_wins_over_planner() {
+        let spec: crate::plan::PlanSpec = "stealing/fine/incremental".parse().unwrap();
+        let worker = Worker::with_spec(Pool::new(2), None, spec);
         let req = diamond_req(JobKind::Ktruss { k: 3, mode: Mode::Fine });
-        assert_eq!(worker.pick_schedule(&req), Schedule::Stealing);
+        let plan = worker.pick_plan(&req).unwrap();
+        assert_eq!(plan.schedule, Schedule::Stealing);
+        assert_eq!(plan.granularity, Granularity::Fine);
+        assert_eq!(plan.support, SupportMode::Incremental);
         let r = worker.execute(&req, Engine::SparseCpu);
+        assert_eq!(r.plan, Some(plan));
         assert_eq!(r.schedule, Some(Schedule::Stealing));
-        match r.output.unwrap() {
-            JobOutput::Ktruss { truss_edges, .. } => assert_eq!(truss_edges, 5),
-            other => panic!("{other:?}"),
-        }
-    }
-
-    #[test]
-    fn support_override_wins_and_is_recorded() {
-        let worker = Worker::with_policy(
-            Pool::new(2),
-            None,
-            Some(Schedule::WorkAware),
-            Some(SupportMode::Incremental),
-        );
-        let req = diamond_req(JobKind::Ktruss { k: 3, mode: Mode::Fine });
-        assert_eq!(worker.pick_support(&req), SupportMode::Incremental);
-        let r = worker.execute(&req, Engine::SparseCpu);
         assert_eq!(r.support, Some(SupportMode::Incremental));
-        assert_eq!(r.schedule, Some(Schedule::WorkAware));
         match r.output.unwrap() {
             JobOutput::Ktruss { truss_edges, .. } => assert_eq!(truss_edges, 5),
             other => panic!("{other:?}"),
         }
-        // non-truss kinds record no support policy
+        // non-truss kinds record no plan
         let r = worker.execute(&diamond_req(JobKind::Triangles), Engine::SparseCpu);
-        assert_eq!(r.support, None);
+        assert_eq!(r.plan, None);
         assert_eq!(r.schedule, None);
+        assert_eq!(r.support, None);
     }
 
     #[test]
-    fn support_heuristic_tracks_shape() {
-        let kt = JobKind::Ktruss { k: 3, mode: Mode::Fine };
-        // tiny → full
-        let tiny = from_sorted_unique(3, &[(0, 1), (1, 2)]);
-        assert_eq!(choose_support(&tiny, &kt), SupportMode::Full);
-        // hub-heavy → incremental (cascading fringe peels)
-        let hub = crate::gen::rmat::rmat(
-            4000,
-            24_000,
-            crate::gen::rmat::RmatParams::autonomous_system(),
-            &mut crate::util::Rng::new(5),
+    fn precomputed_plan_is_used_verbatim() {
+        // the executor's submit-time plan must not be re-derived
+        let worker = Worker::new(Pool::new(2), None);
+        let req = diamond_req(JobKind::Ktruss { k: 3, mode: Mode::Fine });
+        let submitted = ExecutionPlan::fixed(
+            Schedule::WorkAware,
+            Granularity::Segment { len: 4 },
+            SupportMode::Auto,
         );
-        assert!(matches!(
-            choose_support(&hub, &kt),
-            SupportMode::Incremental | SupportMode::Auto
-        ));
-        // near-uniform road lattice → auto (crossover decides per round)
-        let road = crate::gen::grid::road(4000, 5600, 0.05, &mut crate::util::Rng::new(6));
-        assert_eq!(choose_support(&road, &kt), SupportMode::Auto);
-        // non-truss kinds never pick a mode
-        assert_eq!(choose_support(&hub, &JobKind::Kmax), SupportMode::Full);
+        let r = worker.execute_planned(&req, Engine::SparseCpu, Some(submitted));
+        assert_eq!(r.plan, Some(submitted));
+        match r.output.unwrap() {
+            JobOutput::Ktruss { truss_edges, .. } => assert_eq!(truss_edges, 5),
+            other => panic!("{other:?}"),
+        }
     }
 
     #[test]
-    fn heuristic_tracks_skew() {
-        // tiny → static
-        let tiny = from_sorted_unique(3, &[(0, 1), (1, 2)]);
-        assert_eq!(choose_schedule(&tiny), Schedule::Static);
-        // hub-heavy rmat → a cost-aware schedule
-        let hub = crate::gen::rmat::rmat(
-            4000,
-            24_000,
-            crate::gen::rmat::RmatParams::autonomous_system(),
-            &mut crate::util::Rng::new(5),
-        );
-        assert!(matches!(
-            choose_schedule(&hub),
-            Schedule::WorkAware | Schedule::Stealing
-        ));
-        // near-uniform road lattice → dynamic
-        let road = crate::gen::grid::road(4000, 5600, 0.05, &mut crate::util::Rng::new(6));
-        assert!(matches!(
-            choose_schedule(&road),
-            Schedule::Dynamic { .. } | Schedule::WorkAware
-        ));
+    fn planner_tracks_shape_through_the_worker() {
+        // wide pool so the planner sees the same machine the shape
+        // tests exercise; the hub fixture must not run coarse
+        let worker = Worker::new(Pool::new(4), None);
+        let hub = Arc::new(crate::testkit::graphs::star_with_fringe(1200));
+        let req = JobRequest {
+            id: 1,
+            graph: hub,
+            kind: JobKind::Ktruss { k: 3, mode: Mode::Fine },
+        };
+        let plan = worker.pick_plan(&req).unwrap();
+        assert_ne!(plan.granularity, Granularity::Coarse, "{plan}");
+        // every executed plan produces the correct truss
+        let want = crate::algo::ktruss::ktruss(&req.graph, 3, Mode::Fine).truss.nnz();
+        let r = worker.execute(&req, Engine::SparseCpu);
+        match r.output.unwrap() {
+            JobOutput::Ktruss { truss_edges, .. } => assert_eq!(truss_edges, want),
+            other => panic!("{other:?}"),
+        }
     }
 }

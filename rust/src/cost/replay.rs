@@ -43,8 +43,7 @@ pub fn replay_ktruss(
 ) -> (usize, usize) {
     let mut z = ZCsr::from_csr(g);
     let mut s: Vec<u32> = Vec::new();
-    let (iters, _) = replay_loop(&mut z, &mut s, k, 0, &mut obs);
-    (iters, z.live_edges())
+    replay_loop(&mut z, &mut s, k, 0, &mut obs)
 }
 
 /// Replay the incremental K_max peeling (paper's K=K_max setting: the
@@ -60,9 +59,10 @@ pub fn replay_kmax(g: &Csr, mut obs: impl FnMut(u32, &IterObservation)) -> (u32,
     let mut total_iters = 0usize;
     let mut k = 3u32;
     loop {
-        let (iters, _) = replay_loop(&mut z, &mut s, k, 0, &mut |o: &IterObservation| obs(k, o));
+        let (iters, remaining) =
+            replay_loop(&mut z, &mut s, k, 0, &mut |o: &IterObservation| obs(k, o));
         total_iters += iters;
-        if z.live_edges() == 0 {
+        if remaining == 0 {
             break;
         }
         kmax = k;
@@ -106,9 +106,11 @@ pub struct FrontierIterObservation<'a> {
 /// ([`crate::algo::ktruss::run_to_convergence_mode`], cold) on `g`,
 /// invoking `obs` once per iteration with the pass that produced that
 /// iteration's supports. Makes the same per-round full-vs-frontier
-/// decisions as the real driver, so the simulators price exactly the
-/// kernel launches production would issue. Returns
-/// (iterations, surviving edges).
+/// decisions as the real driver **at the default crossover fraction**
+/// ([`incremental::DEFAULT_CROSSOVER_FRAC`] — what every plan runs
+/// unless its `crossover` field was overridden programmatically), so
+/// the simulators price exactly the kernel launches production would
+/// issue. Returns (iterations, surviving edges).
 pub fn replay_ktruss_mode(
     g: &Csr,
     k: u32,
@@ -135,8 +137,10 @@ pub fn replay_ktruss_mode(
     let mut frontier_steps: Vec<u32> = Vec::new();
     let mut frontier_rows: Vec<u32> = Vec::new();
     let mut last_full_steps = trace.total_steps;
+    // live-edge counter maintained from the prune/compaction outcomes
+    // (one initial O(slots) scan, no per-round rescan)
+    let mut live = z.live_edges();
     loop {
-        let live = z.live_edges();
         if live == 0 {
             break;
         }
@@ -168,18 +172,25 @@ pub fn replay_ktruss_mode(
         if f.is_empty() {
             break;
         }
-        let (go_incremental, _) =
-            incremental::decide_incremental(&z, &f, in_nbrs.as_ref(), support, last_full_steps);
+        let (go_incremental, _) = incremental::decide_incremental(
+            &z,
+            &f,
+            in_nbrs.as_ref(),
+            support,
+            last_full_steps,
+            incremental::DEFAULT_CROSSOVER_FRAC,
+            false,
+        );
         if go_incremental {
             let nbrs = in_nbrs.as_ref().expect("incremental mode builds the index");
             let (_, per_task) = incremental::decrement_frontier_traced(&z, &mut s, &f, nbrs);
             frontier_steps = per_task;
             frontier_rows = f.tasks.iter().map(|t| t.row).collect();
             pass_full = false;
-            incremental::compact_preserving(&mut z, &mut s, &f.dying);
+            live = incremental::compact_preserving(&mut z, &mut s, &f.dying).remaining;
         } else {
-            prune(&mut z, &mut s, k);
-            if z.live_edges() == 0 {
+            live = prune(&mut z, &mut s, k).remaining;
+            if live == 0 {
                 break;
             }
             super::trace::trace_supports_into(&z, &mut s, &mut trace);
@@ -187,7 +198,7 @@ pub fn replay_ktruss_mode(
             last_full_steps = trace.total_steps;
         }
     }
-    (iters, z.live_edges())
+    (iters, live)
 }
 
 fn replay_loop(
@@ -206,8 +217,10 @@ fn replay_loop(
         live_per_row: Vec::new(),
         total_steps: 0,
     };
+    // live-edge counter maintained from the prune outcomes (one initial
+    // O(slots) scan per convergence loop, no per-round rescan)
+    let mut live = z.live_edges();
     loop {
-        let live = z.live_edges();
         if live == 0 {
             break;
         }
@@ -223,11 +236,12 @@ fn replay_loop(
             removed: out.removed,
         });
         iters += 1;
+        live = out.remaining;
         if out.removed == 0 {
             break;
         }
     }
-    (iters, z.live_edges())
+    (iters, live)
 }
 
 #[cfg(test)]

@@ -43,6 +43,7 @@ pub mod cost;
 pub mod gen;
 pub mod graph;
 pub mod par;
+pub mod plan;
 pub mod runtime;
 pub mod serve;
 pub mod sim;

@@ -10,6 +10,8 @@
 //!              the GPU schedule sweep (gpu-sched), or the serving throughput
 //!              workload (serve)
 //!   serve      start the sharded executor and run a mixed-priority job stream
+//!   plan       print the planner's per-candidate predicted costs and the
+//!              chosen ExecutionPlan ("explain" mode)
 //!   sim        estimate one graph on the calibrated machine models across the
 //!              schedule x granularity grid
 //!   calibrate  measure the host's merge-step cost for the CPU model
@@ -22,13 +24,14 @@ use ktruss::algo::support::{Granularity, Mode, DEFAULT_SEGMENT_LEN};
 // `algo::ktruss` *module* here would shadow the `ktruss` crate name.
 use ktruss::algo::ktruss::ktruss_mode as ktruss_seq_mode;
 use ktruss::algo::{decompose, kmax};
-use ktruss::bench_harness::{ablations, figs, report, serve_bench, table1, Workload};
+use ktruss::bench_harness::{ablations, figs, plan_ablation, report, serve_bench, table1, Workload};
 use ktruss::cli::Args;
 use ktruss::coordinator::JobKind;
 use ktruss::cost::persist;
 use ktruss::gen::suite;
 use ktruss::graph::{io, stats, Csr};
-use ktruss::par::{ktruss_par_gran_mode, ktruss_par_mode, Pool, Schedule};
+use ktruss::par::{ktruss_par_plan, Pool, Schedule};
+use ktruss::plan::{PlanSpec, Planner};
 use ktruss::serve::{CostModel, Executor, Priority, ServeConfig, SubmitOpts};
 use ktruss::sim::{simulate_ktruss_mode, SimConfig, GPU_SCHEDULES};
 use ktruss::util::fmt::{speedup, Table};
@@ -58,6 +61,7 @@ fn main() {
         "suite" => cmd_suite(&args),
         "bench" => cmd_bench(&args),
         "serve" => cmd_serve(&args),
+        "plan" => cmd_plan(&args),
         "sim" => cmd_sim(&args),
         "calibrate" => cmd_calibrate(&args),
         "info" => cmd_info(&args),
@@ -79,26 +83,33 @@ fn print_help() {
          USAGE: ktruss <command> [flags]\n\n\
          COMMANDS\n\
            run        --graph <name|path> [--k 3] [--mode fine|coarse] [--par N] [--engine sparse|dense]\n\
+                      [--plan auto|<schedule>/<granularity>/<support>]\n\
                       [--granularity coarse|fine|segment[:len]]\n\
                       [--schedule static|dynamic[:chunk]|workaware|stealing]\n\
                       [--support-mode full|incremental|auto]\n\
                       [--shards N] [--priority high|normal|low] [--deadline-ms D]\n\
-                      (--shards > 1 serves the job through the sharded executor;\n\
-                      --granularity segment runs the ultra-fine pooled kernel;\n\
-                      --support-mode auto (default) switches between full recompute\n\
-                      and the incremental frontier update per iteration)\n\
+                      (pooled runs execute one cost-driven ExecutionPlan: --plan pins\n\
+                      or frees all axes at once, the per-axis flags pin single axes,\n\
+                      anything unpinned is chosen by the planner per graph;\n\
+                      --shards > 1 serves the job through the sharded executor;\n\
+                      --granularity segment runs the ultra-fine pooled kernel)\n\
            kmax       --graph <name|path>\n\
            decompose  --graph <name|path>\n\
            generate   --graph <name> [--scale 1.0] [--out file.tsv] [--format tsv|bin]\n\
            suite      [--scale 0.15] [--stats]\n\
            bench      <table1|fig2|fig3|fig4|ablations> [--k 3] (env: KTRUSS_SUITE, KTRUSS_SCALE)\n\
            bench gpu-sched [--seg-len 64]  (GPU schedule x granularity sweep)\n\
+           bench plan [--threads 48] [--k 3]  (auto plan vs every fixed plan ablation)\n\
            bench serve [--jobs 120] [--arrival-us 300] [--workers 4] [--shard-counts 1,2,4]\n\
-           serve      [--jobs 32] [--shards 2] [--pool 4] [--schedule <s>] [--priority <p>]\n\
-                      [--support-mode full|incremental|auto] [--deadline-ms D] [--calibration file.tsv]\n\
+           serve      [--jobs 32] [--shards 2] [--pool 4] [--plan <spec>] [--schedule <s>]\n\
+                      [--priority <p>] [--support-mode full|incremental|auto]\n\
+                      [--deadline-ms D] [--calibration file.tsv]\n\
                       (demo job stream through the sharded executor; --pool is the TOTAL worker\n\
-                      budget split across shards; without --schedule/--support-mode the worker\n\
-                      picks per job; without --priority the stream mixes priority classes)\n\
+                      budget split across shards; unpinned plan axes are chosen per job at\n\
+                      submit time; without --priority the stream mixes priority classes)\n\
+           plan       [--graph <name|path>] [--k 3] [--par 48] [--device cpu|gpu] [--plan <spec>]\n\
+                      (explain mode: per-candidate predicted costs and the chosen plan;\n\
+                      without --graph, sweeps a demo set of generator families)\n\
            sim        --graph <name|path> [--k 3] [--granularity <g>|all]\n\
                       [--gpu-schedule static|work-aware|stealing|all] [--cpu-threads N]\n\
                       [--support-mode full|incremental|auto]\n\
@@ -140,36 +151,43 @@ fn parse_mode(args: &Args) -> Result<Mode> {
     }
 }
 
+/// Parse the plan-axis flags into one [`PlanSpec`]: `--plan` sets the
+/// base spec, the per-axis flags (`--schedule`, `--granularity`,
+/// `--support-mode`) pin single axes on top of it.
+fn parse_plan_spec(args: &Args) -> Result<PlanSpec> {
+    let mut spec: PlanSpec = match args.opt("plan") {
+        Some(s) => s.parse().map_err(|e| anyhow::anyhow!("--plan: {e}"))?,
+        None => PlanSpec::auto(),
+    };
+    if let Some(s) = args.opt("schedule") {
+        spec.schedule = Some(s.parse::<Schedule>().map_err(|e| anyhow::anyhow!("--schedule: {e}"))?);
+    }
+    if let Some(s) = args.opt("granularity") {
+        spec.granularity =
+            Some(s.parse::<Granularity>().map_err(|e| anyhow::anyhow!("--granularity: {e}"))?);
+    }
+    if let Some(s) = args.opt("support-mode") {
+        spec.support =
+            Some(s.parse::<SupportMode>().map_err(|e| anyhow::anyhow!("--support-mode: {e}"))?);
+    }
+    Ok(spec)
+}
+
 fn cmd_run(args: &Args) -> Result<()> {
     let g = load_graph(args)?;
     let k = args.get_as::<u32>("k", 3)?;
-    let mut mode = parse_mode(args)?;
-    // --granularity supersedes --mode; coarse/fine map onto the mode,
-    // the segment split routes to its own pooled kernel below
-    let gran: Option<Granularity> = match args.opt("granularity") {
-        Some(s) => Some(s.parse().map_err(|e| anyhow::anyhow!("--granularity: {e}"))?),
-        None => None,
-    };
-    match gran {
-        Some(Granularity::Coarse) => mode = Mode::Coarse,
-        Some(Granularity::Fine) => mode = Mode::Fine,
-        _ => {}
+    let mode_flag = args.opt("mode");
+    let mode = parse_mode(args)?;
+    let mut spec = parse_plan_spec(args)?;
+    // an explicit --mode is a granularity pin (unless --granularity or
+    // --plan already pinned one) — the historical coarse/fine selector
+    // must keep steering the pooled path, not be silently out-planned
+    if spec.granularity.is_none() && mode_flag.is_some() {
+        spec.granularity = Some(mode.into());
     }
     let par = args.get_as::<usize>("par", 1)?;
     let engine_flag = args.opt("engine");
     let engine = engine_flag.clone().unwrap_or_else(|| "sparse".to_string());
-    let schedule_flag = args.opt("schedule");
-    let schedule: Schedule = match &schedule_flag {
-        Some(s) => s.parse().map_err(|e| anyhow::anyhow!("--schedule: {e}"))?,
-        None => Schedule::Dynamic { chunk: 256 },
-    };
-    // direct paths default to the auto driver; the executor path keeps
-    // its per-job heuristic unless the flag pins a mode
-    let support_flag: Option<SupportMode> = match args.opt("support-mode") {
-        Some(s) => Some(s.parse().map_err(|e| anyhow::anyhow!("--support-mode: {e}"))?),
-        None => None,
-    };
-    let support = support_flag.unwrap_or(SupportMode::Auto);
     let shards = args.get_as::<usize>("shards", 1)?;
     let priority: Priority = args
         .get("priority", "normal")
@@ -177,29 +195,24 @@ fn cmd_run(args: &Args) -> Result<()> {
         .map_err(|e| anyhow::anyhow!("--priority: {e}"))?;
     let deadline_ms = args.get_as::<u64>("deadline-ms", 0)?;
     args.reject_unknown()?;
-    if let Some(seg @ Granularity::Segment { .. }) = gran {
+    let seg_requested = matches!(spec.granularity, Some(Granularity::Segment { .. }));
+    if seg_requested {
         if shards > 1 {
-            bail!("--granularity {seg} runs the pooled sparse kernel; drop --shards");
+            bail!("segment granularity runs the pooled sparse kernel; drop --shards");
         }
         if engine == "dense" {
-            bail!("--granularity {seg} requires --engine sparse");
+            bail!("segment granularity requires --engine sparse");
         }
     }
     if shards > 1 {
         // serve the single job through the sharded executor (exercises
-        // admission, cost-model routing and the serving metrics)
+        // admission, submit-time planning and the serving metrics)
         if engine_flag.is_some() {
             eprintln!("note: --engine is ignored with --shards; the executor routes per job");
         }
         println!("graph: {}", stats::stats(&g));
         let ex = Executor::start(
-            ServeConfig {
-                shards,
-                schedule: schedule_flag.map(|_| schedule),
-                support: support_flag,
-                ..Default::default()
-            }
-            .with_total_workers(par),
+            ServeConfig { shards, plan: spec, ..Default::default() }.with_total_workers(par),
         );
         let t = Timer::start();
         let ticket = ex.submit_with(
@@ -212,11 +225,15 @@ fn cmd_run(args: &Args) -> Result<()> {
         );
         let r = ticket.wait();
         let wall = t.elapsed_ms();
+        let plan = r
+            .plan
+            .map(|p| p.to_string())
+            .unwrap_or_else(|| "none".to_string());
         match r.output.map_err(|e| anyhow::anyhow!("{e}"))? {
             ktruss::coordinator::JobOutput::Ktruss { truss_edges, iterations, .. } => {
                 println!(
                     "{k}-truss: {truss_edges} edges survive, {iterations} iterations, \
-                     {wall:.3} ms [{} via {shards}-shard executor, priority={priority}]",
+                     {wall:.3} ms [{} via {shards}-shard executor, plan={plan}, priority={priority}]",
                     r.engine
                 );
             }
@@ -226,10 +243,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         ex.shutdown();
         return Ok(());
     }
-    if schedule_flag.is_some()
-        && (engine != "sparse" || par <= 1)
-        && !matches!(gran, Some(Granularity::Segment { .. }))
-    {
+    if spec.schedule.is_some() && (engine != "sparse" || par <= 1) && !seg_requested {
         eprintln!(
             "note: --schedule only affects the sparse pool engine; add --par <N> (N > 1) to use it"
         );
@@ -242,25 +256,24 @@ fn cmd_run(args: &Args) -> Result<()> {
             let (truss, iters) = eng.ktruss(&g, k)?;
             (truss.nnz(), iters, "dense-xla (AOT jax/Pallas via PJRT)".to_string())
         }
-        "sparse" if matches!(gran, Some(Granularity::Segment { .. })) => {
-            let seg = gran.unwrap();
-            let r = ktruss_par_gran_mode(&g, k, &Pool::new(par.max(1)), seg, schedule, support);
+        "sparse" if par > 1 || seg_requested => {
+            // pooled path: one cost-driven plan (pinned axes honored,
+            // the rest chosen by the planner for this graph)
+            let pool = Pool::new(par.max(1));
+            let plan = Planner::new(pool.workers()).with_spec(spec).choose(&g, k);
+            let r = ktruss_par_plan(&g, k, &pool, &plan);
             (
                 r.truss.nnz(),
                 r.iterations,
-                format!("sparse-cpu (pool, {seg}, {schedule}, support={support})"),
-            )
-        }
-        "sparse" if par > 1 => {
-            let r = ktruss_par_mode(&g, k, &Pool::new(par), mode, schedule, support);
-            (
-                r.truss.nnz(),
-                r.iterations,
-                format!("sparse-cpu (pool, {schedule}, support={support})"),
+                format!("sparse-cpu (pool, plan={plan})"),
             )
         }
         "sparse" => {
-            let r = ktruss_seq_mode(&g, k, mode, support);
+            // sequential reference path: no schedule axis to plan; the
+            // support mode (pinned or the auto default) still applies
+            let support = spec.support.unwrap_or(SupportMode::Auto);
+            let seq_mode = spec.granularity.and_then(|gr| gr.mode()).unwrap_or(mode);
+            let r = ktruss_seq_mode(&g, k, seq_mode, support);
             let inc_iters = r.stats.iter().filter(|s| s.incremental).count();
             (
                 r.truss.nnz(),
@@ -278,6 +291,64 @@ fn cmd_run(args: &Args) -> Result<()> {
         g.nnz() - edges,
         t.elapsed_ms()
     );
+    Ok(())
+}
+
+/// `plan`: print the planner's per-candidate predicted costs and the
+/// chosen `ExecutionPlan` — for one `--graph`, or for a demo sweep of
+/// generator families when no graph is given.
+fn cmd_plan(args: &Args) -> Result<()> {
+    let k = args.get_as::<u32>("k", 3)?;
+    let threads = args.get_as::<usize>("par", 48)?;
+    let device = args.get("device", "cpu");
+    let spec = parse_plan_spec(args)?;
+    let planner = match device.as_str() {
+        "cpu" => Planner::new(threads),
+        "gpu" => Planner::gpu(),
+        other => bail!("--device must be cpu|gpu, got {other:?}"),
+    }
+    .with_spec(spec);
+    let has_graph = args.opt("graph").is_some();
+    // consume --scale even when no graph is given (load_graph reads it)
+    let _ = args.get_as::<f64>("scale", 0.15)?;
+    if has_graph {
+        let g = load_graph(args)?;
+        args.reject_unknown()?;
+        println!("graph: {}", stats::stats(&g));
+        println!("{}", planner.explain(&g, k).render());
+        return Ok(());
+    }
+    args.reject_unknown()?;
+    // demo sweep: one explain table per generator family, so the
+    // structural flip (coarse on flat, fine/segment + cost-aware
+    // schedules on hubs) is visible side by side
+    let mut rng = ktruss::util::Rng::new(7);
+    let demos: Vec<(&str, Csr)> = vec![
+        (
+            "rmat-social",
+            ktruss::gen::rmat::rmat(2000, 12_000, ktruss::gen::rmat::RmatParams::social(), &mut rng),
+        ),
+        (
+            "rmat-as-hub",
+            ktruss::gen::rmat::rmat(
+                3000,
+                15_000,
+                ktruss::gen::rmat::RmatParams::autonomous_system(),
+                &mut rng,
+            ),
+        ),
+        ("road-grid", ktruss::gen::grid::road(3000, 5800, 0.05, &mut rng)),
+        ("star-fringe", ktruss::testkit::graphs::star_with_fringe(1200)),
+        ("hub-comb", ktruss::testkit::graphs::hub_divergence_comb(64, 256, 800)),
+    ];
+    println!(
+        "# plan: per-candidate predicted costs over {} generator families (k={k}, {device} model, {threads} threads)",
+        demos.len()
+    );
+    for (name, g) in &demos {
+        println!("## {name}: {}", stats::stats(g));
+        println!("{}", planner.explain(g, k).render());
+    }
     Ok(())
 }
 
@@ -357,10 +428,23 @@ fn cmd_bench(args: &Args) -> Result<()> {
     let which = args
         .positional
         .first()
-        .context("bench needs a target: table1|fig2|fig3|fig4|ablations|gpu-sched|serve")?
+        .context("bench needs a target: table1|fig2|fig3|fig4|ablations|gpu-sched|serve|plan")?
         .clone();
     if which == "serve" {
         return cmd_bench_serve(args);
+    }
+    if which == "plan" {
+        // the plan ablation generates its own fixture families (skewed
+        // + flat); the replica suite is not involved
+        let threads = args.get_as::<usize>("threads", 48)?;
+        let k = args.get_as::<u32>("k", 3)?;
+        args.reject_unknown()?;
+        println!("# plan: auto plan vs every fixed plan (CPU model, {threads} threads, k={k})");
+        let r = plan_ablation::run(threads, k, |msg| eprintln!("  [{msg}]"))?;
+        if !r.auto_within_margin() || !r.auto_beats_static_coarse() {
+            eprintln!("warning: plan-ablation invariants failed (see report)");
+        }
+        return report::emit("plan_ablation.txt", &r.render());
     }
     if which == "gpu-sched" {
         // the sweep generates its own adversarial graphs (skewed RMAT +
@@ -480,19 +564,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let shards = args.get_as::<usize>("shards", 2)?.max(1);
     // --pool is the TOTAL worker budget, split evenly across shards
     let pool = args.get_as::<usize>("pool", 4)?;
-    // no --schedule flag ⇒ the worker picks per job from graph skew
-    let schedule: Option<Schedule> = match args.opt("schedule") {
-        Some(s) => Some(s.parse().map_err(|e| anyhow::anyhow!("--schedule: {e}"))?),
-        None => None,
-    };
+    // unpinned plan axes are chosen per job by the submit-time planner
+    let spec = parse_plan_spec(args)?;
     // no --priority flag ⇒ the demo stream mixes priority classes
     let fixed_priority: Option<Priority> = match args.opt("priority") {
         Some(p) => Some(p.parse().map_err(|e| anyhow::anyhow!("--priority: {e}"))?),
-        None => None,
-    };
-    // no --support-mode flag ⇒ the worker picks per job
-    let support: Option<SupportMode> = match args.opt("support-mode") {
-        Some(s) => Some(s.parse().map_err(|e| anyhow::anyhow!("--support-mode: {e}"))?),
         None => None,
     };
     let deadline_ms = args.get_as::<u64>("deadline-ms", 0)?;
@@ -516,13 +592,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     // --pool is the exact TOTAL budget; with_total_workers spreads the
     // remainder over the first shards
-    let serve_cfg = ServeConfig { shards, schedule, support, ..Default::default() }
+    let serve_cfg = ServeConfig { shards, plan: spec, ..Default::default() }
         .with_total_workers(pool);
     let (wps, extra) = (serve_cfg.workers_per_shard, serve_cfg.workers_remainder);
     let ex = Executor::start_with_model(serve_cfg, model);
     println!(
-        "executor up (shards={shards}, workers/shard={wps}+{extra}, schedule={}); submitting {jobs} mixed jobs…",
-        schedule.map(|s| s.to_string()).unwrap_or_else(|| "auto".to_string())
+        "executor up (shards={shards}, workers/shard={wps}+{extra}, plan={spec}, schedule={}); submitting {jobs} mixed jobs…",
+        spec.schedule
+            .map(|s| s.to_string())
+            .unwrap_or_else(|| "auto".to_string())
     );
     let mut rng = ktruss::util::Rng::new(1);
     let mut tickets = Vec::new();

@@ -87,6 +87,48 @@ pub fn estimate_costs(z: &ZCsr, mode: Mode) -> Vec<u64> {
     }
 }
 
+/// Sum of [`estimate_costs`] without materializing the per-task vector
+/// — the allocation-free variant the sequential convergence drivers use
+/// for their per-round auto-crossover check (they need only the total,
+/// never the per-task breakdown; the ROADMAP's "sum-only estimate
+/// variants" follow-up). Exactly equals
+/// `estimate_costs(z, mode).iter().sum()`.
+pub fn estimate_costs_sum(z: &ZCsr, mode: Mode) -> u64 {
+    let n = z.n();
+    let col = z.col();
+    let live: Vec<u32> = (0..n).map(|i| z.row_live(i).len() as u32).collect();
+    let mut total = 0u64;
+    match mode {
+        Mode::Coarse => {
+            for i in 0..n {
+                let (start, _) = z.row_span(i);
+                let li = live[i] as usize;
+                total += 1;
+                for off in 0..li {
+                    let kappa = col[start + off] as usize;
+                    let tail = (li - off - 1) as u64;
+                    total += 1 + tail + live[kappa] as u64;
+                }
+            }
+        }
+        Mode::Fine => {
+            // every slot costs at least 1 (terminators/tombstones), live
+            // slots cost 1 + tail + partner instead
+            total = z.slots() as u64;
+            for i in 0..n {
+                let (start, _) = z.row_span(i);
+                let li = live[i] as usize;
+                for off in 0..li {
+                    let kappa = col[start + off] as usize;
+                    let tail = (li - off - 1) as u64;
+                    total += tail + live[kappa] as u64;
+                }
+            }
+        }
+    }
+    total
+}
+
 /// A per-task cost vector for one support/prune pass, tagged by how it
 /// was obtained. Two sources:
 ///
@@ -486,6 +528,38 @@ mod tests {
                 coarse[i],
                 tr.row_steps(z.row_ptr(), i)
             );
+        }
+    }
+
+    #[test]
+    fn estimate_costs_sum_matches_vector_sum() {
+        let graphs = [
+            from_sorted_unique(4, &[(0, 1), (0, 2), (0, 3), (1, 2), (2, 3)]),
+            crate::gen::rmat::rmat(
+                200,
+                1500,
+                crate::gen::rmat::RmatParams::autonomous_system(),
+                &mut crate::util::Rng::new(3),
+            ),
+            crate::graph::Csr::empty(5),
+        ];
+        for g in &graphs {
+            let mut z = crate::graph::ZCsr::from_csr(g);
+            for mode in [Mode::Coarse, Mode::Fine] {
+                let want: u64 = estimate_costs(&z, mode).iter().sum();
+                assert_eq!(estimate_costs_sum(&z, mode), want, "{mode}");
+            }
+            // and after a prune-style mutation (tombstoned tail)
+            if z.slots() > 2 {
+                let (start, end) = z.row_span(0);
+                for p in start..end {
+                    z.col_mut()[p] = 0;
+                }
+                for mode in [Mode::Coarse, Mode::Fine] {
+                    let want: u64 = estimate_costs(&z, mode).iter().sum();
+                    assert_eq!(estimate_costs_sum(&z, mode), want, "pruned {mode}");
+                }
+            }
         }
     }
 

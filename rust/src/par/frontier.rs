@@ -22,6 +22,7 @@ use crate::algo::incremental::{frontier_task_atomic, Frontier, InNbrs};
 use crate::algo::prune::PruneOutcome;
 use crate::algo::support::Granularity;
 use crate::graph::ZCsr;
+use crate::util::bitset::BitSet;
 use std::sync::atomic::{AtomicU32, AtomicUsize, Ordering};
 
 /// Whether `schedule` wants per-task cost estimates (same predicate the
@@ -144,7 +145,7 @@ pub fn decrement_frontier_par_gran(
 pub fn compact_preserving_par(
     z: &mut ZCsr,
     s: &[AtomicU32],
-    dying: &[bool],
+    dying: &BitSet,
     pool: &Pool,
     schedule: Schedule,
 ) -> PruneOutcome {
@@ -168,7 +169,7 @@ pub fn compact_preserving_par(
             if c == 0 {
                 break;
             }
-            if dying[start + p] {
+            if dying.get(start + p) {
                 local_removed += 1;
             } else {
                 col[write] = c;

@@ -19,6 +19,7 @@ use crate::algo::support::{
     eager_update_atomic, eager_update_segment_atomic, segment_tasks, Granularity, Mode,
 };
 use crate::graph::ZCsr;
+use crate::plan::ExecutionPlan;
 use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 
 /// Run one support pass concurrently; returns the plain support array.
@@ -319,6 +320,29 @@ pub fn ktruss_par(
     ktruss_par_mode(g, k, pool, mode, schedule, SupportMode::Auto)
 }
 
+/// The plan-driven concurrent k-truss: one [`ExecutionPlan`] carries
+/// every execution axis — granularity, schedule, support mode and the
+/// auto-crossover fraction — end to end. This is the entry the
+/// coordinator worker runs a job's submit-time plan through; the
+/// mode/gran entries below are thin wrappers that build a plan at the
+/// default crossover.
+pub fn ktruss_par_plan(
+    g: &crate::graph::Csr,
+    k: u32,
+    pool: &Pool,
+    plan: &ExecutionPlan,
+) -> crate::algo::ktruss::KtrussResult {
+    ktruss_par_gran_crossover(
+        g,
+        k,
+        pool,
+        plan.granularity,
+        plan.schedule,
+        plan.support,
+        plan.crossover,
+    )
+}
+
 /// [`ktruss_par`] with an explicit support-maintenance mode.
 ///
 /// Full recomputes run a *calibrated* pass under the work-aware
@@ -339,6 +363,27 @@ pub fn ktruss_par_mode(
     schedule: Schedule,
     support: SupportMode,
 ) -> crate::algo::ktruss::KtrussResult {
+    ktruss_par_mode_crossover(
+        g,
+        k,
+        pool,
+        mode,
+        schedule,
+        support,
+        incremental::DEFAULT_CROSSOVER_FRAC,
+    )
+}
+
+/// [`ktruss_par_mode`] with the plan-supplied auto-crossover fraction.
+fn ktruss_par_mode_crossover(
+    g: &crate::graph::Csr,
+    k: u32,
+    pool: &Pool,
+    mode: Mode,
+    schedule: Schedule,
+    support: SupportMode,
+    crossover: f64,
+) -> crate::algo::ktruss::KtrussResult {
     let mut z = ZCsr::from_csr(g);
     let s_atomic: Vec<AtomicU32> = (0..z.slots()).map(|_| AtomicU32::new(0)).collect();
     let mut s_plain = vec![0u32; z.slots()];
@@ -355,7 +400,10 @@ pub fn ktruss_par_mode(
     let use_inc = support.allows_incremental();
     let mut iterations = 0usize;
     let mut stats = Vec::new();
-    if z.live_edges() == 0 {
+    // live-edge counter maintained from the prune/compaction outcomes
+    // (one initial O(slots) scan, no per-round rescan)
+    let mut live = z.live_edges();
+    if live == 0 {
         return crate::algo::ktruss::KtrussResult {
             truss: z.to_csr(),
             iterations,
@@ -375,7 +423,6 @@ pub fn ktruss_par_mode(
         measured_snap.extend(measured.iter().map(|a| a.load(Ordering::Relaxed)));
     }
     loop {
-        let live = z.live_edges();
         if live == 0 {
             break;
         }
@@ -393,10 +440,18 @@ pub fn ktruss_par_mode(
             break;
         }
         // decide how to bring S up to date for the shrunken graph (the
-        // shared per-round decision; auto hands back the frontier cost
-        // estimates for the binner)
-        let (go_incremental, frontier_cost_vec) =
-            incremental::decide_incremental(&z, &f, in_nbrs.as_ref(), support, last_full_steps);
+        // shared per-round decision at the plan's crossover fraction;
+        // only a work-aware schedule needs the per-task estimates back
+        // for its binner — other schedules run the sum-only check)
+        let (go_incremental, frontier_cost_vec) = incremental::decide_incremental(
+            &z,
+            &f,
+            in_nbrs.as_ref(),
+            support,
+            last_full_steps,
+            crossover,
+            needs_costs(schedule),
+        );
         if go_incremental {
             let nbrs = in_nbrs.as_ref().expect("incremental mode builds the index");
             pass_steps = frontier::decrement_frontier_par(
@@ -409,15 +464,16 @@ pub fn ktruss_par_mode(
                 frontier_cost_vec.as_deref(),
             );
             pass_incremental = true;
-            frontier::compact_preserving_par(&mut z, &s_atomic, &f.dying, pool, schedule);
+            live = frontier::compact_preserving_par(&mut z, &s_atomic, &f.dying, pool, schedule)
+                .remaining;
         } else {
             // classic path: drain the atomic supports, prune (resetting
             // them), recompute with trace-calibrated binning
             for (d, a) in s_plain.iter_mut().zip(s_atomic.iter()) {
                 *d = a.swap(0, Ordering::Relaxed);
             }
-            prune_par(&mut z, &mut s_plain, k, pool, schedule);
-            if z.live_edges() == 0 {
+            live = prune_par(&mut z, &mut s_plain, k, pool, schedule).remaining;
+            if live == 0 {
                 pass_steps = 0;
                 pass_incremental = false;
             } else {
@@ -472,9 +528,35 @@ pub fn ktruss_par_gran_mode(
     schedule: Schedule,
     support: SupportMode,
 ) -> crate::algo::ktruss::KtrussResult {
+    ktruss_par_gran_crossover(
+        g,
+        k,
+        pool,
+        gran,
+        schedule,
+        support,
+        incremental::DEFAULT_CROSSOVER_FRAC,
+    )
+}
+
+/// [`ktruss_par_gran_mode`] with the plan-supplied auto-crossover
+/// fraction — the shared engine behind [`ktruss_par_plan`].
+fn ktruss_par_gran_crossover(
+    g: &crate::graph::Csr,
+    k: u32,
+    pool: &Pool,
+    gran: Granularity,
+    schedule: Schedule,
+    support: SupportMode,
+    crossover: f64,
+) -> crate::algo::ktruss::KtrussResult {
     let len = match gran {
-        Granularity::Coarse => return ktruss_par_mode(g, k, pool, Mode::Coarse, schedule, support),
-        Granularity::Fine => return ktruss_par_mode(g, k, pool, Mode::Fine, schedule, support),
+        Granularity::Coarse => {
+            return ktruss_par_mode_crossover(g, k, pool, Mode::Coarse, schedule, support, crossover)
+        }
+        Granularity::Fine => {
+            return ktruss_par_mode_crossover(g, k, pool, Mode::Fine, schedule, support, crossover)
+        }
         Granularity::Segment { len } => len,
     };
     let mut z = ZCsr::from_csr(g);
@@ -483,7 +565,9 @@ pub fn ktruss_par_gran_mode(
     let use_inc = support.allows_incremental();
     let mut iterations = 0usize;
     let mut stats = Vec::new();
-    if z.live_edges() == 0 {
+    // live-edge counter maintained from the prune/compaction outcomes
+    let mut live = z.live_edges();
+    if live == 0 {
         return crate::algo::ktruss::KtrussResult {
             truss: z.to_csr(),
             iterations,
@@ -497,7 +581,6 @@ pub fn ktruss_par_gran_mode(
     let mut pass_incremental = false;
     let mut last_full_steps = pass_steps;
     loop {
-        let live = z.live_edges();
         if live == 0 {
             break;
         }
@@ -514,8 +597,15 @@ pub fn ktruss_par_gran_mode(
         if f.is_empty() {
             break;
         }
-        let (go_incremental, frontier_cost_vec) =
-            incremental::decide_incremental(&z, &f, in_nbrs.as_ref(), support, last_full_steps);
+        let (go_incremental, frontier_cost_vec) = incremental::decide_incremental(
+            &z,
+            &f,
+            in_nbrs.as_ref(),
+            support,
+            last_full_steps,
+            crossover,
+            needs_costs(schedule),
+        );
         if go_incremental {
             let nbrs = in_nbrs.as_ref().expect("incremental mode builds the index");
             pass_steps = frontier::decrement_frontier_par_gran(
@@ -529,13 +619,14 @@ pub fn ktruss_par_gran_mode(
                 frontier_cost_vec.as_deref(),
             );
             pass_incremental = true;
-            frontier::compact_preserving_par(&mut z, &s_atomic, &f.dying, pool, schedule);
+            live = frontier::compact_preserving_par(&mut z, &s_atomic, &f.dying, pool, schedule)
+                .remaining;
         } else {
             for (d, a) in s_plain.iter_mut().zip(s_atomic.iter()) {
                 *d = a.swap(0, Ordering::Relaxed);
             }
-            prune_par(&mut z, &mut s_plain, k, pool, schedule);
-            if z.live_edges() == 0 {
+            live = prune_par(&mut z, &mut s_plain, k, pool, schedule).remaining;
+            if live == 0 {
                 pass_steps = 0;
                 pass_incremental = false;
             } else {

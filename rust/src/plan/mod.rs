@@ -1,0 +1,839 @@
+//! Unified execution planning — one cost-driven decision for every
+//! axis the stack exposes.
+//!
+//! The paper's core claim is that the *right* task decomposition and
+//! schedule depend on the graph's shape: coarse row tasks for flat
+//! degree distributions, fine/segment tasks plus work-aware or stealing
+//! schedules for hub-skewed ones (PKT and the GPU dynamic
+//! load-balancing survey both report the same flip). The repo exposes
+//! every axis — [`Schedule`], [`Granularity`],
+//! [`SupportMode`] — but until this module they were decided in four
+//! disconnected places. The planner replaces those scattered heuristics
+//! with one subsystem:
+//!
+//! 1. read the graph's static per-task cost bounds off the
+//!    zero-terminated CSR ([`balance::estimate_costs`] — the same
+//!    bounds the work-aware binner uses);
+//! 2. auto-tune a segment length from the quantiles of that per-task
+//!    cost distribution ([`auto_segment_len`]);
+//! 3. score every (schedule × granularity) candidate through the
+//!    **existing machine models** — the CPU makespan model
+//!    ([`crate::sim::cpu::makespan_ns`]) or the GPU warp/slot model
+//!    ([`crate::sim::gpu::estimate_tasks_sched`]) — at the machine's
+//!    calibrated per-task overheads;
+//! 4. pick a support-maintenance mode from the serving cost model's
+//!    per-label ns/step EWMAs when both profiles have been observed
+//!    ([`crate::serve::cost_model::CostModel`]), falling back to the
+//!    degree-skew heuristic;
+//! 5. return one [`ExecutionPlan`] that is carried end to end: the
+//!    serving layer computes it once at admission, the queue transports
+//!    it, the worker executes it, and the drivers
+//!    ([`crate::par::ktruss_par_plan`]) consume every field including
+//!    the auto-crossover fraction.
+//!
+//! Candidate selection is deliberately *sticky*: a later (more complex)
+//! candidate replaces the incumbent only when its predicted cost is at
+//! least `1 − `[`PLAN_SWITCH_MARGIN`] better. Static estimates are
+//! upper bounds with different slack per granularity, so near-ties are
+//! noise — the planner switches away from the simple plan only on a
+//! clear, shape-driven win (hub rows, clustered hot regions), which is
+//! exactly when the paper says the choice matters.
+
+use crate::algo::incremental::{SupportMode, DEFAULT_CROSSOVER_FRAC};
+use crate::algo::support::{Granularity, Mode, DEFAULT_SEGMENT_LEN};
+use crate::coordinator::job::JobKind;
+use crate::graph::{Csr, ZCsr};
+use crate::par::balance::{self, Costs};
+use crate::par::Schedule;
+use crate::serve::cost_model::{job_label, CostModel};
+use crate::sim::machine::{CpuMachine, GpuMachine};
+use crate::util::fmt::Table;
+use std::sync::Arc;
+
+/// Jobs below this many edges skip candidate scoring entirely: binning,
+/// frontier bookkeeping and planning itself all dominate the kernel at
+/// this size, so the plan is pinned to the cheapest execution
+/// (static schedule, coarse tasks, full recompute). Same threshold the
+/// retired per-job heuristics used.
+pub const TINY_JOB_NNZ: usize = 2048;
+
+/// Degree-skew threshold (max upper-triangular row length over the
+/// mean) above which the support-mode fallback heuristic expects a
+/// deep, fringe-peeling cascade and picks
+/// [`SupportMode::Incremental`] outright.
+pub const HUB_SKEW: f64 = 8.0;
+
+/// A later candidate replaces the incumbent only when its predicted
+/// cost is below `incumbent × PLAN_SWITCH_MARGIN` — the planner's
+/// stickiness toward simpler plans (see the module docs). Kept tight
+/// enough that the chosen plan is always within 5% of the best-scored
+/// candidate (the plan-ablation CI bound).
+pub const PLAN_SWITCH_MARGIN: f64 = 0.97;
+
+/// Bounds of the auto-tuned segment length (see [`auto_segment_len`]).
+pub const MIN_AUTO_SEGMENT_LEN: u32 = 16;
+/// Upper bound of the auto-tuned segment length.
+pub const MAX_AUTO_SEGMENT_LEN: u32 = 256;
+
+/// Minimum calibration samples **per label** before the planner trusts
+/// the cost model's `ktruss+full` vs `ktruss+incremental` comparison
+/// over the degree-skew fallback. One-off observations are dominated by
+/// which graph shapes happened to run under each label (tiny jobs are
+/// the only Full plans under an all-auto spec), so a single sample per
+/// side would make the comparison systematically biased.
+pub const MIN_SUPPORT_SAMPLES: u64 = 3;
+
+/// The one decision object the whole stack consumes: how a fixed-k
+/// truss job executes, on every axis at once.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ExecutionPlan {
+    /// How tasks map to workers ([`crate::par::Pool`] schedule).
+    pub schedule: Schedule,
+    /// How the support pass is cut into tasks.
+    pub granularity: Granularity,
+    /// How supports are maintained across iterations.
+    pub support: SupportMode,
+    /// The [`SupportMode::Auto`] crossover fraction: the frontier
+    /// update runs only when its estimated work is at most this
+    /// fraction of the full-pass proxy.
+    pub crossover: f64,
+}
+
+impl ExecutionPlan {
+    /// A plan with explicit axes at the default crossover fraction.
+    pub fn fixed(schedule: Schedule, granularity: Granularity, support: SupportMode) -> ExecutionPlan {
+        ExecutionPlan { schedule, granularity, support, crossover: DEFAULT_CROSSOVER_FRAC }
+    }
+
+    /// The coarse/fine [`Mode`] this plan's granularity maps onto
+    /// ([`Mode::Fine`] for the segment split, which subdivides fine
+    /// tasks and reports as fine).
+    pub fn mode(&self) -> Mode {
+        self.granularity.mode().unwrap_or(Mode::Fine)
+    }
+}
+
+impl std::fmt::Display for ExecutionPlan {
+    /// `schedule/granularity/support` — the same grammar
+    /// [`PlanSpec`] parses, so a printed plan is a valid `--plan`
+    /// argument.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}/{}/{}", self.schedule, self.granularity, self.support)
+    }
+}
+
+/// A partially-pinned plan: `None` axes are chosen by the planner,
+/// `Some` axes are fixed. This is what configuration carries — the CLI
+/// `--plan` grammar, `ServeConfig::plan`, and the per-axis override
+/// flags all produce one of these.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PlanSpec {
+    /// Pinned schedule, or `None` to let the planner score it.
+    pub schedule: Option<Schedule>,
+    /// Pinned granularity, or `None` to let the planner score it.
+    pub granularity: Option<Granularity>,
+    /// Pinned support mode, or `None` to let the planner pick it.
+    pub support: Option<SupportMode>,
+    /// Pinned crossover fraction, or `None` for the default.
+    pub crossover: Option<f64>,
+}
+
+impl PlanSpec {
+    /// The all-auto spec (every axis chosen by the planner).
+    pub fn auto() -> PlanSpec {
+        PlanSpec::default()
+    }
+
+    /// Whether any axis is pinned.
+    pub fn is_auto(&self) -> bool {
+        self.schedule.is_none()
+            && self.granularity.is_none()
+            && self.support.is_none()
+            && self.crossover.is_none()
+    }
+
+    /// The fully-fixed plan this spec describes, when every execution
+    /// axis is pinned (the crossover falls back to its default).
+    pub fn fixed(&self) -> Option<ExecutionPlan> {
+        Some(ExecutionPlan {
+            schedule: self.schedule?,
+            granularity: self.granularity?,
+            support: self.support?,
+            crossover: self.crossover.unwrap_or(DEFAULT_CROSSOVER_FRAC),
+        })
+    }
+
+    /// Overlay the pinned axes of this spec onto a chosen plan.
+    pub fn apply(&self, base: ExecutionPlan) -> ExecutionPlan {
+        ExecutionPlan {
+            schedule: self.schedule.unwrap_or(base.schedule),
+            granularity: self.granularity.unwrap_or(base.granularity),
+            support: self.support.unwrap_or(base.support),
+            crossover: self.crossover.unwrap_or(base.crossover),
+        }
+    }
+}
+
+impl std::fmt::Display for PlanSpec {
+    /// `auto` when nothing is pinned, otherwise
+    /// `sched-or-auto/gran-or-auto/support-or-any` (unpinned schedule
+    /// and granularity render as `auto`, unpinned support as `any` —
+    /// `auto` in the support slot means the pinned
+    /// [`SupportMode::Auto`]; the crossover pin has no surface syntax
+    /// and is not rendered).
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.is_auto() {
+            return write!(f, "auto");
+        }
+        let part = |x: Option<String>, free: &str| x.unwrap_or_else(|| free.to_string());
+        write!(
+            f,
+            "{}/{}/{}",
+            part(self.schedule.map(|s| s.to_string()), "auto"),
+            part(self.granularity.map(|g| g.to_string()), "auto"),
+            part(self.support.map(|m| m.to_string()), "any"),
+        )
+    }
+}
+
+impl std::str::FromStr for PlanSpec {
+    type Err = String;
+
+    /// Parse the CLI `--plan` grammar: `auto` (all axes planned), or
+    /// `<schedule>/<granularity>/<support>` — e.g.
+    /// `stealing/fine/incremental`, `auto/segment:64/any`. The schedule
+    /// and granularity parts accept `auto`/`any` to leave the axis to
+    /// the planner; the support part accepts only `any` for that
+    /// (because `auto` already names the per-round
+    /// [`SupportMode::Auto`] crossover driver, which this pins).
+    fn from_str(s: &str) -> Result<PlanSpec, String> {
+        if s == "auto" {
+            return Ok(PlanSpec::auto());
+        }
+        let parts: Vec<&str> = s.split('/').collect();
+        if parts.len() != 3 {
+            return Err(format!(
+                "plan spec {s:?} must be `auto` or `<schedule>/<granularity>/<support>` \
+                 (axis values, with `auto`/`any` leaving an axis to the planner)"
+            ));
+        }
+        let axis = |p: &str| -> Option<&str> { (p != "auto" && p != "any").then_some(p) };
+        Ok(PlanSpec {
+            schedule: axis(parts[0]).map(|p| p.parse()).transpose()?,
+            granularity: axis(parts[1]).map(|p| p.parse()).transpose()?,
+            support: (parts[2] != "any").then(|| parts[2].parse()).transpose()?,
+            crossover: None,
+        })
+    }
+}
+
+/// The device the plan's candidates are scored for.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlanDevice {
+    /// The CPU pool model at the planner's thread count.
+    Cpu,
+    /// The V100 warp/slot model ([`crate::sim::gpu`]).
+    Gpu,
+}
+
+/// Auto-tune the segment length from a per-task cost distribution
+/// (quantile-based): the median of the non-trivial costs, clamped
+/// between [`MIN_AUTO_SEGMENT_LEN`] and [`MAX_AUTO_SEGMENT_LEN`].
+///
+/// The rationale: a segment of median-task length splits every hub-
+/// sized task into many *typical*-sized pieces (bounding the longest
+/// task — and on the GPU the serial tail — by the bulk of the
+/// distribution) while leaving that bulk unsplit (cost ≤ len ⇒ one
+/// segment), so the per-segment overhead stays proportional to the
+/// skew it removes. Works on either cost source [`Costs`] carries —
+/// the static estimates at admission time or a measured trace.
+pub fn auto_segment_len(costs: &Costs) -> u32 {
+    let mut v: Vec<u64> = costs.per_task.iter().copied().filter(|&c| c > 1).collect();
+    if v.is_empty() {
+        return DEFAULT_SEGMENT_LEN.clamp(MIN_AUTO_SEGMENT_LEN, MAX_AUTO_SEGMENT_LEN);
+    }
+    v.sort_unstable();
+    let p50 = v[(v.len() - 1) / 2];
+    (p50.min(MAX_AUTO_SEGMENT_LEN as u64) as u32).max(MIN_AUTO_SEGMENT_LEN)
+}
+
+/// One scored candidate of a planning decision.
+#[derive(Clone, Debug)]
+pub struct PlanCandidate {
+    /// The candidate plan (all candidates share the chosen support mode
+    /// and crossover; they differ on schedule × granularity).
+    pub plan: ExecutionPlan,
+    /// Predicted cost of one support pass under this candidate, in
+    /// milliseconds of the scoring device's machine model.
+    pub predicted_ms: f64,
+}
+
+/// The full record of one planning decision — every candidate with its
+/// predicted cost, and which one won ("explain" mode).
+#[derive(Clone, Debug)]
+pub struct PlanExplanation {
+    /// Requested k (recorded for provenance; the static scoring is
+    /// k-independent).
+    pub k: u32,
+    /// Scored candidates, in enumeration order (granularity-major,
+    /// schedule-minor).
+    pub candidates: Vec<PlanCandidate>,
+    /// Index of the chosen candidate.
+    pub chosen: usize,
+    /// Auto-tuned segment length used by the segment candidates.
+    pub seg_len: u32,
+    /// Degree-skew proxy (max upper-triangular row length / mean).
+    pub skew: f64,
+    /// Whether the tiny-job shortcut fired (no scoring ran).
+    pub tiny: bool,
+}
+
+impl PlanExplanation {
+    /// The winning plan.
+    pub fn plan(&self) -> ExecutionPlan {
+        self.candidates[self.chosen].plan
+    }
+
+    /// Predicted cost of the winning plan, ms.
+    pub fn predicted_ms(&self) -> f64 {
+        self.candidates[self.chosen].predicted_ms
+    }
+
+    /// The minimum predicted cost over all candidates (the best fixed
+    /// plan's cost — the plan-ablation bound compares the winner
+    /// against this).
+    pub fn best_ms(&self) -> f64 {
+        self.candidates
+            .iter()
+            .map(|c| c.predicted_ms)
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Look up the candidate at one (schedule, granularity) grid point.
+    pub fn candidate(&self, schedule: Schedule, gran: Granularity) -> Option<&PlanCandidate> {
+        self.candidates
+            .iter()
+            .find(|c| c.plan.schedule == schedule && c.plan.granularity == gran)
+    }
+
+    /// Render the per-candidate predicted costs as an aligned table
+    /// with the winner marked (what `ktruss plan` prints).
+    pub fn render(&self) -> String {
+        let mut table = Table::new(vec!["candidate plan", "predicted ms", ""]);
+        for (i, c) in self.candidates.iter().enumerate() {
+            table.row(vec![
+                c.plan.to_string(),
+                format!("{:.4}", c.predicted_ms),
+                if i == self.chosen { "<- chosen".to_string() } else { String::new() },
+            ]);
+        }
+        let mut out = table.render();
+        out.push_str(&format!(
+            "chosen: {} (skew {:.1}, seg-len {}{})\n",
+            self.plan(),
+            self.skew,
+            self.seg_len,
+            if self.tiny { ", tiny-job shortcut" } else { "" }
+        ));
+        out
+    }
+}
+
+/// The planner: device, thread budget, pinned axes, and (optionally)
+/// the serving cost model whose per-label ns/step EWMAs refine the
+/// support-mode choice. Construction is cheap; [`Planner::choose`] does
+/// `O(m log m)` work on the job's graph — comparable to the submit-time
+/// cost estimate it sits next to.
+#[derive(Clone)]
+pub struct Planner {
+    /// Worker threads the job's pool will run (CPU scoring width).
+    pub threads: usize,
+    /// Device whose machine model scores the candidates.
+    pub device: PlanDevice,
+    /// Pinned axes (candidate enumeration is restricted to them).
+    pub spec: PlanSpec,
+    model: Option<Arc<CostModel>>,
+}
+
+impl Planner {
+    /// A CPU planner for a pool of `threads` workers, nothing pinned.
+    pub fn new(threads: usize) -> Planner {
+        Planner {
+            threads: threads.max(1),
+            device: PlanDevice::Cpu,
+            spec: PlanSpec::auto(),
+            model: None,
+        }
+    }
+
+    /// A GPU planner (scores through the V100 warp/slot model).
+    pub fn gpu() -> Planner {
+        Planner {
+            threads: 1,
+            device: PlanDevice::Gpu,
+            spec: PlanSpec::auto(),
+            model: None,
+        }
+    }
+
+    /// Pin axes (builder style).
+    pub fn with_spec(mut self, spec: PlanSpec) -> Planner {
+        self.spec = spec;
+        self
+    }
+
+    /// Attach the serving cost model so the support-mode choice can use
+    /// its calibrated per-label ns/step EWMAs.
+    pub fn with_model(mut self, model: Arc<CostModel>) -> Planner {
+        self.model = Some(model);
+        self
+    }
+
+    /// Choose one plan for graph `g` at threshold `k`. Fully-pinned
+    /// specs return immediately; otherwise the candidates are scored
+    /// (see [`Planner::explain`]).
+    pub fn choose(&self, g: &Csr, k: u32) -> ExecutionPlan {
+        if let Some(plan) = self.spec.fixed() {
+            return plan;
+        }
+        self.explain(g, k).plan()
+    }
+
+    /// Score every candidate and return the full decision record.
+    pub fn explain(&self, g: &Csr, k: u32) -> PlanExplanation {
+        let crossover = self.spec.crossover.unwrap_or(DEFAULT_CROSSOVER_FRAC);
+        let n = g.n();
+        let live: Vec<u32> = (0..n).map(|i| g.row(i).len() as u32).collect();
+        let mean = if n == 0 { 0.0 } else { g.nnz() as f64 / n as f64 };
+        let max = live.iter().copied().max().unwrap_or(0) as f64;
+        let skew = if mean > 0.0 { max / mean } else { 0.0 };
+        // tiny jobs: scoring (and every non-trivial plan) costs more
+        // than it saves — pin the cheapest execution
+        if g.nnz() < TINY_JOB_NNZ {
+            let plan = self
+                .spec
+                .apply(ExecutionPlan::fixed(Schedule::Static, Granularity::Coarse, SupportMode::Full));
+            // a rough serial-cost figure in the scoring device's own
+            // units, so the single row stays comparable to non-tiny
+            // explanations from the same planner
+            let step_ns = match self.device {
+                PlanDevice::Cpu => CpuMachine::skylake_8160(self.threads).step_ns,
+                PlanDevice::Gpu => GpuMachine::v100().serial_step_s() * 1e9,
+            };
+            let predicted_ms = g.nnz() as f64 * 4.0 * step_ns / 1e6;
+            return PlanExplanation {
+                k,
+                candidates: vec![PlanCandidate { plan, predicted_ms }],
+                chosen: 0,
+                seg_len: DEFAULT_SEGMENT_LEN,
+                skew,
+                tiny: true,
+            };
+        }
+        let z = ZCsr::from_csr(g);
+        let fine_costs = Costs { per_task: balance::estimate_costs(&z, Mode::Fine) };
+        let fine_est: &[u64] = &fine_costs.per_task;
+        let total_est: u64 = fine_est.iter().sum();
+        let support = self.pick_support(g, total_est, skew);
+        let seg_len = match self.spec.granularity {
+            Some(Granularity::Segment { len }) => len,
+            _ => auto_segment_len(&fine_costs),
+        };
+        let grans: Vec<Granularity> = match self.spec.granularity {
+            Some(gran) => vec![gran],
+            None => vec![
+                Granularity::Coarse,
+                Granularity::Fine,
+                Granularity::Segment { len: seg_len },
+            ],
+        };
+        let scheds: Vec<Schedule> = match self.spec.schedule {
+            Some(s) => vec![s],
+            None => vec![
+                Schedule::Static,
+                Schedule::Dynamic { chunk: 256 },
+                Schedule::WorkAware,
+                Schedule::Stealing,
+            ],
+        };
+        let mut candidates = Vec::with_capacity(grans.len() * scheds.len());
+        for &gran in &grans {
+            let task_costs = self.task_costs(&z, &live, fine_est, gran);
+            for &sched in &scheds {
+                let predicted_ms = self.score(&task_costs, total_est, sched);
+                candidates.push(PlanCandidate {
+                    plan: ExecutionPlan { schedule: sched, granularity: gran, support, crossover },
+                    predicted_ms,
+                });
+            }
+        }
+        // sticky argmin: a later candidate must beat the incumbent by
+        // the switch margin (see the module docs)
+        let mut chosen = 0usize;
+        for (i, c) in candidates.iter().enumerate().skip(1) {
+            if c.predicted_ms < candidates[chosen].predicted_ms * PLAN_SWITCH_MARGIN {
+                chosen = i;
+            }
+        }
+        PlanExplanation { k, candidates, chosen, seg_len, skew, tiny: false }
+    }
+
+    /// Per-task costs of one support pass at `gran`, in the scoring
+    /// device's units (ns for CPU, steps for GPU), machine-model
+    /// overheads included — exactly the per-task shaping
+    /// [`crate::sim::cpu`] / [`crate::sim::gpu`] apply to traces, fed
+    /// with the static bounds available at admission time.
+    fn task_costs(&self, z: &ZCsr, live: &[u32], fine_est: &[u64], gran: Granularity) -> Vec<f64> {
+        match self.device {
+            PlanDevice::Cpu => {
+                let m = CpuMachine::skylake_8160(self.threads);
+                match gran {
+                    Granularity::Coarse => balance::estimate_costs(z, Mode::Coarse)
+                        .iter()
+                        .zip(live.iter())
+                        .map(|(&st, &l)| {
+                            m.coarse_task_ns + l as f64 * m.entry_ns + st as f64 * m.step_ns
+                        })
+                        .collect(),
+                    Granularity::Fine => fine_est
+                        .iter()
+                        .map(|&st| m.fine_task_ns + st as f64 * m.step_ns)
+                        .collect(),
+                    Granularity::Segment { len } => {
+                        split_segments(fine_est, len)
+                            .map(|st| m.segment_task_ns() + st as f64 * m.step_ns)
+                            .collect()
+                    }
+                }
+            }
+            PlanDevice::Gpu => {
+                let m = GpuMachine::v100();
+                match gran {
+                    Granularity::Coarse => balance::estimate_costs(z, Mode::Coarse)
+                        .iter()
+                        .map(|&st| st as f64 + m.coarse_task_steps)
+                        .collect(),
+                    Granularity::Fine => fine_est
+                        .iter()
+                        .map(|&st| st as f64 + m.fine_task_steps)
+                        .collect(),
+                    Granularity::Segment { len } => split_segments(fine_est, len)
+                        .map(|st| st as f64 + m.segment_task_steps())
+                        .collect(),
+                }
+            }
+        }
+    }
+
+    /// Predicted cost (ms) of one support pass from its per-task costs
+    /// under `schedule`, through the device's machine model.
+    fn score(&self, task_costs: &[f64], total_est: u64, schedule: Schedule) -> f64 {
+        match self.device {
+            PlanDevice::Cpu => {
+                let m = CpuMachine::skylake_8160(self.threads);
+                let compute_ns =
+                    crate::sim::cpu::makespan_ns(task_costs, m.threads, schedule);
+                let bytes = total_est as f64 * 8.0 + task_costs.len() as f64 * 24.0;
+                let bw_ns = bytes / m.mem_bw_gbs;
+                compute_ns.max(bw_ns) / 1e6 + m.fork_join_us / 1e3
+            }
+            PlanDevice::Gpu => {
+                let m = GpuMachine::v100();
+                crate::sim::gpu::estimate_tasks_sched(&m, task_costs, total_est as f64, schedule)
+                    .total_s()
+                    * 1e3
+            }
+        }
+    }
+
+    /// The support-mode axis: pinned value, else the calibrated
+    /// comparison when the cost model has seen both truss profiles,
+    /// else the degree-skew fallback ([`HUB_SKEW`]).
+    fn pick_support(&self, g: &Csr, total_est: u64, skew: f64) -> SupportMode {
+        if let Some(s) = self.spec.support {
+            return s;
+        }
+        if let Some(model) = &self.model {
+            let probe = JobKind::Ktruss { k: 3, mode: Mode::Fine };
+            let full_label = job_label(&probe, Some(SupportMode::Full));
+            let inc_label = job_label(&probe, Some(SupportMode::Incremental));
+            if model.samples_for(&full_label) >= MIN_SUPPORT_SAMPLES
+                && model.samples_for(&inc_label) >= MIN_SUPPORT_SAMPLES
+            {
+                // job-level step profiles mirroring
+                // `cost_model::estimate_steps_mode`'s truss multipliers
+                let full_est = total_est.saturating_mul(3);
+                let inc_est = total_est.saturating_add(g.nnz() as u64);
+                return if model.predict_ms_for(&inc_label, inc_est)
+                    < model.predict_ms_for(&full_label, full_est)
+                {
+                    SupportMode::Incremental
+                } else {
+                    SupportMode::Auto
+                };
+            }
+        }
+        if skew >= HUB_SKEW {
+            SupportMode::Incremental
+        } else {
+            SupportMode::Auto
+        }
+    }
+}
+
+/// Split each estimated task cost into `ceil(cost/len)` pieces of ≤
+/// `len` steps — the modeled segment decomposition (the static-estimate
+/// analogue of [`Costs::from_trace_rows`]'s segment arm).
+fn split_segments(fine_est: &[u64], len: u32) -> impl Iterator<Item = u64> + '_ {
+    let len = len.max(1) as u64;
+    fine_est.iter().flat_map(move |&st| {
+        let pieces = st.div_ceil(len).max(1);
+        (0..pieces).map(move |i| {
+            if i + 1 == pieces {
+                st - i * len
+            } else {
+                len
+            }
+        })
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn plan_spec_grammar_roundtrips() {
+        assert_eq!("auto".parse::<PlanSpec>().unwrap(), PlanSpec::auto());
+        assert_eq!(PlanSpec::auto().to_string(), "auto");
+        let spec: PlanSpec = "stealing/segment:32/incremental".parse().unwrap();
+        assert_eq!(spec.schedule, Some(Schedule::Stealing));
+        assert_eq!(spec.granularity, Some(Granularity::Segment { len: 32 }));
+        assert_eq!(spec.support, Some(SupportMode::Incremental));
+        assert_eq!(spec.to_string(), "stealing/segment:32/incremental");
+        let back: PlanSpec = spec.to_string().parse().unwrap();
+        assert_eq!(back, spec);
+        // partial pins keep the unpinned axes free ("any" in the
+        // support slot — "auto" there pins SupportMode::Auto)
+        let partial: PlanSpec = "auto/fine/any".parse().unwrap();
+        assert_eq!(partial.schedule, None);
+        assert_eq!(partial.granularity, Some(Granularity::Fine));
+        assert_eq!(partial.support, None);
+        assert_eq!(partial.to_string(), "auto/fine/any");
+        let pinned_auto: PlanSpec = "auto/fine/auto".parse().unwrap();
+        assert_eq!(pinned_auto.support, Some(SupportMode::Auto));
+        // a fully-pinned spec fixes a plan; a partial one does not
+        assert!(spec.fixed().is_some());
+        assert!(partial.fixed().is_none());
+        // errors: wrong arity and bad axis values
+        assert!("static/fine".parse::<PlanSpec>().is_err());
+        assert!("bogus/fine/auto".parse::<PlanSpec>().is_err());
+        assert!("static/bogus/auto".parse::<PlanSpec>().is_err());
+        assert!("static/fine/bogus".parse::<PlanSpec>().is_err());
+    }
+
+    #[test]
+    fn plan_display_is_a_valid_spec() {
+        let plan = ExecutionPlan::fixed(
+            Schedule::WorkAware,
+            Granularity::Segment { len: 48 },
+            SupportMode::Auto,
+        );
+        let spec: PlanSpec = plan.to_string().parse().unwrap();
+        assert_eq!(spec.fixed().unwrap(), plan);
+        assert_eq!(plan.mode(), Mode::Fine);
+        assert_eq!(
+            ExecutionPlan::fixed(Schedule::Static, Granularity::Coarse, SupportMode::Full).mode(),
+            Mode::Coarse
+        );
+    }
+
+    #[test]
+    fn spec_apply_overlays_only_pinned_axes() {
+        let base = ExecutionPlan::fixed(Schedule::Static, Granularity::Coarse, SupportMode::Full);
+        let spec: PlanSpec = "auto/fine/any".parse().unwrap();
+        let out = spec.apply(base);
+        assert_eq!(out.schedule, Schedule::Static);
+        assert_eq!(out.granularity, Granularity::Fine);
+        assert_eq!(out.support, SupportMode::Full);
+    }
+
+    #[test]
+    fn auto_segment_len_follows_the_distribution() {
+        // uniform small costs: clamped to the floor
+        let small = Costs { per_task: vec![2; 100] };
+        assert_eq!(auto_segment_len(&small), MIN_AUTO_SEGMENT_LEN);
+        // median-100 distribution lands at 100
+        let mid = Costs { per_task: vec![100; 51].into_iter().chain(vec![2; 50]).collect() };
+        assert_eq!(auto_segment_len(&mid), 100);
+        // giant costs: clamped to the ceiling
+        let big = Costs { per_task: vec![100_000; 10] };
+        assert_eq!(auto_segment_len(&big), MAX_AUTO_SEGMENT_LEN);
+        // all-trivial falls back to the fixed default
+        let trivial = Costs { per_task: vec![1; 10] };
+        assert_eq!(
+            auto_segment_len(&trivial),
+            DEFAULT_SEGMENT_LEN.clamp(MIN_AUTO_SEGMENT_LEN, MAX_AUTO_SEGMENT_LEN)
+        );
+    }
+
+    #[test]
+    fn tiny_jobs_take_the_shortcut() {
+        let g = crate::testkit::graphs::diamond();
+        let ex = Planner::new(4).explain(&g, 3);
+        assert!(ex.tiny);
+        assert_eq!(ex.candidates.len(), 1);
+        let plan = ex.plan();
+        assert_eq!(plan.schedule, Schedule::Static);
+        assert_eq!(plan.granularity, Granularity::Coarse);
+        assert_eq!(plan.support, SupportMode::Full);
+        // pinned axes still win on the shortcut path
+        let spec: PlanSpec = "stealing/fine/auto".parse().unwrap();
+        let pinned = Planner::new(4).with_spec(spec).choose(&g, 3);
+        assert_eq!(pinned.schedule, Schedule::Stealing);
+        assert_eq!(pinned.granularity, Granularity::Fine);
+    }
+
+    #[test]
+    fn hub_graphs_get_fine_or_segment_and_a_cost_aware_schedule() {
+        let planner = Planner::new(48);
+        for (name, g) in [
+            ("comb", crate::testkit::graphs::hub_divergence_comb(64, 256, 800)),
+            ("star", crate::testkit::graphs::star_with_fringe(1200)),
+        ] {
+            let ex = planner.explain(&g, 3);
+            assert!(!ex.tiny, "{name}");
+            let plan = ex.plan();
+            assert_ne!(plan.granularity, Granularity::Coarse, "{name}: {plan}");
+            // the skew heuristic marks both hub fixtures incremental
+            assert_eq!(plan.support, SupportMode::Incremental, "{name}: {plan}");
+            // chosen plan is within the switch margin of the best
+            assert!(
+                ex.predicted_ms() <= ex.best_ms() / PLAN_SWITCH_MARGIN + 1e-12,
+                "{name}: chosen {} vs best {}",
+                ex.predicted_ms(),
+                ex.best_ms()
+            );
+        }
+        // the comb's clustered hot region defeats static contiguous
+        // blocks outright
+        let comb = crate::testkit::graphs::hub_divergence_comb(64, 256, 800);
+        let plan = planner.choose(&comb, 3);
+        assert_ne!(plan.schedule, Schedule::Static, "{plan}");
+    }
+
+    #[test]
+    fn flat_grids_stay_coarse() {
+        // near-uniform road lattice, dense enough (m/n ≈ 1.9) that the
+        // coarse row task amortizes its fixed overhead: every candidate
+        // is within a few percent, and the planner's stickiness keeps
+        // the simple coarse plan — the paper's roadNet null effect
+        let g = crate::gen::grid::road(3000, 5800, 0.05, &mut Rng::new(6));
+        let ex = Planner::new(48).explain(&g, 3);
+        assert!(!ex.tiny);
+        let plan = ex.plan();
+        assert_eq!(plan.granularity, Granularity::Coarse, "{plan}");
+        // near-uniform work: no cascade regime, auto support
+        assert_eq!(plan.support, SupportMode::Auto, "{plan}");
+    }
+
+    #[test]
+    fn gpu_planner_splits_the_divergent_hot_slots() {
+        // the comb concentrates its cost in a few ~800-step slots: on
+        // the GPU the serial-tail term dominates fine's estimate, and
+        // only the segment split shrinks the longest task
+        let g = crate::testkit::graphs::hub_divergence_comb(64, 256, 800);
+        let ex = Planner::gpu().explain(&g, 3);
+        let plan = ex.plan();
+        assert!(
+            matches!(plan.granularity, Granularity::Segment { .. }),
+            "{plan}"
+        );
+        let fine_best = ex
+            .candidates
+            .iter()
+            .filter(|c| c.plan.granularity == Granularity::Fine)
+            .map(|c| c.predicted_ms)
+            .fold(f64::INFINITY, f64::min);
+        assert!(ex.predicted_ms() < fine_best, "segment must beat fine on the tail");
+    }
+
+    #[test]
+    fn pinned_axes_restrict_the_candidate_grid() {
+        let g = crate::testkit::graphs::hub_divergence_comb(32, 128, 400);
+        let spec: PlanSpec = "workaware/auto/auto".parse().unwrap();
+        let ex = Planner::new(8).with_spec(spec).explain(&g, 3);
+        assert!(ex.candidates.iter().all(|c| c.plan.schedule == Schedule::WorkAware));
+        assert_eq!(ex.candidates.len(), 3); // one per granularity
+        let full: PlanSpec = "static/coarse/full".parse().unwrap();
+        let plan = Planner::new(8).with_spec(full).choose(&g, 3);
+        assert_eq!(
+            plan,
+            ExecutionPlan::fixed(Schedule::Static, Granularity::Coarse, SupportMode::Full)
+        );
+    }
+
+    #[test]
+    fn calibrated_model_refines_the_support_choice() {
+        use crate::coordinator::job::JobKind;
+        // mild skew (< HUB_SKEW) so the fallback would say Auto
+        let g = crate::gen::erdos_renyi::gnm(300, 2500, &mut Rng::new(9));
+        let probe = JobKind::Ktruss { k: 3, mode: Mode::Fine };
+        let full_label = job_label(&probe, Some(SupportMode::Full));
+        let inc_label = job_label(&probe, Some(SupportMode::Incremental));
+        let feed = |model: &CostModel, full_ms: f64, inc_ms: f64| {
+            for _ in 0..MIN_SUPPORT_SAMPLES {
+                model.observe_labeled(&full_label, 10, 20, 1000, full_ms);
+                model.observe_labeled(&inc_label, 10, 20, 1000, inc_ms);
+            }
+        };
+        // incremental observed much cheaper per step -> Incremental
+        let model = Arc::new(CostModel::new());
+        feed(&model, 0.10, 0.001);
+        let plan = Planner::new(8).with_model(Arc::clone(&model)).choose(&g, 4);
+        assert_eq!(plan.support, SupportMode::Incremental);
+        // incremental observed much *more* expensive -> stay Auto
+        let model = Arc::new(CostModel::new());
+        feed(&model, 0.001, 0.10);
+        let plan = Planner::new(8).with_model(Arc::clone(&model)).choose(&g, 4);
+        assert_eq!(plan.support, SupportMode::Auto);
+        // below the sample floor the calibration is ignored entirely
+        // (the mild-skew fallback says Auto even with a cheap-looking
+        // incremental label)
+        let model = Arc::new(CostModel::new());
+        model.observe_labeled(&full_label, 10, 20, 1000, 0.10);
+        model.observe_labeled(&inc_label, 10, 20, 1000, 0.001);
+        let plan = Planner::new(8).with_model(model).choose(&g, 4);
+        assert_eq!(plan.support, SupportMode::Auto);
+    }
+
+    #[test]
+    fn explanation_renders_candidates_and_winner() {
+        let g = crate::testkit::graphs::star_with_fringe(1200);
+        let ex = Planner::new(48).explain(&g, 3);
+        let text = ex.render();
+        assert!(text.contains("predicted ms"), "{text}");
+        assert!(text.contains("<- chosen"), "{text}");
+        assert!(text.contains("chosen: "), "{text}");
+        // every candidate line is itself a parseable plan spec
+        for c in &ex.candidates {
+            let spec: PlanSpec = c.plan.to_string().parse().unwrap();
+            assert_eq!(spec.fixed().unwrap(), c.plan);
+            assert!(c.predicted_ms.is_finite() && c.predicted_ms > 0.0);
+        }
+        // the grid lookup finds the static-coarse baseline
+        assert!(ex.candidate(Schedule::Static, Granularity::Coarse).is_some());
+    }
+
+    #[test]
+    fn split_segments_preserves_totals_and_bounds() {
+        let est = [1u64, 5, 64, 200, 0];
+        let pieces: Vec<u64> = split_segments(&est, 64).collect();
+        assert!(pieces.iter().all(|&p| p <= 64));
+        assert_eq!(pieces.iter().sum::<u64>(), est.iter().sum::<u64>());
+        // a zero-cost entry still yields one (empty) task
+        assert_eq!(split_segments(&[0], 8).count(), 1);
+        assert_eq!(split_segments(&[200], 64).count(), 4);
+    }
+}

@@ -22,9 +22,10 @@ use crate::algo::incremental::SupportMode;
 use crate::coordinator::job::{JobId, JobKind, JobRequest, JobResult};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::router::{route_costed, RouterConfig};
-use crate::coordinator::worker::{choose_support, Worker};
+use crate::coordinator::worker::Worker;
 use crate::graph::Csr;
-use crate::par::{Pool, Schedule};
+use crate::par::Pool;
+use crate::plan::{ExecutionPlan, PlanSpec, Planner};
 use crate::runtime::DenseEngine;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver};
@@ -54,12 +55,11 @@ pub struct ServeConfig {
     pub batch_window: Duration,
     /// Try to construct the dense engine per shard (requires artifacts).
     pub enable_dense: bool,
-    /// Fixed pool schedule for sparse jobs; `None` = per-job heuristic.
-    pub schedule: Option<Schedule>,
-    /// Fixed support-maintenance mode for sparse truss jobs; `None` =
-    /// per-job heuristic ([`choose_support`]). The same policy is used
-    /// at submit time to pick the job's cost-estimate profile.
-    pub support: Option<SupportMode>,
+    /// Execution-plan pinning for sparse truss jobs: pinned axes are
+    /// fixed for every job, unpinned axes are chosen per job by the
+    /// submit-time [`Planner`] (which also picks the job's
+    /// cost-estimate profile). [`PlanSpec::auto`] = plan everything.
+    pub plan: PlanSpec,
     /// Allow drained shards to steal queued jobs from loaded shards.
     pub steal: bool,
 }
@@ -74,8 +74,7 @@ impl Default for ServeConfig {
             max_batch: 16,
             batch_window: Duration::from_millis(2),
             enable_dense: true,
-            schedule: None,
-            support: None,
+            plan: PlanSpec::auto(),
             steal: true,
         }
     }
@@ -183,6 +182,10 @@ pub struct Executor {
     /// The ns/step-calibrated per-job cost model (refined by every
     /// completion).
     pub cost_model: Arc<CostModel>,
+    /// The submit-time planner: plans each sparse truss job exactly
+    /// once at admission (schedule × granularity × support ×
+    /// crossover), informed by the cost model's per-label calibration.
+    planner: Planner,
     dispatcher: Mutex<Option<std::thread::JoinHandle<()>>>,
     shard_handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
 }
@@ -202,6 +205,11 @@ impl Executor {
         let cfg = ServeConfig { shards: cfg.shards.max(1), max_batch: cfg.max_batch.max(1), ..cfg };
         let metrics = Arc::new(Metrics::with_shards(cfg.shards));
         let cost_model = Arc::new(model);
+        // plan against the base shard pool width (the remainder shards'
+        // one extra worker is noise at planning granularity)
+        let planner = Planner::new(cfg.workers_per_shard.max(1))
+            .with_spec(cfg.plan)
+            .with_model(Arc::clone(&cost_model));
         let adm = Arc::new(AdmissionShared {
             state: Mutex::new(AdmState { queue: ServeQueue::new(), shutdown: false }),
             cv: Condvar::new(),
@@ -240,6 +248,7 @@ impl Executor {
             next_id: AtomicU64::new(1),
             metrics,
             cost_model,
+            planner,
             dispatcher: Mutex::new(Some(dispatcher)),
             shard_handles: Mutex::new(shard_handles),
         }
@@ -255,14 +264,20 @@ impl Executor {
         self.submit_with(graph, kind, SubmitOpts::default())
     }
 
-    /// Submit with explicit priority and soft deadline.
+    /// Submit with explicit priority and soft deadline. For sparse
+    /// truss jobs the [`ExecutionPlan`] is computed **here, exactly
+    /// once** — the plan rides the admission queue to the executing
+    /// worker, and the cost estimate uses the plan's support profile,
+    /// so the submit-time estimate and the execution agree by
+    /// construction.
     pub fn submit_with(&self, graph: Arc<Csr>, kind: JobKind, opts: SubmitOpts) -> Ticket {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (rtx, rrx) = channel();
-        // estimate under the support profile the worker will pick for
-        // this job (the heuristic is deterministic on the graph, so the
-        // submit-time estimate and the execution agree)
-        let support = self.cfg.support.unwrap_or_else(|| choose_support(&graph, &kind));
+        let plan: Option<ExecutionPlan> = match kind {
+            JobKind::Ktruss { k, .. } => Some(self.planner.choose(&graph, k)),
+            _ => None,
+        };
+        let support = plan.map(|p| p.support).unwrap_or(SupportMode::Full);
         let est_steps = estimate_steps_mode(&graph, &kind, support);
         let now = Instant::now();
         let adm = Admission {
@@ -271,6 +286,7 @@ impl Executor {
             deadline: opts.deadline.map(|d| now + d),
             submitted: now,
             est_steps,
+            plan,
             reply: rtx,
         };
         self.metrics.record_submit();
@@ -428,7 +444,7 @@ fn shard_loop(
         .map(|d| RouterConfig::new(d.max_n()).with_step_ceiling(cfg.dense_step_ceiling))
         .unwrap_or_else(RouterConfig::disabled);
     let width = cfg.workers_per_shard + usize::from(me < cfg.workers_remainder);
-    let worker = Worker::with_policy(Pool::new(width), dense, cfg.schedule, cfg.support);
+    let worker = Worker::with_spec(Pool::new(width), dense, cfg.plan);
     loop {
         let adm = {
             let mut st = shards.state.lock().unwrap();
@@ -489,7 +505,8 @@ fn shard_loop(
             return;
         };
         let engine = route_costed(&router_cfg, &adm.req, adm.est_steps);
-        let result = worker.execute(&adm.req, engine);
+        // run under the submit-time plan: the worker never replans
+        let result = worker.execute_planned(&adm.req, engine, adm.plan);
         shards.inflight[me].store(0, Ordering::Relaxed);
         // metrics record the *serving* latency (queueing + execution);
         // JobResult::wall_ms stays execution-only
@@ -649,6 +666,44 @@ mod tests {
                 JobOutput::Triangles { count } => assert_eq!(count, want),
                 other => panic!("{other:?}"),
             }
+        }
+        ex.shutdown();
+    }
+
+    #[test]
+    fn submit_time_plan_is_carried_to_the_result() {
+        let ex = Executor::start(cfg(1, 2));
+        let g = Arc::new(crate::gen::rmat::rmat(
+            600,
+            4000,
+            crate::gen::rmat::RmatParams::social(),
+            &mut crate::util::Rng::new(17),
+        ));
+        let r = ex
+            .submit(Arc::clone(&g), JobKind::Ktruss { k: 3, mode: Mode::Fine })
+            .wait();
+        let plan = r.plan.expect("truss jobs carry their submit-time plan");
+        assert_eq!(r.schedule, Some(plan.schedule));
+        assert_eq!(r.support, Some(plan.support));
+        // non-truss kinds are not planned
+        let r = ex.submit(g, JobKind::Triangles).wait();
+        assert!(r.plan.is_none());
+        ex.shutdown();
+    }
+
+    #[test]
+    fn pinned_plan_spec_applies_to_every_job() {
+        let spec: PlanSpec = "stealing/fine/auto".parse().unwrap();
+        let ex = Executor::start(ServeConfig { plan: spec, ..cfg(2, 1) });
+        let g = Arc::new(crate::gen::erdos_renyi::gnm(150, 700, &mut crate::util::Rng::new(9)));
+        for _ in 0..3 {
+            let r = ex
+                .submit(Arc::clone(&g), JobKind::Ktruss { k: 3, mode: Mode::Fine })
+                .wait();
+            let plan = r.plan.unwrap();
+            assert_eq!(plan.schedule, crate::par::Schedule::Stealing);
+            assert_eq!(plan.granularity, crate::algo::support::Granularity::Fine);
+            assert!(r.output.is_ok());
         }
         ex.shutdown();
     }

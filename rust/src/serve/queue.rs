@@ -10,6 +10,7 @@
 //! have managed (the thief runs it immediately; the victim is busy).
 
 use crate::coordinator::job::{JobRequest, JobResult};
+use crate::plan::ExecutionPlan;
 use std::sync::mpsc::Sender;
 use std::time::Instant;
 
@@ -63,6 +64,11 @@ pub struct Admission {
     pub submitted: Instant,
     /// Estimated work in abstract merge steps (see `serve::cost_model`).
     pub est_steps: u64,
+    /// The submit-time [`ExecutionPlan`] for sparse truss jobs (`None`
+    /// for kinds the planner does not steer). Computed exactly once at
+    /// admission and carried to the executing worker, so the per-job
+    /// graph scan and candidate scoring are never repeated.
+    pub plan: Option<ExecutionPlan>,
     /// Channel the result is delivered on.
     pub reply: Sender<JobResult>,
 }
@@ -169,6 +175,7 @@ mod tests {
             deadline: deadline_ms.map(|ms| now + Duration::from_millis(ms)),
             submitted: now,
             est_steps: 1,
+            plan: None,
             reply: tx,
         }
     }

@@ -19,10 +19,10 @@ fn ktruss(args: &[&str]) -> (String, String, bool) {
 fn help_lists_commands() {
     let (stdout, _, ok) = ktruss(&["help"]);
     assert!(ok);
-    for cmd in ["run", "kmax", "decompose", "generate", "suite", "bench", "serve", "sim"] {
+    for cmd in ["run", "kmax", "decompose", "generate", "suite", "bench", "serve", "plan", "sim"] {
         assert!(stdout.contains(cmd), "help missing {cmd}");
     }
-    for flag in ["--granularity", "--gpu-schedule", "gpu-sched"] {
+    for flag in ["--granularity", "--gpu-schedule", "gpu-sched", "--plan", "bench plan"] {
         assert!(stdout.contains(flag), "help missing {flag}");
     }
 }
@@ -369,6 +369,83 @@ fn sim_supports_incremental_mode() {
     assert!(ok, "stderr: {stderr}");
     assert!(stdout.contains("support=auto"), "stdout: {stdout}");
     assert!(stdout.contains("GPU-F-workaware"), "stdout: {stdout}");
+}
+
+#[test]
+fn plan_sweeps_generator_families_by_default() {
+    // bare `plan` must print per-candidate predicted costs and a winner
+    // for several generator families (the acceptance check)
+    let (stdout, stderr, ok) = ktruss(&["plan", "--par", "8"]);
+    assert!(ok, "stderr: {stderr}");
+    for family in ["rmat-social", "rmat-as-hub", "road-grid", "star-fringe", "hub-comb"] {
+        assert!(stdout.contains(family), "missing family {family}: {stdout}");
+    }
+    assert!(stdout.contains("predicted ms"), "stdout: {stdout}");
+    assert!(stdout.contains("<- chosen"), "stdout: {stdout}");
+    assert!(
+        stdout.matches("chosen: ").count() >= 3,
+        "need a winner per family: {stdout}"
+    );
+}
+
+#[test]
+fn plan_explains_one_graph_and_honors_pins() {
+    let (stdout, stderr, ok) = ktruss(&[
+        "plan", "--graph", "as20000102", "--scale", "0.05", "--par", "4",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("graph:"), "stdout: {stdout}");
+    assert!(stdout.contains("<- chosen"), "stdout: {stdout}");
+    // pinning the schedule restricts every candidate to it
+    let (stdout, stderr, ok) = ktruss(&[
+        "plan", "--graph", "as20000102", "--scale", "0.05", "--par", "4", "--plan",
+        "workaware/auto/auto",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(!stdout.contains("stealing/"), "stdout: {stdout}");
+    assert!(stdout.contains("workaware/"), "stdout: {stdout}");
+}
+
+#[test]
+fn run_accepts_a_full_plan_spec() {
+    let (stdout, stderr, ok) = ktruss(&[
+        "run",
+        "--graph",
+        "as20000102",
+        "--k",
+        "3",
+        "--scale",
+        "0.05",
+        "--par",
+        "2",
+        "--plan",
+        "stealing/fine/incremental",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("3-truss:"), "stdout: {stdout}");
+    assert!(
+        stdout.contains("plan=stealing/fine/incremental"),
+        "stdout: {stdout}"
+    );
+}
+
+#[test]
+fn run_rejects_bad_plan_spec() {
+    let (_, stderr, ok) = ktruss(&[
+        "run", "--graph", "ca-GrQc", "--scale", "0.05", "--plan", "bogus",
+    ]);
+    assert!(!ok);
+    assert!(stderr.contains("plan"), "stderr: {stderr}");
+}
+
+#[test]
+fn run_through_executor_reports_its_plan() {
+    let (stdout, stderr, ok) = ktruss(&[
+        "run", "--graph", "ca-GrQc", "--scale", "0.05", "--k", "3", "--par", "2", "--shards",
+        "2", "--plan", "workaware/fine/auto",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("plan=workaware/fine/auto"), "stdout: {stdout}");
 }
 
 #[test]

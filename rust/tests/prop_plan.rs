@@ -1,0 +1,154 @@
+//! Plan-invariance property tests: every candidate [`ExecutionPlan`]
+//! of the planner's grid — schedule × granularity × support mode, plus
+//! crossover variations — must produce the *identical* truss on every
+//! generator family. The plan decides only how the work is cut,
+//! scheduled and maintained, never what is computed; this suite is the
+//! license that lets the planner switch plans freely.
+
+use ktruss::algo::incremental::SupportMode;
+use ktruss::algo::ktruss::ktruss_mode;
+use ktruss::algo::support::{Granularity, Mode};
+use ktruss::graph::Csr;
+use ktruss::par::{ktruss_par_plan, Pool, Schedule};
+use ktruss::plan::{ExecutionPlan, Planner};
+use ktruss::util::Rng;
+
+/// The candidate grid the planner enumerates (Dynamic is exercised via
+/// the pool's shared code path; the three schedules here cover the
+/// static, scan-binned and stealing executions).
+fn plan_grid() -> Vec<ExecutionPlan> {
+    let mut out = Vec::new();
+    for sched in [Schedule::Static, Schedule::WorkAware, Schedule::Stealing] {
+        for gran in [
+            Granularity::Coarse,
+            Granularity::Fine,
+            Granularity::Segment { len: 8 },
+        ] {
+            for support in [SupportMode::Full, SupportMode::Incremental, SupportMode::Auto] {
+                out.push(ExecutionPlan::fixed(sched, gran, support));
+            }
+        }
+    }
+    out
+}
+
+/// One graph per generator family (plus the adversarial fixtures the
+/// planner's shape tests use).
+fn families() -> Vec<(String, Csr)> {
+    let mut rng = Rng::new(0x91AD);
+    vec![
+        (
+            "gnm".to_string(),
+            ktruss::gen::erdos_renyi::gnm(180, 1100, &mut rng),
+        ),
+        (
+            "rmat-social".to_string(),
+            ktruss::gen::rmat::rmat(200, 1400, ktruss::gen::rmat::RmatParams::social(), &mut rng),
+        ),
+        (
+            "rmat-as".to_string(),
+            ktruss::gen::rmat::rmat(
+                220,
+                1500,
+                ktruss::gen::rmat::RmatParams::autonomous_system(),
+                &mut rng,
+            ),
+        ),
+        (
+            "communities".to_string(),
+            ktruss::gen::community::communities(160, 1000, 12, &mut rng),
+        ),
+        (
+            "star-fringe".to_string(),
+            ktruss::testkit::graphs::star_with_fringe(80),
+        ),
+        ("peel-chain".to_string(), ktruss::testkit::graphs::peel_chain(16)),
+    ]
+}
+
+#[test]
+fn every_candidate_plan_yields_the_identical_truss() {
+    let pool = Pool::new(4);
+    let grid = plan_grid();
+    for (name, g) in families() {
+        for k in [3u32, 4, 8] {
+            let want = ktruss_mode(&g, k, Mode::Fine, SupportMode::Full);
+            for plan in &grid {
+                let got = ktruss_par_plan(&g, k, &pool, plan);
+                assert_eq!(got.truss, want.truss, "{name} k={k} plan={plan}");
+                assert_eq!(
+                    got.iterations, want.iterations,
+                    "{name} k={k} plan={plan}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn crossover_fraction_never_changes_the_result() {
+    // the crossover steers *when* the frontier update runs, never what
+    // it computes: extreme fractions must agree exactly
+    let pool = Pool::new(3);
+    let g = ktruss::testkit::graphs::peel_chain(24);
+    for k in [3u32, 4] {
+        let want = ktruss_mode(&g, k, Mode::Fine, SupportMode::Full);
+        for crossover in [0.05, 0.5, 0.95] {
+            let plan = ExecutionPlan {
+                schedule: Schedule::WorkAware,
+                granularity: Granularity::Fine,
+                support: SupportMode::Auto,
+                crossover,
+            };
+            let got = ktruss_par_plan(&g, k, &pool, &plan);
+            assert_eq!(got.truss, want.truss, "k={k} crossover={crossover}");
+            assert_eq!(got.iterations, want.iterations, "k={k} crossover={crossover}");
+        }
+    }
+}
+
+#[test]
+fn planner_chosen_plans_are_correct_on_every_family() {
+    // whatever the planner picks for a family, executing it matches the
+    // sequential reference
+    let pool = Pool::new(4);
+    let planner = Planner::new(4);
+    for (name, g) in families() {
+        for k in [3u32, 4] {
+            let plan = planner.choose(&g, k);
+            let got = ktruss_par_plan(&g, k, &pool, &plan);
+            let want = ktruss_mode(&g, k, Mode::Fine, SupportMode::Full);
+            assert_eq!(got.truss, want.truss, "{name} k={k} plan={plan}");
+        }
+    }
+}
+
+#[test]
+fn planner_shape_matches_the_paper_story() {
+    // the satellite acceptance shapes, through the public API: segment
+    // or fine granularity on the hub fixtures, coarse on a flat grid
+    let planner = Planner::new(48);
+    for (name, g) in [
+        (
+            "hub-comb",
+            ktruss::testkit::graphs::hub_divergence_comb(64, 256, 800),
+        ),
+        ("star-fringe", ktruss::testkit::graphs::star_with_fringe(1200)),
+    ] {
+        let plan = planner.choose(&g, 3);
+        assert!(
+            matches!(
+                plan.granularity,
+                Granularity::Fine | Granularity::Segment { .. }
+            ),
+            "{name}: {plan}"
+        );
+    }
+    let comb = ktruss::testkit::graphs::hub_divergence_comb(64, 256, 800);
+    let plan = planner.choose(&comb, 3);
+    assert_ne!(plan.schedule, Schedule::Static, "comb: {plan}");
+    let mut rng = Rng::new(6);
+    let flat = ktruss::gen::grid::road(3000, 5800, 0.05, &mut rng);
+    let plan = planner.choose(&flat, 3);
+    assert_eq!(plan.granularity, Granularity::Coarse, "flat grid: {plan}");
+}
