@@ -11,19 +11,24 @@
 //!
 //! Pass `cascade` as the first bench argument
 //! (`cargo bench --bench micro_hotpath -- cascade`) to run only the
-//! cascade comparison (what CI does).
+//! cascade comparison, or `bitmap` to run only the hybrid
+//! bitmap-representation smoke (both are what CI does).
 //!
 //! The §Perf log in EXPERIMENTS.md tracks these numbers across
 //! optimization iterations.
 
+use ktruss::algo::bitmap::{compute_supports_hybrid_seq, hybrid_tasks};
 use ktruss::algo::incremental::SupportMode;
 use ktruss::algo::kmax;
 use ktruss::algo::ktruss::{ktruss as run_ktruss, ktruss_mode};
-use ktruss::algo::support::{compute_supports_seq, Mode};
+use ktruss::algo::support::{
+    compute_supports_seq, compute_supports_segmented_seq, Granularity, Mode,
+};
 use ktruss::bench_harness::report;
 use ktruss::cost::trace::trace_supports;
 use ktruss::graph::ZCsr;
-use ktruss::par::{compute_supports_par, Pool, Schedule};
+use ktruss::par::{compute_supports_par, Pool, Schedule, ALL_SCHEDULES};
+use ktruss::plan::Planner;
 use ktruss::util::stats::mean;
 use ktruss::util::timer::bench_ms;
 use ktruss::util::Rng;
@@ -84,12 +89,104 @@ fn cascade_section() -> String {
     body
 }
 
+/// Hybrid bitmap-representation smoke: on the hub fixtures the hybrid
+/// candidate (bitmap hub rows + tail-side chunks) must strictly beat
+/// the pure-merge candidates in **simulated** GPU makespan — hybrid <
+/// fine on both fixtures, and hybrid < segment on the comb, whose hub
+/// is a heavy *partner* row and therefore actually gets encoded — while
+/// reproducing the merge supports bit for bit. Also asserts the planner
+/// in auto mode never picks a plan worse than 1.05x the best fixed
+/// candidate (the sticky margin guarantees ~1.031x). These are the
+/// invariants the CI smoke step enforces.
+fn bitmap_section() -> String {
+    let mut body = String::new();
+    let comb = ktruss::testkit::graphs::hub_divergence_comb(64, 256, 800);
+    let star = ktruss::testkit::graphs::star_with_fringe(1200);
+    let planner = Planner::gpu();
+    for (name, g) in [("hub-comb", &comb), ("star-fringe", &star)] {
+        let z = ZCsr::from_csr(g);
+        let ex = planner.explain(g, 3);
+        let len = ex.seg_len;
+
+        // exactness: the representation switch must not move a single count
+        let mut want = Vec::new();
+        compute_supports_seq(&z, &mut want);
+        let mut got = Vec::new();
+        compute_supports_hybrid_seq(&z, len, &mut got);
+        assert_eq!(got, want, "{name}: hybrid supports must equal merge supports");
+
+        // best simulated makespan per granularity, over every schedule
+        let best = |gran: Granularity| -> f64 {
+            ALL_SCHEDULES
+                .iter()
+                .map(|&sched| planner.predict_pass_ms(&z, gran, sched))
+                .fold(f64::INFINITY, f64::min)
+        };
+        let fine = best(Granularity::Fine);
+        let seg = best(Granularity::Segment { len });
+        let hyb = best(Granularity::Hybrid { len });
+        let probes = hybrid_tasks(&z, len).probe.len();
+        body.push_str(&format!(
+            "bitmap[{name}] len={len} probe_tasks={probes} sim_ms: \
+             fine={fine:.4} segment={seg:.4} hybrid={hyb:.4}\n"
+        ));
+        assert!(
+            hyb < fine,
+            "{name}: hybrid ({hyb:.4}) must beat fine ({fine:.4}) in simulated makespan"
+        );
+        if name == "hub-comb" {
+            assert!(
+                probes > 0,
+                "{name}: the hub partner row must be bitmap-encoded"
+            );
+            assert!(
+                hyb < seg,
+                "{name}: hybrid ({hyb:.4}) must beat segment ({seg:.4}) in simulated makespan"
+            );
+        }
+
+        // plan-auto never regresses vs the best fixed candidate
+        for (dev, ex) in [("gpu", ex), ("cpu", Planner::new(8).explain(g, 3))] {
+            let best_fixed = ex
+                .candidates
+                .iter()
+                .map(|c| c.predicted_ms)
+                .fold(f64::INFINITY, f64::min);
+            let chosen = ex.candidates[ex.chosen].predicted_ms;
+            assert!(
+                chosen <= best_fixed * 1.05,
+                "{name}/{dev}: auto plan {chosen:.4} regresses > 1.05x vs best fixed {best_fixed:.4}"
+            );
+        }
+
+        // wallclock flavor (small fixtures — sanity, not scaling claims)
+        let mut s = Vec::new();
+        let t_merge = mean(&bench_ms(1, 5, || compute_supports_seq(&z, &mut s))).unwrap();
+        let t_seg =
+            mean(&bench_ms(1, 5, || compute_supports_segmented_seq(&z, len, &mut s))).unwrap();
+        let t_hyb =
+            mean(&bench_ms(1, 5, || compute_supports_hybrid_seq(&z, len, &mut s))).unwrap();
+        body.push_str(&format!(
+            "bitmap[{name}] wallclock ms: merge={t_merge:.4} segment={t_seg:.4} hybrid={t_hyb:.4}\n"
+        ));
+    }
+    body.push_str("bitmap-ok\n");
+    body
+}
+
 fn main() {
     let cascade_only = std::env::args().any(|a| a == "cascade");
     if cascade_only {
         let body = cascade_section();
         print!("{body}");
         report::emit("micro_cascade.txt", &body).expect("save report");
+        return;
+    }
+    let bitmap_only = std::env::args().any(|a| a == "bitmap");
+    if bitmap_only {
+        let body = bitmap_section();
+        print!("{body}");
+        report::emit("micro_bitmap.txt", &body).expect("save report");
         return;
     }
     let mut body = String::new();
@@ -167,6 +264,10 @@ fn main() {
     // 5. cascade workload: incremental vs full merge-step totals
     body.push('\n');
     body.push_str(&cascade_section());
+
+    // 6. hybrid bitmap representation on the hub fixtures
+    body.push('\n');
+    body.push_str(&bitmap_section());
 
     report::emit("micro_hotpath.txt", &body).expect("save report");
 }

@@ -1,0 +1,491 @@
+//! Bitmap hub-row intersections + tail-side segmentation — the per-row
+//! **hybrid representation** (ROADMAP item 5).
+//!
+//! The eager merge's worst case is a heavy *partner* row: every slot
+//! `(i, κ)` with a hub `κ` re-walks row `κ`'s live entries, and under
+//! the segment split ([`crate::algo::support::segment_tasks`]) such a
+//! slot still fans out into `ceil(live(κ)/len)` tasks whose collective
+//! overhead scales with the partner, not with the slot's own tail. The
+//! K-Clique-on-GPUs line (arXiv 2104.13209) shows the fix: encode the
+//! heavy row as **dense words over a row-local universe** and turn the
+//! merge-walk into word-indexed AND + popcount probes; GraphBLAST
+//! (arXiv 1908.01407) frames the same move as a masked-intersection
+//! kernel choice made per operand. Here that choice is per row:
+//!
+//! * [`BitmapIndex::build`] bitmap-encodes every row whose live length
+//!   reaches the threshold (the plan layer passes the same
+//!   `auto_segment_len`-derived value that sizes segments, so the
+//!   representation choice rides the measured cost distribution), with
+//!   a density guard — a row is only encoded if its word count does not
+//!   exceed its live count, bounding bitmap memory by 8 B per live
+//!   entry (parity with the column data itself).
+//! * Slots whose partner row is encoded run **tail-side segmentation**:
+//!   the slot's own tail splits into ≤`len`-entry [`BitmapTask`] chunks,
+//!   each probing its chunk against the partner bitmap. Task cost is
+//!   exactly the chunk length — one uniform-cost probe per tail entry —
+//!   which bounds the previously unbounded `tail_end - p` factor and is
+//!   the uniform per-word shape the warp model rewards.
+//! * Slots whose partner stays in merge representation fall back to the
+//!   partner-side [`SegTask`] split; [`hybrid_tasks`] returns both
+//!   lists, executed together by [`crate::par::parallel_support`].
+//!
+//! A probe recovers the *partner slot* `r` (not just membership) from a
+//! per-word exclusive rank prefix, so the kernels bump all three edge
+//! supports exactly like the merge kernels and hybrid passes stay
+//! byte-identical to [`compute_supports_seq`](crate::algo::support::compute_supports_seq).
+
+use crate::algo::support::{eager_update_segment_seq, SegTask};
+use crate::graph::zeroterm::ZCsr;
+use crate::graph::Vid;
+use std::sync::atomic::{AtomicU32, Ordering};
+
+/// Intersection representation chosen for one row (as *partner* operand).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RowRepr {
+    /// Sorted-merge / segment-probe representation (the default).
+    Merge,
+    /// Dense word-block bitmap over the row-local value universe.
+    Bitmap,
+}
+
+/// Bitmap encoding of one row's live entries: dense `u64` word blocks
+/// over the row-local universe `[base, base + 64·words)` plus a per-word
+/// exclusive rank prefix that maps a set bit back to its flat slot
+/// index (`r0 + rank`), preserving the eager update's `S[r]` bump.
+#[derive(Clone, Debug)]
+pub struct RowBitmap {
+    /// Smallest live value of the row (universe origin).
+    base: Vid,
+    /// Flat slot index of the row's first live entry.
+    r0: u32,
+    /// Dense membership words; bit `k` of word `w` is value `base + 64w + k`.
+    words: Vec<u64>,
+    /// Exclusive prefix popcount per word (rank of the word's first bit).
+    rank: Vec<u32>,
+}
+
+impl RowBitmap {
+    /// Encode the live entries of `row`; `None` if the row is empty.
+    fn encode(z: &ZCsr, row: usize) -> Option<RowBitmap> {
+        let live = z.row_live(row);
+        let (&first, &last) = (live.first()?, live.last()?);
+        let (r0, _) = z.row_span(row);
+        let nwords = ((last - first) as usize >> 6) + 1;
+        let mut words = vec![0u64; nwords];
+        for &c in live {
+            let off = (c - first) as usize;
+            words[off >> 6] |= 1u64 << (off & 63);
+        }
+        let mut rank = Vec::with_capacity(nwords);
+        let mut acc = 0u32;
+        for &w in &words {
+            rank.push(acc);
+            acc += w.count_ones();
+        }
+        Some(RowBitmap { base: first, r0: r0 as u32, words, rank })
+    }
+
+    /// Membership + rank probe: the flat slot index of value `w` in the
+    /// encoded row, or `None` if absent. One word load, one AND, one
+    /// popcount — uniform cost per probe.
+    #[inline]
+    pub fn probe(&self, w: Vid) -> Option<u32> {
+        let off = w.checked_sub(self.base)? as usize;
+        let word = *self.words.get(off >> 6)?;
+        let bit = 1u64 << (off & 63);
+        if word & bit == 0 {
+            return None;
+        }
+        let below = (word & (bit - 1)).count_ones();
+        Some(self.r0 + self.rank[off >> 6] + below)
+    }
+
+    /// Number of `u64` words the encoding holds.
+    pub fn word_count(&self) -> usize {
+        self.words.len()
+    }
+}
+
+/// Pooled per-row bitmap encodings for one support pass (rebuilt after
+/// each prune, like the task lists — encodings index the *current*
+/// compacted live entries).
+#[derive(Clone, Debug)]
+pub struct BitmapIndex {
+    rows: Vec<Option<RowBitmap>>,
+    encoded_rows: usize,
+    total_words: usize,
+}
+
+impl BitmapIndex {
+    /// Encode every row whose live length is ≥ `threshold` and whose
+    /// encoding passes the density guard (`words ≤ live`, i.e. at most
+    /// 8 B of bitmap per live entry). Returns the index plus the
+    /// per-row [`RowRepr`] the selection settled on.
+    pub fn build(z: &ZCsr, threshold: u32) -> (BitmapIndex, Vec<RowRepr>) {
+        let threshold = threshold.max(1) as usize;
+        let n = z.n();
+        let mut rows = Vec::with_capacity(n);
+        let mut reprs = vec![RowRepr::Merge; n];
+        let (mut encoded_rows, mut total_words) = (0usize, 0usize);
+        for (i, repr) in reprs.iter_mut().enumerate() {
+            let live = z.row_live(i).len();
+            let mut slot = None;
+            if live >= threshold {
+                if let Some(bm) = RowBitmap::encode(z, i) {
+                    if bm.word_count() <= live {
+                        total_words += bm.word_count();
+                        encoded_rows += 1;
+                        *repr = RowRepr::Bitmap;
+                        slot = Some(bm);
+                    }
+                }
+            }
+            rows.push(slot);
+        }
+        (BitmapIndex { rows, encoded_rows, total_words }, reprs)
+    }
+
+    /// The encoding of row `i`, if it was selected for bitmap form.
+    #[inline]
+    pub fn row(&self, i: usize) -> Option<&RowBitmap> {
+        self.rows.get(i).and_then(|r| r.as_ref())
+    }
+
+    /// Rows that carry a bitmap encoding.
+    pub fn encoded_rows(&self) -> usize {
+        self.encoded_rows
+    }
+
+    /// Total `u64` words across all encodings (memory telemetry).
+    pub fn total_words(&self) -> usize {
+        self.total_words
+    }
+}
+
+/// One tail-side task of the hybrid pass: probe the tail chunk
+/// `col[q_lo..q_hi]` of slot `p`'s row against the bitmap of partner
+/// row `κ = col[p]`. Chunks of one slot partition its live tail, so the
+/// union of chunk matches is exactly the fine task's intersection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BitmapTask {
+    /// Flat slot index of the fine task this chunk belongs to.
+    pub p: u32,
+    /// Start (inclusive) of the tail chunk, as a flat slot index (> `p`).
+    pub q_lo: u32,
+    /// End (exclusive) of the tail chunk.
+    pub q_hi: u32,
+}
+
+impl BitmapTask {
+    /// Static cost estimate in probe steps: exactly the chunk length.
+    /// Unlike [`SegTask::estimated_steps`] this is not just an upper
+    /// bound — the kernels execute one uniform probe per chunk entry
+    /// and return *exactly* this count (the shape the warp model
+    /// rewards, and what the step-invariant property tests pin).
+    pub fn estimated_steps(&self) -> u64 {
+        (self.q_hi - self.q_lo) as u64
+    }
+}
+
+/// The mixed task list of one hybrid support pass: partner-side merge
+/// segments for merge-represented partners, tail-side probe chunks for
+/// bitmap-represented ones, plus the bitmap pool they probe against.
+#[derive(Clone, Debug)]
+pub struct HybridTasks {
+    /// Per-row representation the selection pass settled on.
+    pub reprs: Vec<RowRepr>,
+    /// Bitmap encodings of the selected rows.
+    pub index: BitmapIndex,
+    /// Merge-side tasks (partner-row segments).
+    pub merge: Vec<SegTask>,
+    /// Bitmap-side tasks (tail chunks).
+    pub probe: Vec<BitmapTask>,
+}
+
+impl HybridTasks {
+    /// Total task count across both representations.
+    pub fn len(&self) -> usize {
+        self.merge.len() + self.probe.len()
+    }
+
+    /// Whether the pass has no work at all.
+    pub fn is_empty(&self) -> bool {
+        self.merge.is_empty() && self.probe.is_empty()
+    }
+
+    /// Estimated per-task step costs in combined task order (merge
+    /// tasks first, then probe tasks) — the cost vector the work-aware
+    /// and stealing schedules bin on.
+    pub fn estimated_steps(&self) -> Vec<u64> {
+        self.merge
+            .iter()
+            .map(SegTask::estimated_steps)
+            .chain(self.probe.iter().map(BitmapTask::estimated_steps))
+            .collect()
+    }
+}
+
+/// Enumerate the hybrid task list: select row representations at
+/// threshold `len`, then for every live slot `p` with a non-empty tail
+/// and non-empty partner row emit either ≤`len`-entry tail chunks
+/// ([`BitmapTask`], partner encoded) or ≤`len`-entry partner segments
+/// ([`SegTask`], partner in merge form). Trivially empty slots produce
+/// no tasks, exactly like [`crate::algo::support::segment_tasks`].
+pub fn hybrid_tasks(z: &ZCsr, len: u32) -> HybridTasks {
+    let len = len.max(1) as usize;
+    let (index, reprs) = BitmapIndex::build(z, len as u32);
+    let col = z.col();
+    let n = z.n();
+    let live: Vec<u32> = (0..n).map(|i| z.row_live(i).len() as u32).collect();
+    let mut merge = Vec::new();
+    let mut probe = Vec::new();
+    for i in 0..n {
+        let (start, _) = z.row_span(i);
+        let li = live[i] as usize;
+        let tail_end = (start + li) as u32;
+        for off in 0..li {
+            let p = start + off;
+            let tail_len = li - off - 1;
+            if tail_len == 0 {
+                continue; // last live slot: empty tail, no work
+            }
+            let kappa = col[p] as usize;
+            let lk = live[kappa] as usize;
+            if lk == 0 {
+                continue; // empty partner row, no work
+            }
+            if index.row(kappa).is_some() {
+                // tail-side segmentation against the partner bitmap
+                let mut q = p + 1;
+                while q < tail_end as usize {
+                    let q_hi = (q + len).min(tail_end as usize);
+                    probe.push(BitmapTask {
+                        p: p as u32,
+                        q_lo: q as u32,
+                        q_hi: q_hi as u32,
+                    });
+                    q = q_hi;
+                }
+            } else {
+                // partner-side segmentation, as in `segment_tasks`
+                let (r0, _) = z.row_span(kappa);
+                let mut lo = 0usize;
+                while lo < lk {
+                    let hi = (lo + len).min(lk);
+                    merge.push(SegTask {
+                        p: p as u32,
+                        tail_end,
+                        lo: (r0 + lo) as u32,
+                        hi: (r0 + hi) as u32,
+                    });
+                    lo = hi;
+                }
+            }
+        }
+    }
+    HybridTasks { reprs, index, merge, probe }
+}
+
+/// Eager update for one [`BitmapTask`], sequential support array:
+/// probe every chunk entry against the partner bitmap, bumping all
+/// three edge supports on a hit. Returns exactly
+/// [`BitmapTask::estimated_steps`] — one uniform step per probe.
+#[inline]
+pub fn eager_update_bitmap_seq(col: &[Vid], s: &mut [u32], bm: &RowBitmap, t: &BitmapTask) -> u64 {
+    let p = t.p as usize;
+    for q in t.q_lo as usize..t.q_hi as usize {
+        if let Some(r) = bm.probe(col[q]) {
+            s[p] += 1;
+            s[q] += 1;
+            s[r as usize] += 1;
+        }
+    }
+    t.estimated_steps()
+}
+
+/// Atomic variant of [`eager_update_bitmap_seq`] for the pool: chunks
+/// of the same fine task race on `s[p]` (and on shared partner-row
+/// slots), so every bump is a relaxed fetch-add.
+#[inline]
+pub fn eager_update_bitmap_atomic(
+    col: &[Vid],
+    s: &[AtomicU32],
+    bm: &RowBitmap,
+    t: &BitmapTask,
+) -> u64 {
+    let p = t.p as usize;
+    for q in t.q_lo as usize..t.q_hi as usize {
+        if let Some(r) = bm.probe(col[q]) {
+            s[p].fetch_add(1, Ordering::Relaxed);
+            s[q].fetch_add(1, Ordering::Relaxed);
+            s[r as usize].fetch_add(1, Ordering::Relaxed);
+        }
+    }
+    t.estimated_steps()
+}
+
+/// Sequential hybrid `computeSupports`: clears `s`, enumerates
+/// [`hybrid_tasks`] and applies every merge segment and probe chunk.
+/// Returns total executed steps. The result is identical to
+/// [`compute_supports_seq`](crate::algo::support::compute_supports_seq)
+/// — verified by the hybrid property tests.
+pub fn compute_supports_hybrid_seq(z: &ZCsr, len: u32, s: &mut Vec<u32>) -> u64 {
+    s.clear();
+    s.resize(z.slots(), 0);
+    let ht = hybrid_tasks(z, len);
+    let col = z.col();
+    let mut steps = 0u64;
+    for t in &ht.merge {
+        steps += eager_update_segment_seq(col, s, t);
+    }
+    for t in &ht.probe {
+        let kappa = col[t.p as usize] as usize;
+        let bm = ht.index.row(kappa).expect("probe task against unencoded row");
+        steps += eager_update_bitmap_seq(col, s, bm, t);
+    }
+    steps
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::support::compute_supports_seq;
+    use crate::graph::builder::from_sorted_unique;
+    use crate::testkit::graphs;
+
+    #[test]
+    fn probe_recovers_exact_slots() {
+        // row 0 live: [2, 5, 70, 131] — spans three words
+        let g = from_sorted_unique(132, &[(0, 2), (0, 5), (0, 70), (0, 131), (1, 2)]);
+        let z = ZCsr::from_csr(&g);
+        let bm = RowBitmap::encode(&z, 0).unwrap();
+        let (r0, _) = z.row_span(0);
+        for (off, &c) in z.row_live(0).iter().enumerate() {
+            assert_eq!(bm.probe(c), Some((r0 + off) as u32), "value {c}");
+        }
+        for miss in [0u32, 1, 3, 69, 71, 130, 132, 4000] {
+            assert_eq!(bm.probe(miss), None, "value {miss}");
+        }
+        assert_eq!(bm.word_count(), ((131 - 2) >> 6) + 1);
+    }
+
+    #[test]
+    fn density_guard_demotes_sparse_wide_rows() {
+        // two live entries spanning a huge universe: words ≫ live
+        let g = from_sorted_unique(20_000, &[(0, 1), (0, 19_999), (1, 2)]);
+        let z = ZCsr::from_csr(&g);
+        let (index, reprs) = BitmapIndex::build(&z, 1);
+        assert_eq!(reprs[0], RowRepr::Merge, "sparse wide row must stay merge");
+        assert!(index.row(0).is_none());
+        // row 1 ([2]) is dense over a 1-value universe: encoded
+        assert_eq!(reprs[1], RowRepr::Bitmap);
+        assert_eq!(index.encoded_rows(), 1);
+        assert_eq!(index.total_words(), 1);
+    }
+
+    #[test]
+    fn hybrid_tasks_bound_both_sides_and_cover_all_slots() {
+        let g = graphs::hub_divergence_comb(20, 30, 150);
+        let z = ZCsr::from_csr(&g);
+        for len in [1u32, 8, 64] {
+            let ht = hybrid_tasks(&z, len);
+            for t in &ht.merge {
+                assert!(t.hi - t.lo <= len, "{t:?}");
+                assert!(t.estimated_steps() <= len as u64 + 1, "{t:?}");
+            }
+            for t in &ht.probe {
+                assert!(t.q_lo > t.p && t.q_hi > t.q_lo, "{t:?}");
+                assert!(t.q_hi - t.q_lo <= len, "{t:?}");
+            }
+            // chunks of one slot must partition its live tail
+            let mut by_p: std::collections::HashMap<u32, Vec<(u32, u32)>> =
+                std::collections::HashMap::new();
+            for t in &ht.probe {
+                by_p.entry(t.p).or_default().push((t.q_lo, t.q_hi));
+            }
+            for (p, mut chunks) in by_p {
+                chunks.sort_unstable();
+                let i = z.row_of(p as usize);
+                let (start, _) = z.row_span(i);
+                let tail_end = start + z.row_live(i).len();
+                assert_eq!(chunks.first().unwrap().0, p + 1, "p={p}");
+                assert_eq!(chunks.last().unwrap().1 as usize, tail_end, "p={p}");
+                for w in chunks.windows(2) {
+                    assert_eq!(w[0].1, w[1].0, "p={p}: chunks must be contiguous");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hub_partner_rows_go_bitmap_on_the_comb() {
+        // the comb's hub row (live = span) is the heavy *partner* row;
+        // at a threshold below span it must be bitmap-encoded and all
+        // heavy-slot work must move to the probe side
+        let g = graphs::hub_divergence_comb(20, 30, 150);
+        let z = ZCsr::from_csr(&g);
+        let ht = hybrid_tasks(&z, 64);
+        let hub = 20 + 30; // hub vertex id
+        assert_eq!(ht.reprs[hub], RowRepr::Bitmap);
+        assert!(ht.index.row(hub).is_some());
+        assert!(!ht.probe.is_empty());
+        // no merge segment may target the encoded hub row
+        for t in &ht.merge {
+            let kappa = z.col()[t.p as usize] as usize;
+            assert_eq!(ht.reprs[kappa], RowRepr::Merge, "{t:?}");
+        }
+    }
+
+    #[test]
+    fn hybrid_supports_match_plain_on_fixtures() {
+        let rmat = crate::gen::rmat::rmat(
+            300,
+            2500,
+            crate::gen::rmat::RmatParams::autonomous_system(),
+            &mut crate::util::Rng::new(17),
+        );
+        for g in [
+            &graphs::diamond(),
+            &graphs::clique(6),
+            &graphs::star_with_fringe(40),
+            &graphs::hub_divergence_comb(10, 20, 80),
+            &graphs::peel_chain(8),
+            &rmat,
+        ] {
+            let z = ZCsr::from_csr(g);
+            let mut want = Vec::new();
+            compute_supports_seq(&z, &mut want);
+            for len in [1u32, 2, 3, 64] {
+                let mut got = Vec::new();
+                compute_supports_hybrid_seq(&z, len, &mut got);
+                assert_eq!(got, want, "len={len}");
+            }
+        }
+    }
+
+    #[test]
+    fn bitmap_kernel_steps_are_exact() {
+        let g = graphs::star_with_fringe(100);
+        let z = ZCsr::from_csr(&g);
+        let ht = hybrid_tasks(&z, 16);
+        let col = z.col();
+        let mut s = vec![0u32; z.slots()];
+        for t in &ht.probe {
+            let kappa = col[t.p as usize] as usize;
+            let bm = ht.index.row(kappa).unwrap();
+            assert_eq!(eager_update_bitmap_seq(col, &mut s, bm, t), t.estimated_steps());
+        }
+    }
+
+    #[test]
+    fn empty_and_triangle_free_graphs() {
+        let z = ZCsr::from_csr(&crate::graph::Csr::empty(0));
+        let mut s = Vec::new();
+        assert_eq!(compute_supports_hybrid_seq(&z, 8, &mut s), 0);
+        assert!(s.is_empty());
+        let z = ZCsr::from_csr(&graphs::path(12));
+        let mut s = Vec::new();
+        compute_supports_hybrid_seq(&z, 8, &mut s);
+        assert!(s.iter().all(|&x| x == 0));
+    }
+}

@@ -1,9 +1,12 @@
 //! **L1 — kernels.** The Eager K-truss algorithm family (paper
 //! Algorithms 1–3): support computation across the full granularity
 //! ladder — [`support::Mode::Coarse`] (one task per row),
-//! [`support::Mode::Fine`] (one task per nonzero), and the ultra-fine
+//! [`support::Mode::Fine`] (one task per nonzero), the ultra-fine
 //! [`support::Granularity::Segment`] split (one task per ≤ L-entry
-//! partner-row segment) — plus pruning, the convergence driver, K_max
+//! partner-row segment), and the per-row hybrid
+//! [`support::Granularity::Hybrid`] representation ([`bitmap`]: bitmap
+//! hub rows probed by tail-side chunks, merge segments elsewhere) —
+//! plus pruning, the convergence driver, K_max
 //! search, full truss decomposition, and the independent naive oracle.
 //! This layer owns load balancing at *merge-step* granularity: how the
 //! pass's work is cut into tasks; [`crate::par`] decides how tasks map
@@ -14,6 +17,7 @@
 //! frontier-driven decrement ([`incremental`]), or a per-iteration
 //! auto crossover (the default).
 
+pub mod bitmap;
 pub mod decompose;
 pub mod incremental;
 pub mod kmax;

@@ -61,6 +61,17 @@ pub enum Granularity {
         /// Maximum partner-row entries per segment task (≥ 1).
         len: u32,
     },
+    /// Per-row hybrid representation ([`crate::algo::bitmap`]): the
+    /// heaviest partner rows (live length ≥ `len`) are bitmap-encoded
+    /// and intersected by ≤`len`-entry **tail-side** probe chunks; the
+    /// rest fall back to partner-side [`SegTask`] merges. `len` is both
+    /// the hub-selection threshold and the task bound, tying the
+    /// representation choice to the same cost distribution that drives
+    /// `auto_segment_len`.
+    Hybrid {
+        /// Hub-row threshold and maximum entries per task (≥ 1).
+        len: u32,
+    },
 }
 
 impl Granularity {
@@ -71,16 +82,18 @@ impl Granularity {
         match self {
             Granularity::Coarse => Some(Mode::Coarse),
             Granularity::Fine => Some(Mode::Fine),
-            Granularity::Segment { .. } => None,
+            Granularity::Segment { .. } | Granularity::Hybrid { .. } => None,
         }
     }
 
-    /// Short stable label for config/table keys: `C`, `F`, `S<len>`.
+    /// Short stable label for config/table keys: `C`, `F`, `S<len>`,
+    /// `H<len>`.
     pub fn short(self) -> String {
         match self {
             Granularity::Coarse => "C".to_string(),
             Granularity::Fine => "F".to_string(),
             Granularity::Segment { len } => format!("S{len}"),
+            Granularity::Hybrid { len } => format!("H{len}"),
         }
     }
 }
@@ -100,6 +113,7 @@ impl std::fmt::Display for Granularity {
             Granularity::Coarse => write!(f, "coarse"),
             Granularity::Fine => write!(f, "fine"),
             Granularity::Segment { len } => write!(f, "segment:{len}"),
+            Granularity::Hybrid { len } => write!(f, "hybrid:{len}"),
         }
     }
 }
@@ -107,23 +121,32 @@ impl std::fmt::Display for Granularity {
 impl std::str::FromStr for Granularity {
     type Err = String;
 
-    /// Parse `coarse`, `fine`, `segment`, `segment:<len>` (the CLI
-    /// `--granularity` grammar).
+    /// Parse `coarse`, `fine`, `segment`, `segment:<len>`, `hybrid`,
+    /// `hybrid:<len>` (the CLI `--granularity` grammar).
     fn from_str(s: &str) -> Result<Granularity, String> {
         match s {
             "coarse" => Ok(Granularity::Coarse),
             "fine" => Ok(Granularity::Fine),
             "segment" => Ok(Granularity::Segment { len: DEFAULT_SEGMENT_LEN }),
-            other => other
-                .strip_prefix("segment:")
-                .and_then(|l| l.parse::<u32>().ok())
-                .filter(|&l| l > 0)
-                .map(|len| Granularity::Segment { len })
-                .ok_or_else(|| {
+            "hybrid" => Ok(Granularity::Hybrid { len: DEFAULT_SEGMENT_LEN }),
+            other => {
+                let seg = other
+                    .strip_prefix("segment:")
+                    .and_then(|l| l.parse::<u32>().ok())
+                    .filter(|&l| l > 0)
+                    .map(|len| Granularity::Segment { len });
+                let hyb = other
+                    .strip_prefix("hybrid:")
+                    .and_then(|l| l.parse::<u32>().ok())
+                    .filter(|&l| l > 0)
+                    .map(|len| Granularity::Hybrid { len });
+                seg.or(hyb).ok_or_else(|| {
                     format!(
-                        "unknown granularity {other:?} (expected coarse|fine|segment[:len])"
+                        "unknown granularity {other:?} \
+                         (expected coarse|fine|segment[:len]|hybrid[:len])"
                     )
-                }),
+                })
+            }
         }
     }
 }
@@ -334,11 +357,22 @@ pub struct SegTask {
 }
 
 impl SegTask {
-    /// Static cost estimate in merge steps (for the scan binner): the
-    /// segment length plus one step of setup (the tail lower-bound
-    /// search the kernel performs).
+    /// Live-tail length of the fine task this segment belongs to (the
+    /// merge's left side, `col[p+1..tail_end]`).
+    pub fn tail_len(&self) -> u64 {
+        (self.tail_end - self.p - 1) as u64
+    }
+
+    /// Static cost estimate in merge steps (for the scan binner):
+    /// `min(segment length, tail length) + 1`. The kernel probes the
+    /// *smaller* of the two sides, so its work is bounded by the
+    /// shorter one — clamping by `tail_end - p - 1` stops the binner
+    /// from overweighting long-partner segments behind short tails —
+    /// and the `+ 1` counts the window-locate setup the kernel also
+    /// counts. This is a true upper bound on the kernel-returned steps
+    /// (verified by the step-invariant property tests).
     pub fn estimated_steps(&self) -> u64 {
-        (self.hi - self.lo) as u64 + 1
+        ((self.hi - self.lo) as u64).min(self.tail_len()) + 1
     }
 }
 
@@ -384,62 +418,73 @@ pub fn segment_tasks(z: &ZCsr, len: u32) -> Vec<SegTask> {
     tasks
 }
 
-/// Eager update for one [`SegTask`], sequential support array. Returns
-/// merge steps executed. The kernel first binary-searches the live tail
-/// for the segment's first value (entries below it cannot match inside
-/// this segment), then runs the bounded sorted merge; both sides carry
-/// explicit bounds, so no zero-terminator reliance is needed here.
+/// The matching `(q, r)` pairs of one segment task, found by the
+/// **side-adaptive probe** strategy: locate the tail window that can
+/// match inside the segment (two lower-bound searches — the one counted
+/// setup step), then iterate the *smaller* side and binary-search each
+/// of its values in the other. Returns the executed step count:
+/// `1 + min(window length, segment length)`, which the caller's
+/// [`SegTask::estimated_steps`] bounds from above — the unified
+/// step-accounting contract (setup counted, work clamped by the shorter
+/// side) that replay calibration and measured-trace re-binning rely on.
+///
+/// The probe set equals the sorted-merge intersection of the tail with
+/// the segment, so every `(q, r)` match pair is produced exactly once
+/// and segmented passes stay byte-identical to the plain merge.
 #[inline]
-pub fn eager_update_segment_seq(col: &[Vid], s: &mut [u32], t: &SegTask) -> u64 {
+fn segment_probe(col: &[Vid], t: &SegTask, mut hit: impl FnMut(usize, usize)) -> u64 {
     let p = t.p as usize;
-    let tail_end = t.tail_end as usize;
-    let (mut r, r_end) = (t.lo as usize, t.hi as usize);
-    let tail = &col[p + 1..tail_end];
-    let mut q = p + 1 + tail.partition_point(|&c| c < col[r]);
-    let mut steps = 0u64;
-    while q < tail_end && r < r_end {
-        steps += 1;
-        match col[q].cmp(&col[r]) {
-            std::cmp::Ordering::Less => q += 1,
-            std::cmp::Ordering::Greater => r += 1,
-            std::cmp::Ordering::Equal => {
-                s[p] += 1;
-                s[q] += 1;
-                s[r] += 1;
-                q += 1;
-                r += 1;
+    let (lo, hi) = (t.lo as usize, t.hi as usize);
+    let tail = &col[p + 1..t.tail_end as usize];
+    let seg = &col[lo..hi];
+    // setup (1 step): the tail window [q0, q1) whose values fall inside
+    // the segment's value range — entries outside it cannot match here
+    let q0 = tail.partition_point(|&c| c < seg[0]);
+    let q1 = q0 + tail[q0..].partition_point(|&c| c <= seg[hi - lo - 1]);
+    let mut steps = 1u64;
+    if q1 - q0 <= hi - lo {
+        for (off, w) in tail[q0..q1].iter().enumerate() {
+            steps += 1;
+            if let Ok(ri) = seg.binary_search(w) {
+                hit(p + 1 + q0 + off, lo + ri);
+            }
+        }
+    } else {
+        for (ri, w) in seg.iter().enumerate() {
+            steps += 1;
+            if let Ok(off) = tail[q0..q1].binary_search(w) {
+                hit(p + 1 + q0 + off, lo + ri);
             }
         }
     }
     steps
 }
 
+/// Eager update for one [`SegTask`], sequential support array. Returns
+/// the executed steps (setup + probes, see [`segment_probe`]); always
+/// `≤ t.estimated_steps()`.
+#[inline]
+pub fn eager_update_segment_seq(col: &[Vid], s: &mut [u32], t: &SegTask) -> u64 {
+    let p = t.p as usize;
+    segment_probe(col, t, |q, r| {
+        s[p] += 1;
+        s[q] += 1;
+        s[r] += 1;
+    })
+}
+
 /// Atomic variant of [`eager_update_segment_seq`] for the pool: segment
 /// tasks of the *same* fine task race on `s[p]` (and on shared `S₂₂`
-/// rows), so every bump is a relaxed fetch-add.
+/// rows), so every bump is a relaxed fetch-add. Same step accounting as
+/// the sequential kernel.
 #[inline]
 pub fn eager_update_segment_atomic(col: &[Vid], s: &[AtomicU32], t: &SegTask) -> u64 {
     let p = t.p as usize;
-    let tail_end = t.tail_end as usize;
-    let (mut r, r_end) = (t.lo as usize, t.hi as usize);
-    let tail = &col[p + 1..tail_end];
-    let mut q = p + 1 + tail.partition_point(|&c| c < col[r]);
-    let mut steps = 0u64;
-    while q < tail_end && r < r_end {
-        steps += 1;
-        match col[q].cmp(&col[r]) {
-            std::cmp::Ordering::Less => q += 1,
-            std::cmp::Ordering::Greater => r += 1,
-            std::cmp::Ordering::Equal => {
-                s[p].fetch_add(1, Ordering::Relaxed);
-                s[q].fetch_add(1, Ordering::Relaxed);
-                s[r].fetch_add(1, Ordering::Relaxed);
-                q += 1;
-                r += 1;
-            }
-        }
-    }
-    steps
+    segment_probe(col, t, |q, r| {
+        s[p].fetch_add(1, Ordering::Relaxed);
+        s[q].fetch_add(1, Ordering::Relaxed);
+        s[r].fetch_add(1, Ordering::Relaxed);
+    })
 }
 
 /// Sequential segment-split `computeSupports`: clears `s`, enumerates
@@ -582,6 +627,8 @@ mod tests {
             Granularity::Fine,
             Granularity::Segment { len: 64 },
             Granularity::Segment { len: 7 },
+            Granularity::Hybrid { len: 64 },
+            Granularity::Hybrid { len: 9 },
         ] {
             let s = g.to_string();
             let back: Granularity = s.parse().unwrap_or_else(|e| panic!("{s}: {e}"));
@@ -591,12 +638,20 @@ mod tests {
             "segment".parse::<Granularity>().unwrap(),
             Granularity::Segment { len: DEFAULT_SEGMENT_LEN }
         );
+        assert_eq!(
+            "hybrid".parse::<Granularity>().unwrap(),
+            Granularity::Hybrid { len: DEFAULT_SEGMENT_LEN }
+        );
         assert!("nope".parse::<Granularity>().is_err());
         assert!("segment:0".parse::<Granularity>().is_err());
         assert!("segment:x".parse::<Granularity>().is_err());
+        assert!("hybrid:0".parse::<Granularity>().is_err());
+        assert!("hybrid:x".parse::<Granularity>().is_err());
         assert_eq!(Granularity::from(Mode::Coarse).mode(), Some(Mode::Coarse));
         assert_eq!(Granularity::Segment { len: 4 }.mode(), None);
+        assert_eq!(Granularity::Hybrid { len: 4 }.mode(), None);
         assert_eq!(Granularity::Segment { len: 4 }.short(), "S4");
+        assert_eq!(Granularity::Hybrid { len: 4 }.short(), "H4");
     }
 
     #[test]

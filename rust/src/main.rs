@@ -84,7 +84,7 @@ fn print_help() {
          COMMANDS\n\
            run        --graph <name|path> [--k 3] [--mode fine|coarse] [--par N] [--engine sparse|dense]\n\
                       [--plan auto|<schedule>/<granularity>/<support>]\n\
-                      [--granularity coarse|fine|segment[:len]]\n\
+                      [--granularity coarse|fine|segment[:len]|hybrid[:len]]\n\
                       [--schedule static|dynamic[:chunk]|workaware|stealing]\n\
                       [--support-mode full|incremental|auto]\n\
                       [--shards N] [--priority high|normal|low] [--deadline-ms D]\n\
@@ -92,7 +92,8 @@ fn print_help() {
                       or frees all axes at once, the per-axis flags pin single axes,\n\
                       anything unpinned is chosen by the planner per graph;\n\
                       --shards > 1 serves the job through the sharded executor;\n\
-                      --granularity segment runs the ultra-fine pooled kernel)\n\
+                      --granularity segment runs the ultra-fine pooled kernel,\n\
+                      hybrid adds bitmap-encoded hub partner rows + tail chunks)\n\
            kmax       --graph <name|path>\n\
            decompose  --graph <name|path>\n\
            generate   --graph <name> [--scale 1.0] [--out file.tsv] [--format tsv|bin]\n\
@@ -195,13 +196,16 @@ fn cmd_run(args: &Args) -> Result<()> {
         .map_err(|e| anyhow::anyhow!("--priority: {e}"))?;
     let deadline_ms = args.get_as::<u64>("deadline-ms", 0)?;
     args.reject_unknown()?;
-    let seg_requested = matches!(spec.granularity, Some(Granularity::Segment { .. }));
+    let seg_requested = matches!(
+        spec.granularity,
+        Some(Granularity::Segment { .. }) | Some(Granularity::Hybrid { .. })
+    );
     if seg_requested {
         if shards > 1 {
-            bail!("segment granularity runs the pooled sparse kernel; drop --shards");
+            bail!("segment/hybrid granularity runs the pooled sparse kernel; drop --shards");
         }
         if engine == "dense" {
-            bail!("segment granularity requires --engine sparse");
+            bail!("segment/hybrid granularity requires --engine sparse");
         }
     }
     if shards > 1 {
@@ -665,6 +669,11 @@ fn cmd_sim(args: &Args) -> Result<()> {
     let g = load_graph(args)?;
     let k = args.get_as::<u32>("k", 3)?;
     let gran_flag = args.get("granularity", "all");
+    // "all" replays the trace-distinguishable granularities; hybrid is
+    // accepted explicitly (`--granularity hybrid[:len]`) but charged
+    // like segment by the trace-replay models — the planner's static
+    // enumeration (`ktruss plan`) is where the representation choice
+    // shows a distinct cost
     let grans: Vec<Granularity> = if gran_flag == "all" {
         vec![
             Granularity::Coarse,

@@ -207,7 +207,14 @@ impl Costs {
     ///   bound each segment's merge by its length plus the in-range
     ///   tail). Zero-step slots produce **no** tasks, mirroring
     ///   [`crate::algo::support::segment_tasks`], which enumerates
-    ///   nothing for terminators/tombstones and trivially empty merges.
+    ///   nothing for terminators/tombstones and trivially empty merges;
+    /// * [`Granularity::Hybrid`] — same ≤ `len` split: both of the
+    ///   hybrid pass's task kinds (tail-side probe chunks and
+    ///   partner-side merge segments) are ≤ `len`-bounded, so the
+    ///   trace-shape view is the same piecewise decomposition. (The
+    ///   *planner* scores hybrid from its real task enumeration — see
+    ///   [`crate::plan`] — since a merge trace cannot reveal which
+    ///   pieces become uniform probes.)
     pub fn from_trace_rows(fine_steps: &[u32], row_ptr: &[u32], gran: Granularity) -> Costs {
         let slots = *row_ptr.last().expect("row_ptr is never empty") as usize;
         assert_eq!(fine_steps.len(), slots, "one traced step count per slot");
@@ -219,7 +226,7 @@ impl Costs {
                 })
                 .collect(),
             Granularity::Fine => fine_steps.iter().map(|&st| (st as u64).max(1)).collect(),
-            Granularity::Segment { len } => {
+            Granularity::Segment { len } | Granularity::Hybrid { len } => {
                 let len = len.max(1);
                 let mut tasks = Vec::with_capacity(fine_steps.len());
                 for &st in fine_steps {
@@ -249,10 +256,12 @@ impl Costs {
     ///   `decrement_frontier_par_gran` runs);
     /// * [`Granularity::Fine`] — one task per dying edge:
     ///   `max(steps, 1)`;
-    /// * [`Granularity::Segment`] — each task's steps split into
-    ///   `ceil(steps/len)` pieces of ≤ `len` steps (zero-step tasks
-    ///   still contribute one unit task — the enumeration itself runs
-    ///   even when it finds no triangle).
+    /// * [`Granularity::Segment`] / [`Granularity::Hybrid`] — each
+    ///   task's steps split into `ceil(steps/len)` pieces of ≤ `len`
+    ///   steps (zero-step tasks still contribute one unit task — the
+    ///   enumeration itself runs even when it finds no triangle). The
+    ///   frontier walk is representation-agnostic, so hybrid shares the
+    ///   segment decomposition.
     pub fn from_frontier(task_steps: &[u32], task_rows: &[u32], gran: Granularity) -> Costs {
         assert_eq!(task_steps.len(), task_rows.len(), "one row per frontier task");
         let per_task = match gran {
@@ -271,7 +280,7 @@ impl Costs {
                 }
                 tasks
             }
-            Granularity::Segment { len } => {
+            Granularity::Segment { len } | Granularity::Hybrid { len } => {
                 let len = len.max(1);
                 let mut tasks = Vec::with_capacity(task_steps.len());
                 for &st in task_steps {

@@ -14,6 +14,7 @@
 use super::balance::{self, Costs};
 use super::frontier;
 use super::pool::{Pool, Schedule};
+use crate::algo::bitmap::{self, eager_update_bitmap_atomic};
 use crate::algo::incremental::{self, InNbrs, SupportMode};
 use crate::algo::support::{
     eager_update_atomic, eager_update_segment_atomic, segment_tasks, Granularity, Mode,
@@ -200,10 +201,54 @@ pub fn compute_supports_segmented(
     counter_total(&totals)
 }
 
+/// Run one **hybrid** support pass into an existing (zeroed) atomic
+/// array ([`Granularity::Hybrid`]): the mixed task list of
+/// [`bitmap::hybrid_tasks`] — partner-side merge segments plus
+/// tail-side bitmap probe chunks — executed as one combined index space
+/// (merge tasks first, then probe tasks) under any schedule. Work-aware
+/// schedules scan-bin the per-task estimates
+/// ([`HybridTasks::estimated_steps`](bitmap::HybridTasks::estimated_steps));
+/// probe-chunk estimates are *exact*, so the bins are tight on the
+/// bitmap side by construction. Returns the exact total executed steps
+/// of the pass.
+pub fn compute_supports_hybrid(
+    z: &ZCsr,
+    pool: &Pool,
+    len: u32,
+    schedule: Schedule,
+    s: &[AtomicU32],
+) -> u64 {
+    assert_eq!(s.len(), z.slots());
+    let ht = bitmap::hybrid_tasks(z, len);
+    let col = z.col();
+    let totals = worker_counters(pool);
+    let n_merge = ht.merge.len();
+    let body = |w: usize, ti: usize| {
+        let steps = if ti < n_merge {
+            eager_update_segment_atomic(col, s, &ht.merge[ti])
+        } else {
+            let t = &ht.probe[ti - n_merge];
+            let kappa = col[t.p as usize] as usize;
+            let bm = ht.index.row(kappa).expect("probe task against unencoded row");
+            eager_update_bitmap_atomic(col, s, bm, t)
+        };
+        totals[w].0.fetch_add(steps, Ordering::Relaxed);
+    };
+    if needs_costs(schedule) {
+        let costs = ht.estimated_steps();
+        pool.parallel_for_costed(ht.len(), &costs, schedule, body);
+    } else {
+        pool.parallel_for(ht.len(), schedule, body);
+    }
+    counter_total(&totals)
+}
+
 /// Run one support pass at any [`Granularity`]; returns the plain
 /// support array. Coarse/fine dispatch to [`compute_supports_par`], the
-/// segment split to [`compute_supports_segmented`]. All granularities
-/// produce identical supports (verified by the segment property tests).
+/// segment split to [`compute_supports_segmented`], the hybrid
+/// representation to [`compute_supports_hybrid`]. All granularities
+/// produce identical supports (verified by the segment and hybrid
+/// property tests).
 pub fn compute_supports_gran(
     z: &ZCsr,
     pool: &Pool,
@@ -216,6 +261,11 @@ pub fn compute_supports_gran(
         Granularity::Segment { len } => {
             let s: Vec<AtomicU32> = (0..z.slots()).map(|_| AtomicU32::new(0)).collect();
             compute_supports_segmented(z, pool, len, schedule, &s);
+            s.into_iter().map(|x| x.into_inner()).collect()
+        }
+        Granularity::Hybrid { len } => {
+            let s: Vec<AtomicU32> = (0..z.slots()).map(|_| AtomicU32::new(0)).collect();
+            compute_supports_hybrid(z, pool, len, schedule, &s);
             s.into_iter().map(|x| x.into_inner()).collect()
         }
     }
@@ -511,15 +561,17 @@ pub fn ktruss_par_gran(
 
 /// Full concurrent k-truss at any [`Granularity`] with an explicit
 /// support-maintenance mode. Coarse/fine delegate to
-/// [`ktruss_par_mode`]; the segment split runs its own convergence loop
-/// whose **full** passes use [`compute_supports_segmented`] (segment
-/// costs re-estimated from the compacted working form each iteration)
-/// and whose **incremental** iterations run the frontier pass at the
-/// matching granularity ([`frontier::decrement_frontier_par_gran`]).
+/// [`ktruss_par_mode`]; the segment split and the hybrid
+/// representation run their own convergence loop whose **full** passes
+/// use [`compute_supports_segmented`] / [`compute_supports_hybrid`]
+/// (task lists — and, for hybrid, row representations — re-derived
+/// from the compacted working form each iteration) and whose
+/// **incremental** iterations run the frontier pass at the matching
+/// granularity ([`frontier::decrement_frontier_par_gran`]).
 ///
 /// The returned [`crate::algo::ktruss::KtrussResult`] records
-/// [`Mode::Fine`] for segment runs — the segment split is a sub-division
-/// of fine tasks and produces identical results at every granularity.
+/// [`Mode::Fine`] for segment and hybrid runs — both are sub-divisions
+/// of fine tasks and produce identical results at every granularity.
 pub fn ktruss_par_gran_mode(
     g: &crate::graph::Csr,
     k: u32,
@@ -550,14 +602,24 @@ fn ktruss_par_gran_crossover(
     support: SupportMode,
     crossover: f64,
 ) -> crate::algo::ktruss::KtrussResult {
-    let len = match gran {
+    let (len, hybrid) = match gran {
         Granularity::Coarse => {
             return ktruss_par_mode_crossover(g, k, pool, Mode::Coarse, schedule, support, crossover)
         }
         Granularity::Fine => {
             return ktruss_par_mode_crossover(g, k, pool, Mode::Fine, schedule, support, crossover)
         }
-        Granularity::Segment { len } => len,
+        Granularity::Segment { len } => (len, false),
+        Granularity::Hybrid { len } => (len, true),
+    };
+    // full passes re-enumerate tasks (and, for hybrid, re-select row
+    // representations) from the compacted working form each iteration
+    let run_full = |z: &ZCsr, s: &[AtomicU32]| {
+        if hybrid {
+            compute_supports_hybrid(z, pool, len, schedule, s)
+        } else {
+            compute_supports_segmented(z, pool, len, schedule, s)
+        }
     };
     let mut z = ZCsr::from_csr(g);
     let s_atomic: Vec<AtomicU32> = (0..z.slots()).map(|_| AtomicU32::new(0)).collect();
@@ -577,7 +639,7 @@ fn ktruss_par_gran_crossover(
         };
     }
     let in_nbrs: Option<InNbrs> = if use_inc { Some(InNbrs::build(&z)) } else { None };
-    let mut pass_steps = compute_supports_segmented(&z, pool, len, schedule, &s_atomic);
+    let mut pass_steps = run_full(&z, &s_atomic);
     let mut pass_incremental = false;
     let mut last_full_steps = pass_steps;
     loop {
@@ -630,7 +692,7 @@ fn ktruss_par_gran_crossover(
                 pass_steps = 0;
                 pass_incremental = false;
             } else {
-                pass_steps = compute_supports_segmented(&z, pool, len, schedule, &s_atomic);
+                pass_steps = run_full(&z, &s_atomic);
                 pass_incremental = false;
                 last_full_steps = pass_steps;
             }
@@ -714,6 +776,55 @@ mod tests {
         for gran in [Granularity::Coarse, Granularity::Fine] {
             let got = compute_supports_gran(&z, &pool, gran, Schedule::WorkAware);
             assert_eq!(got, want, "{gran}");
+        }
+    }
+
+    #[test]
+    fn hybrid_par_supports_match_seq_all_schedules() {
+        // include a hub-partner-heavy fixture so the bitmap side really
+        // executes, not just the merge fallback
+        let comb = crate::testkit::graphs::hub_divergence_comb(12, 20, 90);
+        for g in [&random_graph(23), &comb] {
+            let z = ZCsr::from_csr(g);
+            let mut want = Vec::new();
+            compute_supports_seq(&z, &mut want);
+            let pool = Pool::new(4);
+            for len in [1u32, 7, 64] {
+                for sched in ALL_SCHEDULES {
+                    let got = compute_supports_gran(&z, &pool, Granularity::Hybrid { len }, sched);
+                    assert_eq!(got, want, "len={len} {sched:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hybrid_pass_total_steps_match_seq_hybrid() {
+        let g = crate::testkit::graphs::hub_divergence_comb(10, 15, 70);
+        let z = ZCsr::from_csr(&g);
+        let mut s_seq = Vec::new();
+        let want = crate::algo::bitmap::compute_supports_hybrid_seq(&z, 16, &mut s_seq);
+        let pool = Pool::new(4);
+        for sched in ALL_SCHEDULES {
+            let s: Vec<AtomicU32> = (0..z.slots()).map(|_| AtomicU32::new(0)).collect();
+            let total = compute_supports_hybrid(&z, &pool, 16, sched, &s);
+            assert_eq!(total, want, "{sched:?}");
+        }
+    }
+
+    #[test]
+    fn ktruss_par_hybrid_matches_seq() {
+        let g = random_graph(24);
+        let pool = Pool::new(4);
+        for k in [3u32, 5] {
+            let seq = ktruss(&g, k, Mode::Fine);
+            for len in [2u32, 64] {
+                for sched in [Schedule::Static, Schedule::WorkAware, Schedule::Stealing] {
+                    let par = ktruss_par_gran(&g, k, &pool, Granularity::Hybrid { len }, sched);
+                    assert_eq!(par.truss, seq.truss, "k={k} len={len} {sched:?}");
+                    assert_eq!(par.iterations, seq.iterations, "k={k} len={len} {sched:?}");
+                }
+            }
         }
     }
 

@@ -31,14 +31,20 @@
 //!    ([`crate::par::ktruss_par_plan`]) consume every field including
 //!    the auto-crossover fraction.
 //!
-//! Candidate selection is deliberately *sticky*: a later (more complex)
-//! candidate replaces the incumbent only when its predicted cost is at
-//! least `1 − `[`PLAN_SWITCH_MARGIN`] better. Static estimates are
+//! Candidate selection is deliberately *sticky*: the planner takes the
+//! **earliest** (simplest — the grid enumerates granularity-major,
+//! simplest first) candidate whose predicted cost is within
+//! [`PLAN_SWITCH_MARGIN`] of the global best. Static estimates are
 //! upper bounds with different slack per granularity, so near-ties are
 //! noise — the planner switches away from the simple plan only on a
 //! clear, shape-driven win (hub rows, clustered hot regions), which is
-//! exactly when the paper says the choice matters.
+//! exactly when the paper says the choice matters. The margin is
+//! applied against the global minimum, never against a running
+//! incumbent, so the decision depends only on the candidate costs —
+//! not on the order the scan happened to visit them (see
+//! [`select_sticky`'s regression test](self)).
 
+use crate::algo::bitmap;
 use crate::algo::incremental::{SupportMode, DEFAULT_CROSSOVER_FRAC};
 use crate::algo::support::{Granularity, Mode, DEFAULT_SEGMENT_LEN};
 use crate::coordinator::job::JobKind;
@@ -63,11 +69,12 @@ pub const TINY_JOB_NNZ: usize = 2048;
 /// [`SupportMode::Incremental`] outright.
 pub const HUB_SKEW: f64 = 8.0;
 
-/// A later candidate replaces the incumbent only when its predicted
-/// cost is below `incumbent × PLAN_SWITCH_MARGIN` — the planner's
-/// stickiness toward simpler plans (see the module docs). Kept tight
-/// enough that the chosen plan is always within 5% of the best-scored
-/// candidate (the plan-ablation CI bound).
+/// A candidate qualifies for selection only when
+/// `candidate × PLAN_SWITCH_MARGIN ≤ best` over all scored candidates —
+/// the planner's stickiness toward simpler plans (see the module docs);
+/// the earliest qualifying candidate wins. Kept tight enough that the
+/// chosen plan is always within 5% of the best-scored candidate (the
+/// plan-ablation CI bound).
 pub const PLAN_SWITCH_MARGIN: f64 = 0.97;
 
 /// Bounds of the auto-tuned segment length (see [`auto_segment_len`]).
@@ -436,7 +443,7 @@ impl Planner {
         let total_est: u64 = fine_est.iter().sum();
         let support = self.pick_support(g, total_est, skew);
         let seg_len = match self.spec.granularity {
-            Some(Granularity::Segment { len }) => len,
+            Some(Granularity::Segment { len }) | Some(Granularity::Hybrid { len }) => len,
             _ => auto_segment_len(&fine_costs),
         };
         let grans: Vec<Granularity> = match self.spec.granularity {
@@ -445,6 +452,7 @@ impl Planner {
                 Granularity::Coarse,
                 Granularity::Fine,
                 Granularity::Segment { len: seg_len },
+                Granularity::Hybrid { len: seg_len },
             ],
         };
         let scheds: Vec<Schedule> = match self.spec.schedule {
@@ -467,14 +475,7 @@ impl Planner {
                 });
             }
         }
-        // sticky argmin: a later candidate must beat the incumbent by
-        // the switch margin (see the module docs)
-        let mut chosen = 0usize;
-        for (i, c) in candidates.iter().enumerate().skip(1) {
-            if c.predicted_ms < candidates[chosen].predicted_ms * PLAN_SWITCH_MARGIN {
-                chosen = i;
-            }
-        }
+        let chosen = select_sticky(&candidates);
         PlanExplanation { k, candidates, chosen, seg_len, skew, tiny: false }
     }
 
@@ -504,6 +505,18 @@ impl Planner {
                             .map(|st| m.segment_task_ns() + st as f64 * m.step_ns)
                             .collect()
                     }
+                    Granularity::Hybrid { len } => {
+                        let (merge, probe) = hybrid_pieces(z, fine_est, len);
+                        merge
+                            .into_iter()
+                            .map(|st| m.segment_task_ns() + st as f64 * m.step_ns)
+                            .chain(
+                                probe
+                                    .into_iter()
+                                    .map(|st| m.bitmap_task_ns() + st as f64 * m.step_ns),
+                            )
+                            .collect()
+                    }
                 }
             }
             PlanDevice::Gpu => {
@@ -520,9 +533,38 @@ impl Planner {
                     Granularity::Segment { len } => split_segments(fine_est, len)
                         .map(|st| st as f64 + m.segment_task_steps())
                         .collect(),
+                    Granularity::Hybrid { len } => {
+                        let (merge, probe) = hybrid_pieces(z, fine_est, len);
+                        merge
+                            .into_iter()
+                            .map(|st| st as f64 + m.segment_task_steps())
+                            .chain(probe.into_iter().map(|st| st as f64 + m.bitmap_task_steps()))
+                            .collect()
+                    }
                 }
             }
         }
+    }
+
+    /// The per-task cost vector (in the scoring device's units — ns for
+    /// CPU, steps for GPU) of one support pass at `gran`, from the
+    /// static bounds alone: exactly what the candidate scoring feeds
+    /// the machine models. Public so the benches (plan ablation, the
+    /// `bitmap` hot-path section) can compare fixed granularities
+    /// through the same shaping the planner uses.
+    pub fn static_task_costs(&self, z: &ZCsr, gran: Granularity) -> Vec<f64> {
+        let live: Vec<u32> = (0..z.n()).map(|i| z.row_live(i).len() as u32).collect();
+        let fine_est = balance::estimate_costs(z, Mode::Fine);
+        self.task_costs(z, &live, &fine_est, gran)
+    }
+
+    /// Predicted cost (ms) of one support pass at a fixed
+    /// (granularity, schedule) point, through the device's machine
+    /// model — the single-candidate form of [`Planner::explain`].
+    pub fn predict_pass_ms(&self, z: &ZCsr, gran: Granularity, schedule: Schedule) -> f64 {
+        let costs = self.static_task_costs(z, gran);
+        let total_est = balance::estimate_costs_sum(z, Mode::Fine);
+        self.score(&costs, total_est, schedule)
     }
 
     /// Predicted cost (ms) of one support pass from its per-task costs
@@ -581,6 +623,27 @@ impl Planner {
     }
 }
 
+/// Order-independent sticky selection: the earliest (simplest — the
+/// grid enumerates granularity-major, simplest first) candidate whose
+/// predicted cost is within [`PLAN_SWITCH_MARGIN`] of the global best
+/// (`cost × PLAN_SWITCH_MARGIN ≤ best`). The previous incumbent-scan
+/// compared each candidate against a *running* incumbent, so the chosen
+/// cost depended on the order the minimum was approached (an
+/// intermediate candidate could reset the margin base and make the scan
+/// skip — or land on — a candidate it otherwise wouldn't); comparing
+/// against the global minimum makes the decision a pure function of the
+/// cost multiset plus the fixed grid order.
+fn select_sticky(candidates: &[PlanCandidate]) -> usize {
+    let best = candidates
+        .iter()
+        .map(|c| c.predicted_ms)
+        .fold(f64::INFINITY, f64::min);
+    candidates
+        .iter()
+        .position(|c| c.predicted_ms * PLAN_SWITCH_MARGIN <= best)
+        .unwrap_or(0)
+}
+
 /// Split each estimated task cost into `ceil(cost/len)` pieces of ≤
 /// `len` steps — the modeled segment decomposition (the static-estimate
 /// analogue of [`Costs::from_trace_rows`]'s segment arm).
@@ -596,6 +659,54 @@ fn split_segments(fine_est: &[u64], len: u32) -> impl Iterator<Item = u64> + '_ 
             }
         })
     })
+}
+
+/// The modeled task pieces of one hybrid support pass at `len`:
+/// `(merge-side pieces, probe-side pieces)`, both in steps.
+///
+/// Slots whose partner row the [`bitmap::BitmapIndex`] selection
+/// encodes contribute tail-side probe chunks — `ceil(tail/len)` pieces
+/// of at most `len` steps, which is *exact* (one uniform probe per tail
+/// entry, [`bitmap::BitmapTask::estimated_steps`]). Every other slot
+/// (merge-represented partner, empty tail, terminator/tombstone) stays
+/// on the merge side and is split with the **same** ≤`len` upper-bound
+/// decomposition the segment candidate uses ([`split_segments`] of the
+/// fine estimates). Keeping the merge side on the segment candidate's
+/// bound convention makes the hybrid-vs-segment comparison measure
+/// exactly the representation switch on the encoded rows, not a change
+/// of accounting slack between candidates.
+fn hybrid_pieces(z: &ZCsr, fine_est: &[u64], len: u32) -> (Vec<u64>, Vec<u64>) {
+    let (index, _) = bitmap::BitmapIndex::build(z, len);
+    let col = z.col();
+    let l = len.max(1) as u64;
+    let mut is_probe = vec![false; z.slots()];
+    let mut probe = Vec::new();
+    for i in 0..z.n() {
+        let (start, _) = z.row_span(i);
+        let li = z.row_live(i).len();
+        for off in 0..li {
+            let tail = (li - off - 1) as u64;
+            if tail == 0 {
+                continue;
+            }
+            let kappa = col[start + off] as usize;
+            if index.row(kappa).is_none() {
+                continue;
+            }
+            is_probe[start + off] = true;
+            let pieces = tail.div_ceil(l);
+            for j in 0..pieces {
+                probe.push(if j + 1 == pieces { tail - j * l } else { l });
+            }
+        }
+    }
+    let merge_est: Vec<u64> = fine_est
+        .iter()
+        .zip(&is_probe)
+        .filter(|&(_, &ip)| !ip)
+        .map(|(&st, _)| st)
+        .collect();
+    (split_segments(&merge_est, len).collect(), probe)
 }
 
 #[cfg(test)]
@@ -716,10 +827,13 @@ mod tests {
                 ex.best_ms()
             );
         }
-        // the comb's clustered hot region defeats static contiguous
-        // blocks outright
+        // at merge granularity the comb's clustered hot region defeats
+        // static contiguous blocks outright (pinned to segment: the
+        // hybrid representation is allowed to flatten the imbalance
+        // itself, in which case a static schedule is no longer wrong)
         let comb = crate::testkit::graphs::hub_divergence_comb(64, 256, 800);
-        let plan = planner.choose(&comb, 3);
+        let seg: PlanSpec = "auto/segment/any".parse().unwrap();
+        let plan = planner.clone().with_spec(seg).choose(&comb, 3);
         assert_ne!(plan.schedule, Schedule::Static, "{plan}");
     }
 
@@ -747,7 +861,10 @@ mod tests {
         let ex = Planner::gpu().explain(&g, 3);
         let plan = ex.plan();
         assert!(
-            matches!(plan.granularity, Granularity::Segment { .. }),
+            matches!(
+                plan.granularity,
+                Granularity::Segment { .. } | Granularity::Hybrid { .. }
+            ),
             "{plan}"
         );
         let fine_best = ex
@@ -765,7 +882,7 @@ mod tests {
         let spec: PlanSpec = "workaware/auto/auto".parse().unwrap();
         let ex = Planner::new(8).with_spec(spec).explain(&g, 3);
         assert!(ex.candidates.iter().all(|c| c.plan.schedule == Schedule::WorkAware));
-        assert_eq!(ex.candidates.len(), 3); // one per granularity
+        assert_eq!(ex.candidates.len(), 4); // one per granularity
         let full: PlanSpec = "static/coarse/full".parse().unwrap();
         let plan = Planner::new(8).with_spec(full).choose(&g, 3);
         assert_eq!(
@@ -824,6 +941,109 @@ mod tests {
         }
         // the grid lookup finds the static-coarse baseline
         assert!(ex.candidate(Schedule::Static, Granularity::Coarse).is_some());
+    }
+
+    #[test]
+    fn sticky_selection_is_order_independent() {
+        let cand = |costs: &[f64]| -> Vec<PlanCandidate> {
+            costs
+                .iter()
+                .map(|&predicted_ms| PlanCandidate {
+                    plan: ExecutionPlan::fixed(
+                        Schedule::Static,
+                        Granularity::Coarse,
+                        SupportMode::Full,
+                    ),
+                    predicted_ms,
+                })
+                .collect()
+        };
+        // regression for the incumbent-scan bug: on these two orderings
+        // of the same cost multiset the old loop chose cost 4.7 for the
+        // first and cost 4.6 for the second (the incumbent drifted to a
+        // different margin base). The order-independent rule picks the
+        // earliest candidate within the margin of the global best
+        // (4.6 / 0.97 ≈ 4.742) — cost 4.7 — in both.
+        let a = cand(&[5.0, 4.7, 4.8, 4.6]);
+        let b = cand(&[5.0, 4.8, 4.7, 4.6]);
+        assert_eq!(a[select_sticky(&a)].predicted_ms, 4.7);
+        assert_eq!(b[select_sticky(&b)].predicted_ms, 4.7);
+        // general contract on a drifting chain: within margin of best,
+        // and no earlier candidate qualifies
+        for costs in [
+            vec![5.0, 4.8, 4.7, 4.6],
+            vec![4.6, 4.7, 4.8, 5.0],
+            vec![10.0, 9.71, 9.42],
+            vec![1.0],
+            vec![2.0, 2.0, 2.0],
+        ] {
+            let c = cand(&costs);
+            let i = select_sticky(&c);
+            let best = costs.iter().copied().fold(f64::INFINITY, f64::min);
+            assert!(costs[i] * PLAN_SWITCH_MARGIN <= best, "{costs:?}");
+            for (j, &cost) in costs.iter().enumerate().take(i) {
+                assert!(cost * PLAN_SWITCH_MARGIN > best, "{costs:?} at {j}");
+            }
+        }
+        // an exact tie keeps the earliest (simplest) candidate
+        let tie = cand(&[2.0, 2.0, 2.0]);
+        assert_eq!(select_sticky(&tie), 0);
+    }
+
+    #[test]
+    fn hybrid_candidate_wins_the_comb_partner_rows() {
+        // the comb's hub is a heavy *partner* row: the segment split
+        // fans every heavy slot into ceil(live(hub)/len) partner-side
+        // tasks, the bitmap representation into ceil(tail/len)
+        // tail-side chunks — a task-count collapse both machine models
+        // must see
+        let g = crate::testkit::graphs::hub_divergence_comb(64, 256, 800);
+        let ex = Planner::gpu().explain(&g, 3);
+        let best = |gran: Granularity| -> f64 {
+            ex.candidates
+                .iter()
+                .filter(|c| c.plan.granularity == gran)
+                .map(|c| c.predicted_ms)
+                .fold(f64::INFINITY, f64::min)
+        };
+        let hybrid = best(Granularity::Hybrid { len: ex.seg_len });
+        assert!(hybrid.is_finite());
+        assert!(
+            hybrid < best(Granularity::Segment { len: ex.seg_len }),
+            "hybrid {} vs segment {}",
+            hybrid,
+            best(Granularity::Segment { len: ex.seg_len })
+        );
+        assert!(hybrid < best(Granularity::Fine), "hybrid {} vs fine {}", hybrid, best(Granularity::Fine));
+        // CPU model, same schedule point: the probe side strictly
+        // shrinks total modeled work, so equal-work binning must win
+        let cpu = Planner::new(48).explain(&g, 3);
+        let at = |gran: Granularity| {
+            cpu.candidate(Schedule::WorkAware, gran).expect("grid point").predicted_ms
+        };
+        assert!(
+            at(Granularity::Hybrid { len: cpu.seg_len })
+                < at(Granularity::Segment { len: cpu.seg_len })
+        );
+    }
+
+    #[test]
+    fn hybrid_candidate_degenerates_to_segment_off_the_hubs() {
+        // a flat graph encodes no rows (every live length is below the
+        // auto threshold), so the hybrid candidate's modeled cost list
+        // must equal the segment candidate's exactly
+        let g = crate::gen::grid::road(800, 1500, 0.05, &mut Rng::new(11));
+        let z = crate::graph::ZCsr::from_csr(&g);
+        let planner = Planner::new(8);
+        let len = MIN_AUTO_SEGMENT_LEN;
+        let seg = planner.static_task_costs(&z, Granularity::Segment { len });
+        let hyb = planner.static_task_costs(&z, Granularity::Hybrid { len });
+        assert_eq!(seg, hyb);
+        for sched in [Schedule::Static, Schedule::WorkAware] {
+            let s = planner.predict_pass_ms(&z, Granularity::Segment { len }, sched);
+            let h = planner.predict_pass_ms(&z, Granularity::Hybrid { len }, sched);
+            assert_eq!(s, h, "{sched}");
+        }
     }
 
     #[test]

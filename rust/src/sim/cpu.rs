@@ -51,6 +51,14 @@ fn task_costs_ns(
             .iter()
             .map(|&st| m.segment_task_ns() + st as f64 * m.step_ns)
             .collect(),
+        // trace replay cannot see which pieces become uniform probes,
+        // so hybrid is charged the conservative segment overhead here;
+        // the planner scores hybrid from its real task enumeration
+        Granularity::Hybrid { .. } => base
+            .per_task
+            .iter()
+            .map(|&st| m.segment_task_ns() + st as f64 * m.step_ns)
+            .collect(),
     }
 }
 
@@ -158,6 +166,9 @@ pub fn frontier_pass_s(
         Granularity::Coarse => m.coarse_task_ns,
         Granularity::Fine => m.fine_task_ns,
         Granularity::Segment { .. } => m.segment_task_ns(),
+        // frontier decrements are merge-walks regardless of the support
+        // pass's representation: charge the segment overhead
+        Granularity::Hybrid { .. } => m.segment_task_ns(),
     };
     let costs: Vec<f64> = base
         .per_task

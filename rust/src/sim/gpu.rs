@@ -90,6 +90,10 @@ fn task_steps(
         Granularity::Coarse => m.coarse_task_steps,
         Granularity::Fine => m.fine_task_steps,
         Granularity::Segment { .. } => m.segment_task_steps(),
+        // trace replay cannot see which pieces become uniform probes,
+        // so hybrid is charged the conservative segment overhead here;
+        // the planner scores hybrid from its real task enumeration
+        Granularity::Hybrid { .. } => m.segment_task_steps(),
     };
     base.per_task.iter().map(|&c| c as f64 + overhead).collect()
 }
@@ -143,6 +147,9 @@ pub fn frontier_kernel(
         Granularity::Coarse => m.coarse_task_steps,
         Granularity::Fine => m.fine_task_steps,
         Granularity::Segment { .. } => m.segment_task_steps(),
+        // frontier decrements are merge-walks regardless of the support
+        // pass's representation: charge the segment overhead
+        Granularity::Hybrid { .. } => m.segment_task_steps(),
     };
     let costs: Vec<f64> = base.per_task.iter().map(|&c| c as f64 + overhead).collect();
     let total_steps: f64 = task_steps.iter().map(|&x| x as f64).sum();

@@ -68,6 +68,16 @@ impl CpuMachine {
     pub fn segment_task_ns(&self) -> f64 {
         self.fine_task_ns * 1.5
     }
+
+    /// Fixed per-bitmap-task overhead: a fine task's resolve plus the
+    /// partner bitmap header load — but **no** in-tail locate search
+    /// (the chunk bounds are precomputed in the task), so it stays at
+    /// the fine-task cost. The probes themselves are word-indexed
+    /// AND + popcount at one step each ([`crate::algo::bitmap`]),
+    /// charged at the ordinary `step_ns` rate.
+    pub fn bitmap_task_ns(&self) -> f64 {
+        self.fine_task_ns
+    }
 }
 
 /// GPU model: NVIDIA Tesla V100 (Volta) — 80 SMs, 4 warp schedulers
@@ -148,6 +158,16 @@ impl GpuMachine {
     /// the same 1.5× rationale on the CPU side).
     pub fn segment_task_steps(&self) -> f64 {
         self.fine_task_steps * 1.5
+    }
+
+    /// Per-bitmap-task overhead in steps: fine-task resolve plus the
+    /// bitmap header load, no locate search (see
+    /// [`CpuMachine::bitmap_task_ns`] for the same rationale). The
+    /// probes are uniform one-step word tests — exactly the cost shape
+    /// the lockstep warp model rewards, since warp duration is the lane
+    /// maximum and uniform lanes waste nothing.
+    pub fn bitmap_task_steps(&self) -> f64 {
+        self.fine_task_steps
     }
 }
 

@@ -1,0 +1,201 @@
+//! Property tests for the hybrid (bitmap + tail-segment) intersection
+//! subsystem and the unified step-accounting contract:
+//!
+//! * every segment kernel returns **at most** its task's
+//!   [`SegTask::estimated_steps`] (setup included — the estimate is a
+//!   true upper bound after the step-accounting fix), and the estimate
+//!   itself is clamped by both the segment and the tail side;
+//! * every bitmap kernel returns **exactly** its task's
+//!   [`BitmapTask::estimated_steps`] (uniform one-step probes);
+//! * hybrid passes produce byte-identical supports — and hybrid truss
+//!   runs byte-identical trusses — to the plain merge path, over the
+//!   testkit families, the suite generator families, all schedules and
+//!   arbitrary segment lengths.
+
+use ktruss::algo::bitmap::{
+    compute_supports_hybrid_seq, eager_update_bitmap_atomic, eager_update_bitmap_seq, hybrid_tasks,
+};
+use ktruss::algo::ktruss::ktruss;
+use ktruss::algo::support::{
+    compute_supports_seq, eager_update_segment_atomic, eager_update_segment_seq, segment_tasks,
+    Granularity, Mode,
+};
+use ktruss::gen::suite;
+use ktruss::graph::ZCsr;
+use ktruss::par::{compute_supports_gran, ktruss_par_gran, Pool, Schedule, ALL_SCHEDULES};
+use ktruss::testkit::graphs::arbitrary_graph;
+use ktruss::testkit::{forall, Config};
+use std::sync::atomic::{AtomicU32, Ordering};
+
+/// One representative per suite generator family (same set the balance
+/// property tests pin).
+const SUITE_REPRESENTATIVES: [&str; 6] = [
+    "ca-GrQc",        // Collab
+    "p2p-Gnutella08", // P2p
+    "as20000102",     // AutonomousSystem
+    "email-Enron",    // Social
+    "amazon0302",     // Copurchase
+    "roadNet-PA",     // Road
+];
+
+#[test]
+fn prop_segment_kernel_steps_bounded_by_estimate() {
+    // the step-accounting contract of the satellite fix: the kernel
+    // counts its window-locate setup, the estimate counts it too, and
+    // the estimate clamps by BOTH the segment length and the tail
+    // length — so executed ≤ estimated on every task, every family
+    forall(Config::cases(12), arbitrary_graph, |g| {
+        let z = ZCsr::from_csr(g);
+        let col = z.col();
+        for len in [1u32, 2, 5, 33] {
+            let tasks = segment_tasks(&z, len);
+            let mut s = vec![0u32; z.slots()];
+            let s_atomic: Vec<AtomicU32> = (0..z.slots()).map(|_| AtomicU32::new(0)).collect();
+            for t in &tasks {
+                let est = t.estimated_steps();
+                let seg_len = (t.hi - t.lo) as u64;
+                if est != seg_len.min(t.tail_len()) + 1 {
+                    return Err(format!("len={len} {t:?}: estimate clamp broken"));
+                }
+                let steps = eager_update_segment_seq(col, &mut s, t);
+                if steps > est {
+                    return Err(format!(
+                        "len={len} {t:?}: executed {steps} > estimated {est}"
+                    ));
+                }
+                if steps == 0 {
+                    return Err(format!("len={len} {t:?}: setup step not counted"));
+                }
+                // the atomic kernel shares the probe core: identical count
+                let atomic_steps = eager_update_segment_atomic(col, &s_atomic, t);
+                if atomic_steps != steps {
+                    return Err(format!(
+                        "len={len} {t:?}: atomic {atomic_steps} != seq {steps}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_bitmap_kernel_steps_exact() {
+    // bitmap probes are uniform one-step word tests: the kernels must
+    // return exactly the chunk length, never an approximation
+    forall(Config::cases(12), arbitrary_graph, |g| {
+        let z = ZCsr::from_csr(g);
+        let col = z.col();
+        for len in [1u32, 4, 32] {
+            let ht = hybrid_tasks(&z, len);
+            let mut s = vec![0u32; z.slots()];
+            let s_atomic: Vec<AtomicU32> = (0..z.slots()).map(|_| AtomicU32::new(0)).collect();
+            for t in &ht.probe {
+                let kappa = col[t.p as usize] as usize;
+                let bm = ht.index.row(kappa).expect("probe task against unencoded row");
+                let est = t.estimated_steps();
+                if eager_update_bitmap_seq(col, &mut s, bm, t) != est {
+                    return Err(format!("len={len} {t:?}: seq steps not exact"));
+                }
+                if eager_update_bitmap_atomic(col, &s_atomic, bm, t) != est {
+                    return Err(format!("len={len} {t:?}: atomic steps not exact"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_hybrid_supports_match_merge_on_arbitrary_graphs() {
+    forall(Config::cases(12), arbitrary_graph, |g| {
+        let z = ZCsr::from_csr(g);
+        let mut want = Vec::new();
+        compute_supports_seq(&z, &mut want);
+        let pool = Pool::new(4);
+        for len in [1u32, 3, 32] {
+            let mut seq = Vec::new();
+            compute_supports_hybrid_seq(&z, len, &mut seq);
+            if seq != want {
+                return Err(format!("len={len}: sequential hybrid supports diverge"));
+            }
+            for sched in ALL_SCHEDULES {
+                let got = compute_supports_gran(&z, &pool, Granularity::Hybrid { len }, sched);
+                if got != want {
+                    return Err(format!("len={len} {sched:?}: hybrid supports diverge"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_hybrid_supports_on_every_suite_family() {
+    let pool = Pool::new(4);
+    for name in SUITE_REPRESENTATIVES {
+        let spec = suite::by_name(name).unwrap();
+        let g = suite::generate(spec, 0.03);
+        let z = ZCsr::from_csr(&g);
+        let mut want = Vec::new();
+        compute_supports_seq(&z, &mut want);
+        for len in [2u32, 64] {
+            for sched in [Schedule::WorkAware, Schedule::Stealing] {
+                let got = compute_supports_gran(&z, &pool, Granularity::Hybrid { len }, sched);
+                assert_eq!(got, want, "{name} len={len} {sched:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_hybrid_truss_matches_merge_on_every_suite_family() {
+    // end-to-end: the representation choice may change only how each
+    // intersection is computed, never a single support — so every k
+    // level converges to the identical truss in the identical number of
+    // iterations
+    let pool = Pool::new(4);
+    for name in SUITE_REPRESENTATIVES {
+        let spec = suite::by_name(name).unwrap();
+        let g = suite::generate(spec, 0.03);
+        for k in [3u32, 4, 8] {
+            let want = ktruss(&g, k, Mode::Fine);
+            for (len, sched) in [(2u32, Schedule::Static), (64, Schedule::WorkAware)] {
+                let got = ktruss_par_gran(&g, k, &pool, Granularity::Hybrid { len }, sched);
+                assert_eq!(got.truss, want.truss, "{name} k={k} len={len} {sched:?}");
+                assert_eq!(
+                    got.iterations, want.iterations,
+                    "{name} k={k} len={len} {sched:?}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_hybrid_pass_step_totals_are_schedule_invariant() {
+    // the pass's executed-step total is a property of the task list,
+    // not of who ran which task: every schedule reports the sequential
+    // hybrid total exactly
+    forall(Config::cases(8), arbitrary_graph, |g| {
+        let z = ZCsr::from_csr(g);
+        let pool = Pool::new(4);
+        for len in [2u32, 16] {
+            let mut s_seq = Vec::new();
+            let want = compute_supports_hybrid_seq(&z, len, &mut s_seq);
+            for sched in ALL_SCHEDULES {
+                let s: Vec<AtomicU32> = (0..z.slots()).map(|_| AtomicU32::new(0)).collect();
+                let total =
+                    ktruss::par::compute_supports_hybrid(&z, &pool, len, sched, &s);
+                if total != want {
+                    return Err(format!("len={len} {sched:?}: total {total} != {want}"));
+                }
+                let got: Vec<u32> = s.iter().map(|x| x.load(Ordering::Relaxed)).collect();
+                if got != s_seq {
+                    return Err(format!("len={len} {sched:?}: supports diverge"));
+                }
+            }
+        }
+        Ok(())
+    });
+}

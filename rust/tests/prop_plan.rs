@@ -10,7 +10,7 @@ use ktruss::algo::ktruss::ktruss_mode;
 use ktruss::algo::support::{Granularity, Mode};
 use ktruss::graph::Csr;
 use ktruss::par::{ktruss_par_plan, Pool, Schedule};
-use ktruss::plan::{ExecutionPlan, Planner};
+use ktruss::plan::{ExecutionPlan, PlanSpec, Planner};
 use ktruss::util::Rng;
 
 /// The candidate grid the planner enumerates (Dynamic is exercised via
@@ -23,6 +23,7 @@ fn plan_grid() -> Vec<ExecutionPlan> {
             Granularity::Coarse,
             Granularity::Fine,
             Granularity::Segment { len: 8 },
+            Granularity::Hybrid { len: 8 },
         ] {
             for support in [SupportMode::Full, SupportMode::Incremental, SupportMode::Auto] {
                 out.push(ExecutionPlan::fixed(sched, gran, support));
@@ -125,8 +126,9 @@ fn planner_chosen_plans_are_correct_on_every_family() {
 
 #[test]
 fn planner_shape_matches_the_paper_story() {
-    // the satellite acceptance shapes, through the public API: segment
-    // or fine granularity on the hub fixtures, coarse on a flat grid
+    // the satellite acceptance shapes, through the public API: fine,
+    // segment or hybrid granularity on the hub fixtures, coarse on a
+    // flat grid
     let planner = Planner::new(48);
     for (name, g) in [
         (
@@ -139,13 +141,18 @@ fn planner_shape_matches_the_paper_story() {
         assert!(
             matches!(
                 plan.granularity,
-                Granularity::Fine | Granularity::Segment { .. }
+                Granularity::Fine | Granularity::Segment { .. } | Granularity::Hybrid { .. }
             ),
             "{name}: {plan}"
         );
     }
+    // pinned to merge-segment granularity the comb's clustered hot
+    // region still demands a cost-aware schedule (the free grid may
+    // instead pick hybrid, whose uniform probe chunks flatten the
+    // imbalance at the representation level)
     let comb = ktruss::testkit::graphs::hub_divergence_comb(64, 256, 800);
-    let plan = planner.choose(&comb, 3);
+    let seg: PlanSpec = "auto/segment/any".parse().unwrap();
+    let plan = planner.clone().with_spec(seg).choose(&comb, 3);
     assert_ne!(plan.schedule, Schedule::Static, "comb: {plan}");
     let mut rng = Rng::new(6);
     let flat = ktruss::gen::grid::road(3000, 5800, 0.05, &mut rng);
