@@ -26,6 +26,14 @@ pub struct IterationStat {
     /// [`run_to_convergence_mode`]) — supports inherited unchanged from
     /// the previous level with zero pass work (`support_steps == 0`).
     pub incremental: bool,
+    /// Measured wall time of the pass that produced this iteration's
+    /// supports, in milliseconds (0 for warm-inherited iterations).
+    pub wall_ms: f64,
+    /// Tasks offered to the worker pool for the pass (pre-split:
+    /// rows for coarse, live edges for the finer granularities,
+    /// frontier edges for incremental updates; 0 = sequential or
+    /// warm-inherited).
+    pub tasks: usize,
 }
 
 /// Result of a K-truss computation.
@@ -155,15 +163,20 @@ pub fn run_to_convergence_plan(
     // steps and provenance of the pass that produced the *current* s
     let mut pass_steps: u64;
     let mut pass_incremental: bool;
+    // wall time of that pass (span telemetry; 0 when no pass ran)
+    let mut pass_wall_ms: f64;
     // measured steps of the most recent full pass (crossover proxy)
     let mut last_full_steps: u64;
     if use_inc && warm && s.len() == z.slots() {
         // supports inherited from a previous k-level: no pass ran
         pass_steps = 0;
         pass_incremental = true;
+        pass_wall_ms = 0.0;
         last_full_steps = incremental::full_pass_estimate(z);
     } else {
+        let t = crate::util::Timer::start();
         pass_steps = compute_supports_seq(z, s);
+        pass_wall_ms = t.elapsed_ms();
         pass_incremental = false;
         last_full_steps = pass_steps;
     }
@@ -178,6 +191,8 @@ pub fn run_to_convergence_plan(
             removed: f.len(),
             support_steps: pass_steps,
             incremental: pass_incremental,
+            wall_ms: pass_wall_ms,
+            tasks: 0, // sequential driver: no pool tasks
         });
         if f.is_empty() {
             break; // isUnchanged(M): s stays valid for the survivors
@@ -193,7 +208,9 @@ pub fn run_to_convergence_plan(
         );
         if go_incremental {
             let nbrs = in_nbrs.as_ref().expect("incremental mode builds the index");
+            let t = crate::util::Timer::start();
             pass_steps = incremental::decrement_frontier_seq(z, s, &f, nbrs);
+            pass_wall_ms = t.elapsed_ms();
             pass_incremental = true;
             live = incremental::compact_preserving(z, s, &f.dying).remaining;
         } else {
@@ -202,8 +219,11 @@ pub fn run_to_convergence_plan(
             if live == 0 {
                 pass_steps = 0;
                 pass_incremental = false;
+                pass_wall_ms = 0.0;
             } else {
+                let t = crate::util::Timer::start();
                 pass_steps = compute_supports_seq(z, s);
+                pass_wall_ms = t.elapsed_ms();
                 pass_incremental = false;
                 last_full_steps = pass_steps;
             }

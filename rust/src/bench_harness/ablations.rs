@@ -112,7 +112,7 @@ pub fn ablate_schedule(g: &Csr) -> ScheduleAblation {
     let tr = trace_supports(&z, &mut s);
     let m = CpuMachine::skylake_8160(48);
     let pass = |mode: Mode, sched: Schedule| {
-        crate::sim::cpu::support_pass_s(&m, &tr, z.row_ptr(), mode.into(), sched)
+        crate::sim::cpu::support_pass_s(&m, &tr, z.row_ptr(), z.col(), mode.into(), sched)
     };
     ScheduleAblation {
         coarse_static_s: pass(Mode::Coarse, Schedule::Static),
@@ -141,7 +141,8 @@ pub fn ablate_ultrafine(g: &Csr, segment: u32) -> UltraFineAblation {
     let mut s = Vec::new();
     let tr = trace_supports(&z, &mut s);
     let m = GpuMachine::v100();
-    let fine_s = crate::sim::gpu::support_kernel(&m, &tr, z.row_ptr(), Mode::Fine).total_s();
+    let fine_s =
+        crate::sim::gpu::support_kernel(&m, &tr, z.row_ptr(), z.col(), Mode::Fine).total_s();
     // split every fine task into ceil(c/segment) subtasks; each carries
     // the per-task overhead plus the bookkeeping the paper warns about
     // (locating the segment within the row costs ~an extra task setup)
@@ -183,7 +184,14 @@ pub fn ablate_reorder(g: &Csr) -> ReorderAblation {
         let z = ZCsr::from_csr(g);
         let mut s = Vec::new();
         let tr = trace_supports(&z, &mut s);
-        crate::sim::cpu::support_pass_s(&m, &tr, z.row_ptr(), mode.into(), Schedule::Static)
+        crate::sim::cpu::support_pass_s(
+            &m,
+            &tr,
+            z.row_ptr(),
+            z.col(),
+            mode.into(),
+            Schedule::Static,
+        )
     };
     let sorted = crate::graph::builder::relabel_by_degree(g);
     ReorderAblation {

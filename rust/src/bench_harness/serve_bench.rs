@@ -80,6 +80,9 @@ pub struct ShardRun {
     pub miss_rate: f64,
     /// Jobs executed by a shard other than the one they were packed to.
     pub stolen: u64,
+    /// Prometheus-style text exposition of the run's serving counters
+    /// and plan-drift gauges, captured just before executor shutdown.
+    pub exposition: String,
 }
 
 /// Full sweep report.
@@ -147,6 +150,10 @@ impl ThroughputReport {
             out.push_str(&format!(
                 "# best multi-shard throughput vs single-pool dispatcher: {s:.2}x\n"
             ));
+        }
+        if let Some(r) = self.runs.last() {
+            out.push_str(&format!("\n# metrics exposition ({} shard(s), last run):\n", r.shards));
+            out.push_str(&r.exposition);
         }
         out
     }
@@ -226,6 +233,7 @@ fn run_one(cfg: &ThroughputConfig, jobs: &[JobSpec], shards: usize) -> Result<Sh
     let p99_ms = ex.metrics.quantile(0.99).unwrap_or(0.0);
     let misses = ex.metrics.deadline_misses();
     let stolen = ex.metrics.steals();
+    let exposition = crate::obs::prom::render(&ex.metrics, Some(&ex.obs.drift));
     ex.shutdown();
     Ok(ShardRun {
         shards,
@@ -236,6 +244,7 @@ fn run_one(cfg: &ThroughputConfig, jobs: &[JobSpec], shards: usize) -> Result<Sh
         p99_ms,
         miss_rate: if deadline_jobs == 0 { 0.0 } else { misses as f64 / deadline_jobs as f64 },
         stolen,
+        exposition,
     })
 }
 
@@ -296,7 +305,11 @@ mod tests {
         let text = report.render();
         assert!(text.contains("jobs/s"));
         assert!(text.contains("p99_ms"));
+        assert!(text.contains("ktruss_jobs_submitted_total"));
         assert!(report.sharding_speedup().is_some());
+        for r in &report.runs {
+            assert!(r.exposition.contains("ktruss_jobs_completed_total"));
+        }
     }
 
     #[test]

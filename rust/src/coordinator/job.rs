@@ -108,6 +108,13 @@ pub struct JobResult {
     pub support: Option<SupportMode>,
     /// Execution wall time (excluding queueing), ms.
     pub wall_ms: f64,
+    /// Per-iteration pass spans of the sparse truss convergence loop
+    /// (exact measured steps + wall per pass; empty for dense
+    /// executions and for kinds whose driver reports no per-pass
+    /// stats). Sum of the spans' `steps` equals
+    /// [`KtrussResult::total_support_steps`](crate::algo::ktruss::KtrussResult::total_support_steps)
+    /// for fixed-k truss jobs.
+    pub passes: Vec<crate::obs::span::PassSpan>,
     /// Ok(output) or the error message (no anyhow across channels).
     pub output: Result<JobOutput, String>,
 }

@@ -276,6 +276,111 @@ mod tests {
     }
 
     #[test]
+    fn concurrent_record_done_loses_nothing() {
+        // 8 threads × 500 completions hammering the shared histogram:
+        // every counter is Relaxed-atomic, so totals must be exact
+        let m = std::sync::Arc::new(Metrics::new());
+        let threads = 8u64;
+        let per_thread = 500u64;
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                let m = std::sync::Arc::clone(&m);
+                std::thread::spawn(move || {
+                    for i in 0..per_thread {
+                        m.record_submit();
+                        let engine =
+                            if (t + i) % 2 == 0 { Engine::SparseCpu } else { Engine::DenseXla };
+                        // spread latencies across several log₂ buckets
+                        let wall_ms = 0.001 * (1 << (i % 12)) as f64;
+                        m.record_done(engine, wall_ms, i % 10 == 0);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let total = threads * per_thread;
+        assert_eq!(m.submitted.load(Ordering::Relaxed), total);
+        let (done, failed, mean) = m.summary();
+        assert_eq!(done, total);
+        assert_eq!(failed, threads * per_thread.div_ceil(10));
+        assert!(mean > 0.0);
+        let sparse = m.sparse_jobs.load(Ordering::Relaxed);
+        let dense = m.dense_jobs.load(Ordering::Relaxed);
+        assert_eq!(sparse + dense, total);
+        // histogram mass equals completions: no sample vanished
+        let hist_total: u64 = m.latency_histogram().iter().map(|&(_, c)| c).sum();
+        assert_eq!(hist_total, total);
+    }
+
+    #[test]
+    fn quantiles_are_monotone_in_q() {
+        let m = Metrics::new();
+        // samples straddling many bucket boundaries, including repeats
+        for us in [1u64, 2, 3, 8, 9, 64, 65, 1000, 1000, 65_000, 2_000_000] {
+            m.record_done(Engine::SparseCpu, us as f64 / 1e3, true);
+        }
+        let qs = [0.0, 0.1, 0.25, 0.5, 0.75, 0.9, 0.95, 0.99, 1.0];
+        let mut prev = 0.0f64;
+        for q in qs {
+            let v = m.quantile(q).unwrap();
+            assert!(v >= prev, "quantile({q}) = {v} < quantile(prev) = {prev}");
+            prev = v;
+        }
+        // extremes resolve to the floors of the min/max sample buckets
+        assert_eq!(m.quantile(0.0), Some(0.001));
+        assert_eq!(m.quantile(1.0), Some((1u64 << 20) as f64 / 1e3));
+    }
+
+    #[test]
+    fn shard_gauges_consistent_under_races() {
+        // each thread owns one shard id but all hammer the same Metrics
+        // block; per-shard counters must not bleed into each other
+        let shards = 4usize;
+        let m = std::sync::Arc::new(Metrics::with_shards(shards));
+        let per_shard = 300u64;
+        let handles: Vec<_> = (0..shards)
+            .map(|sh| {
+                let m = std::sync::Arc::clone(&m);
+                std::thread::spawn(move || {
+                    for i in 0..per_shard {
+                        m.record_shard_done(sh);
+                        if i % 3 == 0 {
+                            m.record_steal(sh);
+                        }
+                        if i % 7 == 0 {
+                            m.record_deadline_miss(sh);
+                        }
+                        m.set_queue_depth(sh, sh as u64 * 100 + i);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        for (sh, s) in m.shards().iter().enumerate() {
+            assert_eq!(s.jobs.load(Ordering::Relaxed), per_shard, "shard {sh} jobs");
+            assert_eq!(
+                s.stolen.load(Ordering::Relaxed),
+                per_shard.div_ceil(3),
+                "shard {sh} steals"
+            );
+            assert_eq!(
+                s.deadline_miss.load(Ordering::Relaxed),
+                per_shard.div_ceil(7),
+                "shard {sh} misses"
+            );
+            // the gauge holds the owner's final store, not another
+            // shard's value
+            assert_eq!(s.queue_depth.load(Ordering::Relaxed), sh as u64 * 100 + per_shard - 1);
+        }
+        assert_eq!(m.steals(), shards as u64 * per_shard.div_ceil(3));
+        assert_eq!(m.deadline_misses(), shards as u64 * per_shard.div_ceil(7));
+    }
+
+    #[test]
     fn shard_counters_roundtrip() {
         let m = Metrics::with_shards(2);
         assert_eq!(m.shards().len(), 2);

@@ -74,7 +74,7 @@ impl Worker {
         let sparse_plan = |w: &Worker| plan.or_else(|| w.pick_plan(req));
         let (engine_used, used_plan, output) = match engine {
             Engine::DenseXla => match self.execute_dense(req) {
-                Ok(out) => (Engine::DenseXla, None, Ok(out)),
+                Ok(out) => (Engine::DenseXla, None, Ok((out, Vec::new()))),
                 // dense failure (missing artifacts, size) falls back
                 Err(_) => {
                     let p = sparse_plan(self);
@@ -88,6 +88,10 @@ impl Worker {
                 (Engine::SparseCpu, p, out)
             }
         };
+        let (output, passes) = match output {
+            Ok((out, passes)) => (Ok(out), passes),
+            Err(e) => (Err(format!("{e:#}")), Vec::new()),
+        };
         JobResult {
             id: req.id,
             engine: engine_used,
@@ -95,7 +99,8 @@ impl Worker {
             schedule: used_plan.map(|p| p.schedule),
             support: used_plan.map(|p| p.support),
             wall_ms: t.elapsed_ms(),
-            output: output.map_err(|e| format!("{e:#}")),
+            passes,
+            output,
         }
     }
 
@@ -103,7 +108,7 @@ impl Worker {
         &self,
         req: &JobRequest,
         plan: Option<ExecutionPlan>,
-    ) -> anyhow::Result<JobOutput> {
+    ) -> anyhow::Result<(JobOutput, Vec<crate::obs::span::PassSpan>)> {
         Ok(match req.kind {
             JobKind::Ktruss { k, mode } => {
                 // truss jobs always carry a plan by construction; the
@@ -116,23 +121,28 @@ impl Worker {
                     )
                 });
                 let r = ktruss_par_plan(&req.graph, k, &self.pool, &plan);
-                JobOutput::Ktruss {
-                    truss_edges: r.truss.nnz(),
-                    iterations: r.iterations,
-                    edges: r.truss.edges().collect(),
-                }
+                let passes = crate::obs::span::passes_from_stats(&r.stats);
+                (
+                    JobOutput::Ktruss {
+                        truss_edges: r.truss.nnz(),
+                        iterations: r.iterations,
+                        edges: r.truss.edges().collect(),
+                    },
+                    passes,
+                )
             }
             JobKind::Kmax => {
                 let r = kmax::kmax(&req.graph);
-                JobOutput::Kmax { kmax: r.kmax, truss_edges: r.truss.nnz() }
+                (JobOutput::Kmax { kmax: r.kmax, truss_edges: r.truss.nnz() }, Vec::new())
             }
             JobKind::Decompose => {
                 let d = decompose::decompose(&req.graph);
-                JobOutput::Decompose { kmax: d.kmax, histogram: d.histogram() }
+                (JobOutput::Decompose { kmax: d.kmax, histogram: d.histogram() }, Vec::new())
             }
-            JobKind::Triangles => {
-                JobOutput::Triangles { count: triangle::count_triangles(&req.graph) }
-            }
+            JobKind::Triangles => (
+                JobOutput::Triangles { count: triangle::count_triangles(&req.graph) },
+                Vec::new(),
+            ),
         })
     }
 

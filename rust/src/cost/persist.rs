@@ -9,16 +9,26 @@
 //! the job-level analogue of feeding `cost::replay` traces back into
 //! the work-aware binner.
 //!
-//! Format: line-oriented TSV (`kind n m est_steps wall_ms`), `#`-prefix
-//! comments. Hand-rolled because the offline crate set has no serde.
+//! Format: line-oriented TSV
+//! (`kind n m est_steps wall_ms schedule granularity support`),
+//! `#`-prefix comments. The three plan-provenance columns record the
+//! executed plan axes (`-` when the job ran unplanned, and for records
+//! written before the columns existed — the loader accepts the legacy
+//! 5-field rows). Hand-rolled because the offline crate set has no
+//! serde.
 
 use anyhow::{Context, Result};
 use std::path::Path;
 
+/// The provenance placeholder for an axis the record does not carry
+/// (unplanned jobs, legacy records).
+pub const NO_PROVENANCE: &str = "-";
+
 /// One measured execution of a served job.
 #[derive(Clone, Debug, PartialEq)]
 pub struct TraceRecord {
-    /// Job kind label (`ktruss`, `kmax`, `decompose`, `triangles`).
+    /// Job kind label (`ktruss`, `kmax`, `decompose`, `triangles`,
+    /// optionally suffixed `+<support>` by the serving calibration).
     pub kind: String,
     /// Vertices of the job's graph.
     pub n: usize,
@@ -28,23 +38,63 @@ pub struct TraceRecord {
     pub est_steps: u64,
     /// Measured execution wall time (excluding queueing).
     pub wall_ms: f64,
+    /// Executed schedule axis ([`NO_PROVENANCE`] when unplanned).
+    pub schedule: String,
+    /// Executed granularity axis ([`NO_PROVENANCE`] when unplanned).
+    pub granularity: String,
+    /// Executed support-mode axis ([`NO_PROVENANCE`] when unplanned).
+    pub support: String,
+}
+
+impl TraceRecord {
+    /// A record without plan provenance (every axis
+    /// [`NO_PROVENANCE`]) — what non-truss kinds and legacy rows carry.
+    pub fn unplanned(
+        kind: String,
+        n: usize,
+        m: usize,
+        est_steps: u64,
+        wall_ms: f64,
+    ) -> TraceRecord {
+        TraceRecord {
+            kind,
+            n,
+            m,
+            est_steps,
+            wall_ms,
+            schedule: NO_PROVENANCE.to_string(),
+            granularity: NO_PROVENANCE.to_string(),
+            support: NO_PROVENANCE.to_string(),
+        }
+    }
+
+    /// Whether the record carries any executed plan axis.
+    pub fn has_provenance(&self) -> bool {
+        self.schedule != NO_PROVENANCE
+            || self.granularity != NO_PROVENANCE
+            || self.support != NO_PROVENANCE
+    }
 }
 
 /// Write `records` to `path` (atomically enough for calibration data:
 /// full rewrite, no partial appends).
 pub fn save(path: &Path, records: &[TraceRecord]) -> Result<()> {
-    let mut out = String::from("# ktruss serve calibration: kind n m est_steps wall_ms\n");
+    let mut out = String::from(
+        "# ktruss serve calibration: kind n m est_steps wall_ms schedule granularity support\n",
+    );
     for r in records {
         out.push_str(&format!(
-            "{}\t{}\t{}\t{}\t{:.6}\n",
-            r.kind, r.n, r.m, r.est_steps, r.wall_ms
+            "{}\t{}\t{}\t{}\t{:.6}\t{}\t{}\t{}\n",
+            r.kind, r.n, r.m, r.est_steps, r.wall_ms, r.schedule, r.granularity, r.support
         ));
     }
     std::fs::write(path, out).with_context(|| format!("write trace file {}", path.display()))
 }
 
 /// Load records from `path`. Unparseable lines are an error (the file
-/// is machine-written); comment and blank lines are skipped.
+/// is machine-written); comment and blank lines are skipped. Accepts
+/// both the current 8-field rows and the legacy 5-field rows (which
+/// load with [`NO_PROVENANCE`] plan axes).
 pub fn load(path: &Path) -> Result<Vec<TraceRecord>> {
     let text = std::fs::read_to_string(path)
         .with_context(|| format!("read trace file {}", path.display()))?;
@@ -55,21 +105,27 @@ pub fn load(path: &Path) -> Result<Vec<TraceRecord>> {
             continue;
         }
         let fields: Vec<&str> = line.split_whitespace().collect();
-        if fields.len() != 5 {
+        if fields.len() != 5 && fields.len() != 8 {
             anyhow::bail!(
-                "{}:{}: expected 5 fields, got {}",
+                "{}:{}: expected 5 (legacy) or 8 fields, got {}",
                 path.display(),
                 lineno + 1,
                 fields.len()
             );
         }
         let at = |what: &str| format!("{}:{}: bad {what}", path.display(), lineno + 1);
+        let prov = |i: usize| {
+            fields.get(i).map(|s| s.to_string()).unwrap_or_else(|| NO_PROVENANCE.to_string())
+        };
         let rec = TraceRecord {
             kind: fields[0].to_string(),
             n: fields[1].parse().with_context(|| at("n"))?,
             m: fields[2].parse().with_context(|| at("m"))?,
             est_steps: fields[3].parse().with_context(|| at("est_steps"))?,
             wall_ms: fields[4].parse().with_context(|| at("wall_ms"))?,
+            schedule: prov(5),
+            granularity: prov(6),
+            support: prov(7),
         };
         out.push(rec);
     }
@@ -87,25 +143,43 @@ mod tests {
     #[test]
     fn save_load_roundtrip() {
         let path = tmp("ktruss-persist-roundtrip.tsv");
-        let records = vec![
-            TraceRecord { kind: "ktruss".into(), n: 100, m: 400, est_steps: 9000, wall_ms: 1.25 },
-            TraceRecord { kind: "kmax".into(), n: 50, m: 80, est_steps: 700, wall_ms: 0.5 },
-        ];
+        let mut planned = TraceRecord::unplanned("ktruss+full".into(), 100, 400, 9000, 1.25);
+        planned.schedule = "dynamic".into();
+        planned.granularity = "hybrid".into();
+        planned.support = "full".into();
+        let records =
+            vec![planned, TraceRecord::unplanned("kmax".into(), 50, 80, 700, 0.5)];
         save(&path, &records).unwrap();
         let back = load(&path).unwrap();
         assert_eq!(back, records);
+        assert!(back[0].has_provenance());
+        assert!(!back[1].has_provenance());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn load_accepts_legacy_five_field_rows() {
+        let path = tmp("ktruss-persist-legacy.tsv");
+        std::fs::write(&path, "# old header\nktruss\t10\t20\t30\t0.5\n").unwrap();
+        let recs = load(&path).unwrap();
+        assert_eq!(recs.len(), 1);
+        assert_eq!(recs[0], TraceRecord::unplanned("ktruss".into(), 10, 20, 30, 0.5));
         std::fs::remove_file(&path).unwrap();
     }
 
     #[test]
     fn load_skips_comments_and_rejects_garbage() {
         let path = tmp("ktruss-persist-garbage.tsv");
-        std::fs::write(&path, "# header\n\nktruss\t10\t20\t30\t0.5\n").unwrap();
+        std::fs::write(&path, "# header\n\nktruss\t10\t20\t30\t0.5\tdynamic\tfine\tfull\n")
+            .unwrap();
         let recs = load(&path).unwrap();
         assert_eq!(recs.len(), 1);
         assert_eq!(recs[0].est_steps, 30);
+        assert_eq!(recs[0].granularity, "fine");
 
         std::fs::write(&path, "ktruss\t10\t20\n").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::write(&path, "ktruss\t10\t20\t30\t0.5\tdynamic\tfine\n").unwrap();
         assert!(load(&path).is_err());
         std::fs::write(&path, "ktruss\tx\t20\t30\t0.5\n").unwrap();
         assert!(load(&path).is_err());

@@ -26,6 +26,10 @@ pub struct IterObservation<'a> {
     pub trace: &'a SupportTrace,
     /// Row layout at the time of the pass (terminator slots included).
     pub row_ptr: &'a [u32],
+    /// Column array at the time of the pass (0 = terminator slot) —
+    /// what the hybrid pricing split reads to decide which partner rows
+    /// are bitmap-encoded ([`crate::par::balance::hybrid_trace_pieces`]).
+    pub col: &'a [u32],
     /// Slots in the working array.
     pub slots: usize,
     /// Vertices.
@@ -152,6 +156,7 @@ pub fn replay_ktruss_mode(
                 live_edges: live,
                 trace: &trace,
                 row_ptr: z.row_ptr(),
+                col: z.col(),
                 slots: z.slots(),
                 n: z.n(),
                 removed,
@@ -217,6 +222,9 @@ fn replay_loop(
         live_per_row: Vec::new(),
         total_steps: 0,
     };
+    // the observer fires after the prune has compacted the columns, so
+    // the pass-time column array is snapshotted into a reused buffer
+    let mut col_snap: Vec<u32> = Vec::new();
     // live-edge counter maintained from the prune outcomes (one initial
     // O(slots) scan per convergence loop, no per-round rescan)
     let mut live = z.live_edges();
@@ -225,12 +233,15 @@ fn replay_loop(
             break;
         }
         super::trace::trace_supports_into(z, s, &mut trace);
+        col_snap.clear();
+        col_snap.extend_from_slice(z.col());
         let out = prune(z, s, k);
         obs(&IterObservation {
             iter: iter_base + iters,
             live_edges: live,
             trace: &trace,
             row_ptr: z.row_ptr(),
+            col: &col_snap,
             slots: trace.fine_steps.len(),
             n: z.n(),
             removed: out.removed,
@@ -335,6 +346,7 @@ mod tests {
             assert_eq!(o.row_ptr.len(), o.n + 1);
             assert_eq!(*o.row_ptr.last().unwrap() as usize, o.slots);
             assert_eq!(o.trace.fine_steps.len(), o.slots);
+            assert_eq!(o.col.len(), o.slots);
         });
     }
 }

@@ -42,6 +42,7 @@ pub mod coordinator;
 pub mod cost;
 pub mod gen;
 pub mod graph;
+pub mod obs;
 pub mod par;
 pub mod plan;
 pub mod runtime;

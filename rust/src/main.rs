@@ -10,6 +10,7 @@
 //!              the GPU schedule sweep (gpu-sched), or the serving throughput
 //!              workload (serve)
 //!   serve      start the sharded executor and run a mixed-priority job stream
+//!   metrics    Prometheus-style exposition snapshot after a short demo stream
 //!   plan       print the planner's per-candidate predicted costs and the
 //!              chosen ExecutionPlan ("explain" mode)
 //!   sim        estimate one graph on the calibrated machine models across the
@@ -61,6 +62,7 @@ fn main() {
         "suite" => cmd_suite(&args),
         "bench" => cmd_bench(&args),
         "serve" => cmd_serve(&args),
+        "metrics" => cmd_metrics(&args),
         "plan" => cmd_plan(&args),
         "sim" => cmd_sim(&args),
         "calibrate" => cmd_calibrate(&args),
@@ -88,6 +90,7 @@ fn print_help() {
                       [--schedule static|dynamic[:chunk]|workaware|stealing]\n\
                       [--support-mode full|incremental|auto]\n\
                       [--shards N] [--priority high|normal|low] [--deadline-ms D]\n\
+                      [--trace-out spans.json|.jsonl]\n\
                       (pooled runs execute one cost-driven ExecutionPlan: --plan pins\n\
                       or frees all axes at once, the per-axis flags pin single axes,\n\
                       anything unpinned is chosen by the planner per graph;\n\
@@ -105,9 +108,16 @@ fn print_help() {
            serve      [--jobs 32] [--shards 2] [--pool 4] [--plan <spec>] [--schedule <s>]\n\
                       [--priority <p>] [--support-mode full|incremental|auto]\n\
                       [--deadline-ms D] [--calibration file.tsv]\n\
+                      [--trace-out spans.json|.jsonl]\n\
                       (demo job stream through the sharded executor; --pool is the TOTAL worker\n\
                       budget split across shards; unpinned plan axes are chosen per job at\n\
-                      submit time; without --priority the stream mixes priority classes)\n\
+                      submit time; without --priority the stream mixes priority classes;\n\
+                      --trace-out dumps the job -> pass span tree as Chrome trace JSON or\n\
+                      JSONL, and the drift report prints per executed-plan regime)\n\
+           metrics    [--jobs 12] [--shards 2] [--pool 4] [--calibration file.tsv]\n\
+                      (Prometheus-style text exposition snapshot: runs a short demo stream\n\
+                      and prints serving counters, latency buckets and plan-drift gauges;\n\
+                      --calibration seeds the cost model and drift baselines first)\n\
            plan       [--graph <name|path>] [--k 3] [--par 48] [--device cpu|gpu] [--plan <spec>]\n\
                       (explain mode: per-candidate predicted costs and the chosen plan;\n\
                       without --graph, sweeps a demo set of generator families)\n\
@@ -195,6 +205,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         .parse()
         .map_err(|e| anyhow::anyhow!("--priority: {e}"))?;
     let deadline_ms = args.get_as::<u64>("deadline-ms", 0)?;
+    let trace_out = args.opt("trace-out");
     args.reject_unknown()?;
     let seg_requested = matches!(
         spec.granularity,
@@ -244,6 +255,15 @@ fn cmd_run(args: &Args) -> Result<()> {
             other => bail!("unexpected output {other:?}"),
         }
         println!("metrics: {}", ex.metrics.render());
+        if let Some(path) = &trace_out {
+            let spans = ex.obs.spans.snapshot();
+            ktruss::obs::export::write_trace(std::path::Path::new(path), &spans)?;
+            println!("trace: wrote {} job span(s) to {path}", spans.len());
+            let drift = ex.obs.drift.render();
+            if !drift.is_empty() {
+                println!("{drift}");
+            }
+        }
         ex.shutdown();
         return Ok(());
     }
@@ -253,6 +273,10 @@ fn cmd_run(args: &Args) -> Result<()> {
         );
     }
     println!("graph: {}", stats::stats(&g));
+    // executed plan + per-iteration stats captured for --trace-out
+    // (the dense engine reports no per-pass stats: empty span tree)
+    let mut span_plan: Option<ktruss::plan::ExecutionPlan> = None;
+    let mut span_stats: Vec<ktruss::algo::ktruss::IterationStat> = Vec::new();
     let t = Timer::start();
     let (edges, iterations, engine_used) = match engine.as_str() {
         "dense" => {
@@ -266,11 +290,14 @@ fn cmd_run(args: &Args) -> Result<()> {
             let pool = Pool::new(par.max(1));
             let plan = Planner::new(pool.workers()).with_spec(spec).choose(&g, k);
             let r = ktruss_par_plan(&g, k, &pool, &plan);
-            (
+            span_plan = Some(plan);
+            let out = (
                 r.truss.nnz(),
                 r.iterations,
                 format!("sparse-cpu (pool, plan={plan})"),
-            )
+            );
+            span_stats = r.stats;
+            out
         }
         "sparse" => {
             // sequential reference path: no schedule axis to plan; the
@@ -279,23 +306,66 @@ fn cmd_run(args: &Args) -> Result<()> {
             let seq_mode = spec.granularity.and_then(|gr| gr.mode()).unwrap_or(mode);
             let r = ktruss_seq_mode(&g, k, seq_mode, support);
             let inc_iters = r.stats.iter().filter(|s| s.incremental).count();
-            (
+            let out = (
                 r.truss.nnz(),
                 r.iterations,
                 format!(
                     "sparse-cpu (sequential, support={support}, {inc_iters} incremental iterations, {} total steps)",
                     r.total_support_steps()
                 ),
-            )
+            );
+            span_stats = r.stats;
+            out
         }
         other => bail!("--engine must be sparse|dense, got {other:?}"),
     };
+    let wall_ms = t.elapsed_ms();
     println!(
-        "{k}-truss: {edges} edges survive ({} removed), {iterations} iterations, {:.3} ms [{engine_used}, mode={mode}]",
+        "{k}-truss: {edges} edges survive ({} removed), {iterations} iterations, {wall_ms:.3} ms [{engine_used}, mode={mode}]",
         g.nnz() - edges,
-        t.elapsed_ms()
     );
+    if let Some(path) = &trace_out {
+        let span = local_job_span(&g, "ktruss", span_plan, wall_ms, &span_stats);
+        ktruss::obs::export::write_trace(std::path::Path::new(path), &[span])?;
+        println!("trace: wrote 1 job span to {path}");
+    }
     Ok(())
+}
+
+/// A [`JobSpan`](ktruss::obs::span::JobSpan) for a CLI-local (not
+/// executor-served) run: no admission segment, so the queue wait and
+/// the cost-model prediction fields stay zero; the pass tree still
+/// carries the drivers' exact per-iteration steps.
+fn local_job_span(
+    g: &Csr,
+    kind: &str,
+    plan: Option<ktruss::plan::ExecutionPlan>,
+    wall_ms: f64,
+    stats: &[ktruss::algo::ktruss::IterationStat],
+) -> ktruss::obs::span::JobSpan {
+    let passes = ktruss::obs::span::passes_from_stats(stats);
+    ktruss::obs::span::JobSpan {
+        id: 0,
+        kind: kind.to_string(),
+        n: g.n(),
+        m: g.nnz(),
+        shard: 0,
+        schedule: plan.map(|p| p.schedule.to_string()).unwrap_or_else(|| "-".to_string()),
+        granularity: plan.map(|p| p.granularity.to_string()).unwrap_or_else(|| "-".to_string()),
+        support: plan.map(|p| p.support.to_string()).unwrap_or_else(|| "-".to_string()),
+        est_steps: 0,
+        total_steps: passes.iter().map(|p| p.steps).sum(),
+        predicted_ms: 0.0,
+        planned_pass_ms: None,
+        queue_ms: 0.0,
+        exec_ms: wall_ms,
+        serve_ms: wall_ms,
+        deadline_ms: None,
+        deadline_missed: false,
+        start_us: 0,
+        ok: true,
+        passes,
+    }
 }
 
 /// `plan`: print the planner's per-candidate predicted costs and the
@@ -577,6 +647,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     let deadline_ms = args.get_as::<u64>("deadline-ms", 0)?;
     let calibration = args.opt("calibration");
+    let trace_out = args.opt("trace-out");
     args.reject_unknown()?;
 
     // seed the cost model from persisted traces when available (the
@@ -645,6 +716,26 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ex.cost_model.ns_per_step(),
         ex.cost_model.samples()
     );
+    // drift accounting: per-plan-regime predicted-vs-actual report
+    let drift = ex.obs.drift.render();
+    if !drift.is_empty() {
+        println!("{drift}");
+        let flagged = ex.obs.drift.flagged(1.5, 3);
+        if flagged.is_empty() {
+            println!("drift: all plan regimes within the 1.5x calibration band");
+        } else {
+            println!(
+                "drift: {} plan regime(s) outside the 1.5x calibration band: {}",
+                flagged.len(),
+                flagged.iter().map(|r| r.plan.clone()).collect::<Vec<_>>().join(", ")
+            );
+        }
+    }
+    if let Some(path) = &trace_out {
+        let spans = ex.obs.spans.snapshot();
+        ktruss::obs::export::write_trace(std::path::Path::new(path), &spans)?;
+        println!("trace: wrote {} job span(s) to {path}", spans.len());
+    }
     if let Some(path) = calibration {
         // append this run's observations to the loaded history,
         // keeping the freshest records when over the cap
@@ -657,6 +748,52 @@ fn cmd_serve(args: &Args) -> Result<()> {
         persist::save(std::path::Path::new(&path), &records)?;
         println!("calibration: saved {} records to {path}", records.len());
     }
+    ex.shutdown();
+    Ok(())
+}
+
+/// `metrics`: run a short demo job stream through the sharded executor
+/// and print the Prometheus-style text exposition of the serving
+/// counters plus the plan-drift gauges ([`ktruss::obs::prom`]). With
+/// `--calibration`, the cost model (and the drift baselines, via the
+/// records' plan provenance) are seeded from the persisted traces
+/// before the stream runs.
+fn cmd_metrics(args: &Args) -> Result<()> {
+    let jobs = args.get_as::<usize>("jobs", 12)?;
+    let shards = args.get_as::<usize>("shards", 2)?.max(1);
+    let pool = args.get_as::<usize>("pool", 4)?;
+    let calibration = args.opt("calibration");
+    args.reject_unknown()?;
+    let model = match &calibration {
+        Some(path) if std::path::Path::new(path).exists() => {
+            CostModel::from_records(&persist::load(std::path::Path::new(path))?)
+        }
+        _ => CostModel::new(),
+    };
+    let ex = Executor::start_with_model(
+        ServeConfig { shards, ..Default::default() }.with_total_workers(pool),
+        model,
+    );
+    let mut rng = ktruss::util::Rng::new(5);
+    let mut tickets = Vec::new();
+    for i in 0..jobs {
+        let n = rng.range(60, 300);
+        let m = rng.range(n, 3 * n);
+        let g = Arc::new(ktruss::gen::erdos_renyi::gnm(n, m.min(n * (n - 1) / 2), &mut rng));
+        let kind = if i % 3 == 2 {
+            JobKind::Triangles
+        } else {
+            JobKind::Ktruss { k: 3, mode: Mode::Fine }
+        };
+        tickets.push(ex.submit(g, kind));
+    }
+    for ticket in tickets {
+        let r = ticket.wait();
+        if let Err(e) = &r.output {
+            bail!("job {} failed: {e}", r.id);
+        }
+    }
+    print!("{}", ktruss::obs::prom::render(&ex.metrics, Some(&ex.obs.drift)));
     ex.shutdown();
     Ok(())
 }

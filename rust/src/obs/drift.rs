@@ -1,0 +1,247 @@
+//! Drift accounting: predicted-vs-actual calibration cross-check.
+//!
+//! At job completion the executor joins the admission-time prediction
+//! (the cost model's per-label estimate, plus the planner's scored
+//! per-pass prediction when one exists) against the measured wall time,
+//! keyed by the executed plan axes (`schedule/granularity/support`).
+//! Each key holds EWMAs of predicted ms, actual ms, and the
+//! actual/predicted ratio, so a regime the model consistently mis-prices
+//! shows up as a ratio far from 1 — the calibration cross-check the
+//! ROADMAP's executing-GPU-backend item needs before any backend exists.
+
+use crate::cost::persist::TraceRecord;
+use crate::serve::cost_model::CostModel;
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// EWMA smoothing factor for drift observations (matches the cost
+/// model's per-label smoothing so the two converge at the same rate).
+const EWMA_ALPHA: f64 = 0.2;
+
+#[derive(Clone, Copy)]
+struct DriftStat {
+    predicted_ms: f64,
+    actual_ms: f64,
+    ratio: f64,
+    samples: u64,
+}
+
+impl DriftStat {
+    fn new() -> DriftStat {
+        DriftStat { predicted_ms: 0.0, actual_ms: 0.0, ratio: 1.0, samples: 0 }
+    }
+
+    fn fold(&mut self, predicted: f64, actual: f64) {
+        let ratio = actual / predicted;
+        if self.samples == 0 {
+            self.predicted_ms = predicted;
+            self.actual_ms = actual;
+            self.ratio = ratio;
+        } else {
+            self.predicted_ms = EWMA_ALPHA * predicted + (1.0 - EWMA_ALPHA) * self.predicted_ms;
+            self.actual_ms = EWMA_ALPHA * actual + (1.0 - EWMA_ALPHA) * self.actual_ms;
+            self.ratio = EWMA_ALPHA * ratio + (1.0 - EWMA_ALPHA) * self.ratio;
+        }
+        self.samples += 1;
+    }
+}
+
+/// One plan regime's drift snapshot.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DriftReport {
+    /// The plan axes key (`schedule/granularity/support`).
+    pub plan: String,
+    /// EWMA of predicted wall time, ms.
+    pub predicted_ms: f64,
+    /// EWMA of measured wall time, ms.
+    pub actual_ms: f64,
+    /// EWMA of the per-job actual/predicted ratio (1.0 = calibrated,
+    /// above 1 = the model is optimistic, below 1 = pessimistic).
+    pub ratio: f64,
+    /// Observations folded into this regime.
+    pub samples: u64,
+}
+
+/// Thread-safe per-plan-regime drift tracker shared by executor shards.
+pub struct DriftTracker {
+    state: Mutex<HashMap<String, DriftStat>>,
+}
+
+impl Default for DriftTracker {
+    fn default() -> Self {
+        DriftTracker::new()
+    }
+}
+
+impl DriftTracker {
+    /// An empty tracker.
+    pub fn new() -> DriftTracker {
+        DriftTracker { state: Mutex::new(HashMap::new()) }
+    }
+
+    /// Fold one completed job: `predicted_ms` is the admission-time
+    /// estimate, `actual_ms` the measured execution wall. Degenerate
+    /// observations (non-positive or non-finite on either side) are
+    /// dropped rather than poisoning the ratio.
+    pub fn observe(&self, plan: &str, predicted_ms: f64, actual_ms: f64) {
+        if predicted_ms <= 0.0
+            || !predicted_ms.is_finite()
+            || actual_ms < 0.0
+            || !actual_ms.is_finite()
+        {
+            return;
+        }
+        self.state
+            .lock()
+            .unwrap()
+            .entry(plan.to_string())
+            .or_insert_with(DriftStat::new)
+            .fold(predicted_ms, actual_ms);
+    }
+
+    /// Seed drift baselines from persisted calibration records carrying
+    /// plan provenance (see [`TraceRecord`]): the record's wall time is
+    /// the actual; the prediction is what `model` — itself seeded from
+    /// the same records — estimates for the record's label and steps.
+    /// Provenance-less legacy records (axes `-`) are skipped.
+    pub fn seed(&self, records: &[TraceRecord], model: &CostModel) {
+        for r in records {
+            if !r.has_provenance() {
+                continue;
+            }
+            let plan = format!("{}/{}/{}", r.schedule, r.granularity, r.support);
+            self.observe(&plan, model.predict_ms_for(&r.kind, r.est_steps), r.wall_ms);
+        }
+    }
+
+    /// Every regime's drift report, sorted by plan key.
+    pub fn snapshot(&self) -> Vec<DriftReport> {
+        let st = self.state.lock().unwrap();
+        let mut out: Vec<DriftReport> = st
+            .iter()
+            .map(|(plan, s)| DriftReport {
+                plan: plan.clone(),
+                predicted_ms: s.predicted_ms,
+                actual_ms: s.actual_ms,
+                ratio: s.ratio,
+                samples: s.samples,
+            })
+            .collect();
+        out.sort_by(|a, b| a.plan.cmp(&b.plan));
+        out
+    }
+
+    /// Regimes with at least `min_samples` observations whose ratio
+    /// EWMA sits outside `[1/band, band]` — the miscalibrated set.
+    pub fn flagged(&self, band: f64, min_samples: u64) -> Vec<DriftReport> {
+        let band = band.max(1.0);
+        self.snapshot()
+            .into_iter()
+            .filter(|r| r.samples >= min_samples && (r.ratio > band || r.ratio < 1.0 / band))
+            .collect()
+    }
+
+    /// One line per regime, machine-greppable
+    /// (`drift[plan] predicted_ms=… actual_ms=… ratio=… n=…`).
+    pub fn render(&self) -> String {
+        self.snapshot()
+            .iter()
+            .map(|r| {
+                format!(
+                    "drift[{}] predicted_ms={:.3} actual_ms={:.3} ratio={:.3} n={}",
+                    r.plan, r.predicted_ms, r.actual_ms, r.ratio, r.samples
+                )
+            })
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn observe_tracks_ratio_per_regime() {
+        let d = DriftTracker::new();
+        d.observe("static/fine/full", 1.0, 2.0);
+        d.observe("dynamic/coarse/full", 4.0, 1.0);
+        let snap = d.snapshot();
+        assert_eq!(snap.len(), 2);
+        // sorted by plan key
+        assert_eq!(snap[0].plan, "dynamic/coarse/full");
+        assert!((snap[0].ratio - 0.25).abs() < 1e-12);
+        assert_eq!(snap[1].plan, "static/fine/full");
+        assert!((snap[1].ratio - 2.0).abs() < 1e-12);
+        assert_eq!(snap[1].samples, 1);
+    }
+
+    #[test]
+    fn ewma_pulls_toward_new_observations() {
+        let d = DriftTracker::new();
+        d.observe("p", 1.0, 1.0);
+        d.observe("p", 1.0, 3.0);
+        let r = &d.snapshot()[0];
+        assert_eq!(r.samples, 2);
+        assert!(r.ratio > 1.0 && r.ratio < 3.0, "{}", r.ratio);
+        assert!((r.ratio - (0.2 * 3.0 + 0.8 * 1.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degenerate_observations_are_dropped() {
+        let d = DriftTracker::new();
+        d.observe("p", 0.0, 1.0);
+        d.observe("p", -1.0, 1.0);
+        d.observe("p", f64::NAN, 1.0);
+        d.observe("p", 1.0, f64::NAN);
+        d.observe("p", 1.0, -0.5);
+        assert!(d.snapshot().is_empty());
+    }
+
+    #[test]
+    fn flagged_respects_band_and_min_samples() {
+        let d = DriftTracker::new();
+        for _ in 0..5 {
+            d.observe("calibrated", 1.0, 1.05);
+            d.observe("optimistic", 1.0, 10.0);
+        }
+        d.observe("thin", 1.0, 10.0); // 1 sample only
+        let flagged = d.flagged(2.0, 3);
+        assert_eq!(flagged.len(), 1);
+        assert_eq!(flagged[0].plan, "optimistic");
+        // a pessimistic regime (ratio < 1/band) is flagged too
+        for _ in 0..5 {
+            d.observe("pessimistic", 10.0, 1.0);
+        }
+        let plans: Vec<String> = d.flagged(2.0, 3).into_iter().map(|r| r.plan).collect();
+        assert_eq!(plans, vec!["optimistic".to_string(), "pessimistic".to_string()]);
+    }
+
+    #[test]
+    fn render_is_greppable() {
+        let d = DriftTracker::new();
+        d.observe("static/fine/full", 2.0, 1.0);
+        let line = d.render();
+        assert!(line.contains("drift[static/fine/full]"), "{line}");
+        assert!(line.contains("ratio=0.500"), "{line}");
+        assert!(line.contains("n=1"), "{line}");
+    }
+
+    #[test]
+    fn seed_skips_legacy_records() {
+        let model = CostModel::new();
+        let legacy = TraceRecord::unplanned("ktruss+full".into(), 10, 20, 1000, 0.5);
+        let planned = TraceRecord {
+            schedule: "static".into(),
+            granularity: "fine".into(),
+            support: "full".into(),
+            ..legacy.clone()
+        };
+        let d = DriftTracker::new();
+        d.seed(&[legacy, planned], &model);
+        let snap = d.snapshot();
+        assert_eq!(snap.len(), 1);
+        assert_eq!(snap[0].plan, "static/fine/full");
+        assert_eq!(snap[0].samples, 1);
+    }
+}

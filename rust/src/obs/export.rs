@@ -1,0 +1,289 @@
+//! Span export: Chrome trace-event JSON and JSONL dumps.
+//!
+//! Hand-rolled serialization (the offline crate set has no serde). Two
+//! formats off one [`JobSpan`] snapshot:
+//!
+//! * **Chrome trace** ([`chrome_trace`]): an array of complete (`"X"`)
+//!   trace events loadable in `chrome://tracing` / Perfetto — one
+//!   queue-wait event and one execution event per job (pid = 0, tid =
+//!   shard), plus one nested event per pass span carrying its exact
+//!   measured steps in `args`.
+//! * **JSONL** ([`jsonl`]): one self-contained JSON object per job
+//!   span, line-oriented for `jq`/awk post-processing.
+//!
+//! [`write_trace`] picks by extension: `.jsonl` → JSONL, anything else
+//! → Chrome trace JSON.
+
+use crate::obs::span::JobSpan;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Escape a string for embedding in a JSON string literal.
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render one finite f64 for JSON (JSON has no NaN/Inf; degenerate
+/// values serialize as 0).
+fn num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.6}")
+    } else {
+        "0".to_string()
+    }
+}
+
+fn event(
+    name: &str,
+    cat: &str,
+    ts_us: f64,
+    dur_us: f64,
+    tid: usize,
+    args: &[(&str, String)],
+) -> String {
+    let args_json = args
+        .iter()
+        .map(|(k, v)| format!("\"{}\":{}", esc(k), v))
+        .collect::<Vec<_>>()
+        .join(",");
+    format!(
+        "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\"pid\":0,\"tid\":{},\"args\":{{{}}}}}",
+        esc(name),
+        esc(cat),
+        num(ts_us),
+        num(dur_us.max(0.0)),
+        tid,
+        args_json
+    )
+}
+
+/// Render spans as a Chrome trace-event JSON document
+/// (`{"traceEvents": [...]}`).
+pub fn chrome_trace(spans: &[JobSpan]) -> String {
+    let mut events = Vec::new();
+    for s in spans {
+        let start = s.start_us as f64;
+        let queue_start = start - s.queue_ms * 1e3;
+        events.push(event(
+            &format!("queue job {}", s.id),
+            "queue",
+            queue_start,
+            s.queue_ms * 1e3,
+            s.shard,
+            &[("job", s.id.to_string())],
+        ));
+        events.push(event(
+            &format!("{} job {}", s.kind, s.id),
+            "job",
+            start,
+            s.exec_ms * 1e3,
+            s.shard,
+            &[
+                ("job", s.id.to_string()),
+                ("kind", format!("\"{}\"", esc(&s.kind))),
+                ("plan", format!("\"{}\"", esc(&s.plan_string()))),
+                ("n", s.n.to_string()),
+                ("m", s.m.to_string()),
+                ("est_steps", s.est_steps.to_string()),
+                ("total_steps", s.total_steps.to_string()),
+                ("predicted_ms", num(s.predicted_ms)),
+                (
+                    "planned_pass_ms",
+                    s.planned_pass_ms.map(num).unwrap_or_else(|| "null".to_string()),
+                ),
+                ("serve_ms", num(s.serve_ms)),
+                ("deadline_missed", s.deadline_missed.to_string()),
+                ("ok", s.ok.to_string()),
+            ],
+        ));
+        // nest each pass inside the job's execution window,
+        // apportioned by measured pass wall time (falling back to an
+        // even split when the passes carry no timing)
+        let total_wall: f64 = s.passes.iter().map(|p| p.wall_ms).sum();
+        let mut cursor = start;
+        for p in &s.passes {
+            let dur_us = if total_wall > 0.0 {
+                p.wall_ms * 1e3
+            } else {
+                s.exec_ms * 1e3 / s.passes.len() as f64
+            };
+            events.push(event(
+                &format!("pass {} job {}", p.iter, s.id),
+                "pass",
+                cursor,
+                dur_us,
+                s.shard,
+                &[
+                    ("job", s.id.to_string()),
+                    ("iter", p.iter.to_string()),
+                    ("steps", p.steps.to_string()),
+                    ("tasks", p.tasks.to_string()),
+                    ("live_edges", p.live_edges.to_string()),
+                    ("removed", p.removed.to_string()),
+                    ("incremental", p.incremental.to_string()),
+                ],
+            ));
+            cursor += dur_us;
+        }
+    }
+    format!("{{\"traceEvents\":[\n{}\n]}}\n", events.join(",\n"))
+}
+
+/// Render one job span as a self-contained JSON object.
+pub fn span_json(s: &JobSpan) -> String {
+    let passes = s
+        .passes
+        .iter()
+        .map(|p| {
+            format!(
+                "{{\"iter\":{},\"incremental\":{},\"live_edges\":{},\"removed\":{},\"steps\":{},\"tasks\":{},\"wall_ms\":{}}}",
+                p.iter, p.incremental, p.live_edges, p.removed, p.steps, p.tasks, num(p.wall_ms)
+            )
+        })
+        .collect::<Vec<_>>()
+        .join(",");
+    format!(
+        "{{\"id\":{},\"kind\":\"{}\",\"n\":{},\"m\":{},\"shard\":{},\"plan\":\"{}\",\"est_steps\":{},\"total_steps\":{},\"predicted_ms\":{},\"planned_pass_ms\":{},\"queue_ms\":{},\"exec_ms\":{},\"serve_ms\":{},\"deadline_ms\":{},\"deadline_missed\":{},\"start_us\":{},\"ok\":{},\"passes\":[{}]}}",
+        s.id,
+        esc(&s.kind),
+        s.n,
+        s.m,
+        s.shard,
+        esc(&s.plan_string()),
+        s.est_steps,
+        s.total_steps,
+        num(s.predicted_ms),
+        s.planned_pass_ms.map(num).unwrap_or_else(|| "null".to_string()),
+        num(s.queue_ms),
+        num(s.exec_ms),
+        num(s.serve_ms),
+        s.deadline_ms.map(num).unwrap_or_else(|| "null".to_string()),
+        s.deadline_missed,
+        s.start_us,
+        s.ok,
+        passes
+    )
+}
+
+/// Render spans as JSONL (one [`span_json`] object per line).
+pub fn jsonl(spans: &[JobSpan]) -> String {
+    let mut out = String::new();
+    for s in spans {
+        out.push_str(&span_json(s));
+        out.push('\n');
+    }
+    out
+}
+
+/// Write spans to `path`: `.jsonl` extension → JSONL, anything else →
+/// Chrome trace-event JSON.
+pub fn write_trace(path: &Path, spans: &[JobSpan]) -> Result<()> {
+    let body = if path.extension().and_then(|e| e.to_str()) == Some("jsonl") {
+        jsonl(spans)
+    } else {
+        chrome_trace(spans)
+    };
+    std::fs::write(path, body).with_context(|| format!("write trace file {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::span::PassSpan;
+
+    fn span() -> JobSpan {
+        JobSpan {
+            id: 7,
+            kind: "ktruss".into(),
+            n: 10,
+            m: 20,
+            shard: 1,
+            schedule: "static".into(),
+            granularity: "fine".into(),
+            support: "full".into(),
+            est_steps: 100,
+            total_steps: 34,
+            predicted_ms: 1.5,
+            planned_pass_ms: None,
+            queue_ms: 0.2,
+            exec_ms: 0.8,
+            serve_ms: 1.0,
+            deadline_ms: Some(5.0),
+            deadline_missed: false,
+            start_us: 1000,
+            ok: true,
+            passes: vec![
+                PassSpan { iter: 0, steps: 30, wall_ms: 0.6, ..PassSpan::default() },
+                PassSpan {
+                    iter: 1,
+                    steps: 4,
+                    wall_ms: 0.2,
+                    incremental: true,
+                    ..PassSpan::default()
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn chrome_trace_has_job_and_pass_events() {
+        let doc = chrome_trace(&[span()]);
+        assert!(doc.starts_with("{\"traceEvents\":["), "{doc}");
+        assert!(doc.contains("\"ktruss job 7\""), "{doc}");
+        assert!(doc.contains("\"queue job 7\""), "{doc}");
+        assert!(doc.contains("\"pass 0 job 7\""), "{doc}");
+        assert!(doc.contains("\"pass 1 job 7\""), "{doc}");
+        assert!(doc.contains("\"total_steps\":34"), "{doc}");
+        assert!(doc.contains("\"steps\":30"), "{doc}");
+        assert!(doc.contains("\"plan\":\"static/fine/full\""), "{doc}");
+        assert!(doc.contains("\"planned_pass_ms\":null"), "{doc}");
+    }
+
+    #[test]
+    fn jsonl_is_one_object_per_line() {
+        let text = jsonl(&[span(), span()]);
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for l in lines {
+            assert!(l.starts_with('{') && l.ends_with('}'), "{l}");
+            assert!(l.contains("\"total_steps\":34"), "{l}");
+            assert!(l.contains("\"deadline_ms\":5.000000"), "{l}");
+        }
+    }
+
+    #[test]
+    fn escaping_handles_quotes_and_controls() {
+        assert_eq!(esc("a\"b\\c"), "a\\\"b\\\\c");
+        assert_eq!(esc("x\ny"), "x\\ny");
+        assert_eq!(esc("\u{1}"), "\\u0001");
+        assert_eq!(num(f64::NAN), "0");
+    }
+
+    #[test]
+    fn write_trace_picks_format_by_extension() {
+        let dir = std::env::temp_dir();
+        let chrome = dir.join("ktruss-obs-export-test.json");
+        let lines = dir.join("ktruss-obs-export-test.jsonl");
+        write_trace(&chrome, &[span()]).unwrap();
+        write_trace(&lines, &[span()]).unwrap();
+        let chrome_text = std::fs::read_to_string(&chrome).unwrap();
+        let lines_text = std::fs::read_to_string(&lines).unwrap();
+        assert!(chrome_text.contains("traceEvents"));
+        assert!(!lines_text.contains("traceEvents"));
+        assert!(lines_text.trim().starts_with('{'));
+        std::fs::remove_file(&chrome).unwrap();
+        std::fs::remove_file(&lines).unwrap();
+    }
+}

@@ -1,0 +1,41 @@
+//! Observability: plan-vs-actual telemetry across all three layers.
+//!
+//! The kernels already measure exact per-pass merge/probe steps
+//! (L1), the drivers return them per iteration (L2), and the serving
+//! executor knows what the planner predicted at admission (L3) — this
+//! module joins the three into one telemetry stream:
+//!
+//! * [`span`]: a thread-safe recorder producing a job → pass span
+//!   tree; each pass span carries the executed plan axes, task count,
+//!   exact measured steps, and wall time, and each job span adds the
+//!   queue-wait / execution / deadline segments the executor measures.
+//! * [`drift`]: per-plan-regime EWMAs of predicted/actual wall-time
+//!   ratios — the calibration cross-check that makes cost-model
+//!   miscalibration visible instead of silent.
+//! * [`export`]: Chrome trace-event JSON and JSONL span dumps
+//!   (`run --trace-out`, `serve --trace-out`).
+//! * [`prom`]: Prometheus-style text exposition of the serving
+//!   counters plus the drift gauges (`metrics` CLI snapshot,
+//!   `bench serve`).
+
+pub mod drift;
+pub mod export;
+pub mod prom;
+pub mod span;
+
+/// The executor-shared observability hub: one span recorder plus one
+/// drift tracker, cloned into every shard via `Arc`.
+#[derive(Default)]
+pub struct ObsHub {
+    /// Completed job spans, in completion order.
+    pub spans: span::SpanRecorder,
+    /// Per-plan-regime predicted/actual drift EWMAs.
+    pub drift: drift::DriftTracker,
+}
+
+impl ObsHub {
+    /// A fresh hub (empty recorder, empty tracker).
+    pub fn new() -> ObsHub {
+        ObsHub::default()
+    }
+}

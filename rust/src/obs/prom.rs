@@ -1,0 +1,214 @@
+//! Prometheus-style text exposition of the serving counters and drift
+//! gauges.
+//!
+//! Renders [`Metrics`](crate::coordinator::metrics::Metrics) (job
+//! counters, the log₂ latency histogram as a cumulative
+//! `_bucket{le=...}` series, per-shard gauges) plus
+//! [`DriftTracker`](crate::obs::drift::DriftTracker) regime gauges in
+//! the text format any Prometheus-compatible scraper parses. There is
+//! no HTTP listener — the exposition is printed by the `metrics` CLI
+//! snapshot and inside `bench serve` output, and tests parse it as
+//! plain text.
+
+use crate::coordinator::metrics::Metrics;
+use crate::obs::drift::DriftTracker;
+use std::sync::atomic::Ordering;
+
+fn counter(out: &mut String, name: &str, help: &str, value: u64) {
+    out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} counter\n{name} {value}\n"));
+}
+
+/// Render `metrics` (and, when given, `drift`) as Prometheus text
+/// exposition.
+pub fn render(metrics: &Metrics, drift: Option<&DriftTracker>) -> String {
+    let mut out = String::new();
+    counter(
+        &mut out,
+        "ktruss_jobs_submitted_total",
+        "Jobs admitted",
+        metrics.submitted.load(Ordering::Relaxed),
+    );
+    counter(
+        &mut out,
+        "ktruss_jobs_completed_total",
+        "Jobs completed (ok or failed)",
+        metrics.completed.load(Ordering::Relaxed),
+    );
+    counter(
+        &mut out,
+        "ktruss_jobs_failed_total",
+        "Jobs completed with an error",
+        metrics.failed.load(Ordering::Relaxed),
+    );
+    counter(
+        &mut out,
+        "ktruss_jobs_sparse_total",
+        "Jobs the sparse CPU engine executed",
+        metrics.sparse_jobs.load(Ordering::Relaxed),
+    );
+    counter(
+        &mut out,
+        "ktruss_jobs_dense_total",
+        "Jobs the dense XLA engine executed",
+        metrics.dense_jobs.load(Ordering::Relaxed),
+    );
+
+    // latency histogram: the log₂ buckets as a cumulative le-series
+    out.push_str("# HELP ktruss_job_latency_us Job serve latency histogram (microseconds)\n");
+    out.push_str("# TYPE ktruss_job_latency_us histogram\n");
+    let mut cum = 0u64;
+    for (floor_us, count) in metrics.latency_histogram() {
+        cum += count;
+        // a sample in the log₂ bucket with floor f lies in [f, 2f)
+        out.push_str(&format!("ktruss_job_latency_us_bucket{{le=\"{}\"}} {cum}\n", floor_us * 2));
+    }
+    out.push_str(&format!("ktruss_job_latency_us_bucket{{le=\"+Inf\"}} {cum}\n"));
+    out.push_str(&format!("ktruss_job_latency_us_count {cum}\n"));
+
+    if !metrics.shards().is_empty() {
+        out.push_str("# HELP ktruss_shard_jobs_total Jobs executed per shard\n");
+        out.push_str("# TYPE ktruss_shard_jobs_total counter\n");
+        for (i, s) in metrics.shards().iter().enumerate() {
+            out.push_str(&format!(
+                "ktruss_shard_jobs_total{{shard=\"{i}\"}} {}\n",
+                s.jobs.load(Ordering::Relaxed)
+            ));
+        }
+        out.push_str("# HELP ktruss_shard_stolen_total Jobs stolen from other shards\n");
+        out.push_str("# TYPE ktruss_shard_stolen_total counter\n");
+        for (i, s) in metrics.shards().iter().enumerate() {
+            out.push_str(&format!(
+                "ktruss_shard_stolen_total{{shard=\"{i}\"}} {}\n",
+                s.stolen.load(Ordering::Relaxed)
+            ));
+        }
+        out.push_str("# HELP ktruss_shard_deadline_miss_total Soft-deadline misses per shard\n");
+        out.push_str("# TYPE ktruss_shard_deadline_miss_total counter\n");
+        for (i, s) in metrics.shards().iter().enumerate() {
+            out.push_str(&format!(
+                "ktruss_shard_deadline_miss_total{{shard=\"{i}\"}} {}\n",
+                s.deadline_miss.load(Ordering::Relaxed)
+            ));
+        }
+        out.push_str("# HELP ktruss_shard_queue_depth Queued jobs per shard (gauge)\n");
+        out.push_str("# TYPE ktruss_shard_queue_depth gauge\n");
+        for (i, s) in metrics.shards().iter().enumerate() {
+            out.push_str(&format!(
+                "ktruss_shard_queue_depth{{shard=\"{i}\"}} {}\n",
+                s.queue_depth.load(Ordering::Relaxed)
+            ));
+        }
+    }
+
+    if let Some(drift) = drift {
+        let snap = drift.snapshot();
+        if !snap.is_empty() {
+            out.push_str(
+                "# HELP ktruss_plan_drift_ratio EWMA of actual/predicted wall per plan regime\n",
+            );
+            out.push_str("# TYPE ktruss_plan_drift_ratio gauge\n");
+            for r in &snap {
+                out.push_str(&format!(
+                    "ktruss_plan_drift_ratio{{plan=\"{}\"}} {:.6}\n",
+                    r.plan, r.ratio
+                ));
+            }
+            out.push_str(
+                "# HELP ktruss_plan_drift_predicted_ms EWMA of predicted wall per plan regime\n",
+            );
+            out.push_str("# TYPE ktruss_plan_drift_predicted_ms gauge\n");
+            for r in &snap {
+                out.push_str(&format!(
+                    "ktruss_plan_drift_predicted_ms{{plan=\"{}\"}} {:.6}\n",
+                    r.plan, r.predicted_ms
+                ));
+            }
+            out.push_str(
+                "# HELP ktruss_plan_drift_actual_ms EWMA of measured wall per plan regime\n",
+            );
+            out.push_str("# TYPE ktruss_plan_drift_actual_ms gauge\n");
+            for r in &snap {
+                out.push_str(&format!(
+                    "ktruss_plan_drift_actual_ms{{plan=\"{}\"}} {:.6}\n",
+                    r.plan, r.actual_ms
+                ));
+            }
+            out.push_str(
+                "# HELP ktruss_plan_drift_samples_total Drift observations per plan regime\n",
+            );
+            out.push_str("# TYPE ktruss_plan_drift_samples_total counter\n");
+            for r in &snap {
+                out.push_str(&format!(
+                    "ktruss_plan_drift_samples_total{{plan=\"{}\"}} {}\n",
+                    r.plan, r.samples
+                ));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::job::Engine;
+
+    #[test]
+    fn exposition_carries_counters_and_cumulative_buckets() {
+        let m = Metrics::with_shards(2);
+        m.record_submit();
+        m.record_submit();
+        m.record_done(Engine::SparseCpu, 0.001, true); // bucket floor 1us
+        m.record_done(Engine::SparseCpu, 1.0, false); // bucket floor 512us
+        m.record_shard_done(0);
+        m.record_steal(1);
+        m.set_queue_depth(1, 3);
+        let text = render(&m, None);
+        assert!(text.contains("ktruss_jobs_submitted_total 2"), "{text}");
+        assert!(text.contains("ktruss_jobs_completed_total 2"), "{text}");
+        assert!(text.contains("ktruss_jobs_failed_total 1"), "{text}");
+        // cumulative: the 512us-floor bucket (le=1024) holds both samples
+        assert!(text.contains("ktruss_job_latency_us_bucket{le=\"2\"} 1"), "{text}");
+        assert!(text.contains("ktruss_job_latency_us_bucket{le=\"1024\"} 2"), "{text}");
+        assert!(text.contains("ktruss_job_latency_us_bucket{le=\"+Inf\"} 2"), "{text}");
+        assert!(text.contains("ktruss_job_latency_us_count 2"), "{text}");
+        assert!(text.contains("ktruss_shard_jobs_total{shard=\"0\"} 1"), "{text}");
+        assert!(text.contains("ktruss_shard_stolen_total{shard=\"1\"} 1"), "{text}");
+        assert!(text.contains("ktruss_shard_queue_depth{shard=\"1\"} 3"), "{text}");
+    }
+
+    #[test]
+    fn bucket_series_is_monotone_nondecreasing() {
+        let m = Metrics::new();
+        for i in 0..50 {
+            m.record_done(Engine::SparseCpu, 0.001 * (1 << (i % 8)) as f64, true);
+        }
+        let text = render(&m, None);
+        let mut last = 0u64;
+        for line in text.lines().filter(|l| l.starts_with("ktruss_job_latency_us_bucket")) {
+            let v: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v >= last, "bucket series must be cumulative: {text}");
+            last = v;
+        }
+        assert_eq!(last, 50);
+    }
+
+    #[test]
+    fn drift_gauges_are_exposed() {
+        let m = Metrics::new();
+        let d = DriftTracker::new();
+        d.observe("static/fine/full", 1.0, 2.0);
+        let text = render(&m, Some(&d));
+        assert!(
+            text.contains("ktruss_plan_drift_ratio{plan=\"static/fine/full\"} 2.000000"),
+            "{text}"
+        );
+        assert!(
+            text.contains("ktruss_plan_drift_samples_total{plan=\"static/fine/full\"} 1"),
+            "{text}"
+        );
+        // an empty tracker adds no drift series
+        let empty = render(&m, Some(&DriftTracker::new()));
+        assert!(!empty.contains("ktruss_plan_drift_ratio"), "{empty}");
+    }
+}

@@ -1,0 +1,267 @@
+//! Span recording: the job → pass span tree.
+//!
+//! A [`JobSpan`] captures one served job end to end — the plan the
+//! planner chose (schedule/granularity/support axes), the cost model's
+//! predicted wall time, the measured queue-wait / execution / serve
+//! segments, and one [`PassSpan`] per convergence iteration carrying
+//! the *exact* merge/probe step count the kernels measured (the same
+//! counters `cost::trace` replays). The recorder is a thread-safe
+//! bounded log shared by every executor shard (newest [`SPAN_CAP`]
+//! spans retained); `obs::export` turns a snapshot into Chrome trace
+//! JSON or JSONL.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// One support/frontier pass of a truss convergence loop — the leaf of
+/// the span tree. Built from
+/// [`IterationStat`](crate::algo::ktruss::IterationStat), so `steps`
+/// is the kernel's exact measured merge/probe count, not an estimate.
+#[derive(Clone, Debug, Default)]
+pub struct PassSpan {
+    /// Convergence iteration index (0-based).
+    pub iter: usize,
+    /// Whether this pass ran the incremental frontier kernel (`true`)
+    /// or a full support recompute (`false`).
+    pub incremental: bool,
+    /// Live edges at the start of the iteration.
+    pub live_edges: usize,
+    /// Edges removed by the prune that followed this pass.
+    pub removed: usize,
+    /// Exact measured merge/probe steps the pass executed.
+    pub steps: u64,
+    /// Tasks offered to the worker pool for this pass (0 = sequential
+    /// or warm-inherited).
+    pub tasks: usize,
+    /// Measured wall time of the pass, in milliseconds.
+    pub wall_ms: f64,
+}
+
+/// One served job: the root of the span tree.
+#[derive(Clone, Debug)]
+pub struct JobSpan {
+    /// Job id (monotonic per executor).
+    pub id: u64,
+    /// Job kind label (`ktruss`, `kmax`, `decompose`, `triangles`).
+    pub kind: String,
+    /// Vertices of the job's graph.
+    pub n: usize,
+    /// Edges of the job's graph.
+    pub m: usize,
+    /// Shard that executed the job.
+    pub shard: usize,
+    /// Executed schedule axis of the plan (`-` when unplanned).
+    pub schedule: String,
+    /// Executed granularity axis of the plan (`-` when unplanned).
+    pub granularity: String,
+    /// Executed support-mode axis of the plan (`-` when unplanned).
+    pub support: String,
+    /// The cost model's static step estimate at admission.
+    pub est_steps: u64,
+    /// Sum of the pass spans' exact measured steps.
+    pub total_steps: u64,
+    /// The cost model's predicted wall time at admission, in ms.
+    pub predicted_ms: f64,
+    /// The planner's scored per-pass prediction (`Planner::choose_scored`),
+    /// in ms; `None` when the plan was pinned or the kind is unplanned.
+    pub planned_pass_ms: Option<f64>,
+    /// Admission-to-dequeue wait, in ms.
+    pub queue_ms: f64,
+    /// Execution wall time, in ms.
+    pub exec_ms: f64,
+    /// End-to-end admission-to-completion latency, in ms.
+    pub serve_ms: f64,
+    /// Soft deadline budget relative to admission, in ms (`None` =
+    /// best-effort).
+    pub deadline_ms: Option<f64>,
+    /// Whether the job completed past its soft deadline.
+    pub deadline_missed: bool,
+    /// Execution start, µs since the recorder's epoch (trace timeline).
+    pub start_us: u64,
+    /// Whether the job completed without error.
+    pub ok: bool,
+    /// Per-iteration pass spans (empty for non-truss kinds).
+    pub passes: Vec<PassSpan>,
+}
+
+impl JobSpan {
+    /// The executed plan as one `schedule/granularity/support` string
+    /// (`-/-/-` when unplanned).
+    pub fn plan_string(&self) -> String {
+        format!("{}/{}/{}", self.schedule, self.granularity, self.support)
+    }
+}
+
+/// Retention cap: the recorder keeps the most recent this-many job
+/// spans, so a long-lived server's trace memory stays bounded while
+/// any realistic `--trace-out` window is fully covered.
+pub const SPAN_CAP: usize = 65_536;
+
+/// Thread-safe span log shared across executor shards; keeps the
+/// newest [`SPAN_CAP`] spans.
+pub struct SpanRecorder {
+    epoch: Instant,
+    spans: Mutex<VecDeque<JobSpan>>,
+}
+
+impl Default for SpanRecorder {
+    fn default() -> Self {
+        SpanRecorder::new()
+    }
+}
+
+impl SpanRecorder {
+    /// An empty recorder; its construction instant is the trace epoch.
+    pub fn new() -> SpanRecorder {
+        SpanRecorder { epoch: Instant::now(), spans: Mutex::new(VecDeque::new()) }
+    }
+
+    /// Microseconds since the recorder's epoch (span timestamps share
+    /// one timeline regardless of which shard records them).
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Append one completed job span, evicting the oldest once the
+    /// log holds [`SPAN_CAP`] spans.
+    pub fn record(&self, span: JobSpan) {
+        let mut spans = self.spans.lock().unwrap();
+        if spans.len() >= SPAN_CAP {
+            spans.pop_front();
+        }
+        spans.push_back(span);
+    }
+
+    /// Copy of every retained span, in completion order.
+    pub fn snapshot(&self) -> Vec<JobSpan> {
+        self.spans.lock().unwrap().iter().cloned().collect()
+    }
+
+    /// Spans recorded so far.
+    pub fn len(&self) -> usize {
+        self.spans.lock().unwrap().len()
+    }
+
+    /// Whether no spans have been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Build the pass spans for a completed truss run from its driver
+/// statistics (one span per convergence iteration; `steps` is exact).
+pub fn passes_from_stats(stats: &[crate::algo::ktruss::IterationStat]) -> Vec<PassSpan> {
+    stats
+        .iter()
+        .enumerate()
+        .map(|(i, st)| PassSpan {
+            iter: i,
+            incremental: st.incremental,
+            live_edges: st.live_edges,
+            removed: st.removed,
+            steps: st.support_steps,
+            tasks: st.tasks,
+            wall_ms: st.wall_ms,
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(id: u64, steps: &[u64]) -> JobSpan {
+        JobSpan {
+            id,
+            kind: "ktruss".into(),
+            n: 10,
+            m: 20,
+            shard: 0,
+            schedule: "static".into(),
+            granularity: "fine".into(),
+            support: "full".into(),
+            est_steps: 100,
+            total_steps: steps.iter().sum(),
+            predicted_ms: 1.0,
+            planned_pass_ms: Some(0.5),
+            queue_ms: 0.1,
+            exec_ms: 0.8,
+            serve_ms: 0.9,
+            deadline_ms: None,
+            deadline_missed: false,
+            start_us: 42,
+            ok: true,
+            passes: steps
+                .iter()
+                .enumerate()
+                .map(|(i, &s)| PassSpan { iter: i, steps: s, ..PassSpan::default() })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn recorder_appends_and_snapshots() {
+        let rec = SpanRecorder::new();
+        assert!(rec.is_empty());
+        rec.record(span(1, &[3, 4]));
+        rec.record(span(2, &[5]));
+        let snap = rec.snapshot();
+        assert_eq!(rec.len(), 2);
+        assert_eq!(snap[0].id, 1);
+        assert_eq!(snap[0].total_steps, 7);
+        assert_eq!(snap[1].passes.len(), 1);
+        assert_eq!(snap[0].plan_string(), "static/fine/full");
+    }
+
+    #[test]
+    fn recorder_evicts_oldest_past_cap() {
+        let rec = SpanRecorder::new();
+        for id in 0..(SPAN_CAP as u64 + 3) {
+            rec.record(span(id, &[1]));
+        }
+        assert_eq!(rec.len(), SPAN_CAP);
+        let snap = rec.snapshot();
+        assert_eq!(snap.first().unwrap().id, 3);
+        assert_eq!(snap.last().unwrap().id, SPAN_CAP as u64 + 2);
+    }
+
+    #[test]
+    fn pass_spans_mirror_iteration_stats() {
+        let stats = vec![
+            crate::algo::ktruss::IterationStat {
+                live_edges: 9,
+                removed: 2,
+                support_steps: 30,
+                incremental: false,
+                wall_ms: 0.5,
+                tasks: 9,
+            },
+            crate::algo::ktruss::IterationStat {
+                live_edges: 7,
+                removed: 0,
+                support_steps: 4,
+                incremental: true,
+                wall_ms: 0.1,
+                tasks: 2,
+            },
+        ];
+        let passes = passes_from_stats(&stats);
+        assert_eq!(passes.len(), 2);
+        assert_eq!(passes[0].iter, 0);
+        assert_eq!(passes[0].steps, 30);
+        assert!(!passes[0].incremental);
+        assert_eq!(passes[1].iter, 1);
+        assert!(passes[1].incremental);
+        assert_eq!(passes[1].tasks, 2);
+        assert_eq!(passes.iter().map(|p| p.steps).sum::<u64>(), 34);
+    }
+
+    #[test]
+    fn now_us_is_monotonic() {
+        let rec = SpanRecorder::new();
+        let a = rec.now_us();
+        let b = rec.now_us();
+        assert!(b >= a);
+    }
+}

@@ -312,6 +312,92 @@ impl Costs {
     }
 }
 
+/// Trace-shape decomposition of one **hybrid** support pass into its
+/// two task kinds: `(merge_pieces, probe_pieces)` in steps.
+///
+/// [`Costs::from_trace_rows`] charges [`Granularity::Hybrid`] like
+/// [`Granularity::Segment`] because a merge trace alone cannot reveal
+/// which slots the hybrid pass turns into uniform bitmap probes. Given
+/// the pass's *column array* as well, the representation selection of
+/// [`crate::algo::bitmap::BitmapIndex::build`] can be mirrored exactly
+/// from the trace arrays:
+///
+/// * a partner row `κ` is bitmap-encoded iff its live length reaches
+///   `len` and its dense encoding passes the density guard
+///   (`words ≤ live`, with `words` read off the row's first/last live
+///   column values — the same arithmetic `RowBitmap::encode` performs);
+/// * a live slot with a non-empty tail and an encoded partner becomes
+///   tail-side **probe chunks** of ≤ `len` entries, each costing
+///   *exactly* its chunk length (the kernels execute one uniform probe
+///   per entry — see [`crate::algo::bitmap::BitmapTask::estimated_steps`]);
+/// * every other slot keeps the segment decomposition of its traced
+///   merge steps (≤ `len`-step pieces), as in [`Costs::from_trace_rows`].
+///
+/// The timing models price the two kinds with different per-task
+/// overheads (probe chunks are branch-free word lookups), which is what
+/// lets the simulators see the representation win the planner's static
+/// enumeration already scores.
+pub fn hybrid_trace_pieces(
+    fine_steps: &[u32],
+    row_ptr: &[u32],
+    col: &[u32],
+    live_per_row: &[u32],
+    len: u32,
+) -> (Vec<u64>, Vec<u64>) {
+    let slots = *row_ptr.last().expect("row_ptr is never empty") as usize;
+    assert_eq!(fine_steps.len(), slots, "one traced step count per slot");
+    assert_eq!(col.len(), slots, "one column value per slot");
+    let n = row_ptr.len() - 1;
+    assert_eq!(live_per_row.len(), n, "one live count per row");
+    let len = len.max(1);
+    let threshold = len as usize;
+    // mirror BitmapIndex::build's selection: live ≥ threshold plus the
+    // words ≤ live density guard over the row-local value universe
+    let encoded: Vec<bool> = (0..n)
+        .map(|kappa| {
+            let lk = live_per_row[kappa] as usize;
+            if lk < threshold || lk == 0 {
+                return false;
+            }
+            let r0 = row_ptr[kappa] as usize;
+            let (first, last) = (col[r0], col[r0 + lk - 1]);
+            let words = ((last.saturating_sub(first)) as usize >> 6) + 1;
+            words <= lk
+        })
+        .collect();
+    let mut merge = Vec::new();
+    let mut probe = Vec::new();
+    for i in 0..n {
+        let start = row_ptr[i] as usize;
+        let li = live_per_row[i] as usize;
+        for off in 0..li {
+            let p = start + off;
+            let kappa = col[p] as usize;
+            let tail_len = li - off - 1;
+            if tail_len > 0 && encoded[kappa] {
+                // tail-side probe chunks: cost is exactly the chunk
+                // length, the shape hybrid_tasks enumerates
+                let mut left = tail_len as u32;
+                while left > 0 {
+                    let c = left.min(len);
+                    probe.push(c as u64);
+                    left -= c;
+                }
+            } else {
+                // merge-representation partner: the traced steps split
+                // into ≤ len pieces, as in Costs::from_trace_rows
+                let mut left = fine_steps[p];
+                while left > 0 {
+                    let seg = left.min(len);
+                    merge.push(seg as u64);
+                    left -= seg;
+                }
+            }
+        }
+    }
+    (merge, probe)
+}
+
 /// Scan-based binning: pack `costs.len()` tasks into `bins` contiguous
 /// half-open ranges of approximately equal total cost, via prefix sums
 /// and quantile binary search. The ranges partition `0..costs.len()`
@@ -428,6 +514,51 @@ mod tests {
     use super::*;
     use crate::graph::builder::from_sorted_unique;
     use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn hybrid_trace_pieces_mirror_the_real_task_enumeration() {
+        // hub graph: the bitmap selection must fire for the hub rows,
+        // and the probe pieces must reproduce hybrid_tasks' exact
+        // per-chunk probe counts
+        let g = crate::testkit::graphs::hub_divergence_comb(64, 256, 800);
+        let z = crate::graph::ZCsr::from_csr(&g);
+        let mut s = Vec::new();
+        let tr = crate::cost::trace::trace_supports(&z, &mut s);
+        let len = 32u32;
+        let (merge, probe) =
+            hybrid_trace_pieces(&tr.fine_steps, z.row_ptr(), z.col(), &tr.live_per_row, len);
+        let ht = crate::algo::bitmap::hybrid_tasks(&z, len);
+        // probe chunks are exact: same count, same total probe steps
+        assert_eq!(probe.len(), ht.probe.len());
+        let want_probe: u64 = ht
+            .probe
+            .iter()
+            .map(crate::algo::bitmap::BitmapTask::estimated_steps)
+            .sum();
+        assert_eq!(probe.iter().sum::<u64>(), want_probe);
+        assert!(!probe.is_empty(), "hub rows must select the bitmap representation");
+        // merge pieces decompose the remaining traced steps into ≤ len
+        // chunks; their total is the trace total minus the slots that
+        // went to probes
+        assert!(merge.iter().all(|&c| c >= 1 && c <= len as u64));
+        assert!(probe.iter().all(|&c| c >= 1 && c <= len as u64));
+        assert!(merge.iter().sum::<u64>() <= tr.total_steps);
+        // no-hub fixture: nothing reaches the threshold, so the split
+        // degenerates to the segment decomposition
+        let g2 = from_sorted_unique(4, &[(0, 1), (0, 2), (0, 3), (1, 2), (2, 3)]);
+        let z2 = crate::graph::ZCsr::from_csr(&g2);
+        let mut s2 = Vec::new();
+        let tr2 = crate::cost::trace::trace_supports(&z2, &mut s2);
+        let (m2, p2) =
+            hybrid_trace_pieces(&tr2.fine_steps, z2.row_ptr(), z2.col(), &tr2.live_per_row, 64);
+        assert!(p2.is_empty());
+        let seg = Costs::from_trace_rows(
+            &tr2.fine_steps,
+            z2.row_ptr(),
+            Granularity::Segment { len: 64 },
+        );
+        assert_eq!(m2, seg.per_task);
+    }
 
     #[test]
     fn scan_bins_partition_exactly() {

@@ -463,10 +463,19 @@ fn ktruss_par_mode_crossover(
         };
     }
     let in_nbrs: Option<InNbrs> = if use_inc { Some(InNbrs::build(&z)) } else { None };
+    // tasks offered to the pool pre-split: rows for coarse, live edges
+    // for fine (frontier passes offer the frontier)
+    let full_tasks = |live: usize| match mode {
+        Mode::Coarse => z.n(),
+        Mode::Fine => live,
+    };
     // initial full pass (statically binned)
+    let mut pass_timer = crate::util::Timer::start();
     let mut pass_steps = compute_supports_costed(
         &z, pool, mode, schedule, &s_atomic, None, measured_opt,
     );
+    let mut pass_wall_ms = pass_timer.elapsed_ms();
+    let mut pass_tasks = full_tasks(live);
     let mut pass_incremental = false;
     let mut last_full_steps = pass_steps;
     if measure {
@@ -485,6 +494,8 @@ fn ktruss_par_mode_crossover(
             removed: f.len(),
             support_steps: pass_steps,
             incremental: pass_incremental,
+            wall_ms: pass_wall_ms,
+            tasks: pass_tasks,
         });
         if f.is_empty() {
             break;
@@ -504,6 +515,8 @@ fn ktruss_par_mode_crossover(
         );
         if go_incremental {
             let nbrs = in_nbrs.as_ref().expect("incremental mode builds the index");
+            pass_tasks = f.len();
+            pass_timer.restart();
             pass_steps = frontier::decrement_frontier_par(
                 &z,
                 pool,
@@ -513,6 +526,7 @@ fn ktruss_par_mode_crossover(
                 &s_atomic,
                 frontier_cost_vec.as_deref(),
             );
+            pass_wall_ms = pass_timer.elapsed_ms();
             pass_incremental = true;
             live = frontier::compact_preserving_par(&mut z, &s_atomic, &f.dying, pool, schedule)
                 .remaining;
@@ -526,15 +540,20 @@ fn ktruss_par_mode_crossover(
             if live == 0 {
                 pass_steps = 0;
                 pass_incremental = false;
+                pass_wall_ms = 0.0;
+                pass_tasks = 0;
             } else {
                 // feed the measured previous full pass into the binner,
                 // masked against the just-pruned working form (row_ptr
                 // is stable under compaction, so slots stay row-aligned)
                 let costs = (measure && !measured_snap.is_empty())
                     .then(|| Costs::from_trace(&measured_snap, &z, mode));
+                pass_timer.restart();
                 pass_steps = compute_supports_costed(
                     &z, pool, mode, schedule, &s_atomic, costs.as_ref(), measured_opt,
                 );
+                pass_wall_ms = pass_timer.elapsed_ms();
+                pass_tasks = full_tasks(live);
                 pass_incremental = false;
                 last_full_steps = pass_steps;
                 if measure {
@@ -639,7 +658,12 @@ fn ktruss_par_gran_crossover(
         };
     }
     let in_nbrs: Option<InNbrs> = if use_inc { Some(InNbrs::build(&z)) } else { None };
+    let mut pass_timer = crate::util::Timer::start();
     let mut pass_steps = run_full(&z, &s_atomic);
+    let mut pass_wall_ms = pass_timer.elapsed_ms();
+    // tasks pre-split: segment/hybrid subdivide fine (per-edge) tasks,
+    // so the offered count before splitting is the live-edge count
+    let mut pass_tasks = live;
     let mut pass_incremental = false;
     let mut last_full_steps = pass_steps;
     loop {
@@ -655,6 +679,8 @@ fn ktruss_par_gran_crossover(
             removed: f.len(),
             support_steps: pass_steps,
             incremental: pass_incremental,
+            wall_ms: pass_wall_ms,
+            tasks: pass_tasks,
         });
         if f.is_empty() {
             break;
@@ -670,6 +696,8 @@ fn ktruss_par_gran_crossover(
         );
         if go_incremental {
             let nbrs = in_nbrs.as_ref().expect("incremental mode builds the index");
+            pass_tasks = f.len();
+            pass_timer.restart();
             pass_steps = frontier::decrement_frontier_par_gran(
                 &z,
                 pool,
@@ -680,6 +708,7 @@ fn ktruss_par_gran_crossover(
                 &s_atomic,
                 frontier_cost_vec.as_deref(),
             );
+            pass_wall_ms = pass_timer.elapsed_ms();
             pass_incremental = true;
             live = frontier::compact_preserving_par(&mut z, &s_atomic, &f.dying, pool, schedule)
                 .remaining;
@@ -691,8 +720,13 @@ fn ktruss_par_gran_crossover(
             if live == 0 {
                 pass_steps = 0;
                 pass_incremental = false;
+                pass_wall_ms = 0.0;
+                pass_tasks = 0;
             } else {
+                pass_timer.restart();
                 pass_steps = run_full(&z, &s_atomic);
+                pass_wall_ms = pass_timer.elapsed_ms();
+                pass_tasks = live;
                 pass_incremental = false;
                 last_full_steps = pass_steps;
             }

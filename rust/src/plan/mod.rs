@@ -400,10 +400,21 @@ impl Planner {
     /// specs return immediately; otherwise the candidates are scored
     /// (see [`Planner::explain`]).
     pub fn choose(&self, g: &Csr, k: u32) -> ExecutionPlan {
+        self.choose_scored(g, k).0
+    }
+
+    /// [`Planner::choose`] plus the winning candidate's predicted cost
+    /// of one support pass, in ms of the scoring device's machine model
+    /// (`None` when a fully-pinned spec short-circuited scoring). The
+    /// serving executor carries this through the admission queue so the
+    /// drift accounting can join the planner's prediction against the
+    /// measured spans ([`crate::obs::drift`]).
+    pub fn choose_scored(&self, g: &Csr, k: u32) -> (ExecutionPlan, Option<f64>) {
         if let Some(plan) = self.spec.fixed() {
-            return plan;
+            return (plan, None);
         }
-        self.explain(g, k).plan()
+        let ex = self.explain(g, k);
+        (ex.plan(), Some(ex.predicted_ms()))
     }
 
     /// Score every candidate and return the full decision record.

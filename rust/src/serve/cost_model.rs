@@ -187,7 +187,10 @@ impl CostModel {
     /// Record one completed job under an explicit calibration label
     /// (see [`job_label`]): refine that label's EWMA plus the global
     /// fallback, and retain the trace record for persistence (freshest
-    /// [`RECORD_CAP`] kept).
+    /// [`RECORD_CAP`] kept). The retained record carries no plan
+    /// provenance — prefer [`CostModel::observe_planned`] when the
+    /// executed plan is known, so persisted calibration can seed
+    /// per-plan drift baselines across restarts.
     pub fn observe_labeled(
         &self,
         label: &str,
@@ -196,18 +199,38 @@ impl CostModel {
         est_steps: u64,
         wall_ms: f64,
     ) {
+        self.record(TraceRecord::unplanned(label.to_string(), n, m, est_steps, wall_ms));
+    }
+
+    /// [`CostModel::observe_labeled`] with executed-plan provenance:
+    /// the retained trace record carries the plan's schedule,
+    /// granularity, and support axes, so a persisted calibration file
+    /// can re-seed both the per-label EWMAs *and* the per-plan drift
+    /// baselines ([`crate::obs::drift::DriftTracker::seed`]) at
+    /// startup.
+    pub fn observe_planned(
+        &self,
+        label: &str,
+        n: usize,
+        m: usize,
+        est_steps: u64,
+        wall_ms: f64,
+        plan: &crate::plan::ExecutionPlan,
+    ) {
+        let mut rec = TraceRecord::unplanned(label.to_string(), n, m, est_steps, wall_ms);
+        rec.schedule = plan.schedule.to_string();
+        rec.granularity = plan.granularity.to_string();
+        rec.support = plan.support.to_string();
+        self.record(rec);
+    }
+
+    fn record(&self, rec: TraceRecord) {
         let mut st = self.state.lock().unwrap();
-        update(&mut st, label, est_steps, wall_ms);
+        update(&mut st, &rec.kind, rec.est_steps, rec.wall_ms);
         if st.records.len() == RECORD_CAP {
             st.records.pop_front();
         }
-        st.records.push_back(TraceRecord {
-            kind: label.to_string(),
-            n,
-            m,
-            est_steps,
-            wall_ms,
-        });
+        st.records.push_back(rec);
     }
 
     /// Globally calibrated cost of one estimated step, in nanoseconds.
@@ -385,6 +408,28 @@ mod tests {
                 kind_label(&kind)
             );
         }
+    }
+
+    #[test]
+    fn observe_planned_retains_plan_provenance() {
+        let m = CostModel::new();
+        let plan = crate::plan::ExecutionPlan {
+            schedule: crate::par::Schedule::WorkAware,
+            granularity: crate::algo::support::Granularity::Fine,
+            support: SupportMode::Full,
+            crossover: 0.25,
+        };
+        m.observe_planned("ktruss+full", 10, 20, 1000, 0.01, &plan);
+        m.observe_labeled("kmax", 10, 20, 500, 0.02);
+        let records = m.records();
+        assert_eq!(records.len(), 2);
+        assert!(records[0].has_provenance());
+        assert_eq!(records[0].schedule, plan.schedule.to_string());
+        assert_eq!(records[0].granularity, plan.granularity.to_string());
+        assert_eq!(records[0].support, plan.support.to_string());
+        assert!(!records[1].has_provenance());
+        // provenance does not perturb the calibration itself
+        assert!((m.ns_per_step_for("ktruss+full") - 10.0).abs() < 1e-9);
     }
 
     #[test]

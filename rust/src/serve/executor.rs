@@ -182,6 +182,11 @@ pub struct Executor {
     /// The ns/step-calibrated per-job cost model (refined by every
     /// completion).
     pub cost_model: Arc<CostModel>,
+    /// Observability hub: the job → pass span log every shard appends
+    /// to at completion, plus the per-plan-regime drift tracker joining
+    /// admission-time predictions against measured walls
+    /// ([`crate::obs`]).
+    pub obs: Arc<crate::obs::ObsHub>,
     /// The submit-time planner: plans each sparse truss job exactly
     /// once at admission (schedule × granularity × support ×
     /// crossover), informed by the cost model's per-label calibration.
@@ -205,6 +210,10 @@ impl Executor {
         let cfg = ServeConfig { shards: cfg.shards.max(1), max_batch: cfg.max_batch.max(1), ..cfg };
         let metrics = Arc::new(Metrics::with_shards(cfg.shards));
         let cost_model = Arc::new(model);
+        let obs = Arc::new(crate::obs::ObsHub::new());
+        // a pre-seeded model's retained records may carry executed-plan
+        // provenance: replay them so drift baselines survive restarts
+        obs.drift.seed(&cost_model.records(), &cost_model);
         // plan against the base shard pool width (the remainder shards'
         // one extra worker is noise at planning granularity)
         let planner = Planner::new(cfg.workers_per_shard.max(1))
@@ -227,9 +236,10 @@ impl Executor {
             let shards = Arc::clone(&shards);
             let metrics = Arc::clone(&metrics);
             let cost_model = Arc::clone(&cost_model);
+            let obs = Arc::clone(&obs);
             let handle = std::thread::Builder::new()
                 .name(format!("ktruss-shard-{me}"))
-                .spawn(move || shard_loop(me, cfg, &shards, &metrics, &cost_model))
+                .spawn(move || shard_loop(me, cfg, &shards, &metrics, &cost_model, &obs))
                 .expect("spawn shard");
             shard_handles.push(handle);
         }
@@ -248,6 +258,7 @@ impl Executor {
             next_id: AtomicU64::new(1),
             metrics,
             cost_model,
+            obs,
             planner,
             dispatcher: Mutex::new(Some(dispatcher)),
             shard_handles: Mutex::new(shard_handles),
@@ -273,12 +284,20 @@ impl Executor {
     pub fn submit_with(&self, graph: Arc<Csr>, kind: JobKind, opts: SubmitOpts) -> Ticket {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (rtx, rrx) = channel();
-        let plan: Option<ExecutionPlan> = match kind {
-            JobKind::Ktruss { k, .. } => Some(self.planner.choose(&graph, k)),
-            _ => None,
+        let (plan, planned_pass_ms): (Option<ExecutionPlan>, Option<f64>) = match kind {
+            JobKind::Ktruss { k, .. } => {
+                let (p, scored) = self.planner.choose_scored(&graph, k);
+                (Some(p), scored)
+            }
+            _ => (None, None),
         };
         let support = plan.map(|p| p.support).unwrap_or(SupportMode::Full);
         let est_steps = estimate_steps_mode(&graph, &kind, support);
+        // predict under the same label the completion will calibrate
+        // under, so drift accounting compares like with like
+        let predicted_ms = self
+            .cost_model
+            .predict_ms_for(&job_label(&kind, plan.map(|p| p.support)), est_steps);
         let now = Instant::now();
         let adm = Admission {
             req: JobRequest { id, graph, kind },
@@ -287,6 +306,8 @@ impl Executor {
             submitted: now,
             est_steps,
             plan,
+            predicted_ms,
+            planned_pass_ms,
             reply: rtx,
         };
         self.metrics.record_submit();
@@ -429,14 +450,15 @@ fn pack_batch(costs: &[u64], baseline: &[u64]) -> Vec<usize> {
 
 /// One shard: pop the most urgent job from the own queue, steal the
 /// globally most urgent queued job from the other shards when drained,
-/// execute, account, reply. Exits when dispatch is complete and every
-/// queue is empty.
+/// execute, account, record the job span, reply. Exits when dispatch is
+/// complete and every queue is empty.
 fn shard_loop(
     me: usize,
     cfg: ServeConfig,
     shards: &ShardShared,
     metrics: &Metrics,
     cost_model: &CostModel,
+    obs: &crate::obs::ObsHub,
 ) {
     let dense = if cfg.enable_dense { DenseEngine::new().ok() } else { None };
     let router_cfg = dense
@@ -504,6 +526,8 @@ fn shard_loop(
         let Some(adm) = adm else {
             return;
         };
+        let queue_ms = adm.submitted.elapsed().as_secs_f64() * 1e3;
+        let start_us = obs.spans.now_us();
         let engine = route_costed(&router_cfg, &adm.req, adm.est_steps);
         // run under the submit-time plan: the worker never replans
         let result = worker.execute_planned(&adm.req, engine, adm.plan);
@@ -514,23 +538,65 @@ fn shard_loop(
         let ok = result.output.is_ok();
         metrics.record_done(result.engine, serve_ms, ok);
         metrics.record_shard_done(me);
-        if let Some(deadline) = adm.deadline {
-            if Instant::now() > deadline {
-                metrics.record_deadline_miss(me);
-            }
+        let deadline_missed = adm.deadline.is_some_and(|d| Instant::now() > d);
+        if deadline_missed {
+            metrics.record_deadline_miss(me);
         }
         if ok {
+            let label = job_label(&adm.req.kind, result.support);
+            let (n, nnz) = (adm.req.graph.n(), adm.req.graph.nnz());
             // calibrate under the label of what actually ran: truss
             // jobs carry their support-mode provenance, so incremental
-            // and full iteration profiles stay in separate EWMAs
-            cost_model.observe_labeled(
-                &job_label(&adm.req.kind, result.support),
-                adm.req.graph.n(),
-                adm.req.graph.nnz(),
-                adm.est_steps,
-                result.wall_ms,
-            );
+            // and full iteration profiles stay in separate EWMAs —
+            // planned jobs additionally retain the executed plan axes
+            // in their trace record (drift baselines across restarts)
+            match &result.plan {
+                Some(p) => cost_model
+                    .observe_planned(&label, n, nnz, adm.est_steps, result.wall_ms, p),
+                None => {
+                    cost_model.observe_labeled(&label, n, nnz, adm.est_steps, result.wall_ms)
+                }
+            }
         }
+        let span = crate::obs::span::JobSpan {
+            id: adm.req.id,
+            kind: super::cost_model::kind_label(&adm.req.kind).to_string(),
+            n: adm.req.graph.n(),
+            m: adm.req.graph.nnz(),
+            shard: me,
+            schedule: result
+                .plan
+                .map(|p| p.schedule.to_string())
+                .unwrap_or_else(|| "-".to_string()),
+            granularity: result
+                .plan
+                .map(|p| p.granularity.to_string())
+                .unwrap_or_else(|| "-".to_string()),
+            support: result
+                .plan
+                .map(|p| p.support.to_string())
+                .unwrap_or_else(|| "-".to_string()),
+            est_steps: adm.est_steps,
+            total_steps: result.passes.iter().map(|p| p.steps).sum(),
+            predicted_ms: adm.predicted_ms,
+            planned_pass_ms: adm.planned_pass_ms,
+            queue_ms,
+            exec_ms: result.wall_ms,
+            serve_ms,
+            deadline_ms: adm
+                .deadline
+                .map(|d| d.saturating_duration_since(adm.submitted).as_secs_f64() * 1e3),
+            deadline_missed,
+            start_us,
+            ok,
+            passes: result.passes.clone(),
+        };
+        // drift joins the admission-time prediction against the
+        // measured execution wall, keyed by the executed plan regime
+        if ok && result.plan.is_some() {
+            obs.drift.observe(&span.plan_string(), adm.predicted_ms, result.wall_ms);
+        }
+        obs.spans.record(span);
         let _ = adm.reply.send(result);
     }
 }
@@ -705,6 +771,68 @@ mod tests {
             assert_eq!(plan.granularity, crate::algo::support::Granularity::Fine);
             assert!(r.output.is_ok());
         }
+        ex.shutdown();
+    }
+
+    #[test]
+    fn job_spans_carry_exact_steps_and_predictions() {
+        let ex = Executor::start(cfg(1, 2));
+        let g = Arc::new(crate::gen::rmat::rmat(
+            400,
+            2500,
+            crate::gen::rmat::RmatParams::social(),
+            &mut crate::util::Rng::new(23),
+        ));
+        let r = ex
+            .submit(Arc::clone(&g), JobKind::Ktruss { k: 3, mode: Mode::Fine })
+            .wait();
+        assert!(r.output.is_ok());
+        let t = ex.submit(Arc::clone(&g), JobKind::Triangles).wait();
+        assert!(t.output.is_ok());
+        let spans = ex.obs.spans.snapshot();
+        assert_eq!(spans.len(), 2);
+        let truss = spans.iter().find(|s| s.kind == "ktruss").unwrap();
+        // span step totals are exact: the pass spans sum to the job's
+        // total, which equals the result's own measured step count
+        assert!(!truss.passes.is_empty());
+        assert_eq!(
+            truss.passes.iter().map(|p| p.steps).sum::<u64>(),
+            truss.total_steps
+        );
+        assert!(truss.total_steps > 0);
+        assert_eq!(truss.plan_string(), r.plan.unwrap().to_string());
+        assert!(truss.predicted_ms > 0.0);
+        assert!(truss.planned_pass_ms.is_some());
+        assert!(truss.exec_ms >= 0.0 && truss.serve_ms >= truss.exec_ms);
+        assert!(truss.ok);
+        // unplanned kinds record a span too, with placeholder axes
+        let tri = spans.iter().find(|s| s.kind == "triangles").unwrap();
+        assert_eq!(tri.plan_string(), "-/-/-");
+        assert!(tri.passes.is_empty());
+        assert!(tri.planned_pass_ms.is_none());
+        // the planned job fed the drift tracker under its plan regime
+        let drift = ex.obs.drift.snapshot();
+        assert_eq!(drift.len(), 1);
+        assert_eq!(drift[0].plan, truss.plan_string());
+        assert_eq!(drift[0].samples, 1);
+        ex.shutdown();
+    }
+
+    #[test]
+    fn seeded_model_with_provenance_seeds_drift_baselines() {
+        let donor = Executor::start(cfg(1, 1));
+        let g = Arc::new(crate::gen::erdos_renyi::gnm(120, 600, &mut crate::util::Rng::new(5)));
+        donor
+            .submit(Arc::clone(&g), JobKind::Ktruss { k: 3, mode: Mode::Fine })
+            .wait();
+        let records = donor.cost_model.records();
+        donor.shutdown();
+        assert!(records.iter().any(|r| r.has_provenance()));
+        let ex = Executor::start_with_model(cfg(1, 1), CostModel::from_records(&records));
+        assert!(
+            !ex.obs.drift.snapshot().is_empty(),
+            "drift baselines must survive a restart via persisted provenance"
+        );
         ex.shutdown();
     }
 

@@ -69,6 +69,15 @@ pub struct Admission {
     /// admission and carried to the executing worker, so the per-job
     /// graph scan and candidate scoring are never repeated.
     pub plan: Option<ExecutionPlan>,
+    /// The cost model's predicted wall time at admission, in ms
+    /// (per-label calibration over `est_steps`) — joined against the
+    /// measured wall at completion by the drift accounting
+    /// ([`crate::obs::drift`]).
+    pub predicted_ms: f64,
+    /// The planner's scored per-pass prediction for the chosen plan, in
+    /// machine-model ms (`None` when the plan was pinned or the kind is
+    /// unplanned). Recorded on the job span for trace inspection.
+    pub planned_pass_ms: Option<f64>,
     /// Channel the result is delivered on.
     pub reply: Sender<JobResult>,
 }
@@ -176,6 +185,8 @@ mod tests {
             submitted: now,
             est_steps: 1,
             plan: None,
+            predicted_ms: 0.0,
+            planned_pass_ms: None,
             reply: tx,
         }
     }

@@ -23,13 +23,28 @@ use std::collections::BinaryHeap;
 /// Per-task cost in nanoseconds for the support kernel: shared base
 /// steps from [`balance::Costs::from_trace_rows`] (the same derivation
 /// the GPU model reads, so the two models cannot drift) plus this
-/// model's per-task overheads.
+/// model's per-task overheads. `col` is the pass-time column array —
+/// only the hybrid split reads it, to mirror the bitmap representation
+/// selection ([`balance::hybrid_trace_pieces`]).
 fn task_costs_ns(
     m: &CpuMachine,
     trace: &SupportTrace,
     row_ptr: &[u32],
+    col: &[u32],
     gran: Granularity,
 ) -> Vec<f64> {
+    // hybrid splits into two differently-priced task kinds: merge
+    // segments at the segment overhead, bitmap probe chunks at the
+    // cheaper branch-free probe overhead
+    if let Granularity::Hybrid { len } = gran {
+        let (merge, probe) =
+            balance::hybrid_trace_pieces(&trace.fine_steps, row_ptr, col, &trace.live_per_row, len);
+        return merge
+            .iter()
+            .map(|&st| m.segment_task_ns() + st as f64 * m.step_ns)
+            .chain(probe.iter().map(|&st| m.bitmap_task_ns() + st as f64 * m.step_ns))
+            .collect();
+    }
     let base = balance::Costs::from_trace_rows(&trace.fine_steps, row_ptr, gran);
     match gran {
         Granularity::Coarse => base
@@ -41,20 +56,13 @@ fn task_costs_ns(
                 m.coarse_task_ns + live * m.entry_ns + steps as f64 * m.step_ns
             })
             .collect(),
+        Granularity::Hybrid { .. } => unreachable!("handled above"),
         Granularity::Fine => base
             .per_task
             .iter()
             .map(|&st| m.fine_task_ns + st as f64 * m.step_ns)
             .collect(),
         Granularity::Segment { .. } => base
-            .per_task
-            .iter()
-            .map(|&st| m.segment_task_ns() + st as f64 * m.step_ns)
-            .collect(),
-        // trace replay cannot see which pieces become uniform probes,
-        // so hybrid is charged the conservative segment overhead here;
-        // the planner scores hybrid from its real task enumeration
-        Granularity::Hybrid { .. } => base
             .per_task
             .iter()
             .map(|&st| m.segment_task_ns() + st as f64 * m.step_ns)
@@ -124,14 +132,17 @@ pub fn makespan_ns(costs: &[f64], threads: usize, schedule: Schedule) -> f64 {
 }
 
 /// Seconds for one support pass at any granularity under `schedule`.
+/// `col` is the pass-time column array (0 = terminator) the hybrid
+/// split reads to decide which partner rows are bitmap-encoded.
 pub fn support_pass_s(
     m: &CpuMachine,
     trace: &SupportTrace,
     row_ptr: &[u32],
+    col: &[u32],
     gran: Granularity,
     schedule: Schedule,
 ) -> f64 {
-    let costs = task_costs_ns(m, trace, row_ptr, gran);
+    let costs = task_costs_ns(m, trace, row_ptr, col, gran);
     let compute_ns = makespan_ns(&costs, m.threads, schedule);
     // streaming bound: every step touches ~8B of column data, every task
     // ~24B of pointers/support
@@ -256,7 +267,7 @@ mod tests {
             let mut prev = f64::INFINITY;
             for t in [1usize, 2, 4, 8, 16, 48] {
                 let m = CpuMachine::skylake_8160(t);
-                let s = support_pass_s(&m, &tr, z.row_ptr(), gran, Schedule::Static);
+                let s = support_pass_s(&m, &tr, z.row_ptr(), z.col(), gran, Schedule::Static);
                 assert!(s <= prev * 1.001, "gran={gran} t={t}: {s} > {prev}");
                 prev = s;
             }
@@ -274,8 +285,10 @@ mod tests {
         );
         let (z, tr) = trace_of(&g);
         let m = CpuMachine::skylake_8160(48);
-        let coarse = support_pass_s(&m, &tr, z.row_ptr(), Granularity::Coarse, Schedule::Static);
-        let fine = support_pass_s(&m, &tr, z.row_ptr(), Granularity::Fine, Schedule::Static);
+        let coarse =
+            support_pass_s(&m, &tr, z.row_ptr(), z.col(), Granularity::Coarse, Schedule::Static);
+        let fine =
+            support_pass_s(&m, &tr, z.row_ptr(), z.col(), Granularity::Fine, Schedule::Static);
         assert!(fine < coarse, "fine {fine} vs coarse {coarse}");
     }
 
@@ -284,10 +297,40 @@ mod tests {
         let g = crate::gen::grid::road(20_000, 28_000, 0.05, &mut crate::util::Rng::new(6));
         let (z, tr) = trace_of(&g);
         let m = CpuMachine::skylake_8160(48);
-        let coarse = support_pass_s(&m, &tr, z.row_ptr(), Granularity::Coarse, Schedule::Static);
-        let fine = support_pass_s(&m, &tr, z.row_ptr(), Granularity::Fine, Schedule::Static);
+        let coarse =
+            support_pass_s(&m, &tr, z.row_ptr(), z.col(), Granularity::Coarse, Schedule::Static);
+        let fine =
+            support_pass_s(&m, &tr, z.row_ptr(), z.col(), Granularity::Fine, Schedule::Static);
         let ratio = coarse / fine;
         assert!((0.5..2.0).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn hybrid_prices_probe_chunks_below_segment_merges() {
+        // hub-heavy fixture: the hub row is bitmap-encoded, so slots
+        // probing it become cheap uniform chunks instead of merge
+        // segments — the replay price must reflect that, not charge
+        // hybrid as if it were segment (the pre-PR behaviour)
+        let g = crate::testkit::graphs::hub_divergence_comb(64, 256, 800);
+        let (z, tr) = trace_of(&g);
+        let m = CpuMachine::skylake_8160(1); // 1T: makespan = Σ costs, no bw tie
+        let seg = support_pass_s(
+            &m,
+            &tr,
+            z.row_ptr(),
+            z.col(),
+            Granularity::Segment { len: 32 },
+            Schedule::Static,
+        );
+        let hyb = support_pass_s(
+            &m,
+            &tr,
+            z.row_ptr(),
+            z.col(),
+            Granularity::Hybrid { len: 32 },
+            Schedule::Static,
+        );
+        assert!(hyb < seg, "hybrid {hyb} should undercut segment {seg}");
     }
 
     #[test]

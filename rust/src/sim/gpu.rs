@@ -78,46 +78,64 @@ impl KernelEstimate {
 
 /// Per-task costs in *steps* for the support kernel: shared base steps
 /// from [`balance::Costs::from_trace_rows`] plus this model's per-task
-/// overhead for the granularity.
+/// overhead for the granularity. `col` is the pass-time column array —
+/// only the hybrid split reads it, to mirror the bitmap representation
+/// selection ([`balance::hybrid_trace_pieces`]).
 fn task_steps(
     m: &GpuMachine,
     trace: &SupportTrace,
     row_ptr: &[u32],
+    col: &[u32],
     gran: Granularity,
 ) -> Vec<f64> {
+    // hybrid splits into two differently-priced task kinds: merge
+    // segments at the segment overhead, bitmap probe chunks at the
+    // cheaper no-locate probe overhead (and uniform one-step probes are
+    // exactly what the lockstep warp model rewards)
+    if let Granularity::Hybrid { len } = gran {
+        let (merge, probe) =
+            balance::hybrid_trace_pieces(&trace.fine_steps, row_ptr, col, &trace.live_per_row, len);
+        return merge
+            .iter()
+            .map(|&st| st as f64 + m.segment_task_steps())
+            .chain(probe.iter().map(|&st| st as f64 + m.bitmap_task_steps()))
+            .collect();
+    }
     let base = balance::Costs::from_trace_rows(&trace.fine_steps, row_ptr, gran);
     let overhead = match gran {
         Granularity::Coarse => m.coarse_task_steps,
         Granularity::Fine => m.fine_task_steps,
         Granularity::Segment { .. } => m.segment_task_steps(),
-        // trace replay cannot see which pieces become uniform probes,
-        // so hybrid is charged the conservative segment overhead here;
-        // the planner scores hybrid from its real task enumeration
-        Granularity::Hybrid { .. } => m.segment_task_steps(),
+        Granularity::Hybrid { .. } => unreachable!("handled above"),
     };
     base.per_task.iter().map(|&c| c as f64 + overhead).collect()
 }
 
 /// Estimate one support kernel under the default static schedule
-/// (back-compatible entry for the coarse/fine pair).
+/// (back-compatible entry for the coarse/fine pair). `col` is the
+/// pass-time column array (0 = terminator); only hybrid reads it.
 pub fn support_kernel(
     m: &GpuMachine,
     trace: &SupportTrace,
     row_ptr: &[u32],
+    col: &[u32],
     mode: Mode,
 ) -> KernelEstimate {
-    support_kernel_sched(m, trace, row_ptr, mode.into(), Schedule::Static)
+    support_kernel_sched(m, trace, row_ptr, col, mode.into(), Schedule::Static)
 }
 
 /// Estimate one support kernel at any granularity under any schedule.
+/// `col` is the pass-time column array (0 = terminator); only the
+/// hybrid split reads it.
 pub fn support_kernel_sched(
     m: &GpuMachine,
     trace: &SupportTrace,
     row_ptr: &[u32],
+    col: &[u32],
     gran: Granularity,
     schedule: Schedule,
 ) -> KernelEstimate {
-    let costs = task_steps(m, trace, row_ptr, gran);
+    let costs = task_steps(m, trace, row_ptr, col, gran);
     estimate_kernel(m, &costs, trace.total_steps as f64, schedule)
 }
 
@@ -277,8 +295,8 @@ mod tests {
         );
         let (z, tr) = trace_of(&g);
         let m = GpuMachine::v100();
-        let coarse = support_kernel(&m, &tr, z.row_ptr(), Mode::Coarse).total_s();
-        let fine = support_kernel(&m, &tr, z.row_ptr(), Mode::Fine).total_s();
+        let coarse = support_kernel(&m, &tr, z.row_ptr(), z.col(), Mode::Coarse).total_s();
+        let fine = support_kernel(&m, &tr, z.row_ptr(), z.col(), Mode::Fine).total_s();
         assert!(
             coarse > 3.0 * fine,
             "expected big GPU win for fine: coarse {coarse} fine {fine}"
@@ -290,8 +308,8 @@ mod tests {
         let g = crate::gen::grid::road(30_000, 42_000, 0.05, &mut crate::util::Rng::new(2));
         let (z, tr) = trace_of(&g);
         let m = GpuMachine::v100();
-        let coarse = support_kernel(&m, &tr, z.row_ptr(), Mode::Coarse).total_s();
-        let fine = support_kernel(&m, &tr, z.row_ptr(), Mode::Fine).total_s();
+        let coarse = support_kernel(&m, &tr, z.row_ptr(), z.col(), Mode::Coarse).total_s();
+        let fine = support_kernel(&m, &tr, z.row_ptr(), z.col(), Mode::Fine).total_s();
         let ratio = coarse / fine;
         assert!((0.4..2.5).contains(&ratio), "ratio {ratio}");
     }
@@ -376,9 +394,11 @@ mod tests {
             Granularity::Segment { len: 64 },
         ] {
             let stat =
-                support_kernel_sched(&m, &tr, z.row_ptr(), gran, Schedule::Static).total_s();
+                support_kernel_sched(&m, &tr, z.row_ptr(), z.col(), gran, Schedule::Static)
+                    .total_s();
             let wa =
-                support_kernel_sched(&m, &tr, z.row_ptr(), gran, Schedule::WorkAware).total_s();
+                support_kernel_sched(&m, &tr, z.row_ptr(), z.col(), gran, Schedule::WorkAware)
+                    .total_s();
             assert!(wa <= stat * 1.001, "{gran}: workaware {wa} vs static {stat}");
         }
     }
@@ -392,11 +412,13 @@ mod tests {
         let m = GpuMachine::v100();
         for sched in [Schedule::Static, Schedule::WorkAware] {
             let coarse =
-                support_kernel_sched(&m, &tr, z.row_ptr(), Granularity::Coarse, sched).total_s();
+                support_kernel_sched(&m, &tr, z.row_ptr(), z.col(), Granularity::Coarse, sched)
+                    .total_s();
             let seg = support_kernel_sched(
                 &m,
                 &tr,
                 z.row_ptr(),
+                z.col(),
                 Granularity::Segment { len: 64 },
                 sched,
             )
@@ -406,23 +428,71 @@ mod tests {
     }
 
     #[test]
+    fn hybrid_probe_pricing_not_worse_than_segment_on_hub_graph() {
+        // the hub row is bitmap-encoded, so slots probing it become
+        // uniform chunks at the cheaper probe overhead with ≤ the merge
+        // step count — the replay estimate must not charge them as
+        // segment merges (the pre-PR behaviour)
+        let g = crate::testkit::graphs::hub_divergence_comb(64, 256, 800);
+        let (z, tr) = trace_of(&g);
+        let m = GpuMachine::v100();
+        let seg = support_kernel_sched(
+            &m,
+            &tr,
+            z.row_ptr(),
+            z.col(),
+            Granularity::Segment { len: 32 },
+            Schedule::Static,
+        );
+        let hyb = support_kernel_sched(
+            &m,
+            &tr,
+            z.row_ptr(),
+            z.col(),
+            Granularity::Hybrid { len: 32 },
+            Schedule::Static,
+        );
+        assert!(
+            hyb.total_s() <= seg.total_s() * 1.001,
+            "hybrid {} vs segment {}",
+            hyb.total_s(),
+            seg.total_s()
+        );
+        // and the per-task sum is strictly cheaper: fewer steps per
+        // probed slot plus the smaller per-task overhead
+        let seg_sum: f64 =
+            task_steps(&m, &tr, z.row_ptr(), z.col(), Granularity::Segment { len: 32 })
+                .iter()
+                .sum();
+        let hyb_sum: f64 =
+            task_steps(&m, &tr, z.row_ptr(), z.col(), Granularity::Hybrid { len: 32 })
+                .iter()
+                .sum();
+        assert!(hyb_sum < seg_sum, "hybrid work {hyb_sum} vs segment work {seg_sum}");
+    }
+
+    #[test]
     fn segment_splits_bound_warp_divergence() {
         // a single giant fine task: segment-splitting caps the longest
         // warp at ~len steps, so the tail term collapses
         let m = GpuMachine::v100();
         let row_ptr = vec![0u32, 2, 3];
         let fine_steps = vec![100_000u32, 0, 0];
+        // col only matters to the hybrid split; a minimal valid layout
+        // (one live entry pointing at row 1, then terminators) suffices
+        let col = vec![1u32, 0, 0];
         let tr = SupportTrace {
             fine_steps,
             live_per_row: vec![1, 0],
             total_steps: 100_000,
         };
         let fine =
-            support_kernel_sched(&m, &tr, &row_ptr, Granularity::Fine, Schedule::Static);
+            support_kernel_sched(&m, &tr, &row_ptr, &col, Granularity::Fine, Schedule::Static);
         let seg = support_kernel_sched(
             &m,
             &tr,
             &row_ptr,
+            &col,
             Granularity::Segment { len: 64 },
             Schedule::Static,
         );

@@ -143,11 +143,11 @@ fn accumulate(configs: &[SimConfig], totals: &mut [f64], o: &IterObservation) {
     for (cfg, acc) in configs.iter().zip(totals.iter_mut()) {
         let t = match &cfg.device {
             Device::Cpu(m) => {
-                cpu::support_pass_s(m, o.trace, o.row_ptr, cfg.gran, cfg.schedule)
+                cpu::support_pass_s(m, o.trace, o.row_ptr, o.col, cfg.gran, cfg.schedule)
                     + cpu::prune_pass_s(m, o.slots)
             }
             Device::Gpu(m) => {
-                gpu::support_kernel_sched(m, o.trace, o.row_ptr, cfg.gran, cfg.schedule)
+                gpu::support_kernel_sched(m, o.trace, o.row_ptr, o.col, cfg.gran, cfg.schedule)
                     .total_s()
                     + gpu::prune_kernel(m, o.slots).total_s()
             }
