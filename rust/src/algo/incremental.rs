@@ -48,6 +48,21 @@
 //! still treated as a survivor this round — it dies *next* round,
 //! exactly as in the full driver.
 //!
+//! ## Insertion mirror
+//!
+//! Batched edge *insertions* run the same three enumerations on the
+//! **post-insertion** working form, with the frontier's mark set
+//! holding the inserted slots instead of the dying ones. Every
+//! triangle of the new graph that contains an inserted edge is a *new*
+//! triangle, and all three of its legs gain one support — the inserted
+//! legs included, since their supports are built up from zero by
+//! exactly these triangles. Attribution is identical: the triangle is
+//! claimed by its lowest-slot inserted edge, so triangles with two or
+//! three inserted legs are still counted exactly once. After the pass,
+//! the maintained array equals a full recompute on the new graph, slot
+//! for slot ([`increment_task_seq`], [`increment_frontier_seq`], and
+//! the pool variant in [`par::frontier`](crate::par::frontier)).
+//!
 //! ## Cost accounting
 //!
 //! Every kernel returns exact step counts (merge compares + binary
@@ -243,6 +258,35 @@ pub fn mark_frontier_with(z: &ZCsr, k: u32, get: impl Fn(usize) -> u32) -> Front
 pub fn mark_frontier(z: &ZCsr, s: &[u32], k: u32) -> Frontier {
     debug_assert_eq!(s.len(), z.slots());
     mark_frontier_with(z, k, |p| s[p])
+}
+
+/// Build a [`Frontier`] from an explicit per-slot mark set — batch
+/// mutations pick their own slots, so the threshold scan of
+/// [`mark_frontier`] does not apply. Live counts come from the current
+/// working form (marked slots included) and tasks come out in
+/// ascending slot order, exactly as the scan would produce them. For a
+/// deletion batch the marks are the doomed slots of the pre-delete
+/// form; for an insertion batch they are the inserted slots of the
+/// post-insert form.
+pub fn frontier_from_marked(z: &ZCsr, marked: &BitSet) -> Frontier {
+    assert_eq!(marked.len(), z.slots());
+    let col = z.col();
+    let n = z.n();
+    let mut tasks = Vec::new();
+    let mut live = vec![0u32; n];
+    for i in 0..n {
+        let (start, end) = z.row_span(i);
+        for p in start..end {
+            if col[p] == 0 {
+                break;
+            }
+            live[i] += 1;
+            if marked.get(p) {
+                tasks.push(FrontierTask { row: i as u32, p: p as u32 });
+            }
+        }
+    }
+    Frontier { tasks, dying: marked.clone(), live }
 }
 
 /// Binary search `v` in the live region of `row` (`len` live entries),
@@ -452,6 +496,169 @@ pub fn decrement_frontier_traced(
         total += st;
     }
     (total, per_task)
+}
+
+/// Apply one insertion task against a plain support array: enumerate
+/// every **new** triangle attributed to this inserted edge and
+/// increment all three legs — the inserted legs included, since their
+/// supports are built up from zero by exactly these triangles. Runs on
+/// the *post-insertion* working form, with the frontier's mark set
+/// holding the inserted slots ([`frontier_from_marked`]). Returns
+/// exact steps, counted identically to the deletion kernel.
+pub fn increment_task_seq(
+    z: &ZCsr,
+    s: &mut [u32],
+    f: &Frontier,
+    in_nbrs: &InNbrs,
+    t: FrontierTask,
+) -> u64 {
+    let mut steps = 0u64;
+    increment_task_impl(z, f, in_nbrs, t, &mut steps, |slot| {
+        s[slot] += 1;
+    });
+    steps
+}
+
+/// Atomic variant of [`increment_task_seq`] for the worker pool:
+/// concurrent insertion tasks may increment the same slot, so every
+/// bump is a relaxed `fetch_add` (increments are commutative and `S`
+/// is read only after the pass).
+pub fn increment_task_atomic(
+    z: &ZCsr,
+    s: &[AtomicU32],
+    f: &Frontier,
+    in_nbrs: &InNbrs,
+    t: FrontierTask,
+) -> u64 {
+    let mut steps = 0u64;
+    increment_task_impl(z, f, in_nbrs, t, &mut steps, |slot| {
+        s[slot].fetch_add(1, Ordering::Relaxed);
+    });
+    steps
+}
+
+/// Shared insertion enumeration body, the exact mirror of
+/// [`frontier_task_impl`]: same three positions, same attribution to
+/// the lowest marked slot, but every claimed triangle bumps all three
+/// legs (`inc(slot)` performs one support increment).
+#[inline]
+fn increment_task_impl(
+    z: &ZCsr,
+    f: &Frontier,
+    in_nbrs: &InNbrs,
+    t: FrontierTask,
+    steps: &mut u64,
+    mut inc: impl FnMut(usize),
+) {
+    let col = z.col();
+    let inserted = &f.dying;
+    let live = &f.live[..];
+    let u = t.row as usize;
+    let p = t.p as usize;
+    let v = col[p] as usize;
+    debug_assert!(v != 0, "insertion task on a dead slot");
+    let (u_start, _) = z.row_span(u);
+    let u_end = u_start + live[u] as usize;
+    let (v_start, _) = z.row_span(v);
+    let v_end = v_start + live[v] as usize;
+
+    // position ab: merge the live tail after p with row v — every match
+    // w closes the new triangle (u, v, w), always attributed here
+    let mut q = p + 1;
+    let mut r = v_start;
+    while q < u_end && r < v_end {
+        *steps += 1;
+        match col[q].cmp(&col[r]) {
+            std::cmp::Ordering::Less => q += 1,
+            std::cmp::Ordering::Greater => r += 1,
+            std::cmp::Ordering::Equal => {
+                inc(p);
+                inc(q);
+                inc(r);
+                q += 1;
+                r += 1;
+            }
+        }
+    }
+
+    // position ac: b ranges over row u's live prefix before p; the new
+    // triangle (u, b, v) is attributed here unless its ab slot was also
+    // inserted (the lower slot claims it)
+    for pb in u_start..p {
+        *steps += 1;
+        if inserted.get(pb) {
+            continue;
+        }
+        let b = col[pb] as usize;
+        let (b_start, _) = z.row_span(b);
+        if let Some(r) = find_slot(col, b_start, live[b] as usize, v as Vid, steps) {
+            inc(pb);
+            inc(p);
+            inc(r);
+        }
+    }
+
+    // position bc: a ranges over the shorter in-neighbor list of u or v
+    // (the index is built from the post-insertion form, so entries are
+    // exact, but both legs are still resolved on the current rows);
+    // attributed here only when neither other leg was inserted
+    let iu = in_nbrs.of(u);
+    let iv = in_nbrs.of(v);
+    let iv_cut = iv.partition_point(|&a| (a as usize) < u);
+    if iu.len() <= iv_cut {
+        for &a in iu {
+            *steps += 1;
+            let a = a as usize;
+            let (a_start, _) = z.row_span(a);
+            let Some(pa) = find_slot(col, a_start, live[a] as usize, u as Vid, steps) else {
+                continue;
+            };
+            if inserted.get(pa) {
+                continue;
+            }
+            let Some(pav) = find_slot(col, a_start, live[a] as usize, v as Vid, steps) else {
+                continue;
+            };
+            if inserted.get(pav) {
+                continue;
+            }
+            inc(pa);
+            inc(pav);
+            inc(p);
+        }
+    } else {
+        for &a in &iv[..iv_cut] {
+            *steps += 1;
+            let a = a as usize;
+            let (a_start, _) = z.row_span(a);
+            let Some(pav) = find_slot(col, a_start, live[a] as usize, v as Vid, steps) else {
+                continue;
+            };
+            let Some(pa) = find_slot(col, a_start, live[a] as usize, u as Vid, steps) else {
+                continue;
+            };
+            if inserted.get(pa) || inserted.get(pav) {
+                continue;
+            }
+            inc(pa);
+            inc(pav);
+            inc(p);
+        }
+    }
+}
+
+/// Run the whole insertion update sequentially. Returns total steps.
+pub fn increment_frontier_seq(
+    z: &ZCsr,
+    s: &mut [u32],
+    f: &Frontier,
+    in_nbrs: &InNbrs,
+) -> u64 {
+    let mut total = 0u64;
+    for &t in &f.tasks {
+        total += increment_task_seq(z, s, f, in_nbrs, t);
+    }
+    total
 }
 
 /// Compact every row by dropping the dying slots, moving each
@@ -833,5 +1040,133 @@ mod tests {
         assert!(!crossover(300, 100_000, 400, DEFAULT_CROSSOVER_FRAC));
         // degenerate zero proxies never divide by zero
         assert!(!crossover(1, 0, 0, DEFAULT_CROSSOVER_FRAC));
+    }
+
+    /// Splice the maintained supports of `z_old` into the slot layout
+    /// of the post-insertion form `z_new`, marking every slot with no
+    /// old counterpart as inserted. Old rows must be subsets of new
+    /// rows (insertion only grows rows).
+    fn spliced(z_old: &ZCsr, s_old: &[u32], z_new: &ZCsr) -> (Vec<u32>, BitSet) {
+        let mut s = vec![0u32; z_new.slots()];
+        let mut inserted = BitSet::new(z_new.slots());
+        for i in 0..z_new.n() {
+            let (ns, _) = z_new.row_span(i);
+            let (old_row, os) = if i < z_old.n() {
+                (z_old.row_live(i), z_old.row_span(i).0)
+            } else {
+                (&[] as &[Vid], 0)
+            };
+            let mut oj = 0usize;
+            for (j, &c) in z_new.row_live(i).iter().enumerate() {
+                if oj < old_row.len() && old_row[oj] == c {
+                    s[ns + j] = s_old[os + oj];
+                    oj += 1;
+                } else {
+                    inserted.set(ns + j);
+                }
+            }
+            assert_eq!(oj, old_row.len(), "old row {i} is not a subset of the new row");
+        }
+        (s, inserted)
+    }
+
+    /// Drop every `stride`-th edge of `g`, returning the shrunken graph
+    /// and the dropped set (the insertion batch to replay).
+    fn drop_every(g: &Csr, stride: usize) -> (Csr, Vec<(Vid, Vid)>) {
+        let mut kept = Vec::new();
+        let mut dropped = Vec::new();
+        for (i, e) in g.edges().enumerate() {
+            if i % stride == 0 {
+                dropped.push(e);
+            } else {
+                kept.push(e);
+            }
+        }
+        (from_sorted_unique(g.n(), &kept), dropped)
+    }
+
+    #[test]
+    fn increment_matches_recompute_after_insertion() {
+        let g = crate::gen::rmat::rmat(
+            220,
+            1600,
+            crate::gen::rmat::RmatParams::social(),
+            &mut crate::util::Rng::new(41),
+        );
+        let (shrunk, _) = drop_every(&g, 3);
+        let (z_old, s_old) = working(&shrunk);
+        // post-insertion form: the full graph again
+        let z_new = ZCsr::from_csr(&g);
+        let (mut s, inserted) = spliced(&z_old, &s_old, &z_new);
+        let f = frontier_from_marked(&z_new, &inserted);
+        assert_eq!(f.len(), g.nnz() - shrunk.nnz());
+        let in_nbrs = InNbrs::build(&z_new);
+        let steps = increment_frontier_seq(&z_new, &mut s, &f, &in_nbrs);
+        assert!(steps > 0);
+        let (_, want) = working(&g);
+        assert_eq!(s, want, "maintained supports diverged from recompute");
+    }
+
+    #[test]
+    fn increment_atomic_matches_seq_with_exact_steps() {
+        let g = crate::gen::erdos_renyi::gnm(180, 1100, &mut crate::util::Rng::new(19));
+        let (shrunk, _) = drop_every(&g, 4);
+        let (z_old, s_old) = working(&shrunk);
+        let z_new = ZCsr::from_csr(&g);
+        let (s0, inserted) = spliced(&z_old, &s_old, &z_new);
+        let f = frontier_from_marked(&z_new, &inserted);
+        let in_nbrs = InNbrs::build(&z_new);
+        let mut s_seq = s0.clone();
+        let steps_seq = increment_frontier_seq(&z_new, &mut s_seq, &f, &in_nbrs);
+        let s_at: Vec<AtomicU32> = s0.iter().map(|&x| AtomicU32::new(x)).collect();
+        let mut steps_at = 0u64;
+        for &t in &f.tasks {
+            steps_at += increment_task_atomic(&z_new, &s_at, &f, &in_nbrs, t);
+        }
+        let s_at_plain: Vec<u32> = s_at.iter().map(|x| x.load(Ordering::Relaxed)).collect();
+        assert_eq!(s_seq, s_at_plain);
+        assert_eq!(steps_seq, steps_at, "atomic and seq step counts must be identical");
+    }
+
+    #[test]
+    fn zero_triangle_insertion_is_support_noop() {
+        // re-inserting one path edge creates no triangles: the pass
+        // runs (candidate scans count steps) but no support moves
+        let g = crate::testkit::graphs::path(8);
+        let mut kept: Vec<(Vid, Vid)> = g.edges().collect();
+        kept.retain(|&(u, _)| u != 3);
+        let shrunk = from_sorted_unique(g.n(), &kept);
+        let (z_old, s_old) = working(&shrunk);
+        let z_new = ZCsr::from_csr(&g);
+        let (mut s, inserted) = spliced(&z_old, &s_old, &z_new);
+        let f = frontier_from_marked(&z_new, &inserted);
+        assert_eq!(f.len(), 1);
+        let in_nbrs = InNbrs::build(&z_new);
+        increment_frontier_seq(&z_new, &mut s, &f, &in_nbrs);
+        assert!(s.iter().all(|&x| x == 0), "path supports must stay zero");
+    }
+
+    #[test]
+    fn empty_marked_frontier_is_an_increment_noop() {
+        let g = from_sorted_unique(3, &[(0, 1), (0, 2), (1, 2)]);
+        let (z, s) = working(&g);
+        let f = frontier_from_marked(&z, &BitSet::new(z.slots()));
+        assert!(f.is_empty());
+        assert_eq!(f.live, vec![2, 1, 0]);
+        let in_nbrs = InNbrs::build(&z);
+        let mut s2 = s.clone();
+        assert_eq!(increment_frontier_seq(&z, &mut s2, &f, &in_nbrs), 0);
+        assert_eq!(s2, s);
+    }
+
+    #[test]
+    fn frontier_from_marked_matches_mark_frontier() {
+        let g = crate::gen::community::communities(150, 900, 12, &mut crate::util::Rng::new(3));
+        let (z, s) = working(&g);
+        let scanned = mark_frontier(&z, &s, 4);
+        let marked = frontier_from_marked(&z, &scanned.dying);
+        assert_eq!(marked.tasks, scanned.tasks);
+        assert_eq!(marked.dying, scanned.dying);
+        assert_eq!(marked.live, scanned.live);
     }
 }

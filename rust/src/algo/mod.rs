@@ -24,6 +24,7 @@ pub mod kmax;
 pub mod ktruss;
 pub mod prune;
 pub mod reference;
+pub mod stream;
 pub mod support;
 pub mod triangle;
 

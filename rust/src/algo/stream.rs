@@ -1,0 +1,507 @@
+//! Streaming mutations: batched edge inserts/deletes applied to a
+//! resident graph whose supports **and** k-truss are maintained rather
+//! than rebuilt — the Hornet/cuStinger `BatchUpdate` shape on top of
+//! the incremental frontier kernels of [`super::incremental`].
+//!
+//! [`StreamState`] owns the working form of the *current* graph (every
+//! live edge, not just the truss) with exact per-slot supports. One
+//! [`EdgeBatch`] flows through:
+//!
+//! 1. **Normalize** — orient each pair upper-triangular, reject
+//!    self-loops, out-of-range endpoints, in-batch duplicates, deletes
+//!    of absent edges and inserts of present ones (presence is judged
+//!    against the pre-batch graph, so an insert+delete of the same
+//!    edge in one batch keeps the delete and rejects the insert).
+//! 2. **Delete pass** — mark the doomed slots, enumerate the destroyed
+//!    triangles with the deletion frontier kernel, decrement the
+//!    surviving legs, compact preserving supports.
+//! 3. **Insert pass** — rebuild the working form with the new edges
+//!    spliced in (row capacities are fixed, so insertion is a
+//!    copy-on-compact rebuild), carry every survivor's support to its
+//!    new slot, then enumerate the *new* triangles with the insertion
+//!    frontier kernel, incrementing all three legs.
+//! 4. **Truss maintenance** — a sound fast-path check skips
+//!    re-convergence entirely when no deleted edge was in the old
+//!    truss and every inserted edge's post-increment support is below
+//!    `k - 2` (such an insert cannot join the truss, and any new
+//!    triangle it forms contains it, so it cannot re-admit old edges
+//!    either). Otherwise the truss is re-derived by a **warm**
+//!    incremental convergence seeded from the maintained supports —
+//!    the bounded re-admission scan: the dominant initial full pass is
+//!    skipped, and only the cascade rounds run.
+//!
+//! Both passes run sequentially ([`StreamState::apply`]) or on the
+//! pool under an [`ExecutionPlan`] ([`StreamState::apply_par`]); the
+//! two are bit-identical by the seq↔par parity of the frontier
+//! kernels. The epoch-versioned wrapper for concurrent readers is
+//! [`GraphStore`](crate::serve::store::GraphStore).
+
+use crate::algo::incremental::{
+    compact_preserving, decrement_frontier_seq, frontier_from_marked, increment_frontier_seq,
+    InNbrs, SupportMode, DEFAULT_CROSSOVER_FRAC,
+};
+use crate::algo::ktruss::run_to_convergence_plan;
+use crate::graph::builder::from_sorted_unique;
+use crate::graph::zeroterm::ZCsr;
+use crate::graph::{Csr, Vid};
+use crate::par::Pool;
+use crate::plan::ExecutionPlan;
+use crate::util::bitset::BitSet;
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicU32, Ordering};
+
+/// One batch of edge mutations, as submitted (unoriented, unvalidated
+/// — [`StreamState::apply`] normalizes and rejects bad entries).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct EdgeBatch {
+    /// Edges to insert.
+    pub insert: Vec<(Vid, Vid)>,
+    /// Edges to delete.
+    pub delete: Vec<(Vid, Vid)>,
+}
+
+impl EdgeBatch {
+    /// An insert-only batch.
+    pub fn inserts(edges: Vec<(Vid, Vid)>) -> EdgeBatch {
+        EdgeBatch { insert: edges, delete: Vec::new() }
+    }
+
+    /// A delete-only batch.
+    pub fn deletes(edges: Vec<(Vid, Vid)>) -> EdgeBatch {
+        EdgeBatch { insert: Vec::new(), delete: edges }
+    }
+
+    /// Total submitted mutations (before normalization).
+    pub fn len(&self) -> usize {
+        self.insert.len() + self.delete.len()
+    }
+
+    /// Whether the batch carries no mutations at all.
+    pub fn is_empty(&self) -> bool {
+        self.insert.is_empty() && self.delete.is_empty()
+    }
+}
+
+/// What one applied batch did, with exact step accounting.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct BatchOutcome {
+    /// Edges inserted after normalization.
+    pub inserted: usize,
+    /// Edges deleted after normalization.
+    pub deleted: usize,
+    /// Submitted mutations rejected by normalization.
+    pub rejected: usize,
+    /// Exact steps of the delete + insert frontier passes.
+    pub frontier_steps: u64,
+    /// Exact steps of the truss re-convergence (0 on the fast path).
+    pub converge_steps: u64,
+    /// Whether the truss was re-derived (the fast path skipped it).
+    pub recomputed: bool,
+    /// Edges in the maintained k-truss after the batch.
+    pub truss_edges: usize,
+}
+
+/// Orient `(a, b)` upper-triangular, rejecting self-loops and
+/// out-of-range endpoints.
+fn orient(a: Vid, b: Vid, n: usize) -> Option<(Vid, Vid)> {
+    if a == b || a as usize >= n || b as usize >= n {
+        return None;
+    }
+    Some((a.min(b), a.max(b)))
+}
+
+/// The maintained streaming state: current graph, exact supports, and
+/// the k-truss at a fixed `k`.
+#[derive(Clone, Debug)]
+pub struct StreamState {
+    k: u32,
+    /// Working form of the current graph (all live edges).
+    z: ZCsr,
+    /// Exact per-slot supports of `z`.
+    s: Vec<u32>,
+    /// CSR snapshot of `z` (refreshed after every mutating batch).
+    graph: Csr,
+    /// The maintained k-truss of `graph`.
+    truss: Csr,
+}
+
+impl StreamState {
+    /// Start streaming from `g`, computing initial supports and the
+    /// initial k-truss.
+    pub fn new(g: &Csr, k: u32) -> StreamState {
+        let z = ZCsr::from_csr(g);
+        let mut s = Vec::new();
+        crate::algo::support::compute_supports_seq(&z, &mut s);
+        let mut z2 = z.clone();
+        let mut s2 = s.clone();
+        run_to_convergence_plan(
+            &mut z2,
+            &mut s2,
+            k,
+            SupportMode::Incremental,
+            DEFAULT_CROSSOVER_FRAC,
+            true,
+        );
+        StreamState { k, z, s, graph: g.clone(), truss: z2.to_csr() }
+    }
+
+    /// The fixed truss order this state maintains.
+    pub fn k(&self) -> u32 {
+        self.k
+    }
+
+    /// The current graph.
+    pub fn graph(&self) -> &Csr {
+        &self.graph
+    }
+
+    /// The maintained k-truss of the current graph.
+    pub fn truss(&self) -> &Csr {
+        &self.truss
+    }
+
+    /// The maintained per-slot supports. The working form is kept
+    /// canonical after every batch, so the layout (and the values)
+    /// equal a fresh [`ZCsr::from_csr`]`(self.graph())` recompute.
+    pub fn supports(&self) -> &[u32] {
+        &self.s
+    }
+
+    /// Apply one batch sequentially.
+    pub fn apply(&mut self, batch: &EdgeBatch) -> BatchOutcome {
+        self.apply_impl(batch, None)
+    }
+
+    /// Apply one batch with the frontier passes on the pool under
+    /// `plan` (granularity + schedule). Bit-identical to [`apply`]
+    /// (same outcome, same step counts) by the kernels' seq↔par
+    /// parity; the truss re-convergence stays sequential — it is the
+    /// exactness anchor, and the frontier passes are the hot part.
+    ///
+    /// [`apply`]: StreamState::apply
+    pub fn apply_par(
+        &mut self,
+        batch: &EdgeBatch,
+        pool: &Pool,
+        plan: &ExecutionPlan,
+    ) -> BatchOutcome {
+        self.apply_impl(batch, Some((pool, plan)))
+    }
+
+    fn apply_impl(
+        &mut self,
+        batch: &EdgeBatch,
+        par: Option<(&Pool, &ExecutionPlan)>,
+    ) -> BatchOutcome {
+        let n = self.z.n();
+        let mut rejected = 0usize;
+        let mut seen: HashSet<(Vid, Vid)> = HashSet::with_capacity(batch.len());
+        let mut dels: Vec<(Vid, Vid)> = Vec::new();
+        for &(a, b) in &batch.delete {
+            match orient(a, b, n) {
+                Some(e) if seen.insert(e) && self.graph.has_edge(e.0, e.1) => dels.push(e),
+                _ => rejected += 1,
+            }
+        }
+        let mut ins: Vec<(Vid, Vid)> = Vec::new();
+        for &(a, b) in &batch.insert {
+            match orient(a, b, n) {
+                Some(e) if seen.insert(e) && !self.graph.has_edge(e.0, e.1) => ins.push(e),
+                _ => rejected += 1,
+            }
+        }
+
+        let mut frontier_steps = 0u64;
+        // the fast-path evidence, gathered before the truss moves
+        let old_truss_hit = dels.iter().any(|&(u, v)| self.truss.has_edge(u, v));
+
+        if !dels.is_empty() {
+            let mut marked = BitSet::new(self.z.slots());
+            for &(u, v) in &dels {
+                let (start, _) = self.z.row_span(u as usize);
+                let j = self
+                    .z
+                    .row_live(u as usize)
+                    .binary_search(&v)
+                    .expect("normalized delete is present");
+                marked.set(start + j);
+            }
+            let f = frontier_from_marked(&self.z, &marked);
+            let in_nbrs = InNbrs::build(&self.z);
+            match par {
+                Some((pool, plan)) => {
+                    let s_at: Vec<AtomicU32> =
+                        self.s.iter().map(|&x| AtomicU32::new(x)).collect();
+                    frontier_steps += crate::par::frontier::decrement_frontier_par_gran(
+                        &self.z,
+                        pool,
+                        &f,
+                        &in_nbrs,
+                        plan.granularity,
+                        plan.schedule,
+                        &s_at,
+                        None,
+                    );
+                    crate::par::frontier::compact_preserving_par(
+                        &mut self.z,
+                        &s_at,
+                        &f.dying,
+                        pool,
+                        plan.schedule,
+                    );
+                    for (dst, src) in self.s.iter_mut().zip(&s_at) {
+                        *dst = src.load(Ordering::Relaxed);
+                    }
+                }
+                None => {
+                    frontier_steps += decrement_frontier_seq(&self.z, &mut self.s, &f, &in_nbrs);
+                    compact_preserving(&mut self.z, &mut self.s, &f.dying);
+                }
+            }
+        }
+
+        let mut max_inserted_support = 0u32;
+        if !ins.is_empty() {
+            // copy-on-compact rebuild: row capacities of the working
+            // form are fixed, so insertion reconstructs it from the
+            // surviving live edges plus the batch
+            let mut edges: Vec<(Vid, Vid)> = Vec::with_capacity(self.z.live_edges() + ins.len());
+            for i in 0..n {
+                for &v in self.z.row_live(i) {
+                    edges.push((i as Vid, v));
+                }
+            }
+            edges.extend(ins.iter().copied());
+            edges.sort_unstable();
+            let g_new = from_sorted_unique(n, &edges);
+            let z_new = ZCsr::from_csr(&g_new);
+            // splice every survivor's maintained support into its new
+            // slot; slots with no old counterpart are the inserted set
+            let mut s_new = vec![0u32; z_new.slots()];
+            let mut inserted = BitSet::new(z_new.slots());
+            for i in 0..n {
+                let (ns, _) = z_new.row_span(i);
+                let (os, _) = self.z.row_span(i);
+                let old_row = self.z.row_live(i);
+                let mut oj = 0usize;
+                for (j, &c) in z_new.row_live(i).iter().enumerate() {
+                    if oj < old_row.len() && old_row[oj] == c {
+                        s_new[ns + j] = self.s[os + oj];
+                        oj += 1;
+                    } else {
+                        inserted.set(ns + j);
+                    }
+                }
+                debug_assert_eq!(oj, old_row.len(), "old row {i} must survive the rebuild");
+            }
+            let f = frontier_from_marked(&z_new, &inserted);
+            let in_nbrs = InNbrs::build(&z_new);
+            match par {
+                Some((pool, plan)) => {
+                    let s_at: Vec<AtomicU32> =
+                        s_new.iter().map(|&x| AtomicU32::new(x)).collect();
+                    frontier_steps += crate::par::frontier::increment_frontier_par_gran(
+                        &z_new,
+                        pool,
+                        &f,
+                        &in_nbrs,
+                        plan.granularity,
+                        plan.schedule,
+                        &s_at,
+                        None,
+                    );
+                    for (dst, src) in s_new.iter_mut().zip(&s_at) {
+                        *dst = src.load(Ordering::Relaxed);
+                    }
+                }
+                None => {
+                    frontier_steps += increment_frontier_seq(&z_new, &mut s_new, &f, &in_nbrs);
+                }
+            }
+            for t in &f.tasks {
+                max_inserted_support = max_inserted_support.max(s_new[t.p as usize]);
+            }
+            self.z = z_new;
+            self.s = s_new;
+        }
+
+        let mutated = !dels.is_empty() || !ins.is_empty();
+        if mutated {
+            self.graph = self.z.to_csr();
+            if ins.is_empty() {
+                // deletes compact within the old row capacities; rebuild
+                // the working form canonically so the slot layout always
+                // equals `ZCsr::from_csr(graph)` (the supports contract —
+                // the insert pass re-canonicalizes as a side effect)
+                let z_new = ZCsr::from_csr(&self.graph);
+                let mut s_new = vec![0u32; z_new.slots()];
+                for i in 0..n {
+                    let (ns, _) = z_new.row_span(i);
+                    let (os, _) = self.z.row_span(i);
+                    let len = z_new.row_live(i).len();
+                    s_new[ns..ns + len].copy_from_slice(&self.s[os..os + len]);
+                }
+                self.z = z_new;
+                self.s = s_new;
+            }
+        }
+
+        // fast path: deleting non-truss edges cannot shrink the truss
+        // (it survives in G - D and stays maximal), and an inserted
+        // edge below the support threshold cannot join it — nor
+        // re-admit anything, since every triangle it creates contains
+        // it. Anything else re-derives the truss by warm incremental
+        // convergence from the maintained supports (the re-admission
+        // scan: the initial full pass is skipped, only cascade rounds
+        // run).
+        let threshold = self.k.saturating_sub(2);
+        let ins_hit = !ins.is_empty() && max_inserted_support >= threshold;
+        let mut converge_steps = 0u64;
+        let mut recomputed = false;
+        if mutated && (old_truss_hit || ins_hit) {
+            recomputed = true;
+            let mut z2 = self.z.clone();
+            let mut s2 = self.s.clone();
+            let (_iters, stats) = run_to_convergence_plan(
+                &mut z2,
+                &mut s2,
+                self.k,
+                SupportMode::Incremental,
+                DEFAULT_CROSSOVER_FRAC,
+                true,
+            );
+            converge_steps = stats.iter().map(|st| st.support_steps).sum();
+            self.truss = z2.to_csr();
+        }
+
+        BatchOutcome {
+            inserted: ins.len(),
+            deleted: dels.len(),
+            rejected,
+            frontier_steps,
+            converge_steps,
+            recomputed,
+            truss_edges: self.truss.nnz(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::incremental::SupportMode;
+    use crate::algo::ktruss::ktruss_mode;
+    use crate::algo::support::{compute_supports_seq, Mode};
+
+    /// Maintained state must equal a from-scratch derivation on the
+    /// mutated graph: exact supports, identical truss.
+    fn assert_matches_scratch(st: &StreamState, ctx: &str) {
+        let z = ZCsr::from_csr(st.graph());
+        let mut want = Vec::new();
+        compute_supports_seq(&z, &mut want);
+        assert_eq!(st.supports(), &want[..], "{ctx}: maintained supports diverged");
+        let scratch = ktruss_mode(st.graph(), st.k(), Mode::Fine, SupportMode::Full);
+        assert_eq!(st.truss(), &scratch.truss, "{ctx}: maintained truss diverged");
+    }
+
+    #[test]
+    fn delete_then_reinsert_restores_the_state() {
+        let g = crate::gen::rmat::rmat(
+            200,
+            1400,
+            crate::gen::rmat::RmatParams::social(),
+            &mut crate::util::Rng::new(11),
+        );
+        let mut st = StreamState::new(&g, 4);
+        let initial_truss = st.truss().clone();
+        let victims: Vec<(Vid, Vid)> =
+            g.edges().enumerate().filter(|(i, _)| i % 7 == 0).map(|(_, e)| e).collect();
+        let out = st.apply(&EdgeBatch::deletes(victims.clone()));
+        assert_eq!(out.deleted, victims.len());
+        assert_eq!(out.rejected, 0);
+        assert_matches_scratch(&st, "after delete");
+        let n_victims = victims.len();
+        let out = st.apply(&EdgeBatch::inserts(victims));
+        assert_eq!(out.inserted, n_victims);
+        assert_matches_scratch(&st, "after reinsert");
+        assert_eq!(st.graph(), &g, "graph must round-trip");
+        assert_eq!(st.truss(), &initial_truss, "truss must round-trip");
+    }
+
+    #[test]
+    fn rejections_are_counted_and_ignored() {
+        let g = crate::graph::builder::from_sorted_unique(4, &[(0, 1), (0, 2), (1, 2)]);
+        let mut st = StreamState::new(&g, 3);
+        let before = st.graph().clone();
+        let out = st.apply(&EdgeBatch {
+            // self-loop, present edge, duplicate pair (reversed), out of range
+            insert: vec![(1, 1), (0, 1), (1, 3), (3, 1), (0, 9)],
+            // absent edge
+            delete: vec![(0, 3)],
+        });
+        assert_eq!(out.inserted, 1, "only (1,3) is insertable");
+        assert_eq!(out.deleted, 0);
+        assert_eq!(out.rejected, 5);
+        assert_matches_scratch(&st, "after rejects");
+        assert_ne!(st.graph(), &before);
+    }
+
+    #[test]
+    fn empty_batch_is_a_noop() {
+        let g = crate::graph::Csr::diamond();
+        let mut st = StreamState::new(&g, 3);
+        let before = st.clone();
+        let out = st.apply(&EdgeBatch::default());
+        assert_eq!(out.frontier_steps, 0);
+        assert_eq!(out.converge_steps, 0);
+        assert!(!out.recomputed);
+        assert_eq!(st.graph(), before.graph());
+        assert_eq!(st.truss(), before.truss());
+        assert_eq!(st.supports(), before.supports());
+    }
+
+    #[test]
+    fn fast_path_skips_reconvergence_when_sound() {
+        // diamond + pendant: the pendant edge is not in the 3-truss,
+        // so deleting it must take the fast path
+        let g = crate::graph::builder::from_sorted_unique(
+            5,
+            &[(0, 1), (0, 2), (0, 3), (1, 2), (2, 3), (3, 4)],
+        );
+        let mut st = StreamState::new(&g, 3);
+        let out = st.apply(&EdgeBatch::deletes(vec![(3, 4)]));
+        assert!(!out.recomputed, "non-truss delete must not re-converge");
+        assert_eq!(out.converge_steps, 0);
+        assert_matches_scratch(&st, "after pendant delete");
+        // re-inserting it creates zero triangles: fast path again
+        let out = st.apply(&EdgeBatch::inserts(vec![(3, 4)]));
+        assert!(!out.recomputed, "zero-triangle insert must not re-converge");
+        assert_matches_scratch(&st, "after pendant reinsert");
+        // deleting a truss edge must re-converge
+        let out = st.apply(&EdgeBatch::deletes(vec![(0, 2)]));
+        assert!(out.recomputed);
+        assert_matches_scratch(&st, "after truss delete");
+    }
+
+    #[test]
+    fn mixed_batch_applies_deletes_before_inserts() {
+        let g = crate::gen::erdos_renyi::gnm(120, 700, &mut crate::util::Rng::new(29));
+        let mut st = StreamState::new(&g, 4);
+        let all: Vec<(Vid, Vid)> = g.edges().collect();
+        let dels: Vec<(Vid, Vid)> = all.iter().copied().step_by(9).collect();
+        // inserts of currently-absent pairs
+        let mut ins = Vec::new();
+        let mut rng = crate::util::Rng::new(31);
+        while ins.len() < 20 {
+            let u = rng.below(119) as Vid;
+            let v = (u + 1 + rng.below((120 - u as u64).saturating_sub(1).max(1)) as Vid).min(119);
+            if u != v && !g.has_edge(u, v) && !ins.contains(&(u, v)) {
+                ins.push((u, v));
+            }
+        }
+        let out = st.apply(&EdgeBatch { insert: ins.clone(), delete: dels.clone() });
+        assert_eq!(out.deleted, dels.len());
+        assert_eq!(out.inserted, ins.len());
+        assert_matches_scratch(&st, "after mixed batch");
+    }
+}

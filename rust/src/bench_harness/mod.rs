@@ -7,6 +7,7 @@ pub mod figs;
 pub mod plan_ablation;
 pub mod report;
 pub mod serve_bench;
+pub mod stream_bench;
 pub mod table1;
 pub mod workload;
 

@@ -1,0 +1,332 @@
+//! Streaming maintenance workload: replay the deterministic
+//! [`churn_chain`](crate::testkit::graphs::churn_chain) mutation script
+//! two ways and report the merge-step economics of maintenance.
+//!
+//! * **Differential churn run**: a sequential
+//!   [`StreamState`](crate::algo::stream::StreamState) applies every
+//!   batch; after each one the maintained truss is checked
+//!   **bit-identical** against a from-scratch
+//!   [`SupportMode::Full`](crate::algo::incremental::SupportMode::Full)
+//!   recompute of the mutated graph, and both sides' merge steps are
+//!   accumulated. The run fails unless maintenance is at least
+//!   [`STEP_RATIO_FLOOR`]× cheaper — the paper's incremental-frontier
+//!   argument restated for mutations.
+//! * **Serve run**: the same script through a
+//!   [`GraphStore`](crate::serve::GraphStore) on the sharded executor —
+//!   `Mutate` jobs serialized ticket-by-ticket, one pinned-epoch read
+//!   racing each batch — verifying planned spans, epoch sequencing, and
+//!   pinned-read isolation under the open-loop mix.
+
+use crate::algo::incremental::SupportMode;
+use crate::algo::ktruss::ktruss_mode;
+use crate::algo::stream::StreamState;
+use crate::algo::support::Mode;
+use crate::coordinator::job::{JobKind, JobOutput};
+use crate::serve::{Executor, GraphStore, ServeConfig};
+use crate::util::Timer;
+use anyhow::{bail, Result};
+use std::sync::Arc;
+
+/// Minimum scratch-steps / maintained-steps ratio the churn run must
+/// clear (the CI smoke gate).
+pub const STEP_RATIO_FLOOR: f64 = 3.0;
+
+/// Workload knobs.
+#[derive(Clone, Debug)]
+pub struct StreamConfig {
+    /// Chain depth of the underlying `peel_chain` fixture (≥ 4).
+    pub depth: usize,
+    /// Churn batches to replay (alternating delete / re-insert).
+    pub batches: usize,
+    /// Truss order maintained by the store.
+    pub k: u32,
+    /// Executor shards for the serve run.
+    pub shards: usize,
+    /// Total worker budget for the serve run.
+    pub total_workers: usize,
+    /// Optional Chrome-trace path for the serve run's job spans.
+    pub trace_out: Option<String>,
+}
+
+impl Default for StreamConfig {
+    fn default() -> Self {
+        StreamConfig {
+            depth: 10,
+            batches: 12,
+            k: 4,
+            shards: 1,
+            total_workers: 3,
+            trace_out: None,
+        }
+    }
+}
+
+/// Outcome of the sequential differential churn run.
+#[derive(Clone, Copy, Debug)]
+pub struct ChurnRun {
+    /// Batches applied (every one verified against scratch).
+    pub batches: usize,
+    /// Batches that took the re-convergence slow path.
+    pub recomputed: usize,
+    /// Merge steps the maintenance path spent (frontier + converge).
+    pub maintained_steps: u64,
+    /// Merge steps the from-scratch recomputes spent.
+    pub scratch_steps: u64,
+    /// Wall time of the maintenance side, ms.
+    pub wall_ms: f64,
+}
+
+impl ChurnRun {
+    /// How many times cheaper maintenance was than recomputation.
+    pub fn ratio(&self) -> f64 {
+        self.scratch_steps as f64 / (self.maintained_steps as f64).max(1.0)
+    }
+}
+
+/// Outcome of the executor-served run.
+#[derive(Clone, Debug)]
+pub struct ServeRun {
+    /// Mutation batches served (strictly serialized).
+    pub batches: usize,
+    /// Pinned-epoch reads raced against the mutations.
+    pub reads: usize,
+    /// Epoch the store ended on (equals `batches`).
+    pub final_epoch: u64,
+    /// `Mutate` jobs that carried an execution plan.
+    pub planned: usize,
+    /// Job spans captured (written to `trace_out` when set).
+    pub spans: usize,
+    /// Where the trace landed, if requested.
+    pub trace_path: Option<String>,
+}
+
+/// Full streaming report.
+#[derive(Clone, Debug)]
+pub struct StreamReport {
+    /// The config the run used.
+    pub depth: usize,
+    /// Batches in the churn script.
+    pub batches: usize,
+    /// Maintained truss order.
+    pub k: u32,
+    /// The sequential differential run.
+    pub churn: ChurnRun,
+    /// The executor-served run.
+    pub serve: ServeRun,
+}
+
+impl StreamReport {
+    /// Render the report as plain text (the CI smoke greps
+    /// `stream[churn-chain]` and the final `stream-ok` line).
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "# stream: churn-chain depth {}, {} batches, k={}\n",
+            self.depth, self.batches, self.k
+        );
+        out.push_str(&format!(
+            "stream[churn-chain] maintained_steps={} scratch_steps={} ratio={:.2}x \
+             (floor {STEP_RATIO_FLOOR:.1}x) recomputed={}/{} wall={:.2} ms\n",
+            self.churn.maintained_steps,
+            self.churn.scratch_steps,
+            self.churn.ratio(),
+            self.churn.recomputed,
+            self.churn.batches,
+            self.churn.wall_ms,
+        ));
+        out.push_str(&format!(
+            "stream[serve] batches={} reads={} final_epoch={} planned={}/{} spans={}\n",
+            self.serve.batches,
+            self.serve.reads,
+            self.serve.final_epoch,
+            self.serve.planned,
+            self.serve.batches,
+            self.serve.spans,
+        ));
+        if let Some(p) = &self.serve.trace_path {
+            out.push_str(&format!("trace: wrote {} job span(s) to {p}\n", self.serve.spans));
+        }
+        out.push_str("stream-ok\n");
+        out
+    }
+}
+
+/// Sequential differential run: maintain, verify against scratch after
+/// every batch, account both sides' merge steps.
+fn run_churn(cfg: &StreamConfig) -> Result<ChurnRun> {
+    let (g, script) = crate::testkit::graphs::churn_chain(cfg.depth, cfg.batches);
+    let mut st = StreamState::new(&g, cfg.k);
+    let mut maintained: u64 = 0;
+    let mut scratch_steps: u64 = 0;
+    let mut recomputed = 0usize;
+    let t = Timer::start();
+    for (b, batch) in script.iter().enumerate() {
+        let out = st.apply(batch);
+        maintained += out.frontier_steps + out.converge_steps;
+        recomputed += out.recomputed as usize;
+        let scratch = ktruss_mode(st.graph(), cfg.k, Mode::Fine, SupportMode::Full);
+        scratch_steps += scratch.total_support_steps();
+        if st.truss() != &scratch.truss {
+            bail!(
+                "batch {b}: maintained truss ({} edges) diverged from scratch ({} edges)",
+                st.truss().nnz(),
+                scratch.truss.nnz()
+            );
+        }
+    }
+    let wall_ms = t.elapsed_ms();
+    let run = ChurnRun {
+        batches: script.len(),
+        recomputed,
+        maintained_steps: maintained,
+        scratch_steps,
+        wall_ms,
+    };
+    if run.ratio() < STEP_RATIO_FLOOR {
+        bail!(
+            "maintenance spent {} steps vs {} from scratch ({:.2}x < the {STEP_RATIO_FLOOR:.1}x \
+             floor)",
+            run.maintained_steps,
+            run.scratch_steps,
+            run.ratio()
+        );
+    }
+    Ok(run)
+}
+
+/// Serve run: the same script through a [`GraphStore`] on the executor,
+/// one pinned-epoch read racing each serialized mutation.
+fn run_serve(cfg: &StreamConfig) -> Result<ServeRun> {
+    let (g, script) = crate::testkit::graphs::churn_chain(cfg.depth, cfg.batches);
+    let store = Arc::new(GraphStore::new(&g, cfg.k));
+    let ex = Executor::start(
+        ServeConfig { shards: cfg.shards.max(1), enable_dense: false, ..Default::default() }
+            .with_total_workers(cfg.total_workers.max(2)),
+    );
+    let mut planned = 0usize;
+    let mut reads = Vec::with_capacity(script.len());
+    for (i, batch) in script.iter().enumerate() {
+        let pinned = store.pin();
+        // open-loop read against the pinned pre-batch epoch
+        reads.push((
+            pinned.clone(),
+            ex.submit(pinned.graph.clone(), JobKind::Ktruss { k: cfg.k, mode: Mode::Fine }),
+        ));
+        let ticket = ex.submit(
+            pinned.graph.clone(),
+            JobKind::Mutate { store: store.clone(), batch: Arc::new(batch.clone()) },
+        );
+        // batches are order-dependent: wait this one out before the next
+        let r = ticket.wait();
+        planned += r.plan.is_some() as usize;
+        match r.output.map_err(|e| anyhow::anyhow!("batch {i}: {e}"))? {
+            JobOutput::Mutate { epoch, .. } if epoch == (i + 1) as u64 => {}
+            JobOutput::Mutate { epoch, .. } => {
+                bail!("batch {i}: published epoch {epoch}, expected {}", i + 1)
+            }
+            other => bail!("batch {i}: unexpected output {other:?}"),
+        }
+    }
+    let n_reads = reads.len();
+    for (pinned, ticket) in reads {
+        let r = ticket.wait();
+        match r.output.map_err(|e| anyhow::anyhow!("read @ epoch {}: {e}", pinned.epoch))? {
+            JobOutput::Ktruss { truss_edges, .. } => {
+                let want = ktruss_mode(&pinned.graph, cfg.k, Mode::Fine, SupportMode::Full);
+                if truss_edges != want.truss.nnz() {
+                    bail!(
+                        "pinned read @ epoch {} saw {truss_edges} truss edges, expected {}",
+                        pinned.epoch,
+                        want.truss.nnz()
+                    );
+                }
+            }
+            other => bail!("unexpected read output {other:?}"),
+        }
+    }
+    let spans = ex.obs.spans.snapshot();
+    let mutate_spans = spans.iter().filter(|s| s.kind == "mutate").count();
+    if mutate_spans != script.len() {
+        bail!("expected {} mutate spans, saw {mutate_spans}", script.len());
+    }
+    let trace_path = match &cfg.trace_out {
+        Some(path) => {
+            crate::obs::export::write_trace(std::path::Path::new(path), &spans)?;
+            Some(path.clone())
+        }
+        None => None,
+    };
+    let final_epoch = store.epoch();
+    ex.shutdown();
+    Ok(ServeRun {
+        batches: script.len(),
+        reads: n_reads,
+        final_epoch,
+        planned,
+        spans: spans.len(),
+        trace_path,
+    })
+}
+
+/// Run both halves of the streaming workload.
+pub fn run(cfg: &StreamConfig, progress: impl Fn(&str)) -> Result<StreamReport> {
+    if cfg.depth < 4 {
+        bail!("stream bench needs --depth >= 4 (peel_chain floor)");
+    }
+    if cfg.batches == 0 {
+        bail!("stream bench needs >= 1 batch");
+    }
+    progress(&format!(
+        "churn: {} batches over peel_chain({}) at k={}",
+        cfg.batches, cfg.depth, cfg.k
+    ));
+    let churn = run_churn(cfg)?;
+    progress(&format!(
+        "churn done: {:.2}x fewer steps than scratch; serving the same script",
+        churn.ratio()
+    ));
+    let serve = run_serve(cfg)?;
+    if serve.planned != serve.batches {
+        let missing = serve.batches - serve.planned;
+        bail!("{missing} of {} mutate jobs arrived unplanned", serve.batches);
+    }
+    if serve.final_epoch != serve.batches as u64 {
+        bail!("store ended on epoch {}, expected {}", serve.final_epoch, serve.batches);
+    }
+    Ok(StreamReport {
+        depth: cfg.depth,
+        batches: cfg.batches,
+        k: cfg.k,
+        churn,
+        serve,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_stream_bench_completes_and_renders() {
+        let cfg = StreamConfig {
+            depth: 6,
+            batches: 4,
+            total_workers: 2,
+            ..Default::default()
+        };
+        let report = run(&cfg, |_| {}).unwrap();
+        assert_eq!(report.churn.batches, 4);
+        assert_eq!(report.churn.recomputed, 4, "every churn batch reconverges");
+        assert!(report.churn.ratio() >= STEP_RATIO_FLOOR);
+        assert_eq!(report.serve.final_epoch, 4);
+        assert_eq!(report.serve.planned, 4);
+        let text = report.render();
+        assert!(text.contains("stream[churn-chain]"));
+        assert!(text.contains("stream-ok"));
+    }
+
+    #[test]
+    fn degenerate_configs_are_rejected() {
+        assert!(run(&StreamConfig { depth: 3, ..Default::default() }, |_| {}).is_err());
+        assert!(run(&StreamConfig { batches: 0, ..Default::default() }, |_| {}).is_err());
+    }
+}

@@ -21,6 +21,19 @@ pub enum JobKind {
     Decompose,
     /// Triangle count.
     Triangles,
+    /// Apply one edge-mutation batch to a versioned resident graph
+    /// ([`crate::serve::store::GraphStore`]), publishing the next
+    /// epoch. The accompanying request graph is the pinned pre-batch
+    /// snapshot (it sizes the cost estimate and the job span); the
+    /// mutation itself runs against the store. Batches are
+    /// order-dependent — submitters serialize them by waiting on each
+    /// `Mutate` ticket before submitting the next.
+    Mutate {
+        /// The store to mutate.
+        store: Arc<crate::serve::store::GraphStore>,
+        /// The batch to apply.
+        batch: Arc<crate::algo::stream::EdgeBatch>,
+    },
 }
 
 /// A submitted request.
@@ -82,6 +95,22 @@ pub enum JobOutput {
     Triangles {
         /// Total triangles.
         count: u64,
+    },
+    /// Applied mutation batch: the published epoch and what the batch
+    /// did (see [`crate::algo::stream::BatchOutcome`]).
+    Mutate {
+        /// Epoch published by this batch.
+        epoch: u64,
+        /// Edges inserted after normalization.
+        inserted: usize,
+        /// Edges deleted after normalization.
+        deleted: usize,
+        /// Submitted mutations rejected by normalization.
+        rejected: usize,
+        /// Whether the truss was re-derived (vs the sound fast path).
+        recomputed: bool,
+        /// Edges in the maintained k-truss after the batch.
+        truss_edges: usize,
     },
 }
 

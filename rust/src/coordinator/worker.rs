@@ -45,11 +45,15 @@ impl Worker {
 
     /// The plan this worker would run `req` under: `Some` only for job
     /// kinds whose sparse path actually runs on the pool (fixed-k
-    /// truss). Kmax, decompose and triangle counting execute sequential
+    /// truss, and mutation batches whose frontier passes it drives).
+    /// Kmax, decompose and triangle counting execute sequential
     /// algorithms, so no plan is computed (or paid for) there.
     pub fn pick_plan(&self, req: &JobRequest) -> Option<ExecutionPlan> {
         match req.kind {
             JobKind::Ktruss { k, .. } => Some(self.planner.choose(&req.graph, k)),
+            JobKind::Mutate { ref store, .. } => {
+                Some(self.planner.choose(&req.graph, store.k()))
+            }
             _ => None,
         }
     }
@@ -143,6 +147,45 @@ impl Worker {
                 JobOutput::Triangles { count: triangle::count_triangles(&req.graph) },
                 Vec::new(),
             ),
+            JobKind::Mutate { ref store, ref batch } => {
+                let (snap, out) = match plan {
+                    Some(p) => store.apply_par(batch, &self.pool, &p),
+                    None => store.apply(batch),
+                };
+                // pass 0: the frontier decrement/increment sweep;
+                // pass 1 (when taken): the re-convergence tail
+                let mut passes = vec![crate::obs::span::PassSpan {
+                    iter: 0,
+                    incremental: true,
+                    live_edges: snap.graph.nnz(),
+                    removed: out.deleted,
+                    steps: out.frontier_steps,
+                    tasks: out.inserted + out.deleted,
+                    wall_ms: 0.0,
+                }];
+                if out.recomputed {
+                    passes.push(crate::obs::span::PassSpan {
+                        iter: 1,
+                        incremental: true,
+                        live_edges: snap.graph.nnz(),
+                        removed: 0,
+                        steps: out.converge_steps,
+                        tasks: 0,
+                        wall_ms: 0.0,
+                    });
+                }
+                (
+                    JobOutput::Mutate {
+                        epoch: snap.epoch,
+                        inserted: out.inserted,
+                        deleted: out.deleted,
+                        rejected: out.rejected,
+                        recomputed: out.recomputed,
+                        truss_edges: out.truss_edges,
+                    },
+                    passes,
+                )
+            }
         })
     }
 

@@ -7,9 +7,12 @@
 //!   generate   materialize a SNAP-replica graph to a file
 //!   suite      list the replica suite with structural stats
 //!   bench      regenerate a paper table/figure (table1|fig2|fig3|fig4|ablations),
-//!              the GPU schedule sweep (gpu-sched), or the serving throughput
-//!              workload (serve)
+//!              the GPU schedule sweep (gpu-sched), the serving throughput
+//!              workload (serve), or the streaming maintenance workload (stream)
 //!   serve      start the sharded executor and run a mixed-priority job stream
+//!   mutate     replay an edge-mutation script against a versioned resident
+//!              graph (one planned Mutate job per batch, epochs advance per
+//!              batch, final differential verify against a scratch recompute)
 //!   metrics    Prometheus-style exposition snapshot after a short demo stream
 //!   plan       print the planner's per-candidate predicted costs and the
 //!              chosen ExecutionPlan ("explain" mode)
@@ -24,8 +27,11 @@ use ktruss::algo::support::{Granularity, Mode, DEFAULT_SEGMENT_LEN};
 // NB: import the function under a distinct name — importing the
 // `algo::ktruss` *module* here would shadow the `ktruss` crate name.
 use ktruss::algo::ktruss::ktruss_mode as ktruss_seq_mode;
+use ktruss::algo::stream::EdgeBatch;
 use ktruss::algo::{decompose, kmax};
-use ktruss::bench_harness::{ablations, figs, plan_ablation, report, serve_bench, table1, Workload};
+use ktruss::bench_harness::{
+    ablations, figs, plan_ablation, report, serve_bench, stream_bench, table1, Workload,
+};
 use ktruss::cli::Args;
 use ktruss::coordinator::JobKind;
 use ktruss::cost::persist;
@@ -33,7 +39,7 @@ use ktruss::gen::suite;
 use ktruss::graph::{io, stats, Csr};
 use ktruss::par::{ktruss_par_plan, Pool, Schedule};
 use ktruss::plan::{PlanSpec, Planner};
-use ktruss::serve::{CostModel, Executor, Priority, ServeConfig, SubmitOpts};
+use ktruss::serve::{CostModel, Executor, GraphStore, Priority, ServeConfig, SubmitOpts};
 use ktruss::sim::{simulate_ktruss_mode, SimConfig, GPU_SCHEDULES};
 use ktruss::util::fmt::{speedup, Table};
 use ktruss::util::Timer;
@@ -62,6 +68,7 @@ fn main() {
         "suite" => cmd_suite(&args),
         "bench" => cmd_bench(&args),
         "serve" => cmd_serve(&args),
+        "mutate" => cmd_mutate(&args),
         "metrics" => cmd_metrics(&args),
         "plan" => cmd_plan(&args),
         "sim" => cmd_sim(&args),
@@ -105,6 +112,10 @@ fn print_help() {
            bench gpu-sched [--seg-len 64]  (GPU schedule x granularity sweep)\n\
            bench plan [--threads 48] [--k 3]  (auto plan vs every fixed plan ablation)\n\
            bench serve [--jobs 120] [--arrival-us 300] [--workers 4] [--shard-counts 1,2,4]\n\
+           bench stream [--depth 10] [--batches 12] [--k 4] [--workers 3] [--shards 1]\n\
+                      [--trace-out spans.json]  (streaming maintenance: churn-chain replay\n\
+                      with merge-step accounting vs from-scratch, then the same script served\n\
+                      as planned Mutate jobs with pinned-epoch reads)\n\
            serve      [--jobs 32] [--shards 2] [--pool 4] [--plan <spec>] [--schedule <s>]\n\
                       [--priority <p>] [--support-mode full|incremental|auto]\n\
                       [--deadline-ms D] [--calibration file.tsv]\n\
@@ -114,6 +125,15 @@ fn print_help() {
                       submit time; without --priority the stream mixes priority classes;\n\
                       --trace-out dumps the job -> pass span tree as Chrome trace JSON or\n\
                       JSONL, and the drift report prints per executed-plan regime)\n\
+           mutate     [--graph <name|path>] [--k 4] [--shards 1] [--pool 2] [--plan <spec>]\n\
+                      [--mutations churn[:batches[:depth]] | \"+u:v,-u:v;…\"]\n\
+                      [--trace-out spans.json|.jsonl]\n\
+                      (batched edge mutations against a versioned resident graph: each batch\n\
+                      is one planned Mutate job through the executor, serialized because\n\
+                      batches are order-dependent; epochs advance per batch and the\n\
+                      maintained truss is verified against a scratch recompute at the end;\n\
+                      churn generates its own fixture graph + script, the inline form needs\n\
+                      --graph and applies deletes before inserts within a batch)\n\
            metrics    [--jobs 12] [--shards 2] [--pool 4] [--calibration file.tsv]\n\
                       (Prometheus-style text exposition snapshot: runs a short demo stream\n\
                       and prints serving counters, latency buckets and plan-drift gauges;\n\
@@ -502,10 +522,15 @@ fn cmd_bench(args: &Args) -> Result<()> {
     let which = args
         .positional
         .first()
-        .context("bench needs a target: table1|fig2|fig3|fig4|ablations|gpu-sched|serve|plan")?
+        .context(
+            "bench needs a target: table1|fig2|fig3|fig4|ablations|gpu-sched|serve|stream|plan",
+        )?
         .clone();
     if which == "serve" {
         return cmd_bench_serve(args);
+    }
+    if which == "stream" {
+        return cmd_bench_stream(args);
     }
     if which == "plan" {
         // the plan ablation generates its own fixture families (skewed
@@ -589,6 +614,168 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
     );
     let r = serve_bench::run(&cfg, |msg| eprintln!("  [{msg}]"))?;
     report::emit("serve_throughput.txt", &r.render())
+}
+
+/// The streaming maintenance workload (churn-chain differential replay
+/// with merge-step accounting, then the executor-served epoch run; see
+/// `bench_harness::stream_bench`).
+fn cmd_bench_stream(args: &Args) -> Result<()> {
+    let default = stream_bench::StreamConfig::default();
+    let cfg = stream_bench::StreamConfig {
+        depth: args.get_as::<usize>("depth", default.depth)?,
+        batches: args.get_as::<usize>("batches", default.batches)?,
+        k: args.get_as::<u32>("k", default.k)?,
+        shards: args.get_as::<usize>("shards", default.shards)?,
+        total_workers: args.get_as::<usize>("workers", default.total_workers)?,
+        trace_out: args.opt("trace-out"),
+    };
+    args.reject_unknown()?;
+    println!(
+        "# stream: {} churn batches over peel_chain({}), k={}, {} worker(s)",
+        cfg.batches, cfg.depth, cfg.k, cfg.total_workers
+    );
+    let r = stream_bench::run(&cfg, |msg| eprintln!("  [{msg}]"))?;
+    report::emit("stream_maintenance.txt", &r.render())
+}
+
+/// Parse an inline mutation script: batches separated by `;`, ops by
+/// `,`; each op is `+u:v` (insert) or `-u:v` (delete).
+fn parse_mutation_script(src: &str) -> Result<Vec<EdgeBatch>> {
+    let mut script = Vec::new();
+    for part in src.split(';') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let mut batch = EdgeBatch::default();
+        for op in part.split(',') {
+            let op = op.trim();
+            let rest = op
+                .strip_prefix('+')
+                .or_else(|| op.strip_prefix('-'))
+                .with_context(|| format!("mutation op {op:?} must start with + or -"))?;
+            let (u, v) = rest
+                .split_once(':')
+                .with_context(|| format!("mutation op {op:?} must be +u:v or -u:v"))?;
+            let edge = (
+                u.trim().parse::<u32>().with_context(|| format!("bad vertex in {op:?}"))?,
+                v.trim().parse::<u32>().with_context(|| format!("bad vertex in {op:?}"))?,
+            );
+            if op.starts_with('+') {
+                batch.insert.push(edge);
+            } else {
+                batch.delete.push(edge);
+            }
+        }
+        script.push(batch);
+    }
+    if script.is_empty() {
+        bail!("--mutations script is empty");
+    }
+    Ok(script)
+}
+
+/// `mutate`: replay an edge-mutation script against a versioned
+/// resident [`GraphStore`] through the sharded executor — one planned
+/// `Mutate` job per batch, strictly serialized (batches are
+/// order-dependent), with a final differential verify against a
+/// from-scratch recompute.
+fn cmd_mutate(args: &Args) -> Result<()> {
+    let k = args.get_as::<u32>("k", 4)?;
+    let shards = args.get_as::<usize>("shards", 1)?.max(1);
+    let pool = args.get_as::<usize>("pool", 2)?;
+    let spec = parse_plan_spec(args)?;
+    let mutations = args.get("mutations", "churn");
+    let trace_out = args.opt("trace-out");
+    let (g, script) = if let Some(rest) = mutations.strip_prefix("churn") {
+        // churn[:batches[:depth]] — the deterministic fixture script
+        let mut batches = 8usize;
+        let mut depth = 8usize;
+        if let Some(params) = rest.strip_prefix(':') {
+            let mut it = params.split(':');
+            if let Some(b) = it.next() {
+                batches = b
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("--mutations churn: bad batches {b:?}"))?;
+            }
+            if let Some(d) = it.next() {
+                depth = d
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("--mutations churn: bad depth {d:?}"))?;
+            }
+        } else if !rest.is_empty() {
+            bail!("--mutations must be churn[:batches[:depth]] or an inline +u:v,-u:v;… script");
+        }
+        if depth < 4 {
+            bail!("--mutations churn needs depth >= 4");
+        }
+        if args.opt("graph").is_some() {
+            eprintln!("note: --mutations churn generates its own graph; --graph is ignored");
+        }
+        ktruss::testkit::graphs::churn_chain(depth, batches)
+    } else {
+        (load_graph(args)?, parse_mutation_script(&mutations)?)
+    };
+    args.reject_unknown()?;
+    println!("graph: {}", stats::stats(&g));
+    let store = Arc::new(GraphStore::new(&g, k));
+    println!(
+        "store: epoch 0, k={k}, {} truss edges; applying {} batch(es)…",
+        store.pin().truss.nnz(),
+        script.len()
+    );
+    let ex = Executor::start(
+        ServeConfig { shards, plan: spec, enable_dense: false, ..Default::default() }
+            .with_total_workers(pool),
+    );
+    let t = Timer::start();
+    for (i, batch) in script.iter().enumerate() {
+        let pinned = store.pin();
+        let ticket = ex.submit(
+            pinned.graph.clone(),
+            JobKind::Mutate { store: Arc::clone(&store), batch: Arc::new(batch.clone()) },
+        );
+        // serialize: the next batch may depend on this one's edges
+        let r = ticket.wait();
+        let plan = r.plan.map(|p| p.to_string()).unwrap_or_else(|| "none".to_string());
+        match r.output.map_err(|e| anyhow::anyhow!("batch {i}: {e}"))? {
+            ktruss::coordinator::JobOutput::Mutate {
+                epoch,
+                inserted,
+                deleted,
+                rejected,
+                recomputed,
+                truss_edges,
+            } => {
+                println!(
+                    "batch {i}: epoch {epoch}, +{inserted}/-{deleted} (rejected {rejected}), \
+                     truss {truss_edges} edges [{}, plan={plan}]",
+                    if recomputed { "reconverged" } else { "fast-path" }
+                );
+            }
+            other => bail!("unexpected output {other:?}"),
+        }
+    }
+    let wall = t.elapsed_ms();
+    let snap = store.pin();
+    let scratch = ktruss_seq_mode(&snap.graph, k, Mode::Fine, SupportMode::Full);
+    if *snap.truss != scratch.truss {
+        bail!("maintained truss diverged from the from-scratch recompute");
+    }
+    println!(
+        "verify: maintained {k}-truss matches scratch recompute ({} edges @ epoch {}), \
+         {wall:.2} ms total",
+        scratch.truss.nnz(),
+        snap.epoch
+    );
+    println!("metrics: {}", ex.metrics.render());
+    if let Some(path) = &trace_out {
+        let spans = ex.obs.spans.snapshot();
+        ktruss::obs::export::write_trace(std::path::Path::new(path), &spans)?;
+        println!("trace: wrote {} job span(s) to {path}", spans.len());
+    }
+    ex.shutdown();
+    Ok(())
 }
 
 fn run_ablations(w: &Workload) -> Result<String> {

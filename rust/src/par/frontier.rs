@@ -18,7 +18,7 @@
 
 use super::parallel_support::{counter_total, worker_counters};
 use super::pool::{Pool, Schedule};
-use crate::algo::incremental::{frontier_task_atomic, Frontier, InNbrs};
+use crate::algo::incremental::{frontier_task_atomic, increment_task_atomic, Frontier, InNbrs};
 use crate::algo::prune::PruneOutcome;
 use crate::algo::support::Granularity;
 use crate::graph::ZCsr;
@@ -111,6 +111,104 @@ pub fn decrement_frontier_par_gran(
         let mut steps = 0u64;
         for t in &f.tasks[lo..hi] {
             steps += frontier_task_atomic(z, s, f, in_nbrs, *t);
+        }
+        totals[w].0.fetch_add(steps, Ordering::Relaxed);
+    };
+    if needs_costs(schedule) {
+        let computed: Vec<u64>;
+        let per_task: &[u64] = match costs {
+            Some(c) => c,
+            None => {
+                computed = crate::algo::incremental::frontier_costs(z, f, in_nbrs);
+                &computed
+            }
+        };
+        assert_eq!(per_task.len(), f.tasks.len(), "one cost per frontier task");
+        let group_costs: Vec<u64> = groups
+            .iter()
+            .map(|&(lo, hi)| per_task[lo..hi].iter().sum::<u64>().max(1))
+            .collect();
+        pool.parallel_for_costed(groups.len(), &group_costs, schedule, body);
+    } else {
+        pool.parallel_for(groups.len(), schedule, body);
+    }
+    counter_total(&totals)
+}
+
+/// Run the insertion update concurrently: one task per inserted edge
+/// on the *post-insertion* working form, atomic increments into `s`
+/// ([`crate::algo::incremental::increment_task_atomic`]). Scheduling is
+/// identical to [`decrement_frontier_par`] — the inserted-edge frontier
+/// has the same task skew as the dying-edge frontier, and the same
+/// per-task cost bounds apply. Returns the exact total steps executed.
+pub fn increment_frontier_par(
+    z: &ZCsr,
+    pool: &Pool,
+    f: &Frontier,
+    in_nbrs: &InNbrs,
+    schedule: Schedule,
+    s: &[AtomicU32],
+    costs: Option<&[u64]>,
+) -> u64 {
+    assert_eq!(s.len(), z.slots());
+    let tasks = &f.tasks;
+    let totals = worker_counters(pool);
+    let body = |w: usize, ti: usize| {
+        let steps = increment_task_atomic(z, s, f, in_nbrs, tasks[ti]);
+        totals[w].0.fetch_add(steps, Ordering::Relaxed);
+    };
+    if needs_costs(schedule) {
+        let computed: Vec<u64>;
+        let cost_vec: &[u64] = match costs {
+            Some(c) => c,
+            None => {
+                computed = crate::algo::incremental::frontier_costs(z, f, in_nbrs);
+                &computed
+            }
+        };
+        assert_eq!(cost_vec.len(), tasks.len(), "one cost per frontier task");
+        pool.parallel_for_costed(tasks.len(), cost_vec, schedule, body);
+    } else {
+        pool.parallel_for(tasks.len(), schedule, body);
+    }
+    counter_total(&totals)
+}
+
+/// [`increment_frontier_par`] at an explicit [`Granularity`], mirroring
+/// [`decrement_frontier_par_gran`]: `Coarse` groups the contiguous
+/// tasks of one row into a single pool task; every other granularity
+/// runs one pool task per inserted edge (an insertion task is already
+/// the fine decomposition).
+#[allow(clippy::too_many_arguments)]
+pub fn increment_frontier_par_gran(
+    z: &ZCsr,
+    pool: &Pool,
+    f: &Frontier,
+    in_nbrs: &InNbrs,
+    gran: Granularity,
+    schedule: Schedule,
+    s: &[AtomicU32],
+    costs: Option<&[u64]>,
+) -> u64 {
+    if !matches!(gran, Granularity::Coarse) {
+        return increment_frontier_par(z, pool, f, in_nbrs, schedule, s, costs);
+    }
+    // group consecutive tasks by row (frontier_from_marked emits
+    // ascending slot order, so a row's tasks are contiguous)
+    let mut groups: Vec<(usize, usize)> = Vec::new();
+    let mut start = 0usize;
+    for i in 1..=f.tasks.len() {
+        if i == f.tasks.len() || f.tasks[i].row != f.tasks[start].row {
+            groups.push((start, i));
+            start = i;
+        }
+    }
+    let totals = worker_counters(pool);
+    let body = |w: usize, gi: usize| {
+        let (lo, hi) = groups[gi];
+        let mut steps = 0u64;
+        for t in &f.tasks[lo..hi] {
+            steps += increment_task_atomic(z, s, f, in_nbrs, *t);
         }
         totals[w].0.fetch_add(steps, Ordering::Relaxed);
     };
@@ -253,6 +351,61 @@ mod tests {
                 let s_at: Vec<AtomicU32> =
                     s0.iter().map(|&x| AtomicU32::new(x)).collect();
                 let steps = decrement_frontier_par_gran(
+                    &z,
+                    &pool,
+                    &f,
+                    &in_nbrs,
+                    gran,
+                    Schedule::WorkAware,
+                    &s_at,
+                    None,
+                );
+                let got: Vec<u32> =
+                    s_at.iter().map(|x| x.load(Ordering::Relaxed)).collect();
+                assert_eq!(got, s_seq, "k={k} {gran}");
+                assert_eq!(steps, want_steps, "k={k} {gran}");
+            }
+        }
+    }
+
+    #[test]
+    fn par_increment_matches_seq_all_schedules() {
+        // seq<->par parity of the insertion pass needs no insertion
+        // semantics: any mark set drives the same enumeration, so
+        // reuse the threshold scan's marks as the "inserted" slots
+        let g = crate::gen::rmat::rmat(
+            280,
+            2000,
+            crate::gen::rmat::RmatParams::social(),
+            &mut crate::util::Rng::new(23),
+        );
+        let (z, s0) = working(&g);
+        let in_nbrs = InNbrs::build(&z);
+        let pool = Pool::new(4);
+        for k in [4u32, 5] {
+            let f = mark_frontier(&z, &s0, k);
+            let mut s_seq = s0.clone();
+            let want_steps =
+                crate::algo::incremental::increment_frontier_seq(&z, &mut s_seq, &f, &in_nbrs);
+            for sched in ALL_SCHEDULES {
+                let s_at: Vec<AtomicU32> =
+                    s0.iter().map(|&x| AtomicU32::new(x)).collect();
+                let steps =
+                    increment_frontier_par(&z, &pool, &f, &in_nbrs, sched, &s_at, None);
+                let got: Vec<u32> =
+                    s_at.iter().map(|x| x.load(Ordering::Relaxed)).collect();
+                assert_eq!(got, s_seq, "k={k} {sched:?}");
+                assert_eq!(steps, want_steps, "k={k} {sched:?}");
+            }
+            for gran in [
+                Granularity::Coarse,
+                Granularity::Fine,
+                Granularity::Segment { len: 8 },
+                Granularity::Hybrid { len: 8 },
+            ] {
+                let s_at: Vec<AtomicU32> =
+                    s0.iter().map(|&x| AtomicU32::new(x)).collect();
+                let steps = increment_frontier_par_gran(
                     &z,
                     &pool,
                     &f,

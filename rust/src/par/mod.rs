@@ -15,7 +15,10 @@ pub mod parallel_support;
 pub mod pool;
 
 pub use balance::{estimate_costs, scan_bins, Costs};
-pub use frontier::{compact_preserving_par, decrement_frontier_par, decrement_frontier_par_gran};
+pub use frontier::{
+    compact_preserving_par, decrement_frontier_par, decrement_frontier_par_gran,
+    increment_frontier_par, increment_frontier_par_gran,
+};
 pub use parallel_support::{
     compute_supports_gran, compute_supports_hybrid, compute_supports_par,
     compute_supports_segmented, ktruss_par, ktruss_par_gran, ktruss_par_gran_mode,

@@ -51,6 +51,7 @@ pub fn kind_label(kind: &JobKind) -> &'static str {
         JobKind::Kmax => "kmax",
         JobKind::Decompose => "decompose",
         JobKind::Triangles => "triangles",
+        JobKind::Mutate { .. } => "mutate",
     }
 }
 
@@ -104,6 +105,15 @@ pub fn estimate_steps_mode(g: &Csr, kind: &JobKind, support: SupportMode) -> u64
         JobKind::Ktruss { .. } => merge.saturating_mul(3),
         JobKind::Kmax => merge.saturating_mul(4),
         JobKind::Decompose => merge.saturating_mul(6),
+        // a mutation touches a frontier sized by the batch: roughly the
+        // average row's merge work per touched edge, with a 3x slack
+        // for the re-admission / re-convergence tail
+        JobKind::Mutate { batch, .. } => {
+            let touched = (batch.insert.len() + batch.delete.len()).max(1) as u64;
+            (merge / (g.nnz().max(1) as u64))
+                .saturating_mul(touched)
+                .saturating_mul(3)
+        }
     };
     est.max(1)
 }

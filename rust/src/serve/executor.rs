@@ -289,6 +289,10 @@ impl Executor {
                 let (p, scored) = self.planner.choose_scored(&graph, k);
                 (Some(p), scored)
             }
+            JobKind::Mutate { ref store, .. } => {
+                let (p, scored) = self.planner.choose_scored(&graph, store.k());
+                (Some(p), scored)
+            }
             _ => (None, None),
         };
         let support = plan.map(|p| p.support).unwrap_or(SupportMode::Full);

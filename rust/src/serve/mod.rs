@@ -41,7 +41,9 @@
 pub mod cost_model;
 pub mod executor;
 pub mod queue;
+pub mod store;
 
 pub use cost_model::{estimate_steps, estimate_steps_mode, job_label, kind_label, CostModel};
 pub use executor::{Executor, ServeConfig, SubmitOpts, Ticket};
 pub use queue::{Admission, Priority, ServeQueue};
+pub use store::{EpochSnapshot, GraphStore};

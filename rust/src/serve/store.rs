@@ -1,0 +1,226 @@
+//! Versioned resident graphs: a [`GraphStore`] owns one maintained
+//! [`StreamState`] and publishes an epoch-stamped **immutable**
+//! [`EpochSnapshot`] after every applied batch.
+//!
+//! Readers pin an epoch by cloning the current snapshot `Arc` — a
+//! query admitted against epoch `N` keeps computing on `N`'s graph
+//! while the writer applies epoch `N + 1` (copy-on-compact: the
+//! mutation rebuilds the working form and publishes fresh `Csr`s; the
+//! pinned snapshot is never touched). A retired epoch stays readable
+//! exactly as long as someone holds its `Arc` and is dropped the
+//! moment the last reference goes — there is no epoch list to garbage
+//! collect.
+//!
+//! One writer at a time: [`GraphStore::apply`] serializes mutations
+//! behind a mutex. Batches are order-dependent (a delete of an edge an
+//! earlier batch inserted must see it), so concurrent submitters must
+//! impose their own order — the serving layer does this by waiting on
+//! each `Mutate` job before submitting the next.
+
+use crate::algo::stream::{BatchOutcome, EdgeBatch, StreamState};
+use crate::graph::Csr;
+use crate::par::Pool;
+use crate::plan::ExecutionPlan;
+use std::sync::{Arc, Mutex};
+
+/// One immutable epoch of the resident graph: the full graph and its
+/// maintained k-truss as of the batch that published it.
+#[derive(Clone, Debug)]
+pub struct EpochSnapshot {
+    /// Epoch counter (0 = the initial load; +1 per applied batch).
+    pub epoch: u64,
+    /// The graph at this epoch.
+    pub graph: Arc<Csr>,
+    /// The maintained k-truss at this epoch.
+    pub truss: Arc<Csr>,
+}
+
+struct StoreInner {
+    state: StreamState,
+    current: Arc<EpochSnapshot>,
+}
+
+/// The epoch-versioned resident graph (see the module docs).
+pub struct GraphStore {
+    k: u32,
+    inner: Mutex<StoreInner>,
+}
+
+impl GraphStore {
+    /// Load `g` as epoch 0, deriving initial supports and k-truss.
+    pub fn new(g: &Csr, k: u32) -> GraphStore {
+        let state = StreamState::new(g, k);
+        let current = Arc::new(EpochSnapshot {
+            epoch: 0,
+            graph: Arc::new(state.graph().clone()),
+            truss: Arc::new(state.truss().clone()),
+        });
+        GraphStore { k, inner: Mutex::new(StoreInner { state, current }) }
+    }
+
+    /// The fixed truss order this store maintains.
+    pub fn k(&self) -> u32 {
+        self.k
+    }
+
+    /// The current epoch number.
+    pub fn epoch(&self) -> u64 {
+        self.inner.lock().unwrap().current.epoch
+    }
+
+    /// Pin the current epoch: the returned snapshot stays valid (and
+    /// immutable) for as long as the caller holds it, regardless of
+    /// later batches.
+    pub fn pin(&self) -> Arc<EpochSnapshot> {
+        self.inner.lock().unwrap().current.clone()
+    }
+
+    /// Apply one batch sequentially and publish the next epoch.
+    /// Returns the new snapshot and the batch outcome.
+    pub fn apply(&self, batch: &EdgeBatch) -> (Arc<EpochSnapshot>, BatchOutcome) {
+        self.publish(batch, None)
+    }
+
+    /// [`apply`](GraphStore::apply) with the frontier passes on the
+    /// pool under `plan` — the executor's path for planned
+    /// `Mutate` jobs.
+    pub fn apply_par(
+        &self,
+        batch: &EdgeBatch,
+        pool: &Pool,
+        plan: &ExecutionPlan,
+    ) -> (Arc<EpochSnapshot>, BatchOutcome) {
+        self.publish(batch, Some((pool, plan)))
+    }
+
+    fn publish(
+        &self,
+        batch: &EdgeBatch,
+        par: Option<(&Pool, &ExecutionPlan)>,
+    ) -> (Arc<EpochSnapshot>, BatchOutcome) {
+        let mut inner = self.inner.lock().unwrap();
+        let out = match par {
+            Some((pool, plan)) => inner.state.apply_par(batch, pool, plan),
+            None => inner.state.apply(batch),
+        };
+        let snap = Arc::new(EpochSnapshot {
+            epoch: inner.current.epoch + 1,
+            graph: Arc::new(inner.state.graph().clone()),
+            truss: Arc::new(inner.state.truss().clone()),
+        });
+        inner.current = snap.clone();
+        (snap, out)
+    }
+}
+
+impl std::fmt::Debug for GraphStore {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let inner = self.inner.lock().unwrap();
+        f.debug_struct("GraphStore")
+            .field("k", &self.k)
+            .field("epoch", &inner.current.epoch)
+            .field("edges", &inner.current.graph.nnz())
+            .field("truss_edges", &inner.current.truss.nnz())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::incremental::SupportMode;
+    use crate::algo::ktruss::ktruss_mode;
+    use crate::algo::support::Mode;
+    use crate::testkit::graphs::peel_chain;
+
+    #[test]
+    fn pinned_epoch_survives_concurrent_apply() {
+        let g = peel_chain(8);
+        let store = Arc::new(GraphStore::new(&g, 4));
+        let pinned = store.pin();
+        let expect = ktruss_mode(&pinned.graph, 4, Mode::Fine, SupportMode::Full);
+        let writer = {
+            let store = store.clone();
+            // delete block 0's K4 top edge (r, s) = (9, 10) while the
+            // reader below is mid-computation on the pinned epoch
+            std::thread::spawn(move || {
+                let (snap, out) = store.apply(&EdgeBatch::deletes(vec![(9, 10)]));
+                (snap.epoch, out.deleted)
+            })
+        };
+        let got = ktruss_mode(&pinned.graph, 4, Mode::Fine, SupportMode::Incremental);
+        let (epoch, deleted) = writer.join().unwrap();
+        assert_eq!(epoch, 1);
+        assert_eq!(deleted, 1);
+        assert_eq!(got.truss, expect.truss, "pinned read must match a single-threaded run");
+        assert_eq!(pinned.epoch, 0);
+        assert_eq!(pinned.graph.nnz(), g.nnz(), "pinned snapshot must stay immutable");
+        assert_eq!(store.epoch(), 1);
+        assert!(store.pin().graph.nnz() < g.nnz());
+    }
+
+    #[test]
+    fn retired_epochs_are_dropped_once_unreferenced() {
+        let g = peel_chain(6);
+        let store = GraphStore::new(&g, 4);
+        let pinned = store.pin();
+        let weak_snap = Arc::downgrade(&pinned);
+        let weak_graph = Arc::downgrade(&pinned.graph);
+        store.apply(&EdgeBatch::deletes(vec![(7, 8)]));
+        // the retired epoch stays readable while pinned…
+        assert!(weak_snap.upgrade().is_some());
+        assert_eq!(pinned.epoch, 0);
+        drop(pinned);
+        // …and is dropped the moment the last reference goes
+        assert!(weak_snap.upgrade().is_none(), "retired epoch must be freed");
+        assert!(weak_graph.upgrade().is_none(), "retired graph must be freed");
+        assert_eq!(store.epoch(), 1);
+    }
+
+    #[test]
+    fn executor_applies_while_pinned_readers_run() {
+        use crate::coordinator::{JobKind, JobOutput};
+        use crate::serve::{Executor, ServeConfig};
+        let (g, script) = crate::testkit::graphs::churn_chain(8, 4);
+        let store = Arc::new(GraphStore::new(&g, 4));
+        let ex = Executor::start(
+            ServeConfig { shards: 1, enable_dense: false, ..Default::default() }
+                .with_total_workers(3),
+        );
+        for (i, batch) in script.iter().enumerate() {
+            // pin the pre-batch epoch and serve a read against it
+            // while the mutation runs on the executor
+            let pinned = store.pin();
+            let read = ex.submit(pinned.graph.clone(), JobKind::Ktruss { k: 4, mode: Mode::Fine });
+            let ticket = ex.submit(
+                pinned.graph.clone(),
+                JobKind::Mutate { store: store.clone(), batch: Arc::new(batch.clone()) },
+            );
+            // serialize mutations: batches are order-dependent, so the
+            // next one is submitted only after this one completes
+            let r = ticket.wait();
+            assert!(r.plan.is_some(), "mutate jobs are planned");
+            match r.output.expect("mutate job succeeds") {
+                JobOutput::Mutate { epoch, recomputed, .. } => {
+                    assert_eq!(epoch, (i + 1) as u64, "batch {i}");
+                    assert!(recomputed, "every churn batch flips the truss");
+                }
+                other => panic!("unexpected output {other:?}"),
+            }
+            let rr = read.wait();
+            match rr.output.expect("read job succeeds") {
+                JobOutput::Ktruss { truss_edges, .. } => {
+                    let want = ktruss_mode(&pinned.graph, 4, Mode::Fine, SupportMode::Full);
+                    assert_eq!(truss_edges, want.truss.nnz(), "batch {i}: pinned read diverged");
+                }
+                other => panic!("unexpected output {other:?}"),
+            }
+        }
+        let spans = ex.obs.spans.snapshot();
+        let mutate_spans: Vec<_> = spans.iter().filter(|s| s.kind == "mutate").collect();
+        assert_eq!(mutate_spans.len(), script.len());
+        assert!(mutate_spans.iter().all(|s| s.plan_string() != "-/-/-"));
+        ex.shutdown();
+        assert_eq!(store.epoch(), script.len() as u64);
+    }
+}

@@ -129,6 +129,35 @@ pub fn peel_chain(d: usize) -> Csr {
     from_sorted_unique(base as usize + 2 * (d - 1), &edges)
 }
 
+/// Deterministic **churn** fixture for the streaming maintenance path:
+/// [`peel_chain`]`(d)` plus a mutation script of `batches` single-edge
+/// batches that alternately delete and re-insert a K4 top edge
+/// `(r_j, s_j)`, cycling through the blocks. At k = 4 every batch flips
+/// the maintained truss: deleting `(r_j, s_j)` drops the four K4 spokes
+/// to support 1 and the cascade takes the block's gap-2 diagonal with
+/// them (−6 truss edges); re-inserting restores all six. Both
+/// directions defeat the sound fast path (the delete removes truss
+/// edges, the insert lands with support ≥ k − 2), so every batch
+/// exercises the re-convergence tail — the fixture the streaming bench
+/// and the serve-layer epoch tests replay.
+pub fn churn_chain(d: usize, batches: usize) -> (Csr, Vec<crate::algo::stream::EdgeBatch>) {
+    let g = peel_chain(d);
+    let base = (d + 1) as Vid;
+    let blocks = (d - 1) as Vid;
+    let script = (0..batches)
+        .map(|b| {
+            let j = ((b / 2) as Vid) % blocks;
+            let (r, s) = (base + 2 * j, base + 2 * j + 1);
+            if b % 2 == 0 {
+                crate::algo::stream::EdgeBatch::deletes(vec![(r, s)])
+            } else {
+                crate::algo::stream::EdgeBatch::inserts(vec![(r, s)])
+            }
+        })
+        .collect();
+    (g, script)
+}
+
 /// K5 with a pendant path — kmax 5, path trussness 2.
 pub fn clique_with_tail() -> Csr {
     let mut edges: Vec<(Vid, Vid)> = Vec::new();
@@ -193,6 +222,25 @@ mod tests {
         let r3 = crate::algo::ktruss::ktruss(&g, 3, crate::algo::support::Mode::Fine);
         assert_eq!(r3.truss.nnz(), g.nnz());
         assert_eq!(r3.iterations, 1);
+    }
+
+    #[test]
+    fn churn_chain_truss_flips_every_batch() {
+        let d = 8;
+        let (g, script) = churn_chain(d, 6);
+        assert_eq!(script.len(), 6);
+        let full = g.nnz() - d; // the k=4 truss of the intact chain
+        let mut st = crate::algo::stream::StreamState::new(&g, 4);
+        assert_eq!(st.truss().nnz(), full);
+        for (b, batch) in script.iter().enumerate() {
+            let out = st.apply(batch);
+            assert!(out.recomputed, "batch {b} must defeat the fast path");
+            let want = if b % 2 == 0 { full - 6 } else { full };
+            assert_eq!(out.truss_edges, want, "batch {b}");
+            assert_eq!(st.truss().nnz(), want, "batch {b}");
+        }
+        // the script ends on an insert batch: the graph round-trips
+        assert_eq!(st.graph(), &g);
     }
 
     #[test]

@@ -1,0 +1,220 @@
+//! Differential mutation oracle for the streaming maintenance layer
+//! (`algo::stream`, `serve::store`): after **every** applied batch the
+//! maintained supports and k-truss must be bit-identical to a
+//! from-scratch recompute of the mutated graph — across random
+//! insert/delete sequences over every generator family, for k ∈
+//! {3, 4, 8}, for the sequential driver and every schedule ×
+//! granularity (including Hybrid) of the parallel one, and through the
+//! epoch-versioned [`GraphStore`].
+
+use ktruss::algo::incremental::SupportMode;
+use ktruss::algo::ktruss::{ktruss_mode, Mode};
+use ktruss::algo::stream::{EdgeBatch, StreamState};
+use ktruss::algo::support::{compute_supports_seq, Granularity};
+use ktruss::graph::{Csr, Vid, ZCsr};
+use ktruss::par::{Pool, ALL_SCHEDULES};
+use ktruss::plan::ExecutionPlan;
+use ktruss::serve::GraphStore;
+use ktruss::testkit::graphs::{arbitrary_graph, churn_chain};
+use ktruss::testkit::{forall, Config};
+use ktruss::util::Rng;
+
+const GRANS: [Granularity; 4] = [
+    Granularity::Coarse,
+    Granularity::Fine,
+    Granularity::Segment { len: 8 },
+    Granularity::Hybrid { len: 8 },
+];
+
+/// Draw a random batch against the current graph: deletes of present
+/// edges, inserts of arbitrary pairs (some present, some self-loops —
+/// normalization must sort the junk out), and occasional out-of-range
+/// garbage.
+fn random_batch(g: &Csr, rng: &mut Rng) -> EdgeBatch {
+    let edges: Vec<(Vid, Vid)> = g.edges().collect();
+    let mut batch = EdgeBatch::default();
+    if !edges.is_empty() {
+        for _ in 0..rng.below(4) {
+            batch.delete.push(edges[rng.range(0, edges.len())]);
+        }
+    }
+    let n = g.n() as u64;
+    for _ in 0..rng.below(5) {
+        // unoriented and unvalidated on purpose
+        batch.insert.push((rng.below(n) as Vid, rng.below(n) as Vid));
+    }
+    if rng.below(3) == 0 {
+        batch.insert.push((0, 0));
+        batch.delete.push((n as Vid, 0));
+    }
+    batch
+}
+
+/// The differential oracle: maintained supports and truss must equal a
+/// from-scratch derivation on the current graph, bit for bit.
+fn check_against_scratch(st: &StreamState, ctx: &str) -> Result<(), String> {
+    let z = ZCsr::from_csr(st.graph());
+    let mut want = Vec::new();
+    compute_supports_seq(&z, &mut want);
+    if st.supports() != &want[..] {
+        return Err(format!("{ctx}: maintained supports diverged from scratch"));
+    }
+    let scratch = ktruss_mode(st.graph(), st.k(), Mode::Fine, SupportMode::Full);
+    if st.truss() != &scratch.truss {
+        return Err(format!(
+            "{ctx}: maintained truss ({} edges) diverged from scratch ({} edges)",
+            st.truss().nnz(),
+            scratch.truss.nnz()
+        ));
+    }
+    Ok(())
+}
+
+/// Sequential oracle: random insert/delete sequences over every
+/// generator family stay bit-identical to scratch after every batch.
+#[test]
+fn prop_maintained_state_matches_scratch_after_every_batch() {
+    forall(Config::cases(20), arbitrary_graph, |g| {
+        for k in [3u32, 4, 8] {
+            let mut st = StreamState::new(g, k);
+            let mut rng = Rng::new(0x57EA ^ (g.nnz() as u64) ^ ((k as u64) << 32));
+            for b in 0..4 {
+                let batch = random_batch(st.graph(), &mut rng);
+                st.apply(&batch);
+                check_against_scratch(&st, &format!("k={k} batch {b}"))?;
+            }
+        }
+        Ok(())
+    });
+}
+
+/// A batch of nothing but rejectable mutations (self-loops, present
+/// inserts, absent/out-of-range deletes) must do zero work and perturb
+/// nothing.
+#[test]
+fn prop_rejected_mutations_never_perturb_state() {
+    forall(Config::cases(12), arbitrary_graph, |g| {
+        let mut st = StreamState::new(g, 4);
+        let before = st.clone();
+        let n = g.n() as Vid;
+        let mut junk = EdgeBatch {
+            insert: vec![(0, 0), (n, n)],
+            delete: vec![(n, 0), (n + 3, n)],
+        };
+        if let Some((u, v)) = g.edges().next() {
+            junk.insert.push((v, u)); // present edge, reversed
+        }
+        let out = st.apply(&junk);
+        if out.inserted != 0 || out.deleted != 0 || out.rejected != junk.len() {
+            return Err(format!("junk batch was not fully rejected: {out:?}"));
+        }
+        if out.frontier_steps != 0 || out.recomputed {
+            return Err(format!("junk batch did work: {out:?}"));
+        }
+        if st.graph() != before.graph() || st.truss() != before.truss() {
+            return Err("junk batch perturbed the maintained state".into());
+        }
+        if st.supports() != before.supports() {
+            return Err("junk batch perturbed the maintained supports".into());
+        }
+        Ok(())
+    });
+}
+
+/// Parallel oracle: replaying the same script under every schedule ×
+/// granularity (including Hybrid) reproduces the sequential trajectory
+/// bit for bit — same graphs, same trusses, same outcomes, and the
+/// same exact step counts.
+#[test]
+fn prop_par_replay_is_bit_identical_across_the_plan_grid() {
+    let pool = Pool::new(4);
+    forall(Config::cases(6), arbitrary_graph, |g| {
+        for k in [3u32, 4, 8] {
+            let st0 = StreamState::new(g, k);
+            let mut seq = st0.clone();
+            let mut rng = Rng::new(0xD1FF ^ (g.nnz() as u64) ^ ((k as u64) << 32));
+            let mut script = Vec::new();
+            let mut expect = Vec::new();
+            for _ in 0..3 {
+                let batch = random_batch(seq.graph(), &mut rng);
+                let out = seq.apply(&batch);
+                script.push(batch);
+                expect.push((out, seq.graph().clone(), seq.truss().clone()));
+            }
+            for sched in ALL_SCHEDULES {
+                for gran in GRANS {
+                    let plan = ExecutionPlan::fixed(sched, gran, SupportMode::Incremental);
+                    let mut st = st0.clone();
+                    for (b, batch) in script.iter().enumerate() {
+                        let out = st.apply_par(batch, &pool, &plan);
+                        let (want_out, want_g, want_t) = &expect[b];
+                        if out != *want_out {
+                            return Err(format!(
+                                "k={k} {plan} batch {b}: outcome diverged ({out:?} vs \
+                                 {want_out:?})"
+                            ));
+                        }
+                        if st.graph() != want_g || st.truss() != want_t {
+                            return Err(format!("k={k} {plan} batch {b}: state diverged"));
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The deterministic churn fixture replays identically across the full
+/// plan grid: every batch defeats the fast path, flips the truss by
+/// exactly six edges, and ends bit-identical to the sequential replay.
+#[test]
+fn churn_chain_replays_identically_across_the_plan_grid() {
+    let pool = Pool::new(3);
+    let (g, script) = churn_chain(8, 6);
+    let st0 = StreamState::new(&g, 4);
+    let mut seq = st0.clone();
+    let expect: Vec<_> = script
+        .iter()
+        .map(|b| {
+            let out = seq.apply(b);
+            (out, seq.truss().clone())
+        })
+        .collect();
+    assert!(expect.iter().all(|(out, _)| out.recomputed), "churn must defeat the fast path");
+    for sched in ALL_SCHEDULES {
+        for gran in GRANS {
+            let plan = ExecutionPlan::fixed(sched, gran, SupportMode::Incremental);
+            let mut st = st0.clone();
+            for (b, batch) in script.iter().enumerate() {
+                let out = st.apply_par(batch, &pool, &plan);
+                assert_eq!(out, expect[b].0, "{plan} batch {b}: outcome diverged");
+                assert_eq!(st.truss(), &expect[b].1, "{plan} batch {b}: truss diverged");
+            }
+            check_against_scratch(&st, &format!("{plan} end state")).unwrap();
+        }
+    }
+}
+
+/// The epoch-versioned store stays differential under random mutations:
+/// every published epoch's truss matches a scratch recompute of that
+/// epoch's graph, epochs advance by one per batch, and the initially
+/// pinned snapshot never moves.
+#[test]
+fn store_epochs_stay_differential_under_random_mutations() {
+    let mut rng = Rng::new(77);
+    let g = arbitrary_graph(&mut rng);
+    let store = GraphStore::new(&g, 4);
+    let epoch0 = store.pin();
+    for b in 0..5u64 {
+        let batch = random_batch(&store.pin().graph, &mut rng);
+        let (snap, out) = store.apply(&batch);
+        assert_eq!(snap.epoch, b + 1, "epochs advance by one per batch");
+        let scratch = ktruss_mode(&snap.graph, 4, Mode::Fine, SupportMode::Full);
+        assert_eq!(*snap.truss, scratch.truss, "epoch {}: truss diverged", snap.epoch);
+        assert_eq!(out.truss_edges, scratch.truss.nnz(), "epoch {}", snap.epoch);
+    }
+    assert_eq!(store.epoch(), 5);
+    assert_eq!(epoch0.epoch, 0);
+    assert_eq!(*epoch0.graph, g, "the pinned epoch-0 snapshot must stay immutable");
+}
