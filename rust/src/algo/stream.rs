@@ -44,7 +44,7 @@ use crate::algo::ktruss::run_to_convergence_plan;
 use crate::graph::builder::from_sorted_unique;
 use crate::graph::zeroterm::ZCsr;
 use crate::graph::{Csr, Vid};
-use crate::par::Pool;
+use crate::par::{PassControl, Pool};
 use crate::plan::ExecutionPlan;
 use crate::util::bitset::BitSet;
 use std::collections::HashSet;
@@ -169,7 +169,7 @@ impl StreamState {
 
     /// Apply one batch sequentially.
     pub fn apply(&mut self, batch: &EdgeBatch) -> BatchOutcome {
-        self.apply_impl(batch, None)
+        self.apply_impl(batch, None, PassControl::default()).0
     }
 
     /// Apply one batch with the frontier passes on the pool under
@@ -185,14 +185,38 @@ impl StreamState {
         pool: &Pool,
         plan: &ExecutionPlan,
     ) -> BatchOutcome {
-        self.apply_impl(batch, Some((pool, plan)))
+        self.apply_impl(batch, Some((pool, plan)), PassControl::default()).0
+    }
+
+    /// [`apply_par`] with cooperative cancellation checked at the
+    /// stage boundaries of the batch pipeline (before the delete pass,
+    /// between delete and insert, and before the warm truss
+    /// re-convergence). Returns the outcome of the work performed plus
+    /// whether the batch was cut short.
+    ///
+    /// A cancelled application leaves the state **partially mutated**
+    /// (whichever stages already ran are committed); callers needing
+    /// all-or-nothing semantics must apply to a clone and swap on
+    /// success, which is exactly what
+    /// [`GraphStore`](crate::serve::store::GraphStore) does.
+    ///
+    /// [`apply_par`]: StreamState::apply_par
+    pub fn apply_par_ctl(
+        &mut self,
+        batch: &EdgeBatch,
+        pool: &Pool,
+        plan: &ExecutionPlan,
+        ctl: PassControl<'_>,
+    ) -> (BatchOutcome, bool) {
+        self.apply_impl(batch, Some((pool, plan)), ctl)
     }
 
     fn apply_impl(
         &mut self,
         batch: &EdgeBatch,
         par: Option<(&Pool, &ExecutionPlan)>,
-    ) -> BatchOutcome {
+        ctl: PassControl<'_>,
+    ) -> (BatchOutcome, bool) {
         let n = self.z.n();
         let mut rejected = 0usize;
         let mut seen: HashSet<(Vid, Vid)> = HashSet::with_capacity(batch.len());
@@ -215,7 +239,14 @@ impl StreamState {
         // the fast-path evidence, gathered before the truss moves
         let old_truss_hit = dels.iter().any(|&(u, v)| self.truss.has_edge(u, v));
 
-        if !dels.is_empty() {
+        // stage boundary 0: before any mutation — a cancel here is a
+        // pure no-op on the state
+        let mut cancelled = ctl.pass_boundary(0);
+        let mut applied_dels = 0usize;
+        let mut applied_ins = 0usize;
+
+        if !cancelled && !dels.is_empty() {
+            applied_dels = dels.len();
             let mut marked = BitSet::new(self.z.slots());
             for &(u, v) in &dels {
                 let (start, _) = self.z.row_span(u as usize);
@@ -260,8 +291,15 @@ impl StreamState {
             }
         }
 
+        // stage boundary 1: between the delete and insert passes —
+        // a cancel here commits the deletes and skips the rest
+        if !cancelled && ctl.pass_boundary(1) {
+            cancelled = true;
+        }
+
         let mut max_inserted_support = 0u32;
-        if !ins.is_empty() {
+        if !cancelled && !ins.is_empty() {
+            applied_ins = ins.len();
             // copy-on-compact rebuild: row capacities of the working
             // form are fixed, so insertion reconstructs it from the
             // surviving live edges plus the batch
@@ -325,10 +363,10 @@ impl StreamState {
             self.s = s_new;
         }
 
-        let mutated = !dels.is_empty() || !ins.is_empty();
+        let mutated = applied_dels > 0 || applied_ins > 0;
         if mutated {
             self.graph = self.z.to_csr();
-            if ins.is_empty() {
+            if applied_ins == 0 {
                 // deletes compact within the old row capacities; rebuild
                 // the working form canonically so the slot layout always
                 // equals `ZCsr::from_csr(graph)` (the supports contract —
@@ -355,34 +393,44 @@ impl StreamState {
         // scan: the initial full pass is skipped, only cascade rounds
         // run).
         let threshold = self.k.saturating_sub(2);
-        let ins_hit = !ins.is_empty() && max_inserted_support >= threshold;
+        let ins_hit = applied_ins > 0 && max_inserted_support >= threshold;
         let mut converge_steps = 0u64;
         let mut recomputed = false;
-        if mutated && (old_truss_hit || ins_hit) {
-            recomputed = true;
-            let mut z2 = self.z.clone();
-            let mut s2 = self.s.clone();
-            let (_iters, stats) = run_to_convergence_plan(
-                &mut z2,
-                &mut s2,
-                self.k,
-                SupportMode::Incremental,
-                DEFAULT_CROSSOVER_FRAC,
-                true,
-            );
-            converge_steps = stats.iter().map(|st| st.support_steps).sum();
-            self.truss = z2.to_csr();
+        if !cancelled && mutated && (old_truss_hit || ins_hit) {
+            // stage boundary 2: before the warm re-convergence — a
+            // cancel here keeps graph + supports exact and leaves only
+            // the maintained truss stale
+            if ctl.pass_boundary(2) {
+                cancelled = true;
+            } else {
+                recomputed = true;
+                let mut z2 = self.z.clone();
+                let mut s2 = self.s.clone();
+                let (_iters, stats) = run_to_convergence_plan(
+                    &mut z2,
+                    &mut s2,
+                    self.k,
+                    SupportMode::Incremental,
+                    DEFAULT_CROSSOVER_FRAC,
+                    true,
+                );
+                converge_steps = stats.iter().map(|st| st.support_steps).sum();
+                self.truss = z2.to_csr();
+            }
         }
 
-        BatchOutcome {
-            inserted: ins.len(),
-            deleted: dels.len(),
-            rejected,
-            frontier_steps,
-            converge_steps,
-            recomputed,
-            truss_edges: self.truss.nnz(),
-        }
+        (
+            BatchOutcome {
+                inserted: applied_ins,
+                deleted: applied_dels,
+                rejected,
+                frontier_steps,
+                converge_steps,
+                recomputed,
+                truss_edges: self.truss.nnz(),
+            },
+            cancelled,
+        )
     }
 }
 
@@ -481,6 +529,69 @@ mod tests {
         let out = st.apply(&EdgeBatch::deletes(vec![(0, 2)]));
         assert!(out.recomputed);
         assert_matches_scratch(&st, "after truss delete");
+    }
+
+    #[test]
+    fn cancelled_apply_commits_only_completed_stages() {
+        use crate::algo::support::Granularity;
+        use crate::par::{CancelToken, PassControl, Pool, Schedule};
+        use crate::plan::ExecutionPlan;
+        let g = crate::gen::erdos_renyi::gnm(120, 700, &mut crate::util::Rng::new(29));
+        let mut st = StreamState::new(&g, 4);
+        let pool = Pool::new(2);
+        let plan = ExecutionPlan::fixed(Schedule::Static, Granularity::Fine, SupportMode::Full);
+        let dels: Vec<(Vid, Vid)> = g.edges().step_by(5).collect();
+
+        // pre-cancelled: stage boundary 0 fires, nothing moves
+        let tok = CancelToken::new();
+        tok.cancel();
+        let before = st.clone();
+        let (out, cancelled) = st.apply_par_ctl(
+            &EdgeBatch::deletes(dels.clone()),
+            &pool,
+            &plan,
+            PassControl { cancel: Some(&tok), on_pass: None },
+        );
+        assert!(cancelled, "pre-cancelled token must cut the batch short");
+        assert_eq!(out.deleted, 0, "cancel before stage 0 must commit nothing");
+        assert!(!out.recomputed);
+        assert_eq!(st.graph(), before.graph());
+        assert_eq!(st.truss(), before.truss());
+        assert_eq!(st.supports(), before.supports());
+
+        // cancel fired by the stage hook *after* the delete pass: the
+        // deletes commit (graph + supports exact), the truss stays stale
+        let tok = CancelToken::new();
+        let hook = |stage: usize| {
+            if stage == 1 {
+                tok.cancel();
+            }
+        };
+        let (out, cancelled) = st.apply_par_ctl(
+            &EdgeBatch::deletes(dels.clone()),
+            &pool,
+            &plan,
+            PassControl { cancel: Some(&tok), on_pass: Some(&hook) },
+        );
+        assert!(cancelled);
+        assert_eq!(out.deleted, dels.len(), "completed delete stage must be reported");
+        assert!(!out.recomputed, "cancel must skip the re-convergence");
+        let z = ZCsr::from_csr(st.graph());
+        let mut want = Vec::new();
+        crate::algo::support::compute_supports_seq(&z, &mut want);
+        assert_eq!(st.supports(), &want[..], "committed stages must stay exact");
+        assert_eq!(st.truss(), before.truss(), "truss must be untouched (stale)");
+
+        // an uncancelled ctl run equals the plain parallel path
+        let mut a = before.clone();
+        let mut b = before.clone();
+        let (out_a, cancelled) =
+            a.apply_par_ctl(&EdgeBatch::deletes(dels.clone()), &pool, &plan, PassControl::default());
+        let out_b = b.apply_par(&EdgeBatch::deletes(dels), &pool, &plan);
+        assert!(!cancelled);
+        assert_eq!(out_a, out_b);
+        assert_eq!(a.graph(), b.graph());
+        assert_eq!(a.truss(), b.truss());
     }
 
     #[test]

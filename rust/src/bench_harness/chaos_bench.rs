@@ -1,0 +1,552 @@
+//! Chaos / overload-recovery study for the fault-tolerant executor.
+//!
+//! Three runs over one pre-generated workload:
+//!
+//! 1. **reference** — fault-free, closed-loop (each job waits before the
+//!    next submits): produces the ground-truth output signature for
+//!    every job and the *unloaded* high-priority latency baseline.
+//! 2. **chaos, no shedding** — a head-of-line wave of heavy doomed
+//!    low-priority jobs bursts in first and occupies the shards, then
+//!    the interactive stream arrives open-loop; seeded faults (exec
+//!    panics, shard crashes, stalls) fire throughout.
+//! 3. **chaos, shedding** — identical workload and fault seed, but
+//!    admission control is on: the doomed heavies are shed at admission
+//!    (predicted cost cannot meet their deadline), so shards stay free
+//!    for the interactive stream.
+//!
+//! The report verifies the chaos invariants — every submitted job
+//! reaches exactly one terminal outcome, no job is lost or duplicated,
+//! every `done` result is bit-identical to the fault-free reference,
+//! the injected faults actually fired, and shedding keeps the
+//! high-priority p99 strictly below the unshed run — and stamps
+//! `chaos-ok` into the rendered table only when all of them hold.
+
+use crate::algo::support::Mode;
+use crate::coordinator::job::{JobKind, JobOutcome, JobOutput};
+use crate::gen;
+use crate::graph::Csr;
+use crate::serve::{Executor, FaultPlan, Priority, ServeConfig, SubmitOpts, Ticket};
+use crate::util::{Rng, Timer};
+use anyhow::Result;
+use std::collections::{BTreeMap, HashMap, HashSet};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Workload and fault-injection knobs.
+#[derive(Clone, Debug)]
+pub struct ChaosConfig {
+    /// Interactive stream jobs (small, high/normal priority).
+    pub jobs: usize,
+    /// Heavy head-of-line jobs submitted as an initial burst: large
+    /// decompositions at `Priority::Low` with a deadline they cannot
+    /// meet — shed fodder under admission control, shard blockers
+    /// without it.
+    pub heavy: usize,
+    /// Vertex count of each heavy job's graph.
+    pub heavy_n: usize,
+    /// Open-loop inter-arrival gap of the interactive stream, µs.
+    pub arrival_us: u64,
+    /// Total worker budget, split evenly across shards.
+    pub total_workers: usize,
+    /// Shard count for every run.
+    pub shards: usize,
+    /// Workload RNG seed (graphs and kinds are pre-generated once).
+    pub seed: u64,
+    /// Seeded fault plan driving both chaos runs.
+    pub faults: FaultPlan,
+    /// Retry budget per job shape before quarantine.
+    pub retry_max: u32,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> Self {
+        ChaosConfig {
+            jobs: 48,
+            heavy: 6,
+            heavy_n: 700,
+            arrival_us: 400,
+            total_workers: 2,
+            shards: 2,
+            seed: 42,
+            faults: FaultPlan {
+                seed: 42,
+                exec_panic_every: 6,
+                transient: true,
+                shard_crash_every: 17,
+                stall_every: 9,
+                stall_ms: 2,
+            },
+            retry_max: 3,
+        }
+    }
+}
+
+/// One pre-generated job of the workload.
+struct JobSpec {
+    graph: Arc<Csr>,
+    kind: JobKind,
+    priority: Priority,
+    deadline: Option<Duration>,
+}
+
+/// Measured outcome of one run.
+#[derive(Clone, Debug)]
+pub struct ChaosRun {
+    /// Run label (`reference`, `chaos/no-shed`, `chaos/shed`).
+    pub label: String,
+    /// Jobs submitted (admitted + shed; rejects cannot occur — the
+    /// admission queue is unbounded in this study).
+    pub submitted: usize,
+    /// Tickets that resolved to a terminal outcome (conservation
+    /// requires `resolved == submitted`).
+    pub resolved: usize,
+    /// Terminal outcome counts, sorted by outcome name.
+    pub outcomes: Vec<(String, usize)>,
+    /// Total wall time of the run, ms.
+    pub wall_ms: f64,
+    /// Time from the last submission to full drain, ms (recovery time).
+    pub drain_ms: f64,
+    /// High-priority serving latency p50, ms.
+    pub high_p50_ms: f64,
+    /// High-priority serving latency p99, ms.
+    pub high_p99_ms: f64,
+    /// Jobs shed at admission.
+    pub shed: u64,
+    /// Panic retries.
+    pub retries: u64,
+    /// Quarantined jobs.
+    pub quarantined: u64,
+    /// Shard supervisor respawns.
+    pub respawns: u64,
+    /// Injected execution panics.
+    pub exec_panics: u64,
+    /// Injected shard-body crashes.
+    pub shard_crashes: u64,
+    /// Injected pass-boundary stalls.
+    pub stalls: u64,
+    /// `done` jobs compared against the fault-free reference.
+    pub done_checked: usize,
+    /// `done` jobs whose output differed from the reference (must be 0).
+    pub mismatched: usize,
+    /// Prometheus-style exposition captured before shutdown.
+    pub exposition: String,
+}
+
+/// Full study report.
+#[derive(Clone, Debug)]
+pub struct ChaosReport {
+    /// Interactive stream jobs per run.
+    pub jobs: usize,
+    /// Heavy head-of-line jobs per run.
+    pub heavy: usize,
+    /// Unloaded high-priority p99 from the closed-loop reference, ms.
+    pub baseline_p99_ms: f64,
+    /// The three runs: reference, chaos/no-shed, chaos/shed.
+    pub runs: Vec<ChaosRun>,
+}
+
+impl ChaosReport {
+    /// The chaos/no-shed run.
+    fn noshed(&self) -> Option<&ChaosRun> {
+        self.runs.iter().find(|r| r.label == "chaos/no-shed")
+    }
+
+    /// The chaos/shed run.
+    fn shed(&self) -> Option<&ChaosRun> {
+        self.runs.iter().find(|r| r.label == "chaos/shed")
+    }
+
+    /// Check every chaos invariant; `Err` names the first violation.
+    pub fn verify(&self) -> Result<(), String> {
+        for r in &self.runs {
+            if r.resolved != r.submitted {
+                return Err(format!(
+                    "{}: {} submitted but {} resolved (jobs lost or duplicated)",
+                    r.label, r.submitted, r.resolved
+                ));
+            }
+            let counted: usize = r.outcomes.iter().map(|(_, c)| c).sum();
+            if counted != r.submitted {
+                return Err(format!(
+                    "{}: outcome counts sum to {counted}, expected {}",
+                    r.label, r.submitted
+                ));
+            }
+            if r.mismatched != 0 {
+                return Err(format!(
+                    "{}: {} of {} done jobs diverged from the fault-free reference",
+                    r.label, r.mismatched, r.done_checked
+                ));
+            }
+        }
+        let noshed = self.noshed().ok_or_else(|| "missing chaos/no-shed run".to_string())?;
+        let shed = self.shed().ok_or_else(|| "missing chaos/shed run".to_string())?;
+        for r in [noshed, shed] {
+            if r.exec_panics + r.shard_crashes + r.stalls == 0 {
+                return Err(format!("{}: no injected fault fired", r.label));
+            }
+        }
+        if noshed.respawns + shed.respawns == 0 {
+            return Err("no shard respawned across the chaos runs".to_string());
+        }
+        if shed.shed == 0 {
+            return Err("chaos/shed run shed nothing under burst".to_string());
+        }
+        if shed.high_p99_ms >= noshed.high_p99_ms {
+            return Err(format!(
+                "shedding did not improve high-priority p99: {:.3}ms (shed) vs {:.3}ms (no-shed)",
+                shed.high_p99_ms, noshed.high_p99_ms
+            ));
+        }
+        Ok(())
+    }
+
+    /// Render the study as an aligned plain-text table with the
+    /// invariant verdict and the shed run's metrics exposition.
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "# chaos recovery: {} stream jobs + {} heavy head-of-line jobs, seeded faults\n\
+             # unloaded high-priority p99 baseline: {:.3} ms\n\
+             {:>14} {:>6} {:>9} {:>9} {:>9} {:>9} {:>6} {:>6} {:>5} {:>8} {:>7} {:>7} {:>7}\n",
+            self.jobs,
+            self.heavy,
+            self.baseline_p99_ms,
+            "run",
+            "jobs",
+            "wall_ms",
+            "drain_ms",
+            "hi_p50",
+            "hi_p99",
+            "shed",
+            "retry",
+            "quar",
+            "respawns",
+            "panics",
+            "crashes",
+            "stalls"
+        );
+        for r in &self.runs {
+            out.push_str(&format!(
+                "{:>14} {:>6} {:>9.1} {:>9.1} {:>9.3} {:>9.3} {:>6} {:>6} {:>5} {:>8} {:>7} {:>7} {:>7}\n",
+                r.label,
+                r.submitted,
+                r.wall_ms,
+                r.drain_ms,
+                r.high_p50_ms,
+                r.high_p99_ms,
+                r.shed,
+                r.retries,
+                r.quarantined,
+                r.respawns,
+                r.exec_panics,
+                r.shard_crashes,
+                r.stalls
+            ));
+        }
+        for r in &self.runs {
+            let counts = r
+                .outcomes
+                .iter()
+                .map(|(o, c)| format!("{c} {o}"))
+                .collect::<Vec<_>>()
+                .join(", ");
+            out.push_str(&format!("# {}: {counts}\n", r.label));
+        }
+        if let (Some(ns), Some(s)) = (self.noshed(), self.shed()) {
+            out.push_str(&format!(
+                "# high-priority p99 vs unloaded baseline: {:.2}x without shedding, {:.2}x with\n",
+                ns.high_p99_ms / self.baseline_p99_ms.max(1e-9),
+                s.high_p99_ms / self.baseline_p99_ms.max(1e-9)
+            ));
+        }
+        match self.verify() {
+            Ok(()) => out.push_str(
+                "# chaos-ok: every job reached one terminal outcome, done results match the \
+                 fault-free reference, shedding beat no-shedding on high-priority p99\n",
+            ),
+            Err(e) => out.push_str(&format!("# chaos-FAILED: {e}\n")),
+        }
+        if let Some(r) = self.shed() {
+            out.push_str("\n# metrics exposition (chaos/shed run):\n");
+            out.push_str(&r.exposition);
+        }
+        out
+    }
+}
+
+/// Deterministic signature of a job output: equal signatures ⇔
+/// bit-identical results (iteration counts are excluded — they are
+/// plan-dependent, the truss itself is not).
+fn signature(out: &JobOutput) -> String {
+    fn fold(vals: impl Iterator<Item = u64>) -> u64 {
+        let mut state = 0xcbf2_9ce4_8422_2325u64;
+        for v in vals {
+            state = (state ^ v).wrapping_mul(0x0100_0000_01b3);
+        }
+        state
+    }
+    match out {
+        JobOutput::Ktruss { truss_edges, edges, .. } => format!(
+            "ktruss:{truss_edges}:{:016x}",
+            fold(edges.iter().flat_map(|&(u, v)| [u64::from(u), u64::from(v)]))
+        ),
+        JobOutput::Kmax { kmax, truss_edges } => format!("kmax:{kmax}:{truss_edges}"),
+        JobOutput::Decompose { kmax, histogram } => format!(
+            "decompose:{kmax}:{:016x}",
+            fold(histogram.iter().flat_map(|&(k, c)| [u64::from(k), c as u64]))
+        ),
+        JobOutput::Triangles { count } => format!("triangles:{count}"),
+        JobOutput::Mutate { .. } => "mutate".to_string(),
+    }
+}
+
+/// Pre-generate the workload once so every run replays identical jobs:
+/// `heavy` doomed low-priority blockers first, then the interactive
+/// stream (every other job high-priority — the p99 population).
+fn generate_jobs(cfg: &ChaosConfig) -> Vec<JobSpec> {
+    let mut rng = Rng::new(cfg.seed);
+    let mut jobs = Vec::with_capacity(cfg.heavy + cfg.jobs);
+    for _ in 0..cfg.heavy {
+        let n = cfg.heavy_n.max(50);
+        let m = (5 * n).min(n * (n - 1) / 2);
+        let g = Arc::new(gen::rmat::rmat(n, m, gen::rmat::RmatParams::social(), &mut rng));
+        jobs.push(JobSpec {
+            graph: g,
+            kind: JobKind::Decompose,
+            priority: Priority::Low,
+            // a deadline no decomposition of this size can meet: the
+            // shed fodder for the admission-control run
+            deadline: Some(Duration::from_micros(100)),
+        });
+    }
+    for i in 0..cfg.jobs {
+        let n = rng.range(40, 140);
+        let m = (2 * n + rng.range(0, n)).min(n * (n - 1) / 2);
+        let g = Arc::new(gen::erdos_renyi::gnm(n, m, &mut rng));
+        let kind = match i % 3 {
+            0 => JobKind::Triangles,
+            1 => JobKind::Ktruss { k: 3, mode: Mode::Fine },
+            _ => JobKind::Ktruss { k: 4, mode: Mode::Coarse },
+        };
+        let priority = if i % 2 == 0 { Priority::High } else { Priority::Normal };
+        jobs.push(JobSpec { graph: g, kind, priority, deadline: None });
+    }
+    jobs
+}
+
+/// High-priority serving-latency quantiles (p50, p99) from the job
+/// spans of one run.
+fn high_quantiles(ex: &Executor, high_ids: &HashSet<u64>) -> (f64, f64) {
+    let mut lat: Vec<f64> = ex
+        .obs
+        .spans
+        .snapshot()
+        .iter()
+        .filter(|s| high_ids.contains(&s.id))
+        .map(|s| s.serve_ms)
+        .collect();
+    if lat.is_empty() {
+        return (0.0, 0.0);
+    }
+    lat.sort_by(f64::total_cmp);
+    let pick = |q: f64| lat[((lat.len() - 1) as f64 * q).round() as usize];
+    (pick(0.50), pick(0.99))
+}
+
+/// Replay the workload once. `closed_loop` waits each ticket before the
+/// next submission (the unloaded reference); otherwise the heavies
+/// burst in back-to-back and the stream follows open-loop. `reference`
+/// carries the fault-free signatures to diff `done` outputs against
+/// (`None` on the reference run itself, which records them instead).
+fn run_one(
+    cfg: &ChaosConfig,
+    jobs: &[JobSpec],
+    label: &str,
+    shed: bool,
+    faults: Option<FaultPlan>,
+    closed_loop: bool,
+    reference: Option<&HashMap<usize, String>>,
+) -> Result<(ChaosRun, HashMap<usize, String>)> {
+    let serve_cfg = ServeConfig {
+        shards: cfg.shards,
+        enable_dense: false,
+        batch_window: Duration::from_millis(1),
+        shed,
+        faults,
+        retry_max: cfg.retry_max,
+        ..Default::default()
+    }
+    .with_total_workers(cfg.total_workers);
+    let ex = Executor::start(serve_cfg);
+    let t = Timer::start();
+    let mut tickets: Vec<(usize, Ticket)> = Vec::with_capacity(jobs.len());
+    let mut high_ids: HashSet<u64> = HashSet::new();
+    let mut outcomes: BTreeMap<String, usize> = BTreeMap::new();
+    let mut signatures: HashMap<usize, String> = HashMap::new();
+    let mut done_checked = 0usize;
+    let mut mismatched = 0usize;
+    let mut resolved = 0usize;
+    let mut settle = |idx: usize, r: crate::coordinator::job::JobResult| {
+        resolved += 1;
+        *outcomes.entry(r.outcome.to_string()).or_insert(0) += 1;
+        if r.outcome == JobOutcome::Done {
+            match &r.output {
+                Ok(out) => {
+                    let sig = signature(out);
+                    if let Some(truth) = reference {
+                        done_checked += 1;
+                        if truth.get(&idx) != Some(&sig) {
+                            mismatched += 1;
+                        }
+                    }
+                    signatures.insert(idx, sig);
+                }
+                Err(e) => anyhow::bail!("{label}: done job {} carries an error: {e}", r.id),
+            }
+        }
+        Ok(())
+    };
+    for (idx, j) in jobs.iter().enumerate() {
+        let opts = SubmitOpts { priority: j.priority, deadline: j.deadline, degrade_store: None };
+        let ticket = ex
+            .try_submit_with(Arc::clone(&j.graph), j.kind.clone(), opts)
+            .map_err(|e| anyhow::anyhow!("{label}: admission refused job {idx}: {e}"))?;
+        if j.priority == Priority::High {
+            high_ids.insert(ticket.id);
+        }
+        if closed_loop {
+            settle(idx, ticket.wait())?;
+        } else {
+            tickets.push((idx, ticket));
+            // burst the heavies, pace the stream
+            if idx >= cfg.heavy && cfg.arrival_us > 0 {
+                std::thread::sleep(Duration::from_micros(cfg.arrival_us));
+            }
+        }
+    }
+    let submit_ms = t.elapsed_ms();
+    for (idx, ticket) in tickets {
+        settle(idx, ticket.wait())?;
+    }
+    let wall_ms = t.elapsed_ms();
+    let (high_p50_ms, high_p99_ms) = high_quantiles(&ex, &high_ids);
+    let exposition = crate::obs::prom::render(&ex.metrics, Some(&ex.obs.drift));
+    let m = &ex.metrics;
+    let (shed_n, retries, quarantined, respawns) = (
+        m.shed.load(std::sync::atomic::Ordering::Relaxed),
+        m.retries.load(std::sync::atomic::Ordering::Relaxed),
+        m.quarantined.load(std::sync::atomic::Ordering::Relaxed),
+        m.respawns(),
+    );
+    let (exec_panics, shard_crashes, stalls) = match &ex.faults {
+        Some(inj) => (
+            inj.exec_panics.load(std::sync::atomic::Ordering::Relaxed),
+            inj.shard_crashes.load(std::sync::atomic::Ordering::Relaxed),
+            inj.stalls.load(std::sync::atomic::Ordering::Relaxed),
+        ),
+        None => (0, 0, 0),
+    };
+    ex.shutdown();
+    Ok((
+        ChaosRun {
+            label: label.to_string(),
+            submitted: jobs.len(),
+            resolved,
+            outcomes: outcomes.into_iter().collect(),
+            wall_ms,
+            drain_ms: (wall_ms - submit_ms).max(0.0),
+            high_p50_ms,
+            high_p99_ms,
+            shed: shed_n,
+            retries,
+            quarantined,
+            respawns,
+            exec_panics,
+            shard_crashes,
+            stalls,
+            done_checked,
+            mismatched,
+            exposition,
+        },
+        signatures,
+    ))
+}
+
+/// Run the full study: fault-free closed-loop reference, then the two
+/// chaos runs (shedding off / on) over the identical workload and seed.
+pub fn run(cfg: &ChaosConfig, progress: impl Fn(&str)) -> Result<ChaosReport> {
+    if cfg.jobs == 0 || cfg.heavy == 0 {
+        anyhow::bail!("chaos bench needs ≥1 stream job and ≥1 heavy job");
+    }
+    if !cfg.faults.is_active() {
+        anyhow::bail!("chaos bench needs an active fault plan");
+    }
+    let jobs = generate_jobs(cfg);
+    progress(&format!(
+        "reference: fault-free closed-loop replay of {} jobs",
+        jobs.len()
+    ));
+    let (reference, truth) = run_one(cfg, &jobs, "reference", false, None, true, None)?;
+    let baseline_p99_ms = reference.high_p99_ms;
+    progress("chaos/no-shed: burst + faults, admission control off");
+    let (noshed, _) =
+        run_one(cfg, &jobs, "chaos/no-shed", false, Some(cfg.faults), false, Some(&truth))?;
+    progress("chaos/shed: burst + faults, admission control on");
+    let (shed, _) =
+        run_one(cfg, &jobs, "chaos/shed", true, Some(cfg.faults), false, Some(&truth))?;
+    Ok(ChaosReport {
+        jobs: cfg.jobs,
+        heavy: cfg.heavy,
+        baseline_p99_ms,
+        runs: vec![reference, noshed, shed],
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_chaos_study_upholds_every_invariant() {
+        let cfg = ChaosConfig {
+            jobs: 14,
+            heavy: 2,
+            heavy_n: 300,
+            arrival_us: 200,
+            total_workers: 2,
+            shards: 2,
+            seed: 9,
+            faults: FaultPlan {
+                seed: 9,
+                exec_panic_every: 4,
+                transient: true,
+                shard_crash_every: 5,
+                stall_every: 6,
+                stall_ms: 1,
+            },
+            retry_max: 3,
+        };
+        let report = run(&cfg, |_| {}).unwrap();
+        assert_eq!(report.runs.len(), 3);
+        report.verify().unwrap();
+        for r in &report.runs {
+            assert_eq!(r.resolved, r.submitted);
+            assert_eq!(r.mismatched, 0);
+        }
+        let reference = &report.runs[0];
+        assert_eq!(reference.outcomes, vec![("done".to_string(), 16)]);
+        let text = report.render();
+        assert!(text.contains("chaos-ok"));
+        assert!(text.contains("ktruss_jobs_shed_total"));
+        assert!(text.contains("ktruss_shard_respawns_total"));
+    }
+
+    #[test]
+    fn degenerate_configs_are_rejected() {
+        let no_jobs = ChaosConfig { jobs: 0, ..Default::default() };
+        assert!(run(&no_jobs, |_| {}).is_err());
+        let no_faults =
+            ChaosConfig { faults: FaultPlan::disabled(), ..Default::default() };
+        assert!(run(&no_faults, |_| {}).is_err());
+    }
+}

@@ -3,6 +3,7 @@
 //! synthetic replica suite. Used by `cargo bench` binaries and the CLI.
 
 pub mod ablations;
+pub mod chaos_bench;
 pub mod figs;
 pub mod plan_ablation;
 pub mod report;

@@ -216,7 +216,7 @@ fn run_one(cfg: &ThroughputConfig, jobs: &[JobSpec], shards: usize) -> Result<Sh
         tickets.push(ex.submit_with(
             Arc::clone(&j.graph),
             j.kind.clone(),
-            SubmitOpts { priority: j.priority, deadline: j.deadline },
+            SubmitOpts { priority: j.priority, deadline: j.deadline, degrade_store: None },
         ));
         if cfg.arrival_us > 0 {
             std::thread::sleep(Duration::from_micros(cfg.arrival_us));

@@ -114,6 +114,41 @@ pub enum JobOutput {
     },
 }
 
+/// Terminal disposition of a submitted job. Every admission the
+/// executor accepts (or sheds) reaches **exactly one** of these — the
+/// chaos invariant the fault-injection harness asserts: no job is
+/// lost, none is reported twice.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobOutcome {
+    /// Executed to completion (the `output` carries the payload, or an
+    /// execution error).
+    Done,
+    /// Rejected at admission: the planned cost blows the deadline (or
+    /// the queue is saturated) and no degraded answer was available.
+    Shed,
+    /// Answered at admission from a stale epoch of the degrade store
+    /// instead of computing fresh.
+    Degraded,
+    /// Stopped cooperatively at a pass boundary after its deadline
+    /// passed (deadline enforcement; partial work is discarded).
+    Cancelled,
+    /// Refused by the poison-job registry after exhausting its panic
+    /// retry budget.
+    Quarantined,
+}
+
+impl std::fmt::Display for JobOutcome {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            JobOutcome::Done => write!(f, "done"),
+            JobOutcome::Shed => write!(f, "shed"),
+            JobOutcome::Degraded => write!(f, "degraded"),
+            JobOutcome::Cancelled => write!(f, "cancelled"),
+            JobOutcome::Quarantined => write!(f, "quarantined"),
+        }
+    }
+}
+
 /// Completed job envelope.
 #[derive(Clone, Debug)]
 pub struct JobResult {
@@ -144,6 +179,12 @@ pub struct JobResult {
     /// [`KtrussResult::total_support_steps`](crate::algo::ktruss::KtrussResult::total_support_steps)
     /// for fixed-k truss jobs.
     pub passes: Vec<crate::obs::span::PassSpan>,
+    /// Terminal disposition (see [`JobOutcome`]). `Done` for every job
+    /// that executed — including ones whose `output` is an `Err` — and
+    /// a degraded/terminated variant for jobs the serving layer shed,
+    /// degraded, cancelled or quarantined instead of running to
+    /// completion.
+    pub outcome: JobOutcome,
     /// Ok(output) or the error message (no anyhow across channels).
     pub output: Result<JobOutput, String>,
 }
@@ -156,5 +197,14 @@ mod tests {
     fn engine_display() {
         assert_eq!(Engine::SparseCpu.to_string(), "sparse-cpu");
         assert_eq!(Engine::DenseXla.to_string(), "dense-xla");
+    }
+
+    #[test]
+    fn outcome_display() {
+        assert_eq!(JobOutcome::Done.to_string(), "done");
+        assert_eq!(JobOutcome::Shed.to_string(), "shed");
+        assert_eq!(JobOutcome::Degraded.to_string(), "degraded");
+        assert_eq!(JobOutcome::Cancelled.to_string(), "cancelled");
+        assert_eq!(JobOutcome::Quarantined.to_string(), "quarantined");
     }
 }

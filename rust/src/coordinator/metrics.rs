@@ -18,6 +18,11 @@ pub struct ShardMetrics {
     pub deadline_miss: AtomicU64,
     /// Current queued jobs (gauge, set by the dispatcher/shard).
     pub queue_depth: AtomicU64,
+    /// Jobs this shard cancelled at a pass boundary (deadline
+    /// enforcement).
+    pub cancelled: AtomicU64,
+    /// Times this shard's worker body was respawned after a panic.
+    pub respawns: AtomicU64,
 }
 
 /// Aggregated coordinator metrics.
@@ -33,6 +38,21 @@ pub struct Metrics {
     pub sparse_jobs: AtomicU64,
     /// Jobs the dense XLA engine executed.
     pub dense_jobs: AtomicU64,
+    /// Jobs shed at admission (planned cost blew the deadline, no
+    /// degraded answer available).
+    pub shed: AtomicU64,
+    /// Jobs answered at admission from a stale epoch of the degrade
+    /// store.
+    pub degraded: AtomicU64,
+    /// Jobs cancelled at a pass boundary (deadline enforcement).
+    pub cancelled: AtomicU64,
+    /// Jobs refused by the poison-job registry after exhausting their
+    /// panic retry budget.
+    pub quarantined: AtomicU64,
+    /// Panic-retry requeues (each failed attempt that earned another).
+    pub retries: AtomicU64,
+    /// Submissions rejected by admission backpressure (queue full).
+    pub queue_rejected: AtomicU64,
     latency_us: [AtomicU64; BUCKETS],
     latency_sum_us: AtomicU64,
     shards: Vec<ShardMetrics>,
@@ -79,6 +99,53 @@ impl Metrics {
         let bucket = (64 - us.max(1).leading_zeros() as usize - 1).min(BUCKETS - 1);
         self.latency_us[bucket].fetch_add(1, Ordering::Relaxed);
         self.latency_sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    // --- robustness counters --------------------------------------------
+
+    /// Count one job shed at admission.
+    pub fn record_shed(&self) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one job degraded to a stale-epoch read at admission.
+    pub fn record_degraded(&self) {
+        self.degraded.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one job cancelled at a pass boundary on `shard`.
+    pub fn record_cancelled(&self, shard: usize) {
+        self.cancelled.fetch_add(1, Ordering::Relaxed);
+        if let Some(s) = self.shards.get(shard) {
+            s.cancelled.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Count one job quarantined by the poison registry.
+    pub fn record_quarantined(&self) {
+        self.quarantined.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one panic-retry requeue.
+    pub fn record_retry(&self) {
+        self.retries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one submission rejected by admission backpressure.
+    pub fn record_queue_rejected(&self) {
+        self.queue_rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one worker-body respawn on `shard`.
+    pub fn record_respawn(&self, shard: usize) {
+        if let Some(s) = self.shards.get(shard) {
+            s.respawns.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Total worker-body respawns across shards.
+    pub fn respawns(&self) -> u64 {
+        self.shards.iter().map(|s| s.respawns.load(Ordering::Relaxed)).sum()
     }
 
     // --- per-shard serving counters -------------------------------------
@@ -195,6 +262,22 @@ impl Metrics {
                 self.deadline_misses()
             ));
         }
+        // the robustness tallies only appear once any of them fires,
+        // so fault-free scrapes render exactly as before
+        let shed = self.shed.load(Ordering::Relaxed);
+        let degraded = self.degraded.load(Ordering::Relaxed);
+        let cancelled = self.cancelled.load(Ordering::Relaxed);
+        let quarantined = self.quarantined.load(Ordering::Relaxed);
+        let retries = self.retries.load(Ordering::Relaxed);
+        let rejected = self.queue_rejected.load(Ordering::Relaxed);
+        let respawns = self.respawns();
+        if shed + degraded + cancelled + quarantined + retries + rejected + respawns > 0 {
+            line.push_str(&format!(
+                " shed={shed} degraded={degraded} cancelled={cancelled} \
+                 quarantined={quarantined} retries={retries} rejected={rejected} \
+                 respawns={respawns}"
+            ));
+        }
         line
     }
 
@@ -205,11 +288,14 @@ impl Metrics {
             .enumerate()
             .map(|(i, s)| {
                 format!(
-                    "shard {i}: jobs={} stolen={} deadline_miss={} queue_depth={}",
+                    "shard {i}: jobs={} stolen={} deadline_miss={} queue_depth={} \
+                     cancelled={} respawns={}",
                     s.jobs.load(Ordering::Relaxed),
                     s.stolen.load(Ordering::Relaxed),
                     s.deadline_miss.load(Ordering::Relaxed),
-                    s.queue_depth.load(Ordering::Relaxed)
+                    s.queue_depth.load(Ordering::Relaxed),
+                    s.cancelled.load(Ordering::Relaxed),
+                    s.respawns.load(Ordering::Relaxed)
                 )
             })
             .collect::<Vec<_>>()
@@ -378,6 +464,65 @@ mod tests {
         }
         assert_eq!(m.steals(), shards as u64 * per_shard.div_ceil(3));
         assert_eq!(m.deadline_misses(), shards as u64 * per_shard.div_ceil(7));
+    }
+
+    #[test]
+    fn robustness_counters_stay_exact_across_racing_shards() {
+        // 8 shard threads each mixing deadline misses, sheds, cancels,
+        // quarantines, retries and respawns against one Metrics block;
+        // every tally must come out exact — the accounting behind the
+        // chaos invariant (no outcome lost, none double-counted)
+        let shards = 8usize;
+        let m = std::sync::Arc::new(Metrics::with_shards(shards));
+        let per_shard = 400u64;
+        let handles: Vec<_> = (0..shards)
+            .map(|sh| {
+                let m = std::sync::Arc::clone(&m);
+                std::thread::spawn(move || {
+                    for i in 0..per_shard {
+                        match i % 5 {
+                            0 => m.record_shed(),
+                            1 => m.record_degraded(),
+                            2 => m.record_cancelled(sh),
+                            3 => m.record_quarantined(),
+                            _ => m.record_shard_done(sh),
+                        }
+                        if i % 3 == 0 {
+                            m.record_deadline_miss(sh);
+                        }
+                        if i % 11 == 0 {
+                            m.record_retry();
+                            m.record_queue_rejected();
+                        }
+                        if i % 97 == 0 {
+                            m.record_respawn(sh);
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let n = shards as u64;
+        let per_bucket = per_shard / 5; // 400 divides evenly into 5 classes
+        assert_eq!(m.shed.load(Ordering::Relaxed), n * per_bucket);
+        assert_eq!(m.degraded.load(Ordering::Relaxed), n * per_bucket);
+        assert_eq!(m.cancelled.load(Ordering::Relaxed), n * per_bucket);
+        assert_eq!(m.quarantined.load(Ordering::Relaxed), n * per_bucket);
+        assert_eq!(m.deadline_misses(), n * per_shard.div_ceil(3));
+        assert_eq!(m.retries.load(Ordering::Relaxed), n * per_shard.div_ceil(11));
+        assert_eq!(m.queue_rejected.load(Ordering::Relaxed), n * per_shard.div_ceil(11));
+        assert_eq!(m.respawns(), n * per_shard.div_ceil(97));
+        for (sh, s) in m.shards().iter().enumerate() {
+            assert_eq!(s.cancelled.load(Ordering::Relaxed), per_bucket, "shard {sh} cancelled");
+            assert_eq!(s.respawns.load(Ordering::Relaxed), per_shard.div_ceil(97), "shard {sh}");
+        }
+        let line = m.render();
+        assert!(line.contains(&format!("shed={}", n * per_bucket)), "{line}");
+        assert!(line.contains(&format!("respawns={}", n * per_shard.div_ceil(97))), "{line}");
+        // fault-free metrics keep the legacy one-line shape
+        assert!(!Metrics::with_shards(2).render().contains("shed="), "legacy shape changed");
     }
 
     #[test]

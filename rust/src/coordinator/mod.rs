@@ -15,7 +15,7 @@ pub mod router;
 pub mod service;
 pub mod worker;
 
-pub use job::{Engine, JobKind, JobOutput, JobRequest, JobResult};
+pub use job::{Engine, JobKind, JobOutcome, JobOutput, JobRequest, JobResult};
 pub use metrics::{Metrics, ShardMetrics};
 pub use router::{route, route_costed, RouterConfig};
 pub use service::{Coordinator, ServiceConfig, Ticket};

@@ -10,9 +10,9 @@
 //! provenance — the serving cost model keys its per-label calibration
 //! on the plan's support mode.
 
-use super::job::{Engine, JobKind, JobOutput, JobRequest, JobResult};
+use super::job::{Engine, JobKind, JobOutcome, JobOutput, JobRequest, JobResult};
 use crate::algo::{decompose, kmax, triangle};
-use crate::par::{ktruss_par_plan, Pool};
+use crate::par::{ktruss_par_plan_ctl, PassControl, Pool};
 use crate::plan::{ExecutionPlan, PlanSpec, Planner};
 use crate::runtime::DenseEngine;
 use crate::util::Timer;
@@ -74,27 +74,54 @@ impl Worker {
         engine: Engine,
         plan: Option<ExecutionPlan>,
     ) -> JobResult {
+        self.execute_planned_ctl(req, engine, plan, PassControl::default())
+    }
+
+    /// [`execute_planned`](Worker::execute_planned) under a
+    /// cooperative [`PassControl`]: pool-driven kinds (fixed-k truss,
+    /// mutation batches) observe the token at their pass/stage
+    /// boundaries and stop early, reporting
+    /// [`JobOutcome::Cancelled`] with the partial work discarded (the
+    /// `output` is an `Err`, the recorded passes are exactly the ones
+    /// that executed). Sequential kinds (kmax, decompose, triangles)
+    /// have no boundaries to observe — the serving executor enforces
+    /// their deadlines before dispatch instead.
+    pub fn execute_planned_ctl(
+        &self,
+        req: &JobRequest,
+        engine: Engine,
+        plan: Option<ExecutionPlan>,
+        ctl: PassControl<'_>,
+    ) -> JobResult {
         let t = Timer::start();
         let sparse_plan = |w: &Worker| plan.or_else(|| w.pick_plan(req));
         let (engine_used, used_plan, output) = match engine {
             Engine::DenseXla => match self.execute_dense(req) {
-                Ok(out) => (Engine::DenseXla, None, Ok((out, Vec::new()))),
+                Ok(out) => (Engine::DenseXla, None, Ok((out, Vec::new(), false))),
                 // dense failure (missing artifacts, size) falls back
                 Err(_) => {
                     let p = sparse_plan(self);
-                    let out = self.execute_sparse(req, p);
+                    let out = self.execute_sparse(req, p, ctl);
                     (Engine::SparseCpu, p, out)
                 }
             },
             Engine::SparseCpu => {
                 let p = sparse_plan(self);
-                let out = self.execute_sparse(req, p);
+                let out = self.execute_sparse(req, p, ctl);
                 (Engine::SparseCpu, p, out)
             }
         };
-        let (output, passes) = match output {
-            Ok((out, passes)) => (Ok(out), passes),
-            Err(e) => (Err(format!("{e:#}")), Vec::new()),
+        let (output, passes, cancelled) = match output {
+            Ok((out, passes, cancelled)) => (Ok(out), passes, cancelled),
+            Err(e) => (Err(format!("{e:#}")), Vec::new(), false),
+        };
+        // a cancelled run's partial payload is not a usable answer —
+        // surface the termination, keep the executed passes for the
+        // span (their steps still sum to the measured total)
+        let (outcome, output) = if cancelled {
+            (JobOutcome::Cancelled, Err("cancelled at a pass boundary (deadline)".to_string()))
+        } else {
+            (JobOutcome::Done, output)
         };
         JobResult {
             id: req.id,
@@ -104,6 +131,7 @@ impl Worker {
             support: used_plan.map(|p| p.support),
             wall_ms: t.elapsed_ms(),
             passes,
+            outcome,
             output,
         }
     }
@@ -112,7 +140,8 @@ impl Worker {
         &self,
         req: &JobRequest,
         plan: Option<ExecutionPlan>,
-    ) -> anyhow::Result<(JobOutput, Vec<crate::obs::span::PassSpan>)> {
+        ctl: PassControl<'_>,
+    ) -> anyhow::Result<(JobOutput, Vec<crate::obs::span::PassSpan>, bool)> {
         Ok(match req.kind {
             JobKind::Ktruss { k, mode } => {
                 // truss jobs always carry a plan by construction; the
@@ -124,7 +153,7 @@ impl Worker {
                         crate::algo::incremental::SupportMode::Auto,
                     )
                 });
-                let r = ktruss_par_plan(&req.graph, k, &self.pool, &plan);
+                let (r, cancelled) = ktruss_par_plan_ctl(&req.graph, k, &self.pool, &plan, ctl);
                 let passes = crate::obs::span::passes_from_stats(&r.stats);
                 (
                     JobOutput::Ktruss {
@@ -133,24 +162,46 @@ impl Worker {
                         edges: r.truss.edges().collect(),
                     },
                     passes,
+                    cancelled,
                 )
             }
             JobKind::Kmax => {
                 let r = kmax::kmax(&req.graph);
-                (JobOutput::Kmax { kmax: r.kmax, truss_edges: r.truss.nnz() }, Vec::new())
+                (JobOutput::Kmax { kmax: r.kmax, truss_edges: r.truss.nnz() }, Vec::new(), false)
             }
             JobKind::Decompose => {
                 let d = decompose::decompose(&req.graph);
-                (JobOutput::Decompose { kmax: d.kmax, histogram: d.histogram() }, Vec::new())
+                (
+                    JobOutput::Decompose { kmax: d.kmax, histogram: d.histogram() },
+                    Vec::new(),
+                    false,
+                )
             }
             JobKind::Triangles => (
                 JobOutput::Triangles { count: triangle::count_triangles(&req.graph) },
                 Vec::new(),
+                false,
             ),
             JobKind::Mutate { ref store, ref batch } => {
-                let (snap, out) = match plan {
-                    Some(p) => store.apply_par(batch, &self.pool, &p),
-                    None => store.apply(batch),
+                let applied = match plan {
+                    Some(p) => store.apply_par_ctl(batch, &self.pool, &p, ctl),
+                    None => Some(store.apply(batch)),
+                };
+                let Some((snap, out)) = applied else {
+                    // cancelled at a stage boundary: the staged batch
+                    // was discarded, nothing was published
+                    return Ok((
+                        JobOutput::Mutate {
+                            epoch: store.epoch(),
+                            inserted: 0,
+                            deleted: 0,
+                            rejected: 0,
+                            recomputed: false,
+                            truss_edges: 0,
+                        },
+                        Vec::new(),
+                        true,
+                    ));
                 };
                 // pass 0: the frontier decrement/increment sweep;
                 // pass 1 (when taken): the re-convergence tail
@@ -184,6 +235,7 @@ impl Worker {
                         truss_edges: out.truss_edges,
                     },
                     passes,
+                    false,
                 )
             }
         })
@@ -324,6 +376,33 @@ mod tests {
             JobOutput::Ktruss { truss_edges, .. } => assert_eq!(truss_edges, 5),
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn cancelled_execution_reports_cancelled_outcome() {
+        use crate::par::{CancelToken, PassControl};
+        let worker = Worker::new(Pool::new(2), None);
+        let g = crate::testkit::graphs::peel_chain(24);
+        let req = JobRequest {
+            id: 9,
+            graph: Arc::new(g),
+            kind: JobKind::Ktruss { k: 3, mode: Mode::Fine },
+        };
+        let tok = CancelToken::new();
+        tok.cancel();
+        let r = worker.execute_planned_ctl(
+            &req,
+            Engine::SparseCpu,
+            None,
+            PassControl { cancel: Some(&tok), on_pass: None },
+        );
+        assert_eq!(r.outcome, JobOutcome::Cancelled);
+        assert!(r.output.is_err(), "a cancelled run must not report a usable payload");
+        assert!(!r.passes.is_empty(), "the executed passes stay recorded");
+        // the same request uncancelled completes normally
+        let r = worker.execute(&req, Engine::SparseCpu);
+        assert_eq!(r.outcome, JobOutcome::Done);
+        assert!(r.output.is_ok());
     }
 
     #[test]

@@ -30,7 +30,8 @@ use ktruss::algo::ktruss::ktruss_mode as ktruss_seq_mode;
 use ktruss::algo::stream::EdgeBatch;
 use ktruss::algo::{decompose, kmax};
 use ktruss::bench_harness::{
-    ablations, figs, plan_ablation, report, serve_bench, stream_bench, table1, Workload,
+    ablations, chaos_bench, figs, plan_ablation, report, serve_bench, stream_bench, table1,
+    Workload,
 };
 use ktruss::cli::Args;
 use ktruss::coordinator::JobKind;
@@ -116,15 +117,24 @@ fn print_help() {
                       [--trace-out spans.json]  (streaming maintenance: churn-chain replay\n\
                       with merge-step accounting vs from-scratch, then the same script served\n\
                       as planned Mutate jobs with pinned-epoch reads)\n\
+           bench chaos [--jobs 48] [--heavy 6] [--heavy-n 700] [--arrival-us 400]\n\
+                      [--workers 2] [--shards 2] [--seed 42] [--fault-seed 42] [--retry-max 3]\n\
+                      (overload/recovery study under seeded fault injection: fault-free\n\
+                      reference, then the same burst with admission control off vs on;\n\
+                      verifies every job reaches one terminal outcome and done results\n\
+                      match the reference bit-for-bit)\n\
            serve      [--jobs 32] [--shards 2] [--pool 4] [--plan <spec>] [--schedule <s>]\n\
                       [--priority <p>] [--support-mode full|incremental|auto]\n\
                       [--deadline-ms D] [--calibration file.tsv]\n\
+                      [--max-queue N] [--shed] [--chaos SEED]\n\
                       [--trace-out spans.json|.jsonl]\n\
                       (demo job stream through the sharded executor; --pool is the TOTAL worker\n\
                       budget split across shards; unpinned plan axes are chosen per job at\n\
                       submit time; without --priority the stream mixes priority classes;\n\
                       --trace-out dumps the job -> pass span tree as Chrome trace JSON or\n\
-                      JSONL, and the drift report prints per executed-plan regime)\n\
+                      JSONL, and the drift report prints per executed-plan regime;\n\
+                      --max-queue bounds admission with backpressure, --shed turns on\n\
+                      deadline-aware shedding + cancellation, --chaos injects seeded faults)\n\
            mutate     [--graph <name|path>] [--k 4] [--shards 1] [--pool 2] [--plan <spec>]\n\
                       [--mutations churn[:batches[:depth]] | \"+u:v,-u:v;…\"]\n\
                       [--trace-out spans.json|.jsonl]\n\
@@ -256,6 +266,7 @@ fn cmd_run(args: &Args) -> Result<()> {
             SubmitOpts {
                 priority,
                 deadline: (deadline_ms > 0).then(|| Duration::from_millis(deadline_ms)),
+                degrade_store: None,
             },
         );
         let r = ticket.wait();
@@ -384,6 +395,7 @@ fn local_job_span(
         deadline_missed: false,
         start_us: 0,
         ok: true,
+        outcome: "done".to_string(),
         passes,
     }
 }
@@ -523,11 +535,14 @@ fn cmd_bench(args: &Args) -> Result<()> {
         .positional
         .first()
         .context(
-            "bench needs a target: table1|fig2|fig3|fig4|ablations|gpu-sched|serve|stream|plan",
+            "bench needs a target: table1|fig2|fig3|fig4|ablations|gpu-sched|serve|stream|chaos|plan",
         )?
         .clone();
     if which == "serve" {
         return cmd_bench_serve(args);
+    }
+    if which == "chaos" {
+        return cmd_bench_chaos(args);
     }
     if which == "stream" {
         return cmd_bench_stream(args);
@@ -614,6 +629,39 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
     );
     let r = serve_bench::run(&cfg, |msg| eprintln!("  [{msg}]"))?;
     report::emit("serve_throughput.txt", &r.render())
+}
+
+/// The chaos overload/recovery study (seeded fault injection over a
+/// head-of-line burst, shedding off vs on; see
+/// `bench_harness::chaos_bench`).
+fn cmd_bench_chaos(args: &Args) -> Result<()> {
+    let default = chaos_bench::ChaosConfig::default();
+    let cfg = chaos_bench::ChaosConfig {
+        jobs: args.get_as::<usize>("jobs", default.jobs)?,
+        heavy: args.get_as::<usize>("heavy", default.heavy)?,
+        heavy_n: args.get_as::<usize>("heavy-n", default.heavy_n)?,
+        arrival_us: args.get_as::<u64>("arrival-us", default.arrival_us)?,
+        total_workers: args.get_as::<usize>("workers", default.total_workers)?,
+        shards: args.get_as::<usize>("shards", default.shards)?,
+        seed: args.get_as::<u64>("seed", default.seed)?,
+        faults: ktruss::serve::FaultPlan {
+            seed: args.get_as::<u64>("fault-seed", default.faults.seed)?,
+            ..default.faults
+        },
+        retry_max: args.get_as::<u32>("retry-max", default.retry_max)?,
+    };
+    args.reject_unknown()?;
+    println!(
+        "# chaos: {} stream jobs + {} heavy head-of-line jobs, {} shard(s), seeded faults",
+        cfg.jobs, cfg.heavy, cfg.shards
+    );
+    let r = chaos_bench::run(&cfg, |msg| eprintln!("  [{msg}]"))?;
+    let rendered = r.render();
+    report::emit("chaos_recovery.txt", &rendered)?;
+    if let Err(e) = r.verify() {
+        anyhow::bail!("chaos invariant violated: {e}");
+    }
+    Ok(())
 }
 
 /// The streaming maintenance workload (churn-chain differential replay
@@ -833,6 +881,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
         None => None,
     };
     let deadline_ms = args.get_as::<u64>("deadline-ms", 0)?;
+    // robustness knobs: bounded admission backlog, shedding/deadline
+    // enforcement, and a mild deterministic chaos plan for demos
+    let max_queue = args.get_as::<usize>("max-queue", 0)?;
+    let shed = args.has("shed");
+    let chaos: Option<ktruss::serve::FaultPlan> = args
+        .opt("chaos")
+        .map(|s| -> Result<ktruss::serve::FaultPlan> {
+            let seed: u64 = s.parse().map_err(|e| anyhow::anyhow!("--chaos <seed>: {e}"))?;
+            Ok(ktruss::serve::FaultPlan {
+                seed,
+                exec_panic_every: 7,
+                transient: true,
+                stall_every: 11,
+                stall_ms: 5,
+                ..ktruss::serve::FaultPlan::default()
+            })
+        })
+        .transpose()?;
     let calibration = args.opt("calibration");
     let trace_out = args.opt("trace-out");
     args.reject_unknown()?;
@@ -854,8 +920,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     // --pool is the exact TOTAL budget; with_total_workers spreads the
     // remainder over the first shards
-    let serve_cfg = ServeConfig { shards, plan: spec, ..Default::default() }
-        .with_total_workers(pool);
+    let serve_cfg =
+        ServeConfig { shards, plan: spec, max_queue, shed, faults: chaos, ..Default::default() }
+            .with_total_workers(pool);
     let (wps, extra) = (serve_cfg.workers_per_shard, serve_cfg.workers_remainder);
     let ex = Executor::start_with_model(serve_cfg, model);
     println!(
@@ -883,16 +950,31 @@ fn cmd_serve(args: &Args) -> Result<()> {
             _ => Priority::Normal,
         });
         let deadline = (deadline_ms > 0).then(|| Duration::from_millis(deadline_ms));
-        tickets.push(ex.submit_with(g, kind, SubmitOpts { priority, deadline }));
+        let opts = SubmitOpts { priority, deadline, degrade_store: None };
+        match ex.try_submit_with(g, kind, opts) {
+            Ok(t) => tickets.push(t),
+            // backpressure is a normal overload response, not an error
+            Err(e) => println!("job refused at admission: {e}"),
+        }
     }
+    let submitted = tickets.len();
+    let mut outcomes: std::collections::BTreeMap<String, usize> =
+        std::collections::BTreeMap::new();
     for ticket in tickets {
         let r = ticket.wait();
-        if let Err(e) = &r.output {
-            bail!("job {} failed: {e}", r.id);
+        *outcomes.entry(r.outcome.to_string()).or_insert(0) += 1;
+        // with shedding/enforcement on, non-Done outcomes carry an Err
+        // output by design; only a failed *execution* is a hard error
+        if r.outcome == ktruss::coordinator::JobOutcome::Done {
+            if let Err(e) = &r.output {
+                bail!("job {} failed: {e}", r.id);
+            }
         }
     }
     let total_ms = t.elapsed_ms();
-    println!("all {jobs} jobs completed in {total_ms:.1} ms");
+    let outcome_list =
+        outcomes.iter().map(|(o, c)| format!("{c} {o}")).collect::<Vec<_>>().join(", ");
+    println!("all {submitted} submitted jobs reached a terminal outcome in {total_ms:.1} ms ({outcome_list})");
     println!("metrics: {}", ex.metrics.render());
     println!("{}", ex.metrics.render_shards());
     if let (Some(p50), Some(p99)) = (ex.metrics.quantile(0.50), ex.metrics.quantile(0.99)) {

@@ -106,6 +106,7 @@ pub fn chrome_trace(spans: &[JobSpan]) -> String {
                 ("serve_ms", num(s.serve_ms)),
                 ("deadline_missed", s.deadline_missed.to_string()),
                 ("ok", s.ok.to_string()),
+                ("outcome", format!("\"{}\"", esc(&s.outcome))),
             ],
         ));
         // nest each pass inside the job's execution window,
@@ -155,7 +156,7 @@ pub fn span_json(s: &JobSpan) -> String {
         .collect::<Vec<_>>()
         .join(",");
     format!(
-        "{{\"id\":{},\"kind\":\"{}\",\"n\":{},\"m\":{},\"shard\":{},\"plan\":\"{}\",\"est_steps\":{},\"total_steps\":{},\"predicted_ms\":{},\"planned_pass_ms\":{},\"queue_ms\":{},\"exec_ms\":{},\"serve_ms\":{},\"deadline_ms\":{},\"deadline_missed\":{},\"start_us\":{},\"ok\":{},\"passes\":[{}]}}",
+        "{{\"id\":{},\"kind\":\"{}\",\"n\":{},\"m\":{},\"shard\":{},\"plan\":\"{}\",\"est_steps\":{},\"total_steps\":{},\"predicted_ms\":{},\"planned_pass_ms\":{},\"queue_ms\":{},\"exec_ms\":{},\"serve_ms\":{},\"deadline_ms\":{},\"deadline_missed\":{},\"start_us\":{},\"ok\":{},\"outcome\":\"{}\",\"passes\":[{}]}}",
         s.id,
         esc(&s.kind),
         s.n,
@@ -173,6 +174,7 @@ pub fn span_json(s: &JobSpan) -> String {
         s.deadline_missed,
         s.start_us,
         s.ok,
+        esc(&s.outcome),
         passes
     )
 }
@@ -224,6 +226,7 @@ mod tests {
             deadline_missed: false,
             start_us: 1000,
             ok: true,
+            outcome: "done".into(),
             passes: vec![
                 PassSpan { iter: 0, steps: 30, wall_ms: 0.6, ..PassSpan::default() },
                 PassSpan {
@@ -249,6 +252,7 @@ mod tests {
         assert!(doc.contains("\"steps\":30"), "{doc}");
         assert!(doc.contains("\"plan\":\"static/fine/full\""), "{doc}");
         assert!(doc.contains("\"planned_pass_ms\":null"), "{doc}");
+        assert!(doc.contains("\"outcome\":\"done\""), "{doc}");
     }
 
     #[test]
@@ -260,6 +264,7 @@ mod tests {
             assert!(l.starts_with('{') && l.ends_with('}'), "{l}");
             assert!(l.contains("\"total_steps\":34"), "{l}");
             assert!(l.contains("\"deadline_ms\":5.000000"), "{l}");
+            assert!(l.contains("\"outcome\":\"done\""), "{l}");
         }
     }
 

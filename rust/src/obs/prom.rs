@@ -52,6 +52,50 @@ pub fn render(metrics: &Metrics, drift: Option<&DriftTracker>) -> String {
         "Jobs the dense XLA engine executed",
         metrics.dense_jobs.load(Ordering::Relaxed),
     );
+    // robustness counters: always emitted (a zero is a signal too —
+    // the chaos smoke asserts their presence on fault-free runs)
+    counter(
+        &mut out,
+        "ktruss_jobs_shed_total",
+        "Jobs shed at admission (planned cost blew the deadline)",
+        metrics.shed.load(Ordering::Relaxed),
+    );
+    counter(
+        &mut out,
+        "ktruss_jobs_degraded_total",
+        "Jobs answered from a stale epoch at admission",
+        metrics.degraded.load(Ordering::Relaxed),
+    );
+    counter(
+        &mut out,
+        "ktruss_jobs_cancelled_total",
+        "Jobs cancelled at a pass boundary (deadline enforcement)",
+        metrics.cancelled.load(Ordering::Relaxed),
+    );
+    counter(
+        &mut out,
+        "ktruss_jobs_quarantined_total",
+        "Jobs refused by the poison-job registry",
+        metrics.quarantined.load(Ordering::Relaxed),
+    );
+    counter(
+        &mut out,
+        "ktruss_job_retries_total",
+        "Panic-retry requeues",
+        metrics.retries.load(Ordering::Relaxed),
+    );
+    counter(
+        &mut out,
+        "ktruss_queue_rejected_total",
+        "Submissions rejected by admission backpressure",
+        metrics.queue_rejected.load(Ordering::Relaxed),
+    );
+    counter(
+        &mut out,
+        "ktruss_shard_respawns_total",
+        "Worker-body respawns after a panic, all shards",
+        metrics.respawns(),
+    );
 
     // latency histogram: the log₂ buckets as a cumulative le-series
     out.push_str("# HELP ktruss_job_latency_us Job serve latency histogram (microseconds)\n");
@@ -175,6 +219,35 @@ mod tests {
         assert!(text.contains("ktruss_shard_jobs_total{shard=\"0\"} 1"), "{text}");
         assert!(text.contains("ktruss_shard_stolen_total{shard=\"1\"} 1"), "{text}");
         assert!(text.contains("ktruss_shard_queue_depth{shard=\"1\"} 3"), "{text}");
+    }
+
+    #[test]
+    fn robustness_counters_are_always_exposed() {
+        // fault-free metrics still expose every robustness series at 0
+        let m = Metrics::with_shards(1);
+        let text = render(&m, None);
+        for series in [
+            "ktruss_jobs_shed_total 0",
+            "ktruss_jobs_degraded_total 0",
+            "ktruss_jobs_cancelled_total 0",
+            "ktruss_jobs_quarantined_total 0",
+            "ktruss_job_retries_total 0",
+            "ktruss_queue_rejected_total 0",
+            "ktruss_shard_respawns_total 0",
+        ] {
+            assert!(text.contains(series), "missing {series}: {text}");
+        }
+        m.record_shed();
+        m.record_degraded();
+        m.record_cancelled(0);
+        m.record_quarantined();
+        m.record_retry();
+        m.record_queue_rejected();
+        m.record_respawn(0);
+        let text = render(&m, None);
+        assert!(text.contains("ktruss_jobs_shed_total 1"), "{text}");
+        assert!(text.contains("ktruss_jobs_cancelled_total 1"), "{text}");
+        assert!(text.contains("ktruss_shard_respawns_total 1"), "{text}");
     }
 
     #[test]

@@ -81,6 +81,10 @@ pub struct JobSpan {
     pub start_us: u64,
     /// Whether the job completed without error.
     pub ok: bool,
+    /// Terminal disposition (`done`, `shed`, `degraded`, `cancelled`,
+    /// `quarantined`) — the string form of
+    /// [`JobOutcome`](crate::coordinator::job::JobOutcome).
+    pub outcome: String,
     /// Per-iteration pass spans (empty for non-truss kinds).
     pub passes: Vec<PassSpan>,
 }
@@ -192,6 +196,7 @@ mod tests {
             deadline_missed: false,
             start_us: 42,
             ok: true,
+            outcome: "done".into(),
             passes: steps
                 .iter()
                 .enumerate()

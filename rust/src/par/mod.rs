@@ -22,6 +22,6 @@ pub use frontier::{
 pub use parallel_support::{
     compute_supports_gran, compute_supports_hybrid, compute_supports_par,
     compute_supports_segmented, ktruss_par, ktruss_par_gran, ktruss_par_gran_mode,
-    ktruss_par_mode, ktruss_par_plan, prune_par,
+    ktruss_par_mode, ktruss_par_plan, ktruss_par_plan_ctl, prune_par,
 };
-pub use pool::{Pool, Schedule, ALL_SCHEDULES};
+pub use pool::{CancelToken, PassControl, Pool, Schedule, ALL_SCHEDULES};

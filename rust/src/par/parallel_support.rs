@@ -13,7 +13,7 @@
 
 use super::balance::{self, Costs};
 use super::frontier;
-use super::pool::{Pool, Schedule};
+use super::pool::{PassControl, Pool, Schedule};
 use crate::algo::bitmap::{self, eager_update_bitmap_atomic};
 use crate::algo::incremental::{self, InNbrs, SupportMode};
 use crate::algo::support::{
@@ -382,6 +382,27 @@ pub fn ktruss_par_plan(
     pool: &Pool,
     plan: &ExecutionPlan,
 ) -> crate::algo::ktruss::KtrussResult {
+    ktruss_par_plan_ctl(g, k, pool, plan, PassControl::default()).0
+}
+
+/// [`ktruss_par_plan`] with pass-boundary control: the serving layer's
+/// cancellable entry point. The driver consults `ctl` after every
+/// completed pass (once the frontier shows more work remains) and, when
+/// the token reports cancelled, stops **between** passes — every pass
+/// that ran has its exact [`IterationStat`](crate::algo::ktruss::IterationStat)
+/// recorded, so a cancelled job's span tree still sums pass steps to
+/// its total.
+///
+/// Returns the (possibly partial) result plus `true` when the run was
+/// cut short by cancellation; `false` means it converged normally and
+/// the result is the exact k-truss.
+pub fn ktruss_par_plan_ctl(
+    g: &crate::graph::Csr,
+    k: u32,
+    pool: &Pool,
+    plan: &ExecutionPlan,
+    ctl: PassControl<'_>,
+) -> (crate::algo::ktruss::KtrussResult, bool) {
     ktruss_par_gran_crossover(
         g,
         k,
@@ -390,6 +411,7 @@ pub fn ktruss_par_plan(
         plan.schedule,
         plan.support,
         plan.crossover,
+        ctl,
     )
 }
 
@@ -421,10 +443,14 @@ pub fn ktruss_par_mode(
         schedule,
         support,
         incremental::DEFAULT_CROSSOVER_FRAC,
+        PassControl::default(),
     )
+    .0
 }
 
-/// [`ktruss_par_mode`] with the plan-supplied auto-crossover fraction.
+/// [`ktruss_par_mode`] with the plan-supplied auto-crossover fraction
+/// and pass-boundary control; returns `(result, cancelled)`.
+#[allow(clippy::too_many_arguments)]
 fn ktruss_par_mode_crossover(
     g: &crate::graph::Csr,
     k: u32,
@@ -433,7 +459,8 @@ fn ktruss_par_mode_crossover(
     schedule: Schedule,
     support: SupportMode,
     crossover: f64,
-) -> crate::algo::ktruss::KtrussResult {
+    ctl: PassControl<'_>,
+) -> (crate::algo::ktruss::KtrussResult, bool) {
     let mut z = ZCsr::from_csr(g);
     let s_atomic: Vec<AtomicU32> = (0..z.slots()).map(|_| AtomicU32::new(0)).collect();
     let mut s_plain = vec![0u32; z.slots()];
@@ -453,14 +480,12 @@ fn ktruss_par_mode_crossover(
     // live-edge counter maintained from the prune/compaction outcomes
     // (one initial O(slots) scan, no per-round rescan)
     let mut live = z.live_edges();
+    let mut cancelled = false;
     if live == 0 {
-        return crate::algo::ktruss::KtrussResult {
-            truss: z.to_csr(),
-            iterations,
-            stats,
-            k,
-            mode,
-        };
+        return (
+            crate::algo::ktruss::KtrussResult { truss: z.to_csr(), iterations, stats, k, mode },
+            false,
+        );
     }
     let in_nbrs: Option<InNbrs> = if use_inc { Some(InNbrs::build(&z)) } else { None };
     // tasks offered to the pool pre-split: rows for coarse, live edges
@@ -498,6 +523,13 @@ fn ktruss_par_mode_crossover(
             tasks: pass_tasks,
         });
         if f.is_empty() {
+            break;
+        }
+        // pass boundary: fault-injection hook + cooperative cancel —
+        // the completed pass above is already recorded, so a cancelled
+        // run's stats still sum to the executed step total
+        if ctl.pass_boundary(iterations - 1) {
+            cancelled = true;
             break;
         }
         // decide how to bring S up to date for the shrunken graph (the
@@ -563,7 +595,7 @@ fn ktruss_par_mode_crossover(
             }
         }
     }
-    crate::algo::ktruss::KtrussResult { truss: z.to_csr(), iterations, stats, k, mode }
+    (crate::algo::ktruss::KtrussResult { truss: z.to_csr(), iterations, stats, k, mode }, cancelled)
 }
 
 /// Full concurrent k-truss at any [`Granularity`] under the default
@@ -607,11 +639,16 @@ pub fn ktruss_par_gran_mode(
         schedule,
         support,
         incremental::DEFAULT_CROSSOVER_FRAC,
+        PassControl::default(),
     )
+    .0
 }
 
 /// [`ktruss_par_gran_mode`] with the plan-supplied auto-crossover
-/// fraction — the shared engine behind [`ktruss_par_plan`].
+/// fraction and pass-boundary control — the shared engine behind
+/// [`ktruss_par_plan`] / [`ktruss_par_plan_ctl`]; returns
+/// `(result, cancelled)`.
+#[allow(clippy::too_many_arguments)]
 fn ktruss_par_gran_crossover(
     g: &crate::graph::Csr,
     k: u32,
@@ -620,13 +657,32 @@ fn ktruss_par_gran_crossover(
     schedule: Schedule,
     support: SupportMode,
     crossover: f64,
-) -> crate::algo::ktruss::KtrussResult {
+    ctl: PassControl<'_>,
+) -> (crate::algo::ktruss::KtrussResult, bool) {
     let (len, hybrid) = match gran {
         Granularity::Coarse => {
-            return ktruss_par_mode_crossover(g, k, pool, Mode::Coarse, schedule, support, crossover)
+            return ktruss_par_mode_crossover(
+                g,
+                k,
+                pool,
+                Mode::Coarse,
+                schedule,
+                support,
+                crossover,
+                ctl,
+            )
         }
         Granularity::Fine => {
-            return ktruss_par_mode_crossover(g, k, pool, Mode::Fine, schedule, support, crossover)
+            return ktruss_par_mode_crossover(
+                g,
+                k,
+                pool,
+                Mode::Fine,
+                schedule,
+                support,
+                crossover,
+                ctl,
+            )
         }
         Granularity::Segment { len } => (len, false),
         Granularity::Hybrid { len } => (len, true),
@@ -648,14 +704,18 @@ fn ktruss_par_gran_crossover(
     let mut stats = Vec::new();
     // live-edge counter maintained from the prune/compaction outcomes
     let mut live = z.live_edges();
+    let mut cancelled = false;
     if live == 0 {
-        return crate::algo::ktruss::KtrussResult {
-            truss: z.to_csr(),
-            iterations,
-            stats,
-            k,
-            mode: Mode::Fine,
-        };
+        return (
+            crate::algo::ktruss::KtrussResult {
+                truss: z.to_csr(),
+                iterations,
+                stats,
+                k,
+                mode: Mode::Fine,
+            },
+            false,
+        );
     }
     let in_nbrs: Option<InNbrs> = if use_inc { Some(InNbrs::build(&z)) } else { None };
     let mut pass_timer = crate::util::Timer::start();
@@ -683,6 +743,11 @@ fn ktruss_par_gran_crossover(
             tasks: pass_tasks,
         });
         if f.is_empty() {
+            break;
+        }
+        // pass boundary: fault-injection hook + cooperative cancel
+        if ctl.pass_boundary(iterations - 1) {
+            cancelled = true;
             break;
         }
         let (go_incremental, frontier_cost_vec) = incremental::decide_incremental(
@@ -732,13 +797,16 @@ fn ktruss_par_gran_crossover(
             }
         }
     }
-    crate::algo::ktruss::KtrussResult {
-        truss: z.to_csr(),
-        iterations,
-        stats,
-        k,
-        mode: Mode::Fine,
-    }
+    (
+        crate::algo::ktruss::KtrussResult {
+            truss: z.to_csr(),
+            iterations,
+            stats,
+            k,
+            mode: Mode::Fine,
+        },
+        cancelled,
+    )
 }
 
 #[cfg(test)]
@@ -929,6 +997,71 @@ mod tests {
                 assert_eq!(par.iterations, seq.iterations, "k={k} {support}");
             }
         }
+    }
+
+    #[test]
+    fn cancelled_driver_stops_between_passes_with_exact_stats() {
+        use crate::par::pool::CancelToken;
+        // peel_chain converges over many rounds, so a pre-cancelled
+        // token must cut the run short after the first recorded pass
+        let g = crate::testkit::graphs::peel_chain(24);
+        let pool = Pool::new(2);
+        let plan = crate::plan::Planner::new(2).choose(&g, 3);
+        let full = ktruss_par_plan(&g, 3, &pool, &plan);
+        assert!(full.iterations > 2, "fixture must need several passes");
+        for gran in [
+            Granularity::Coarse,
+            Granularity::Fine,
+            Granularity::Segment { len: 8 },
+            Granularity::Hybrid { len: 8 },
+        ] {
+            let mut p = plan;
+            p.granularity = gran;
+            let token = CancelToken::new();
+            token.cancel();
+            let ctl = PassControl { cancel: Some(&token), on_pass: None };
+            let (r, cancelled) = ktruss_par_plan_ctl(&g, 3, &pool, &p, ctl);
+            assert!(cancelled, "{gran}: pre-cancelled token must stop the run");
+            assert!(
+                r.iterations < full.iterations,
+                "{gran}: cancelled run must not converge ({} vs {})",
+                r.iterations,
+                full.iterations
+            );
+            // every executed pass is recorded: stats len == iterations
+            // and the per-pass steps are the run's exact total
+            assert_eq!(r.stats.len(), r.iterations, "{gran}");
+            assert_eq!(
+                r.stats.iter().map(|s| s.support_steps).sum::<u64>(),
+                r.total_support_steps(),
+                "{gran}"
+            );
+        }
+        // an uncancelled token changes nothing, including step parity
+        let token = CancelToken::new();
+        let ctl = PassControl { cancel: Some(&token), on_pass: None };
+        let (r, cancelled) = ktruss_par_plan_ctl(&g, 3, &pool, &plan, ctl);
+        assert!(!cancelled);
+        assert_eq!(r.truss, full.truss);
+        assert_eq!(r.iterations, full.iterations);
+    }
+
+    #[test]
+    fn pass_hook_fires_at_every_boundary() {
+        use std::sync::atomic::AtomicUsize;
+        let g = crate::testkit::graphs::peel_chain(16);
+        let pool = Pool::new(2);
+        let plan = crate::plan::Planner::new(2).choose(&g, 3);
+        let fired = AtomicUsize::new(0);
+        let hook = |_iter: usize| {
+            fired.fetch_add(1, Ordering::Relaxed);
+        };
+        let ctl = PassControl { cancel: None, on_pass: Some(&hook) };
+        let (r, cancelled) = ktruss_par_plan_ctl(&g, 3, &pool, &plan, ctl);
+        assert!(!cancelled);
+        // the hook fires between passes: every pass except the final
+        // (empty-frontier) one has a boundary after it
+        assert_eq!(fired.load(Ordering::Relaxed), r.iterations - 1);
     }
 
     #[test]

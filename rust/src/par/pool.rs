@@ -295,6 +295,79 @@ pub const ALL_SCHEDULES: [Schedule; 4] = [
     Schedule::Stealing,
 ];
 
+/// A cooperative cancellation token: an explicit cancel flag plus an
+/// optional wall-clock deadline, checked by the convergence drivers at
+/// pass boundaries. Cloning shares the flag (`Arc`), so the serving
+/// layer can cancel a running job from outside the worker thread.
+///
+/// Cancellation is *cooperative and pass-granular* by design: a pass
+/// that has started runs to completion (its exact step counts stay
+/// accounted), and the driver stops before starting the next one —
+/// which is what keeps a cancelled job's span tree satisfying the
+/// pass-steps-sum-to-total invariant.
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken {
+    flag: std::sync::Arc<std::sync::atomic::AtomicBool>,
+    deadline: Option<std::time::Instant>,
+}
+
+impl CancelToken {
+    /// A token that only cancels when [`CancelToken::cancel`] is called.
+    pub fn new() -> CancelToken {
+        CancelToken::default()
+    }
+
+    /// A token that additionally reports cancelled once `deadline` has
+    /// passed.
+    pub fn with_deadline(deadline: std::time::Instant) -> CancelToken {
+        CancelToken { flag: Default::default(), deadline: Some(deadline) }
+    }
+
+    /// Request cancellation (visible to every clone of this token).
+    pub fn cancel(&self) {
+        self.flag.store(true, Ordering::Release);
+    }
+
+    /// Whether the token has been cancelled or its deadline has passed.
+    pub fn is_cancelled(&self) -> bool {
+        self.flag.load(Ordering::Acquire)
+            || self.deadline.is_some_and(|d| std::time::Instant::now() >= d)
+    }
+}
+
+/// Pass-boundary control threaded through the convergence drivers:
+/// an optional [`CancelToken`] plus an optional per-pass hook (used by
+/// the fault-injection harness to stall at genuine pass boundaries).
+/// The hook receives the 0-based index of the pass that just finished.
+#[derive(Clone, Copy, Default)]
+pub struct PassControl<'a> {
+    /// Checked after every completed pass; when cancelled the driver
+    /// returns early with the passes it has already run.
+    pub cancel: Option<&'a CancelToken>,
+    /// Invoked after every completed pass (fault-injection stalls).
+    pub on_pass: Option<&'a (dyn Fn(usize) + Sync)>,
+}
+
+impl PassControl<'_> {
+    /// Run the per-pass hook (if any) for completed pass `iter`, then
+    /// report whether the driver should stop before the next pass.
+    pub fn pass_boundary(&self, iter: usize) -> bool {
+        if let Some(hook) = self.on_pass {
+            hook(iter);
+        }
+        self.cancel.is_some_and(|c| c.is_cancelled())
+    }
+}
+
+impl std::fmt::Debug for PassControl<'_> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PassControl")
+            .field("cancel", &self.cancel)
+            .field("on_pass", &self.on_pass.is_some())
+            .finish()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -385,6 +458,39 @@ mod tests {
             );
             assert_eq!(total, 499_500, "{sched:?}");
         }
+    }
+
+    #[test]
+    fn cancel_token_flag_and_deadline() {
+        let t = CancelToken::new();
+        assert!(!t.is_cancelled());
+        let shared = t.clone();
+        shared.cancel();
+        assert!(t.is_cancelled(), "cancel must be visible through clones");
+
+        let expired =
+            CancelToken::with_deadline(std::time::Instant::now() - std::time::Duration::from_millis(1));
+        assert!(expired.is_cancelled());
+        let future =
+            CancelToken::with_deadline(std::time::Instant::now() + std::time::Duration::from_secs(600));
+        assert!(!future.is_cancelled());
+    }
+
+    #[test]
+    fn pass_control_runs_hook_then_reports_cancel() {
+        let seen = AtomicUsize::new(0);
+        let hook = |iter: usize| {
+            seen.store(iter + 1, Ordering::Relaxed);
+        };
+        let token = CancelToken::new();
+        let ctl = PassControl { cancel: Some(&token), on_pass: Some(&hook) };
+        assert!(!ctl.pass_boundary(3));
+        assert_eq!(seen.load(Ordering::Relaxed), 4);
+        token.cancel();
+        assert!(ctl.pass_boundary(4));
+        // the hook still runs on the cancelling boundary
+        assert_eq!(seen.load(Ordering::Relaxed), 5);
+        assert!(!PassControl::default().pass_boundary(0));
     }
 
     #[test]

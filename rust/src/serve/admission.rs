@@ -1,0 +1,190 @@
+//! Plan-aware admission control: decide at submit time whether a job
+//! is enqueued, rejected with backpressure, or shed/degraded.
+//!
+//! The decision is a pure function ([`AdmissionPolicy::decide`]) of
+//! the queue depth and the *planner's* cost prediction — the same
+//! `choose_scored` estimate the dispatcher packs batches with. That is
+//! the point: the serving layer refuses work it already knows it
+//! cannot finish in time, instead of discovering the miss after
+//! burning a shard on it.
+//!
+//! * **Backpressure**: with a bound configured
+//!   (`ServeConfig::max_queue > 0`), a submission that finds the
+//!   admitted-but-not-executing backlog at the bound is rejected with
+//!   [`SubmitError::QueueFull`] — the caller sees the overload
+//!   immediately instead of growing an unbounded queue.
+//! * **Shed / degrade**: with shedding enabled (`ServeConfig::shed`),
+//!   a [`Priority::Low`] job whose estimated wait plus predicted
+//!   execution wall already exceeds its deadline budget is not
+//!   enqueued. If the submission carries a
+//!   [`GraphStore`](crate::serve::GraphStore) to degrade to, the
+//!   executor answers from the store's current (possibly stale) epoch;
+//!   otherwise the job is shed outright. Either way the ticket
+//!   resolves immediately with a terminal
+//!   [`JobOutcome`](crate::coordinator::JobOutcome).
+//!
+//! High- and normal-priority jobs are never shed at admission; they
+//! are what shedding protects.
+
+use super::queue::Priority;
+use std::time::Duration;
+
+/// Why a submission was refused outright (no ticket was issued).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// Admission backpressure: the admitted-but-not-executing backlog
+    /// is at the configured bound.
+    QueueFull {
+        /// The configured `max_queue` bound that was hit.
+        max_queue: usize,
+    },
+    /// The executor has shut down.
+    Down,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::QueueFull { max_queue } => {
+                write!(f, "admission queue full (bound {max_queue})")
+            }
+            SubmitError::Down => write!(f, "executor is down"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// Inputs to one admission decision, gathered at submit time.
+#[derive(Clone, Copy, Debug)]
+pub struct AdmissionInput {
+    /// The job's priority class.
+    pub priority: Priority,
+    /// The job's soft-deadline budget (`None` = best-effort, never
+    /// shed).
+    pub deadline: Option<Duration>,
+    /// The cost model's predicted execution wall for the chosen plan,
+    /// in ms.
+    pub predicted_ms: f64,
+    /// Estimated wait before this job would start executing, in ms
+    /// (queued steps ahead of it through the ns/step calibration,
+    /// spread across shards).
+    pub wait_ms: f64,
+    /// Jobs admitted but not yet executing (central queue plus shard
+    /// queues).
+    pub queue_depth: usize,
+}
+
+/// What admission decided for one submission.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdmissionDecision {
+    /// Enqueue normally.
+    Admit,
+    /// Refuse with [`SubmitError::QueueFull`]: the backlog is at the
+    /// bound.
+    Reject,
+    /// Do not run: answer from a stale epoch if the submission carries
+    /// a degrade store, else shed. The ticket resolves immediately.
+    Degrade,
+}
+
+/// The admission knobs, lifted off
+/// [`ServeConfig`](crate::serve::ServeConfig).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AdmissionPolicy {
+    /// Backlog bound (`0` = unbounded, never reject).
+    pub max_queue: usize,
+    /// Shed/degrade Low jobs whose planned cost blows their deadline.
+    pub shed: bool,
+}
+
+impl AdmissionPolicy {
+    /// Decide one submission. Pure: same input, same decision.
+    pub fn decide(&self, input: &AdmissionInput) -> AdmissionDecision {
+        if self.max_queue > 0 && input.queue_depth >= self.max_queue {
+            return AdmissionDecision::Reject;
+        }
+        if self.shed && input.priority == Priority::Low {
+            if let Some(deadline) = input.deadline {
+                let budget_ms = deadline.as_secs_f64() * 1e3;
+                if input.wait_ms + input.predicted_ms > budget_ms {
+                    return AdmissionDecision::Degrade;
+                }
+            }
+        }
+        AdmissionDecision::Admit
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn input() -> AdmissionInput {
+        AdmissionInput {
+            priority: Priority::Low,
+            deadline: Some(Duration::from_millis(10)),
+            predicted_ms: 2.0,
+            wait_ms: 1.0,
+            queue_depth: 0,
+        }
+    }
+
+    #[test]
+    fn unbounded_best_effort_policy_admits_everything() {
+        let policy = AdmissionPolicy { max_queue: 0, shed: false };
+        let over = AdmissionInput { queue_depth: 10_000, predicted_ms: 1e9, ..input() };
+        assert_eq!(policy.decide(&over), AdmissionDecision::Admit);
+    }
+
+    #[test]
+    fn full_queue_rejects_regardless_of_priority() {
+        let policy = AdmissionPolicy { max_queue: 4, shed: true };
+        for priority in [Priority::Low, Priority::Normal, Priority::High] {
+            let at_bound = AdmissionInput { priority, queue_depth: 4, ..input() };
+            assert_eq!(policy.decide(&at_bound), AdmissionDecision::Reject);
+        }
+        let below = AdmissionInput { queue_depth: 3, predicted_ms: 0.1, wait_ms: 0.0, ..input() };
+        assert_eq!(policy.decide(&below), AdmissionDecision::Admit);
+    }
+
+    #[test]
+    fn low_jobs_blowing_their_deadline_degrade() {
+        let policy = AdmissionPolicy { max_queue: 0, shed: true };
+        // wait 8ms + predicted 5ms > 10ms budget
+        let doomed = AdmissionInput { predicted_ms: 5.0, wait_ms: 8.0, ..input() };
+        assert_eq!(policy.decide(&doomed), AdmissionDecision::Degrade);
+        // the same cost with headroom is admitted
+        let fits = AdmissionInput { predicted_ms: 5.0, wait_ms: 1.0, ..input() };
+        assert_eq!(policy.decide(&fits), AdmissionDecision::Admit);
+    }
+
+    #[test]
+    fn only_low_priority_with_a_deadline_is_shed() {
+        let policy = AdmissionPolicy { max_queue: 0, shed: true };
+        let doomed = AdmissionInput { predicted_ms: 1e6, wait_ms: 1e6, ..input() };
+        assert_eq!(policy.decide(&doomed), AdmissionDecision::Degrade);
+        for priority in [Priority::Normal, Priority::High] {
+            let protected = AdmissionInput { priority, ..doomed };
+            assert_eq!(policy.decide(&protected), AdmissionDecision::Admit);
+        }
+        let best_effort = AdmissionInput { deadline: None, ..doomed };
+        assert_eq!(policy.decide(&best_effort), AdmissionDecision::Admit);
+    }
+
+    #[test]
+    fn shedding_off_never_degrades() {
+        let policy = AdmissionPolicy { max_queue: 0, shed: false };
+        let doomed = AdmissionInput { predicted_ms: 1e6, wait_ms: 1e6, ..input() };
+        assert_eq!(policy.decide(&doomed), AdmissionDecision::Admit);
+    }
+
+    #[test]
+    fn submit_error_displays() {
+        assert_eq!(
+            SubmitError::QueueFull { max_queue: 8 }.to_string(),
+            "admission queue full (bound 8)"
+        );
+        assert_eq!(SubmitError::Down.to_string(), "executor is down");
+    }
+}

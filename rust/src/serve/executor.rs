@@ -15,22 +15,64 @@
 //! job granularity; stealing the *most* urgent job is the job-level
 //! twist — the idle thief executes it immediately, so the steal can
 //! only pull urgent work forward).
+//!
+//! # Fault tolerance
+//!
+//! The executor survives its own workload (see `docs/ARCHITECTURE.md`,
+//! "Failure model"):
+//!
+//! * **Admission control** ([`super::admission`]): a bounded backlog
+//!   rejects with [`SubmitError::QueueFull`]; with shedding enabled,
+//!   Low jobs whose planned cost already blows their deadline resolve
+//!   immediately — degraded to a stale [`GraphStore`] epoch when the
+//!   submission carries one, shed outright otherwise.
+//! * **Panic isolation**: each execution runs under `catch_unwind`. A
+//!   panicking job is retried with backoff up to
+//!   [`ServeConfig::retry_max`] times, then its shape fingerprint is
+//!   quarantined (the poison-job registry) — the shard itself keeps
+//!   serving. A panic *outside* the per-job isolation kills only the
+//!   shard body: a supervisor respawns it and requeues the in-flight
+//!   admission from the shard's stash, so the job is never lost.
+//! * **Deadline enforcement**: with shedding enabled, admitted jobs
+//!   carry a deadline-armed [`CancelToken`] and stop cooperatively at
+//!   the next convergence pass boundary once the deadline passes
+//!   ([`JobOutcome::Cancelled`]).
+//! * **Lock hygiene**: every mutex/condvar acquisition recovers from
+//!   poisoning explicitly (`lock_recover`) — a panicking thread must
+//!   not take down submitters or `Drop`.
 
-use super::cost_model::{estimate_steps_mode, job_label, CostModel};
+use super::admission::{AdmissionDecision, AdmissionInput, AdmissionPolicy, SubmitError};
+use super::cost_model::{estimate_steps_mode, job_label, kind_label, CostModel};
+use super::faults::{FaultInjector, FaultPlan};
 use super::queue::{Admission, Priority, ServeQueue};
+use super::store::GraphStore;
 use crate::algo::incremental::SupportMode;
-use crate::coordinator::job::{JobId, JobKind, JobRequest, JobResult};
+use crate::coordinator::job::{
+    Engine, JobId, JobKind, JobOutcome, JobOutput, JobRequest, JobResult,
+};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::router::{route_costed, RouterConfig};
 use crate::coordinator::worker::Worker;
 use crate::graph::Csr;
-use crate::par::Pool;
+use crate::par::{CancelToken, PassControl, Pool};
 use crate::plan::{ExecutionPlan, PlanSpec, Planner};
 use crate::runtime::DenseEngine;
+use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
+
+/// Lock a mutex, recovering from poisoning. Every structure guarded in
+/// this module stays consistent across a panic (queues and stashes are
+/// mutated by single push/pop/take operations), so the poison flag
+/// carries no information we act on — and ignoring it is what keeps a
+/// panicked shard from cascading into every submitter and into
+/// `Executor::drop`.
+fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
 
 /// Configuration of the sharded executor.
 #[derive(Clone, Copy, Debug)]
@@ -62,6 +104,23 @@ pub struct ServeConfig {
     pub plan: PlanSpec,
     /// Allow drained shards to steal queued jobs from loaded shards.
     pub steal: bool,
+    /// Admission backlog bound: a submission that finds this many jobs
+    /// admitted but not yet executing is rejected with
+    /// [`SubmitError::QueueFull`]. `0` = unbounded, never reject.
+    pub max_queue: usize,
+    /// Enable shedding and deadline *enforcement*: Low jobs whose
+    /// planned cost blows their deadline resolve at admission
+    /// (degraded or shed), and admitted jobs cancel cooperatively at
+    /// the first pass boundary past their deadline. Off by default:
+    /// deadlines are soft (misses are counted, jobs still complete).
+    pub shed: bool,
+    /// Panic retry budget per job shape: an execution that panics is
+    /// requeued (with backoff) while its fingerprint's panic count
+    /// stays at or below this, then quarantined.
+    pub retry_max: u32,
+    /// Deterministic fault injection for chaos tests and `bench chaos`;
+    /// `None` (or a plan with every rate 0) injects nothing.
+    pub faults: Option<FaultPlan>,
 }
 
 impl Default for ServeConfig {
@@ -76,6 +135,10 @@ impl Default for ServeConfig {
             enable_dense: true,
             plan: PlanSpec::auto(),
             steal: true,
+            max_queue: 0,
+            shed: false,
+            retry_max: 2,
+            faults: None,
         }
     }
 }
@@ -94,18 +157,35 @@ impl ServeConfig {
 }
 
 /// Per-job submission options.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone)]
 pub struct SubmitOpts {
     /// Urgency class of the job.
     pub priority: Priority,
-    /// Soft deadline relative to submission; misses are counted in the
-    /// metrics, the job still runs to completion.
+    /// Soft deadline relative to submission. Misses are counted in the
+    /// metrics; with [`ServeConfig::shed`] the deadline is additionally
+    /// *enforced* (admission shedding for Low jobs, cooperative
+    /// cancellation for admitted ones).
     pub deadline: Option<Duration>,
+    /// Stale-epoch degrade target: when admission sheds this job and
+    /// the store can answer it (a k-truss job whose `k` matches the
+    /// store's), the ticket resolves [`JobOutcome::Degraded`] from the
+    /// store's current — possibly stale — epoch instead of failing.
+    pub degrade_store: Option<Arc<GraphStore>>,
 }
 
 impl Default for SubmitOpts {
     fn default() -> Self {
-        SubmitOpts { priority: Priority::Normal, deadline: None }
+        SubmitOpts { priority: Priority::Normal, deadline: None, degrade_store: None }
+    }
+}
+
+impl std::fmt::Debug for SubmitOpts {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SubmitOpts")
+            .field("priority", &self.priority)
+            .field("deadline", &self.deadline)
+            .field("degrade_store", &self.degrade_store.is_some())
+            .finish()
     }
 }
 
@@ -155,6 +235,17 @@ struct ShardShared {
     /// (0 = idle). Lets the dispatcher's packing baseline see a shard
     /// blocked on a heavy job as loaded even when its queue is empty.
     inflight: Vec<AtomicU64>,
+    /// The admission each shard is currently executing (a clone; the
+    /// graph is an `Arc`). A shard-body panic unwinds past the job —
+    /// the supervisor takes the stash and requeues it, so the crash
+    /// loses nothing. Separate from `state` so neither ever needs the
+    /// other while held by the supervisor.
+    stash: Vec<Mutex<Option<Admission>>>,
+    /// Poison-job registry: shape fingerprint → panics observed. A
+    /// fingerprint whose count exceeds the retry budget is quarantined
+    /// on sight; a successful completion clears its entry
+    /// (self-healing after transient faults).
+    poison: Mutex<HashMap<u64, u32>>,
 }
 
 /// The sharded executor handle. Dropping it drains queued jobs and
@@ -176,8 +267,10 @@ struct ShardShared {
 pub struct Executor {
     cfg: ServeConfig,
     adm: Arc<AdmissionShared>,
+    shards: Arc<ShardShared>,
     next_id: AtomicU64,
-    /// Latency quantiles, per-shard counters and deadline accounting.
+    /// Latency quantiles, per-shard counters, deadline and robustness
+    /// accounting.
     pub metrics: Arc<Metrics>,
     /// The ns/step-calibrated per-job cost model (refined by every
     /// completion).
@@ -187,6 +280,10 @@ pub struct Executor {
     /// admission-time predictions against measured walls
     /// ([`crate::obs`]).
     pub obs: Arc<crate::obs::ObsHub>,
+    /// The fault injector shared by every shard when the config carries
+    /// an active [`FaultPlan`] (`None` in production). Public so a
+    /// chaos harness can assert its fired-counters.
+    pub faults: Option<Arc<FaultInjector>>,
     /// The submit-time planner: plans each sparse truss job exactly
     /// once at admission (schedule × granularity × support ×
     /// crossover), informed by the cost model's per-label calibration.
@@ -230,16 +327,22 @@ impl Executor {
             }),
             work_cv: Condvar::new(),
             inflight: (0..cfg.shards).map(|_| AtomicU64::new(0)).collect(),
+            stash: (0..cfg.shards).map(|_| Mutex::new(None)).collect(),
+            poison: Mutex::new(HashMap::new()),
         });
+        let faults = cfg.faults.filter(|p| p.is_active()).map(|p| Arc::new(FaultInjector::new(p)));
         let mut shard_handles = Vec::with_capacity(cfg.shards);
         for me in 0..cfg.shards {
             let shards = Arc::clone(&shards);
             let metrics = Arc::clone(&metrics);
             let cost_model = Arc::clone(&cost_model);
             let obs = Arc::clone(&obs);
+            let faults = faults.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("ktruss-shard-{me}"))
-                .spawn(move || shard_loop(me, cfg, &shards, &metrics, &cost_model, &obs))
+                .spawn(move || {
+                    shard_supervisor(me, cfg, &shards, &metrics, &cost_model, &obs, faults.as_ref())
+                })
                 .expect("spawn shard");
             shard_handles.push(handle);
         }
@@ -255,10 +358,12 @@ impl Executor {
         Executor {
             cfg,
             adm,
+            shards,
             next_id: AtomicU64::new(1),
             metrics,
             cost_model,
             obs,
+            faults,
             planner,
             dispatcher: Mutex::new(Some(dispatcher)),
             shard_handles: Mutex::new(shard_handles),
@@ -275,13 +380,42 @@ impl Executor {
         self.submit_with(graph, kind, SubmitOpts::default())
     }
 
+    /// Submit with explicit priority and soft deadline, panicking on
+    /// refusal (see [`Executor::try_submit_with`] for the fallible
+    /// form — with admission control configured, prefer it).
+    pub fn submit_with(&self, graph: Arc<Csr>, kind: JobKind, opts: SubmitOpts) -> Ticket {
+        match self.try_submit_with(graph, kind, opts) {
+            Ok(t) => t,
+            // panic only with every executor lock released — panicking
+            // with the admission mutex held would poison it and turn
+            // the Executor's Drop (which locks it again) into a double
+            // panic / abort
+            Err(e) => panic!("{e}"),
+        }
+    }
+
     /// Submit with explicit priority and soft deadline. For sparse
     /// truss jobs the [`ExecutionPlan`] is computed **here, exactly
     /// once** — the plan rides the admission queue to the executing
     /// worker, and the cost estimate uses the plan's support profile,
     /// so the submit-time estimate and the execution agree by
     /// construction.
-    pub fn submit_with(&self, graph: Arc<Csr>, kind: JobKind, opts: SubmitOpts) -> Ticket {
+    ///
+    /// The same plan drives admission control: with a backlog at the
+    /// configured bound the submission is refused
+    /// ([`SubmitError::QueueFull`]); with shedding enabled, a Low job
+    /// whose estimated wait plus predicted wall blows its deadline
+    /// resolves immediately — [`JobOutcome::Degraded`] from
+    /// [`SubmitOpts::degrade_store`]'s current epoch when it can
+    /// answer, [`JobOutcome::Shed`] otherwise. Mutations are never
+    /// shed or degraded (dropping a write silently would corrupt the
+    /// submitter's epoch ordering); backpressure still applies.
+    pub fn try_submit_with(
+        &self,
+        graph: Arc<Csr>,
+        kind: JobKind,
+        opts: SubmitOpts,
+    ) -> Result<Ticket, SubmitError> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (rtx, rrx) = channel();
         let (plan, planned_pass_ms): (Option<ExecutionPlan>, Option<f64>) = match kind {
@@ -302,6 +436,119 @@ impl Executor {
         let predicted_ms = self
             .cost_model
             .predict_ms_for(&job_label(&kind, plan.map(|p| p.support)), est_steps);
+        // admission decision: backlog depth and queued work are read
+        // without holding both locks at once (the numbers are
+        // advisory — racing submitters may briefly overshoot a bound
+        // by one, never grow it unbounded)
+        let (queue_depth, queued_steps) = {
+            let mut depth = 0usize;
+            let mut steps = 0u64;
+            {
+                let st = lock_recover(&self.shards.state);
+                for (w, q) in st.queues.iter().enumerate() {
+                    depth += q.len();
+                    steps += q.queued_steps() + self.shards.inflight[w].load(Ordering::Relaxed);
+                }
+            }
+            let st = lock_recover(&self.adm.state);
+            depth += st.queue.len();
+            steps += st.queue.queued_steps();
+            (depth, steps)
+        };
+        let wait_ms =
+            queued_steps as f64 * self.cost_model.ns_per_step() / 1e6 / self.cfg.shards as f64;
+        let policy = AdmissionPolicy { max_queue: self.cfg.max_queue, shed: self.cfg.shed };
+        let input = AdmissionInput {
+            priority: opts.priority,
+            // mutations are never shed/degraded: hide the deadline
+            // from the shed rule (backpressure still sees the depth)
+            deadline: match kind {
+                JobKind::Mutate { .. } => None,
+                _ => opts.deadline,
+            },
+            predicted_ms,
+            wait_ms,
+            queue_depth,
+        };
+        match policy.decide(&input) {
+            AdmissionDecision::Reject => {
+                self.metrics.record_queue_rejected();
+                return Err(SubmitError::QueueFull { max_queue: self.cfg.max_queue });
+            }
+            AdmissionDecision::Degrade => {
+                // resolve the ticket immediately: from the degrade
+                // store's current (possibly stale) epoch when it can
+                // answer this job, else shed outright
+                let stale: Option<JobOutput> = opts.degrade_store.as_ref().and_then(|store| {
+                    match kind {
+                        JobKind::Ktruss { k, .. } if k == store.k() => {
+                            let snap = store.pin();
+                            Some(JobOutput::Ktruss {
+                                truss_edges: snap.truss.nnz(),
+                                iterations: 0,
+                                edges: snap.truss.edges().collect(),
+                            })
+                        }
+                        _ => None,
+                    }
+                });
+                let (outcome, output) = match stale {
+                    Some(out) => (JobOutcome::Degraded, Ok(out)),
+                    None => (
+                        JobOutcome::Shed,
+                        Err(format!(
+                            "shed at admission: predicted {predicted_ms:.3}ms \
+                             (after ~{wait_ms:.3}ms queue wait) cannot meet the deadline"
+                        )),
+                    ),
+                };
+                self.metrics.record_submit();
+                match outcome {
+                    JobOutcome::Degraded => self.metrics.record_degraded(),
+                    _ => self.metrics.record_shed(),
+                }
+                let span = crate::obs::span::JobSpan {
+                    id,
+                    kind: kind_label(&kind).to_string(),
+                    n: graph.n(),
+                    m: graph.nnz(),
+                    shard: 0,
+                    schedule: plan.map(|p| p.schedule.to_string()).unwrap_or_else(|| "-".into()),
+                    granularity: plan
+                        .map(|p| p.granularity.to_string())
+                        .unwrap_or_else(|| "-".into()),
+                    support: plan.map(|p| p.support.to_string()).unwrap_or_else(|| "-".into()),
+                    est_steps,
+                    total_steps: 0,
+                    predicted_ms,
+                    planned_pass_ms,
+                    queue_ms: 0.0,
+                    exec_ms: 0.0,
+                    serve_ms: 0.0,
+                    deadline_ms: opts.deadline.map(|d| d.as_secs_f64() * 1e3),
+                    deadline_missed: false,
+                    start_us: self.obs.spans.now_us(),
+                    ok: output.is_ok(),
+                    outcome: outcome.to_string(),
+                    passes: vec![],
+                };
+                self.obs.spans.record(span);
+                let _ = rtx.send(JobResult {
+                    id,
+                    engine: Engine::SparseCpu,
+                    plan,
+                    schedule: plan.map(|p| p.schedule),
+                    support: plan.map(|p| p.support),
+                    wall_ms: 0.0,
+                    passes: vec![],
+                    outcome,
+                    output,
+                });
+                return Ok(Ticket { id, rx: rrx });
+            }
+            AdmissionDecision::Admit => {}
+        }
+        let fingerprint = job_fingerprint(&kind, &graph);
         let now = Instant::now();
         let adm = Admission {
             req: JobRequest { id, graph, kind },
@@ -312,11 +559,12 @@ impl Executor {
             plan,
             predicted_ms,
             planned_pass_ms,
+            attempts: 0,
+            fingerprint,
             reply: rtx,
         };
-        self.metrics.record_submit();
         let down = {
-            let mut st = self.adm.state.lock().unwrap();
+            let mut st = lock_recover(&self.adm.state);
             if st.shutdown {
                 true
             } else {
@@ -324,26 +572,26 @@ impl Executor {
                 false
             }
         };
-        // panic only after the guard is dropped — panicking with the
-        // admission mutex held would poison it and turn the Executor's
-        // Drop (which locks it again) into a double panic / abort
-        assert!(!down, "executor is down");
+        if down {
+            return Err(SubmitError::Down);
+        }
+        self.metrics.record_submit();
         self.adm.cv.notify_all();
-        Ticket { id, rx: rrx }
+        Ok(Ticket { id, rx: rrx })
     }
 
     /// Graceful shutdown: queued jobs are still dispatched and executed
     /// before the shards exit. Also triggered by `Drop`. Idempotent.
     pub fn shutdown(&self) {
         {
-            let mut st = self.adm.state.lock().unwrap();
+            let mut st = lock_recover(&self.adm.state);
             st.shutdown = true;
         }
         self.adm.cv.notify_all();
-        if let Some(h) = self.dispatcher.lock().unwrap().take() {
+        if let Some(h) = lock_recover(&self.dispatcher).take() {
             let _ = h.join();
         }
-        for h in self.shard_handles.lock().unwrap().drain(..) {
+        for h in lock_recover(&self.shard_handles).drain(..) {
             let _ = h.join();
         }
     }
@@ -353,6 +601,21 @@ impl Drop for Executor {
     fn drop(&mut self) {
         self.shutdown();
     }
+}
+
+/// Shape fingerprint keying the poison-job registry: jobs that look
+/// the same (kind, k, graph size) share a retry budget, so a
+/// persistently panicking workload is quarantined as a class instead
+/// of burning the budget once per identical submission.
+fn job_fingerprint(kind: &JobKind, graph: &Csr) -> u64 {
+    let mut state = (graph.n() as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ graph.nnz() as u64;
+    for &b in kind_label(kind).as_bytes() {
+        state = state.wrapping_mul(0x0100_0000_01B3).wrapping_add(b as u64);
+    }
+    if let JobKind::Ktruss { k, .. } = kind {
+        state = state.wrapping_add(u64::from(*k));
+    }
+    crate::util::rng::splitmix64(&mut state)
 }
 
 /// Dispatcher: drain the admission queue in batches (the queue is
@@ -366,9 +629,9 @@ fn dispatch_loop(
 ) {
     loop {
         let batch = {
-            let mut st = adm.state.lock().unwrap();
+            let mut st = lock_recover(&adm.state);
             while st.queue.is_empty() && !st.shutdown {
-                st = adm.cv.wait(st).unwrap();
+                st = adm.cv.wait(st).unwrap_or_else(|p| p.into_inner());
             }
             if st.queue.is_empty() && st.shutdown {
                 break;
@@ -381,7 +644,10 @@ fn dispatch_loop(
                 if now >= deadline {
                     break;
                 }
-                let (guard, _) = adm.cv.wait_timeout(st, deadline - now).unwrap();
+                let (guard, _) = adm
+                    .cv
+                    .wait_timeout(st, deadline - now)
+                    .unwrap_or_else(|p| p.into_inner());
                 st = guard;
             }
             st.queue.take_front(cfg.max_batch)
@@ -395,7 +661,7 @@ fn dispatch_loop(
         // a job runs relative to its queue peers.
         let costs: Vec<u64> = batch.iter().map(|a| a.est_steps).collect();
         {
-            let mut st = shards.state.lock().unwrap();
+            let mut st = lock_recover(&shards.state);
             // baseline = queued work + the job each shard is executing
             // right now, so a shard blocked on a heavy job with an
             // empty queue does not look idle
@@ -416,7 +682,7 @@ fn dispatch_loop(
         shards.work_cv.notify_all();
     }
     {
-        let mut st = shards.state.lock().unwrap();
+        let mut st = lock_recover(&shards.state);
         st.dispatch_done = true;
     }
     shards.work_cv.notify_all();
@@ -452,17 +718,109 @@ fn pack_batch(costs: &[u64], baseline: &[u64]) -> Vec<usize> {
     assignment
 }
 
-/// One shard: pop the most urgent job from the own queue, steal the
-/// globally most urgent queued job from the other shards when drained,
-/// execute, account, record the job span, reply. Exits when dispatch is
-/// complete and every queue is empty.
-fn shard_loop(
+/// Shard supervisor: run the shard body under `catch_unwind` and
+/// respawn it in place when it panics past the per-job isolation (the
+/// injected `shard_crash` site, or a real bug outside the exec
+/// `catch_unwind`). The crashed body's in-flight admission — stashed
+/// at pop time — is requeued with its attempt count bumped, so a
+/// shard crash delays a job instead of losing it.
+fn shard_supervisor(
     me: usize,
     cfg: ServeConfig,
     shards: &ShardShared,
     metrics: &Metrics,
     cost_model: &CostModel,
     obs: &crate::obs::ObsHub,
+    faults: Option<&Arc<FaultInjector>>,
+) {
+    loop {
+        let body = catch_unwind(AssertUnwindSafe(|| {
+            shard_body(me, cfg, shards, metrics, cost_model, obs, faults)
+        }));
+        match body {
+            Ok(()) => return,
+            Err(_) => {
+                metrics.record_respawn(me);
+                shards.inflight[me].store(0, Ordering::Relaxed);
+                let stashed = lock_recover(&shards.stash[me]).take();
+                if let Some(mut adm) = stashed {
+                    adm.attempts += 1;
+                    {
+                        let mut st = lock_recover(&shards.state);
+                        st.queues[me].push(adm);
+                        metrics.set_queue_depth(me, st.queues[me].len() as u64);
+                    }
+                    shards.work_cv.notify_all();
+                }
+            }
+        }
+    }
+}
+
+/// Deliver a terminal result for a job that never executed (shed at
+/// the shard for quarantine, or cancelled before start): record a
+/// zero-execution span and send the synthetic [`JobResult`].
+fn reply_without_exec(
+    me: usize,
+    adm: &Admission,
+    outcome: JobOutcome,
+    output: Result<JobOutput, String>,
+    obs: &crate::obs::ObsHub,
+) {
+    let elapsed_ms = adm.submitted.elapsed().as_secs_f64() * 1e3;
+    let span = crate::obs::span::JobSpan {
+        id: adm.req.id,
+        kind: kind_label(&adm.req.kind).to_string(),
+        n: adm.req.graph.n(),
+        m: adm.req.graph.nnz(),
+        shard: me,
+        schedule: adm.plan.map(|p| p.schedule.to_string()).unwrap_or_else(|| "-".into()),
+        granularity: adm.plan.map(|p| p.granularity.to_string()).unwrap_or_else(|| "-".into()),
+        support: adm.plan.map(|p| p.support.to_string()).unwrap_or_else(|| "-".into()),
+        est_steps: adm.est_steps,
+        total_steps: 0,
+        predicted_ms: adm.predicted_ms,
+        planned_pass_ms: adm.planned_pass_ms,
+        queue_ms: elapsed_ms,
+        exec_ms: 0.0,
+        serve_ms: elapsed_ms,
+        deadline_ms: adm
+            .deadline
+            .map(|d| d.saturating_duration_since(adm.submitted).as_secs_f64() * 1e3),
+        deadline_missed: adm.deadline.is_some_and(|d| Instant::now() > d),
+        start_us: obs.spans.now_us(),
+        ok: output.is_ok(),
+        outcome: outcome.to_string(),
+        passes: vec![],
+    };
+    obs.spans.record(span);
+    let _ = adm.reply.send(JobResult {
+        id: adm.req.id,
+        engine: Engine::SparseCpu,
+        plan: adm.plan,
+        schedule: adm.plan.map(|p| p.schedule),
+        support: adm.plan.map(|p| p.support),
+        wall_ms: 0.0,
+        passes: vec![],
+        outcome,
+        output,
+    });
+}
+
+/// One shard body: pop the most urgent job from the own queue, steal
+/// the globally most urgent queued job from the other shards when
+/// drained, execute under per-job panic isolation (retry → quarantine
+/// on panic), account, record the job span, reply. Exits when dispatch
+/// is complete and every queue is empty. Runs under
+/// [`shard_supervisor`]'s respawn loop.
+fn shard_body(
+    me: usize,
+    cfg: ServeConfig,
+    shards: &ShardShared,
+    metrics: &Metrics,
+    cost_model: &CostModel,
+    obs: &crate::obs::ObsHub,
+    faults: Option<&Arc<FaultInjector>>,
 ) {
     let dense = if cfg.enable_dense { DenseEngine::new().ok() } else { None };
     let router_cfg = dense
@@ -473,15 +831,17 @@ fn shard_loop(
     let worker = Worker::with_spec(Pool::new(width), dense, cfg.plan);
     loop {
         let adm = {
-            let mut st = shards.state.lock().unwrap();
+            let mut st = lock_recover(&shards.state);
             loop {
                 if let Some(a) = st.queues[me].pop_front() {
                     // publish in-flight work inside the critical
                     // section: the dispatcher must never observe an
                     // empty queue AND a zero inflight for a shard that
-                    // just took a heavy job
+                    // just took a heavy job — and the stash must hold
+                    // the job before anything after the pop can panic
                     shards.inflight[me].store(a.est_steps.max(1), Ordering::Relaxed);
                     metrics.set_queue_depth(me, st.queues[me].len() as u64);
+                    *lock_recover(&shards.stash[me]) = Some(a.clone());
                     break Some(a);
                 }
                 if cfg.steal {
@@ -513,6 +873,7 @@ fn shard_loop(
                             shards.inflight[me].store(a.est_steps.max(1), Ordering::Relaxed);
                             metrics.record_steal(me);
                             metrics.set_queue_depth(v, st.queues[v].len() as u64);
+                            *lock_recover(&shards.stash[me]) = Some(a.clone());
                             break Some(a);
                         }
                     }
@@ -522,25 +883,142 @@ fn shard_loop(
                 }
                 // timeout bounds the window between a dispatch-done
                 // store and this shard's re-check
-                let (guard, _) =
-                    shards.work_cv.wait_timeout(st, Duration::from_millis(20)).unwrap();
+                let (guard, _) = shards
+                    .work_cv
+                    .wait_timeout(st, Duration::from_millis(20))
+                    .unwrap_or_else(|p| p.into_inner());
                 st = guard;
             }
         };
         let Some(adm) = adm else {
             return;
         };
+        // fault site `shard_crash`: panics here unwind past the job,
+        // out of shard_body — the supervisor respawns and requeues
+        if let Some(inj) = faults {
+            inj.maybe_crash_shard(adm.req.id, adm.attempts);
+        }
+        // poison pre-check: a fingerprint past its retry budget is
+        // quarantined on sight, before burning a pool on it again
+        let poison_count =
+            lock_recover(&shards.poison).get(&adm.fingerprint).copied().unwrap_or(0);
+        if poison_count > cfg.retry_max {
+            shards.inflight[me].store(0, Ordering::Relaxed);
+            lock_recover(&shards.stash[me]).take();
+            metrics.record_quarantined();
+            metrics.record_shard_done(me);
+            reply_without_exec(
+                me,
+                &adm,
+                JobOutcome::Quarantined,
+                Err(format!(
+                    "quarantined: shape panicked {poison_count} times (retry budget {})",
+                    cfg.retry_max
+                )),
+                obs,
+            );
+            continue;
+        }
+        // deadline enforcement, pre-execution: a job whose deadline
+        // already passed in the queue is not worth starting
+        if cfg.shed && adm.deadline.is_some_and(|d| Instant::now() >= d) {
+            shards.inflight[me].store(0, Ordering::Relaxed);
+            lock_recover(&shards.stash[me]).take();
+            metrics.record_cancelled(me);
+            metrics.record_deadline_miss(me);
+            metrics.record_shard_done(me);
+            reply_without_exec(
+                me,
+                &adm,
+                JobOutcome::Cancelled,
+                Err("cancelled before start: deadline passed in queue".to_string()),
+                obs,
+            );
+            continue;
+        }
         let queue_ms = adm.submitted.elapsed().as_secs_f64() * 1e3;
         let start_us = obs.spans.now_us();
         let engine = route_costed(&router_cfg, &adm.req, adm.est_steps);
-        // run under the submit-time plan: the worker never replans
-        let result = worker.execute_planned(&adm.req, engine, adm.plan);
+        // deadline enforcement, in-flight: arm a deadline token so the
+        // convergence loop cancels cooperatively at a pass boundary
+        let cancel = if cfg.shed { adm.deadline.map(CancelToken::with_deadline) } else { None };
+        let job_id = adm.req.id;
+        // fault site `stall`: ride the pass-boundary hook
+        let stall_hook = faults.map(|inj| {
+            let inj = Arc::clone(inj);
+            move |_iter: usize| inj.maybe_stall(job_id)
+        });
+        let ctl = PassControl {
+            cancel: cancel.as_ref(),
+            on_pass: stall_hook.as_ref().map(|h| h as &(dyn Fn(usize) + Sync)),
+        };
+        // run under the submit-time plan (the worker never replans),
+        // panic-isolated: a panicking job must not take the shard down
+        let exec = catch_unwind(AssertUnwindSafe(|| {
+            // fault site `exec_panic`: inside the per-job isolation
+            if let Some(inj) = faults {
+                inj.maybe_panic_exec(job_id, adm.attempts);
+            }
+            worker.execute_planned_ctl(&adm.req, engine, adm.plan, ctl)
+        }));
         shards.inflight[me].store(0, Ordering::Relaxed);
+        lock_recover(&shards.stash[me]).take();
+        let result = match exec {
+            Ok(result) => result,
+            Err(_) => {
+                // panic isolated: bump the shape's poison count, then
+                // retry with backoff or quarantine
+                let count = {
+                    let mut poison = lock_recover(&shards.poison);
+                    let c = poison.entry(adm.fingerprint).or_insert(0);
+                    *c += 1;
+                    *c
+                };
+                if count <= cfg.retry_max {
+                    metrics.record_retry();
+                    // exponential backoff, capped at 16ms: transient
+                    // faults (a racing mutation, an allocator hiccup)
+                    // deserve a beat before the retry
+                    std::thread::sleep(Duration::from_millis(1u64 << (count - 1).min(4)));
+                    let mut requeued = adm;
+                    requeued.attempts += 1;
+                    {
+                        let mut st = lock_recover(&shards.state);
+                        st.queues[me].push(requeued);
+                        metrics.set_queue_depth(me, st.queues[me].len() as u64);
+                    }
+                    shards.work_cv.notify_all();
+                } else {
+                    metrics.record_quarantined();
+                    metrics.record_shard_done(me);
+                    reply_without_exec(
+                        me,
+                        &adm,
+                        JobOutcome::Quarantined,
+                        Err(format!(
+                            "quarantined: shape panicked {count} times (retry budget {})",
+                            cfg.retry_max
+                        )),
+                        obs,
+                    );
+                }
+                continue;
+            }
+        };
+        if result.output.is_ok() {
+            // self-healing: a completed shape is no longer poisoned
+            lock_recover(&shards.poison).remove(&adm.fingerprint);
+        }
         // metrics record the *serving* latency (queueing + execution);
         // JobResult::wall_ms stays execution-only
         let serve_ms = adm.submitted.elapsed().as_secs_f64() * 1e3;
         let ok = result.output.is_ok();
-        metrics.record_done(result.engine, serve_ms, ok);
+        let cancelled = result.outcome == JobOutcome::Cancelled;
+        if cancelled {
+            metrics.record_cancelled(me);
+        } else {
+            metrics.record_done(result.engine, serve_ms, ok);
+        }
         metrics.record_shard_done(me);
         let deadline_missed = adm.deadline.is_some_and(|d| Instant::now() > d);
         if deadline_missed {
@@ -564,7 +1042,7 @@ fn shard_loop(
         }
         let span = crate::obs::span::JobSpan {
             id: adm.req.id,
-            kind: super::cost_model::kind_label(&adm.req.kind).to_string(),
+            kind: kind_label(&adm.req.kind).to_string(),
             n: adm.req.graph.n(),
             m: adm.req.graph.nnz(),
             shard: me,
@@ -593,6 +1071,7 @@ fn shard_loop(
             deadline_missed,
             start_us,
             ok,
+            outcome: result.outcome.to_string(),
             passes: result.passes.clone(),
         };
         // drift joins the admission-time prediction against the
@@ -609,7 +1088,6 @@ fn shard_loop(
 mod tests {
     use super::*;
     use crate::algo::support::Mode;
-    use crate::coordinator::job::JobOutput;
     use crate::graph::builder::from_sorted_unique;
 
     fn cfg(shards: usize, workers: usize) -> ServeConfig {
@@ -850,6 +1328,228 @@ mod tests {
         assert!(ex.cost_model.samples() >= 3);
         assert!(ex.cost_model.ns_per_step() > 0.0);
         assert!(!ex.cost_model.records().is_empty());
+        ex.shutdown();
+    }
+
+    // ---- fault tolerance ------------------------------------------
+
+    #[test]
+    fn submit_after_shutdown_panics_but_drop_stays_clean() {
+        let ex = Executor::start(cfg(1, 1));
+        ex.shutdown();
+        let g = Arc::new(from_sorted_unique(3, &[(0, 1), (1, 2)]));
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            ex.submit(Arc::clone(&g), JobKind::Triangles);
+        }));
+        assert!(caught.is_err(), "submitting to a down executor must panic");
+        // the panic fired with every executor lock released: shutdown
+        // (and Drop) re-take the admission lock without a double panic
+        ex.shutdown();
+        drop(ex);
+    }
+
+    #[test]
+    fn try_submit_reports_down_as_an_error() {
+        let ex = Executor::start(cfg(1, 1));
+        ex.shutdown();
+        let g = Arc::new(from_sorted_unique(3, &[(0, 1), (1, 2)]));
+        let err = ex.try_submit_with(g, JobKind::Triangles, SubmitOpts::default()).unwrap_err();
+        assert_eq!(err, SubmitError::Down);
+    }
+
+    #[test]
+    fn bounded_queue_rejects_overload_with_backpressure() {
+        let ex = Executor::start(ServeConfig { max_queue: 2, steal: false, ..cfg(1, 1) });
+        let g = Arc::new(crate::gen::erdos_renyi::gnm(300, 2000, &mut crate::util::Rng::new(3)));
+        let mut accepted = Vec::new();
+        let mut rejected = None;
+        for _ in 0..50 {
+            match ex.try_submit_with(Arc::clone(&g), JobKind::Decompose, SubmitOpts::default()) {
+                Ok(t) => accepted.push(t),
+                Err(e) => {
+                    rejected = Some(e);
+                    break;
+                }
+            }
+        }
+        let rejected =
+            rejected.expect("50 heavy submits against a backlog bound of 2 must hit backpressure");
+        assert_eq!(rejected, SubmitError::QueueFull { max_queue: 2 });
+        assert!(ex.metrics.queue_rejected.load(Ordering::Relaxed) >= 1);
+        // accepted jobs are unaffected by the rejection
+        for t in accepted {
+            assert!(t.wait().output.is_ok());
+        }
+        ex.shutdown();
+    }
+
+    #[test]
+    fn doomed_low_jobs_are_shed_at_admission() {
+        let ex = Executor::start(ServeConfig { shed: true, ..cfg(1, 1) });
+        let g = Arc::new(crate::gen::erdos_renyi::gnm(200, 1200, &mut crate::util::Rng::new(7)));
+        let doomed = SubmitOpts {
+            priority: Priority::Low,
+            deadline: Some(Duration::ZERO),
+            degrade_store: None,
+        };
+        let r = ex
+            .submit_with(Arc::clone(&g), JobKind::Ktruss { k: 3, mode: Mode::Fine }, doomed)
+            .wait();
+        assert_eq!(r.outcome, JobOutcome::Shed);
+        assert!(r.output.is_err());
+        assert_eq!(ex.metrics.shed.load(Ordering::Relaxed), 1);
+        let span = ex.obs.spans.snapshot().into_iter().find(|s| s.id == r.id).unwrap();
+        assert_eq!(span.outcome, "shed");
+        assert_eq!(span.total_steps, 0);
+        // a High job with the same impossible deadline is protected
+        // from shedding and still runs
+        let protected = SubmitOpts {
+            priority: Priority::High,
+            deadline: Some(Duration::from_secs(600)),
+            degrade_store: None,
+        };
+        let r = ex.submit_with(g, JobKind::Ktruss { k: 3, mode: Mode::Fine }, protected).wait();
+        assert_eq!(r.outcome, JobOutcome::Done);
+        assert!(r.output.is_ok());
+        ex.shutdown();
+    }
+
+    #[test]
+    fn doomed_low_jobs_degrade_to_a_stale_epoch_when_a_store_is_supplied() {
+        let g = Arc::new(crate::gen::erdos_renyi::gnm(150, 900, &mut crate::util::Rng::new(11)));
+        let store = Arc::new(GraphStore::new(&g, 3));
+        let expected = store.pin().truss.nnz();
+        let ex = Executor::start(ServeConfig { shed: true, ..cfg(1, 1) });
+        let opts = SubmitOpts {
+            priority: Priority::Low,
+            deadline: Some(Duration::ZERO),
+            degrade_store: Some(Arc::clone(&store)),
+        };
+        let r = ex
+            .submit_with(Arc::clone(&g), JobKind::Ktruss { k: 3, mode: Mode::Fine }, opts.clone())
+            .wait();
+        assert_eq!(r.outcome, JobOutcome::Degraded);
+        match r.output.unwrap() {
+            JobOutput::Ktruss { truss_edges, iterations, .. } => {
+                assert_eq!(truss_edges, expected);
+                assert_eq!(iterations, 0, "a degraded answer computes nothing");
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(ex.metrics.degraded.load(Ordering::Relaxed), 1);
+        // the store cannot answer a different k: the job sheds instead
+        let r = ex.submit_with(g, JobKind::Ktruss { k: 5, mode: Mode::Fine }, opts).wait();
+        assert_eq!(r.outcome, JobOutcome::Shed);
+        assert_eq!(ex.metrics.shed.load(Ordering::Relaxed), 1);
+        ex.shutdown();
+    }
+
+    #[test]
+    fn injected_panics_are_isolated_retried_and_healed() {
+        let faults =
+            FaultPlan { seed: 5, exec_panic_every: 1, transient: true, ..FaultPlan::default() };
+        let ex = Executor::start(ServeConfig { faults: Some(faults), retry_max: 2, ..cfg(2, 1) });
+        // distinct graphs → distinct fingerprints, so concurrent
+        // panics never pool into one shape's retry budget
+        let tickets: Vec<Ticket> = (0..6)
+            .map(|i| {
+                let g = Arc::new(crate::gen::erdos_renyi::gnm(
+                    60 + i * 10,
+                    150 + i * 30,
+                    &mut crate::util::Rng::new(i as u64 + 1),
+                ));
+                ex.submit(g, JobKind::Ktruss { k: 3, mode: Mode::Fine })
+            })
+            .collect();
+        for t in tickets {
+            let r = t.wait();
+            assert_eq!(r.outcome, JobOutcome::Done);
+            assert!(r.output.is_ok());
+        }
+        // every job panicked once (1-in-1 transient plan), retried
+        // once, healed; the shards themselves never went down
+        assert_eq!(ex.metrics.retries.load(Ordering::Relaxed), 6);
+        assert_eq!(ex.metrics.quarantined.load(Ordering::Relaxed), 0);
+        let inj = ex.faults.as_ref().expect("active plan builds an injector");
+        assert_eq!(inj.exec_panics.load(Ordering::Relaxed), 6);
+        assert_eq!(ex.metrics.respawns(), 0);
+        ex.shutdown();
+    }
+
+    #[test]
+    fn persistent_panics_quarantine_the_job_shape() {
+        let faults =
+            FaultPlan { seed: 3, exec_panic_every: 1, transient: false, ..FaultPlan::default() };
+        let ex = Executor::start(ServeConfig { faults: Some(faults), retry_max: 1, ..cfg(1, 1) });
+        let g = Arc::new(crate::gen::erdos_renyi::gnm(80, 200, &mut crate::util::Rng::new(6)));
+        let r = ex.submit(Arc::clone(&g), JobKind::Ktruss { k: 3, mode: Mode::Fine }).wait();
+        assert_eq!(r.outcome, JobOutcome::Quarantined);
+        assert!(r.output.is_err());
+        assert_eq!(ex.metrics.retries.load(Ordering::Relaxed), 1);
+        assert_eq!(ex.metrics.quarantined.load(Ordering::Relaxed), 1);
+        let panics_after_first =
+            ex.faults.as_ref().unwrap().exec_panics.load(Ordering::Relaxed);
+        // the shape is now poisoned: a resubmission quarantines at the
+        // pre-check, without executing (no further injected panics)
+        let r = ex.submit(g, JobKind::Ktruss { k: 3, mode: Mode::Fine }).wait();
+        assert_eq!(r.outcome, JobOutcome::Quarantined);
+        assert_eq!(
+            ex.faults.as_ref().unwrap().exec_panics.load(Ordering::Relaxed),
+            panics_after_first
+        );
+        assert_eq!(ex.metrics.quarantined.load(Ordering::Relaxed), 2);
+        ex.shutdown();
+    }
+
+    #[test]
+    fn shard_crashes_respawn_and_requeue_the_inflight_job() {
+        let faults = FaultPlan { seed: 2, shard_crash_every: 1, ..FaultPlan::default() };
+        let ex = Executor::start(ServeConfig { faults: Some(faults), ..cfg(1, 1) });
+        let g = Arc::new(from_sorted_unique(4, &[(0, 1), (0, 2), (1, 2), (2, 3)]));
+        let want = crate::algo::triangle::count_triangles(&g);
+        let tickets: Vec<Ticket> =
+            (0..3).map(|_| ex.submit(Arc::clone(&g), JobKind::Triangles)).collect();
+        for t in tickets {
+            let r = t.wait();
+            assert_eq!(r.outcome, JobOutcome::Done);
+            match r.output.unwrap() {
+                JobOutput::Triangles { count } => assert_eq!(count, want),
+                other => panic!("{other:?}"),
+            }
+        }
+        // every pop crashed the shard once; the supervisor respawned
+        // it and requeued the stashed job, which then ran (the crash
+        // site spares requeued attempts)
+        assert_eq!(ex.metrics.respawns(), 3);
+        assert_eq!(ex.faults.as_ref().unwrap().shard_crashes.load(Ordering::Relaxed), 3);
+        let (done, failed, _) = ex.metrics.summary();
+        assert_eq!((done, failed), (3, 0));
+        ex.shutdown();
+    }
+
+    #[test]
+    fn stalled_jobs_cancel_at_a_pass_boundary_under_deadline_enforcement() {
+        let faults = FaultPlan { seed: 1, stall_every: 1, stall_ms: 150, ..FaultPlan::default() };
+        let ex = Executor::start(ServeConfig { shed: true, faults: Some(faults), ..cfg(1, 2) });
+        // peel_chain converges over many passes, so the injected stall
+        // at a pass boundary pushes the job past its deadline mid-run
+        let g = Arc::new(crate::testkit::graphs::peel_chain(24));
+        let opts = SubmitOpts {
+            priority: Priority::Normal,
+            deadline: Some(Duration::from_millis(100)),
+            degrade_store: None,
+        };
+        let r = ex.submit_with(g, JobKind::Ktruss { k: 3, mode: Mode::Fine }, opts).wait();
+        assert_eq!(r.outcome, JobOutcome::Cancelled);
+        assert!(r.output.is_err());
+        assert!(ex.metrics.cancelled.load(Ordering::Relaxed) >= 1);
+        assert!(ex.faults.as_ref().unwrap().stalls.load(Ordering::Relaxed) >= 1);
+        let span = ex.obs.spans.snapshot().into_iter().find(|s| s.id == r.id).unwrap();
+        assert_eq!(span.outcome, "cancelled");
+        // a mid-run cancel has completed passes, and the span invariant
+        // (pass steps sum to the total) holds for them
+        assert!(!span.passes.is_empty(), "cancellation fired mid-run, not before start");
+        assert_eq!(span.passes.iter().map(|p| p.steps).sum::<u64>(), span.total_steps);
         ex.shutdown();
     }
 }

@@ -1,0 +1,241 @@
+//! Deterministic fault injection for the serving executor.
+//!
+//! A [`FaultPlan`] is plain seeded data: for each named injection site
+//! it says how often (one in `every` jobs) the fault fires. Whether a
+//! given job faults is a pure hash of `(seed, site, job id)` — no
+//! clocks, no global RNG — so a chaos run is exactly reproducible:
+//! the same seed and workload fault the same jobs in the same places,
+//! and a recovered run can be diffed bit-for-bit against a fault-free
+//! reference.
+//!
+//! # Sites
+//!
+//! | site          | where it fires                                   | models                         |
+//! |---------------|--------------------------------------------------|--------------------------------|
+//! | `exec_panic`  | inside the per-job `catch_unwind` on a shard     | a job-triggered worker panic   |
+//! | `shard_crash` | between dequeue and execution, *outside* the     | a whole-shard crash with a job |
+//! |               | per-job isolation (kills the shard body)         | in flight                      |
+//! | `stall`       | at a convergence pass boundary (the pass hook)   | a slow pass / lock convoy      |
+//!
+//! Queue-burst overload is a *workload*-side fault: `bench chaos`
+//! produces it by submitting bursts, so it needs no injector site.
+//!
+//! The [`FaultInjector`] wraps a plan with fired-counters so a harness
+//! can assert that faults actually triggered. `exec_panic` and
+//! `shard_crash` respect the job's attempt number: a shard crash fires
+//! only on attempt 0 (so the requeued job makes progress instead of
+//! crash-looping the shard), and a *transient* exec panic likewise
+//! fires only on attempt 0 (so the retry succeeds). A non-transient
+//! exec panic fires on every attempt, driving the job into the
+//! poison-job registry.
+
+use crate::util::rng::splitmix64;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Seeded, deterministic description of which jobs fault where.
+///
+/// All fields are plain `Copy` data so the plan can ride inside
+/// [`ServeConfig`](crate::serve::ServeConfig) without giving up
+/// `Copy`. A rate of `0` disables that site.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Seed mixed into every fire decision.
+    pub seed: u64,
+    /// Fire an `exec_panic` on roughly one in this many jobs
+    /// (deterministic per job id; `0` = never).
+    pub exec_panic_every: u32,
+    /// When `true`, injected exec panics fire only on a job's first
+    /// attempt, so the executor's retry succeeds. When `false` they
+    /// fire on every attempt, exhausting the retry budget and
+    /// exercising quarantine.
+    pub transient: bool,
+    /// Crash the whole shard body (outside the per-job isolation) on
+    /// roughly one in this many jobs (`0` = never). Always fires only
+    /// on attempt 0 so the respawned shard can finish the requeue.
+    pub shard_crash_every: u32,
+    /// Stall at convergence pass boundaries for roughly one in this
+    /// many jobs (`0` = never).
+    pub stall_every: u32,
+    /// Stall duration per pass boundary, in milliseconds.
+    pub stall_ms: u64,
+}
+
+impl FaultPlan {
+    /// A plan that injects nothing (identical to `Default`).
+    pub fn disabled() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Whether any site has a non-zero rate.
+    pub fn is_active(&self) -> bool {
+        self.exec_panic_every > 0 || self.shard_crash_every > 0 || self.stall_every > 0
+    }
+
+    /// Pure fire decision: hash `(seed, site, job)` and fire one time
+    /// in `every`.
+    fn fires(&self, every: u32, site: u64, job: u64) -> bool {
+        if every == 0 {
+            return false;
+        }
+        let mut state = self
+            .seed
+            .wrapping_add(site.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+            .wrapping_add(job.wrapping_mul(0xBF58_476D_1CE4_E5B9));
+        splitmix64(&mut state) % every as u64 == 0
+    }
+
+    /// Whether this job's `attempt`-th execution should panic at the
+    /// exec site.
+    pub fn exec_panic_fires(&self, job: u64, attempt: u32) -> bool {
+        if self.transient && attempt > 0 {
+            return false;
+        }
+        self.fires(self.exec_panic_every, 1, job)
+    }
+
+    /// Whether popping this job (attempt `attempt`) should crash the
+    /// whole shard body. Fires only on attempt 0.
+    pub fn shard_crash_fires(&self, job: u64, attempt: u32) -> bool {
+        attempt == 0 && self.fires(self.shard_crash_every, 2, job)
+    }
+
+    /// Whether this job's convergence passes should stall at each
+    /// boundary.
+    pub fn stall_fires(&self, job: u64) -> bool {
+        self.fires(self.stall_every, 3, job)
+    }
+}
+
+/// A [`FaultPlan`] plus fired-counters, shared by every shard of one
+/// executor. The counters let a chaos harness assert that the plan
+/// actually injected something (a chaos run where nothing fired proves
+/// nothing).
+#[derive(Debug, Default)]
+pub struct FaultInjector {
+    plan: FaultPlan,
+    /// Exec-site panics fired so far.
+    pub exec_panics: AtomicU64,
+    /// Shard-body crashes fired so far.
+    pub shard_crashes: AtomicU64,
+    /// Pass-boundary stalls fired so far.
+    pub stalls: AtomicU64,
+}
+
+impl FaultInjector {
+    /// Wrap a plan with zeroed counters.
+    pub fn new(plan: FaultPlan) -> FaultInjector {
+        FaultInjector {
+            plan,
+            exec_panics: AtomicU64::new(0),
+            shard_crashes: AtomicU64::new(0),
+            stalls: AtomicU64::new(0),
+        }
+    }
+
+    /// The wrapped plan.
+    pub fn plan(&self) -> FaultPlan {
+        self.plan
+    }
+
+    /// Exec site: panic if the plan says this job attempt faults.
+    pub fn maybe_panic_exec(&self, job: u64, attempt: u32) {
+        if self.plan.exec_panic_fires(job, attempt) {
+            self.exec_panics.fetch_add(1, Ordering::Relaxed);
+            panic!("injected exec panic (job {job}, attempt {attempt})");
+        }
+    }
+
+    /// Shard-crash site: panic (outside the per-job isolation) if the
+    /// plan says this pop faults.
+    pub fn maybe_crash_shard(&self, job: u64, attempt: u32) {
+        if self.plan.shard_crash_fires(job, attempt) {
+            self.shard_crashes.fetch_add(1, Ordering::Relaxed);
+            panic!("injected shard crash (job {job})");
+        }
+    }
+
+    /// Stall site: sleep `stall_ms` if the plan says this job's passes
+    /// stall. Called from the pass-boundary hook, so a stalled job
+    /// with a deadline token crosses its deadline and cancels
+    /// cooperatively.
+    pub fn maybe_stall(&self, job: u64) {
+        if self.plan.stall_fires(job) {
+            self.stalls.fetch_add(1, Ordering::Relaxed);
+            std::thread::sleep(std::time::Duration::from_millis(self.plan.stall_ms));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decisions_are_deterministic_and_seeded() {
+        let plan = FaultPlan { seed: 42, exec_panic_every: 3, ..FaultPlan::default() };
+        let fired: Vec<bool> = (0..64).map(|j| plan.exec_panic_fires(j, 0)).collect();
+        let again: Vec<bool> = (0..64).map(|j| plan.exec_panic_fires(j, 0)).collect();
+        assert_eq!(fired, again, "same seed must fire the same jobs");
+        assert!(fired.iter().any(|&f| f), "a 1-in-3 rate over 64 jobs must fire");
+        assert!(fired.iter().any(|&f| !f), "a 1-in-3 rate must not fire everything");
+        let other = FaultPlan { seed: 43, exec_panic_every: 3, ..FaultPlan::default() };
+        let shifted: Vec<bool> = (0..64).map(|j| other.exec_panic_fires(j, 0)).collect();
+        assert_ne!(fired, shifted, "a different seed must fault different jobs");
+    }
+
+    #[test]
+    fn sites_are_independent() {
+        let plan = FaultPlan {
+            seed: 7,
+            exec_panic_every: 2,
+            shard_crash_every: 2,
+            stall_every: 2,
+            ..FaultPlan::default()
+        };
+        let exec: Vec<bool> = (0..64).map(|j| plan.exec_panic_fires(j, 0)).collect();
+        let crash: Vec<bool> = (0..64).map(|j| plan.shard_crash_fires(j, 0)).collect();
+        let stall: Vec<bool> = (0..64).map(|j| plan.stall_fires(j)).collect();
+        assert_ne!(exec, crash, "sites must hash independently");
+        assert_ne!(exec, stall, "sites must hash independently");
+    }
+
+    #[test]
+    fn transient_panics_spare_retries_and_crashes_fire_once() {
+        let transient =
+            FaultPlan { seed: 1, exec_panic_every: 1, transient: true, ..FaultPlan::default() };
+        assert!(transient.exec_panic_fires(5, 0));
+        assert!(!transient.exec_panic_fires(5, 1), "transient faults spare the retry");
+        let persistent =
+            FaultPlan { seed: 1, exec_panic_every: 1, transient: false, ..FaultPlan::default() };
+        assert!(persistent.exec_panic_fires(5, 0));
+        assert!(persistent.exec_panic_fires(5, 1), "persistent faults hit every attempt");
+        let crash = FaultPlan { seed: 1, shard_crash_every: 1, ..FaultPlan::default() };
+        assert!(crash.shard_crash_fires(5, 0));
+        assert!(!crash.shard_crash_fires(5, 1), "a requeued job must not re-crash its shard");
+    }
+
+    #[test]
+    fn disabled_plan_never_fires() {
+        let plan = FaultPlan::disabled();
+        assert!(!plan.is_active());
+        for j in 0..32 {
+            assert!(!plan.exec_panic_fires(j, 0));
+            assert!(!plan.shard_crash_fires(j, 0));
+            assert!(!plan.stall_fires(j));
+        }
+    }
+
+    #[test]
+    fn injector_counts_fired_faults() {
+        let inj =
+            FaultInjector::new(FaultPlan { seed: 9, exec_panic_every: 1, ..FaultPlan::default() });
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            inj.maybe_panic_exec(0, 0);
+        }));
+        assert!(caught.is_err(), "a 1-in-1 rate must panic");
+        assert_eq!(inj.exec_panics.load(Ordering::Relaxed), 1);
+        assert_eq!(inj.shard_crashes.load(Ordering::Relaxed), 0);
+        inj.maybe_stall(0); // stall site disabled: no-op, no count
+        assert_eq!(inj.stalls.load(Ordering::Relaxed), 0);
+    }
+}

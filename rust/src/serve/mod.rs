@@ -37,13 +37,31 @@
 //!
 //! The single-pool [`crate::coordinator::Coordinator`] API survives as
 //! a thin facade over a one-shard executor.
+//!
+//! # Failure model
+//!
+//! The executor is fault-tolerant by construction (see
+//! `docs/ARCHITECTURE.md`, "Failure model"): admission can reject
+//! (bounded queue, [`SubmitError::QueueFull`]) or shed/degrade
+//! ([`admission`]) using the planner's cost prediction; shard bodies
+//! run panic-isolated and self-heal (respawn + in-flight requeue, with
+//! a poison-job registry and bounded retries); deadline enforcement
+//! cancels past-deadline jobs cooperatively at pass boundaries; and a
+//! deterministic [`faults`] harness injects panics, stalls, and crashes
+//! for the `bench chaos` overload/recovery study. Every admitted job
+//! reaches exactly one terminal
+//! [`JobOutcome`](crate::coordinator::JobOutcome).
 
+pub mod admission;
 pub mod cost_model;
 pub mod executor;
+pub mod faults;
 pub mod queue;
 pub mod store;
 
+pub use admission::{AdmissionDecision, AdmissionInput, AdmissionPolicy, SubmitError};
 pub use cost_model::{estimate_steps, estimate_steps_mode, job_label, kind_label, CostModel};
 pub use executor::{Executor, ServeConfig, SubmitOpts, Ticket};
+pub use faults::{FaultInjector, FaultPlan};
 pub use queue::{Admission, Priority, ServeQueue};
 pub use store::{EpochSnapshot, GraphStore};

@@ -52,6 +52,11 @@ impl std::str::FromStr for Priority {
 /// An admitted job: the request plus its serving envelope (priority,
 /// soft deadline, admission timestamp, cost-model estimate, and the
 /// reply channel the result is delivered on).
+///
+/// `Clone` exists for fault tolerance: a shard stashes a clone of the
+/// admission it is executing so its supervisor can requeue the job if
+/// the shard body panics (cheap — the graph is an `Arc`).
+#[derive(Clone)]
 pub struct Admission {
     /// The job itself (graph, kind, id).
     pub req: JobRequest,
@@ -78,6 +83,15 @@ pub struct Admission {
     /// machine-model ms (`None` when the plan was pinned or the kind is
     /// unplanned). Recorded on the job span for trace inspection.
     pub planned_pass_ms: Option<f64>,
+    /// Execution attempts so far: 0 on first dispatch, incremented each
+    /// time the job is requeued after a panic (retry) or a shard-body
+    /// crash. Bounds the retry loop and lets transient fault injection
+    /// spare the retry.
+    pub attempts: u32,
+    /// Shape fingerprint (kind label, graph size, estimate) keying the
+    /// poison-job registry: jobs that repeatedly panic quarantine
+    /// every future submission with the same fingerprint.
+    pub fingerprint: u64,
     /// Channel the result is delivered on.
     pub reply: Sender<JobResult>,
 }
@@ -187,6 +201,8 @@ mod tests {
             plan: None,
             predicted_ms: 0.0,
             planned_pass_ms: None,
+            attempts: 0,
+            fingerprint: 0,
             reply: tx,
         }
     }

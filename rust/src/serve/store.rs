@@ -16,12 +16,20 @@
 //! earlier batch inserted must see it), so concurrent submitters must
 //! impose their own order — the serving layer does this by waiting on
 //! each `Mutate` job before submitting the next.
+//!
+//! **Publication is atomic (build-then-swap).** A batch is staged on a
+//! clone of the maintained state and the store swaps to it only after
+//! the whole pipeline succeeds — a `Mutate` job that panics or is
+//! cancelled partway leaves the published epoch, every pinned
+//! snapshot, and the maintained supports exactly as they were. The
+//! store's own mutex is recovered from poisoning for the same reason:
+//! a panicking holder cannot have left half-applied state behind.
 
 use crate::algo::stream::{BatchOutcome, EdgeBatch, StreamState};
 use crate::graph::Csr;
-use crate::par::Pool;
+use crate::par::{PassControl, Pool};
 use crate::plan::ExecutionPlan;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard};
 
 /// One immutable epoch of the resident graph: the full graph and its
 /// maintained k-truss as of the batch that published it.
@@ -63,22 +71,32 @@ impl GraphStore {
         self.k
     }
 
+    /// Lock the writer state, recovering from poisoning: a panic in a
+    /// past `publish` happened while mutating a **staged clone**, so
+    /// the guarded state is still the last successfully published
+    /// epoch — cascading the poison would turn one faulted batch into
+    /// a dead store.
+    fn lock(&self) -> MutexGuard<'_, StoreInner> {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
     /// The current epoch number.
     pub fn epoch(&self) -> u64 {
-        self.inner.lock().unwrap().current.epoch
+        self.lock().current.epoch
     }
 
     /// Pin the current epoch: the returned snapshot stays valid (and
     /// immutable) for as long as the caller holds it, regardless of
     /// later batches.
     pub fn pin(&self) -> Arc<EpochSnapshot> {
-        self.inner.lock().unwrap().current.clone()
+        self.lock().current.clone()
     }
 
     /// Apply one batch sequentially and publish the next epoch.
     /// Returns the new snapshot and the batch outcome.
     pub fn apply(&self, batch: &EdgeBatch) -> (Arc<EpochSnapshot>, BatchOutcome) {
-        self.publish(batch, None)
+        self.publish(batch, None, PassControl::default())
+            .expect("uncancelled publish always yields an epoch")
     }
 
     /// [`apply`](GraphStore::apply) with the frontier passes on the
@@ -90,32 +108,57 @@ impl GraphStore {
         pool: &Pool,
         plan: &ExecutionPlan,
     ) -> (Arc<EpochSnapshot>, BatchOutcome) {
-        self.publish(batch, Some((pool, plan)))
+        self.publish(batch, Some((pool, plan)), PassControl::default())
+            .expect("uncancelled publish always yields an epoch")
+    }
+
+    /// [`apply_par`](GraphStore::apply_par) with cooperative
+    /// cancellation. Returns `None` — publishing **nothing** — when
+    /// the batch was cut short at a stage boundary; the staged partial
+    /// work is discarded and the current epoch is unchanged, so a
+    /// cancelled `Mutate` job can simply be resubmitted.
+    pub fn apply_par_ctl(
+        &self,
+        batch: &EdgeBatch,
+        pool: &Pool,
+        plan: &ExecutionPlan,
+        ctl: PassControl<'_>,
+    ) -> Option<(Arc<EpochSnapshot>, BatchOutcome)> {
+        self.publish(batch, Some((pool, plan)), ctl)
     }
 
     fn publish(
         &self,
         batch: &EdgeBatch,
         par: Option<(&Pool, &ExecutionPlan)>,
-    ) -> (Arc<EpochSnapshot>, BatchOutcome) {
-        let mut inner = self.inner.lock().unwrap();
-        let out = match par {
-            Some((pool, plan)) => inner.state.apply_par(batch, pool, plan),
-            None => inner.state.apply(batch),
+        ctl: PassControl<'_>,
+    ) -> Option<(Arc<EpochSnapshot>, BatchOutcome)> {
+        let mut inner = self.lock();
+        // build-then-swap: stage the batch on a clone of the
+        // maintained state so a panic or a cooperative cancel mid-
+        // pipeline unwinds without touching the published epoch
+        let mut staged = inner.state.clone();
+        let (out, cancelled) = match par {
+            Some((pool, plan)) => staged.apply_par_ctl(batch, pool, plan, ctl),
+            None => (staged.apply(batch), false),
         };
+        if cancelled {
+            return None;
+        }
         let snap = Arc::new(EpochSnapshot {
             epoch: inner.current.epoch + 1,
-            graph: Arc::new(inner.state.graph().clone()),
-            truss: Arc::new(inner.state.truss().clone()),
+            graph: Arc::new(staged.graph().clone()),
+            truss: Arc::new(staged.truss().clone()),
         });
+        inner.state = staged;
         inner.current = snap.clone();
-        (snap, out)
+        Some((snap, out))
     }
 }
 
 impl std::fmt::Debug for GraphStore {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        let inner = self.inner.lock().unwrap();
+        let inner = self.lock();
         f.debug_struct("GraphStore")
             .field("k", &self.k)
             .field("epoch", &inner.current.epoch)
@@ -157,6 +200,77 @@ mod tests {
         assert_eq!(pinned.graph.nnz(), g.nnz(), "pinned snapshot must stay immutable");
         assert_eq!(store.epoch(), 1);
         assert!(store.pin().graph.nnz() < g.nnz());
+    }
+
+    #[test]
+    fn faulted_batch_leaves_pinned_epoch_and_refcounts_intact() {
+        use crate::algo::support::Granularity;
+        use crate::par::{PassControl, Pool, Schedule};
+        use crate::plan::ExecutionPlan;
+        let g = peel_chain(8);
+        let store = Arc::new(GraphStore::new(&g, 4));
+        let pinned = store.pin();
+        let weak_graph = Arc::downgrade(&pinned.graph);
+        let pool = Pool::new(2);
+        let plan = ExecutionPlan::fixed(Schedule::Static, Granularity::Fine, SupportMode::Full);
+        // injected fault: the delete pass completes (stage 0 passed),
+        // then the batch dies mid-pipeline at the next stage boundary
+        let hook = |stage: usize| {
+            if stage >= 1 {
+                panic!("injected fault at stage {stage}");
+            }
+        };
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            store.apply_par_ctl(
+                &EdgeBatch::deletes(vec![(9, 10)]),
+                &pool,
+                &plan,
+                PassControl { cancel: None, on_pass: Some(&hook) },
+            )
+        }));
+        assert!(res.is_err(), "the injected panic must surface to the caller");
+        // nothing published: same epoch, same graph, pinned snapshot intact
+        assert_eq!(store.epoch(), 0, "a faulted batch must not publish an epoch");
+        let now = store.pin();
+        assert_eq!(now.epoch, 0);
+        assert_eq!(now.graph.nnz(), g.nnz(), "half-applied state must not leak");
+        assert_eq!(pinned.graph.nnz(), g.nnz());
+        // the store keeps serving after the fault: the poisoned mutex
+        // is recovered and the retried batch publishes normally
+        let (snap, out) = store.apply(&EdgeBatch::deletes(vec![(9, 10)]));
+        assert_eq!(snap.epoch, 1);
+        assert_eq!(out.deleted, 1);
+        // refcounts: epoch 0 is retired and freed once unpinned —
+        // the faulted attempt left no stray references behind
+        drop(pinned);
+        drop(now);
+        assert!(weak_graph.upgrade().is_none(), "retired epoch 0 graph must be freed");
+    }
+
+    #[test]
+    fn cancelled_batch_publishes_nothing() {
+        use crate::algo::support::Granularity;
+        use crate::par::{CancelToken, PassControl, Pool, Schedule};
+        use crate::plan::ExecutionPlan;
+        let g = peel_chain(6);
+        let store = GraphStore::new(&g, 4);
+        let pool = Pool::new(2);
+        let plan = ExecutionPlan::fixed(Schedule::Static, Granularity::Fine, SupportMode::Full);
+        let tok = CancelToken::new();
+        tok.cancel();
+        let res = store.apply_par_ctl(
+            &EdgeBatch::deletes(vec![(7, 8)]),
+            &pool,
+            &plan,
+            PassControl { cancel: Some(&tok), on_pass: None },
+        );
+        assert!(res.is_none(), "a cancelled batch must publish nothing");
+        assert_eq!(store.epoch(), 0);
+        assert_eq!(store.pin().graph.nnz(), g.nnz());
+        // resubmitting the identical batch uncancelled succeeds
+        let (snap, out) = store.apply(&EdgeBatch::deletes(vec![(7, 8)]));
+        assert_eq!(snap.epoch, 1);
+        assert_eq!(out.deleted, 1);
     }
 
     #[test]

@@ -36,7 +36,7 @@ fn high_priority_jobs_are_never_inverted_behind_low() {
     let blocker = ex.submit_with(
         blocker_graph(),
         JobKind::Decompose,
-        SubmitOpts { priority: Priority::Normal, deadline: None },
+        SubmitOpts { priority: Priority::Normal, deadline: None, degrade_store: None },
     );
     std::thread::sleep(Duration::from_millis(30)); // let the blocker start
     // low-priority jobs enter the queue FIRST, high-priority after —
@@ -59,7 +59,7 @@ fn high_priority_jobs_are_never_inverted_behind_low() {
         let t = ex.submit_with(
             Arc::clone(&g),
             JobKind::Ktruss { k: 3, mode: Mode::Fine },
-            SubmitOpts { priority, deadline: None },
+            SubmitOpts { priority, deadline: None, degrade_store: None },
         );
         let order = Arc::clone(&order);
         waiters.push(std::thread::spawn(move || {
@@ -92,13 +92,21 @@ fn deadline_misses_are_counted_per_shard() {
     let missed = ex.submit_with(
         Arc::clone(&g),
         JobKind::Triangles,
-        SubmitOpts { priority: Priority::High, deadline: Some(Duration::from_nanos(1)) },
+        SubmitOpts {
+            priority: Priority::High,
+            deadline: Some(Duration::from_nanos(1)),
+            degrade_store: None,
+        },
     );
     // and one with a generous deadline: must not miss
     let ok = ex.submit_with(
         g,
         JobKind::Triangles,
-        SubmitOpts { priority: Priority::High, deadline: Some(Duration::from_secs(600)) },
+        SubmitOpts {
+            priority: Priority::High,
+            deadline: Some(Duration::from_secs(600)),
+            degrade_store: None,
+        },
     );
     assert!(missed.wait().output.is_ok(), "missed deadlines never cancel jobs");
     assert!(ok.wait().output.is_ok());
@@ -137,7 +145,11 @@ fn sharded_executor_serves_concurrent_mixed_load_correctly() {
                 let ticket = ex.submit_with(
                     Arc::clone(&g),
                     JobKind::Triangles,
-                    SubmitOpts { priority, deadline: Some(Duration::from_secs(600)) },
+                    SubmitOpts {
+                        priority,
+                        deadline: Some(Duration::from_secs(600)),
+                        degrade_store: None,
+                    },
                 );
                 match ticket.wait().output.expect("job ok") {
                     JobOutput::Triangles { count } => assert_eq!(count, want_triangles),
@@ -190,10 +202,65 @@ fn facade_and_executor_share_one_request_path() {
     let t = c.executor().submit_with(
         g2,
         JobKind::Triangles,
-        SubmitOpts { priority: Priority::High, deadline: None },
+        SubmitOpts { priority: Priority::High, deadline: None, degrade_store: None },
     );
     assert!(t.wait().output.is_ok());
     c.shutdown();
+}
+
+#[test]
+fn shedding_and_degradation_reach_terminal_outcomes() {
+    use ktruss::coordinator::JobOutcome;
+    use ktruss::serve::GraphStore;
+    let ex = Executor::start(ServeConfig {
+        shards: 1,
+        workers_per_shard: 1,
+        enable_dense: false,
+        shed: true,
+        ..Default::default()
+    });
+    let g = Arc::new(ktruss::gen::erdos_renyi::gnm(200, 1000, &mut Rng::new(31)));
+    let store = Arc::new(GraphStore::new(&g, 3));
+    // a Low job whose zero deadline cannot be met degrades to the stale
+    // epoch when a resident store for the same k is supplied...
+    let degraded = ex
+        .try_submit_with(
+            Arc::clone(&g),
+            JobKind::Ktruss { k: 3, mode: Mode::Fine },
+            SubmitOpts {
+                priority: Priority::Low,
+                deadline: Some(Duration::ZERO),
+                degrade_store: Some(Arc::clone(&store)),
+            },
+        )
+        .unwrap()
+        .wait();
+    assert_eq!(degraded.outcome, JobOutcome::Degraded);
+    assert!(degraded.output.is_ok());
+    // ...and is shed outright without one
+    let shed = ex
+        .try_submit_with(
+            g,
+            JobKind::Ktruss { k: 3, mode: Mode::Fine },
+            SubmitOpts {
+                priority: Priority::Low,
+                deadline: Some(Duration::ZERO),
+                degrade_store: None,
+            },
+        )
+        .unwrap()
+        .wait();
+    assert_eq!(shed.outcome, JobOutcome::Shed);
+    assert!(shed.output.is_err());
+    assert_eq!(ex.metrics.shed.load(std::sync::atomic::Ordering::Relaxed), 1);
+    assert_eq!(ex.metrics.degraded.load(std::sync::atomic::Ordering::Relaxed), 1);
+    // zero-execution outcomes still uphold the span steps invariant the
+    // telemetry smoke enforces: total_steps == sum of pass steps
+    for s in ex.obs.spans.snapshot() {
+        let sum: u64 = s.passes.iter().map(|p| p.steps).sum();
+        assert_eq!(s.total_steps, sum, "span {} ({})", s.id, s.outcome);
+    }
+    ex.shutdown();
 }
 
 #[test]
