@@ -223,6 +223,48 @@ impl HybridTasks {
             .chain(self.probe.iter().map(BitmapTask::estimated_steps))
             .collect()
     }
+
+    /// Frontier-driven invalidation (ROADMAP item 5 follow-up): bring
+    /// this task list up to date with the current working form by
+    /// re-running representation selection for the `changed` rows only
+    /// — drop their stale encodings, re-encode the ones that still
+    /// clear the threshold + density guard — then re-enumerate the
+    /// task lists. Equivalent to a fresh [`hybrid_tasks`] build:
+    /// prune/compaction is row-local, so a row not in `changed` has
+    /// the same live entries, hence the same encoding and the same
+    /// representation choice it had when last (re)built. The saving is
+    /// that per-pass index maintenance is `O(changed rows)` instead of
+    /// `O(n)` re-encoding.
+    ///
+    /// `changed` must contain every row whose live entries changed
+    /// since this task list last described `z` (the convergence
+    /// drivers accumulate the frontier's rows); duplicates and
+    /// since-unchanged rows are harmless.
+    pub fn refresh(&mut self, z: &ZCsr, len: u32, changed: &[u32]) {
+        let len = len.max(1) as usize;
+        for &row in changed {
+            let i = row as usize;
+            if let Some(old) = self.index.rows[i].take() {
+                self.index.encoded_rows -= 1;
+                self.index.total_words -= old.word_count();
+            }
+            self.reprs[i] = RowRepr::Merge;
+            let live = z.row_live(i).len();
+            if live >= len {
+                if let Some(bm) = RowBitmap::encode(z, i) {
+                    if bm.word_count() <= live {
+                        self.index.total_words += bm.word_count();
+                        self.index.encoded_rows += 1;
+                        self.reprs[i] = RowRepr::Bitmap;
+                        self.index.rows[i] = Some(bm);
+                    }
+                }
+            }
+        }
+        let (merge, probe) = enumerate_tasks(z, len, &self.index);
+        self.merge = merge;
+        self.probe = probe;
+    }
 }
 
 /// Enumerate the hybrid task list: select row representations at
@@ -234,6 +276,15 @@ impl HybridTasks {
 pub fn hybrid_tasks(z: &ZCsr, len: u32) -> HybridTasks {
     let len = len.max(1) as usize;
     let (index, reprs) = BitmapIndex::build(z, len as u32);
+    let (merge, probe) = enumerate_tasks(z, len, &index);
+    HybridTasks { reprs, index, merge, probe }
+}
+
+/// The task-enumeration half of [`hybrid_tasks`], against an existing
+/// representation selection: shared by the fresh build and by
+/// [`HybridTasks::refresh`], so both produce identical task lists for
+/// the same working form + index state. `len` is already clamped ≥ 1.
+fn enumerate_tasks(z: &ZCsr, len: usize, index: &BitmapIndex) -> (Vec<SegTask>, Vec<BitmapTask>) {
     let col = z.col();
     let n = z.n();
     let live: Vec<u32> = (0..n).map(|i| z.row_live(i).len() as u32).collect();
@@ -283,7 +334,7 @@ pub fn hybrid_tasks(z: &ZCsr, len: u32) -> HybridTasks {
             }
         }
     }
-    HybridTasks { reprs, index, merge, probe }
+    (merge, probe)
 }
 
 /// Eager update for one [`BitmapTask`], sequential support array:

@@ -479,6 +479,42 @@ pub fn decrement_frontier_seq(
     total
 }
 
+/// **Fused** mark+decrement sweep, sequential reference: scan the
+/// support array for sub-threshold slots and apply their decrement
+/// enumerations in the same pass, instead of a mark kernel followed by
+/// a decrement kernel. The result (frontier and supports) is identical
+/// to [`mark_frontier`] + [`decrement_frontier_seq`] — decrements read
+/// the completed dying snapshot either way — so the fusion buys
+/// *launches and reads*, not different answers. Returns the frontier
+/// plus the fused sweep's step count: the threshold scan (one step per
+/// pre-prune live slot) plus the decrement enumerations. A separate
+/// mark-then-decrement pair pays [`separate_mark_decrement_steps`] —
+/// larger by exactly one re-read per marked task, plus (on a real
+/// device) a second kernel launch. This is the accounting convention
+/// the lane backend's incremental path reports
+/// ([`crate::exec::lane::LaneRunReport`]).
+pub fn fused_mark_decrement_seq(
+    z: &ZCsr,
+    s: &mut [u32],
+    k: u32,
+    in_nbrs: &InNbrs,
+) -> (Frontier, u64) {
+    let f = mark_frontier(z, s, k);
+    let dec = decrement_frontier_seq(z, s, &f, in_nbrs);
+    let scan: u64 = f.live.iter().map(|&x| u64::from(x)).sum();
+    (f, scan + dec)
+}
+
+/// Step count of the same round executed as **separate** mark and
+/// decrement launches: the threshold scan, plus the decrement kernel
+/// re-reading each marked task, plus the decrement enumerations
+/// (`dec_steps`). Exceeds the fused sweep's count by exactly
+/// `f.len()`.
+pub fn separate_mark_decrement_steps(f: &Frontier, dec_steps: u64) -> u64 {
+    let scan: u64 = f.live.iter().map(|&x| u64::from(x)).sum();
+    scan + f.len() as u64 + dec_steps
+}
+
 /// [`decrement_frontier_seq`] that also records each task's exact step
 /// count (for the replay tracer and the simulators). Returns
 /// `(total, per_task_steps)`.
@@ -829,6 +865,29 @@ mod tests {
         crate::algo::prune::prune(&mut z2, &mut s2, k);
         compute_supports_seq(&z2, &mut s2);
         (z2, s2)
+    }
+
+    #[test]
+    fn fused_sweep_matches_separate_launches_minus_the_rereads() {
+        let g = crate::testkit::graphs::peel_chain(16);
+        let (z, s) = working(&g);
+        let in_nbrs = InNbrs::build(&z);
+        for k in [3u32, 4] {
+            // separate launches (reference)
+            let mut s_sep = s.clone();
+            let f = mark_frontier(&z, &s_sep, k);
+            let dec = decrement_frontier_seq(&z, &mut s_sep, &f, &in_nbrs);
+            // fused sweep
+            let mut s_fused = s.clone();
+            let (f2, fused_steps) = fused_mark_decrement_seq(&z, &mut s_fused, k, &in_nbrs);
+            assert_eq!(f2.tasks, f.tasks, "k={k}");
+            assert_eq!(s_fused, s_sep, "k={k}");
+            let separate = separate_mark_decrement_steps(&f, dec);
+            assert_eq!(separate - fused_steps, f.len() as u64, "k={k}");
+            if !f.is_empty() {
+                assert!(fused_steps < separate, "k={k}");
+            }
+        }
     }
 
     /// Incremental: mark, decrement, compact-preserving.

@@ -1,0 +1,385 @@
+//! Lockstep-lane backend study: the executing counterpart of the
+//! `gpu-sched` model sweep.
+//!
+//! Three claims, each checked with exact step accounting where
+//! possible so CI stays deterministic:
+//!
+//! * **Intra-warp balancing wins on hubs** — on the hub-divergence
+//!   fixtures, the lane backend's warp makespan at fine/hybrid
+//!   granularity beats the coarse (row-per-lane) decomposition, the
+//!   executed analogue of the paper's granularity result. Step-exact,
+//!   no wallclock involved.
+//! * **The calibration loop closes** — one [`calibrate_lane`] pass fits
+//!   step/launch/divergence constants; feeding the fitted machine and
+//!   the backend's measured per-task steps through
+//!   [`estimate_tasks_sched`] must predict the measured lane wall
+//!   within [`CAL_BAND`]. Model-vs-executed ratios per regime feed a
+//!   [`DriftTracker`] under `gpu/…` keys (rendered in the report).
+//! * **The fused frontier sweep saves its re-reads** — the lane
+//!   driver's fused mark+decrement accounting on the peel-chain
+//!   fixture shows exactly `frontier-size` fewer steps than the
+//!   mark-then-decrement pair of launches.
+
+use crate::algo::support::Granularity;
+use crate::exec::lane::{compute_supports_lane, ktruss_lane_report};
+use crate::obs::drift::DriftTracker;
+use crate::par::{ktruss_par_plan, PassControl, Pool, Schedule};
+use crate::plan::{ExecutionPlan, Planner};
+use crate::sim::calibrate::{calibrate_lane, lane_regime, LaneCalibration};
+use crate::sim::gpu::estimate_tasks_sched;
+use crate::util::fmt::Table;
+use crate::util::Timer;
+use anyhow::Result;
+
+/// The calibration band: after one calibration pass, the measured lane
+/// wall must sit within this factor of the fitted model's prediction
+/// (either side).
+pub const CAL_BAND: f64 = 1.5;
+
+/// One granularity's lane execution on the hub fixture.
+#[derive(Clone, Debug)]
+pub struct HubRow {
+    /// Granularity label.
+    pub gran: String,
+    /// Warp makespan (lockstep steps) of the support pass.
+    pub makespan_steps: u64,
+    /// Total executed lane steps.
+    pub executed_steps: u64,
+    /// Idle lane-steps under the divergence mask.
+    pub idle_lane_steps: u64,
+    /// Measured wall of the pass, ms.
+    pub wall_ms: f64,
+}
+
+/// The full study report.
+#[derive(Clone, Debug)]
+pub struct LaneBenchReport {
+    /// Pool workers the lane blocks ran on.
+    pub workers: usize,
+    /// Hub-fixture rows (coarse, fine, hybrid).
+    pub hub: Vec<HubRow>,
+    /// The fitted calibration constants.
+    pub cal: LaneCalibration,
+    /// Model-predicted wall of the band-check pass, ms.
+    pub band_predicted_ms: f64,
+    /// Measured wall of the band-check pass, ms.
+    pub band_measured_ms: f64,
+    /// Fused mark+decrement steps over the peel-chain run.
+    pub fused_steps: u64,
+    /// Separate mark-then-decrement steps over the same run.
+    pub separate_steps: u64,
+    /// Frontier tasks the fused path avoided re-reading.
+    pub frontier_tasks: u64,
+    /// Per-regime model-vs-executed drift lines (`gpu/…` keys).
+    pub drift: String,
+}
+
+impl LaneBenchReport {
+    /// measured / predicted of the band-check pass.
+    pub fn band_ratio(&self) -> f64 {
+        self.band_measured_ms / self.band_predicted_ms.max(1e-12)
+    }
+
+    /// Every invariant the CI smoke job relies on.
+    pub fn verify(&self) -> Result<()> {
+        let coarse = self
+            .hub
+            .iter()
+            .find(|r| r.gran == "coarse")
+            .ok_or_else(|| anyhow::anyhow!("missing coarse hub row"))?;
+        for r in self.hub.iter().filter(|r| r.gran != "coarse") {
+            if r.makespan_steps >= coarse.makespan_steps {
+                anyhow::bail!(
+                    "lane {} makespan {} steps does not beat coarse {} steps on the hub fixture",
+                    r.gran,
+                    r.makespan_steps,
+                    coarse.makespan_steps
+                );
+            }
+        }
+        let ratio = self.band_ratio();
+        if !(1.0 / CAL_BAND..=CAL_BAND).contains(&ratio) {
+            anyhow::bail!(
+                "calibrated model missed the band: measured {:.4} ms vs predicted {:.4} ms \
+                 (ratio {:.3}, band {CAL_BAND}x)",
+                self.band_measured_ms,
+                self.band_predicted_ms,
+                ratio
+            );
+        }
+        if self.fused_steps + self.frontier_tasks != self.separate_steps {
+            anyhow::bail!(
+                "fused accounting broke: fused {} + frontier {} != separate {}",
+                self.fused_steps,
+                self.frontier_tasks,
+                self.separate_steps
+            );
+        }
+        if self.frontier_tasks > 0 && self.fused_steps >= self.separate_steps {
+            anyhow::bail!(
+                "fused sweep did not reduce steps: {} vs {}",
+                self.fused_steps,
+                self.separate_steps
+            );
+        }
+        Ok(())
+    }
+
+    /// Render the study as tables plus greppable check lines.
+    pub fn render(&self) -> String {
+        let mut table =
+            Table::new(vec!["hub pass", "makespan steps", "executed", "idle lanes", "wall ms"]);
+        for r in &self.hub {
+            table.row(vec![
+                r.gran.clone(),
+                r.makespan_steps.to_string(),
+                r.executed_steps.to_string(),
+                r.idle_lane_steps.to_string(),
+                format!("{:.4}", r.wall_ms),
+            ]);
+        }
+        let mut out = format!(
+            "# lane backend study ({} workers, warp calibration: step {:.2} ns, \
+             serial {:.2} ns, launch {:.2} us, occupancy {:.2} lanes/warp-step)\n",
+            self.workers,
+            self.cal.step_ns,
+            self.cal.serial_step_ns,
+            self.cal.launch_us,
+            self.cal.divergence_ratio
+        );
+        out.push_str(&table.render());
+        out.push_str(&format!(
+            "model-vs-executed: predicted {:.4} ms, measured {:.4} ms, ratio {:.3} \
+             (band {CAL_BAND}x): {}\n",
+            self.band_predicted_ms,
+            self.band_measured_ms,
+            self.band_ratio(),
+            if (1.0 / CAL_BAND..=CAL_BAND).contains(&self.band_ratio()) { "ok" } else { "MISS" }
+        ));
+        out.push_str(&format!(
+            "fused-frontier: {} steps vs {} separate ({} re-reads saved): {}\n",
+            self.fused_steps,
+            self.separate_steps,
+            self.frontier_tasks,
+            if self.fused_steps + self.frontier_tasks == self.separate_steps { "ok" } else { "MISS" }
+        ));
+        let coarse_makespan =
+            self.hub.iter().find(|r| r.gran == "coarse").map(|r| r.makespan_steps).unwrap_or(0);
+        out.push_str(&format!(
+            "lane-beats-coarse-on-hub: {}\n",
+            if self
+                .hub
+                .iter()
+                .filter(|r| r.gran != "coarse")
+                .all(|r| r.makespan_steps < coarse_makespan)
+            {
+                "ok"
+            } else {
+                "MISS"
+            }
+        ));
+        if !self.drift.is_empty() {
+            out.push_str(&self.drift);
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// One timed lane support pass: returns the report of a cold pass and
+/// the trial-averaged wall of the warm passes.
+fn timed_pass(
+    z: &crate::graph::ZCsr,
+    pool: &Pool,
+    gran: Granularity,
+    schedule: Schedule,
+) -> (crate::exec::lane::LaneReport, f64) {
+    let (_, report) = compute_supports_lane(z, pool, gran, schedule);
+    let trials = 3;
+    let t = Timer::start();
+    for _ in 0..trials {
+        let (s, _) = compute_supports_lane(z, pool, gran, schedule);
+        std::hint::black_box(&s);
+    }
+    (report, t.elapsed_ms() / trials as f64)
+}
+
+/// Run the study on `workers` pool workers.
+pub fn run(workers: usize, progress: impl Fn(&str)) -> Result<LaneBenchReport> {
+    let pool = Pool::new(workers.max(1));
+    let hub_graph = crate::graph::ZCsr::from_csr(&crate::testkit::graphs::hub_divergence_comb(
+        64, 256, 800,
+    ));
+    let drift = DriftTracker::new();
+
+    progress("calibrating lane constants (balanced / hub / launch fixtures)");
+    let cal = calibrate_lane(&pool);
+    let machine = cal.fitted_machine(pool.workers());
+
+    let mut hub = Vec::new();
+    for (label, gran) in [
+        ("coarse", Granularity::Coarse),
+        ("fine", Granularity::Fine),
+        ("hybrid", Granularity::Hybrid { len: 64 }),
+    ] {
+        let (report, wall_ms) = timed_pass(&hub_graph, &pool, gran, Schedule::Stealing);
+        progress(&format!(
+            "hub {label}: makespan {} steps, executed {}, wall {:.3} ms",
+            report.makespan_steps, report.executed_steps, wall_ms
+        ));
+        // model-vs-executed per regime: the fitted machine prices the
+        // measured per-task steps; the drift tracker accumulates the
+        // ratio under the gpu/ regime key
+        let costs: Vec<f64> = report.task_steps.iter().map(|&c| c as f64).collect();
+        let predicted_ms = estimate_tasks_sched(
+            &machine,
+            &costs,
+            report.executed_steps as f64,
+            Schedule::Stealing,
+        )
+        .total_s()
+            * 1e3;
+        drift.observe(&lane_regime(Schedule::Stealing, gran), predicted_ms, wall_ms);
+        hub.push(HubRow {
+            gran: label.to_string(),
+            makespan_steps: report.makespan_steps,
+            executed_steps: report.executed_steps,
+            idle_lane_steps: report.idle_lane_steps,
+            wall_ms,
+        });
+    }
+
+    // band check: a fine/stealing hub pass against the fitted model
+    progress("band check: fine/stealing hub pass vs fitted model");
+    let (report, band_measured_ms) =
+        timed_pass(&hub_graph, &pool, Granularity::Fine, Schedule::Stealing);
+    let costs: Vec<f64> = report.task_steps.iter().map(|&c| c as f64).collect();
+    let band_predicted_ms =
+        estimate_tasks_sched(&machine, &costs, report.executed_steps as f64, Schedule::Stealing)
+            .total_s()
+            * 1e3;
+    drift.observe(
+        &lane_regime(Schedule::Stealing, Granularity::Fine),
+        band_predicted_ms,
+        band_measured_ms,
+    );
+
+    // fused frontier sweep on the peel chain (the incremental regime)
+    progress("fused frontier sweep on peel_chain(16)");
+    let chain = crate::testkit::graphs::peel_chain(16);
+    let plan = Planner::gpu()
+        .with_spec(crate::plan::PlanSpec {
+            schedule: Some(Schedule::Stealing),
+            granularity: Some(Granularity::Fine),
+            support: Some(crate::algo::incremental::SupportMode::Auto),
+            crossover: None,
+        })
+        .choose(&chain, 4);
+    let (result, lane_run, _) =
+        ktruss_lane_report(&chain, 4, &pool, &plan, PassControl::default());
+    let pool_result = ktruss_par_plan(
+        &chain,
+        4,
+        &pool,
+        &ExecutionPlan { device: crate::plan::PlanDevice::Cpu, ..plan },
+    );
+    if result.truss != pool_result.truss {
+        anyhow::bail!("lane truss diverged from the pool truss on peel_chain(16)");
+    }
+    let frontier_tasks = lane_run.separate_steps - lane_run.fused_steps;
+
+    Ok(LaneBenchReport {
+        workers: pool.workers(),
+        hub,
+        cal,
+        band_predicted_ms,
+        band_measured_ms,
+        fused_steps: lane_run.fused_steps,
+        separate_steps: lane_run.separate_steps,
+        frontier_tasks,
+        drift: drift.render(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_study_holds_the_step_invariants() {
+        // wallclock-free subset of verify(): hub makespans and the
+        // fused accounting are exact, so they never flake
+        let pool = Pool::new(2);
+        let hub = crate::graph::ZCsr::from_csr(&crate::testkit::graphs::hub_divergence_comb(
+            32, 128, 400,
+        ));
+        let (_, coarse) =
+            compute_supports_lane(&hub, &pool, Granularity::Coarse, Schedule::Stealing);
+        let (_, fine) = compute_supports_lane(&hub, &pool, Granularity::Fine, Schedule::Stealing);
+        assert!(
+            fine.makespan_steps < coarse.makespan_steps,
+            "fine {} vs coarse {}",
+            fine.makespan_steps,
+            coarse.makespan_steps
+        );
+
+        let chain = crate::testkit::graphs::peel_chain(12);
+        let plan = Planner::gpu().choose(&chain, 4);
+        let (result, run, _) =
+            ktruss_lane_report(&chain, 4, &pool, &plan, PassControl::default());
+        let cpu = ktruss_par_plan(
+            &chain,
+            4,
+            &pool,
+            &ExecutionPlan { device: crate::plan::PlanDevice::Cpu, ..plan },
+        );
+        assert_eq!(result.truss, cpu.truss, "lane/pool truss parity");
+        assert!(run.separate_steps >= run.fused_steps);
+    }
+
+    #[test]
+    fn report_checks_render_greppably() {
+        let report = LaneBenchReport {
+            workers: 2,
+            hub: vec![
+                HubRow {
+                    gran: "coarse".into(),
+                    makespan_steps: 100,
+                    executed_steps: 120,
+                    idle_lane_steps: 300,
+                    wall_ms: 0.5,
+                },
+                HubRow {
+                    gran: "fine".into(),
+                    makespan_steps: 40,
+                    executed_steps: 120,
+                    idle_lane_steps: 20,
+                    wall_ms: 0.2,
+                },
+            ],
+            cal: calibrate_stub(),
+            band_predicted_ms: 1.0,
+            band_measured_ms: 1.2,
+            fused_steps: 90,
+            separate_steps: 100,
+            frontier_tasks: 10,
+            drift: String::new(),
+        };
+        assert!(report.verify().is_ok());
+        let text = report.render();
+        assert!(text.contains("lane-beats-coarse-on-hub: ok"), "{text}");
+        assert!(text.contains("fused-frontier"), "{text}");
+        assert!(text.contains("model-vs-executed"), "{text}");
+    }
+
+    fn calibrate_stub() -> LaneCalibration {
+        LaneCalibration {
+            step_ns: 2.0,
+            serial_step_ns: 4.0,
+            launch_us: 5.0,
+            divergence_ratio: 3.0,
+            makespan_steps: 1000,
+            wall_ms: 0.5,
+        }
+    }
+}

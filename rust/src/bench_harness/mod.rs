@@ -5,6 +5,7 @@
 pub mod ablations;
 pub mod chaos_bench;
 pub mod figs;
+pub mod lane_bench;
 pub mod plan_ablation;
 pub mod report;
 pub mod serve_bench;

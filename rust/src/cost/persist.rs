@@ -10,12 +10,14 @@
 //! the work-aware binner.
 //!
 //! Format: line-oriented TSV
-//! (`kind n m est_steps wall_ms schedule granularity support`),
-//! `#`-prefix comments. The three plan-provenance columns record the
+//! (`kind n m est_steps wall_ms schedule granularity support device`),
+//! `#`-prefix comments. The four plan-provenance columns record the
 //! executed plan axes (`-` when the job ran unplanned, and for records
 //! written before the columns existed — the loader accepts the legacy
-//! 5-field rows). Hand-rolled because the offline crate set has no
-//! serde.
+//! 5-field and 8-field rows). The `device` column carries the executed
+//! backend (`cpu`/`gpu`) so drift baselines seeded from these records
+//! never fold lane-backend walls into the CPU regimes. Hand-rolled
+//! because the offline crate set has no serde.
 
 use anyhow::{Context, Result};
 use std::path::Path;
@@ -44,6 +46,9 @@ pub struct TraceRecord {
     pub granularity: String,
     /// Executed support-mode axis ([`NO_PROVENANCE`] when unplanned).
     pub support: String,
+    /// Executed device axis (`cpu`/`gpu`; [`NO_PROVENANCE`] when
+    /// unplanned or loaded from a pre-device record).
+    pub device: String,
 }
 
 impl TraceRecord {
@@ -65,6 +70,7 @@ impl TraceRecord {
             schedule: NO_PROVENANCE.to_string(),
             granularity: NO_PROVENANCE.to_string(),
             support: NO_PROVENANCE.to_string(),
+            device: NO_PROVENANCE.to_string(),
         }
     }
 
@@ -73,6 +79,7 @@ impl TraceRecord {
         self.schedule != NO_PROVENANCE
             || self.granularity != NO_PROVENANCE
             || self.support != NO_PROVENANCE
+            || self.device != NO_PROVENANCE
     }
 }
 
@@ -80,12 +87,20 @@ impl TraceRecord {
 /// full rewrite, no partial appends).
 pub fn save(path: &Path, records: &[TraceRecord]) -> Result<()> {
     let mut out = String::from(
-        "# ktruss serve calibration: kind n m est_steps wall_ms schedule granularity support\n",
+        "# ktruss serve calibration: kind n m est_steps wall_ms schedule granularity support device\n",
     );
     for r in records {
         out.push_str(&format!(
-            "{}\t{}\t{}\t{}\t{:.6}\t{}\t{}\t{}\n",
-            r.kind, r.n, r.m, r.est_steps, r.wall_ms, r.schedule, r.granularity, r.support
+            "{}\t{}\t{}\t{}\t{:.6}\t{}\t{}\t{}\t{}\n",
+            r.kind,
+            r.n,
+            r.m,
+            r.est_steps,
+            r.wall_ms,
+            r.schedule,
+            r.granularity,
+            r.support,
+            r.device
         ));
     }
     std::fs::write(path, out).with_context(|| format!("write trace file {}", path.display()))
@@ -93,8 +108,9 @@ pub fn save(path: &Path, records: &[TraceRecord]) -> Result<()> {
 
 /// Load records from `path`. Unparseable lines are an error (the file
 /// is machine-written); comment and blank lines are skipped. Accepts
-/// both the current 8-field rows and the legacy 5-field rows (which
-/// load with [`NO_PROVENANCE`] plan axes).
+/// the current 9-field rows, the pre-device 8-field rows (which load
+/// with a [`NO_PROVENANCE`] device axis), and the legacy 5-field rows
+/// (which load with every plan axis [`NO_PROVENANCE`]).
 pub fn load(path: &Path) -> Result<Vec<TraceRecord>> {
     let text = std::fs::read_to_string(path)
         .with_context(|| format!("read trace file {}", path.display()))?;
@@ -105,9 +121,9 @@ pub fn load(path: &Path) -> Result<Vec<TraceRecord>> {
             continue;
         }
         let fields: Vec<&str> = line.split_whitespace().collect();
-        if fields.len() != 5 && fields.len() != 8 {
+        if fields.len() != 5 && fields.len() != 8 && fields.len() != 9 {
             anyhow::bail!(
-                "{}:{}: expected 5 (legacy) or 8 fields, got {}",
+                "{}:{}: expected 5 (legacy), 8 (pre-device) or 9 fields, got {}",
                 path.display(),
                 lineno + 1,
                 fields.len()
@@ -126,6 +142,7 @@ pub fn load(path: &Path) -> Result<Vec<TraceRecord>> {
             schedule: prov(5),
             granularity: prov(6),
             support: prov(7),
+            device: prov(8),
         };
         out.push(rec);
     }
@@ -147,6 +164,7 @@ mod tests {
         planned.schedule = "dynamic".into();
         planned.granularity = "hybrid".into();
         planned.support = "full".into();
+        planned.device = "gpu".into();
         let records =
             vec![planned, TraceRecord::unplanned("kmax".into(), 50, 80, 700, 0.5)];
         save(&path, &records).unwrap();
@@ -176,6 +194,11 @@ mod tests {
         assert_eq!(recs.len(), 1);
         assert_eq!(recs[0].est_steps, 30);
         assert_eq!(recs[0].granularity, "fine");
+        assert_eq!(recs[0].device, NO_PROVENANCE, "pre-device rows default the device axis");
+
+        std::fs::write(&path, "ktruss\t10\t20\t30\t0.5\tdynamic\tfine\tfull\tgpu\n").unwrap();
+        let recs = load(&path).unwrap();
+        assert_eq!(recs[0].device, "gpu");
 
         std::fs::write(&path, "ktruss\t10\t20\n").unwrap();
         assert!(load(&path).is_err());

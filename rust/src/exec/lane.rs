@@ -1,0 +1,836 @@
+//! Lane-lockstep execution backend: runs `PlanDevice::Gpu` plans for
+//! real, in the execution shape the GPU timing model prices.
+//!
+//! The backend realizes, on the worker pool, the three structural
+//! elements of the paper's GPU execution (and of
+//! [`crate::sim::gpu`]'s model of it):
+//!
+//! * **Lockstep warps** — tasks of any [`Granularity`] (rows, slots,
+//!   partner-row segments, hybrid bitmap probe chunks) are packed 32
+//!   consecutive tasks to a warp ([`WARP_LANES`]), exactly the sim's
+//!   warp-formation convention. Every lane advances under an explicit
+//!   divergence mask and the warp's duration is the lane maximum —
+//!   [`lockstep`] replays the mask trajectory from the exact per-lane
+//!   step counts, so per-warp durations are cycle-exact against
+//!   [`crate::sim::gpu::warp_durations`] on the same task list.
+//! * **Merge-path warp-chain assignment** — warp chains are carved by
+//!   [`balance::scan_bins`], the same exclusive-scan + upper-bound
+//!   diagonal search (GraphBLAST's merge-path load-balanced search,
+//!   arXiv:1908.01407) the pool's work-aware schedules use, fed with
+//!   per-warp duration bounds aggregated from
+//!   [`balance::estimate_costs`] (lane max per warp).
+//! * **Persistent blocks** — one persistent block per pool worker;
+//!   under [`Schedule::Stealing`] / [`Schedule::Dynamic`] the blocks
+//!   repeatedly grab the next warp chain from a shared counter until
+//!   the grid drains ("Dynamic Load Balancing Strategies for Graph
+//!   Applications on GPUs", arXiv:1711.00231), mirroring the sim's
+//!   earliest-finish dispatch.
+//!
+//! **Why whole-task lane execution is exact.** Eager K-truss support
+//! updates are relaxed atomic fetch-adds on commutative counters that
+//! are only read *after* the pass completes, so the interleaving of
+//! steps between lanes is immaterial to the result: executing each
+//! lane's task to completion and then replaying the warp's lockstep
+//! schedule from the measured per-lane step counts produces the same
+//! supports and the same per-round divergence masks as a true
+//! step-interleaved execution — without paying a per-step barrier.
+//! The replay advances every active lane by the minimum remaining
+//! step count among active lanes per round, which is
+//! accounting-identical to one-step-per-round lockstep (same total
+//! duration, same idle-lane steps, rounds collapse runs of identical
+//! masks).
+//!
+//! The incremental path runs the **fused** mark+decrement frontier
+//! sweep (the PR 4 follow-up): one lane launch per round covers the
+//! frontier scan and the triangle decrements, instead of a mark
+//! kernel followed by a decrement kernel — see
+//! [`LaneRunReport::fused_steps`] and
+//! [`crate::algo::incremental::fused_mark_decrement_seq`] for the
+//! accounting convention.
+//!
+//! Prune/compaction stays on the pool drivers
+//! ([`crate::par::prune_par`], [`compact_preserving_par`]): row-local
+//! memory-bound compaction has no divergence structure for lanes to
+//! expose, and both backends share it unchanged, so supports stay
+//! bit-identical by construction.
+
+use crate::algo::bitmap::{self, eager_update_bitmap_atomic, HybridTasks};
+use crate::algo::incremental::{self, InNbrs};
+use crate::algo::ktruss::{IterationStat, KtrussResult};
+use crate::algo::support::{
+    eager_update_atomic, eager_update_segment_atomic, segment_tasks, Granularity, Mode,
+};
+use crate::graph::{Csr, ZCsr};
+use crate::par::balance;
+use crate::par::frontier::compact_preserving_par;
+use crate::par::{prune_par, PassControl, Pool, Schedule};
+use crate::plan::ExecutionPlan;
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
+
+/// Lanes per warp — fixed at the V100's warp width, matching
+/// [`crate::sim::machine::GpuMachine::warp_size`] so measured warp
+/// durations are directly comparable to the model's.
+pub const WARP_LANES: usize = 32;
+
+/// Whether `schedule` wants per-task cost estimates for its warp-chain
+/// binning (same predicate the pool drivers use).
+fn needs_costs(schedule: Schedule) -> bool {
+    matches!(schedule, Schedule::WorkAware | Schedule::Stealing)
+}
+
+/// Measured execution record of one lane launch (one support or
+/// frontier pass).
+#[derive(Clone, Debug, Default)]
+pub struct LaneReport {
+    /// Tasks fed to the lanes.
+    pub tasks: usize,
+    /// Warps formed (`tasks / 32`, rounded up).
+    pub warps: usize,
+    /// Warp chains the assignment produced (one per block for
+    /// static/work-aware, `blocks × 4` stealing chunks, fixed-size
+    /// groups for dynamic).
+    pub chains: usize,
+    /// Exact merge steps executed across all lanes — equals the pool
+    /// backend's step total for the same pass by construction.
+    pub executed_steps: u64,
+    /// Sum of warp durations (each the lane maximum): the step total
+    /// *as the lockstep hardware pays it*.
+    pub warp_steps: u64,
+    /// Steps lanes spent masked off while a sibling lane still ran —
+    /// `warp_steps × lanes − executed_steps`, the divergence waste the
+    /// paper's fine granularities exist to shrink.
+    pub idle_lane_steps: u64,
+    /// Lockstep rounds replayed (mask-change epochs, not single
+    /// steps): each round advances all active lanes together.
+    pub lockstep_rounds: u64,
+    /// Longest single warp (steps) — the sim's serial-tail input.
+    pub longest_warp: u64,
+    /// Warp-level makespan over the persistent blocks: the largest
+    /// per-block sum of executed warp durations. This is the measured
+    /// counterpart of the model's slot makespan.
+    pub makespan_steps: u64,
+    /// Per-warp measured durations, in warp order — feed these (as
+    /// `f64`) to [`crate::sim::gpu::warp_durations`] built from the
+    /// same task costs to check model/execution parity.
+    pub warp_durations: Vec<u64>,
+    /// Per-task measured steps, in task order.
+    pub task_steps: Vec<u64>,
+}
+
+/// Accumulated lane-execution telemetry of one full k-truss run:
+/// every support and frontier launch's [`LaneReport`], plus the
+/// fused-vs-separate step accounting of the incremental path.
+#[derive(Clone, Debug, Default)]
+pub struct LaneRunReport {
+    /// One report per full support pass, in execution order.
+    pub support_passes: Vec<LaneReport>,
+    /// One report per fused frontier sweep, in execution order.
+    pub frontier_passes: Vec<LaneReport>,
+    /// Steps of the fused mark+decrement sweeps: each round's frontier
+    /// scan (one step per pre-prune live slot) plus its decrement
+    /// enumerations, in a single launch.
+    pub fused_steps: u64,
+    /// What the same rounds would cost as separate mark-then-decrement
+    /// launches: the scan, plus one re-read per marked task by the
+    /// second kernel, plus the decrements. Always ≥ [`Self::fused_steps`],
+    /// by exactly the marked-task count.
+    pub separate_steps: u64,
+}
+
+impl LaneRunReport {
+    /// Total measured warp makespan across every launch (steps) — the
+    /// executed quantity the calibration loop fits the model against.
+    pub fn makespan_steps(&self) -> u64 {
+        self.support_passes
+            .iter()
+            .chain(self.frontier_passes.iter())
+            .map(|r| r.makespan_steps)
+            .sum()
+    }
+
+    /// Lane launches issued (support + frontier). The fused frontier
+    /// sweep keeps this at one per round; a separate mark kernel would
+    /// double the frontier launch count.
+    pub fn launches(&self) -> usize {
+        self.support_passes.len() + self.frontier_passes.len()
+    }
+
+    /// Total steps executed across every launch.
+    pub fn executed_steps(&self) -> u64 {
+        self.support_passes
+            .iter()
+            .chain(self.frontier_passes.iter())
+            .map(|r| r.executed_steps)
+            .sum()
+    }
+
+    /// Total idle-lane (divergence) steps across every launch.
+    pub fn idle_lane_steps(&self) -> u64 {
+        self.support_passes
+            .iter()
+            .chain(self.frontier_passes.iter())
+            .map(|r| r.idle_lane_steps)
+            .sum()
+    }
+}
+
+/// Replay one warp's lockstep schedule from exact per-lane step
+/// counts. Returns `(duration, rounds, idle_lane_steps)`:
+///
+/// * `duration` — steps until the last lane drains (= lane maximum,
+///   the sim's warp-duration convention);
+/// * `rounds` — mask-change epochs: each round advances every active
+///   lane by the minimum remaining count among active lanes, which is
+///   accounting-identical to single-step rounds (a run of identical
+///   masks collapses into one round);
+/// * `idle_lane_steps` — `duration × lanes − Σ lane_steps`: steps a
+///   lane sat masked off while a sibling ran (zero-step lanes idle for
+///   the whole duration — they are real lanes fed trivial tasks, e.g.
+///   terminator slots of the fine granularity).
+fn lockstep(lane_steps: &[u64]) -> (u64, u64, u64) {
+    debug_assert!(lane_steps.len() <= WARP_LANES);
+    let mut remaining = [0u64; WARP_LANES];
+    let mut mask: u32 = 0;
+    for (lane, &st) in lane_steps.iter().enumerate() {
+        remaining[lane] = st;
+        if st > 0 {
+            mask |= 1 << lane;
+        }
+    }
+    let mut duration = 0u64;
+    let mut rounds = 0u64;
+    while mask != 0 {
+        rounds += 1;
+        // smallest remaining among active lanes: the stretch until the
+        // divergence mask next changes
+        let mut chunk = u64::MAX;
+        let mut m = mask;
+        while m != 0 {
+            let lane = m.trailing_zeros() as usize;
+            chunk = chunk.min(remaining[lane]);
+            m &= m - 1;
+        }
+        duration += chunk;
+        let mut m = mask;
+        while m != 0 {
+            let lane = m.trailing_zeros() as usize;
+            remaining[lane] -= chunk;
+            if remaining[lane] == 0 {
+                mask &= !(1 << lane);
+            }
+            m &= m - 1;
+        }
+    }
+    let total: u64 = lane_steps.iter().sum();
+    (duration, rounds, duration * lane_steps.len() as u64 - total)
+}
+
+/// Carve the warp index space into chains, one unit of block work
+/// each. Returns `(chains, pulled)`: when `pulled` is true the blocks
+/// grab chains from a shared counter (persistent-block dispatch);
+/// otherwise chain `b` belongs to block `b` statically.
+fn warp_chains(
+    n_warps: usize,
+    blocks: usize,
+    warp_est: Option<&[u64]>,
+    schedule: Schedule,
+) -> (Vec<(usize, usize)>, bool) {
+    let fallback: Vec<u64>;
+    let est: &[u64] = match warp_est {
+        Some(e) => e,
+        None => {
+            fallback = vec![1u64; n_warps];
+            &fallback
+        }
+    };
+    match schedule {
+        Schedule::Static => (balance::even_chunks(n_warps, blocks), false),
+        Schedule::Dynamic { chunk } => {
+            // fixed-size chain of ⌈chunk/32⌉ warps pulled from the
+            // shared counter — the task-chunk size expressed in warps
+            let group = chunk.div_ceil(WARP_LANES).max(1);
+            let mut chains = Vec::with_capacity(n_warps.div_ceil(group));
+            let mut w = 0usize;
+            while w < n_warps {
+                chains.push((w, (w + group).min(n_warps)));
+                w += group;
+            }
+            (chains, true)
+        }
+        // merge-path equal-work chains: one per block, assigned
+        // statically
+        Schedule::WorkAware => (balance::scan_bins(est, blocks), false),
+        // over-decomposed merge-path chains pulled from the shared
+        // counter (persistent-block stealing)
+        Schedule::Stealing => (
+            balance::scan_bins(est, blocks * balance::STEAL_CHUNKS_PER_WORKER),
+            true,
+        ),
+    }
+}
+
+/// Execute one lane launch: `n_tasks` tasks packed into 32-lane
+/// lockstep warps, warp chains formed per `schedule` (merge-path over
+/// `costs` for the work-aware/stealing schedules), one persistent
+/// block per pool worker. `exec(t)` runs task `t` and returns its
+/// exact step count; it must be safe to call concurrently (the support
+/// kernels' relaxed-atomic updates are).
+///
+/// Returns the cycle-exact [`LaneReport`] of the launch.
+pub fn run_lane_pass(
+    pool: &Pool,
+    n_tasks: usize,
+    costs: Option<&[u64]>,
+    schedule: Schedule,
+    exec: impl Fn(usize) -> u64 + Sync,
+) -> LaneReport {
+    if n_tasks == 0 {
+        return LaneReport::default();
+    }
+    let n_warps = n_tasks.div_ceil(WARP_LANES);
+    let blocks = pool.workers();
+    // warp duration upper bounds (lane max of the per-task estimates):
+    // the merge-path binner's input
+    let warp_est: Option<Vec<u64>> = costs.map(|c| {
+        assert_eq!(c.len(), n_tasks, "one cost estimate per task");
+        c.chunks(WARP_LANES)
+            .map(|ch| ch.iter().copied().max().unwrap_or(0).max(1))
+            .collect()
+    });
+    let (chains, pulled) = warp_chains(n_warps, blocks, warp_est.as_deref(), schedule);
+    let task_steps: Vec<AtomicU64> = (0..n_tasks).map(|_| AtomicU64::new(0)).collect();
+    let warp_durs: Vec<AtomicU64> = (0..n_warps).map(|_| AtomicU64::new(0)).collect();
+    // per-block outcome cells, each written exactly once when its
+    // block drains (no contention, no padding needed)
+    let block_wall: Vec<AtomicU64> = (0..blocks).map(|_| AtomicU64::new(0)).collect();
+    let block_rounds: Vec<AtomicU64> = (0..blocks).map(|_| AtomicU64::new(0)).collect();
+    let block_idle: Vec<AtomicU64> = (0..blocks).map(|_| AtomicU64::new(0)).collect();
+    let next_chain = AtomicUsize::new(0);
+    // one pool task per worker under Static: each worker becomes one
+    // persistent block for the whole launch
+    pool.parallel_for(blocks, Schedule::Static, |_w, b| {
+        let mut wall = 0u64;
+        let mut rounds = 0u64;
+        let mut idle = 0u64;
+        let mut lane_steps = [0u64; WARP_LANES];
+        let mut run_chain = |ci: usize| {
+            let (w_lo, w_hi) = chains[ci];
+            for w in w_lo..w_hi {
+                let t_lo = w * WARP_LANES;
+                let t_hi = ((w + 1) * WARP_LANES).min(n_tasks);
+                let lanes = t_hi - t_lo;
+                for (lane, t) in (t_lo..t_hi).enumerate() {
+                    let st = exec(t);
+                    lane_steps[lane] = st;
+                    task_steps[t].store(st, Ordering::Relaxed);
+                }
+                let (dur, rds, idl) = lockstep(&lane_steps[..lanes]);
+                warp_durs[w].store(dur, Ordering::Relaxed);
+                wall += dur;
+                rounds += rds;
+                idle += idl;
+            }
+        };
+        if pulled {
+            loop {
+                let ci = next_chain.fetch_add(1, Ordering::Relaxed);
+                if ci >= chains.len() {
+                    break;
+                }
+                run_chain(ci);
+            }
+        } else if b < chains.len() {
+            run_chain(b);
+        }
+        block_wall[b].store(wall, Ordering::Relaxed);
+        block_rounds[b].store(rounds, Ordering::Relaxed);
+        block_idle[b].store(idle, Ordering::Relaxed);
+    });
+    let task_steps: Vec<u64> = task_steps.into_iter().map(AtomicU64::into_inner).collect();
+    let warp_durations: Vec<u64> = warp_durs.into_iter().map(AtomicU64::into_inner).collect();
+    let executed_steps: u64 = task_steps.iter().sum();
+    let warp_steps: u64 = warp_durations.iter().sum();
+    let longest_warp = warp_durations.iter().copied().max().unwrap_or(0);
+    LaneReport {
+        tasks: n_tasks,
+        warps: n_warps,
+        chains: chains.len(),
+        executed_steps,
+        warp_steps,
+        idle_lane_steps: block_idle.iter().map(|a| a.load(Ordering::Relaxed)).sum(),
+        lockstep_rounds: block_rounds.iter().map(|a| a.load(Ordering::Relaxed)).sum(),
+        longest_warp,
+        makespan_steps: block_wall.iter().map(|a| a.load(Ordering::Relaxed)).max().unwrap_or(0),
+        warp_durations,
+        task_steps,
+    }
+}
+
+/// One lane-executed **full support pass** at any granularity into an
+/// existing (zeroed) atomic array. For `Hybrid`, `ht`/`pending` carry
+/// the reusable [`HybridTasks`] across passes: the first pass builds
+/// it, later passes re-encode only the rows in `pending`
+/// ([`HybridTasks::refresh`], the frontier-driven invalidation of
+/// ROADMAP item 5's follow-up) — identical task lists to a rebuild
+/// because prune/compaction is row-local.
+fn run_full_lane(
+    z: &ZCsr,
+    pool: &Pool,
+    gran: Granularity,
+    schedule: Schedule,
+    s: &[AtomicU32],
+    ht: &mut Option<HybridTasks>,
+    pending: &mut Vec<u32>,
+) -> LaneReport {
+    let col = z.col();
+    match gran {
+        Granularity::Coarse => {
+            let costs = needs_costs(schedule).then(|| balance::estimate_costs(z, Mode::Coarse));
+            run_lane_pass(pool, z.n(), costs.as_deref(), schedule, |i| {
+                let (start, end) = z.row_span(i);
+                let mut row_steps = 0u64;
+                for p in start..end {
+                    let kappa = col[p];
+                    if kappa == 0 {
+                        break;
+                    }
+                    let (r0, _) = z.row_span(kappa as usize);
+                    row_steps += eager_update_atomic(col, s, p, r0);
+                }
+                row_steps
+            })
+        }
+        Granularity::Fine => {
+            let costs = needs_costs(schedule).then(|| balance::estimate_costs(z, Mode::Fine));
+            run_lane_pass(pool, z.slots(), costs.as_deref(), schedule, |p| {
+                let kappa = col[p];
+                if kappa == 0 {
+                    return 0;
+                }
+                let (r0, _) = z.row_span(kappa as usize);
+                eager_update_atomic(col, s, p, r0)
+            })
+        }
+        Granularity::Segment { len } => {
+            let tasks = segment_tasks(z, len);
+            let costs = needs_costs(schedule)
+                .then(|| tasks.iter().map(|t| t.estimated_steps()).collect::<Vec<u64>>());
+            run_lane_pass(pool, tasks.len(), costs.as_deref(), schedule, |ti| {
+                eager_update_segment_atomic(col, s, &tasks[ti])
+            })
+        }
+        Granularity::Hybrid { len } => {
+            match ht {
+                Some(t) => t.refresh(z, len, pending),
+                None => *ht = Some(bitmap::hybrid_tasks(z, len)),
+            }
+            pending.clear();
+            let t = ht.as_ref().expect("hybrid task list just built");
+            let n_merge = t.merge.len();
+            let costs = needs_costs(schedule).then(|| t.estimated_steps());
+            run_lane_pass(pool, t.len(), costs.as_deref(), schedule, |ti| {
+                if ti < n_merge {
+                    eager_update_segment_atomic(col, s, &t.merge[ti])
+                } else {
+                    let task = &t.probe[ti - n_merge];
+                    let kappa = col[task.p as usize] as usize;
+                    let bm = t.index.row(kappa).expect("probe task against unencoded row");
+                    eager_update_bitmap_atomic(col, s, bm, task)
+                }
+            })
+        }
+    }
+}
+
+/// One lane-executed **frontier decrement launch** (the decrement half
+/// of the fused sweep — the mark scan's steps are accounted by the
+/// caller). Mirrors the pool's granularity handling: `Coarse` groups a
+/// row's contiguous frontier tasks into one lane task, every other
+/// granularity runs one lane task per dying edge.
+#[allow(clippy::too_many_arguments)]
+fn run_frontier_lane(
+    z: &ZCsr,
+    pool: &Pool,
+    f: &incremental::Frontier,
+    in_nbrs: &InNbrs,
+    gran: Granularity,
+    schedule: Schedule,
+    s: &[AtomicU32],
+    costs: Option<&[u64]>,
+) -> LaneReport {
+    if matches!(gran, Granularity::Coarse) {
+        // group consecutive tasks by row (mark emits ascending slot
+        // order, so a row's tasks are contiguous)
+        let mut groups: Vec<(usize, usize)> = Vec::new();
+        let mut start = 0usize;
+        for i in 1..=f.tasks.len() {
+            if i == f.tasks.len() || f.tasks[i].row != f.tasks[start].row {
+                groups.push((start, i));
+                start = i;
+            }
+        }
+        let group_costs: Option<Vec<u64>> = if needs_costs(schedule) {
+            let computed: Vec<u64>;
+            let per_task: &[u64] = match costs {
+                Some(c) => c,
+                None => {
+                    computed = incremental::frontier_costs(z, f, in_nbrs);
+                    &computed
+                }
+            };
+            assert_eq!(per_task.len(), f.tasks.len(), "one cost per frontier task");
+            Some(
+                groups
+                    .iter()
+                    .map(|&(lo, hi)| per_task[lo..hi].iter().sum::<u64>().max(1))
+                    .collect(),
+            )
+        } else {
+            None
+        };
+        run_lane_pass(pool, groups.len(), group_costs.as_deref(), schedule, |gi| {
+            let (lo, hi) = groups[gi];
+            let mut steps = 0u64;
+            for t in &f.tasks[lo..hi] {
+                steps += incremental::frontier_task_atomic(z, s, f, in_nbrs, *t);
+            }
+            steps
+        })
+    } else {
+        let mut owned: Option<Vec<u64>> = None;
+        let cost_slice: Option<&[u64]> = if needs_costs(schedule) {
+            Some(match costs {
+                Some(c) => c,
+                None => owned.insert(incremental::frontier_costs(z, f, in_nbrs)).as_slice(),
+            })
+        } else {
+            None
+        };
+        run_lane_pass(pool, f.tasks.len(), cost_slice, schedule, |ti| {
+            incremental::frontier_task_atomic(z, s, f, in_nbrs, f.tasks[ti])
+        })
+    }
+}
+
+/// Lane-executed one-shot support pass at any granularity; returns the
+/// plain support array and the launch's [`LaneReport`]. The lane
+/// analogue of [`crate::par::compute_supports_gran`] — the parity
+/// tests compare both outputs bit for bit and feed the report's
+/// measured task steps through the sim's warp formation.
+pub fn compute_supports_lane(
+    z: &ZCsr,
+    pool: &Pool,
+    gran: Granularity,
+    schedule: Schedule,
+) -> (Vec<u32>, LaneReport) {
+    let s: Vec<AtomicU32> = (0..z.slots()).map(|_| AtomicU32::new(0)).collect();
+    let mut ht = None;
+    let mut pending = Vec::new();
+    let report = run_full_lane(z, pool, gran, schedule, &s, &mut ht, &mut pending);
+    (s.into_iter().map(AtomicU32::into_inner).collect(), report)
+}
+
+/// Lane-backend k-truss under the plan's granularity/schedule/support
+/// axes — the execution target of `PlanDevice::Gpu` plans
+/// ([`crate::par::ktruss_par_plan`] routes here). Produces the exact
+/// k-truss, bit-identical to the pool backend at every plan point.
+pub fn ktruss_lane(g: &Csr, k: u32, pool: &Pool, plan: &ExecutionPlan) -> KtrussResult {
+    ktruss_lane_ctl(g, k, pool, plan, PassControl::default()).0
+}
+
+/// [`ktruss_lane`] with pass-boundary control (the serving layer's
+/// cancellable entry); returns `(result, cancelled)`.
+pub fn ktruss_lane_ctl(
+    g: &Csr,
+    k: u32,
+    pool: &Pool,
+    plan: &ExecutionPlan,
+    ctl: PassControl<'_>,
+) -> (KtrussResult, bool) {
+    let (result, _, cancelled) = ktruss_lane_report(g, k, pool, plan, ctl);
+    (result, cancelled)
+}
+
+/// [`ktruss_lane_ctl`] returning the full [`LaneRunReport`] — the
+/// entry the calibration loop and `bench lane` use to read measured
+/// warp makespans, divergence waste and fused-sweep accounting.
+///
+/// The convergence loop mirrors the pool driver
+/// ([`crate::par::ktruss_par_plan_ctl`]) decision for decision — same
+/// frontier marks, same [`incremental::decide_incremental`] calls,
+/// same prune/compaction — so iteration counts and per-iteration step
+/// totals match the pool backend exactly; only the *execution* of each
+/// support/decrement pass differs (lockstep warps instead of flat pool
+/// tasks).
+pub fn ktruss_lane_report(
+    g: &Csr,
+    k: u32,
+    pool: &Pool,
+    plan: &ExecutionPlan,
+    ctl: PassControl<'_>,
+) -> (KtrussResult, LaneRunReport, bool) {
+    let gran = plan.granularity;
+    let schedule = plan.schedule;
+    let support = plan.support;
+    let crossover = plan.crossover;
+    // recorded mode follows the pool drivers: coarse records Coarse,
+    // everything else (fine and its sub-divisions) records Fine
+    let mode = match gran {
+        Granularity::Coarse => Mode::Coarse,
+        _ => Mode::Fine,
+    };
+    let hybrid_len = match gran {
+        Granularity::Hybrid { len } => Some(len),
+        _ => None,
+    };
+    let mut report = LaneRunReport::default();
+    let mut z = ZCsr::from_csr(g);
+    let s_atomic: Vec<AtomicU32> = (0..z.slots()).map(|_| AtomicU32::new(0)).collect();
+    let mut s_plain = vec![0u32; z.slots()];
+    let use_inc = support.allows_incremental();
+    let mut iterations = 0usize;
+    let mut stats = Vec::new();
+    let mut live = z.live_edges();
+    let mut cancelled = false;
+    if live == 0 {
+        return (
+            KtrussResult { truss: z.to_csr(), iterations, stats, k, mode },
+            report,
+            false,
+        );
+    }
+    let in_nbrs: Option<InNbrs> = if use_inc { Some(InNbrs::build(&z)) } else { None };
+    // reusable hybrid task list + rows invalidated since the last full
+    // hybrid pass (satellite: frontier-driven bitmap invalidation)
+    let mut ht: Option<HybridTasks> = None;
+    let mut pending_rows: Vec<u32> = Vec::new();
+    let full_tasks = |live: usize, z: &ZCsr| match mode {
+        Mode::Coarse => z.n(),
+        Mode::Fine => live,
+    };
+    let mut pass_timer = crate::util::Timer::start();
+    let lr = run_full_lane(&z, pool, gran, schedule, &s_atomic, &mut ht, &mut pending_rows);
+    let mut pass_wall_ms = pass_timer.elapsed_ms();
+    let mut pass_steps = lr.executed_steps;
+    report.support_passes.push(lr);
+    let mut pass_tasks = full_tasks(live, &z);
+    let mut pass_incremental = false;
+    let mut last_full_steps = pass_steps;
+    loop {
+        if live == 0 {
+            break;
+        }
+        let f = incremental::mark_frontier_with(&z, k, |p| {
+            s_atomic[p].load(Ordering::Relaxed)
+        });
+        iterations += 1;
+        stats.push(IterationStat {
+            live_edges: live,
+            removed: f.len(),
+            support_steps: pass_steps,
+            incremental: pass_incremental,
+            wall_ms: pass_wall_ms,
+            tasks: pass_tasks,
+        });
+        if f.is_empty() {
+            break;
+        }
+        if ctl.pass_boundary(iterations - 1) {
+            cancelled = true;
+            break;
+        }
+        // both branches below remove exactly this round's dying slots,
+        // so the rows owning them are the ones whose bitmap encodings
+        // go stale before the next full hybrid pass
+        if hybrid_len.is_some() {
+            let mut last = u32::MAX;
+            for t in &f.tasks {
+                if t.row != last {
+                    pending_rows.push(t.row);
+                    last = t.row;
+                }
+            }
+        }
+        let (go_incremental, frontier_cost_vec) = incremental::decide_incremental(
+            &z,
+            &f,
+            in_nbrs.as_ref(),
+            support,
+            last_full_steps,
+            crossover,
+            needs_costs(schedule),
+        );
+        if go_incremental {
+            let nbrs = in_nbrs.as_ref().expect("incremental mode builds the index");
+            pass_tasks = f.len();
+            pass_timer.restart();
+            let lr = run_frontier_lane(
+                &z,
+                pool,
+                &f,
+                nbrs,
+                gran,
+                schedule,
+                &s_atomic,
+                frontier_cost_vec.as_deref(),
+            );
+            pass_wall_ms = pass_timer.elapsed_ms();
+            let dec_steps = lr.executed_steps;
+            report.frontier_passes.push(lr);
+            // fused-sweep accounting: the mark scan (one step per
+            // pre-prune live slot) rode the same launch; a separate
+            // mark kernel would re-read each marked task in the
+            // decrement launch and pay a second launch latency
+            let live_total: u64 = f.live.iter().map(|&x| u64::from(x)).sum();
+            report.fused_steps += live_total + dec_steps;
+            report.separate_steps += live_total + f.len() as u64 + dec_steps;
+            pass_steps = dec_steps;
+            pass_incremental = true;
+            live = compact_preserving_par(&mut z, &s_atomic, &f.dying, pool, schedule)
+                .remaining;
+        } else {
+            for (d, a) in s_plain.iter_mut().zip(s_atomic.iter()) {
+                *d = a.swap(0, Ordering::Relaxed);
+            }
+            live = prune_par(&mut z, &mut s_plain, k, pool, schedule).remaining;
+            if live == 0 {
+                pass_steps = 0;
+                pass_incremental = false;
+                pass_wall_ms = 0.0;
+                pass_tasks = 0;
+            } else {
+                pass_timer.restart();
+                let lr =
+                    run_full_lane(&z, pool, gran, schedule, &s_atomic, &mut ht, &mut pending_rows);
+                pass_wall_ms = pass_timer.elapsed_ms();
+                pass_steps = lr.executed_steps;
+                report.support_passes.push(lr);
+                pass_tasks = full_tasks(live, &z);
+                pass_incremental = false;
+                last_full_steps = pass_steps;
+            }
+        }
+    }
+    (
+        KtrussResult { truss: z.to_csr(), iterations, stats, k, mode },
+        report,
+        cancelled,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::incremental::SupportMode;
+    use crate::algo::ktruss::ktruss_mode;
+    use crate::algo::support::compute_supports_seq;
+    use crate::par::pool::ALL_SCHEDULES;
+
+    #[test]
+    fn lockstep_matches_the_lane_max_convention() {
+        // duration = lane max; idle = duration×lanes − total; rounds =
+        // number of distinct nonzero step counts
+        let (dur, rounds, idle) = lockstep(&[3, 1, 4, 1, 5]);
+        assert_eq!(dur, 5);
+        assert_eq!(idle, 5 * 5 - 14);
+        assert_eq!(rounds, 4); // mask changes at 1, 3, 4, 5
+        // zero-step lanes idle for the whole duration
+        let (dur, rounds, idle) = lockstep(&[0, 7, 0]);
+        assert_eq!((dur, rounds, idle), (7, 1, 14));
+        // empty and all-zero warps cost nothing
+        assert_eq!(lockstep(&[]), (0, 0, 0));
+        assert_eq!(lockstep(&[0, 0]), (0, 0, 0));
+        // uniform lanes never diverge: one round, zero idle
+        let (dur, rounds, idle) = lockstep(&[6; 32]);
+        assert_eq!((dur, rounds, idle), (6, 1, 0));
+    }
+
+    #[test]
+    fn lane_pass_accounting_is_exact_under_every_schedule() {
+        // synthetic task list: task t costs t % 7 steps
+        let pool = Pool::new(4);
+        let n = 1000;
+        let step = |t: usize| (t % 7) as u64;
+        let costs: Vec<u64> = (0..n).map(step).collect();
+        let total: u64 = costs.iter().sum();
+        for sched in ALL_SCHEDULES {
+            let r = run_lane_pass(&pool, n, Some(&costs), sched, step);
+            assert_eq!(r.executed_steps, total, "{sched:?}");
+            assert_eq!(r.tasks, n);
+            assert_eq!(r.warps, n.div_ceil(WARP_LANES));
+            assert_eq!(r.task_steps, costs, "{sched:?}");
+            // warp durations are the lane max of each consecutive chunk
+            let want: Vec<u64> = costs
+                .chunks(WARP_LANES)
+                .map(|c| c.iter().copied().max().unwrap())
+                .collect();
+            assert_eq!(r.warp_durations, want, "{sched:?}");
+            assert_eq!(r.warp_steps, want.iter().sum::<u64>());
+            assert_eq!(r.longest_warp, 6);
+            // every block's chain sum is ≤ the makespan, and the
+            // makespan is ≤ the whole grid run serially
+            assert!(r.makespan_steps >= r.warp_steps / pool.workers() as u64);
+            assert!(r.makespan_steps <= r.warp_steps);
+            assert_eq!(
+                r.idle_lane_steps,
+                r.warp_durations
+                    .iter()
+                    .zip(costs.chunks(WARP_LANES))
+                    .map(|(&d, c)| d * c.len() as u64 - c.iter().sum::<u64>())
+                    .sum::<u64>()
+            );
+        }
+    }
+
+    #[test]
+    fn lane_supports_match_seq_at_every_granularity() {
+        let g = crate::gen::rmat::rmat(
+            250,
+            1700,
+            crate::gen::rmat::RmatParams::social(),
+            &mut crate::util::Rng::new(7),
+        );
+        let z = ZCsr::from_csr(&g);
+        let mut want = Vec::new();
+        compute_supports_seq(&z, &mut want);
+        let pool = Pool::new(4);
+        for gran in [
+            Granularity::Coarse,
+            Granularity::Fine,
+            Granularity::Segment { len: 8 },
+            Granularity::Hybrid { len: 8 },
+        ] {
+            for sched in ALL_SCHEDULES {
+                let (got, r) = compute_supports_lane(&z, &pool, gran, sched);
+                assert_eq!(got, want, "{gran} {sched:?}");
+                assert!(r.executed_steps > 0, "{gran} {sched:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn lane_ktruss_matches_seq_and_reports_passes() {
+        let g = crate::testkit::graphs::peel_chain(16);
+        let pool = Pool::new(3);
+        for k in [3u32, 4] {
+            let want = ktruss_mode(&g, k, Mode::Fine, SupportMode::Full);
+            let plan = ExecutionPlan {
+                schedule: Schedule::Stealing,
+                granularity: Granularity::Fine,
+                support: SupportMode::Auto,
+                crossover: incremental::DEFAULT_CROSSOVER_FRAC,
+                device: crate::plan::PlanDevice::Gpu,
+            };
+            let (got, rep, cancelled) =
+                ktruss_lane_report(&g, k, &pool, &plan, PassControl::default());
+            assert!(!cancelled);
+            assert_eq!(got.truss, want.truss, "k={k}");
+            assert_eq!(got.iterations, want.iterations, "k={k}");
+            assert!(!rep.support_passes.is_empty());
+            // any fused round strictly undercuts the separate launches
+            if !rep.frontier_passes.is_empty() {
+                assert!(rep.fused_steps < rep.separate_steps);
+            }
+        }
+    }
+}

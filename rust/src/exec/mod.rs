@@ -1,0 +1,19 @@
+//! **Executing device backends.** The planner stamps every
+//! [`ExecutionPlan`](crate::plan::ExecutionPlan) with a
+//! [`PlanDevice`](crate::plan::PlanDevice); this layer is what makes
+//! that axis *executable* instead of purely predictive. A `Cpu` plan
+//! runs the worker-pool drivers in [`crate::par`] unchanged; a `Gpu`
+//! plan dispatches to the lane-lockstep backend ([`lane`]), which
+//! realizes the GPU execution shape the timing model in
+//! [`crate::sim::gpu`] prices — 32-lane lockstep warps, merge-path
+//! warp-chain assignment, persistent-block stealing — on the same
+//! worker pool, with cycle-exact step accounting that the calibration
+//! loop ([`crate::sim::calibrate`]) fits the model's constants
+//! against.
+//!
+//! The backend boundary is deliberately *behind* the plan: callers go
+//! through [`crate::par::ktruss_par_plan`], which inspects
+//! `plan.device` and routes here, so the serving layer, CLI and tests
+//! pick up device dispatch without knowing the backends exist.
+
+pub mod lane;

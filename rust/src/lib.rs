@@ -40,6 +40,7 @@ pub mod bench_harness;
 pub mod cli;
 pub mod coordinator;
 pub mod cost;
+pub mod exec;
 pub mod gen;
 pub mod graph;
 pub mod obs;

@@ -7,8 +7,9 @@
 //!   generate   materialize a SNAP-replica graph to a file
 //!   suite      list the replica suite with structural stats
 //!   bench      regenerate a paper table/figure (table1|fig2|fig3|fig4|ablations),
-//!              the GPU schedule sweep (gpu-sched), the serving throughput
-//!              workload (serve), or the streaming maintenance workload (stream)
+//!              the GPU schedule sweep (gpu-sched), the lockstep-lane backend
+//!              study (lane), the serving throughput workload (serve), or the
+//!              streaming maintenance workload (stream)
 //!   serve      start the sharded executor and run a mixed-priority job stream
 //!   mutate     replay an edge-mutation script against a versioned resident
 //!              graph (one planned Mutate job per batch, epochs advance per
@@ -30,8 +31,8 @@ use ktruss::algo::ktruss::ktruss_mode as ktruss_seq_mode;
 use ktruss::algo::stream::EdgeBatch;
 use ktruss::algo::{decompose, kmax};
 use ktruss::bench_harness::{
-    ablations, chaos_bench, figs, plan_ablation, report, serve_bench, stream_bench, table1,
-    Workload,
+    ablations, chaos_bench, figs, lane_bench, plan_ablation, report, serve_bench, stream_bench,
+    table1, Workload,
 };
 use ktruss::cli::Args;
 use ktruss::coordinator::JobKind;
@@ -93,7 +94,7 @@ fn print_help() {
          USAGE: ktruss <command> [flags]\n\n\
          COMMANDS\n\
            run        --graph <name|path> [--k 3] [--mode fine|coarse] [--par N] [--engine sparse|dense]\n\
-                      [--plan auto|<schedule>/<granularity>/<support>]\n\
+                      [--device cpu|gpu] [--plan auto|<schedule>/<granularity>/<support>]\n\
                       [--granularity coarse|fine|segment[:len]|hybrid[:len]]\n\
                       [--schedule static|dynamic[:chunk]|workaware|stealing]\n\
                       [--support-mode full|incremental|auto]\n\
@@ -102,6 +103,8 @@ fn print_help() {
                       (pooled runs execute one cost-driven ExecutionPlan: --plan pins\n\
                       or frees all axes at once, the per-axis flags pin single axes,\n\
                       anything unpinned is chosen by the planner per graph;\n\
+                      --device gpu scores on the GPU machine model and executes the\n\
+                      plan on the lockstep-lane backend in-process;\n\
                       --shards > 1 serves the job through the sharded executor;\n\
                       --granularity segment runs the ultra-fine pooled kernel,\n\
                       hybrid adds bitmap-encoded hub partner rows + tail chunks)\n\
@@ -111,6 +114,8 @@ fn print_help() {
            suite      [--scale 0.15] [--stats]\n\
            bench      <table1|fig2|fig3|fig4|ablations> [--k 3] (env: KTRUSS_SUITE, KTRUSS_SCALE)\n\
            bench gpu-sched [--seg-len 64]  (GPU schedule x granularity sweep)\n\
+           bench lane [--workers 4]  (lockstep-lane backend study: lane vs pool walls,\n\
+                      fused vs separate frontier steps, calibrated model-vs-executed band)\n\
            bench plan [--threads 48] [--k 3]  (auto plan vs every fixed plan ablation)\n\
            bench serve [--jobs 120] [--arrival-us 300] [--workers 4] [--shard-counts 1,2,4]\n\
            bench stream [--depth 10] [--batches 12] [--k 4] [--workers 3] [--shards 1]\n\
@@ -229,6 +234,11 @@ fn cmd_run(args: &Args) -> Result<()> {
     let par = args.get_as::<usize>("par", 1)?;
     let engine_flag = args.opt("engine");
     let engine = engine_flag.clone().unwrap_or_else(|| "sparse".to_string());
+    let gpu_device = match args.get("device", "cpu").as_str() {
+        "cpu" => false,
+        "gpu" => true,
+        other => bail!("--device must be cpu|gpu, got {other:?}"),
+    };
     let shards = args.get_as::<usize>("shards", 1)?;
     let priority: Priority = args
         .get("priority", "normal")
@@ -247,6 +257,15 @@ fn cmd_run(args: &Args) -> Result<()> {
         }
         if engine == "dense" {
             bail!("segment/hybrid granularity requires --engine sparse");
+        }
+    }
+    if gpu_device {
+        // the lane backend executes in-process under a GPU-scored plan
+        if engine == "dense" {
+            bail!("--device gpu runs the lockstep-lane sparse backend; drop --engine dense");
+        }
+        if shards > 1 {
+            bail!("--device gpu runs in-process (no executor routing); drop --shards");
         }
     }
     if shards > 1 {
@@ -298,7 +317,8 @@ fn cmd_run(args: &Args) -> Result<()> {
         ex.shutdown();
         return Ok(());
     }
-    if spec.schedule.is_some() && (engine != "sparse" || par <= 1) && !seg_requested {
+    if spec.schedule.is_some() && (engine != "sparse" || par <= 1) && !seg_requested && !gpu_device
+    {
         eprintln!(
             "note: --schedule only affects the sparse pool engine; add --par <N> (N > 1) to use it"
         );
@@ -315,18 +335,24 @@ fn cmd_run(args: &Args) -> Result<()> {
             let (truss, iters) = eng.ktruss(&g, k)?;
             (truss.nnz(), iters, "dense-xla (AOT jax/Pallas via PJRT)".to_string())
         }
-        "sparse" if par > 1 || seg_requested => {
+        "sparse" if par > 1 || seg_requested || gpu_device => {
             // pooled path: one cost-driven plan (pinned axes honored,
-            // the rest chosen by the planner for this graph)
+            // the rest chosen by the planner for this graph). With
+            // --device gpu the planner scores on the GPU machine model
+            // and ktruss_par_plan dispatches to the lockstep-lane
+            // backend (crate::exec::lane).
             let pool = Pool::new(par.max(1));
-            let plan = Planner::new(pool.workers()).with_spec(spec).choose(&g, k);
+            let planner =
+                if gpu_device { Planner::gpu() } else { Planner::new(pool.workers()) };
+            let plan = planner.with_spec(spec).choose(&g, k);
             let r = ktruss_par_plan(&g, k, &pool, &plan);
             span_plan = Some(plan);
-            let out = (
-                r.truss.nnz(),
-                r.iterations,
-                format!("sparse-cpu (pool, plan={plan})"),
-            );
+            let backend = if gpu_device {
+                format!("lane backend (lockstep warps over {} workers, plan={plan})", pool.workers())
+            } else {
+                format!("sparse-cpu (pool, plan={plan})")
+            };
+            let out = (r.truss.nnz(), r.iterations, backend);
             span_stats = r.stats;
             out
         }
@@ -384,6 +410,7 @@ fn local_job_span(
         schedule: plan.map(|p| p.schedule.to_string()).unwrap_or_else(|| "-".to_string()),
         granularity: plan.map(|p| p.granularity.to_string()).unwrap_or_else(|| "-".to_string()),
         support: plan.map(|p| p.support.to_string()).unwrap_or_else(|| "-".to_string()),
+        device: plan.map(|p| p.device.to_string()).unwrap_or_else(|| "-".to_string()),
         est_steps: 0,
         total_steps: passes.iter().map(|p| p.steps).sum(),
         predicted_ms: 0.0,
@@ -535,9 +562,21 @@ fn cmd_bench(args: &Args) -> Result<()> {
         .positional
         .first()
         .context(
-            "bench needs a target: table1|fig2|fig3|fig4|ablations|gpu-sched|serve|stream|chaos|plan",
+            "bench needs a target: table1|fig2|fig3|fig4|ablations|gpu-sched|lane|serve|stream|chaos|plan",
         )?
         .clone();
+    if which == "lane" {
+        let workers = args.get_as::<usize>("workers", 4)?;
+        args.reject_unknown()?;
+        println!("# lane: lockstep-lane backend study ({workers} workers)");
+        let r = lane_bench::run(workers, |msg| eprintln!("  [{msg}]"))?;
+        let rendered = r.render();
+        report::emit("lane_backend.txt", &rendered)?;
+        if let Err(e) = r.verify() {
+            anyhow::bail!("lane invariant violated: {e}");
+        }
+        return Ok(());
+    }
     if which == "serve" {
         return cmd_bench_serve(args);
     }

@@ -3,11 +3,14 @@
 //! At job completion the executor joins the admission-time prediction
 //! (the cost model's per-label estimate, plus the planner's scored
 //! per-pass prediction when one exists) against the measured wall time,
-//! keyed by the executed plan axes (`schedule/granularity/support`).
-//! Each key holds EWMAs of predicted ms, actual ms, and the
-//! actual/predicted ratio, so a regime the model consistently mis-prices
-//! shows up as a ratio far from 1 — the calibration cross-check the
-//! ROADMAP's executing-GPU-backend item needs before any backend exists.
+//! keyed by the executed plan axes
+//! (`device/schedule/granularity/support`). Each key holds EWMAs of
+//! predicted ms, actual ms, and the actual/predicted ratio, so a regime
+//! the model consistently mis-prices shows up as a ratio far from 1.
+//! The device axis leads the key so lane-backend
+//! ([`crate::exec::lane`]) walls accumulate in their own `gpu/…` bands
+//! instead of polluting the `cpu/…` EWMAs the pool drivers calibrate
+//! against.
 
 use crate::cost::persist::TraceRecord;
 use crate::serve::cost_model::CostModel;
@@ -49,7 +52,7 @@ impl DriftStat {
 /// One plan regime's drift snapshot.
 #[derive(Clone, Debug, PartialEq)]
 pub struct DriftReport {
-    /// The plan axes key (`schedule/granularity/support`).
+    /// The plan axes key (`device/schedule/granularity/support`).
     pub plan: String,
     /// EWMA of predicted wall time, ms.
     pub predicted_ms: f64,
@@ -109,7 +112,8 @@ impl DriftTracker {
             if !r.has_provenance() {
                 continue;
             }
-            let plan = format!("{}/{}/{}", r.schedule, r.granularity, r.support);
+            let plan =
+                format!("{}/{}/{}/{}", r.device, r.schedule, r.granularity, r.support);
             self.observe(&plan, model.predict_ms_for(&r.kind, r.est_steps), r.wall_ms);
         }
     }
@@ -237,11 +241,15 @@ mod tests {
             support: "full".into(),
             ..legacy.clone()
         };
+        let executed = TraceRecord { device: "gpu".into(), ..planned.clone() };
         let d = DriftTracker::new();
-        d.seed(&[legacy, planned], &model);
+        d.seed(&[legacy, planned, executed], &model);
         let snap = d.snapshot();
-        assert_eq!(snap.len(), 1);
-        assert_eq!(snap[0].plan, "static/fine/full");
+        assert_eq!(snap.len(), 2);
+        // pre-device records seed a distinct `-` device band; lane-executed
+        // records land in their own gpu band.
+        assert_eq!(snap[0].plan, "-/static/fine/full");
+        assert_eq!(snap[1].plan, "gpu/static/fine/full");
         assert_eq!(snap[0].samples, 1);
     }
 }

@@ -215,6 +215,7 @@ mod tests {
             schedule: "static".into(),
             granularity: "fine".into(),
             support: "full".into(),
+            device: "cpu".into(),
             est_steps: 100,
             total_steps: 34,
             predicted_ms: 1.5,
@@ -250,7 +251,7 @@ mod tests {
         assert!(doc.contains("\"pass 1 job 7\""), "{doc}");
         assert!(doc.contains("\"total_steps\":34"), "{doc}");
         assert!(doc.contains("\"steps\":30"), "{doc}");
-        assert!(doc.contains("\"plan\":\"static/fine/full\""), "{doc}");
+        assert!(doc.contains("\"plan\":\"cpu/static/fine/full\""), "{doc}");
         assert!(doc.contains("\"planned_pass_ms\":null"), "{doc}");
         assert!(doc.contains("\"outcome\":\"done\""), "{doc}");
     }

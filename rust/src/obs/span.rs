@@ -1,7 +1,7 @@
 //! Span recording: the job → pass span tree.
 //!
 //! A [`JobSpan`] captures one served job end to end — the plan the
-//! planner chose (schedule/granularity/support axes), the cost model's
+//! planner chose (device/schedule/granularity/support axes), the cost model's
 //! predicted wall time, the measured queue-wait / execution / serve
 //! segments, and one [`PassSpan`] per convergence iteration carrying
 //! the *exact* merge/probe step count the kernels measured (the same
@@ -57,6 +57,9 @@ pub struct JobSpan {
     pub granularity: String,
     /// Executed support-mode axis of the plan (`-` when unplanned).
     pub support: String,
+    /// Executed device axis of the plan (`cpu` for the pool drivers,
+    /// `gpu` for the lane backend; `-` when unplanned).
+    pub device: String,
     /// The cost model's static step estimate at admission.
     pub est_steps: u64,
     /// Sum of the pass spans' exact measured steps.
@@ -90,10 +93,12 @@ pub struct JobSpan {
 }
 
 impl JobSpan {
-    /// The executed plan as one `schedule/granularity/support` string
-    /// (`-/-/-` when unplanned).
+    /// The executed plan as one `device/schedule/granularity/support`
+    /// string (`-/-/-/-` when unplanned). The device axis leads so
+    /// drift regimes keyed off this string separate lane-backend walls
+    /// from pool walls.
     pub fn plan_string(&self) -> String {
-        format!("{}/{}/{}", self.schedule, self.granularity, self.support)
+        format!("{}/{}/{}/{}", self.device, self.schedule, self.granularity, self.support)
     }
 }
 
@@ -185,6 +190,7 @@ mod tests {
             schedule: "static".into(),
             granularity: "fine".into(),
             support: "full".into(),
+            device: "cpu".into(),
             est_steps: 100,
             total_steps: steps.iter().sum(),
             predicted_ms: 1.0,
@@ -216,7 +222,7 @@ mod tests {
         assert_eq!(snap[0].id, 1);
         assert_eq!(snap[0].total_steps, 7);
         assert_eq!(snap[1].passes.len(), 1);
-        assert_eq!(snap[0].plan_string(), "static/fine/full");
+        assert_eq!(snap[0].plan_string(), "cpu/static/fine/full");
     }
 
     #[test]

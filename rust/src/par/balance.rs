@@ -38,7 +38,7 @@
 //! [`Schedule::Stealing`]: super::pool::Schedule::Stealing
 
 use crate::algo::support::{Granularity, Mode};
-use crate::graph::ZCsr;
+use crate::graph::{Csr, ZCsr};
 use std::collections::VecDeque;
 use std::sync::Mutex;
 
@@ -81,6 +81,45 @@ pub fn estimate_costs(z: &ZCsr, mode: Mode) -> Vec<u64> {
                     let tail = (li - off - 1) as u64;
                     costs[start + off] = 1 + tail + live[kappa] as u64;
                 }
+            }
+            costs
+        }
+    }
+}
+
+/// [`estimate_costs`] straight off the canonical [`Csr`] — the
+/// admission-time variant the planner scores with, so choosing a plan
+/// allocates no scratch zero-terminated working copy. A fresh
+/// zero-terminated row is exactly its CSR row followed by one
+/// terminator slot, so the output is entry-for-entry identical to
+/// `estimate_costs(&ZCsr::from_csr(g), mode)`: the fine vector carries
+/// each row's live costs followed by one cost-1 terminator entry.
+pub fn estimate_costs_csr(g: &Csr, mode: Mode) -> Vec<u64> {
+    let n = g.n();
+    match mode {
+        Mode::Coarse => (0..n)
+            .map(|i| {
+                let row = g.row(i);
+                let li = row.len();
+                let mut cost = 1u64;
+                for (off, &kappa) in row.iter().enumerate() {
+                    let tail = (li - off - 1) as u64;
+                    cost += 1 + tail + g.row(kappa as usize).len() as u64;
+                }
+                cost
+            })
+            .collect(),
+        Mode::Fine => {
+            let mut costs = Vec::with_capacity(g.nnz() + n);
+            for i in 0..n {
+                let row = g.row(i);
+                let li = row.len();
+                for (off, &kappa) in row.iter().enumerate() {
+                    let tail = (li - off - 1) as u64;
+                    costs.push(1 + tail + g.row(kappa as usize).len() as u64);
+                }
+                // the row's terminator slot
+                costs.push(1);
             }
             costs
         }
@@ -514,6 +553,26 @@ mod tests {
     use super::*;
     use crate::graph::builder::from_sorted_unique;
     use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn csr_native_estimates_match_the_fresh_working_copy() {
+        let fixtures = [
+            crate::testkit::graphs::hub_divergence_comb(48, 128, 400),
+            crate::testkit::graphs::peel_chain(24),
+            crate::testkit::graphs::star_with_fringe(40),
+            crate::testkit::graphs::diamond(),
+        ];
+        for g in &fixtures {
+            let z = crate::graph::ZCsr::from_csr(g);
+            for mode in [Mode::Coarse, Mode::Fine] {
+                assert_eq!(
+                    estimate_costs_csr(g, mode),
+                    estimate_costs(&z, mode),
+                    "Csr-native {mode} estimates must be entry-identical to the ZCsr bounds"
+                );
+            }
+        }
+    }
 
     #[test]
     fn hybrid_trace_pieces_mirror_the_real_task_enumeration() {

@@ -20,8 +20,8 @@ pub use frontier::{
     increment_frontier_par, increment_frontier_par_gran,
 };
 pub use parallel_support::{
-    compute_supports_gran, compute_supports_hybrid, compute_supports_par,
-    compute_supports_segmented, ktruss_par, ktruss_par_gran, ktruss_par_gran_mode,
-    ktruss_par_mode, ktruss_par_plan, ktruss_par_plan_ctl, prune_par,
+    compute_supports_gran, compute_supports_hybrid, compute_supports_hybrid_tasks,
+    compute_supports_par, compute_supports_segmented, ktruss_par, ktruss_par_gran,
+    ktruss_par_gran_mode, ktruss_par_mode, ktruss_par_plan, ktruss_par_plan_ctl, prune_par,
 };
 pub use pool::{CancelToken, PassControl, Pool, Schedule, ALL_SCHEDULES};

@@ -218,8 +218,25 @@ pub fn compute_supports_hybrid(
     schedule: Schedule,
     s: &[AtomicU32],
 ) -> u64 {
-    assert_eq!(s.len(), z.slots());
     let ht = bitmap::hybrid_tasks(z, len);
+    compute_supports_hybrid_tasks(z, pool, &ht, schedule, s)
+}
+
+/// [`compute_supports_hybrid`] against an **existing** task list: the
+/// entry the convergence drivers use to reuse one
+/// [`bitmap::HybridTasks`] (and its [`bitmap::BitmapIndex`]) across
+/// iterations, refreshed by frontier-driven invalidation
+/// ([`bitmap::HybridTasks::refresh`]) instead of rebuilt per pass.
+/// `ht` must describe the current working form of `z` (either freshly
+/// built or refreshed with every row whose live entries changed).
+pub fn compute_supports_hybrid_tasks(
+    z: &ZCsr,
+    pool: &Pool,
+    ht: &bitmap::HybridTasks,
+    schedule: Schedule,
+    s: &[AtomicU32],
+) -> u64 {
+    assert_eq!(s.len(), z.slots());
     let col = z.col();
     let totals = worker_counters(pool);
     let n_merge = ht.merge.len();
@@ -403,6 +420,12 @@ pub fn ktruss_par_plan_ctl(
     plan: &ExecutionPlan,
     ctl: PassControl<'_>,
 ) -> (crate::algo::ktruss::KtrussResult, bool) {
+    // device dispatch: Gpu plans execute on the lane-lockstep backend
+    // (same pool, GPU execution shape — see [`crate::exec::lane`]);
+    // results are bit-identical across backends at every plan point
+    if plan.device == crate::plan::PlanDevice::Gpu {
+        return crate::exec::lane::ktruss_lane_ctl(g, k, pool, plan, ctl);
+    }
     ktruss_par_gran_crossover(
         g,
         k,
@@ -687,15 +710,16 @@ fn ktruss_par_gran_crossover(
         Granularity::Segment { len } => (len, false),
         Granularity::Hybrid { len } => (len, true),
     };
-    // full passes re-enumerate tasks (and, for hybrid, re-select row
-    // representations) from the compacted working form each iteration
-    let run_full = |z: &ZCsr, s: &[AtomicU32]| {
-        if hybrid {
-            compute_supports_hybrid(z, pool, len, schedule, s)
-        } else {
-            compute_supports_segmented(z, pool, len, schedule, s)
-        }
-    };
+    // full passes re-enumerate segment tasks from the compacted
+    // working form each iteration; the hybrid path instead keeps ONE
+    // task list (and bitmap index) alive across iterations, refreshed
+    // by frontier-driven invalidation — `pending_rows` accumulates the
+    // rows whose dying slots were removed since the last full pass,
+    // and `run_full_gran` re-encodes exactly those before executing
+    // ([`bitmap::HybridTasks::refresh`]; prune/compaction is row-local,
+    // so untouched rows' encodings and representations are unchanged)
+    let mut ht: Option<bitmap::HybridTasks> = None;
+    let mut pending_rows: Vec<u32> = Vec::new();
     let mut z = ZCsr::from_csr(g);
     let s_atomic: Vec<AtomicU32> = (0..z.slots()).map(|_| AtomicU32::new(0)).collect();
     let mut s_plain = vec![0u32; z.slots()];
@@ -719,7 +743,9 @@ fn ktruss_par_gran_crossover(
     }
     let in_nbrs: Option<InNbrs> = if use_inc { Some(InNbrs::build(&z)) } else { None };
     let mut pass_timer = crate::util::Timer::start();
-    let mut pass_steps = run_full(&z, &s_atomic);
+    let mut pass_steps = run_full_gran(
+        &z, pool, len, hybrid, schedule, &s_atomic, &mut ht, &mut pending_rows,
+    );
     let mut pass_wall_ms = pass_timer.elapsed_ms();
     // tasks pre-split: segment/hybrid subdivide fine (per-edge) tasks,
     // so the offered count before splitting is the live-edge count
@@ -749,6 +775,19 @@ fn ktruss_par_gran_crossover(
         if ctl.pass_boundary(iterations - 1) {
             cancelled = true;
             break;
+        }
+        // both branches below remove exactly this round's dying slots;
+        // the rows owning them are the ones whose hybrid encodings go
+        // stale (tasks emit ascending slot order, so rows arrive
+        // grouped — consecutive dedup suffices)
+        if hybrid {
+            let mut last = u32::MAX;
+            for t in &f.tasks {
+                if t.row != last {
+                    pending_rows.push(t.row);
+                    last = t.row;
+                }
+            }
         }
         let (go_incremental, frontier_cost_vec) = incremental::decide_incremental(
             &z,
@@ -789,7 +828,9 @@ fn ktruss_par_gran_crossover(
                 pass_tasks = 0;
             } else {
                 pass_timer.restart();
-                pass_steps = run_full(&z, &s_atomic);
+                pass_steps = run_full_gran(
+                    &z, pool, len, hybrid, schedule, &s_atomic, &mut ht, &mut pending_rows,
+                );
                 pass_wall_ms = pass_timer.elapsed_ms();
                 pass_tasks = live;
                 pass_incremental = false;
@@ -807,6 +848,35 @@ fn ktruss_par_gran_crossover(
         },
         cancelled,
     )
+}
+
+/// One full pass of the segment/hybrid convergence driver. Segment
+/// passes re-enumerate their task list (cheap — no index to build);
+/// hybrid passes maintain `ht` across iterations: built once, then
+/// [`bitmap::HybridTasks::refresh`]ed with the rows accumulated in
+/// `pending` (cleared here) instead of rebuilt from scratch.
+#[allow(clippy::too_many_arguments)]
+fn run_full_gran(
+    z: &ZCsr,
+    pool: &Pool,
+    len: u32,
+    hybrid: bool,
+    schedule: Schedule,
+    s: &[AtomicU32],
+    ht: &mut Option<bitmap::HybridTasks>,
+    pending: &mut Vec<u32>,
+) -> u64 {
+    if hybrid {
+        match ht {
+            Some(t) => t.refresh(z, len, pending),
+            None => *ht = Some(bitmap::hybrid_tasks(z, len)),
+        }
+        pending.clear();
+        let t = ht.as_ref().expect("hybrid task list just built");
+        compute_supports_hybrid_tasks(z, pool, t, schedule, s)
+    } else {
+        compute_supports_segmented(z, pool, len, schedule, s)
+    }
 }
 
 #[cfg(test)]

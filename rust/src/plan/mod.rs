@@ -44,11 +44,10 @@
 //! not on the order the scan happened to visit them (see
 //! [`select_sticky`'s regression test](self)).
 
-use crate::algo::bitmap;
 use crate::algo::incremental::{SupportMode, DEFAULT_CROSSOVER_FRAC};
 use crate::algo::support::{Granularity, Mode, DEFAULT_SEGMENT_LEN};
 use crate::coordinator::job::JobKind;
-use crate::graph::{Csr, ZCsr};
+use crate::graph::{Csr, Vid, ZCsr};
 use crate::par::balance::{self, Costs};
 use crate::par::Schedule;
 use crate::serve::cost_model::{job_label, CostModel};
@@ -104,12 +103,27 @@ pub struct ExecutionPlan {
     /// update runs only when its estimated work is at most this
     /// fraction of the full-pass proxy.
     pub crossover: f64,
+    /// The device whose machine model scored this plan — and, since
+    /// the lane backend landed ([`crate::exec::lane`]), the backend
+    /// that executes it: [`PlanDevice::Gpu`] plans run the
+    /// lockstep-lane execution, [`PlanDevice::Cpu`] plans the thread
+    /// pool. Not part of the `schedule/granularity/support` display
+    /// grammar; drift/provenance keys carry it as a fourth axis.
+    pub device: PlanDevice,
 }
 
 impl ExecutionPlan {
-    /// A plan with explicit axes at the default crossover fraction.
+    /// A plan with explicit axes at the default crossover fraction,
+    /// scored and executed on the CPU pool (the planner stamps its own
+    /// device onto every plan it returns).
     pub fn fixed(schedule: Schedule, granularity: Granularity, support: SupportMode) -> ExecutionPlan {
-        ExecutionPlan { schedule, granularity, support, crossover: DEFAULT_CROSSOVER_FRAC }
+        ExecutionPlan {
+            schedule,
+            granularity,
+            support,
+            crossover: DEFAULT_CROSSOVER_FRAC,
+            device: PlanDevice::Cpu,
+        }
     }
 
     /// The coarse/fine [`Mode`] this plan's granularity maps onto
@@ -167,16 +181,20 @@ impl PlanSpec {
             granularity: self.granularity?,
             support: self.support?,
             crossover: self.crossover.unwrap_or(DEFAULT_CROSSOVER_FRAC),
+            device: PlanDevice::Cpu,
         })
     }
 
-    /// Overlay the pinned axes of this spec onto a chosen plan.
+    /// Overlay the pinned axes of this spec onto a chosen plan. The
+    /// device is not a spec axis — it always survives from the base
+    /// plan (the planner that scored it).
     pub fn apply(&self, base: ExecutionPlan) -> ExecutionPlan {
         ExecutionPlan {
             schedule: self.schedule.unwrap_or(base.schedule),
             granularity: self.granularity.unwrap_or(base.granularity),
             support: self.support.unwrap_or(base.support),
             crossover: self.crossover.unwrap_or(base.crossover),
+            device: base.device,
         }
     }
 }
@@ -234,13 +252,39 @@ impl std::str::FromStr for PlanSpec {
     }
 }
 
-/// The device the plan's candidates are scored for.
+/// The device the plan's candidates are scored for — and executed on:
+/// [`PlanDevice::Gpu`] plans dispatch to the lockstep-lane backend
+/// ([`crate::exec::lane`]), [`PlanDevice::Cpu`] plans to the thread
+/// pool drivers.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PlanDevice {
     /// The CPU pool model at the planner's thread count.
     Cpu,
     /// The V100 warp/slot model ([`crate::sim::gpu`]).
     Gpu,
+}
+
+impl std::fmt::Display for PlanDevice {
+    /// `cpu` / `gpu` — the device axis of drift and provenance keys.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            PlanDevice::Cpu => "cpu",
+            PlanDevice::Gpu => "gpu",
+        })
+    }
+}
+
+impl std::str::FromStr for PlanDevice {
+    type Err = String;
+
+    /// Parse `cpu` / `gpu` (the CLI `--device` values).
+    fn from_str(s: &str) -> Result<PlanDevice, String> {
+        match s {
+            "cpu" => Ok(PlanDevice::Cpu),
+            "gpu" => Ok(PlanDevice::Gpu),
+            other => Err(format!("unknown device {other:?} (expected cpu or gpu)")),
+        }
+    }
 }
 
 /// Auto-tune the segment length from a per-task cost distribution
@@ -410,7 +454,8 @@ impl Planner {
     /// drift accounting can join the planner's prediction against the
     /// measured spans ([`crate::obs::drift`]).
     pub fn choose_scored(&self, g: &Csr, k: u32) -> (ExecutionPlan, Option<f64>) {
-        if let Some(plan) = self.spec.fixed() {
+        if let Some(mut plan) = self.spec.fixed() {
+            plan.device = self.device;
             return (plan, None);
         }
         let ex = self.explain(g, k);
@@ -428,9 +473,10 @@ impl Planner {
         // tiny jobs: scoring (and every non-trivial plan) costs more
         // than it saves — pin the cheapest execution
         if g.nnz() < TINY_JOB_NNZ {
-            let plan = self
+            let mut plan = self
                 .spec
                 .apply(ExecutionPlan::fixed(Schedule::Static, Granularity::Coarse, SupportMode::Full));
+            plan.device = self.device;
             // a rough serial-cost figure in the scoring device's own
             // units, so the single row stays comparable to non-tiny
             // explanations from the same planner
@@ -448,8 +494,12 @@ impl Planner {
                 tiny: true,
             };
         }
-        let z = ZCsr::from_csr(g);
-        let fine_costs = Costs { per_task: balance::estimate_costs(&z, Mode::Fine) };
+        // score straight off the canonical CSR — no scratch
+        // zero-terminated working copy at admission time (a fresh
+        // zero-terminated row is its CSR row plus one terminator slot,
+        // so the Csr-native estimates are entry-identical)
+        let view = GraphView::Csr(g);
+        let fine_costs = Costs { per_task: balance::estimate_costs_csr(g, Mode::Fine) };
         let fine_est: &[u64] = &fine_costs.per_task;
         let total_est: u64 = fine_est.iter().sum();
         let support = self.pick_support(g, total_est, skew);
@@ -477,11 +527,17 @@ impl Planner {
         };
         let mut candidates = Vec::with_capacity(grans.len() * scheds.len());
         for &gran in &grans {
-            let task_costs = self.task_costs(&z, &live, fine_est, gran);
+            let task_costs = self.task_costs(&view, fine_est, gran);
             for &sched in &scheds {
                 let predicted_ms = self.score(&task_costs, total_est, sched);
                 candidates.push(PlanCandidate {
-                    plan: ExecutionPlan { schedule: sched, granularity: gran, support, crossover },
+                    plan: ExecutionPlan {
+                        schedule: sched,
+                        granularity: gran,
+                        support,
+                        crossover,
+                        device: self.device,
+                    },
                     predicted_ms,
                 });
             }
@@ -494,17 +550,22 @@ impl Planner {
     /// device's units (ns for CPU, steps for GPU), machine-model
     /// overheads included — exactly the per-task shaping
     /// [`crate::sim::cpu`] / [`crate::sim::gpu`] apply to traces, fed
-    /// with the static bounds available at admission time.
-    fn task_costs(&self, z: &ZCsr, live: &[u32], fine_est: &[u64], gran: Granularity) -> Vec<f64> {
+    /// with the static bounds available at admission time. Reads only
+    /// the row view, so it scores identically off the canonical
+    /// [`Csr`] or a zero-terminated working copy.
+    fn task_costs(&self, view: &GraphView<'_>, fine_est: &[u64], gran: Granularity) -> Vec<f64> {
         match self.device {
             PlanDevice::Cpu => {
                 let m = CpuMachine::skylake_8160(self.threads);
                 match gran {
-                    Granularity::Coarse => balance::estimate_costs(z, Mode::Coarse)
+                    Granularity::Coarse => view
+                        .coarse_costs()
                         .iter()
-                        .zip(live.iter())
-                        .map(|(&st, &l)| {
-                            m.coarse_task_ns + l as f64 * m.entry_ns + st as f64 * m.step_ns
+                        .enumerate()
+                        .map(|(i, &st)| {
+                            m.coarse_task_ns
+                                + view.row(i).len() as f64 * m.entry_ns
+                                + st as f64 * m.step_ns
                         })
                         .collect(),
                     Granularity::Fine => fine_est
@@ -517,7 +578,7 @@ impl Planner {
                             .collect()
                     }
                     Granularity::Hybrid { len } => {
-                        let (merge, probe) = hybrid_pieces(z, fine_est, len);
+                        let (merge, probe) = hybrid_pieces(view, fine_est, len);
                         merge
                             .into_iter()
                             .map(|st| m.segment_task_ns() + st as f64 * m.step_ns)
@@ -533,7 +594,8 @@ impl Planner {
             PlanDevice::Gpu => {
                 let m = GpuMachine::v100();
                 match gran {
-                    Granularity::Coarse => balance::estimate_costs(z, Mode::Coarse)
+                    Granularity::Coarse => view
+                        .coarse_costs()
                         .iter()
                         .map(|&st| st as f64 + m.coarse_task_steps)
                         .collect(),
@@ -545,7 +607,7 @@ impl Planner {
                         .map(|st| st as f64 + m.segment_task_steps())
                         .collect(),
                     Granularity::Hybrid { len } => {
-                        let (merge, probe) = hybrid_pieces(z, fine_est, len);
+                        let (merge, probe) = hybrid_pieces(view, fine_est, len);
                         merge
                             .into_iter()
                             .map(|st| st as f64 + m.segment_task_steps())
@@ -564,9 +626,16 @@ impl Planner {
     /// `bitmap` hot-path section) can compare fixed granularities
     /// through the same shaping the planner uses.
     pub fn static_task_costs(&self, z: &ZCsr, gran: Granularity) -> Vec<f64> {
-        let live: Vec<u32> = (0..z.n()).map(|i| z.row_live(i).len() as u32).collect();
         let fine_est = balance::estimate_costs(z, Mode::Fine);
-        self.task_costs(z, &live, &fine_est, gran)
+        self.task_costs(&GraphView::Zero(z), &fine_est, gran)
+    }
+
+    /// [`Planner::static_task_costs`] straight off the canonical
+    /// [`Csr`] — the admission-time shaping [`Planner::explain`] uses,
+    /// which allocates no scratch zero-terminated working copy.
+    pub fn static_task_costs_csr(&self, g: &Csr, gran: Granularity) -> Vec<f64> {
+        let fine_est = balance::estimate_costs_csr(g, Mode::Fine);
+        self.task_costs(&GraphView::Csr(g), &fine_est, gran)
     }
 
     /// Predicted cost (ms) of one support pass at a fixed
@@ -672,36 +741,110 @@ fn split_segments(fine_est: &[u64], len: u32) -> impl Iterator<Item = u64> + '_ 
     })
 }
 
+/// The two graph layouts the planner scores from, behind one row view.
+/// At admission time the candidate scoring reads the canonical [`Csr`]
+/// directly — a fresh zero-terminated row is exactly its CSR row plus
+/// one terminator slot, so no scratch working copy is built (the
+/// retired `ZCsr::from_csr` admission-time allocation). The bench
+/// paths that score a mid-computation layout go through the
+/// [`ZCsr`] arm instead.
+enum GraphView<'a> {
+    /// Canonical adjacency: every row fully live, one terminator slot
+    /// of padding per row in the fine task-index space.
+    Csr(&'a Csr),
+    /// A zero-terminated working copy (possibly pruned, with
+    /// tombstone padding beyond each row's live prefix).
+    Zero(&'a ZCsr),
+}
+
+impl GraphView<'_> {
+    fn n(&self) -> usize {
+        match self {
+            GraphView::Csr(g) => g.n(),
+            GraphView::Zero(z) => z.n(),
+        }
+    }
+
+    /// The row's live prefix (the whole row for the CSR arm).
+    fn row(&self, i: usize) -> &[Vid] {
+        match self {
+            GraphView::Csr(g) => g.row(i),
+            GraphView::Zero(z) => z.row_live(i),
+        }
+    }
+
+    /// Dead slots after row `i`'s live prefix in the fine task-index
+    /// space (the terminator for a fresh row; terminator plus
+    /// tombstones for a pruned one).
+    fn pad(&self, i: usize) -> usize {
+        match self {
+            GraphView::Csr(_) => 1,
+            GraphView::Zero(z) => {
+                let (start, end) = z.row_span(i);
+                end - start - z.row_live(i).len()
+            }
+        }
+    }
+
+    /// [`balance::estimate_costs`] at [`Mode::Coarse`] for this view.
+    fn coarse_costs(&self) -> Vec<u64> {
+        match self {
+            GraphView::Csr(g) => balance::estimate_costs_csr(g, Mode::Coarse),
+            GraphView::Zero(z) => balance::estimate_costs(z, Mode::Coarse),
+        }
+    }
+}
+
 /// The modeled task pieces of one hybrid support pass at `len`:
 /// `(merge-side pieces, probe-side pieces)`, both in steps.
 ///
-/// Slots whose partner row the [`bitmap::BitmapIndex`] selection
-/// encodes contribute tail-side probe chunks — `ceil(tail/len)` pieces
-/// of at most `len` steps, which is *exact* (one uniform probe per tail
-/// entry, [`bitmap::BitmapTask::estimated_steps`]). Every other slot
-/// (merge-represented partner, empty tail, terminator/tombstone) stays
-/// on the merge side and is split with the **same** ≤`len` upper-bound
-/// decomposition the segment candidate uses ([`split_segments`] of the
-/// fine estimates). Keeping the merge side on the segment candidate's
-/// bound convention makes the hybrid-vs-segment comparison measure
-/// exactly the representation switch on the encoded rows, not a change
-/// of accounting slack between candidates.
-fn hybrid_pieces(z: &ZCsr, fine_est: &[u64], len: u32) -> (Vec<u64>, Vec<u64>) {
-    let (index, _) = bitmap::BitmapIndex::build(z, len);
-    let col = z.col();
+/// Slots whose partner row the [`crate::algo::bitmap::BitmapIndex`]
+/// selection would encode contribute tail-side probe chunks —
+/// `ceil(tail/len)` pieces of at most `len` steps, which is *exact*
+/// (one uniform probe per tail entry,
+/// [`crate::algo::bitmap::BitmapTask::estimated_steps`]). Every other
+/// slot (merge-represented partner, empty tail, terminator/tombstone)
+/// stays on the merge side and is split with the **same** ≤`len`
+/// upper-bound decomposition the segment candidate uses
+/// ([`split_segments`] of the fine estimates). Keeping the merge side
+/// on the segment candidate's bound convention makes the
+/// hybrid-vs-segment comparison measure exactly the representation
+/// switch on the encoded rows, not a change of accounting slack
+/// between candidates.
+///
+/// The selection predicate is evaluated arithmetically (`live ≥
+/// threshold`, bitmap words ≤ live — the same mirror
+/// [`balance::hybrid_trace_pieces`] uses), so scoring builds no
+/// bitmap index and allocates nothing graph-sized beyond the flags.
+fn hybrid_pieces(view: &GraphView<'_>, fine_est: &[u64], len: u32) -> (Vec<u64>, Vec<u64>) {
+    let n = view.n();
+    let thr = len.max(1) as usize;
     let l = len.max(1) as u64;
-    let mut is_probe = vec![false; z.slots()];
+    // mirror of the `BitmapIndex::build` selection: long enough to
+    // qualify, and dense enough that the bitmap words don't exceed
+    // the live count
+    let encoded: Vec<bool> = (0..n)
+        .map(|i| {
+            let row = view.row(i);
+            let lk = row.len();
+            lk >= thr && {
+                let words = ((row[lk - 1] as usize - row[0] as usize) >> 6) + 1;
+                words <= lk
+            }
+        })
+        .collect();
+    let mut is_probe = vec![false; fine_est.len()];
     let mut probe = Vec::new();
-    for i in 0..z.n() {
-        let (start, _) = z.row_span(i);
-        let li = z.row_live(i).len();
+    let mut start = 0usize;
+    for i in 0..n {
+        let row = view.row(i);
+        let li = row.len();
         for off in 0..li {
             let tail = (li - off - 1) as u64;
             if tail == 0 {
                 continue;
             }
-            let kappa = col[start + off] as usize;
-            if index.row(kappa).is_none() {
+            if !encoded[row[off] as usize] {
                 continue;
             }
             is_probe[start + off] = true;
@@ -710,6 +853,7 @@ fn hybrid_pieces(z: &ZCsr, fine_est: &[u64], len: u32) -> (Vec<u64>, Vec<u64>) {
                 probe.push(if j + 1 == pieces { tail - j * l } else { l });
             }
         }
+        start += li + view.pad(i);
     }
     let merge_est: Vec<u64> = fine_est
         .iter()
@@ -1066,5 +1210,60 @@ mod tests {
         // a zero-cost entry still yields one (empty) task
         assert_eq!(split_segments(&[0], 8).count(), 1);
         assert_eq!(split_segments(&[200], 64).count(), 4);
+    }
+
+    #[test]
+    fn planner_stamps_its_device_on_every_path() {
+        assert_eq!(PlanDevice::Cpu.to_string(), "cpu");
+        assert_eq!("gpu".parse::<PlanDevice>().unwrap(), PlanDevice::Gpu);
+        assert!("tpu".parse::<PlanDevice>().is_err());
+        // tiny shortcut, fixed spec, and scored grid all carry the
+        // planner's device (the dispatch key the executing backends key
+        // on), for both planners
+        let tiny = crate::testkit::graphs::diamond();
+        let comb = crate::testkit::graphs::hub_divergence_comb(48, 128, 400);
+        let full: PlanSpec = "static/coarse/full".parse().unwrap();
+        for (planner, device) in [
+            (Planner::new(8), PlanDevice::Cpu),
+            (Planner::gpu(), PlanDevice::Gpu),
+        ] {
+            assert_eq!(planner.choose(&tiny, 3).device, device);
+            assert_eq!(planner.clone().with_spec(full).choose(&comb, 3).device, device);
+            let ex = planner.explain(&comb, 3);
+            assert!(ex.candidates.iter().all(|c| c.plan.device == device));
+        }
+        // the device never enters the printed plan grammar
+        let plan = Planner::gpu().choose(&comb, 3);
+        let spec: PlanSpec = plan.to_string().parse().unwrap();
+        assert_eq!(spec.apply(plan), plan);
+    }
+
+    #[test]
+    fn csr_native_scoring_matches_the_working_copy_path() {
+        // satellite: admission-time scoring reads the canonical CSR —
+        // the shaped task costs must equal the ZCsr path entry for
+        // entry, for every granularity on both device models
+        let fixtures = [
+            crate::testkit::graphs::hub_divergence_comb(48, 128, 400),
+            crate::testkit::graphs::peel_chain(24),
+            crate::testkit::graphs::star_with_fringe(600),
+        ];
+        for g in &fixtures {
+            let z = ZCsr::from_csr(g);
+            for planner in [Planner::new(8), Planner::gpu()] {
+                for gran in [
+                    Granularity::Coarse,
+                    Granularity::Fine,
+                    Granularity::Segment { len: 32 },
+                    Granularity::Hybrid { len: 32 },
+                ] {
+                    assert_eq!(
+                        planner.static_task_costs_csr(g, gran),
+                        planner.static_task_costs(&z, gran),
+                        "{gran}"
+                    );
+                }
+            }
+        }
     }
 }

@@ -17,6 +17,15 @@
 //! dependency and replace the bodies below (the shapes of
 //! [`Runtime::load_hlo_text`] and [`Executable::run_f32`] match what
 //! the dense engine needs).
+//!
+//! Until then, GPU-device plans are not stranded: the lockstep-lane
+//! backend ([`crate::exec::lane`]) executes `PlanDevice::Gpu` plans
+//! in-process — warps as lockstep lanes with divergence masking,
+//! merge-path intra-warp assignment, persistent-block stealing — so
+//! `run --device gpu` exercises the GPU execution shape (and the
+//! model-vs-executed calibration loop) without `libxla_extension`.
+//! A revived PJRT bridge would slot in as a second executing device
+//! behind the same plan dispatch.
 
 use anyhow::{bail, Result};
 use std::path::Path;

@@ -214,10 +214,11 @@ impl CostModel {
 
     /// [`CostModel::observe_labeled`] with executed-plan provenance:
     /// the retained trace record carries the plan's schedule,
-    /// granularity, and support axes, so a persisted calibration file
-    /// can re-seed both the per-label EWMAs *and* the per-plan drift
-    /// baselines ([`crate::obs::drift::DriftTracker::seed`]) at
-    /// startup.
+    /// granularity, support, and device axes, so a persisted
+    /// calibration file can re-seed both the per-label EWMAs *and* the
+    /// per-plan drift baselines
+    /// ([`crate::obs::drift::DriftTracker::seed`]) at startup without
+    /// folding lane-backend walls into CPU regimes.
     pub fn observe_planned(
         &self,
         label: &str,
@@ -231,6 +232,7 @@ impl CostModel {
         rec.schedule = plan.schedule.to_string();
         rec.granularity = plan.granularity.to_string();
         rec.support = plan.support.to_string();
+        rec.device = plan.device.to_string();
         self.record(rec);
     }
 
@@ -428,6 +430,7 @@ mod tests {
             granularity: crate::algo::support::Granularity::Fine,
             support: SupportMode::Full,
             crossover: 0.25,
+            device: crate::plan::PlanDevice::Cpu,
         };
         m.observe_planned("ktruss+full", 10, 20, 1000, 0.01, &plan);
         m.observe_labeled("kmax", 10, 20, 500, 0.02);
@@ -437,6 +440,7 @@ mod tests {
         assert_eq!(records[0].schedule, plan.schedule.to_string());
         assert_eq!(records[0].granularity, plan.granularity.to_string());
         assert_eq!(records[0].support, plan.support.to_string());
+        assert_eq!(records[0].device, "cpu");
         assert!(!records[1].has_provenance());
         // provenance does not perturb the calibration itself
         assert!((m.ns_per_step_for("ktruss+full") - 10.0).abs() < 1e-9);

@@ -518,6 +518,7 @@ impl Executor {
                         .map(|p| p.granularity.to_string())
                         .unwrap_or_else(|| "-".into()),
                     support: plan.map(|p| p.support.to_string()).unwrap_or_else(|| "-".into()),
+                    device: plan.map(|p| p.device.to_string()).unwrap_or_else(|| "-".into()),
                     est_steps,
                     total_steps: 0,
                     predicted_ms,
@@ -777,6 +778,7 @@ fn reply_without_exec(
         schedule: adm.plan.map(|p| p.schedule.to_string()).unwrap_or_else(|| "-".into()),
         granularity: adm.plan.map(|p| p.granularity.to_string()).unwrap_or_else(|| "-".into()),
         support: adm.plan.map(|p| p.support.to_string()).unwrap_or_else(|| "-".into()),
+        device: adm.plan.map(|p| p.device.to_string()).unwrap_or_else(|| "-".into()),
         est_steps: adm.est_steps,
         total_steps: 0,
         predicted_ms: adm.predicted_ms,
@@ -1058,6 +1060,10 @@ fn shard_body(
                 .plan
                 .map(|p| p.support.to_string())
                 .unwrap_or_else(|| "-".to_string()),
+            device: result
+                .plan
+                .map(|p| p.device.to_string())
+                .unwrap_or_else(|| "-".to_string()),
             est_steps: adm.est_steps,
             total_steps: result.passes.iter().map(|p| p.steps).sum(),
             predicted_ms: adm.predicted_ms,
@@ -1282,14 +1288,15 @@ mod tests {
             truss.total_steps
         );
         assert!(truss.total_steps > 0);
-        assert_eq!(truss.plan_string(), r.plan.unwrap().to_string());
+        let plan = r.plan.unwrap();
+        assert_eq!(truss.plan_string(), format!("{}/{}", plan.device, plan));
         assert!(truss.predicted_ms > 0.0);
         assert!(truss.planned_pass_ms.is_some());
         assert!(truss.exec_ms >= 0.0 && truss.serve_ms >= truss.exec_ms);
         assert!(truss.ok);
         // unplanned kinds record a span too, with placeholder axes
         let tri = spans.iter().find(|s| s.kind == "triangles").unwrap();
-        assert_eq!(tri.plan_string(), "-/-/-");
+        assert_eq!(tri.plan_string(), "-/-/-/-");
         assert!(tri.passes.is_empty());
         assert!(tri.planned_pass_ms.is_none());
         // the planned job fed the drift tracker under its plan regime

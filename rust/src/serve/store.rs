@@ -333,7 +333,7 @@ mod tests {
         let spans = ex.obs.spans.snapshot();
         let mutate_spans: Vec<_> = spans.iter().filter(|s| s.kind == "mutate").collect();
         assert_eq!(mutate_spans.len(), script.len());
-        assert!(mutate_spans.iter().all(|s| s.plan_string() != "-/-/-"));
+        assert!(mutate_spans.iter().all(|s| s.plan_string() != "-/-/-/-"));
         ex.shutdown();
         assert_eq!(store.epoch(), script.len() as u64);
     }

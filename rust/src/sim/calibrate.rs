@@ -5,10 +5,13 @@
 //! independent of it.
 
 use crate::algo::support::{
-    compute_supports_seq, compute_supports_segmented_seq, segment_tasks,
+    compute_supports_seq, compute_supports_segmented_seq, segment_tasks, Granularity,
 };
 use crate::cost::trace::trace_supports;
+use crate::exec::lane::{compute_supports_lane, WARP_LANES};
 use crate::graph::ZCsr;
+use crate::par::{Pool, Schedule};
+use crate::sim::machine::GpuMachine;
 use crate::util::timer::Timer;
 
 /// Calibration output.
@@ -96,6 +99,131 @@ pub fn calibrate_segment_overhead(seg_len: u32) -> SegmentCalibration {
     SegmentCalibration { seg_len, tasks, per_task_ns, wall_ms }
 }
 
+/// Calibration of the lockstep-lane backend ([`crate::exec::lane`])
+/// against measured warp walls: the constants that make the GPU
+/// machine model's estimates comparable to what the lane execution
+/// actually measures on this host.
+///
+/// Three fixtures fit three constants. A balanced social-replica pass
+/// fits the *occupied* step cost (every lane busy, the lockstep
+/// makespan tracks the wall). A hub-divergence pass fits the *serial*
+/// step cost: the host realization pays every executed lane step while
+/// the lockstep accounting charges only the warp max, so divergent
+/// warps cost more per accounted step. A near-triangle-free pass whose
+/// step count is ~0 isolates the per-pass launch overhead.
+#[derive(Clone, Copy, Debug)]
+pub struct LaneCalibration {
+    /// Nanoseconds per lockstep makespan step on the balanced fixture.
+    pub step_ns: f64,
+    /// Nanoseconds per lockstep makespan step on the divergent hub
+    /// fixture (≥ `step_ns` up to noise — divergence inflates it).
+    pub serial_step_ns: f64,
+    /// Per-pass fixed overhead, microseconds (fit from a pass with a
+    /// near-zero step count).
+    pub launch_us: f64,
+    /// Lane occupancy on the hub fixture: executed lane steps per warp
+    /// (lane-max) step. 1 = fully divergent warps,
+    /// [`WARP_LANES`] = perfectly converged.
+    pub divergence_ratio: f64,
+    /// Lockstep makespan of the balanced fixture's measured pass.
+    pub makespan_steps: u64,
+    /// Wall time of one balanced-fixture pass, ms.
+    pub wall_ms: f64,
+}
+
+impl LaneCalibration {
+    /// A [`GpuMachine`] whose constants reproduce this host's measured
+    /// lane walls: one "SM" per pool worker, 1 GHz clock so cycles read
+    /// as nanoseconds, fitted occupied/serial step costs and launch
+    /// overhead, remaining task constants inherited from the V100
+    /// profile. Feeding [`crate::sim::gpu::estimate_tasks_sched`] this
+    /// machine predicts lane-executed pass walls directly.
+    pub fn fitted_machine(&self, workers: usize) -> GpuMachine {
+        let v = GpuMachine::v100();
+        GpuMachine {
+            sms: workers.max(1),
+            schedulers_per_sm: 1,
+            clock_ghz: 1.0,
+            warp_size: WARP_LANES,
+            step_cycles: self.step_ns,
+            serial_step_cycles: self.serial_step_ns,
+            coarse_task_steps: v.coarse_task_steps,
+            fine_task_steps: v.fine_task_steps,
+            launch_us: self.launch_us,
+            prune_slot_steps: v.prune_slot_steps,
+            mem_bw_gbs: v.mem_bw_gbs,
+        }
+    }
+}
+
+/// The drift-regime key for a lane-executed pass — device-first, the
+/// same grammar [`crate::obs::span::JobSpan::plan_string`] renders, so
+/// calibration observations land in the `gpu/…` bands of
+/// [`crate::obs::drift::DriftTracker`] instead of polluting the CPU
+/// regimes.
+pub fn lane_regime(schedule: Schedule, gran: Granularity) -> String {
+    format!("gpu/{schedule}/{gran}/full")
+}
+
+/// The divergent calibration fixture: a comb of hub rows whose warps
+/// mix one long lane with many short ones.
+fn lane_hub_graph() -> crate::graph::Csr {
+    crate::testkit::graphs::hub_divergence_comb(64, 256, 800)
+}
+
+/// Measure the lane backend's step/launch/divergence constants on
+/// `pool`. One calibration pass makes
+/// [`LaneCalibration::fitted_machine`] predictions land within a small
+/// factor of measured lane walls (the `bench lane` harness asserts the
+/// band).
+pub fn calibrate_lane(pool: &Pool) -> LaneCalibration {
+    let trials = 3;
+    // balanced fixture → occupied step cost
+    let z = ZCsr::from_csr(&calibration_graph());
+    let (_, report) = compute_supports_lane(&z, pool, Granularity::Fine, Schedule::Stealing);
+    let t = Timer::start();
+    for _ in 0..trials {
+        let (s, _) = compute_supports_lane(&z, pool, Granularity::Fine, Schedule::Stealing);
+        std::hint::black_box(&s);
+    }
+    let wall_ms = t.elapsed_ms() / trials as f64;
+    let makespan_steps = report.makespan_steps;
+    let step_ns = wall_ms * 1e6 / makespan_steps.max(1) as f64;
+
+    // hub fixture → serial (divergence-inflated) step cost + occupancy
+    let hub = ZCsr::from_csr(&lane_hub_graph());
+    let (_, hub_report) = compute_supports_lane(&hub, pool, Granularity::Coarse, Schedule::Static);
+    let t = Timer::start();
+    for _ in 0..trials {
+        let (s, _) = compute_supports_lane(&hub, pool, Granularity::Coarse, Schedule::Static);
+        std::hint::black_box(&s);
+    }
+    let hub_wall_ms = t.elapsed_ms() / trials as f64;
+    let serial_step_ns = hub_wall_ms * 1e6 / hub_report.makespan_steps.max(1) as f64;
+    let divergence_ratio =
+        hub_report.executed_steps as f64 / hub_report.warp_steps.max(1) as f64;
+
+    // near-zero-step fixture → launch overhead (a path has no
+    // triangles: every task runs its setup and finds nothing)
+    let path = ZCsr::from_csr(&crate::testkit::graphs::path(4096));
+    let _ = compute_supports_lane(&path, pool, Granularity::Fine, Schedule::Static);
+    let t = Timer::start();
+    for _ in 0..trials {
+        let (s, _) = compute_supports_lane(&path, pool, Granularity::Fine, Schedule::Static);
+        std::hint::black_box(&s);
+    }
+    let launch_us = (t.elapsed_ms() / trials as f64) * 1e3;
+
+    LaneCalibration {
+        step_ns,
+        serial_step_ns,
+        launch_us,
+        divergence_ratio,
+        makespan_steps,
+        wall_ms,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -125,5 +253,36 @@ mod tests {
         // single task stays far below a microsecond
         assert!(c.per_task_ns < 1000.0, "per_task_ns {}", c.per_task_ns);
         assert!(c.wall_ms > 0.0);
+    }
+
+    #[test]
+    fn lane_calibration_fits_finite_constants() {
+        let pool = Pool::new(2);
+        let c = calibrate_lane(&pool);
+        assert!(c.step_ns.is_finite() && c.step_ns > 0.0, "step_ns {}", c.step_ns);
+        assert!(
+            c.serial_step_ns.is_finite() && c.serial_step_ns > 0.0,
+            "serial_step_ns {}",
+            c.serial_step_ns
+        );
+        assert!(c.launch_us.is_finite() && c.launch_us >= 0.0);
+        // occupancy is bounded by the warp width on any fixture
+        assert!(
+            c.divergence_ratio >= 1.0 && c.divergence_ratio <= WARP_LANES as f64,
+            "divergence_ratio {}",
+            c.divergence_ratio
+        );
+        assert!(c.makespan_steps > 0 && c.wall_ms > 0.0);
+        let m = c.fitted_machine(pool.workers());
+        assert_eq!(m.sms, 2);
+        assert_eq!(m.warp_size, WARP_LANES);
+        // 1 GHz clock: a fitted step's seconds read back as step_ns
+        assert!((m.occupied_step_s() * 1e9 - c.step_ns).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lane_regime_keys_are_device_first() {
+        let key = lane_regime(Schedule::Stealing, Granularity::Fine);
+        assert_eq!(key, "gpu/stealing/fine/full");
     }
 }

@@ -195,7 +195,14 @@ pub fn estimate_tasks_sched(
 /// = lane maximum (lockstep). Identical for every schedule — lockstep
 /// lanes cannot be fed fewer tasks without idling, so only a finer
 /// *granularity* (not a schedule) can shrink a warp.
-fn warp_durations(m: &GpuMachine, task_costs: &[f64]) -> Vec<f64> {
+///
+/// Public because the executing lane backend
+/// ([`crate::exec::lane`]) replays exactly this warp-formation
+/// convention (consecutive chunks of `warp_size` tasks, duration =
+/// lane max), and the parity tests feed the backend's measured
+/// per-task steps through this function to assert the model and the
+/// execution agree warp by warp.
+pub fn warp_durations(m: &GpuMachine, task_costs: &[f64]) -> Vec<f64> {
     task_costs
         .chunks(m.warp_size)
         .map(|chunk| chunk.iter().cloned().fold(0.0f64, f64::max))

@@ -14,7 +14,9 @@
 
 use ktruss::algo::bitmap::{
     compute_supports_hybrid_seq, eager_update_bitmap_atomic, eager_update_bitmap_seq, hybrid_tasks,
+    HybridTasks,
 };
+use ktruss::algo::incremental::mark_frontier;
 use ktruss::algo::ktruss::ktruss;
 use ktruss::algo::support::{
     compute_supports_seq, eager_update_segment_atomic, eager_update_segment_seq, segment_tasks,
@@ -22,7 +24,10 @@ use ktruss::algo::support::{
 };
 use ktruss::gen::suite;
 use ktruss::graph::ZCsr;
-use ktruss::par::{compute_supports_gran, ktruss_par_gran, Pool, Schedule, ALL_SCHEDULES};
+use ktruss::par::{
+    compute_supports_gran, compute_supports_hybrid_tasks, ktruss_par_gran, prune_par, Pool,
+    Schedule, ALL_SCHEDULES,
+};
 use ktruss::testkit::graphs::arbitrary_graph;
 use ktruss::testkit::{forall, Config};
 use std::sync::atomic::{AtomicU32, Ordering};
@@ -170,6 +175,82 @@ fn prop_hybrid_truss_matches_merge_on_every_suite_family() {
             }
         }
     }
+}
+
+#[test]
+fn prop_hybrid_refresh_matches_rebuild_across_convergence() {
+    // the convergence drivers keep ONE HybridTasks alive across
+    // iterations, invalidating only the rows the frontier touched
+    // (prune/compaction is row-local, so untouched rows' encodings are
+    // unchanged). This property pins the contract: after every prune,
+    // the refreshed index must be indistinguishable from a from-scratch
+    // rebuild — identical estimated steps, and bit-identical supports
+    // from the executed pass
+    forall(Config::cases(10), arbitrary_graph, |g| {
+        let pool = Pool::new(4);
+        for (k, len) in [(3u32, 2u32), (4, 32)] {
+            let mut z = ZCsr::from_csr(g);
+            let mut s = vec![0u32; z.slots()];
+            let mut ht = hybrid_tasks(&z, len);
+            let mut pending: Vec<u32> = Vec::new();
+            let mut round = 0usize;
+            loop {
+                ht.refresh(&z, len, &pending);
+                pending.clear();
+                let fresh = hybrid_tasks(&z, len);
+                let (est_r, est_f) = (ht.estimated_steps(), fresh.estimated_steps());
+                if est_r != est_f {
+                    return Err(format!(
+                        "k={k} len={len} round={round}: refreshed cost vector \
+                         ({} tasks, {} steps) != rebuilt ({} tasks, {} steps)",
+                        est_r.len(),
+                        est_r.iter().sum::<u64>(),
+                        est_f.len(),
+                        est_f.iter().sum::<u64>()
+                    ));
+                }
+                let run = |t: &HybridTasks| -> (Vec<u32>, u64) {
+                    let sa: Vec<AtomicU32> =
+                        (0..z.slots()).map(|_| AtomicU32::new(0)).collect();
+                    let total =
+                        compute_supports_hybrid_tasks(&z, &pool, t, Schedule::Stealing, &sa);
+                    (sa.iter().map(|x| x.load(Ordering::Relaxed)).collect(), total)
+                };
+                let (got, refreshed_total) = run(&ht);
+                let (want, rebuilt_total) = run(&fresh);
+                if got != want {
+                    return Err(format!(
+                        "k={k} len={len} round={round}: refreshed supports diverge from rebuild"
+                    ));
+                }
+                if refreshed_total != rebuilt_total {
+                    return Err(format!(
+                        "k={k} len={len} round={round}: step totals {refreshed_total} != {rebuilt_total}"
+                    ));
+                }
+                // advance one convergence round exactly like the
+                // drivers' full-pass branch: mark, collect the stale
+                // rows, prune
+                s.copy_from_slice(&got);
+                let f = mark_frontier(&z, &s, k);
+                if f.is_empty() {
+                    break;
+                }
+                let mut last = u32::MAX;
+                for t in &f.tasks {
+                    if t.row != last {
+                        pending.push(t.row);
+                        last = t.row;
+                    }
+                }
+                if prune_par(&mut z, &mut s, k, &pool, Schedule::Static).remaining == 0 {
+                    break;
+                }
+                round += 1;
+            }
+        }
+        Ok(())
+    });
 }
 
 #[test]

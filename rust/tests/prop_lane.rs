@@ -1,0 +1,145 @@
+//! Property tests for the lockstep-lane execution backend
+//! ([`ktruss::exec::lane`]) — the contract that makes "execute the GPU
+//! plan for real" trustworthy:
+//!
+//! * lane-executed supports and trusses are **bit-identical** to the
+//!   CPU pool backend across the full plan grid (every schedule, every
+//!   granularity, every support mode) — the backend may only change who
+//!   runs which probe, never a single count;
+//! * dispatching through [`ktruss::par::ktruss_par_plan`] with a
+//!   GPU-device plan takes the lane path and agrees with calling the
+//!   lane driver directly;
+//! * the lane report's measured warp durations reproduce the machine
+//!   model's [`ktruss::sim::gpu::warp_durations`] exactly when fed the
+//!   measured per-task steps — the model and the execution share one
+//!   accounting, which is what lets the calibration loop compare them.
+
+use ktruss::algo::incremental::SupportMode;
+use ktruss::algo::support::Granularity;
+use ktruss::exec::lane::{compute_supports_lane, ktruss_lane, WARP_LANES};
+use ktruss::graph::ZCsr;
+use ktruss::par::{compute_supports_gran, ktruss_par_plan, Pool, Schedule, ALL_SCHEDULES};
+use ktruss::plan::{ExecutionPlan, PlanDevice};
+use ktruss::sim::gpu::warp_durations;
+use ktruss::sim::machine::GpuMachine;
+use ktruss::testkit::graphs::{arbitrary_graph, clique_with_tail, hub_divergence_comb, peel_chain};
+use ktruss::testkit::{forall, Config};
+
+/// Granularities the parity grid sweeps (one of each task shape).
+const GRANULARITIES: [Granularity; 4] = [
+    Granularity::Coarse,
+    Granularity::Fine,
+    Granularity::Segment { len: 8 },
+    Granularity::Hybrid { len: 8 },
+];
+
+#[test]
+fn prop_lane_supports_bit_identical_to_pool() {
+    forall(Config::cases(10), arbitrary_graph, |g| {
+        let z = ZCsr::from_csr(g);
+        let pool = Pool::new(4);
+        for gran in GRANULARITIES {
+            for sched in ALL_SCHEDULES {
+                let want = compute_supports_gran(&z, &pool, gran, sched);
+                let (got, r) = compute_supports_lane(&z, &pool, gran, sched);
+                if got != want {
+                    return Err(format!("{gran} {sched:?}: lane supports diverge from pool"));
+                }
+                // internal accounting invariants of the report
+                if r.executed_steps != r.task_steps.iter().sum::<u64>() {
+                    return Err(format!("{gran} {sched:?}: executed != Σ task_steps"));
+                }
+                if r.warp_steps != r.warp_durations.iter().sum::<u64>() {
+                    return Err(format!("{gran} {sched:?}: warp_steps != Σ durations"));
+                }
+                if r.warps != r.tasks.div_ceil(WARP_LANES) {
+                    return Err(format!("{gran} {sched:?}: warp count off"));
+                }
+                if r.executed_steps > r.warp_steps.saturating_mul(WARP_LANES as u64) {
+                    return Err(format!("{gran} {sched:?}: lanes did more than warps paid"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_lane_warp_durations_match_machine_model_exactly() {
+    // the calibration loop's premise: feed the measured per-task steps
+    // through the model's warp aggregation and get the measured warp
+    // durations back, element for element (u64 step counts are exact
+    // in f64 far beyond any graph here)
+    let m = GpuMachine::v100();
+    assert_eq!(m.warp_size, WARP_LANES, "model and backend disagree on warp width");
+    forall(Config::cases(10), arbitrary_graph, |g| {
+        let z = ZCsr::from_csr(g);
+        let pool = Pool::new(4);
+        for gran in [Granularity::Fine, Granularity::Hybrid { len: 4 }] {
+            let (_, r) = compute_supports_lane(&z, &pool, gran, Schedule::Static);
+            let costs: Vec<f64> = r.task_steps.iter().map(|&s| s as f64).collect();
+            let model = warp_durations(&m, &costs);
+            if model.len() != r.warp_durations.len() {
+                return Err(format!(
+                    "{gran}: model sees {} warps, backend measured {}",
+                    model.len(),
+                    r.warp_durations.len()
+                ));
+            }
+            for (i, (&ms, &es)) in model.iter().zip(&r.warp_durations).enumerate() {
+                if ms != es as f64 {
+                    return Err(format!(
+                        "{gran}: warp {i} model duration {ms} != executed {es}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_lane_truss_matches_pool_across_plan_grid() {
+    // end-to-end parity on fixtures that exercise deep peeling, hub
+    // divergence and a dense core: same truss, same convergence
+    // iteration count, whether the plan executes on the pool or the
+    // lane backend — and whether the lane backend is reached directly
+    // or through the plan dispatcher
+    let pool = Pool::new(4);
+    let fixtures = [
+        ("peel_chain", peel_chain(12)),
+        ("hub_comb", hub_divergence_comb(32, 128, 400)),
+        ("clique_tail", clique_with_tail()),
+    ];
+    for (name, g) in &fixtures {
+        for k in [3u32, 4, 8] {
+            for sched in [Schedule::Static, Schedule::Stealing] {
+                for gran in GRANULARITIES {
+                    for support in [SupportMode::Full, SupportMode::Auto] {
+                        let cpu_plan = ExecutionPlan::fixed(sched, gran, support);
+                        let gpu_plan = ExecutionPlan { device: PlanDevice::Gpu, ..cpu_plan };
+                        let want = ktruss_par_plan(g, k, &pool, &cpu_plan);
+                        let via_dispatch = ktruss_par_plan(g, k, &pool, &gpu_plan);
+                        let direct = ktruss_lane(g, k, &pool, &gpu_plan);
+                        assert_eq!(
+                            via_dispatch.truss, want.truss,
+                            "{name} k={k} {gpu_plan}: dispatched lane truss diverges"
+                        );
+                        assert_eq!(
+                            direct.truss, want.truss,
+                            "{name} k={k} {gpu_plan}: direct lane truss diverges"
+                        );
+                        assert_eq!(
+                            via_dispatch.iterations, want.iterations,
+                            "{name} k={k} {gpu_plan}: iteration count diverges"
+                        );
+                        assert_eq!(
+                            direct.iterations, want.iterations,
+                            "{name} k={k} {gpu_plan}: direct iteration count diverges"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}

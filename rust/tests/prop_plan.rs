@@ -100,6 +100,7 @@ fn crossover_fraction_never_changes_the_result() {
                 granularity: Granularity::Fine,
                 support: SupportMode::Auto,
                 crossover,
+                device: ktruss::plan::PlanDevice::Cpu,
             };
             let got = ktruss_par_plan(&g, k, &pool, &plan);
             assert_eq!(got.truss, want.truss, "k={k} crossover={crossover}");
